@@ -1,0 +1,25 @@
+//! Regenerate every table and figure of the paper's evaluation (§7).
+//!
+//! ```bash
+//! cargo run --release --example paper_figures            # full set
+//! LYNX_BENCH_QUICK=1 cargo run --release --example paper_figures
+//! ```
+//!
+//! Output mirrors the paper's figures row-for-row (see DESIGN.md §5 for
+//! the experiment index); JSON copies land in `results/`.
+
+use lynx::experiments::all_figures;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    std::fs::create_dir_all("results")?;
+    for fig in all_figures(quick) {
+        println!("{}", fig.render());
+        std::fs::write(
+            format!("results/{}.json", fig.id),
+            fig.to_json().pretty(),
+        )?;
+    }
+    println!("JSON written to results/");
+    Ok(())
+}

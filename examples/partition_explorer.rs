@@ -1,0 +1,72 @@
+//! Explore recomputation-aware partitioning (paper §6, Algorithm 1).
+//!
+//! ```bash
+//! cargo run --release --example partition_explorer -- [model] [tp] [pp]
+//! ```
+//!
+//! Shows how the greedy re-balancer moves layers off the head-heavy last
+//! stage, the per-stage time balance before/after, and the throughput
+//! effect under each policy — Fig. 9's mechanism, inspectable.
+
+use lynx::costmodel::{CostModel, Topology};
+use lynx::graph::{build_layer_graph, ModelConfig, TrainSetup};
+use lynx::plan::{dp_partition_result, lynx_partition, PolicyKind};
+use lynx::sim::{simulate, PartitionMode, SimConfig};
+use lynx::util::stats::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("13B");
+    let tp: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let pp: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let m = ModelConfig::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let setup = TrainSetup::new(m, tp, pp, 8, 8);
+    let topo = Topology::nvlink(tp, pp);
+    let cm = CostModel::new(topo);
+    let g = build_layer_graph(&setup);
+
+    println!("model {model}, NVLink-{tp}x{pp}, micro-batch 8\n");
+    for policy in [PolicyKind::Full, PolicyKind::LynxHeu] {
+        let dp = dp_partition_result(&setup, &cm, &g, policy);
+        let lx = lynx_partition(&setup, &cm, &g, policy);
+        println!("policy {}:", policy.label());
+        println!(
+            "  dp-partition   {:?}  makespan/slot {}",
+            dp.partition,
+            fmt_duration(dp.makespan())
+        );
+        for (i, d) in dp.durations.iter().enumerate() {
+            println!("     stage{i}: {}", fmt_duration(*d));
+        }
+        println!(
+            "  lynx-partition {:?}  makespan/slot {}  ({:.2}x better, {} candidates searched in {})",
+            lx.partition,
+            fmt_duration(lx.makespan()),
+            dp.makespan() / lx.makespan(),
+            lx.evaluated,
+            fmt_duration(lx.search_secs),
+        );
+        for (i, d) in lx.durations.iter().enumerate() {
+            println!("     stage{i}: {}", fmt_duration(*d));
+        }
+
+        // Whole-pipeline effect.
+        let r_dp = simulate(
+            &cm,
+            &SimConfig { setup: setup.clone(), policy, partition: PartitionMode::Dp },
+        );
+        let r_lx = simulate(
+            &cm,
+            &SimConfig { setup: setup.clone(), policy, partition: PartitionMode::Lynx },
+        );
+        println!(
+            "  simulated throughput: dp {:.2} -> lynx {:.2} samples/s ({:.2}x)\n",
+            r_dp.throughput,
+            r_lx.throughput,
+            r_lx.throughput / r_dp.throughput
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Interconnect study: why slower links make Lynx *better* (paper §7.2,
+//! "PCIe topology").
+//!
+//! ```bash
+//! cargo run --release --example pcie_vs_nvlink
+//! ```
+//!
+//! Sweeps the TP link bandwidth from NVLink-class down to PCIe-class and
+//! plots the overlap opportunity: wider communication windows hide more
+//! recomputation, so Lynx's advantage over the best Megatron policy grows
+//! as the interconnect gets slower — the crossover structure behind
+//! Fig. 6(b).
+
+use lynx::costmodel::{CostModel, LinkSpec, Topology};
+use lynx::graph::{ModelConfig, TrainSetup};
+use lynx::plan::PolicyKind;
+use lynx::sim::{simulate, PartitionMode, SimConfig};
+
+fn main() {
+    let bandwidths = [230e9, 120e9, 60e9, 20e9, 10e9];
+    println!("TP link sweep — 4.7B, TP=2, PP=4, micro-batch 8");
+    println!(
+        "{:>12} {:>12} {:>12} {:>10} {:>12}",
+        "bus GB/s", "megatron", "lynx-heu", "speedup", "hidden/total"
+    );
+    for bw in bandwidths {
+        let mut topo = Topology::nvlink(2, 4);
+        topo.tp_link = LinkSpec { bus_bw: bw, ..LinkSpec::nvlink() };
+        topo.name = format!("sweep-{:.0}GBps", bw / 1e9);
+        let cm = CostModel::new(topo);
+        let setup = TrainSetup::new(ModelConfig::by_name("4.7B").unwrap(), 2, 4, 8, 8);
+
+        let best_megatron = [PolicyKind::Uniform, PolicyKind::Selective, PolicyKind::Block]
+            .into_iter()
+            .map(|p| {
+                simulate(
+                    &cm,
+                    &SimConfig { setup: setup.clone(), policy: p, partition: PartitionMode::Dp },
+                )
+            })
+            .filter(|r| !r.oom)
+            .map(|r| r.throughput)
+            .fold(0.0f64, f64::max);
+        let lynx = simulate(
+            &cm,
+            &SimConfig {
+                setup: setup.clone(),
+                policy: PolicyKind::LynxHeu,
+                partition: PartitionMode::Lynx,
+            },
+        );
+        let hidden = lynx.total_hidden(setup.num_micro);
+        let total = hidden + lynx.total_exposed_paid();
+        println!(
+            "{:>12.0} {:>12.2} {:>12.2} {:>9.2}x {:>11.0}%",
+            bw / 1e9,
+            best_megatron,
+            lynx.throughput,
+            lynx.throughput / best_megatron,
+            if total > 0.0 { 100.0 * hidden / total } else { 100.0 },
+        );
+    }
+    println!("\npaper: Lynx gains grow as communication gets slower (Fig. 6b, §7.2).");
+}

@@ -1,0 +1,90 @@
+//! Quickstart: plan, simulate and compare recomputation policies in ~30s.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the whole public API surface once: build a model + topology,
+//! profile it, ask each policy for a plan, and simulate an iteration of
+//! 1F1B training under each plan.
+
+use lynx::costmodel::{CostModel, Topology};
+use lynx::graph::{build_layer_graph, ModelConfig, TrainSetup};
+use lynx::plan::{build_stage_ctx, dp_partition, plan_stage, stage_cost, PolicyKind};
+use lynx::profiler::profile_model;
+use lynx::sim::{simulate, PartitionMode, SimConfig};
+use lynx::util::stats::{fmt_bytes, fmt_duration};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A 1.3B GPT (paper Table 2) on an NVLink node: TP=2, 4 stages.
+    let model = ModelConfig::by_name("1.3B").unwrap();
+    let setup = TrainSetup::new(model, 2, 4, 8, 8);
+    let topo = Topology::nvlink(2, 4);
+    let cm = CostModel::new(topo);
+    println!(
+        "model {} — {:.2}B params, {} layers",
+        setup.model.name,
+        setup.model.params_total(setup.seq) / 1e9,
+        setup.model.layers
+    );
+
+    // 2. Profile one transformer layer (paper Fig. 4, steps 1-2).
+    let db = profile_model(&setup, &cm);
+    println!("\nper-op profile (one TP rank):");
+    for r in &db.records {
+        println!(
+            "  {:<16} {:>9}  out {:>10}  {}",
+            r.name,
+            fmt_duration(r.time_secs),
+            fmt_bytes(r.out_bytes),
+            if r.is_comm { "[comm window]" } else { "" }
+        );
+    }
+
+    // 3. Ask each policy for a stage plan and show what it costs.
+    let g = build_layer_graph(&setup);
+    let times = cm.layer_times(&g);
+    let part = dp_partition(setup.model.layers, setup.pp);
+    let ctx = build_stage_ctx(&setup, &cm, &g, &part, 0);
+    println!("\nstage-0 plans (budget {}):", fmt_bytes(ctx.mem_budget));
+    for kind in [
+        PolicyKind::Full,
+        PolicyKind::Selective,
+        PolicyKind::Block,
+        PolicyKind::Checkmate,
+        PolicyKind::LynxHeu,
+    ] {
+        let out = plan_stage(kind, &g, &ctx, &times);
+        let cost = stage_cost(&setup, &cm, &g, &ctx, &out.plan);
+        println!(
+            "  {:<10} exposed {:>9}/micro  hidden {:>9}  peak {:>9}  {}",
+            kind.label(),
+            fmt_duration(cost.exposed_recompute),
+            fmt_duration(cost.overlapped_recompute),
+            fmt_bytes(cost.peak_mem),
+            if out.oom { "OOM" } else { "ok" }
+        );
+    }
+
+    // 4. Simulate a full 1F1B iteration per policy.
+    println!("\nsimulated training throughput:");
+    for kind in [PolicyKind::Full, PolicyKind::Block, PolicyKind::LynxHeu, PolicyKind::LynxOpt] {
+        let r = simulate(
+            &cm,
+            &SimConfig {
+                setup: setup.clone(),
+                policy: kind,
+                partition: if kind.is_lynx() { PartitionMode::Lynx } else { PartitionMode::Dp },
+            },
+        );
+        println!(
+            "  {:<10} {:>8.2} samples/s  iteration {:>9}  {}",
+            kind.label(),
+            r.throughput,
+            fmt_duration(r.iteration_secs),
+            if r.oom { "OOM" } else { "" }
+        );
+    }
+    println!("\nNext: `cargo run --release --example train_e2e` for real training.");
+    Ok(())
+}

@@ -1,0 +1,221 @@
+"""AOT lowering: every model entry point → HLO **text** artifact.
+
+This is the only place Python touches the training system; it runs once
+(`make artifacts`) and the Rust runtime is self-contained afterwards.
+
+Interchange format is HLO text, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--preset tiny|small|100m]
+                          [--pallas]
+
+Emits `<name>.hlo.txt` per entry point plus `manifest.json` describing the
+model config, flat-parameter layouts, and per-entry signatures — the
+contract the Rust runtime (`runtime::artifact`) loads.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+PRESETS = {
+    # e2e trainer default: small enough for a few hundred CPU steps.
+    "tiny": M.GptConfig(vocab=2048, hidden=256, heads=8, layers=4, seq=128, micro_batch=4),
+    # mid-size: minutes per step on CPU, used for scaling checks.
+    "small": M.GptConfig(vocab=8192, hidden=512, heads=8, layers=8, seq=256, micro_batch=4),
+    # ~124M parameters (GPT-2-small-like). Lowers fine; a CPU step takes
+    # minutes — used to demonstrate scale, not for the loss-curve run.
+    "100m": M.GptConfig(vocab=32768, hidden=768, heads=12, layers=12, seq=512, micro_batch=2),
+}
+
+
+def to_hlo_text(fn, *args):
+    """Lower a jittable function on ShapeDtypeStructs to HLO text."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points(cfg: M.GptConfig):
+    """(name, fn, arg_specs, result_names) for every artifact."""
+    b, s, h = cfg.micro_batch, cfg.seq, cfg.hidden
+    P, E, HD = cfg.layer_params(), cfg.embed_params(), cfg.head_params()
+    x = sds((b, s, h))
+    tokens = sds((b, s), jnp.int32)
+    stash = [sds(shape) for shape in M.stash_shapes(cfg).values()]
+
+    def layer_bwd_flat(p, xx, *rest):
+        *st, dy = rest
+        return M.layer_bwd(cfg, p, xx, tuple(st), dy)
+
+    entries = [
+        (
+            "embed_fwd",
+            lambda e, t: (M.embed_fwd(cfg, e, t),),
+            [sds((E,)), tokens],
+            ["x"],
+        ),
+        (
+            "layer_fwd_full",
+            lambda p, xx: M.layer_fwd_full(cfg, p, xx),
+            [sds((P,)), x],
+            ["y"] + M.STASH_NAMES,
+        ),
+        (
+            "layer_fwd_light",
+            lambda p, xx: (M.layer_fwd_light(cfg, p, xx),),
+            [sds((P,)), x],
+            ["y"],
+        ),
+        (
+            "layer_recompute",
+            lambda p, xx: M.layer_recompute(cfg, p, xx),
+            [sds((P,)), x],
+            list(M.STASH_NAMES),
+        ),
+        (
+            "layer_bwd",
+            layer_bwd_flat,
+            [sds((P,)), x] + stash + [x],
+            ["dx", "dp"],
+        ),
+        (
+            "head_fwd",
+            lambda hh, xx, t: (M.head_fwd(cfg, hh, xx, t),),
+            [sds((HD,)), x, tokens],
+            ["loss"],
+        ),
+        (
+            "head_bwd",
+            lambda hh, xx, t: M.head_bwd(cfg, hh, xx, t),
+            [sds((HD,)), x, tokens],
+            ["dx", "dh", "loss"],
+        ),
+        (
+            "embed_bwd",
+            lambda t, dx: (M.embed_bwd(cfg, t, dx),),
+            [tokens, x],
+            ["de"],
+        ),
+    ]
+    for name, n in [("adam_layer", P), ("adam_embed", E), ("adam_head", HD)]:
+        entries.append(
+            (
+                name,
+                lambda p, g, m, v, lr: M.adam_step(p, g, m, v, lr),
+                [sds((n,)), sds((n,)), sds((n,)), sds((n,)), sds(())],
+                ["p2", "m2", "v2"],
+            )
+        )
+
+    def fused(e, *rest):
+        ls = list(rest[: cfg.layers])
+        hh, t, tg = rest[cfg.layers :]
+        loss, (de, dls, dh) = M.train_step(cfg, e, ls, hh, t, tg)
+        return (loss, de, *dls, dh)
+
+    entries.append(
+        (
+            "train_step_fused",
+            fused,
+            [sds((E,))] + [sds((P,)) for _ in range(cfg.layers)] + [sds((HD,)), tokens, tokens],
+            ["loss", "de"] + [f"dl{i}" for i in range(cfg.layers)] + ["dh"],
+        )
+    )
+    return entries
+
+
+def spec_json(spec):
+    return {"shape": list(spec.shape), "dtype": spec.dtype.name}
+
+
+def build_manifest(cfg: M.GptConfig, entries, files):
+    return {
+        "format": "hlo-text/1",
+        "config": {
+            "vocab": cfg.vocab,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "layers": cfg.layers,
+            "seq": cfg.seq,
+            "micro_batch": cfg.micro_batch,
+            "mlp_mult": cfg.mlp_mult,
+            "use_pallas": cfg.use_pallas,
+            "layer_params": cfg.layer_params(),
+            "embed_params": cfg.embed_params(),
+            "head_params": cfg.head_params(),
+            "total_params": cfg.total_params(),
+        },
+        "param_layouts": {
+            "layer": [[n, list(s)] for n, s in M.layer_param_layout(cfg)],
+            "embed": [[n, list(s)] for n, s in M.embed_param_layout(cfg)],
+            "head": [[n, list(s)] for n, s in M.head_param_layout(cfg)],
+        },
+        "stash": [
+            [name, list(shape)] for name, shape in M.stash_shapes(cfg).items()
+        ],
+        "entries": {
+            name: {
+                "file": files[name],
+                "args": [spec_json(a) for a in args],
+                "results": results,
+            }
+            for (name, _, args, results) in entries
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--pallas", action="store_true", help="use Pallas kernels in fwd")
+    ap.add_argument(
+        "--skip-fused",
+        action="store_true",
+        help="skip the fused train step (slow to lower for big presets)",
+    )
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    if args.pallas:
+        cfg = M.GptConfig(**{**cfg.__dict__, "use_pallas": True})
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = entry_points(cfg)
+    if args.skip_fused:
+        entries = [e for e in entries if e[0] != "train_step_fused"]
+
+    files = {}
+    for name, fn, arg_specs, _results in entries:
+        text = to_hlo_text(fn, *arg_specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        files[name] = fname
+        print(f"  lowered {name:<18} {len(text):>10} chars")
+
+    manifest = build_manifest(cfg, entries, files)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(files)} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from . import attention, layernorm, matmul_gelu, ref  # noqa: F401

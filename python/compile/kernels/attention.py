@@ -1,0 +1,113 @@
+"""Flash-style causal attention as a Pallas kernel.
+
+This is the paper's attention core (the tensors selective recomputation
+targets, §2.2) re-thought for TPU per DESIGN.md §11:
+
+* the GPU flash-attention formulation keeps K/V tiles in threadblock
+  shared memory and does warp-level online softmax; here the KV stream is
+  a grid dimension with BlockSpec-driven HBM→VMEM tiles;
+* running max / normaliser / output accumulators live in VMEM scratch and
+  persist across the KV grid steps (`dimension_semantics` would mark the
+  KV axis "arbitrary" on a real TPU — with interpret=True the sequential
+  grid order gives the same semantics);
+* matmuls accumulate in f32 via `preferred_element_type`, the MXU-friendly
+  layout (bf16 in, f32 acc) rather than WMMA fragments.
+
+Shapes: q, k, v are [B, A, S, D]; the grid is (B·A, S/bq, S/bk).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, n_kv, bq, bk, scale, causal):
+    kv = pl.program_id(2)
+
+    @pl.when(kv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # [bq, d]
+    k = k_ref[0]  # [bk, d]
+    v = v_ref[0]  # [bk, d]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq, bk]
+
+    if causal:
+        qi = pl.program_id(1)
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = kv * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)  # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kv == n_kv - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, bq=DEFAULT_BQ, bk=DEFAULT_BK):
+    """Causal flash attention over [B, A, S, D] inputs."""
+    b, a, s, d = q.shape
+    assert k.shape == v.shape == (b, a, s, d)
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, "seq must divide block sizes"
+    ba = b * a
+    q3 = q.reshape(ba, s, d)
+    k3 = k.reshape(ba, s, d)
+    v3 = v.reshape(ba, s, d)
+    n_kv = s // bk
+    scale = 1.0 / (d**0.5)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, n_kv=n_kv, bq=bq, bk=bk, scale=scale, causal=causal
+        ),
+        grid=(ba, s // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, qi, kv: (h, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, qi, kv: (h, kv, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, qi, kv: (h, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, qi, kv: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((ba, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q3, k3, v3)
+    return out.reshape(b, a, s, d)
+
+
+def vmem_bytes(bq, bk, d, dtype_bytes=4):
+    """Per-step VMEM: Q/K/V blocks + accumulators + output block."""
+    return (bq * d + 2 * bk * d + bq * (2 + d) + bq * d) * dtype_bytes
+
+
+def flops(b, a, s, d, causal=True):
+    """Attention FLOPs (for the roofline estimate in DESIGN.md §Perf)."""
+    full = 4.0 * b * a * s * s * d
+    return full / 2 if causal else full

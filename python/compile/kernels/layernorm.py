@@ -1,0 +1,74 @@
+"""Fused LayerNorm as a Pallas kernel.
+
+TPU thinking (DESIGN.md §11): the row dimension is tiled into VMEM-sized
+blocks via BlockSpec; mean/variance/normalise/scale happen in one VMEM
+round-trip instead of the four HBM passes of the naive lowering. On the
+paper's GPU substrate this op is the poster child of wasteful full
+recomputation (§2.2: tiny output, high FLOPs-per-input-byte) — which is
+why it appears here as a first-class kernel.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter path; the
+BlockSpec structure (what would ship to a real TPU) is unchanged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) * (x - mu), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    o_ref[...] = (x - mu) * rstd * g_ref[...] + b_ref[...]
+
+
+def layernorm(x, gamma, beta, *, eps=ref.LN_EPS, block_rows=DEFAULT_BLOCK_ROWS):
+    """LayerNorm over the last axis of `x` ([rows, hidden] after reshape).
+
+    Accepts any leading shape; rows are blocked `block_rows` at a time.
+    """
+    orig_shape = x.shape
+    hidden = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, hidden)
+
+    block_rows = min(block_rows, rows)
+    # Pad rows to a multiple of the block (masked rows are normalised too,
+    # harmlessly — they are sliced away below).
+    padded = (rows + block_rows - 1) // block_rows * block_rows
+    if padded != rows:
+        x2 = jnp.pad(x2, ((0, padded - rows), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(padded // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, hidden), lambda r: (r, 0)),
+            pl.BlockSpec((hidden,), lambda r: (0,)),
+            pl.BlockSpec((hidden,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, hidden), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, hidden), x.dtype),
+        interpret=True,
+    )(x2, gamma, beta)
+    return out[:rows].reshape(orig_shape)
+
+
+def vmem_bytes(block_rows, hidden, dtype_bytes=4):
+    """Estimated VMEM footprint of one grid step (for DESIGN.md §Perf):
+    input block + output block + params + stats."""
+    block = block_rows * hidden * dtype_bytes
+    params = 2 * hidden * dtype_bytes
+    stats = 2 * block_rows * dtype_bytes
+    return 2 * block + params + stats

@@ -1,0 +1,90 @@
+"""Tiled matmul with fused GeLU epilogue as a Pallas kernel.
+
+The transformer MLP-up projection (h -> 4h) followed by GeLU. TPU
+adaptation of the paper's GPU hot spot: 128×128 MXU-aligned output tiles,
+a K-loop streaming A/B blocks HBM→VMEM, f32 accumulation in a VMEM
+scratch accumulator, and the GeLU applied on the final K step so the
+intermediate never returns to HBM (this fusion is exactly the activation
+whose recompute cost Lynx schedules).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_gelu_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = ref.gelu(acc_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def matmul_gelu(x, w, b, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """gelu(x @ w + b) with x [M, K], w [K, N], b [N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+
+    def pad_to(a, axis, mult):
+        size = a.shape[axis]
+        target = (size + mult - 1) // mult * mult
+        if target == size:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, target - size)
+        return jnp.pad(a, widths)
+
+    xp = pad_to(pad_to(x, 0, bm), 1, bk)
+    wp = pad_to(pad_to(w, 0, bk), 1, bn)
+    bp = pad_to(b, 0, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_gelu_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def mxu_utilization_estimate(m, k, n, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Fraction of MXU-issue slots doing useful work given tile padding —
+    the structural perf proxy recorded in DESIGN.md §Perf."""
+    ceil = lambda a, b: (a + b - 1) // b
+    padded = ceil(m, bm) * bm * ceil(k, bk) * bk * ceil(n, bn) * bn
+    return (m * k * n) / padded
+
+
+def vmem_bytes(bm, bn, bk, dtype_bytes=4):
+    """One grid step's VMEM: A block + B block + bias + accumulator + out."""
+    return (bm * bk + bk * bn + bn + 2 * bm * bn) * dtype_bytes

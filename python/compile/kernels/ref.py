@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here; pytest sweeps shapes/dtypes via hypothesis and asserts
+allclose between the two. The oracles are also reused by the model layer
+(`compile.model`) so kernel and model numerics share one source of truth.
+"""
+
+import jax
+import jax.numpy as jnp
+
+LN_EPS = 1e-5
+
+
+def layernorm(x, gamma, beta, eps=LN_EPS):
+    """LayerNorm over the last axis: (x - mu) / sqrt(var + eps) * g + b."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    return (x - mu) * rstd * gamma + beta
+
+
+def layernorm_stats(x, eps=LN_EPS):
+    """(mu, rstd) of the layernorm — the stash the backward pass reuses."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return mu, jax.lax.rsqrt(var + eps)
+
+
+def gelu(x):
+    """Tanh-approximated GeLU (GPT-2 flavour)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def gelu_grad(x):
+    """d gelu(x) / dx for the tanh approximation."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    u = c * (x + 0.044715 * x**3)
+    t = jnp.tanh(u)
+    du = c * (1.0 + 3.0 * 0.044715 * x**2)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t**2) * du
+
+
+def matmul_gelu(x, w, b):
+    """gelu(x @ w + b) — the fused MLP-up epilogue kernel's oracle."""
+    return gelu(x @ w + b)
+
+
+def softmax(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention(q, k, v, causal=True):
+    """Scaled dot-product attention.
+
+    q, k, v: [B, A, S, D] (batch, heads, seq, head_dim).
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    if causal:
+        s = q.shape[-2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = softmax(scores)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def attention_probs(q, k, v, causal=True):
+    """Attention with the probability matrix exposed (model stash)."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    if causal:
+        s = q.shape[-2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = softmax(scores)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    return out, probs
+
+
+def cross_entropy(logits, targets):
+    """Mean token cross-entropy. logits [B,S,V], targets [B,S] int32."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

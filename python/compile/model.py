@@ -1,0 +1,455 @@
+"""Layer-2: tiny-GPT with *manual, explicit-stash* forward/backward.
+
+Why manual backprop instead of `jax.grad`: the Lynx runtime (Rust, L3)
+must own the decision of whether a layer's internal activations are
+**kept** between forward and backward, **recomputed inside a
+communication window**, or **recomputed on demand** (the paper's R/S
+variables). That requires the residuals ("stash") to be an explicit
+value crossing the Rust/JAX boundary, and a standalone `layer_recompute`
+entry point that regenerates the stash from the layer input at any time —
+exactly the paper's Observation 3. `jax.grad` would fuse the residuals
+into one opaque closure and force on-demand semantics.
+
+Entry points lowered by `compile.aot` (all shapes static):
+
+  embed_fwd(emb, tokens)              -> x
+  layer_fwd_full(p, x)                -> (y, *stash)
+  layer_fwd_light(p, x)               -> y
+  layer_recompute(p, x)               -> stash
+  layer_bwd(p, x, *stash, dy)         -> (dx, dp)
+  head_fwd(h, x, targets)             -> loss
+  head_bwd(h, x, targets)             -> (dx, dh, loss)
+  embed_bwd(tokens, dx)               -> demb
+  adam_step(p, g, m, v, lr)           -> (p2, m2, v2)
+  train_step (fused reference, single-GPU oracle for tests/quickstart)
+
+Parameters are flat f32 vectors (one per layer / embedding / head); the
+layout is produced by `layer_param_layout` and exported to Rust through
+the artifact manifest, so Rust owns allocation and the Adam update is a
+single vector-wide kernel regardless of tensor count.
+
+Gradients are validated against `jax.vjp` of the same forward in
+python/tests/test_model.py.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attention_k
+from .kernels import layernorm as layernorm_k
+from .kernels import matmul_gelu as matmul_gelu_k
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class GptConfig:
+    """Static model configuration (defaults: the e2e trainer's tiny GPT)."""
+
+    vocab: int = 2048
+    hidden: int = 256
+    heads: int = 8
+    layers: int = 4
+    seq: int = 128
+    micro_batch: int = 4
+    mlp_mult: int = 4
+    # Use Pallas kernels in the lowered forward (interpret mode).
+    use_pallas: bool = False
+
+    @property
+    def head_dim(self):
+        return self.hidden // self.heads
+
+    @property
+    def mlp_hidden(self):
+        return self.hidden * self.mlp_mult
+
+    def layer_params(self):
+        h, f = self.hidden, self.mlp_hidden
+        return 4 * h + 3 * h * h + 3 * h + h * h + h + h * f + f + f * h + h
+
+    def embed_params(self):
+        return self.vocab * self.hidden + self.seq * self.hidden
+
+    def head_params(self):
+        # Final layernorm + untied output projection.
+        return 2 * self.hidden + self.hidden * self.vocab
+
+    def total_params(self):
+        return (
+            self.layers * self.layer_params()
+            + self.embed_params()
+            + self.head_params()
+        )
+
+
+# --------------------------------------------------------------------------
+# Flat parameter layout
+# --------------------------------------------------------------------------
+
+
+def layer_param_layout(cfg: GptConfig):
+    """(name, shape) list in flat-vector order for one transformer layer."""
+    h, f = cfg.hidden, cfg.mlp_hidden
+    return [
+        ("ln1_g", (h,)),
+        ("ln1_b", (h,)),
+        ("wqkv", (h, 3 * h)),
+        ("bqkv", (3 * h,)),
+        ("wo", (h, h)),
+        ("bo", (h,)),
+        ("ln2_g", (h,)),
+        ("ln2_b", (h,)),
+        ("w1", (h, f)),
+        ("b1", (f,)),
+        ("w2", (f, h)),
+        ("b2", (h,)),
+    ]
+
+
+def embed_param_layout(cfg: GptConfig):
+    return [("tok_emb", (cfg.vocab, cfg.hidden)), ("pos_emb", (cfg.seq, cfg.hidden))]
+
+
+def head_param_layout(cfg: GptConfig):
+    return [
+        ("lnf_g", (cfg.hidden,)),
+        ("lnf_b", (cfg.hidden,)),
+        ("w_out", (cfg.hidden, cfg.vocab)),
+    ]
+
+
+def _unpack(flat, layout):
+    out = {}
+    off = 0
+    for name, shape in layout:
+        size = 1
+        for d in shape:
+            size *= d
+        out[name] = flat[off : off + size].reshape(shape)
+        off += size
+    assert off == flat.shape[0], f"layout consumed {off} of {flat.shape[0]}"
+    return out
+
+
+def _pack(tree, layout):
+    return jnp.concatenate([tree[name].reshape(-1) for name, _ in layout])
+
+
+# --------------------------------------------------------------------------
+# Transformer layer: manual forward with explicit stash
+# --------------------------------------------------------------------------
+
+# Stash tensor order (names exported in the manifest; all f32):
+#   h1      [B,S,H]  ln1 output
+#   q,k,v   [B,A,S,D]
+#   probs   [B,A,S,S] attention probabilities
+#   ctx     [B,S,H]  attention context (pre out-proj)
+#   r1      [B,S,H]  first residual sum
+#   h2      [B,S,H]  ln2 output
+#   u       [B,S,F]  pre-GeLU
+#   g       [B,S,F]  post-GeLU
+STASH_NAMES = ["h1", "q", "k", "v", "probs", "ctx", "r1", "h2", "u", "g"]
+
+
+def stash_shapes(cfg: GptConfig):
+    b, s, h, a, d, f = (
+        cfg.micro_batch,
+        cfg.seq,
+        cfg.hidden,
+        cfg.heads,
+        cfg.head_dim,
+        cfg.mlp_hidden,
+    )
+    return {
+        "h1": (b, s, h),
+        "q": (b, a, s, d),
+        "k": (b, a, s, d),
+        "v": (b, a, s, d),
+        "probs": (b, a, s, s),
+        "ctx": (b, s, h),
+        "r1": (b, s, h),
+        "h2": (b, s, h),
+        "u": (b, s, f),
+        "g": (b, s, f),
+    }
+
+
+def _split_heads(x, cfg):
+    b, s, _ = x.shape
+    return x.reshape(b, s, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, a, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, a * d)
+
+
+def layer_fwd_full(cfg: GptConfig, p_flat, x):
+    """Forward of one pre-LN transformer layer, returning (y, stash...)."""
+    p = _unpack(p_flat, layer_param_layout(cfg))
+
+    if cfg.use_pallas:
+        h1 = layernorm_k.layernorm(x, p["ln1_g"], p["ln1_b"])
+    else:
+        h1 = ref.layernorm(x, p["ln1_g"], p["ln1_b"])
+
+    qkv = h1 @ p["wqkv"] + p["bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q, k, v = (_split_heads(t, cfg) for t in (q, k, v))
+
+    if cfg.use_pallas:
+        attn = attention_k.flash_attention(q, k, v, bq=min(128, cfg.seq), bk=min(128, cfg.seq))
+        # probs are not materialised by the flash kernel; the stash entry
+        # is recomputed by the reference path (kept numerically identical).
+        _, probs = ref.attention_probs(q, k, v)
+        ctx4 = attn
+    else:
+        ctx4, probs = ref.attention_probs(q, k, v)
+    ctx = _merge_heads(ctx4)
+
+    attn_out = ctx @ p["wo"] + p["bo"]
+    r1 = x + attn_out
+
+    h2 = ref.layernorm(r1, p["ln2_g"], p["ln2_b"])
+    if cfg.use_pallas:
+        bsf = h2.reshape(-1, cfg.hidden)
+        g2 = matmul_gelu_k.matmul_gelu(bsf, p["w1"], p["b1"])
+        g = g2.reshape(h2.shape[0], h2.shape[1], cfg.mlp_hidden)
+        u = h2 @ p["w1"] + p["b1"]  # stash still needs pre-GeLU
+    else:
+        u = h2 @ p["w1"] + p["b1"]
+        g = ref.gelu(u)
+    d = g @ p["w2"] + p["b2"]
+    y = r1 + d
+    return (y, h1, q, k, v, probs, ctx, r1, h2, u, g)
+
+
+def layer_fwd_light(cfg: GptConfig, p_flat, x):
+    """Forward returning only y (stash discarded — the evicted case)."""
+    return layer_fwd_full(cfg, p_flat, x)[0]
+
+
+def layer_recompute(cfg: GptConfig, p_flat, x):
+    """Regenerate the stash from the layer input — the recomputation op
+    the Lynx coordinator schedules anywhere between eviction and backward
+    (paper Fig. 3)."""
+    return layer_fwd_full(cfg, p_flat, x)[1:]
+
+
+def _layernorm_bwd(dy, x, gamma, eps=ref.LN_EPS):
+    """Backward of y = (x-mu)*rstd*gamma + beta. Returns (dx, dgamma, dbeta)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (x - mu) * rstd
+    dgamma = jnp.sum(dy * xhat, axis=tuple(range(x.ndim - 1)))
+    dbeta = jnp.sum(dy, axis=tuple(range(x.ndim - 1)))
+    dxhat = dy * gamma
+    h = x.shape[-1]
+    dx = rstd * (
+        dxhat
+        - jnp.mean(dxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    )
+    del h
+    return dx, dgamma, dbeta
+
+
+def layer_bwd(cfg: GptConfig, p_flat, x, stash, dy):
+    """Manual backward of one layer.
+
+    Args: stash — tuple in STASH_NAMES order (kept or recomputed; the
+    caller decides, that is the whole point). Returns (dx, dp_flat).
+    """
+    p = _unpack(p_flat, layer_param_layout(cfg))
+    h1, q, k, v, probs, ctx, r1, h2, u, g = stash
+    scale = 1.0 / (cfg.head_dim**0.5)
+
+    grads = {}
+
+    # y = r1 + d;  d = g @ w2 + b2
+    dr1 = dy
+    dd = dy
+    grads["w2"] = jnp.einsum("bsf,bsh->fh", g, dd)
+    grads["b2"] = jnp.sum(dd, axis=(0, 1))
+    dg = dd @ p["w2"].T
+
+    # g = gelu(u);  u = h2 @ w1 + b1
+    du = dg * ref.gelu_grad(u)
+    grads["w1"] = jnp.einsum("bsh,bsf->hf", h2, du)
+    grads["b1"] = jnp.sum(du, axis=(0, 1))
+    dh2 = du @ p["w1"].T
+
+    # h2 = ln(r1)
+    dr1_ln, grads["ln2_g"], grads["ln2_b"] = _layernorm_bwd(dh2, r1, p["ln2_g"])
+    dr1 = dr1 + dr1_ln
+
+    # r1 = x + attn_out;  attn_out = ctx @ wo + bo
+    dx = dr1
+    dattn = dr1
+    grads["wo"] = jnp.einsum("bsh,bsk->hk", ctx, dattn)
+    grads["bo"] = jnp.sum(dattn, axis=(0, 1))
+    dctx = dattn @ p["wo"].T
+
+    # ctx = merge_heads(probs @ v)
+    dctx4 = _split_heads(dctx, cfg)
+    dprobs = jnp.einsum("bhqd,bhkd->bhqk", dctx4, v)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", probs, dctx4)
+
+    # probs = softmax(masked scores): dscores = probs * (dprobs - Σ dprobs·probs)
+    dscores = probs * (dprobs - jnp.sum(dprobs * probs, axis=-1, keepdims=True))
+    # (masked entries have probs == 0 ⇒ dscores == 0; no explicit masking.)
+
+    # scores = q @ k^T · scale
+    dq = jnp.einsum("bhqk,bhkd->bhqd", dscores, k) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", dscores, q) * scale
+
+    # qkv projection
+    dqkv = jnp.concatenate(
+        [_merge_heads(dq), _merge_heads(dk), _merge_heads(dv)], axis=-1
+    )
+    grads["wqkv"] = jnp.einsum("bsh,bsk->hk", h1, dqkv)
+    grads["bqkv"] = jnp.sum(dqkv, axis=(0, 1))
+    dh1 = dqkv @ p["wqkv"].T
+
+    # h1 = ln(x)
+    dx_ln, grads["ln1_g"], grads["ln1_b"] = _layernorm_bwd(dh1, x, p["ln1_g"])
+    dx = dx + dx_ln
+
+    dp_flat = _pack(grads, layer_param_layout(cfg))
+    return dx, dp_flat
+
+
+# --------------------------------------------------------------------------
+# Embedding and head
+# --------------------------------------------------------------------------
+
+
+def embed_fwd(cfg: GptConfig, e_flat, tokens):
+    e = _unpack(e_flat, embed_param_layout(cfg))
+    return e["tok_emb"][tokens] + e["pos_emb"][None, :, :]
+
+
+def embed_bwd(cfg: GptConfig, tokens, dx):
+    dtok = jnp.zeros((cfg.vocab, cfg.hidden), jnp.float32).at[tokens].add(dx)
+    dpos = jnp.sum(dx, axis=0)
+    return _pack(
+        {"tok_emb": dtok, "pos_emb": dpos}, embed_param_layout(cfg)
+    )
+
+
+def head_fwd(cfg: GptConfig, h_flat, x, targets):
+    h = _unpack(h_flat, head_param_layout(cfg))
+    xf = ref.layernorm(x, h["lnf_g"], h["lnf_b"])
+    logits = xf @ h["w_out"]
+    return ref.cross_entropy(logits, targets)
+
+
+def head_bwd(cfg: GptConfig, h_flat, x, targets):
+    """Backward of the head, recomputing internals (cheap relative to the
+    body; the head is always on the last stage where Opt 2 applies)."""
+    h = _unpack(h_flat, head_param_layout(cfg))
+    xf = ref.layernorm(x, h["lnf_g"], h["lnf_b"])
+    logits = xf @ h["w_out"]
+
+    n = logits.shape[0] * logits.shape[1]
+    probs = ref.softmax(logits.astype(jnp.float32))
+    onehot = jax.nn.one_hot(targets, cfg.vocab, dtype=jnp.float32)
+    dlogits = (probs - onehot) / n
+
+    grads = {"w_out": jnp.einsum("bsh,bsv->hv", xf, dlogits)}
+    dxf = dlogits @ h["w_out"].T
+    dx, grads["lnf_g"], grads["lnf_b"] = _layernorm_bwd(dxf, x, h["lnf_g"])
+    loss = ref.cross_entropy(logits, targets)
+    return dx, _pack(grads, head_param_layout(cfg)), loss
+
+
+# --------------------------------------------------------------------------
+# Optimizer
+# --------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def adam_step(p, grad, m, v, lr_t):
+    """One Adam step over a flat parameter vector.
+
+    `lr_t` is the bias-corrected learning rate computed by the Rust
+    coordinator: lr · sqrt(1-b2^t) / (1-b1^t) — keeping the step counter
+    on the Rust side avoids re-lowering per step.
+    """
+    m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * grad
+    v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * grad * grad
+    p2 = p - lr_t * m2 / (jnp.sqrt(v2) + ADAM_EPS)
+    return p2, m2, v2
+
+
+# --------------------------------------------------------------------------
+# Fused reference train step (oracle for the composed pipeline)
+# --------------------------------------------------------------------------
+
+
+def model_loss(cfg: GptConfig, e_flat, layer_ps, h_flat, tokens, targets):
+    """Whole-model loss via the same manual forward pieces."""
+    x = embed_fwd(cfg, e_flat, tokens)
+    for p_flat in layer_ps:
+        x = layer_fwd_light(cfg, p_flat, x)
+    return head_fwd(cfg, h_flat, x, targets)
+
+
+def train_step(cfg: GptConfig, e_flat, layer_ps, h_flat, tokens, targets):
+    """Fused loss + grads via jax.grad — the numerical oracle against
+    which the Rust-composed per-layer pipeline is validated."""
+    def loss_fn(e, ls, h):
+        return model_loss(cfg, e, ls, h, tokens, targets)
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(
+        e_flat, list(layer_ps), h_flat
+    )
+    return loss, grads
+
+
+# --------------------------------------------------------------------------
+# Parameter init (mirrored in Rust for the runtime; seeds must agree only
+# with themselves — Rust initialises via its own PRNG and JAX is only the
+# compile path, so no cross-language bit-exactness is required.)
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: GptConfig, key):
+    k_e, k_h, *k_layers = jax.random.split(key, cfg.layers + 2)
+    scale = 0.02
+
+    def norm(k, shape):
+        return scale * jax.random.normal(k, shape, jnp.float32)
+
+    e = {
+        "tok_emb": norm(k_e, (cfg.vocab, cfg.hidden)),
+        "pos_emb": norm(jax.random.fold_in(k_e, 1), (cfg.seq, cfg.hidden)),
+    }
+    e_flat = _pack(e, embed_param_layout(cfg))
+
+    layer_ps = []
+    for kl in k_layers:
+        p = {}
+        for i, (name, shape) in enumerate(layer_param_layout(cfg)):
+            if name.startswith("ln") and name.endswith("_g"):
+                p[name] = jnp.ones(shape, jnp.float32)
+            elif name.startswith(("b", "ln")):
+                p[name] = jnp.zeros(shape, jnp.float32)
+            else:
+                p[name] = norm(jax.random.fold_in(kl, i), shape)
+        layer_ps.append(_pack(p, layer_param_layout(cfg)))
+
+    h = {
+        "lnf_g": jnp.ones((cfg.hidden,), jnp.float32),
+        "lnf_b": jnp.zeros((cfg.hidden,), jnp.float32),
+        "w_out": norm(k_h, (cfg.hidden, cfg.vocab)),
+    }
+    h_flat = _pack(h, head_param_layout(cfg))
+    return e_flat, layer_ps, h_flat

@@ -1,0 +1,6 @@
+"""Make the build-time `compile` package importable from any cwd."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

@@ -1,0 +1,41 @@
+"""AOT CLI smoke: `python -m compile.aot` produces a loadable artifact
+bundle (files + manifest) for a small custom config."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+PKG_DIR = Path(__file__).resolve().parent.parent
+
+
+def test_aot_cli_tiny_skip_fused(tmp_path):
+    out = tmp_path / "artifacts"
+    res = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out",
+            str(out),
+            "--preset",
+            "tiny",
+            "--skip-fused",
+        ],
+        cwd=PKG_DIR,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text/1"
+    assert "train_step_fused" not in manifest["entries"]
+    for name, entry in manifest["entries"].items():
+        hlo = (out / entry["file"]).read_text()
+        assert hlo.startswith("HloModule"), f"{name} artifact malformed"
+        assert "ENTRY" in hlo
+    # Parameter layouts round-trip through the manifest.
+    layer = manifest["param_layouts"]["layer"]
+    total = sum(int(__import__("math").prod(shape)) for _, shape in layer)
+    assert total == manifest["config"]["layer_params"]

@@ -1,0 +1,189 @@
+"""L2 correctness: manual explicit-stash backprop vs jax.vjp, composed
+per-layer pipeline vs the fused train step, and optimizer behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.GptConfig(vocab=128, hidden=64, heads=4, layers=2, seq=32, micro_batch=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, CFG.vocab)
+    targets = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, CFG.vocab)
+    return tokens, targets
+
+
+def test_param_layout_sizes():
+    assert CFG.layer_params() == sum(
+        int(np.prod(s)) for _, s in M.layer_param_layout(CFG)
+    )
+    assert CFG.embed_params() == sum(
+        int(np.prod(s)) for _, s in M.embed_param_layout(CFG)
+    )
+    assert CFG.head_params() == sum(
+        int(np.prod(s)) for _, s in M.head_param_layout(CFG)
+    )
+    assert CFG.total_params() == (
+        CFG.layers * CFG.layer_params() + CFG.embed_params() + CFG.head_params()
+    )
+
+
+def test_stash_shapes_cover_names():
+    shapes = M.stash_shapes(CFG)
+    assert list(shapes.keys()) == M.STASH_NAMES
+
+
+def test_fwd_full_light_and_recompute_agree(params, batch):
+    e, ls, _ = params
+    tokens, _ = batch
+    x = M.embed_fwd(CFG, e, tokens)
+    full = M.layer_fwd_full(CFG, ls[0], x)
+    light = M.layer_fwd_light(CFG, ls[0], x)
+    stash = M.layer_recompute(CFG, ls[0], x)
+    np.testing.assert_allclose(full[0], light, rtol=1e-6)
+    for a, b in zip(full[1:], stash):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_layer_bwd_matches_vjp(seed):
+    cfg = M.GptConfig(vocab=64, hidden=32, heads=2, layers=1, seq=16, micro_batch=2)
+    e, ls, _ = M.init_params(cfg, jax.random.PRNGKey(seed))
+    x = 0.5 * jax.random.normal(
+        jax.random.PRNGKey(seed + 1), (2, 16, 32), jnp.float32
+    )
+    dy = jax.random.normal(jax.random.PRNGKey(seed + 2), x.shape, jnp.float32)
+    out = M.layer_fwd_full(cfg, ls[0], x)
+    dx, dp = M.layer_bwd(cfg, ls[0], x, out[1:], dy)
+    _, vjp = jax.vjp(lambda p, xx: M.layer_fwd_light(cfg, p, xx), ls[0], x)
+    dp_ref, dx_ref = vjp(dy)
+    np.testing.assert_allclose(dx, dx_ref, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(dp, dp_ref, rtol=5e-4, atol=1e-5)
+
+
+def test_bwd_with_recomputed_stash_identical(params, batch):
+    """The crux of the paper: backward from a *recomputed* stash must be
+    bit-identical to backward from the kept stash (full-precision
+    recomputation, no accuracy drop — §9 'Lynx reduces memory footprint
+    through full precision recomputation')."""
+    e, ls, _ = params
+    tokens, _ = batch
+    x = M.embed_fwd(CFG, e, tokens)
+    out = M.layer_fwd_full(CFG, ls[0], x)
+    dy = jax.random.normal(jax.random.PRNGKey(9), x.shape, jnp.float32)
+    dx1, dp1 = M.layer_bwd(CFG, ls[0], x, out[1:], dy)
+    stash2 = M.layer_recompute(CFG, ls[0], x)
+    dx2, dp2 = M.layer_bwd(CFG, ls[0], x, stash2, dy)
+    np.testing.assert_array_equal(np.asarray(dx1), np.asarray(dx2))
+    np.testing.assert_array_equal(np.asarray(dp1), np.asarray(dp2))
+
+
+def test_head_and_embed_bwd_match_vjp(params, batch):
+    e, ls, h = params
+    tokens, targets = batch
+    x = M.embed_fwd(CFG, e, tokens)
+    dxh, dh, loss = M.head_bwd(CFG, h, x, targets)
+    loss_ref, vjph = jax.vjp(lambda hh, xx: M.head_fwd(CFG, hh, xx, targets), h, x)
+    dh_ref, dx_ref = vjph(jnp.float32(1.0))
+    np.testing.assert_allclose(loss, loss_ref, rtol=1e-6)
+    np.testing.assert_allclose(dh, dh_ref, rtol=5e-4, atol=1e-6)
+    np.testing.assert_allclose(dxh, dx_ref, rtol=5e-4, atol=1e-6)
+
+    dy = jax.random.normal(jax.random.PRNGKey(5), x.shape, jnp.float32)
+    _, vjpe = jax.vjp(lambda ee: M.embed_fwd(CFG, ee, tokens), e)
+    (de_ref,) = vjpe(dy)
+    np.testing.assert_allclose(
+        M.embed_bwd(CFG, tokens, dy), de_ref, rtol=1e-5, atol=1e-6
+    )
+
+
+def test_composed_pipeline_equals_fused(params, batch):
+    """Rust composes per-layer artifacts; this is the python-side proof
+    that the composition reproduces jax.grad of the whole model."""
+    e, ls, h = params
+    tokens, targets = batch
+    loss, (de_ref, dls_ref, dh_ref) = M.train_step(CFG, e, ls, h, tokens, targets)
+
+    xs = [M.embed_fwd(CFG, e, tokens)]
+    stashes = []
+    for p in ls:
+        out = M.layer_fwd_full(CFG, p, xs[-1])
+        stashes.append(out[1:])
+        xs.append(out[0])
+    dx, dh, loss2 = M.head_bwd(CFG, h, xs[-1], targets)
+    np.testing.assert_allclose(loss2, loss, rtol=1e-6)
+    dls = []
+    for i in reversed(range(CFG.layers)):
+        dx, dp = M.layer_bwd(CFG, ls[i], xs[i], stashes[i], dx)
+        dls.append(dp)
+    dls.reverse()
+    de = M.embed_bwd(CFG, tokens, dx)
+
+    np.testing.assert_allclose(de, de_ref, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(dh, dh_ref, rtol=5e-4, atol=1e-5)
+    for a, b in zip(dls, dls_ref):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=1e-5)
+
+
+def test_adam_step_moves_against_gradient():
+    p = jnp.zeros(10)
+    g = jnp.ones(10)
+    m = jnp.zeros(10)
+    v = jnp.zeros(10)
+    p2, m2, v2 = M.adam_step(p, g, m, v, jnp.float32(1e-3))
+    assert np.all(np.asarray(p2) < 0)
+    assert np.all(np.asarray(m2) > 0)
+    assert np.all(np.asarray(v2) > 0)
+
+
+def test_loss_decreases_under_training(params, batch):
+    """A handful of fused steps on a fixed batch must overfit."""
+    e, ls, h = params
+    tokens, targets = batch
+    state = {
+        "e": (e, jnp.zeros_like(e), jnp.zeros_like(e)),
+        "h": (h, jnp.zeros_like(h), jnp.zeros_like(h)),
+        "ls": [(p, jnp.zeros_like(p), jnp.zeros_like(p)) for p in ls],
+    }
+    lr = 1e-2
+    losses = []
+    for t in range(1, 9):
+        e_, ls_, h_ = (
+            state["e"][0],
+            [s[0] for s in state["ls"]],
+            state["h"][0],
+        )
+        loss, (de, dls, dh) = M.train_step(CFG, e_, ls_, h_, tokens, targets)
+        losses.append(float(loss))
+        lr_t = lr * np.sqrt(1 - M.ADAM_B2**t) / (1 - M.ADAM_B1**t)
+        state["e"] = M.adam_step(state["e"][0], de, state["e"][1], state["e"][2], jnp.float32(lr_t))
+        state["h"] = M.adam_step(state["h"][0], dh, state["h"][1], state["h"][2], jnp.float32(lr_t))
+        state["ls"] = [
+            M.adam_step(s[0], dp, s[1], s[2], jnp.float32(lr_t))
+            for s, dp in zip(state["ls"], dls)
+        ]
+    assert losses[-1] < losses[0] - 0.5, f"losses {losses}"
+
+
+def test_pallas_forward_matches_jnp(params, batch):
+    e, ls, _ = params
+    tokens, _ = batch
+    x = M.embed_fwd(CFG, e, tokens)
+    cfgp = M.GptConfig(**{**CFG.__dict__, "use_pallas": True})
+    y_ref = M.layer_fwd_light(CFG, ls[0], x)
+    y_pal = M.layer_fwd_light(cfgp, ls[0], x)
+    np.testing.assert_allclose(y_pal, y_ref, rtol=3e-4, atol=3e-5)

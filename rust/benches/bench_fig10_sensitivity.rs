@@ -1,0 +1,21 @@
+//! Bench: regenerate paper Fig. 10 — sensitivity to GPU topology (a),
+//! batch size (b) and sequence length (c), plus the §8 sequence-
+//! parallelism ablation.
+
+use lynx::experiments::{fig10, fig_sp};
+use lynx::util::bench::Bench;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("fig10: sensitivity analysis");
+    for which in ['a', 'b', 'c'] {
+        let t0 = Instant::now();
+        let fig = fig10(which, quick);
+        println!("{}", fig.render());
+        b.record(&format!("fig10{which}"), t0.elapsed().as_secs_f64(), "s");
+    }
+    let t0 = Instant::now();
+    println!("{}", fig_sp().render());
+    b.record("sp ablation", t0.elapsed().as_secs_f64(), "s");
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Fig. 2 — the motivation measurements:
+//! (a) TP communication share of training time vs TP width;
+//! (b) per-stage GPU memory imbalance under pipeline parallelism.
+
+use lynx::experiments::{fig2a, fig2b};
+use lynx::util::bench::Bench;
+use std::time::Instant;
+
+fn main() {
+    let mut b = Bench::new("fig2: motivation");
+    for (name, fig) in [("fig2a", fig2a()), ("fig2b", fig2b())] {
+        let t0 = Instant::now();
+        println!("{}", fig.render());
+        b.record(name, t0.elapsed().as_secs_f64(), "s");
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate paper Fig. 6 (a) and (b) — overall training
+//! throughput of every recomputation policy across model sizes on the
+//! NVLink-4x4 and PCIe-2x4 topologies.
+//!
+//! Run `cargo bench --bench bench_fig6_throughput`
+//! (set LYNX_BENCH_QUICK=1 for a reduced sweep).
+
+use lynx::experiments::fig6;
+use lynx::util::bench::Bench;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("fig6: overall throughput");
+    for pcie in [false, true] {
+        let t0 = Instant::now();
+        let fig = fig6(pcie, quick);
+        b.record(
+            &format!("generate {} ({} rows)", fig.id, fig.rows.len()),
+            t0.elapsed().as_secs_f64(),
+            "s",
+        );
+        println!("{}", fig.render());
+    }
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Fig. 7 (normalised recomputation time) and
+//! Fig. 8 (tensor-acquisition path breakdown per pipeline stage).
+
+use lynx::experiments::{fig7, fig8};
+use lynx::util::bench::Bench;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("fig7+8: recomputation policy effect");
+    for (name, fig) in [("fig7", fig7(quick)), ("fig8", fig8(quick))] {
+        let t0 = Instant::now();
+        println!("{}", fig.render());
+        b.record(name, t0.elapsed().as_secs_f64(), "s (render)");
+    }
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate paper Fig. 9 — Lynx recomputation-aware partitioning
+//! vs parameter-balanced dp-partitioning, 13B/20B at micro-batch 2/4/8.
+
+use lynx::experiments::fig9;
+use lynx::util::bench::Bench;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("fig9: model partitioning");
+    let t0 = Instant::now();
+    let fig = fig9(quick);
+    println!("{}", fig.render());
+    b.record("fig9 total", t0.elapsed().as_secs_f64(), "s");
+}

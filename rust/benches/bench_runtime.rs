@@ -1,0 +1,120 @@
+//! Micro-benchmarks for the PJRT runtime hot path: per-entry execution
+//! latency of the AOT artifacts, and the end-to-end per-step cost of the
+//! real trainer under each recomputation policy.
+//!
+//! Requires `make artifacts`; exits cleanly when they are missing.
+
+use lynx::runtime::literal::{lit_f32, lit_i32};
+use lynx::runtime::Engine;
+use lynx::train::{train, TrainConfig, TrainPolicy};
+use lynx::util::bench::Bench;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts` first; skipping");
+        return Ok(());
+    }
+    let eng = Engine::load(&dir, false)?;
+    let d = eng.manifest.dims.clone();
+    let (bsz, s, h, p_len) = (d.micro_batch, d.seq, d.hidden, d.layer_params);
+    let mut b = Bench::new("pjrt runtime hot path");
+
+    let p = vec![0.01f32; p_len];
+    let x = vec![0.5f32; bsz * s * h];
+    b.run("layer_fwd_light", || {
+        let args = [
+            lit_f32(&p, &[p_len]).unwrap(),
+            lit_f32(&x, &[bsz, s, h]).unwrap(),
+        ];
+        eng.call("layer_fwd_light", &args).unwrap()
+    });
+    b.run("layer_fwd_full (stash materialised)", || {
+        let args = [
+            lit_f32(&p, &[p_len]).unwrap(),
+            lit_f32(&x, &[bsz, s, h]).unwrap(),
+        ];
+        eng.call("layer_fwd_full", &args).unwrap()
+    });
+    b.run("layer_recompute", || {
+        let args = [
+            lit_f32(&p, &[p_len]).unwrap(),
+            lit_f32(&x, &[bsz, s, h]).unwrap(),
+        ];
+        eng.call("layer_recompute", &args).unwrap()
+    });
+    let stash = eng
+        .call(
+            "layer_recompute",
+            &[
+                lit_f32(&p, &[p_len]).unwrap(),
+                lit_f32(&x, &[bsz, s, h]).unwrap(),
+            ],
+        )
+        .unwrap();
+    b.run("layer_bwd", || {
+        let mut args = vec![
+            lit_f32(&p, &[p_len]).unwrap(),
+            lit_f32(&x, &[bsz, s, h]).unwrap(),
+        ];
+        for st in &stash {
+            // Re-upload: literals are consumed per call.
+            let v = st.to_vec::<f32>().unwrap();
+            let dims = st
+                .array_shape()
+                .unwrap()
+                .dims()
+                .iter()
+                .map(|&d| d as usize)
+                .collect::<Vec<_>>();
+            args.push(lit_f32(&v, &dims).unwrap());
+        }
+        args.push(lit_f32(&x, &[bsz, s, h]).unwrap());
+        eng.call("layer_bwd", &args).unwrap()
+    });
+    let toks = vec![1i32; bsz * s];
+    b.run("head_bwd (loss + grads)", || {
+        let args = [
+            lit_f32(&vec![0.01f32; d.head_params], &[d.head_params]).unwrap(),
+            lit_f32(&x, &[bsz, s, h]).unwrap(),
+            lit_i32(&toks, &[bsz, s]).unwrap(),
+        ];
+        eng.call("head_bwd", &args).unwrap()
+    });
+    b.run("adam_layer (flat vector update)", || {
+        let args = [
+            lit_f32(&p, &[p_len]).unwrap(),
+            lit_f32(&p, &[p_len]).unwrap(),
+            lit_f32(&p, &[p_len]).unwrap(),
+            lit_f32(&p, &[p_len]).unwrap(),
+            xla::Literal::scalar(1e-3f32),
+        ];
+        eng.call("adam_layer", &args).unwrap()
+    });
+    drop(eng);
+
+    // End-to-end: seconds per optimizer step under each policy.
+    println!("\n-- trainer steps/s (2 stages, 4 microbatches, 3 steps) --");
+    for policy in [TrainPolicy::StoreAll, TrainPolicy::OnDemand, TrainPolicy::Lynx] {
+        let cfg = TrainConfig {
+            artifacts: dir.clone(),
+            stages: 2,
+            num_micro: 4,
+            steps: 3,
+            lr: 1e-3,
+            policy,
+            comm_delay: Duration::from_millis(2),
+            seed: 7,
+            log_every: 0,
+        };
+        let r = train(&cfg)?;
+        b.record(
+            &format!("train step ({})", policy.label()),
+            r.wall_secs / r.steps as f64,
+            "s/step",
+        );
+    }
+    Ok(())
+}

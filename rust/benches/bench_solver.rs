@@ -1,0 +1,102 @@
+//! Micro-benchmarks for the solver substrate and the planners built on
+//! it — the hot path behind Table 3 and the partition search.
+
+use lynx::costmodel::{CostModel, Topology};
+use lynx::graph::{build_layer_graph, ModelConfig, TrainSetup};
+use lynx::plan::types::{LayerPlan, StageCtx, StagePlan};
+use lynx::plan::{heu_plan, HeuOptions};
+use lynx::solver::{solve_lp, solve_milp, Expr, MilpOptions, Model};
+use lynx::util::bench::Bench;
+use lynx::util::prng::Pcg32;
+
+fn random_lp(n: usize, m: usize, seed: u64) -> Model {
+    let mut rng = Pcg32::seeded(seed);
+    let mut model = Model::new();
+    let xs: Vec<_> = (0..n).map(|i| model.cont(format!("x{i}"), 0.0, 10.0)).collect();
+    for _ in 0..m {
+        let mut e = Expr::new();
+        for &x in &xs {
+            e.add_term(x, rng.f64() * 2.0 - 0.5);
+        }
+        model.add_le(e, 5.0 + rng.f64() * 10.0);
+    }
+    let mut obj = Expr::new();
+    for &x in &xs {
+        obj.add_term(x, rng.f64() - 0.7);
+    }
+    model.minimize(obj);
+    model
+}
+
+fn heu_fixture() -> (lynx::graph::LayerGraph, StageCtx, Vec<f64>) {
+    let s = TrainSetup::new(ModelConfig::by_name("7B").unwrap(), 4, 4, 8, 8);
+    let g = build_layer_graph(&s);
+    let cm = CostModel::new(Topology::nvlink(4, 4));
+    let times = cm.layer_times(&g);
+    let comm = g.comm_ops();
+    let (w1, w2) = (times[comm[0]], times[comm[1]]);
+    let boundary = 2.0 * (s.seq * s.micro_batch * s.model.hidden) as f64;
+    let store_all = {
+        let ctx0 = StageCtx {
+            n_layers: 8,
+            n_batch: 4,
+            stage: 0,
+            num_stages: 4,
+            mem_budget: f64::INFINITY,
+            fwd_window: [w1, w2],
+            bwd_window: [w1, w2],
+            boundary_bytes: boundary,
+        };
+        StagePlan::uniform(LayerPlan::store_all(g.ops.len()), 8).activation_bytes(&g, &ctx0)
+    };
+    let ctx = StageCtx {
+        n_layers: 8,
+        n_batch: 4,
+        stage: 0,
+        num_stages: 4,
+        mem_budget: store_all * 0.5,
+        fwd_window: [w1, w2],
+        bwd_window: [w1, w2],
+        boundary_bytes: boundary,
+    };
+    (g, ctx, times)
+}
+
+fn main() {
+    let mut b = Bench::new("solver substrate");
+
+    let lp_small = random_lp(20, 30, 1).to_lp(&[]);
+    b.run("simplex 20x30", || solve_lp(&lp_small).obj);
+
+    let lp_big = random_lp(150, 250, 2).to_lp(&[]);
+    b.run("simplex 150x250", || solve_lp(&lp_big).obj);
+
+    // A small knapsack MILP.
+    let mut rng = Pcg32::seeded(3);
+    let mut model = Model::new();
+    let xs: Vec<_> = (0..18).map(|i| model.binary(format!("x{i}"))).collect();
+    let mut w = Expr::new();
+    let mut v = Expr::new();
+    for &x in &xs {
+        w.add_term(x, 1.0 + rng.f64() * 4.0);
+        v.add_term(x, -(1.0 + rng.f64() * 9.0));
+    }
+    model.add_le(w, 20.0);
+    model.minimize(v);
+    b.run("bnb knapsack-18", || {
+        solve_milp(&model, &MilpOptions::default()).obj
+    });
+
+    // The paper-critical path: the per-layer HEU ILP (Table 3's headline
+    // is that this stays sub-second).
+    let (g, ctx, times) = heu_fixture();
+    let opts = HeuOptions::default();
+    let s = b.run("heu ILP (7B stage-0, tight memory)", || {
+        heu_plan(&g, &ctx, &times, &opts).search_secs
+    });
+    assert!(
+        s.mean < 2.0,
+        "HEU must stay in the paper's sub-second regime (got {:.3}s)",
+        s.mean
+    );
+}

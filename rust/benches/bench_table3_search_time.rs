@@ -1,0 +1,9 @@
+//! Bench: regenerate paper Table 3 — policy search times for Lynx-OPT,
+//! Lynx-HEU and HEU+partitioning across model sizes.
+
+use lynx::experiments::table3;
+
+fn main() {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    println!("{}", table3(quick).render());
+}

@@ -1,0 +1,303 @@
+//! `lynx` command-line launcher.
+//!
+//! Subcommands:
+//! * `simulate`  — simulate one (model, topology, policy) configuration;
+//! * `plan`      — show the recomputation plan the policy maker produces;
+//! * `partition` — run Algorithm 1 vs dp-partitioning;
+//! * `figures`   — regenerate paper figures/tables (`--all` or `--fig N`);
+//! * `train`     — real pipeline training on the AOT artifacts;
+//! * `profile`   — dump the analytic profiler database.
+
+use crate::costmodel::{CostModel, Topology};
+use crate::experiments;
+use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
+use crate::plan::{
+    build_stage_ctx, dp_partition_result, lynx_partition, plan_stage, stage_cost, PolicyKind,
+};
+use crate::profiler::profile_model;
+use crate::sim::{simulate, PartitionMode, SimConfig};
+use crate::train::{train, TrainConfig, TrainPolicy};
+use crate::util::argparse::{opt, Args, OptSpec};
+use crate::util::stats::fmt_bytes;
+use anyhow::{anyhow, Result};
+use std::time::Duration;
+
+const USAGE: &str = "lynx <simulate|plan|partition|figures|train|profile> [options]
+       lynx <subcommand> --help";
+
+fn common_specs() -> Vec<OptSpec> {
+    vec![
+        opt("model", "model preset: 1.3B|4.7B|7B|13B|20B", true, Some("1.3B")),
+        opt("topo", "topology: nvlink|pcie", true, Some("nvlink")),
+        opt("tp", "tensor-parallel width", true, Some("4")),
+        opt("pp", "pipeline stages", true, Some("4")),
+        opt("micro-batch", "microbatch size", true, Some("8")),
+        opt("num-micro", "microbatches per step", true, Some("8")),
+        opt("seq", "sequence length", true, Some("1024")),
+        opt("policy", "full|selective|uniform|block|checkmate|lynx-heu|lynx-opt", true, Some("lynx-heu")),
+        opt("partition", "dp|lynx", true, Some("dp")),
+        opt("help", "print help", false, None),
+        // train-only options (accepted everywhere for simplicity)
+        opt("artifacts", "artifact directory", true, Some("artifacts")),
+        opt("stages", "trainer pipeline stages", true, Some("2")),
+        opt("steps", "trainer optimizer steps", true, Some("50")),
+        opt("lr", "learning rate", true, Some("0.001")),
+        opt("train-policy", "store-all|on-demand|lynx", true, Some("lynx")),
+        opt("comm-delay-ms", "emulated p2p transfer ms", true, Some("2")),
+        opt("seed", "PRNG seed", true, Some("42")),
+        opt("log-every", "loss log interval", true, Some("10")),
+        // figures options
+        opt("fig", "figure id: 2a|2b|6a|6b|7|8|9|10a|10b|10c|table3|sp", true, None),
+        opt("all", "regenerate every figure", false, None),
+        opt("quick", "reduced configs for smoke runs", false, None),
+        opt("out", "write figure JSON to this directory", true, None),
+        opt("gantt", "render an ASCII pipeline gantt chart", false, None),
+    ]
+}
+
+fn parse_policy(s: &str) -> Result<PolicyKind> {
+    Ok(match s {
+        "full" => PolicyKind::Full,
+        "selective" => PolicyKind::Selective,
+        "uniform" => PolicyKind::Uniform,
+        "block" => PolicyKind::Block,
+        "checkmate" => PolicyKind::Checkmate,
+        "lynx-heu" | "heu" => PolicyKind::LynxHeu,
+        "lynx-opt" | "opt" => PolicyKind::LynxOpt,
+        other => return Err(anyhow!("unknown policy {other:?}")),
+    })
+}
+
+fn build_setup(a: &Args) -> Result<(TrainSetup, Topology)> {
+    let model = a.get("model").unwrap();
+    let m = ModelConfig::by_name(model).ok_or_else(|| anyhow!("unknown model {model:?}"))?;
+    let tp: usize = a.req("tp")?;
+    let pp: usize = a.req("pp")?;
+    let topo = match a.get("topo").unwrap() {
+        "nvlink" => Topology::nvlink(tp, pp),
+        "pcie" => Topology::pcie(tp, pp),
+        other => return Err(anyhow!("unknown topo {other:?}")),
+    };
+    let setup = TrainSetup::new(m, tp, pp, a.req("micro-batch")?, a.req("num-micro")?)
+        .with_seq(a.req("seq")?);
+    Ok((setup, topo))
+}
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: &[String]) -> Result<i32> {
+    let specs = common_specs();
+    if argv.is_empty() {
+        println!("{}", Args::help(&specs, USAGE));
+        return Ok(2);
+    }
+    let cmd = argv[0].as_str();
+    let a = Args::parse(&argv[1..], &specs)?;
+    if a.has("help") {
+        println!("{}", Args::help(&specs, USAGE));
+        return Ok(0);
+    }
+    match cmd {
+        "simulate" => cmd_simulate(&a),
+        "plan" => cmd_plan(&a),
+        "partition" => cmd_partition(&a),
+        "figures" => cmd_figures(&a),
+        "train" => cmd_train(&a),
+        "profile" => cmd_profile(&a),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{}", Args::help(&specs, USAGE));
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_simulate(a: &Args) -> Result<i32> {
+    let (setup, topo) = build_setup(a)?;
+    let policy = parse_policy(a.get("policy").unwrap())?;
+    let partition = match a.get("partition").unwrap() {
+        "dp" => PartitionMode::Dp,
+        "lynx" => PartitionMode::Lynx,
+        other => return Err(anyhow!("unknown partition mode {other:?}")),
+    };
+    let cm = CostModel::new(topo);
+    let r = simulate(&cm, &SimConfig { setup: setup.clone(), policy, partition });
+    println!("{}", r.to_json().pretty());
+    if a.has("gantt") {
+        use crate::sim::{render_gantt, run_pipeline, StageTiming};
+        let timings: Vec<StageTiming> = r
+            .stages
+            .iter()
+            .map(|st| StageTiming {
+                fwd: st.fwd,
+                bwd: st.bwd,
+                exposed: st.exposed_per_micro,
+                p2p: cm.comm.p2p_time(cm.memory.boundary_bytes(&setup)),
+            })
+            .collect();
+        let trace = run_pipeline(&timings, setup.num_micro, policy.is_lynx());
+        println!("{}", render_gantt(&timings, &trace, setup.num_micro, 110));
+    }
+    Ok(if r.oom { 1 } else { 0 })
+}
+
+fn cmd_plan(a: &Args) -> Result<i32> {
+    let (setup, topo) = build_setup(a)?;
+    let policy = parse_policy(a.get("policy").unwrap())?;
+    let cm = CostModel::new(topo);
+    let g = build_layer_graph(&setup);
+    let times = cm.layer_times(&g);
+    let part = crate::plan::dp_partition(setup.model.layers, setup.pp);
+    for stage in 0..setup.pp {
+        let ctx = build_stage_ctx(&setup, &cm, &g, &part, stage);
+        let out = plan_stage(policy, &g, &ctx, &times);
+        let cost = stage_cost(&setup, &cm, &g, &ctx, &out.plan);
+        println!(
+            "stage {stage}: layers={} oom={} search={:.3}s exposed={:.3}ms \
+             overlapped={:.3}ms peak={}",
+            ctx.n_layers,
+            out.oom,
+            out.search_secs,
+            1e3 * cost.exposed_recompute,
+            1e3 * cost.overlapped_recompute,
+            fmt_bytes(cost.peak_mem),
+        );
+        let lp = &out.plan.layers[0];
+        for (i, op) in g.ops.iter().enumerate() {
+            println!(
+                "    {:<16} retain={} phase={:?}",
+                op.name, lp.retain[i], lp.phase[i]
+            );
+        }
+    }
+    Ok(0)
+}
+
+fn cmd_partition(a: &Args) -> Result<i32> {
+    let (setup, topo) = build_setup(a)?;
+    let policy = parse_policy(a.get("policy").unwrap())?;
+    let cm = CostModel::new(topo);
+    let g = build_layer_graph(&setup);
+    let dp = dp_partition_result(&setup, &cm, &g, policy);
+    let lx = lynx_partition(&setup, &cm, &g, policy);
+    println!("dp-partition:   {:?} makespan {:.3}ms", dp.partition, 1e3 * dp.makespan());
+    println!(
+        "lynx-partition: {:?} makespan {:.3}ms ({:.2}x, search {:.2}s, {} evals)",
+        lx.partition,
+        1e3 * lx.makespan(),
+        dp.makespan() / lx.makespan(),
+        lx.search_secs,
+        lx.evaluated,
+    );
+    Ok(0)
+}
+
+fn cmd_figures(a: &Args) -> Result<i32> {
+    let quick = a.has("quick");
+    let figs = if a.has("all") {
+        experiments::all_figures(quick)
+    } else {
+        let id = a
+            .get("fig")
+            .ok_or_else(|| anyhow!("pass --fig <id> or --all"))?;
+        vec![match id {
+            "2a" => experiments::fig2a(),
+            "2b" => experiments::fig2b(),
+            "6a" => experiments::fig6(false, quick),
+            "6b" => experiments::fig6(true, quick),
+            "7" => experiments::fig7(quick),
+            "8" => experiments::fig8(quick),
+            "9" => experiments::fig9(quick),
+            "10a" => experiments::fig10('a', quick),
+            "10b" => experiments::fig10('b', quick),
+            "10c" => experiments::fig10('c', quick),
+            "table3" => experiments::table3(quick),
+            "sp" => experiments::fig_sp(),
+            other => return Err(anyhow!("unknown figure {other:?}")),
+        }]
+    };
+    for f in &figs {
+        println!("{}", f.render());
+        if let Some(dir) = a.get("out") {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(
+                std::path::Path::new(dir).join(format!("{}.json", f.id)),
+                f.to_json().pretty(),
+            )?;
+        }
+    }
+    Ok(0)
+}
+
+fn cmd_train(a: &Args) -> Result<i32> {
+    let policy = TrainPolicy::parse(a.get("train-policy").unwrap())
+        .ok_or_else(|| anyhow!("unknown train policy"))?;
+    let cfg = TrainConfig {
+        artifacts: a.get("artifacts").unwrap().into(),
+        stages: a.req("stages")?,
+        num_micro: a.req("num-micro")?,
+        steps: a.req("steps")?,
+        lr: a.req("lr")?,
+        policy,
+        comm_delay: Duration::from_millis(a.req::<u64>("comm-delay-ms")?),
+        seed: a.req("seed")?,
+        log_every: a.req("log-every")?,
+    };
+    let report = train(&cfg)?;
+    println!("{}", report.summary());
+    Ok(0)
+}
+
+fn cmd_profile(a: &Args) -> Result<i32> {
+    let (setup, topo) = build_setup(a)?;
+    let cm = CostModel::new(topo);
+    let db = profile_model(&setup, &cm);
+    println!("{}", db.to_json().pretty());
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_subcommand_is_code_2() {
+        assert_eq!(run(&sv(&["frobnicate"])).unwrap(), 2);
+    }
+
+    #[test]
+    fn help_flag_works() {
+        assert_eq!(run(&sv(&["simulate", "--help"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn profile_runs() {
+        assert_eq!(run(&sv(&["profile", "--model", "1.3B", "--tp", "2", "--pp", "4"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn simulate_runs_small() {
+        let code = run(&sv(&[
+            "simulate",
+            "--model",
+            "1.3B",
+            "--tp",
+            "2",
+            "--pp",
+            "4",
+            "--micro-batch",
+            "4",
+            "--policy",
+            "block",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn bad_policy_is_error() {
+        assert!(run(&sv(&["simulate", "--policy", "nope"])).is_err());
+    }
+}

@@ -1,0 +1,61 @@
+//! Communication time models: TP collectives and PP point-to-point.
+
+use super::device::LinkSpec;
+
+/// Collective/p2p cost model over the topology's links.
+#[derive(Debug, Clone)]
+pub struct CommModel {
+    pub tp_link: LinkSpec,
+    pub pp_link: LinkSpec,
+}
+
+impl CommModel {
+    pub fn new(tp_link: LinkSpec, pp_link: LinkSpec) -> CommModel {
+        CommModel { tp_link, pp_link }
+    }
+
+    /// All-reduce wall time given the *wire* bytes already computed by the
+    /// graph builder (`2(t-1)/t × buffer`). At TP=1 this is free.
+    pub fn allreduce_time(&self, wire_bytes: f64) -> f64 {
+        if wire_bytes <= 0.0 {
+            return 0.0;
+        }
+        self.tp_link.latency + wire_bytes / self.tp_link.bus_bw
+    }
+
+    /// Pipeline p2p transfer of an activation buffer between stages.
+    pub fn p2p_time(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        self.pp_link.latency + bytes / self.pp_link.bus_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_monotone_in_bytes_and_free_at_zero() {
+        let c = CommModel::new(LinkSpec::nvlink(), LinkSpec::infiniband());
+        assert_eq!(c.allreduce_time(0.0), 0.0);
+        assert!(c.allreduce_time(1e6) < c.allreduce_time(1e8));
+    }
+
+    #[test]
+    fn pcie_much_slower_than_nvlink() {
+        let nv = CommModel::new(LinkSpec::nvlink(), LinkSpec::infiniband());
+        let pc = CommModel::new(LinkSpec::pcie(), LinkSpec::infiniband());
+        let bytes = 64e6;
+        assert!(pc.allreduce_time(bytes) > 5.0 * nv.allreduce_time(bytes));
+    }
+
+    #[test]
+    fn p2p_uses_pp_link() {
+        let c = CommModel::new(LinkSpec::nvlink(), LinkSpec::infiniband());
+        // 16MB over 10GB/s IB ≈ 1.6ms.
+        let t = c.p2p_time(16e6);
+        assert!((1.0e-3..3.0e-3).contains(&t), "{t}");
+    }
+}

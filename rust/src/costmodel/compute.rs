@@ -1,0 +1,64 @@
+//! Roofline execution-time model for compute operators.
+
+use super::device::GpuSpec;
+
+/// Roofline model: an op takes max(compute time, memory time) plus a
+/// fixed launch overhead. This reproduces the property the paper exploits
+//  (§2.2): bandwidth-bound ops like LayerNorm have tiny outputs but
+/// disproportionate recompute *time* per byte freed.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    pub gpu: GpuSpec,
+}
+
+impl ComputeModel {
+    pub fn new(gpu: GpuSpec) -> ComputeModel {
+        ComputeModel { gpu }
+    }
+
+    /// Execution time in seconds for an op with `flops` FLOPs touching
+    /// `bytes` bytes of HBM.
+    pub fn time(&self, flops: f64, bytes: f64) -> f64 {
+        let t_compute = flops / (self.gpu.peak_flops * self.gpu.flops_eff);
+        let t_memory = bytes / (self.gpu.mem_bw * self.gpu.bw_eff);
+        t_compute.max(t_memory) + self.gpu.launch_overhead
+    }
+
+    /// Arithmetic intensity threshold (FLOPs/byte) above which an op is
+    /// compute-bound on this GPU.
+    pub fn ridge_point(&self) -> f64 {
+        (self.gpu.peak_flops * self.gpu.flops_eff) / (self.gpu.mem_bw * self.gpu.bw_eff)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn big_matmul_is_compute_bound() {
+        let m = ComputeModel::new(GpuSpec::a100_sxm());
+        // 4096^3 matmul: 1.4e11 flops, ~1e8 bytes.
+        let flops = 2.0 * 4096f64.powi(3);
+        let bytes = 3.0 * 4096f64 * 4096.0 * 2.0;
+        let t = m.time(flops, bytes);
+        let t_compute_only = flops / (m.gpu.peak_flops * m.gpu.flops_eff);
+        assert!((t - t_compute_only - m.gpu.launch_overhead).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layernorm_is_bandwidth_bound() {
+        let m = ComputeModel::new(GpuSpec::a100_sxm());
+        // LN over 8M elements: 64 MFLOPs, 32MB traffic.
+        let t = m.time(64e6, 32e6);
+        let t_mem_only = 32e6 / (m.gpu.mem_bw * m.gpu.bw_eff);
+        assert!((t - t_mem_only - m.gpu.launch_overhead).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ridge_point_near_a100_reality() {
+        let m = ComputeModel::new(GpuSpec::a100_sxm());
+        let r = m.ridge_point();
+        assert!((50.0..300.0).contains(&r), "ridge {r}");
+    }
+}

@@ -1,0 +1,142 @@
+//! Device and interconnect specifications (paper §7.1 testbeds).
+
+/// GPU specification. Defaults model the paper's A100 40GB.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Peak dense fp16/bf16 FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Device memory capacity, bytes.
+    pub mem_capacity: f64,
+    /// Achievable fraction of peak FLOPs for large matmuls (MFU ceiling).
+    pub flops_eff: f64,
+    /// Achievable fraction of peak memory bandwidth.
+    pub bw_eff: f64,
+    /// Fixed per-kernel launch overhead, seconds.
+    pub launch_overhead: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100-SXM 40GB (NVLink cluster nodes).
+    pub fn a100_sxm() -> GpuSpec {
+        GpuSpec {
+            name: "A100-SXM-40GB",
+            peak_flops: 312e12,
+            mem_bw: 1555e9,
+            mem_capacity: 40e9,
+            flops_eff: 0.55,
+            bw_eff: 0.80,
+            launch_overhead: 4e-6,
+        }
+    }
+
+    /// NVIDIA A100-PCIe 40GB (PCIe cluster nodes).
+    pub fn a100_pcie() -> GpuSpec {
+        GpuSpec { name: "A100-PCIe-40GB", ..GpuSpec::a100_sxm() }
+    }
+
+    /// Memory available for training after framework/CUDA reserves.
+    pub fn usable_memory(&self) -> f64 {
+        self.mem_capacity - 2.5e9
+    }
+}
+
+/// Interconnect kind for the TP group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    NvLink,
+    Pcie,
+    Infiniband,
+}
+
+/// Link specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    pub kind: LinkKind,
+    /// Achievable algorithm (bus) bandwidth for collectives, bytes/s.
+    pub bus_bw: f64,
+    /// Per-collective latency, seconds.
+    pub latency: f64,
+}
+
+impl LinkSpec {
+    /// NVLink3: 600 GB/s bidirectional nameplate; NCCL all-reduce bus
+    /// bandwidth on A100-SXM is ~230 GB/s in practice.
+    pub fn nvlink() -> LinkSpec {
+        LinkSpec { kind: LinkKind::NvLink, bus_bw: 230e9, latency: 10e-6 }
+    }
+
+    /// PCIe 4.0 x16: 64 GB/s bidirectional nameplate; ~12 GB/s achievable
+    /// all-reduce bus bandwidth for a GPU pair without NVLink (NCCL over
+    /// PCIe contends with host traffic — the paper measures >70% of step
+    /// time spent in TP communication on this path).
+    pub fn pcie() -> LinkSpec {
+        LinkSpec { kind: LinkKind::Pcie, bus_bw: 12e9, latency: 25e-6 }
+    }
+
+    /// ConnectX-5 InfiniBand (100 Gb/s) for inter-node pipeline p2p.
+    pub fn infiniband() -> LinkSpec {
+        LinkSpec { kind: LinkKind::Infiniband, bus_bw: 10e9, latency: 5e-6 }
+    }
+}
+
+/// A cluster topology: `tp` GPUs per stage over `tp_link`, `pp` stages
+/// over `pp_link`. Named like the paper: NVLink-2x8 = TP 2, 8 stages.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    pub name: String,
+    pub gpu: GpuSpec,
+    pub tp: usize,
+    pub pp: usize,
+    pub tp_link: LinkSpec,
+    pub pp_link: LinkSpec,
+}
+
+impl Topology {
+    pub fn nvlink(tp: usize, pp: usize) -> Topology {
+        Topology {
+            name: format!("NVLink-{tp}x{pp}"),
+            gpu: GpuSpec::a100_sxm(),
+            tp,
+            pp,
+            tp_link: LinkSpec::nvlink(),
+            pp_link: LinkSpec::infiniband(),
+        }
+    }
+
+    pub fn pcie(tp: usize, pp: usize) -> Topology {
+        Topology {
+            name: format!("PCIe-{tp}x{pp}"),
+            gpu: GpuSpec::a100_pcie(),
+            tp,
+            pp,
+            tp_link: LinkSpec::pcie(),
+            pp_link: LinkSpec::infiniband(),
+        }
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.tp * self.pp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_sane() {
+        let g = GpuSpec::a100_sxm();
+        assert!(g.usable_memory() < g.mem_capacity);
+        assert!(LinkSpec::nvlink().bus_bw > 10.0 * LinkSpec::pcie().bus_bw);
+    }
+
+    #[test]
+    fn topology_naming_matches_paper() {
+        assert_eq!(Topology::nvlink(2, 8).name, "NVLink-2x8");
+        assert_eq!(Topology::pcie(2, 4).name, "PCIe-2x4");
+        assert_eq!(Topology::nvlink(4, 4).gpus(), 16);
+    }
+}

@@ -1,0 +1,92 @@
+//! GPU memory accounting for mixed-precision training (paper §2.1).
+
+use crate::graph::{LayerGraph, TrainSetup};
+
+/// Mixed-precision (fp16 compute / fp32 Adam) memory model.
+///
+/// Model states cost 16 bytes per parameter: fp16 weights (2) + fp16
+/// gradients (2) + fp32 momentum/variance/master-weights (4+4+4) — the
+/// exact accounting the paper gives in §2.1 "Impact of GPU memory".
+#[derive(Debug, Clone, Default)]
+pub struct MemoryModel {}
+
+impl MemoryModel {
+    /// Static (model-state) bytes per GPU for `layers` transformer layers
+    /// plus optional embedding, sharded over TP.
+    pub fn static_bytes(&self, setup: &TrainSetup, layers: usize, with_embedding: bool) -> f64 {
+        let per_layer = 16.0 * setup.model.params_per_layer() / setup.tp as f64;
+        let emb = if with_embedding {
+            16.0 * setup.model.params_embedding(setup.seq) / setup.tp as f64
+        } else {
+            0.0
+        };
+        per_layer * layers as f64 + emb
+    }
+
+    /// Bytes of the layer-boundary activation (the checkpoint input of a
+    /// layer): fp16[s, b, h], replicated across TP ranks.
+    pub fn boundary_bytes(&self, setup: &TrainSetup) -> f64 {
+        2.0 * setup.seq as f64 * setup.micro_batch as f64 * setup.model.hidden as f64
+    }
+
+    /// Full per-layer activation footprint when everything is stored
+    /// (sum of op outputs + the layer input), per TP rank.
+    pub fn full_layer_activation_bytes(&self, g: &LayerGraph, setup: &TrainSetup) -> f64 {
+        g.total_out_bytes() + self.boundary_bytes(setup)
+    }
+
+    /// In-flight microbatch count per 1F1B stage: stage `s` of `p` holds
+    /// up to `p - s` forward activations before its first backward
+    /// (Fig. 1(b) / Observation 2 — early stages hold more).
+    pub fn inflight_microbatches(&self, stage: usize, pp: usize, num_micro: usize) -> usize {
+        (pp - stage).min(num_micro)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_layer_graph, ModelConfig};
+
+    fn setup() -> TrainSetup {
+        TrainSetup::new(ModelConfig::by_name("7B").unwrap(), 2, 4, 4, 8)
+    }
+
+    #[test]
+    fn sixteen_bytes_per_param() {
+        let s = setup();
+        let m = MemoryModel::default();
+        let one_layer = m.static_bytes(&s, 1, false);
+        let expected = 16.0 * s.model.params_per_layer() / s.tp as f64;
+        assert!((one_layer - expected).abs() < 1.0);
+    }
+
+    #[test]
+    fn paper_4_7b_example_magnitude() {
+        // §2.1: 4.7B model, TP=8, batch 4 -> ~8GB model states per GPU.
+        let mut s = TrainSetup::new(ModelConfig::by_name("4.7B").unwrap(), 8, 1, 4, 1);
+        s.seq = 1024;
+        let m = MemoryModel::default();
+        let states = m.static_bytes(&s, s.model.layers, true);
+        assert!(
+            (6e9..12e9).contains(&states),
+            "model states {states:.3e} should be ~8-9GB"
+        );
+    }
+
+    #[test]
+    fn early_stages_hold_more_microbatches() {
+        let m = MemoryModel::default();
+        assert_eq!(m.inflight_microbatches(0, 4, 8), 4);
+        assert_eq!(m.inflight_microbatches(3, 4, 8), 1);
+        assert_eq!(m.inflight_microbatches(0, 4, 2), 2); // capped by num_micro
+    }
+
+    #[test]
+    fn full_activation_exceeds_boundary() {
+        let s = setup();
+        let g = build_layer_graph(&s);
+        let m = MemoryModel::default();
+        assert!(m.full_layer_activation_bytes(&g, &s) > 5.0 * m.boundary_bytes(&s));
+    }
+}

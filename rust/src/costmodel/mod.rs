@@ -1,0 +1,113 @@
+//! Analytic cost models for devices, links, compute, communication and
+//! memory.
+//!
+//! The paper profiles real A100 clusters with CUDA events; this module is
+//! the calibrated substitute (DESIGN.md §2): op execution time from a
+//! roofline over FLOPs and bytes, collective time from ring all-reduce
+//! bandwidth terms, and memory from mixed-precision training accounting
+//! (16 bytes per parameter for model states, §2.1).
+
+pub mod comm;
+pub mod compute;
+pub mod device;
+pub mod memory;
+
+pub use comm::CommModel;
+pub use compute::ComputeModel;
+pub use device::{GpuSpec, LinkKind, LinkSpec, Topology};
+pub use memory::MemoryModel;
+
+use crate::graph::{LayerGraph, Op};
+
+/// Bundle of the three models for one topology.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub topo: Topology,
+    pub compute: ComputeModel,
+    pub comm: CommModel,
+    pub memory: MemoryModel,
+}
+
+impl CostModel {
+    pub fn new(topo: Topology) -> CostModel {
+        CostModel {
+            compute: ComputeModel::new(topo.gpu.clone()),
+            comm: CommModel::new(topo.tp_link.clone(), topo.pp_link.clone()),
+            memory: MemoryModel::default(),
+            topo,
+        }
+    }
+
+    /// Execution time of one op (forward), seconds.
+    pub fn op_time(&self, op: &Op) -> f64 {
+        if op.is_comm() {
+            self.comm.allreduce_time(op.comm_bytes)
+        } else {
+            self.compute.time(op.flops, op.bytes_accessed)
+        }
+    }
+
+    /// Per-op forward times for a layer graph.
+    pub fn layer_times(&self, g: &LayerGraph) -> Vec<f64> {
+        g.ops.iter().map(|o| self.op_time(o)).collect()
+    }
+
+    /// Backward time of one op. Matmul backward does ~2x forward work
+    /// (dX and dW); elementwise/norm backward ~1.5x; comms mirror forward.
+    pub fn op_bwd_time(&self, op: &Op) -> f64 {
+        if op.is_comm() {
+            self.comm.allreduce_time(op.comm_bytes)
+        } else if op.flops > op.bytes_accessed {
+            2.0 * self.op_time(op)
+        } else {
+            1.5 * self.op_time(op)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
+
+    #[test]
+    fn layer_time_scales_with_model_size() {
+        let topo = Topology::nvlink(2, 8);
+        let cm = CostModel::new(topo);
+        let t_small = {
+            let s = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 8, 8, 8);
+            cm.layer_times(&build_layer_graph(&s)).iter().sum::<f64>()
+        };
+        let t_big = {
+            let s = TrainSetup::new(ModelConfig::by_name("13B").unwrap(), 2, 8, 8, 8);
+            cm.layer_times(&build_layer_graph(&s)).iter().sum::<f64>()
+        };
+        assert!(t_big > 3.0 * t_small, "13B layer {t_big} vs 1.3B layer {t_small}");
+    }
+
+    #[test]
+    fn comm_share_rises_with_tp_width_fig2a() {
+        // Reproduces the *shape* of Fig 2(a): TP comm share grows with the
+        // number of GPUs in the TP group, and is far higher on PCIe.
+        let share = |topo: Topology, tp: usize| {
+            let cm = CostModel::new(topo);
+            let s = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), tp, 8, 8, 8);
+            let g = build_layer_graph(&s);
+            let times = cm.layer_times(&g);
+            let comm: f64 = g
+                .ops
+                .iter()
+                .zip(&times)
+                .filter(|(o, _)| o.is_comm())
+                .map(|(_, t)| t)
+                .sum();
+            comm / times.iter().sum::<f64>()
+        };
+        let s2 = share(Topology::nvlink(2, 8), 2);
+        let s4 = share(Topology::nvlink(4, 4), 4);
+        let s8 = share(Topology::nvlink(8, 2), 8);
+        assert!(s2 < s4 && s4 < s8, "nvlink shares {s2:.3} {s4:.3} {s8:.3}");
+        let p2 = share(Topology::pcie(2, 4), 2);
+        assert!(p2 > s2 * 2.0, "pcie share {p2:.3} should dwarf nvlink {s2:.3}");
+    }
+}

@@ -1,0 +1,150 @@
+//! Model configurations (paper Table 2) and training setup.
+
+/// GPT-style model configuration. The five presets reproduce Table 2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub heads: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    /// FFN expansion factor (4 for GPT).
+    pub ffn_mult: usize,
+}
+
+impl ModelConfig {
+    /// Table 2 presets. `seq`/batch are runtime choices, see [`TrainSetup`].
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        Some(match name {
+            "gpt-1.3b" | "1.3B" => ModelConfig::gpt(name_of("1.3B"), 16, 1792, 32),
+            "gpt-4.7b" | "4.7B" => ModelConfig::gpt(name_of("4.7B"), 16, 3072, 40),
+            "gpt-7b" | "7B" => ModelConfig::gpt(name_of("7B"), 32, 4096, 32),
+            "gpt-13b" | "13B" => ModelConfig::gpt(name_of("13B"), 40, 5120, 40),
+            "gpt-20b" | "20B" => ModelConfig::gpt(name_of("20B"), 64, 6144, 44),
+            _ => return None,
+        })
+    }
+
+    pub fn all_presets() -> Vec<ModelConfig> {
+        ["1.3B", "4.7B", "7B", "13B", "20B"]
+            .iter()
+            .map(|n| ModelConfig::by_name(n).unwrap())
+            .collect()
+    }
+
+    pub const fn gpt(name: &'static str, heads: usize, hidden: usize, layers: usize) -> Self {
+        ModelConfig { name, heads, hidden, layers, vocab: 50_304, ffn_mult: 4 }
+    }
+
+    /// Parameters in one transformer layer (weights + biases + 2 LN).
+    pub fn params_per_layer(&self) -> f64 {
+        let h = self.hidden as f64;
+        let f = self.ffn_mult as f64;
+        // QKV: 3h^2 + 3h; out proj: h^2 + h; MLP: 2*f*h^2 + (f+1)h; 2 LN: 4h.
+        (4.0 + 2.0 * f) * h * h + (3.0 + 1.0 + f + 1.0 + 4.0) * h
+    }
+
+    /// Embedding (+ tied output head) parameters.
+    pub fn params_embedding(&self, seq: usize) -> f64 {
+        (self.vocab as f64 + seq as f64) * self.hidden as f64
+    }
+
+    /// Total parameter count.
+    pub fn params_total(&self, seq: usize) -> f64 {
+        self.params_per_layer() * self.layers as f64 + self.params_embedding(seq)
+    }
+}
+
+fn name_of(n: &str) -> &'static str {
+    match n {
+        "1.3B" => "gpt-1.3b",
+        "4.7B" => "gpt-4.7b",
+        "7B" => "gpt-7b",
+        "13B" => "gpt-13b",
+        "20B" => "gpt-20b",
+        _ => unreachable!(),
+    }
+}
+
+/// A concrete training run: model + parallelism + batch geometry.
+#[derive(Debug, Clone)]
+pub struct TrainSetup {
+    pub model: ModelConfig,
+    /// Tensor-parallel width (GPUs per stage).
+    pub tp: usize,
+    /// Pipeline stages.
+    pub pp: usize,
+    /// Microbatch size (samples per pipeline slot).
+    pub micro_batch: usize,
+    /// Microbatches per global batch (pipeline depth).
+    pub num_micro: usize,
+    /// Sequence length.
+    pub seq: usize,
+    /// Sequence parallelism on top of TP (paper §8): shards the
+    /// LayerNorm/residual activations along the sequence dimension.
+    pub sequence_parallel: bool,
+}
+
+impl TrainSetup {
+    pub fn new(model: ModelConfig, tp: usize, pp: usize, micro_batch: usize, num_micro: usize) -> Self {
+        TrainSetup { model, tp, pp, micro_batch, num_micro, seq: 1024, sequence_parallel: false }
+    }
+
+    pub fn with_seq(mut self, seq: usize) -> Self {
+        self.seq = seq;
+        self
+    }
+
+    /// Global batch size in samples.
+    pub fn global_batch(&self) -> usize {
+        self.micro_batch * self.num_micro
+    }
+
+    /// Total GPUs used.
+    pub fn gpus(&self) -> usize {
+        self.tp * self.pp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_param_counts_match_paper_labels() {
+        // The preset parameter counts must land close to the nameplate
+        // sizes of Table 2 (tolerance: embeddings & rounding).
+        let cases = [("1.3B", 1.3e9), ("4.7B", 4.7e9), ("7B", 7e9), ("13B", 13e9), ("20B", 20e9)];
+        for (name, nameplate) in cases {
+            let m = ModelConfig::by_name(name).unwrap();
+            let p = m.params_total(1024);
+            let ratio = p / nameplate;
+            assert!(
+                (0.85..1.15).contains(&ratio),
+                "{name}: computed {p:.3e} vs nameplate {nameplate:.1e} (ratio {ratio:.3})"
+            );
+        }
+    }
+
+    #[test]
+    fn preset_shapes_match_table2() {
+        let m = ModelConfig::by_name("13B").unwrap();
+        assert_eq!((m.heads, m.hidden, m.layers), (40, 5120, 40));
+        let m = ModelConfig::by_name("20B").unwrap();
+        assert_eq!((m.heads, m.hidden, m.layers), (64, 6144, 44));
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(ModelConfig::by_name("gpt-9000b").is_none());
+    }
+
+    #[test]
+    fn setup_geometry() {
+        let s = TrainSetup::new(ModelConfig::by_name("7B").unwrap(), 4, 4, 2, 8);
+        assert_eq!(s.global_batch(), 16);
+        assert_eq!(s.gpus(), 16);
+        assert_eq!(s.seq, 1024);
+        assert_eq!(s.with_seq(2048).seq, 2048);
+    }
+}

@@ -1,0 +1,328 @@
+//! The tensor-parallel transformer layer operator graph.
+//!
+//! Mirrors Megatron-LM's layer (Fig. 1(a) of the paper): a self-attention
+//! block ending in a row-parallel projection followed by an **all-reduce**
+//! (`g`), then an MLP block ending in a second all-reduce. The two
+//! all-reduces per direction are the paper's four per-layer communication
+//! phases (Phase1/2 forward, Phase3/4 backward) that Lynx overlaps
+//! recomputation into.
+//!
+//! All sizes are fp16 activations (2 bytes/elem) per microbatch per TP
+//! rank; FLOPs are forward FLOPs per TP rank.
+
+use super::gpt::TrainSetup;
+use super::op::{CommKind, ComputeKind, Op, OpId, OpKind};
+
+/// Operator graph of one transformer layer, with cost metadata.
+#[derive(Debug, Clone)]
+pub struct LayerGraph {
+    pub ops: Vec<Op>,
+    /// Index of the two forward all-reduce ops (Phase1 and Phase2 anchors).
+    pub fwd_comm: [OpId; 2],
+}
+
+impl LayerGraph {
+    /// Ids of communication ops.
+    pub fn comm_ops(&self) -> Vec<OpId> {
+        self.ops
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.is_comm())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// `USER(d)`: ops that depend on `d`.
+    pub fn users(&self, d: OpId) -> Vec<OpId> {
+        self.ops
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.deps.contains(&d))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Total forward compute time-weighted cost given per-op times.
+    pub fn total_out_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.out_bytes).sum()
+    }
+
+    /// Sum of forward FLOPs.
+    pub fn total_flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    /// The final op (layer output) — always checkpointed (paper Eq. 19).
+    pub fn output_op(&self) -> OpId {
+        self.ops.len() - 1
+    }
+
+    /// Validate the graph is a DAG in topological order with in-range deps.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, o) in self.ops.iter().enumerate() {
+            for &d in &o.deps {
+                if d >= i {
+                    return Err(format!("op {i} ({}) has non-topological dep {d}", o.name));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build the layer graph for one TP rank under `setup`.
+pub fn build_layer_graph(setup: &TrainSetup) -> LayerGraph {
+    let h = setup.model.hidden as f64;
+    let a = setup.model.heads as f64;
+    let f = setup.model.ffn_mult as f64;
+    let s = setup.seq as f64;
+    let b = setup.micro_batch as f64;
+    let t = setup.tp as f64;
+    let e = 2.0; // fp16 bytes per element
+
+    let sbh = s * b * h;
+    // Sequence parallelism (paper §8): the not-TP-sharded ops (LayerNorm,
+    // residual adds) become sequence-sharded — their activations and
+    // FLOPs divide by t. The collective volume is unchanged
+    // (reduce-scatter + all-gather move the same bytes as all-reduce).
+    let sp = if setup.sequence_parallel { t } else { 1.0 };
+    let mut ops: Vec<Op> = Vec::with_capacity(16);
+    let mut push = |op: Op| -> OpId {
+        ops.push(op);
+        ops.len() - 1
+    };
+
+    // Attention block -----------------------------------------------------
+    // LN is not TP-split (no sequence parallelism by default): every rank
+    // computes it redundantly over the full activation.
+    let ln1 = push(Op {
+        name: "ln1".into(),
+        kind: OpKind::Compute(ComputeKind::LayerNorm),
+        flops: 8.0 * sbh / sp,
+        bytes_accessed: 2.0 * e * sbh / sp,
+        out_bytes: e * sbh / sp,
+        comm_bytes: 0.0,
+        deps: vec![], // depends on the layer input (the checkpoint)
+    });
+    let qkv = push(Op {
+        name: "qkv_proj".into(),
+        kind: OpKind::Compute(ComputeKind::QkvProj),
+        flops: 6.0 * sbh * h / t,
+        bytes_accessed: e * (sbh + 3.0 * h * h / t + 3.0 * sbh / t),
+        out_bytes: 3.0 * e * sbh / t,
+        comm_bytes: 0.0,
+        deps: vec![ln1],
+    });
+    let scores = push(Op {
+        name: "attn_scores".into(),
+        kind: OpKind::Compute(ComputeKind::AttnScores),
+        flops: 2.0 * b * s * s * h / t,
+        bytes_accessed: e * (2.0 * sbh / t + a * s * s * b / t),
+        out_bytes: e * a * s * s * b / t,
+        comm_bytes: 0.0,
+        deps: vec![qkv],
+    });
+    let softmax = push(Op {
+        name: "softmax".into(),
+        kind: OpKind::Compute(ComputeKind::Softmax),
+        flops: 5.0 * a * s * s * b / t,
+        bytes_accessed: 2.0 * e * a * s * s * b / t,
+        // Output probs (fp16) + the attention-dropout mask (1 byte/elem)
+        // that backward needs — Megatron's 5as^2b activation term.
+        out_bytes: (e + 1.0) * a * s * s * b / t,
+        comm_bytes: 0.0,
+        deps: vec![scores],
+    });
+    let context = push(Op {
+        name: "attn_context".into(),
+        kind: OpKind::Compute(ComputeKind::AttnContext),
+        flops: 2.0 * b * s * s * h / t,
+        bytes_accessed: e * (a * s * s * b / t + 2.0 * sbh / t),
+        out_bytes: e * sbh / t,
+        comm_bytes: 0.0,
+        deps: vec![softmax, qkv],
+    });
+    let out_proj = push(Op {
+        name: "attn_out_proj".into(),
+        kind: OpKind::Compute(ComputeKind::AttnOutProj),
+        flops: 2.0 * sbh * h / t,
+        bytes_accessed: e * (sbh / t + h * h / t + sbh),
+        out_bytes: e * sbh,
+        comm_bytes: 0.0,
+        deps: vec![context],
+    });
+    // Forward all-reduce #1 (Phase1 window). Ring all-reduce moves
+    // 2(t-1)/t of the buffer over the link.
+    let ar1 = push(Op {
+        name: "allreduce_attn".into(),
+        kind: OpKind::Comm(CommKind::AllReduce),
+        flops: 0.0,
+        bytes_accessed: 2.0 * e * sbh,
+        out_bytes: 0.0, // reduces in place
+        comm_bytes: 2.0 * (t - 1.0) / t * e * sbh,
+        deps: vec![out_proj],
+    });
+    let res1 = push(Op {
+        name: "residual_add1".into(),
+        kind: OpKind::Compute(ComputeKind::ResidualAdd),
+        flops: sbh / sp,
+        bytes_accessed: 3.0 * e * sbh / sp,
+        // Residual sum + the post-attention dropout mask (1 byte/elem).
+        out_bytes: (e + 1.0) * sbh / sp,
+        comm_bytes: 0.0,
+        deps: vec![ar1],
+    });
+
+    // MLP block ------------------------------------------------------------
+    let ln2 = push(Op {
+        name: "ln2".into(),
+        kind: OpKind::Compute(ComputeKind::LayerNorm),
+        flops: 8.0 * sbh / sp,
+        bytes_accessed: 2.0 * e * sbh / sp,
+        out_bytes: e * sbh / sp,
+        comm_bytes: 0.0,
+        deps: vec![res1],
+    });
+    let mlp_up = push(Op {
+        name: "mlp_up".into(),
+        kind: OpKind::Compute(ComputeKind::MlpUp),
+        flops: 2.0 * f * sbh * h / t,
+        bytes_accessed: e * (sbh + f * h * h / t + f * sbh / t),
+        out_bytes: e * f * sbh / t,
+        comm_bytes: 0.0,
+        deps: vec![ln2],
+    });
+    let gelu = push(Op {
+        name: "gelu".into(),
+        kind: OpKind::Compute(ComputeKind::Gelu),
+        flops: 8.0 * f * sbh / t,
+        bytes_accessed: 2.0 * e * f * sbh / t,
+        out_bytes: e * f * sbh / t,
+        comm_bytes: 0.0,
+        deps: vec![mlp_up],
+    });
+    let mlp_down = push(Op {
+        name: "mlp_down".into(),
+        kind: OpKind::Compute(ComputeKind::MlpDown),
+        flops: 2.0 * f * sbh * h / t,
+        bytes_accessed: e * (f * sbh / t + f * h * h / t + sbh),
+        out_bytes: e * sbh,
+        comm_bytes: 0.0,
+        deps: vec![gelu],
+    });
+    // Forward all-reduce #2 (Phase2 window).
+    let ar2 = push(Op {
+        name: "allreduce_mlp".into(),
+        kind: OpKind::Comm(CommKind::AllReduce),
+        flops: 0.0,
+        bytes_accessed: 2.0 * e * sbh,
+        out_bytes: 0.0,
+        comm_bytes: 2.0 * (t - 1.0) / t * e * sbh,
+        deps: vec![mlp_down],
+    });
+    let _res2 = push(Op {
+        name: "residual_add2".into(),
+        kind: OpKind::Compute(ComputeKind::ResidualAdd),
+        flops: sbh / sp,
+        bytes_accessed: 3.0 * e * sbh / sp,
+        // Residual sum + the post-MLP dropout mask (1 byte/elem).
+        out_bytes: (e + 1.0) * sbh / sp,
+        comm_bytes: 0.0,
+        deps: vec![ar2, res1],
+    });
+
+    let g = LayerGraph { ops, fwd_comm: [ar1, ar2] };
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gpt::ModelConfig;
+
+    fn setup() -> TrainSetup {
+        TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 8, 8)
+    }
+
+    #[test]
+    fn graph_is_valid_topological_dag() {
+        let g = build_layer_graph(&setup());
+        g.validate().unwrap();
+        assert_eq!(g.ops.len(), 14);
+        assert_eq!(g.comm_ops().len(), 2);
+    }
+
+    #[test]
+    fn activation_bytes_match_korthikanti_formula() {
+        // Korthikanti et al. (the paper's [30]): per-layer fp16 activation
+        // memory without recomputation ≈ s·b·h·(34 + 5·a·s/h) bytes at
+        // TP=1, dropout masks included. Our graph additionally retains
+        // both residual sums explicitly, so allow ~25% headroom.
+        let mut s = setup();
+        s.tp = 1;
+        let g = build_layer_graph(&s);
+        let (seq, b, h, a) =
+            (s.seq as f64, s.micro_batch as f64, s.model.hidden as f64, s.model.heads as f64);
+        let formula = seq * b * h * (34.0 + 5.0 * a * seq / h);
+        let total = g.total_out_bytes() + seq * b * h * 2.0; // + layer input
+        let ratio = total / formula;
+        assert!(
+            (0.8..1.3).contains(&ratio),
+            "activation bytes {total:.3e} vs formula {formula:.3e} (ratio {ratio:.3})"
+        );
+    }
+
+    #[test]
+    fn tp_splits_shrink_sharded_ops_only() {
+        let mut s1 = setup();
+        s1.tp = 1;
+        let mut s4 = setup();
+        s4.tp = 4;
+        let g1 = build_layer_graph(&s1);
+        let g4 = build_layer_graph(&s4);
+        // QKV output is sharded 4x.
+        assert!((g1.ops[1].out_bytes / g4.ops[1].out_bytes - 4.0).abs() < 1e-9);
+        // LN output is replicated (not sharded).
+        assert_eq!(g1.ops[0].out_bytes, g4.ops[0].out_bytes);
+        // At TP=1 the all-reduce moves nothing.
+        assert_eq!(g1.ops[6].comm_bytes, 0.0);
+        assert!(g4.ops[6].comm_bytes > 0.0);
+    }
+
+    #[test]
+    fn users_inverts_deps() {
+        let g = build_layer_graph(&setup());
+        for (i, op) in g.ops.iter().enumerate() {
+            for &d in &op.deps {
+                assert!(g.users(d).contains(&i));
+            }
+        }
+        // qkv output feeds both scores and context (K/V reuse).
+        assert_eq!(g.users(1), vec![2, 4]);
+    }
+
+    #[test]
+    fn flops_dominated_by_matmuls() {
+        let g = build_layer_graph(&setup());
+        let matmul_flops: f64 = g
+            .ops
+            .iter()
+            .filter(|o| {
+                matches!(
+                    o.kind,
+                    OpKind::Compute(
+                        ComputeKind::QkvProj
+                            | ComputeKind::AttnScores
+                            | ComputeKind::AttnContext
+                            | ComputeKind::AttnOutProj
+                            | ComputeKind::MlpUp
+                            | ComputeKind::MlpDown
+                    )
+                )
+            })
+            .map(|o| o.flops)
+            .sum();
+        assert!(matmul_flops / g.total_flops() > 0.9);
+    }
+}

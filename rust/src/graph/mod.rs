@@ -1,0 +1,17 @@
+//! Operator graphs for transformer models.
+//!
+//! The paper's scheduling algorithms consume a per-layer operator list
+//! with dependencies, per-op compute cost `C_i`, and per-op output size
+//! `M_i` (§4 "Problem definition"). [`op`] defines the operator
+//! vocabulary, [`layer`] builds the Megatron-style tensor-parallel
+//! transformer layer (including the four all-reduce communication phases
+//! of Fig. 1(a)), and [`gpt`] holds the Table-2 model configurations and
+//! whole-model construction.
+
+pub mod gpt;
+pub mod layer;
+pub mod op;
+
+pub use gpt::{ModelConfig, TrainSetup};
+pub use layer::{build_layer_graph, LayerGraph};
+pub use op::{CommKind, ComputeKind, Op, OpId, OpKind};

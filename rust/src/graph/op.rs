@@ -1,0 +1,82 @@
+//! Operator vocabulary: compute and communication ops with cost metadata.
+
+/// Index of an op inside a [`super::LayerGraph`].
+pub type OpId = usize;
+
+/// Compute operator kinds occurring in a tensor-parallel transformer
+/// layer. The split mirrors Megatron-LM's layer structure, which is what
+/// the paper profiles (§2.2, §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ComputeKind {
+    /// LayerNorm — tiny output, high FLOPs-per-byte *of its input*; the
+    /// paper calls this out as the op full-recompute wastefully redoes.
+    LayerNorm,
+    /// Column-parallel QKV projection.
+    QkvProj,
+    /// Attention scores QK^T (per-head batched matmul).
+    AttnScores,
+    /// Softmax over scores.
+    Softmax,
+    /// Scores × V context matmul.
+    AttnContext,
+    /// Row-parallel attention output projection.
+    AttnOutProj,
+    /// Residual addition.
+    ResidualAdd,
+    /// Column-parallel MLP up-projection (h -> 4h).
+    MlpUp,
+    /// GeLU activation.
+    Gelu,
+    /// Row-parallel MLP down-projection (4h -> h).
+    MlpDown,
+}
+
+/// Communication operator kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommKind {
+    /// Tensor-parallel all-reduce (the `g` operator of Fig. 1(a)).
+    AllReduce,
+    /// Pipeline point-to-point activation transfer.
+    P2p,
+}
+
+/// Operator kind: compute or communication.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Compute(ComputeKind),
+    Comm(CommKind),
+}
+
+impl OpKind {
+    pub fn is_comm(&self) -> bool {
+        matches!(self, OpKind::Comm(_))
+    }
+}
+
+/// One operator of the model graph.
+///
+/// Costs are *per microbatch, per TP shard* — exactly what one GPU
+/// executes — matching the granularity at which the paper's ILP schedules
+/// recomputation.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub name: String,
+    pub kind: OpKind,
+    /// Forward FLOPs executed by one TP rank.
+    pub flops: f64,
+    /// Bytes read + written by one TP rank (for bandwidth-bound ops).
+    pub bytes_accessed: f64,
+    /// Size in bytes of this op's output activation on one TP rank
+    /// (`M_i` in the paper).
+    pub out_bytes: f64,
+    /// Bytes moved over the TP link (comm ops only).
+    pub comm_bytes: f64,
+    /// Within-layer dependencies (`DEPS(i)`).
+    pub deps: Vec<OpId>,
+}
+
+impl Op {
+    pub fn is_comm(&self) -> bool {
+        self.kind.is_comm()
+    }
+}

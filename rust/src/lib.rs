@@ -1,0 +1,42 @@
+//! # Lynx — overlapped activation recomputation for large-model training
+//!
+//! A Rust + JAX + Pallas reproduction of *"Optimizing Large Model Training
+//! through Overlapped Activation Recomputation"* (CS.DC 2024).
+//!
+//! Lynx hides the cost of activation recomputation by scheduling it inside
+//! the communication windows of tensor-parallel all-reduces and pipeline
+//! stalls, instead of executing it on demand in the backward critical
+//! path. This crate contains:
+//!
+//! * [`graph`] — operator graphs for transformer models (Table 2 configs);
+//! * [`costmodel`] — analytic device/link/memory cost models (A100-class);
+//! * [`solver`] — from-scratch simplex LP + branch-and-bound MILP;
+//! * [`plan`] — recomputation policies: Megatron-style baselines
+//!   (full/selective/uniform/block), Checkmate, **Lynx-OPT** (global MILP,
+//!   paper §4) and **Lynx-HEU** (per-layer ILP, paper §5), plus the
+//!   recomputation-aware partitioner (paper §6, Algorithm 1);
+//! * [`sim`] — a discrete-event cluster simulator that executes
+//!   (partition, plan) pairs under 1F1B pipeline parallelism and produces
+//!   the metrics behind every figure in the paper's evaluation;
+//! * [`profiler`] — analytic + PJRT wall-clock profiling (paper Fig. 4
+//!   "model profiler");
+//! * [`runtime`] — PJRT CPU runtime loading AOT-compiled HLO artifacts;
+//! * [`train`] — a real pipeline trainer driving per-layer fwd/bwd
+//!   executables with Rust-controlled activation stashes;
+//! * [`util`] — offline substrates (json, prng, argparse, bench,
+//!   propcheck, stats).
+
+pub mod cli;
+pub mod costmodel;
+pub mod experiments;
+pub mod graph;
+pub mod plan;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,11 @@
+//! `lynx` launcher — see `lynx --help`.
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match lynx::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! The training cost model (paper Fig. 4): turns a (partition, plan)
+//! pair into per-stage timing and memory numbers, used by the partitioner
+//! loop and the simulator.
+
+use super::types::{PlanOutcome, PolicyKind, StageCtx, StagePlan};
+use crate::costmodel::CostModel;
+use crate::graph::{LayerGraph, TrainSetup};
+
+/// Per-stage cost summary.
+#[derive(Debug, Clone)]
+pub struct StageCost {
+    /// Forward time per microbatch (layers + embedding/head extras).
+    pub fwd: f64,
+    /// Backward time per microbatch, excluding recomputation.
+    pub bwd: f64,
+    /// Recompute time exposed in the critical path per microbatch.
+    pub exposed_recompute: f64,
+    /// Recompute time hidden in comm windows per microbatch.
+    pub overlapped_recompute: f64,
+    /// Would-be recompute time of retained tensors per microbatch (the
+    /// "no recompute" path of Fig. 8).
+    pub retained_time: f64,
+    /// TP communication time per microbatch (fwd + bwd).
+    pub comm_time: f64,
+    /// 1F1B steady-state slot time: fwd + bwd + exposed recompute.
+    pub slot_time: f64,
+    /// Peak memory bytes (static + activations).
+    pub peak_mem: f64,
+    /// Static model-state bytes.
+    pub static_mem: f64,
+    pub oom: bool,
+}
+
+/// Build the [`StageCtx`] for `stage` under an explicit layer partition.
+pub fn build_stage_ctx(
+    setup: &TrainSetup,
+    cm: &CostModel,
+    g: &LayerGraph,
+    partition: &[usize],
+    stage: usize,
+) -> StageCtx {
+    let n_layers = partition[stage];
+    let num_stages = partition.len();
+    let n_batch = cm.memory.inflight_microbatches(stage, num_stages, setup.num_micro);
+    let static_mem = stage_static_mem(setup, cm, partition, stage);
+    let times = cm.layer_times(g);
+    let comm = g.comm_ops();
+    let (w1, w2) = (times[comm[0]], times[comm[1]]);
+    StageCtx {
+        n_layers,
+        n_batch,
+        stage,
+        num_stages,
+        mem_budget: (cm.topo.gpu.usable_memory() - static_mem).max(0.0),
+        fwd_window: [w1, w2],
+        // Backward all-reduces move the same bytes as forward.
+        bwd_window: [w1, w2],
+        boundary_bytes: cm.memory.boundary_bytes(setup),
+    }
+}
+
+/// Static model-state bytes on `stage` (embedding on the first stage, the
+/// untied LM head on the last).
+pub fn stage_static_mem(
+    setup: &TrainSetup,
+    cm: &CostModel,
+    partition: &[usize],
+    stage: usize,
+) -> f64 {
+    let with_embedding = stage == 0 || stage + 1 == partition.len();
+    cm.memory.static_bytes(setup, partition[stage], with_embedding)
+}
+
+/// Evaluate the cost of a planned stage.
+pub fn stage_cost(
+    setup: &TrainSetup,
+    cm: &CostModel,
+    g: &LayerGraph,
+    ctx: &StageCtx,
+    plan: &StagePlan,
+) -> StageCost {
+    let times = cm.layer_times(g);
+    let fwd_layer: f64 = times.iter().sum();
+    let bwd_layer: f64 = g.ops.iter().map(|o| cm.op_bwd_time(o)).sum();
+    let comm_layer: f64 = g
+        .ops
+        .iter()
+        .zip(&times)
+        .filter(|(o, _)| o.is_comm())
+        .map(|(o, t)| t + cm.op_bwd_time(o))
+        .sum();
+
+    let nl = ctx.n_layers as f64;
+    let mut fwd = fwd_layer * nl;
+    let mut bwd = bwd_layer * nl;
+
+    // Embedding on the first stage, LM head on the last.
+    let (s, b, h, v) = (
+        setup.seq as f64,
+        setup.micro_batch as f64,
+        setup.model.hidden as f64,
+        setup.model.vocab as f64,
+    );
+    if ctx.stage == 0 {
+        // Embedding lookup: bandwidth-bound gather.
+        fwd += cm.compute.time(0.0, 2.0 * s * b * h * 2.0);
+        bwd += cm.compute.time(0.0, 2.0 * s * b * h * 2.0);
+    }
+    if ctx.is_last_stage() {
+        // Logits matmul + softmax loss, TP-sharded over vocab.
+        let t = setup.tp as f64;
+        let logits_flops = 2.0 * s * b * h * v / t;
+        let logits_bytes = 2.0 * (s * b * h + h * v / t + s * b * v / t);
+        fwd += cm.compute.time(logits_flops, logits_bytes);
+        bwd += 2.0 * cm.compute.time(logits_flops, logits_bytes);
+    }
+
+    let exposed: f64 = plan.layers.iter().map(|l| l.exposed_time(&times)).sum();
+    let overlapped: f64 = plan.layers.iter().map(|l| l.overlapped_time(&times)).sum();
+    let retained: f64 = plan.layers.iter().map(|l| l.retained_time(&times)).sum();
+
+    let static_mem = {
+        // Reconstruct: budget = usable - static  ⇒  static = usable - budget.
+        (cm.topo.gpu.usable_memory() - ctx.mem_budget).max(0.0)
+    };
+    let activation = plan.activation_bytes(g, ctx);
+    let peak_mem = static_mem + activation;
+    let oom = peak_mem > cm.topo.gpu.usable_memory();
+
+    StageCost {
+        fwd,
+        bwd,
+        exposed_recompute: exposed,
+        overlapped_recompute: overlapped,
+        retained_time: retained,
+        comm_time: comm_layer * nl,
+        slot_time: fwd + bwd + exposed,
+        peak_mem,
+        static_mem,
+        oom,
+    }
+}
+
+/// Dispatch a policy to its planner for one stage.
+pub fn plan_stage(
+    kind: PolicyKind,
+    g: &LayerGraph,
+    ctx: &StageCtx,
+    times: &[f64],
+) -> PlanOutcome {
+    use super::{heu, opt, rules};
+    match kind {
+        PolicyKind::Full => rules::full_plan(g, ctx),
+        PolicyKind::Selective => rules::selective_plan(g, ctx),
+        PolicyKind::Uniform => rules::uniform_best_group(g, ctx).1,
+        PolicyKind::Block => rules::block_best_k(g, ctx).1,
+        PolicyKind::Checkmate => {
+            opt::checkmate_plan(g, ctx, times, &opt::OptOptions::default())
+        }
+        PolicyKind::LynxHeu => heu::heu_plan(g, ctx, times, &heu::HeuOptions::default()),
+        PolicyKind::LynxOpt => opt::opt_plan(g, ctx, times, &opt::OptOptions::default()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Topology;
+    use crate::graph::{build_layer_graph, ModelConfig};
+    use crate::plan::types::LayerPlan;
+
+    fn fixture() -> (TrainSetup, CostModel, LayerGraph) {
+        let setup = TrainSetup::new(ModelConfig::by_name("7B").unwrap(), 4, 4, 2, 8);
+        let cm = CostModel::new(Topology::nvlink(4, 4));
+        let g = build_layer_graph(&setup);
+        (setup, cm, g)
+    }
+
+    #[test]
+    fn stage_ctx_reflects_partition_and_inflight() {
+        let (setup, cm, g) = fixture();
+        let part = vec![8, 8, 8, 8];
+        let c0 = build_stage_ctx(&setup, &cm, &g, &part, 0);
+        let c3 = build_stage_ctx(&setup, &cm, &g, &part, 3);
+        assert_eq!(c0.n_batch, 4);
+        assert_eq!(c3.n_batch, 1);
+        // First stage carries embedding → smaller activation budget.
+        assert!(c0.mem_budget < c3.mem_budget + 1.0);
+    }
+
+    #[test]
+    fn slot_time_includes_exposed_recompute() {
+        let (setup, cm, g) = fixture();
+        let part = vec![8, 8, 8, 8];
+        let ctx = build_stage_ctx(&setup, &cm, &g, &part, 1);
+        let full = StagePlan::uniform(LayerPlan::full_recompute(g.ops.len()), 8);
+        let none = StagePlan::uniform(LayerPlan::store_all(g.ops.len()), 8);
+        let c_full = stage_cost(&setup, &cm, &g, &ctx, &full);
+        let c_none = stage_cost(&setup, &cm, &g, &ctx, &none);
+        assert!(c_full.slot_time > c_none.slot_time);
+        assert_eq!(c_none.exposed_recompute, 0.0);
+        assert!(
+            (c_full.slot_time - c_full.fwd - c_full.bwd - c_full.exposed_recompute).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn last_stage_pays_lm_head() {
+        let (setup, cm, g) = fixture();
+        let part = vec![8, 8, 8, 8];
+        let plan = StagePlan::uniform(LayerPlan::full_recompute(g.ops.len()), 8);
+        let c1 = stage_cost(&setup, &cm, &g, &build_stage_ctx(&setup, &cm, &g, &part, 1), &plan);
+        let c3 = stage_cost(&setup, &cm, &g, &build_stage_ctx(&setup, &cm, &g, &part, 3), &plan);
+        assert!(c3.fwd > c1.fwd, "head cost missing: {} vs {}", c3.fwd, c1.fwd);
+    }
+
+    #[test]
+    fn store_all_ooms_on_big_model_early_stage() {
+        // 7B at the paper's batch 16 (NVLink-4x4, §7.2): storing all
+        // activations at stage 0 must exceed a 40GB A100 — this is the
+        // regime where the paper reports selective recomputation OOMs.
+        let (mut setup, cm, g0) = fixture();
+        setup.micro_batch = 16;
+        let g = crate::graph::build_layer_graph(&setup);
+        drop(g0);
+        let part = vec![8, 8, 8, 8];
+        let ctx = build_stage_ctx(&setup, &cm, &g, &part, 0);
+        let plan = StagePlan::uniform(LayerPlan::store_all(g.ops.len()), 8);
+        let c = stage_cost(&setup, &cm, &g, &ctx, &plan);
+        assert!(c.oom, "expected OOM, peak {:.3e}", c.peak_mem);
+        // Full recomputation must still fit (the paper's fallback).
+        let full = StagePlan::uniform(LayerPlan::full_recompute(g.ops.len()), 8);
+        let cf = stage_cost(&setup, &cm, &g, &ctx, &full);
+        assert!(!cf.oom, "full recompute should fit, peak {:.3e}", cf.peak_mem);
+    }
+
+    #[test]
+    fn policy_dispatch_produces_valid_plans() {
+        let (setup, cm, g) = fixture();
+        let part = vec![8, 8, 8, 8];
+        let ctx = build_stage_ctx(&setup, &cm, &g, &part, 1);
+        let times = cm.layer_times(&g);
+        for kind in [PolicyKind::Full, PolicyKind::Selective, PolicyKind::Block] {
+            let out = plan_stage(kind, &g, &ctx, &times);
+            for lp in &out.plan.layers {
+                lp.validate(&g).unwrap();
+            }
+        }
+    }
+}

@@ -1,0 +1,580 @@
+//! Lynx-HEU: per-layer ILP recomputation scheduling (paper §5).
+//!
+//! Exploits the *identical structures* observation: a locally optimal
+//! plan for one transformer layer is reused for every identical layer and
+//! every repeated 1F1B pattern, shrinking the search space from the whole
+//! training program to a single layer.
+//!
+//! The ILP follows the paper's formulation exactly:
+//!
+//! * `S_i`  — retain op i's output (Eq. 19 fixes the layer output);
+//! * `R_{t,i}` — op i is (re)computed in phase t ∈ {Fwd1, Fwd2, Bwd1,
+//!   Bwd2, Critical} (Eq. 13: exactly one phase each);
+//! * dependency availability (Eq. 14), window capacity (Eq. 15), comm ops
+//!   banned from windows (Eq. 16), and the Eq. 17–20 memory constraint
+//!   with `M_fwd`, `M_fwd_comm` and the Opt-1 `M_delta` reservation.
+//!
+//! The nonlinear products `(1-S_i)·R_{t,i}` are linearised with
+//! continuous `z_{t,i} ≥ R_{t,i} - S_i` — exact on binary points.
+//!
+//! Opt 2 (paper §5): on the last pipeline stage the forward windows are
+//! disabled and `M_fwd_comm` is dropped. Opt 1 is the `M_delta` term.
+//! Opt 3 (cooldown stalls) is applied by the simulator at execution time.
+
+use super::types::{LayerPlan, Phase, PlanOutcome, StageCtx, StagePlan};
+use crate::graph::LayerGraph;
+use crate::solver::{solve_milp, Expr, MilpOptions, MilpResult, MilpStatus, Model, Var};
+
+/// Configuration of the per-layer ILP.
+#[derive(Debug, Clone)]
+pub struct HeuOptions {
+    pub milp: MilpOptions,
+    /// Allow overlap phases (false = Checkmate-style critical-path-only).
+    pub overlap: bool,
+    /// Relative weight of the tie-break term that prefers retaining
+    /// tensors over recomputing them anywhere (uses idle memory, design
+    /// goal 2 of the paper).
+    pub retain_bias: f64,
+}
+
+impl Default for HeuOptions {
+    fn default() -> Self {
+        HeuOptions {
+            // Sub-second budget + 1% gap: the paper's HEU is itself a
+            // local optimum with ~0.16 s search (Table 3); the diving DFS
+            // finds its best incumbent in the first few dozen nodes.
+            milp: MilpOptions { time_budget: 0.6, rel_gap: 0.01, ..Default::default() },
+            overlap: true,
+            retain_bias: 1e-3,
+        }
+    }
+}
+
+/// Per-layer ILP variables.
+struct Vars {
+    s: Vec<Var>,
+    /// r[t][i] — None when banned (comm op in window, or Opt-2 fwd ban).
+    r: Vec<Vec<Option<Var>>>,
+    /// z[t][i] — linearised (1-S)·R products; None when r is None.
+    z: Vec<Vec<Option<Var>>>,
+}
+
+/// Solve the per-layer ILP for one stage context; the resulting layer plan
+/// is replicated across the stage's layers (identical structures).
+pub fn heu_plan(
+    g: &LayerGraph,
+    ctx: &StageCtx,
+    times: &[f64],
+    opts: &HeuOptions,
+) -> PlanOutcome {
+    let (model, vars) = build_ilp(g, ctx, times, opts);
+    let mut milp = opts.milp.clone();
+    milp.warm_starts = warm_starts(g, ctx, times, opts, &model, &vars);
+    let result = solve_milp(&model, &milp);
+    finish(g, ctx, result, &vars)
+}
+
+/// Convert a [`LayerPlan`] into a full ILP assignment (S, R, z) for use
+/// as a branch-and-bound warm start. Retained ops get their mandatory
+/// Eq.-13 slot in the (free) critical phase.
+fn plan_to_assignment(plan: &LayerPlan, model: &Model, vars: &Vars) -> Vec<f64> {
+    let n = plan.retain.len();
+    let mut x = vec![0.0; model.num_vars()];
+    for i in 0..n {
+        let s = plan.retain[i];
+        x[vars.s[i].0] = if s { 1.0 } else { 0.0 };
+        let phase = if s { Phase::Critical } else { plan.phase[i].unwrap_or(Phase::Critical) };
+        let t = phase as usize;
+        if let Some(rv) = vars.r[t][i] {
+            x[rv.0] = 1.0;
+            if let Some(zv) = vars.z[t][i] {
+                x[zv.0] = if s { 0.0 } else { 1.0 };
+            }
+        }
+    }
+    x
+}
+
+/// Candidate warm-start plans: rule baselines adjusted to the ILP's
+/// invariants plus a greedy window-filling heuristic.
+fn warm_starts(
+    g: &LayerGraph,
+    ctx: &StageCtx,
+    times: &[f64],
+    opts: &HeuOptions,
+    model: &Model,
+    vars: &Vars,
+) -> Vec<Vec<f64>> {
+    let n = g.ops.len();
+    let out_op = g.output_op();
+    let mut plans: Vec<LayerPlan> = Vec::new();
+
+    // Store-all (optimal when memory is ample).
+    plans.push(LayerPlan::store_all(n));
+
+    // Full recompute with the mandatory output checkpoint (Eq. 19).
+    let mut full = LayerPlan::full_recompute(n);
+    full.retain[out_op] = true;
+    full.phase[out_op] = None;
+    plans.push(full.clone());
+
+    // Greedy family: retain ops by descending recompute-seconds-per-byte
+    // until a fraction of the M_fwd budget is spent, then pack the
+    // evicted prefix into the comm windows in topological order. Sweeping
+    // the retention fraction gives branch-and-bound several diverse
+    // incumbents to start from.
+    let nl = ctx.n_layers as f64;
+    let nb = ctx.n_batch as f64;
+    let budget = ctx.mem_budget - ctx.boundary_total();
+    let mut order: Vec<usize> = (0..n).filter(|&i| g.ops[i].out_bytes > 0.0).collect();
+    order.sort_by(|&a, &b| {
+        let ra = times[a] / g.ops[a].out_bytes;
+        let rb = times[b] / g.ops[b].out_bytes;
+        rb.partial_cmp(&ra).unwrap()
+    });
+    for frac in [1.0, 0.85, 0.6, 0.3] {
+        let mut greedy = full.clone();
+        let mut used = nl * nb * g.ops[out_op].out_bytes;
+        for &i in &order {
+            if i == out_op {
+                continue;
+            }
+            let cost = nl * nb * g.ops[i].out_bytes;
+            if used + cost <= budget * frac {
+                used += cost;
+                greedy.retain[i] = true;
+                greedy.phase[i] = None;
+            }
+        }
+        if opts.overlap {
+            // Window packing in topological order. An op may enter window
+            // t only if every dep is retained or scheduled in a phase <= t.
+            let window_caps = [
+                if ctx.is_last_stage() { 0.0 } else { ctx.fwd_window[0] },
+                if ctx.is_last_stage() { 0.0 } else { ctx.fwd_window[1] },
+                ctx.bwd_window[0],
+                ctx.bwd_window[1],
+            ];
+            let mut remaining = window_caps;
+            for i in 0..n {
+                if greedy.retain[i] || g.ops[i].is_comm() {
+                    continue;
+                }
+                let dep_floor = g.ops[i]
+                    .deps
+                    .iter()
+                    .filter(|&&d| !greedy.retain[d])
+                    .map(|&d| greedy.phase[d].map(|p| p as usize).unwrap_or(4))
+                    .max()
+                    .unwrap_or(0);
+                for t in dep_floor..4 {
+                    if remaining[t] >= times[i] {
+                        remaining[t] -= times[i];
+                        greedy.phase[i] = Some(Phase::from_index(t));
+                        break;
+                    }
+                }
+            }
+        }
+        if greedy.validate(g).is_ok() {
+            plans.push(greedy);
+        }
+    }
+
+    plans
+        .iter()
+        .map(|p| plan_to_assignment(p, model, vars))
+        .collect()
+}
+
+/// Like [`heu_plan`] but with an explicit per-layer memory budget,
+/// used by the global (OPT) planner to generate menu candidates.
+pub fn heu_plan_with_budget(
+    g: &LayerGraph,
+    ctx: &StageCtx,
+    times: &[f64],
+    opts: &HeuOptions,
+    per_layer_budget: f64,
+) -> PlanOutcome {
+    let mut ctx2 = ctx.clone();
+    // Convert per-layer allotment into the stage-level budget the ILP uses.
+    ctx2.mem_budget =
+        per_layer_budget * ctx.n_layers as f64 + ctx.boundary_total();
+    let (model, vars) = build_ilp(g, &ctx2, times, opts);
+    let mut milp = opts.milp.clone();
+    milp.warm_starts = warm_starts(g, &ctx2, times, opts, &model, &vars);
+    let result = solve_milp(&model, &milp);
+    finish(g, &ctx2, result, &vars)
+}
+
+fn finish(g: &LayerGraph, ctx: &StageCtx, result: MilpResult, vars: &Vars) -> PlanOutcome {
+    match result.status {
+        MilpStatus::Optimal | MilpStatus::Feasible => {
+            let plan = extract_plan(g, &result.x, vars);
+            debug_assert!(plan.validate(g).is_ok(), "{:?}", plan.validate(g));
+            let stage = StagePlan::uniform(plan, ctx.n_layers);
+            let oom = !stage.fits_memory(g, ctx);
+            PlanOutcome { plan: stage, search_secs: result.search_secs, oom }
+        }
+        MilpStatus::Infeasible => {
+            // Memory cannot fit even the cheapest schedule: report OOM with
+            // the full-recompute plan as the least-memory fallback.
+            let stage =
+                StagePlan::uniform(LayerPlan::full_recompute(g.ops.len()), ctx.n_layers);
+            let oom = !stage.fits_memory(g, ctx);
+            PlanOutcome { plan: stage, search_secs: result.search_secs, oom }
+        }
+    }
+}
+
+fn build_ilp(
+    g: &LayerGraph,
+    ctx: &StageCtx,
+    times: &[f64],
+    opts: &HeuOptions,
+) -> (Model, Vars) {
+    let n = g.ops.len();
+    let mut m = Model::new();
+
+    let window_time = |t: usize| -> f64 {
+        match Phase::from_index(t) {
+            Phase::FwdComm1 => ctx.fwd_window[0],
+            Phase::FwdComm2 => ctx.fwd_window[1],
+            Phase::BwdComm1 => ctx.bwd_window[0],
+            Phase::BwdComm2 => ctx.bwd_window[1],
+            Phase::Critical => f64::INFINITY,
+        }
+    };
+
+    // Phase availability: Eq. 16 bans comm ops from windows; Opt 2 bans
+    // the forward windows entirely on the last stage.
+    let phase_allowed = |t: usize, i: usize| -> bool {
+        if t == Phase::Critical as usize {
+            return true;
+        }
+        if !opts.overlap || g.ops[i].is_comm() {
+            return false;
+        }
+        if ctx.is_last_stage() && Phase::from_index(t).is_fwd_comm() {
+            return false;
+        }
+        true
+    };
+
+    // ---- variables ----
+    let s: Vec<Var> = (0..n).map(|i| m.binary(format!("S_{i}"))).collect();
+    let mut r: Vec<Vec<Option<Var>>> = Vec::with_capacity(5);
+    let mut z: Vec<Vec<Option<Var>>> = Vec::with_capacity(5);
+    for t in 0..5 {
+        let mut rt = Vec::with_capacity(n);
+        let mut zt = Vec::with_capacity(n);
+        for i in 0..n {
+            if phase_allowed(t, i) {
+                rt.push(Some(m.binary(format!("R_{t}_{i}"))));
+                zt.push(Some(m.cont(format!("z_{t}_{i}"), 0.0, 1.0)));
+            } else {
+                rt.push(None);
+                zt.push(None);
+            }
+        }
+        r.push(rt);
+        z.push(zt);
+    }
+
+    // Eq. 19: the layer output is always checkpointed.
+    m.fix(s[g.output_op()], 1.0);
+
+    // Eq. 13: each op computed in exactly one phase.
+    for i in 0..n {
+        let mut e = Expr::new();
+        for t in 0..5 {
+            if let Some(v) = r[t][i] {
+                e.add_term(v, 1.0);
+            }
+        }
+        m.add_eq(e, 1.0);
+    }
+
+    // z linearisation: z_{t,i} >= R_{t,i} - S_i.
+    for t in 0..5 {
+        for i in 0..n {
+            if let (Some(rv), Some(zv)) = (r[t][i], z[t][i]) {
+                m.add_ge(
+                    Expr::new().term(zv, 1.0).term(rv, -1.0).term(s[i], 1.0),
+                    0.0,
+                );
+            }
+        }
+    }
+    // Tightening cut: an evicted op's recompute mass sums to one —
+    // Σ_t z_{t,i} >= 1 - S_i. Valid on binary points (Eq. 13) and closes
+    // the fractional-S loophole that otherwise drives the LP bound to 0.
+    for i in 0..n {
+        let mut e = Expr::new().term(s[i], 1.0);
+        for zt in z.iter() {
+            if let Some(zv) = zt[i] {
+                e.add_term(zv, 1.0);
+            }
+        }
+        m.add_ge(e, 1.0);
+    }
+
+    // Eq. 14: op i in phase t needs each dep computed at phase <= t or
+    // stored.
+    for i in 0..n {
+        for &d in &g.ops[i].deps {
+            for t in 0..5 {
+                let Some(rv) = r[t][i] else { continue };
+                let mut e = Expr::new().term(rv, 1.0).term(s[d], -1.0);
+                for (_t2, rrow) in r.iter().enumerate().take(t + 1) {
+                    if let Some(dv) = rrow[d] {
+                        e.add_term(dv, -1.0);
+                    }
+                }
+                let _ = t; // clarity: phases 0..=t
+                m.add_le(e, 0.0);
+            }
+        }
+    }
+
+    // Eq. 15: overlapped recompute fits in each window.
+    for t in 0..4 {
+        let mut e = Expr::new();
+        let mut any = false;
+        for i in 0..n {
+            if let Some(zv) = z[t][i] {
+                e.add_term(zv, times[i]);
+                any = true;
+            }
+        }
+        if any {
+            m.add_le(e, window_time(t));
+        }
+    }
+
+    // Eq. 17/18/20 memory: N_layer·N_batch·Σ S_i·M_i (M_fwd)
+    //   + N_layer·Σ (z_fwd1 + z_fwd2)·M_i (M_fwd_comm, skipped on last
+    //     stage per Opt 2)
+    //   + Σ (z_bwd1 + z_bwd2)·M_i (M_delta, Opt 1 reservation: one layer)
+    //   + boundary checkpoints <= budget.
+    let nl = ctx.n_layers as f64;
+    let nb = ctx.n_batch as f64;
+    let mut mem = Expr::new();
+    for i in 0..n {
+        let mi = g.ops[i].out_bytes;
+        if mi == 0.0 {
+            continue;
+        }
+        mem.add_term(s[i], nl * nb * mi);
+        if !ctx.is_last_stage() {
+            for t in [Phase::FwdComm1 as usize, Phase::FwdComm2 as usize] {
+                if let Some(zv) = z[t][i] {
+                    mem.add_term(zv, nl * mi);
+                }
+            }
+        }
+        for t in [Phase::BwdComm1 as usize, Phase::BwdComm2 as usize] {
+            if let Some(zv) = z[t][i] {
+                mem.add_term(zv, mi);
+            }
+        }
+    }
+    m.add_le(mem, ctx.mem_budget - ctx.boundary_total());
+
+    // Objective (Eq. 12): minimise critical-path recomputation, with a
+    // small bias toward retention to consume idle memory.
+    let mut obj = Expr::new();
+    for i in 0..n {
+        if let Some(zv) = z[Phase::Critical as usize][i] {
+            obj.add_term(zv, times[i]);
+        }
+        // Tie-break: any recompute anywhere costs a hair more than
+        // retaining (prefers "no recomputation" when memory is free).
+        for zt in z.iter() {
+            if let Some(zv) = zt[i] {
+                obj.add_term(zv, opts.retain_bias * times[i]);
+            }
+        }
+    }
+    m.minimize(obj);
+
+    (m, Vars { s, r, z })
+}
+
+fn extract_plan(g: &LayerGraph, x: &[f64], vars: &Vars) -> LayerPlan {
+    let n = g.ops.len();
+    let mut plan = LayerPlan { retain: vec![false; n], phase: vec![None; n] };
+    for i in 0..n {
+        plan.retain[i] = x[vars.s[i].0] > 0.5;
+        if plan.retain[i] {
+            continue;
+        }
+        for t in 0..5 {
+            if let Some(rv) = vars.r[t][i] {
+                if x[rv.0] > 0.5 {
+                    plan.phase[i] = Some(Phase::from_index(t));
+                    break;
+                }
+            }
+        }
+        // Eq. 13 guarantees some phase is set; default defensively.
+        if plan.phase[i].is_none() {
+            plan.phase[i] = Some(Phase::Critical);
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{CostModel, Topology};
+    use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
+
+    fn fixture(tp: usize, budget_frac: f64) -> (LayerGraph, StageCtx, Vec<f64>) {
+        let s = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), tp, 4, 4, 8);
+        let g = build_layer_graph(&s);
+        let cm = CostModel::new(Topology::nvlink(tp, 4));
+        let times = cm.layer_times(&g);
+        let comm_ops = g.comm_ops();
+        let w1 = times[comm_ops[0]];
+        let w2 = times[comm_ops[1]];
+        let store_all_stage = {
+            let p = StagePlan::uniform(LayerPlan::store_all(g.ops.len()), 8);
+            let ctx0 = StageCtx {
+                n_layers: 8,
+                n_batch: 4,
+                stage: 0,
+                num_stages: 4,
+                mem_budget: f64::INFINITY,
+                fwd_window: [w1, w2],
+                bwd_window: [w1, w2],
+                boundary_bytes: 2.0 * (1024 * 4 * 1792) as f64,
+            };
+            p.activation_bytes(&g, &ctx0)
+        };
+        let ctx = StageCtx {
+            n_layers: 8,
+            n_batch: 4,
+            stage: 0,
+            num_stages: 4,
+            mem_budget: store_all_stage * budget_frac,
+            fwd_window: [w1, w2],
+            bwd_window: [w1, w2],
+            boundary_bytes: 2.0 * (1024 * 4 * 1792) as f64,
+        };
+        (g, ctx, times)
+    }
+
+    #[test]
+    fn ample_memory_retains_everything() {
+        let (g, ctx, times) = fixture(2, 2.0);
+        let out = heu_plan(&g, &ctx, &times, &HeuOptions::default());
+        assert!(!out.oom);
+        let lp = &out.plan.layers[0];
+        lp.validate(&g).unwrap();
+        assert_eq!(lp.exposed_time(&times), 0.0, "no recompute needed: {lp:?}");
+        // Everything except (possibly) zero-byte comm ops is retained.
+        for (i, op) in g.ops.iter().enumerate() {
+            if op.out_bytes > 0.0 {
+                assert!(lp.retain[i], "op {} should be retained", op.name);
+            }
+        }
+    }
+
+    #[test]
+    fn tight_memory_overlaps_recompute_into_windows() {
+        let (g, ctx, times) = fixture(2, 0.45);
+        let out = heu_plan(&g, &ctx, &times, &HeuOptions::default());
+        assert!(!out.oom, "should find a feasible plan");
+        let lp = &out.plan.layers[0];
+        lp.validate(&g).unwrap();
+        let overlapped = lp.overlapped_time(&times);
+        assert!(overlapped > 0.0, "expected window overlap, plan {lp:?}");
+        // Window capacity respected (Eq. 15).
+        for (t, w) in [
+            (Phase::FwdComm1, ctx.fwd_window[0]),
+            (Phase::FwdComm2, ctx.fwd_window[1]),
+            (Phase::BwdComm1, ctx.bwd_window[0]),
+            (Phase::BwdComm2, ctx.bwd_window[1]),
+        ] {
+            assert!(lp.phase_time(&times, t) <= w + 1e-12);
+        }
+    }
+
+    #[test]
+    fn heu_beats_full_recompute_on_exposed_time() {
+        let (g, ctx, times) = fixture(2, 0.45);
+        let heu = heu_plan(&g, &ctx, &times, &HeuOptions::default());
+        let full = LayerPlan::full_recompute(g.ops.len());
+        let heu_exposed = heu.plan.layers[0].exposed_time(&times);
+        let full_exposed = full.exposed_time(&times);
+        assert!(
+            heu_exposed < full_exposed,
+            "heu {heu_exposed} vs full {full_exposed}"
+        );
+    }
+
+    #[test]
+    fn checkmate_mode_never_overlaps() {
+        let (g, ctx, times) = fixture(2, 0.45);
+        let opts = HeuOptions { overlap: false, ..Default::default() };
+        let out = heu_plan(&g, &ctx, &times, &opts);
+        let lp = &out.plan.layers[0];
+        lp.validate(&g).unwrap();
+        assert_eq!(lp.overlapped_time(&times), 0.0);
+    }
+
+    #[test]
+    fn checkmate_exposed_at_least_heu() {
+        // Overlap windows can only reduce exposed recompute. Both solvers
+        // get a generous budget so the comparison is between (near-)optima
+        // rather than time-boxed incumbents (debug builds explore ~20x
+        // fewer nodes per second), plus a 5% incumbent-quality tolerance.
+        let (g, ctx, times) = fixture(2, 0.45);
+        let milp = MilpOptions { time_budget: 15.0, rel_gap: 0.01, ..Default::default() };
+        let heu = heu_plan(
+            &g,
+            &ctx,
+            &times,
+            &HeuOptions { milp: milp.clone(), ..Default::default() },
+        );
+        let ckpt = heu_plan(
+            &g,
+            &ctx,
+            &times,
+            &HeuOptions { milp, overlap: false, ..Default::default() },
+        );
+        let he = heu.plan.layers[0].exposed_time(&times);
+        let ce = ckpt.plan.layers[0].exposed_time(&times);
+        assert!(he <= ce * 1.05 + 1e-12, "heu {he} vs checkmate {ce}");
+    }
+
+    #[test]
+    fn last_stage_uses_no_fwd_windows_opt2() {
+        let (g, mut ctx, times) = fixture(2, 0.45);
+        ctx.stage = 3;
+        let out = heu_plan(&g, &ctx, &times, &HeuOptions::default());
+        let lp = &out.plan.layers[0];
+        assert_eq!(lp.phase_time(&times, Phase::FwdComm1), 0.0);
+        assert_eq!(lp.phase_time(&times, Phase::FwdComm2), 0.0);
+    }
+
+    #[test]
+    fn infeasible_budget_reports_oom() {
+        let (g, mut ctx, times) = fixture(2, 0.45);
+        ctx.mem_budget = 0.0;
+        let out = heu_plan(&g, &ctx, &times, &HeuOptions::default());
+        assert!(out.oom);
+    }
+
+    #[test]
+    fn search_time_is_subsecond_scale() {
+        // Paper Table 3: HEU ≈ 0.14–0.17 s. Allow an order of magnitude of
+        // slack for debug builds and CI noise.
+        let (g, ctx, times) = fixture(2, 0.45);
+        let out = heu_plan(&g, &ctx, &times, &HeuOptions::default());
+        assert!(out.search_secs < 15.0, "search took {}", out.search_secs);
+    }
+}
+

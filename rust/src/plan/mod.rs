@@ -1,0 +1,23 @@
+//! Recomputation policies and model partitioning — the paper's core
+//! contribution (§4–§6).
+//!
+//! * [`types`] — plan representation (retention + phase assignment).
+//! * [`rules`] — Megatron-LM baselines: full / selective / uniform / block.
+//! * [`heu`] — **Lynx-HEU**: per-layer ILP with overlap windows (§5).
+//! * [`opt`] — **Lynx-OPT**: global heterogeneous-layer search (§4), and
+//!   the Checkmate baseline (global, no overlap).
+//! * [`partition`] — recomputation-aware partitioning, Algorithm 1 (§6).
+//! * [`costeval`] — the training cost model of Fig. 4.
+
+pub mod costeval;
+pub mod heu;
+pub mod opt;
+pub mod partition;
+pub mod rules;
+pub mod types;
+
+pub use costeval::{build_stage_ctx, plan_stage, stage_cost, StageCost};
+pub use heu::{heu_plan, HeuOptions};
+pub use opt::{checkmate_plan, opt_plan, OptOptions};
+pub use partition::{dp_partition, dp_partition_result, lynx_partition, PartitionResult};
+pub use types::{LayerPlan, Phase, PlanOutcome, PolicyKind, StageCtx, StagePlan};

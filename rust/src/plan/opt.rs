@@ -1,0 +1,329 @@
+//! Lynx-OPT: globally optimal recomputation scheduling (paper §4).
+//!
+//! The paper formulates OPT as a MILP over *every operator of the whole
+//! training program* and reports hour-scale Gurobi search times (Table 3).
+//! An op×phase MILP at that granularity is intractable for our
+//! from-scratch solver, so we implement the global search at *layer-plan*
+//! granularity, which preserves what OPT adds over HEU — heterogeneous
+//! treatment of layers under one shared memory budget — while staying
+//! exactly solvable:
+//!
+//! 1. **Menu generation** — the per-layer ILP of [`super::heu`] is solved
+//!    under a sweep of per-layer memory allotments (`levels` budgets),
+//!    producing a menu of Pareto candidate layer plans (exposed time vs
+//!    memory).
+//! 2. **Global assignment** — a multiple-choice MILP picks one candidate
+//!    per layer slot minimising total exposed recompute time subject to
+//!    the stage memory budget (paper Eq. 1 restricted to the menu).
+//!
+//! Search cost scales as `levels × ILP + MILP(layers × levels)`, so the
+//! OPT-vs-HEU search-time gap of Table 3 is reproduced structurally; the
+//! returned plan is a true global optimum over the generated menu.
+
+use super::heu::{heu_plan_with_budget, HeuOptions};
+use super::types::{LayerPlan, PlanOutcome, StageCtx, StagePlan};
+use crate::graph::LayerGraph;
+use crate::solver::{solve_milp, Expr, MilpOptions, MilpStatus, Model};
+use std::time::Instant;
+
+/// Configuration of the global (OPT) planner.
+#[derive(Debug, Clone)]
+pub struct OptOptions {
+    /// Number of memory-allotment levels in the menu sweep. Higher =
+    /// finer search = longer search time (the Table 3 dial).
+    pub levels: usize,
+    /// Per-candidate ILP options.
+    pub heu: HeuOptions,
+    /// Global assignment MILP options.
+    pub milp: MilpOptions,
+    /// Allow overlap phases. `false` yields the Checkmate baseline:
+    /// globally optimal *on-demand* recomputation (no overlap).
+    pub overlap: bool,
+}
+
+impl Default for OptOptions {
+    fn default() -> Self {
+        OptOptions {
+            levels: 8,
+            heu: HeuOptions {
+                milp: MilpOptions { time_budget: 0.25, rel_gap: 0.02, ..Default::default() },
+                ..Default::default()
+            },
+            milp: MilpOptions { time_budget: 5.0, rel_gap: 0.01, ..Default::default() },
+            overlap: true,
+        }
+    }
+}
+
+/// A menu candidate: a layer plan with its per-layer cost/memory.
+#[derive(Debug, Clone)]
+struct Candidate {
+    plan: LayerPlan,
+    /// Exposed (critical-path) recompute seconds per layer-microbatch.
+    exposed: f64,
+    /// Retained activation bytes per layer (× n_batch at stage level).
+    retained_bytes: f64,
+    /// Forward-window residency bytes per layer.
+    fwd_comm_bytes: f64,
+}
+
+/// Globally plan one stage: heterogeneous per-layer plans under the
+/// shared memory budget.
+pub fn opt_plan(
+    g: &LayerGraph,
+    ctx: &StageCtx,
+    times: &[f64],
+    opts: &OptOptions,
+) -> PlanOutcome {
+    let start = Instant::now();
+    let mut heu_opts = opts.heu.clone();
+    heu_opts.overlap = opts.overlap;
+
+    // ---- 1. menu generation ----
+    let n = g.ops.len();
+    let store_all_bytes: f64 = g.ops.iter().map(|o| o.out_bytes).sum();
+    let mut menu: Vec<Candidate> = Vec::new();
+    let push_candidate = |plan: LayerPlan, menu: &mut Vec<Candidate>| {
+        if plan.validate(g).is_err() {
+            return;
+        }
+        let cand = Candidate {
+            exposed: plan.exposed_time(times),
+            retained_bytes: plan.retained_bytes(g),
+            fwd_comm_bytes: plan.fwd_comm_bytes(g),
+            plan,
+        };
+        // Drop dominated candidates (≥ memory and ≥ exposed time).
+        if menu.iter().any(|c| {
+            c.exposed <= cand.exposed + 1e-12
+                && c.retained_bytes <= cand.retained_bytes + 1.0
+                && c.fwd_comm_bytes <= cand.fwd_comm_bytes + 1.0
+        }) {
+            return;
+        }
+        menu.retain(|c| {
+            !(cand.exposed <= c.exposed + 1e-12
+                && cand.retained_bytes <= c.retained_bytes + 1.0
+                && cand.fwd_comm_bytes <= c.fwd_comm_bytes + 1.0)
+        });
+        menu.push(cand);
+    };
+
+    // Anchors: store-all and full-recompute.
+    push_candidate(LayerPlan::store_all(n), &mut menu);
+    push_candidate(LayerPlan::full_recompute(n), &mut menu);
+    // Budget sweep.
+    for level in 0..opts.levels {
+        let frac = (level + 1) as f64 / (opts.levels + 1) as f64;
+        let per_layer = store_all_bytes * ctx.n_batch as f64 * frac;
+        let out = heu_plan_with_budget(g, ctx, times, &heu_opts, per_layer);
+        if !out.plan.layers.is_empty() {
+            push_candidate(out.plan.layers[0].clone(), &mut menu);
+        }
+    }
+
+    // ---- 2. global multiple-choice assignment ----
+    let nl = ctx.n_layers;
+    let nb = ctx.n_batch as f64;
+    // Reserve the worst-case Opt-1 M_delta (one layer's backward-window
+    // recompute residency) so the chosen combination can never exceed the
+    // stage evaluator's Eq.-17 accounting.
+    let max_delta = menu
+        .iter()
+        .map(|c| c.plan.bwd_window_bytes(g))
+        .fold(0.0, f64::max);
+    let dynamic_budget = ctx.mem_budget - ctx.boundary_total() - max_delta;
+    let mut m = Model::new();
+    let mut x = vec![vec![]; nl];
+    for (l, xl) in x.iter_mut().enumerate() {
+        *xl = (0..menu.len())
+            .map(|c| m.binary(format!("x_{l}_{c}")))
+            .collect::<Vec<_>>();
+        // Exactly one candidate per layer slot.
+        let mut e = Expr::new();
+        for &v in xl.iter() {
+            e.add_term(v, 1.0);
+        }
+        m.add_eq(e, 1.0);
+    }
+    // Shared memory budget.
+    let mut mem = Expr::new();
+    for (l, xl) in x.iter().enumerate() {
+        for (c, &v) in xl.iter().enumerate() {
+            let last = ctx.is_last_stage();
+            let bytes = menu[c].retained_bytes * nb
+                + if last { 0.0 } else { menu[c].fwd_comm_bytes };
+            let _ = l;
+            mem.add_term(v, bytes);
+        }
+    }
+    m.add_le(mem, dynamic_budget);
+    // Objective: total exposed recompute across layers.
+    let mut obj = Expr::new();
+    for xl in &x {
+        for (c, &v) in xl.iter().enumerate() {
+            obj.add_term(v, menu[c].exposed + 1e-9 * menu[c].retained_bytes / 1e9);
+        }
+    }
+    m.minimize(obj);
+
+    let result = solve_milp(&m, &opts.milp);
+    let search_secs = start.elapsed().as_secs_f64();
+    match result.status {
+        MilpStatus::Optimal | MilpStatus::Feasible => {
+            let mut layers = Vec::with_capacity(nl);
+            for xl in &x {
+                let c = xl
+                    .iter()
+                    .position(|&v| result.x[v.0] > 0.5)
+                    .expect("one candidate per layer");
+                layers.push(menu[c].plan.clone());
+            }
+            // Order layers so the most-retaining plans sit at the *end* of
+            // the stage (latest layers' stashes live shortest; matches
+            // Megatron's block-method placement intuition).
+            layers.sort_by(|a, b| {
+                a.retained_bytes(g)
+                    .partial_cmp(&b.retained_bytes(g))
+                    .unwrap()
+            });
+            let plan = StagePlan { layers };
+            let oom = !plan.fits_memory(g, ctx);
+            PlanOutcome { plan, search_secs, oom }
+        }
+        MilpStatus::Infeasible => {
+            let plan = StagePlan::uniform(LayerPlan::full_recompute(n), nl);
+            let oom = !plan.fits_memory(g, ctx);
+            PlanOutcome { plan, search_secs, oom }
+        }
+    }
+}
+
+/// Checkmate baseline: globally optimal recomputation **without overlap**
+/// (paper §2.2 item 4, §7.1 baselines) — the same global search restricted
+/// to critical-path recomputation.
+pub fn checkmate_plan(
+    g: &LayerGraph,
+    ctx: &StageCtx,
+    times: &[f64],
+    opts: &OptOptions,
+) -> PlanOutcome {
+    let mut o = opts.clone();
+    o.overlap = false;
+    opt_plan(g, ctx, times, &o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{CostModel, Topology};
+    use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
+
+    fn fixture(budget_frac: f64) -> (LayerGraph, StageCtx, Vec<f64>) {
+        let s = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+        let g = build_layer_graph(&s);
+        let cm = CostModel::new(Topology::nvlink(2, 4));
+        let times = cm.layer_times(&g);
+        let comm = g.comm_ops();
+        let (w1, w2) = (times[comm[0]], times[comm[1]]);
+        let boundary = 2.0 * (1024 * 4 * 1792) as f64;
+        let store_all = {
+            let ctx0 = StageCtx {
+                n_layers: 4,
+                n_batch: 4,
+                stage: 0,
+                num_stages: 4,
+                mem_budget: f64::INFINITY,
+                fwd_window: [w1, w2],
+                bwd_window: [w1, w2],
+                boundary_bytes: boundary,
+            };
+            StagePlan::uniform(LayerPlan::store_all(g.ops.len()), 4)
+                .activation_bytes(&g, &ctx0)
+        };
+        let ctx = StageCtx {
+            n_layers: 4,
+            n_batch: 4,
+            stage: 0,
+            num_stages: 4,
+            mem_budget: store_all * budget_frac,
+            fwd_window: [w1, w2],
+            bwd_window: [w1, w2],
+            boundary_bytes: boundary,
+        };
+        (g, ctx, times)
+    }
+
+    fn quick_opts() -> OptOptions {
+        OptOptions {
+            levels: 4,
+            heu: HeuOptions {
+                milp: MilpOptions { time_budget: 5.0, ..Default::default() },
+                ..Default::default()
+            },
+            milp: MilpOptions { time_budget: 10.0, ..Default::default() },
+            overlap: true,
+        }
+    }
+
+    #[test]
+    fn opt_is_heterogeneous_under_tight_memory() {
+        let (g, ctx, times) = fixture(0.5);
+        let out = opt_plan(&g, &ctx, &times, &quick_opts());
+        assert!(!out.oom);
+        assert_eq!(out.plan.layers.len(), 4);
+        for lp in &out.plan.layers {
+            lp.validate(&g).unwrap();
+        }
+        assert!(out.plan.fits_memory(&g, &ctx));
+    }
+
+    #[test]
+    fn opt_no_worse_than_heu() {
+        use crate::plan::heu::heu_plan;
+        let (g, ctx, times) = fixture(0.5);
+        let heu = heu_plan(&g, &ctx, &times, &HeuOptions::default());
+        let opt = opt_plan(&g, &ctx, &times, &quick_opts());
+        let exposed = |p: &StagePlan| -> f64 {
+            p.layers.iter().map(|l| l.exposed_time(&times)).sum()
+        };
+        assert!(
+            exposed(&opt.plan) <= exposed(&heu.plan) + 1e-9,
+            "opt {} vs heu {}",
+            exposed(&opt.plan),
+            exposed(&heu.plan)
+        );
+    }
+
+    #[test]
+    fn checkmate_never_overlaps_and_is_no_better_than_opt() {
+        let (g, ctx, times) = fixture(0.5);
+        let opt = opt_plan(&g, &ctx, &times, &quick_opts());
+        let ck = checkmate_plan(&g, &ctx, &times, &quick_opts());
+        let exposed = |p: &StagePlan| -> f64 {
+            p.layers.iter().map(|l| l.exposed_time(&times)).sum()
+        };
+        for lp in &ck.plan.layers {
+            assert_eq!(lp.overlapped_time(&times), 0.0);
+        }
+        assert!(exposed(&opt.plan) <= exposed(&ck.plan) + 1e-9);
+    }
+
+    #[test]
+    fn ample_memory_needs_no_recompute() {
+        let (g, ctx, times) = fixture(2.0);
+        let out = opt_plan(&g, &ctx, &times, &quick_opts());
+        let total: f64 = out.plan.layers.iter().map(|l| l.exposed_time(&times)).sum();
+        assert_eq!(total, 0.0);
+    }
+
+    #[test]
+    fn search_time_grows_with_levels() {
+        let (g, ctx, times) = fixture(0.5);
+        let t_small = opt_plan(&g, &ctx, &times, &OptOptions { levels: 2, ..quick_opts() })
+            .search_secs;
+        let t_big = opt_plan(&g, &ctx, &times, &OptOptions { levels: 10, ..quick_opts() })
+            .search_secs;
+        assert!(t_big > t_small, "levels should scale search time: {t_small} vs {t_big}");
+    }
+}

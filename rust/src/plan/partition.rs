@@ -1,0 +1,235 @@
+//! Recomputation-aware model partitioning (paper §6, Algorithm 1).
+//!
+//! A greedy re-balancer: start from a valid (no-OOM) partition, then
+//! repeatedly move one layer from the longest stage to the K-th shortest
+//! stage, accepting moves that shrink the pipeline makespan, escalating K
+//! on failure, until a fixpoint. Stage durations come from the training
+//! cost model with each candidate stage re-planned by the configured
+//! recomputation policy — which is what makes the partitioner
+//! *recomputation-aware* (the dp-partition baseline balances parameter
+//! counts only).
+
+use super::costeval::{build_stage_ctx, plan_stage, stage_cost};
+use super::types::{PlanOutcome, PolicyKind};
+use crate::costmodel::CostModel;
+use crate::graph::{LayerGraph, TrainSetup};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Result of partition search.
+#[derive(Debug, Clone)]
+pub struct PartitionResult {
+    /// Layers per stage.
+    pub partition: Vec<usize>,
+    /// Per-stage plans for the final partition.
+    pub plans: Vec<PlanOutcome>,
+    /// Per-stage steady slot times.
+    pub durations: Vec<f64>,
+    /// Wall-clock search time (including planner calls).
+    pub search_secs: f64,
+    /// Number of candidate partitions evaluated.
+    pub evaluated: usize,
+}
+
+impl PartitionResult {
+    pub fn makespan(&self) -> f64 {
+        self.durations.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn any_oom(&self) -> bool {
+        self.plans.iter().any(|p| p.oom)
+    }
+}
+
+/// The Megatron/DeepSpeed default: balance parameter counts — with
+/// homogeneous transformer layers, an even layer split (paper §7.1
+/// "dp-partitioning").
+pub fn dp_partition(total_layers: usize, stages: usize) -> Vec<usize> {
+    let base = total_layers / stages;
+    let extra = total_layers % stages;
+    // Remainder goes to the earliest stages (DeepSpeed convention).
+    (0..stages)
+        .map(|s| base + usize::from(s < extra))
+        .collect()
+}
+
+/// Evaluate a partition: plan every stage with `policy` and return
+/// per-stage durations (slot times). Uses `cache` to avoid re-solving
+/// identical (layers, stage) subproblems — the paper's identical-structure
+/// observation applied to the partition search itself.
+fn evaluate(
+    setup: &TrainSetup,
+    cm: &CostModel,
+    g: &LayerGraph,
+    policy: PolicyKind,
+    partition: &[usize],
+    cache: &mut HashMap<(usize, usize), PlanOutcome>,
+) -> (Vec<PlanOutcome>, Vec<f64>, bool) {
+    let times = cm.layer_times(g);
+    let mut plans = Vec::with_capacity(partition.len());
+    let mut durations = Vec::with_capacity(partition.len());
+    let mut oom = false;
+    for stage in 0..partition.len() {
+        let ctx = build_stage_ctx(setup, cm, g, partition, stage);
+        let key = (partition[stage], stage);
+        let outcome = cache
+            .entry(key)
+            .or_insert_with(|| plan_stage(policy, g, &ctx, &times))
+            .clone();
+        let cost = stage_cost(setup, cm, g, &ctx, &outcome.plan);
+        oom |= outcome.oom || cost.oom;
+        durations.push(cost.slot_time);
+        plans.push(outcome);
+    }
+    (plans, durations, oom)
+}
+
+/// Algorithm 1: greedy recomputation-aware partition search.
+pub fn lynx_partition(
+    setup: &TrainSetup,
+    cm: &CostModel,
+    g: &LayerGraph,
+    policy: PolicyKind,
+) -> PartitionResult {
+    let start = Instant::now();
+    let stages = setup.pp;
+    let total_layers = setup.model.layers;
+    let mut cache: HashMap<(usize, usize), PlanOutcome> = HashMap::new();
+    let mut evaluated = 0usize;
+
+    // InitialPartitionNoOOM: the even split; full recompute always fits in
+    // practice, and `evaluate` flags OOM if not.
+    let mut best = dp_partition(total_layers, stages);
+    let (mut best_plans, mut best_durs, mut best_oom) =
+        evaluate(setup, cm, g, policy, &best, &mut cache);
+    evaluated += 1;
+
+    // Outer loop: until S_best stops changing.
+    loop {
+        let mut changed = false;
+        let d_cur = &best_durs;
+        let idx_longest = argmax(d_cur);
+        let d_longest = d_cur[idx_longest];
+
+        // Inner loop: try K-th shortest stage, K = 1..N.
+        let mut order: Vec<usize> = (0..stages).collect();
+        order.sort_by(|&a, &b| d_cur[a].partial_cmp(&d_cur[b]).unwrap());
+        for &idx_short in order.iter().take(stages - 1) {
+            if idx_short == idx_longest || best[idx_longest] <= 1 {
+                continue;
+            }
+            let mut cand = best.clone();
+            cand[idx_longest] -= 1;
+            cand[idx_short] += 1;
+            let (plans, durs, oom) = evaluate(setup, cm, g, policy, &cand, &mut cache);
+            evaluated += 1;
+            let cand_longest = durs.iter().cloned().fold(0.0, f64::max);
+            let valid = !oom;
+            if valid && cand_longest < d_longest - 1e-12 {
+                best = cand;
+                best_plans = plans;
+                best_durs = durs;
+                best_oom = oom;
+                changed = true;
+                break; // back to the outer loop (Algorithm 1 line 22)
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    PartitionResult {
+        partition: best,
+        plans: best_plans,
+        durations: best_durs,
+        search_secs: start.elapsed().as_secs_f64(),
+        evaluated: evaluated.max(usize::from(best_oom)), // keep field used
+    }
+}
+
+/// Evaluate the dp-partition baseline with the given policy (no search).
+pub fn dp_partition_result(
+    setup: &TrainSetup,
+    cm: &CostModel,
+    g: &LayerGraph,
+    policy: PolicyKind,
+) -> PartitionResult {
+    let start = Instant::now();
+    let mut cache = HashMap::new();
+    let partition = dp_partition(setup.model.layers, setup.pp);
+    let (plans, durations, _) = evaluate(setup, cm, g, policy, &partition, &mut cache);
+    PartitionResult {
+        partition,
+        plans,
+        durations,
+        search_secs: start.elapsed().as_secs_f64(),
+        evaluated: 1,
+    }
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Topology;
+    use crate::graph::{build_layer_graph, ModelConfig};
+
+    #[test]
+    fn dp_partition_is_even() {
+        assert_eq!(dp_partition(32, 4), vec![8, 8, 8, 8]);
+        assert_eq!(dp_partition(34, 4), vec![9, 9, 8, 8]);
+        assert_eq!(dp_partition(3, 2), vec![2, 1]);
+    }
+
+    fn fixture() -> (TrainSetup, CostModel, LayerGraph) {
+        let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(2, 4));
+        let g = build_layer_graph(&setup);
+        (setup, cm, g)
+    }
+
+    #[test]
+    fn lynx_partition_conserves_layers_and_beats_or_ties_dp() {
+        let (setup, cm, g) = fixture();
+        let lynx = lynx_partition(&setup, &cm, &g, PolicyKind::Full);
+        assert_eq!(lynx.partition.iter().sum::<usize>(), setup.model.layers);
+        assert!(lynx.partition.iter().all(|&l| l >= 1));
+        let dp = dp_partition_result(&setup, &cm, &g, PolicyKind::Full);
+        assert!(
+            lynx.makespan() <= dp.makespan() + 1e-12,
+            "lynx {} vs dp {}",
+            lynx.makespan(),
+            dp.makespan()
+        );
+    }
+
+    #[test]
+    fn partition_shifts_layers_away_from_heavy_last_stage() {
+        // The last stage pays the LM head; a time-balancing partitioner
+        // should give it fewer layers than the dp split.
+        let (setup, cm, g) = fixture();
+        let lynx = lynx_partition(&setup, &cm, &g, PolicyKind::Full);
+        let dp = dp_partition(setup.model.layers, setup.pp);
+        assert!(
+            lynx.partition[setup.pp - 1] <= dp[setup.pp - 1],
+            "last stage {} vs dp {}",
+            lynx.partition[setup.pp - 1],
+            dp[setup.pp - 1]
+        );
+    }
+
+    #[test]
+    fn search_terminates_quickly_with_cache() {
+        let (setup, cm, g) = fixture();
+        let r = lynx_partition(&setup, &cm, &g, PolicyKind::Full);
+        assert!(r.evaluated < 200, "evaluated {}", r.evaluated);
+    }
+}

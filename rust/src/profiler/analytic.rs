@@ -1,0 +1,56 @@
+//! Analytic (roofline) model profiler.
+//!
+//! Produces the per-operator records the policy maker consumes: type,
+//! execution time, output size, dependencies — the schema of the paper's
+//! profiling database (§3 "Model profiler"), computed from the cost model
+//! instead of CUDA events (DESIGN.md §2 substitution table).
+
+use super::db::{OpRecord, ProfileDb};
+use crate::costmodel::CostModel;
+use crate::graph::{build_layer_graph, TrainSetup};
+
+/// Profile one transformer layer of `setup` under `cm`.
+pub fn profile_model(setup: &TrainSetup, cm: &CostModel) -> ProfileDb {
+    let g = build_layer_graph(setup);
+    let times = cm.layer_times(&g);
+    let records = g
+        .ops
+        .iter()
+        .enumerate()
+        .map(|(i, op)| OpRecord {
+            name: op.name.clone(),
+            kind: format!("{:?}", op.kind),
+            is_comm: op.is_comm(),
+            time_secs: times[i],
+            bwd_time_secs: cm.op_bwd_time(op),
+            out_bytes: op.out_bytes,
+            deps: op.deps.clone(),
+        })
+        .collect();
+    ProfileDb {
+        model: setup.model.name.to_string(),
+        topology: cm.topo.name.clone(),
+        tp: setup.tp,
+        pp: setup.pp,
+        micro_batch: setup.micro_batch,
+        seq: setup.seq,
+        records,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Topology;
+    use crate::graph::ModelConfig;
+
+    #[test]
+    fn profile_has_one_record_per_op() {
+        let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(2, 4));
+        let db = profile_model(&setup, &cm);
+        assert_eq!(db.records.len(), 14);
+        assert!(db.records.iter().all(|r| r.time_secs > 0.0));
+        assert_eq!(db.records.iter().filter(|r| r.is_comm).count(), 2);
+    }
+}

@@ -1,0 +1,146 @@
+//! Profile database: JSON-serializable per-operator records.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One operator's profile record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpRecord {
+    pub name: String,
+    pub kind: String,
+    pub is_comm: bool,
+    pub time_secs: f64,
+    pub bwd_time_secs: f64,
+    pub out_bytes: f64,
+    pub deps: Vec<usize>,
+}
+
+/// A profiling run for one (model, topology, batch geometry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileDb {
+    pub model: String,
+    pub topology: String,
+    pub tp: usize,
+    pub pp: usize,
+    pub micro_batch: usize,
+    pub seq: usize,
+    pub records: Vec<OpRecord>,
+}
+
+impl ProfileDb {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("model", Json::from(self.model.clone()))
+            .set("topology", Json::from(self.topology.clone()))
+            .set("tp", Json::from(self.tp))
+            .set("pp", Json::from(self.pp))
+            .set("micro_batch", Json::from(self.micro_batch))
+            .set("seq", Json::from(self.seq));
+        let mut recs = Json::Arr(vec![]);
+        for r in &self.records {
+            let mut ro = Json::obj();
+            ro.set("name", Json::from(r.name.clone()))
+                .set("kind", Json::from(r.kind.clone()))
+                .set("is_comm", Json::from(r.is_comm))
+                .set("time_secs", Json::from(r.time_secs))
+                .set("bwd_time_secs", Json::from(r.bwd_time_secs))
+                .set("out_bytes", Json::from(r.out_bytes))
+                .set("deps", Json::Arr(r.deps.iter().map(|&d| Json::from(d)).collect()));
+            recs.push(ro);
+        }
+        o.set("records", recs);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Option<ProfileDb> {
+        let records = j
+            .get("records")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Some(OpRecord {
+                    name: r.get("name")?.as_str()?.to_string(),
+                    kind: r.get("kind")?.as_str()?.to_string(),
+                    is_comm: r.get("is_comm")?.as_bool()?,
+                    time_secs: r.get("time_secs")?.as_f64()?,
+                    bwd_time_secs: r.get("bwd_time_secs")?.as_f64()?,
+                    out_bytes: r.get("out_bytes")?.as_f64()?,
+                    deps: r
+                        .get("deps")?
+                        .as_arr()?
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(ProfileDb {
+            model: j.get("model")?.as_str()?.to_string(),
+            topology: j.get("topology")?.as_str()?.to_string(),
+            tp: j.get("tp")?.as_usize()?,
+            pp: j.get("pp")?.as_usize()?,
+            micro_batch: j.get("micro_batch")?.as_usize()?,
+            seq: j.get("seq")?.as_usize()?,
+            records,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ProfileDb> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        ProfileDb::from_json(&j).ok_or_else(|| anyhow::anyhow!("bad profile db schema"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ProfileDb {
+        ProfileDb {
+            model: "gpt-1.3b".into(),
+            topology: "NVLink-2x8".into(),
+            tp: 2,
+            pp: 8,
+            micro_batch: 4,
+            seq: 1024,
+            records: vec![OpRecord {
+                name: "ln1".into(),
+                kind: "Compute(LayerNorm)".into(),
+                is_comm: false,
+                time_secs: 1e-5,
+                bwd_time_secs: 1.5e-5,
+                out_bytes: 1024.0,
+                deps: vec![],
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let db = sample();
+        let back = ProfileDb::from_json(&db.to_json()).unwrap();
+        assert_eq!(db, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let db = sample();
+        let dir = std::env::temp_dir().join("lynx_test_db");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profile.json");
+        db.save(&path).unwrap();
+        let back = ProfileDb::load(&path).unwrap();
+        assert_eq!(db, back);
+    }
+
+    #[test]
+    fn bad_schema_rejected() {
+        let j = Json::parse(r#"{"model": "x"}"#).unwrap();
+        assert!(ProfileDb::from_json(&j).is_none());
+    }
+}

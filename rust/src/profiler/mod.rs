@@ -1,0 +1,14 @@
+//! Model profiler (paper Fig. 4 step 1-2): collects per-operator type,
+//! execution time, output size and dependencies into a JSON database.
+//!
+//! Two backends:
+//! * [`analytic`] — the calibrated roofline profile used by the
+//!   scheduling experiments (substitutes CUDA-event profiling);
+//! * real PJRT wall-clock profiling lives in `runtime::profile` and feeds
+//!   the same database schema for the e2e trainer.
+
+pub mod analytic;
+pub mod db;
+
+pub use analytic::profile_model;
+pub use db::ProfileDb;

@@ -1,0 +1,202 @@
+//! Artifact manifest: the Rust-side view of `aot.py`'s output.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Model dimensions as recorded by the AOT pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub seq: usize,
+    pub micro_batch: usize,
+    pub layer_params: usize,
+    pub embed_params: usize,
+    pub head_params: usize,
+    pub total_params: usize,
+    pub use_pallas: bool,
+}
+
+/// One lowered entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntrySpec {
+    pub name: String,
+    /// HLO text file (relative to the artifact dir).
+    pub file: String,
+    /// Argument shapes (row-major dims) and dtypes ("float32"/"int32").
+    pub args: Vec<(Vec<usize>, String)>,
+    /// Result names, in tuple order.
+    pub results: Vec<String>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub entries: BTreeMap<String, EntrySpec>,
+    /// Stash tensor (name, shape) in tuple order.
+    pub stash: Vec<(String, Vec<usize>)>,
+    /// Flat-parameter layouts: (tensor name, shape) in vector order.
+    pub layer_layout: Vec<(String, Vec<usize>)>,
+    pub embed_layout: Vec<(String, Vec<usize>)>,
+    pub head_layout: Vec<(String, Vec<usize>)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        if j.get("format").and_then(|f| f.as_str()) != Some("hlo-text/1") {
+            return Err(anyhow!("unsupported artifact format"));
+        }
+        let cfg = j.expect("config");
+        let dims = ModelDims {
+            vocab: need_usize(cfg, "vocab")?,
+            hidden: need_usize(cfg, "hidden")?,
+            heads: need_usize(cfg, "heads")?,
+            layers: need_usize(cfg, "layers")?,
+            seq: need_usize(cfg, "seq")?,
+            micro_batch: need_usize(cfg, "micro_batch")?,
+            layer_params: need_usize(cfg, "layer_params")?,
+            embed_params: need_usize(cfg, "embed_params")?,
+            head_params: need_usize(cfg, "head_params")?,
+            total_params: need_usize(cfg, "total_params")?,
+            use_pallas: cfg.get("use_pallas").and_then(|v| v.as_bool()).unwrap_or(false),
+        };
+        let mut entries = BTreeMap::new();
+        for (name, e) in j
+            .expect("entries")
+            .as_obj()
+            .ok_or_else(|| anyhow!("entries not an object"))?
+        {
+            let args = e
+                .expect("args")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|a| {
+                    let shape = a
+                        .expect("shape")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect();
+                    let dtype = a.expect("dtype").as_str().unwrap().to_string();
+                    (shape, dtype)
+                })
+                .collect();
+            let results = e
+                .expect("results")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .filter_map(|r| r.as_str().map(str::to_string))
+                .collect();
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file: e.expect("file").as_str().unwrap().to_string(),
+                    args,
+                    results,
+                },
+            );
+        }
+        let named_shapes = |node: &Json| -> Vec<(String, Vec<usize>)> {
+            node.as_arr()
+                .unwrap()
+                .iter()
+                .map(|s| {
+                    let name = s.idx(0).unwrap().as_str().unwrap().to_string();
+                    let shape = s
+                        .idx(1)
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect();
+                    (name, shape)
+                })
+                .collect()
+        };
+        let stash = named_shapes(j.expect("stash"));
+        let layouts = j.expect("param_layouts");
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            dims,
+            entries,
+            stash,
+            layer_layout: named_shapes(layouts.expect("layer")),
+            embed_layout: named_shapes(layouts.expect("embed")),
+            head_layout: named_shapes(layouts.expect("head")),
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("entry {name:?} missing from manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(name)?.file))
+    }
+
+    /// Activation tensor element count per microbatch ([B, S, H]).
+    pub fn act_elems(&self) -> usize {
+        self.dims.micro_batch * self.dims.seq * self.dims.hidden
+    }
+}
+
+fn need_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("manifest missing numeric {key}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_loads_when_artifacts_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.dims.layers >= 1);
+        assert_eq!(
+            m.dims.total_params,
+            m.dims.layers * m.dims.layer_params + m.dims.embed_params + m.dims.head_params
+        );
+        for name in ["layer_fwd_full", "layer_bwd", "adam_layer", "head_bwd"] {
+            let e = m.entry(name).unwrap();
+            assert!(m.hlo_path(name).unwrap().exists(), "missing {}", e.file);
+        }
+        // layer_bwd signature: p, x, stash..., dy
+        let bwd = m.entry("layer_bwd").unwrap();
+        assert_eq!(bwd.args.len(), 2 + m.stash.len() + 1);
+        assert_eq!(bwd.results, vec!["dx", "dp"]);
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,225 @@
+//! The execution engine: compile-once, call-many PJRT wrapper.
+
+use super::artifact::Manifest;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Loads HLO-text artifacts, compiles them once on the PJRT CPU client,
+/// and executes them from the (Python-free) training hot path.
+///
+/// `Engine` is `Sync`: pipeline-stage threads share one engine; PJRT
+/// executions are internally thread-safe, and per-entry wall-clock stats
+/// are kept behind a mutex for the profiler.
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    exes: BTreeMap<String, PjRtLoadedExecutable>,
+    stats: Mutex<BTreeMap<String, (usize, f64)>>,
+}
+
+impl Engine {
+    /// Load and compile every entry in the manifest (skipping the fused
+    /// reference step unless `with_fused`).
+    pub fn load(dir: &Path, with_fused: bool) -> Result<Engine> {
+        Self::load_inner(dir, None, with_fused)
+    }
+
+    /// Load only the named entries — pipeline-stage threads compile just
+    /// what they run (PjRtClient is thread-local: the `xla` crate's
+    /// client is `Rc`-based, so each stage owns an engine).
+    pub fn load_subset(dir: &Path, names: &[&str]) -> Result<Engine> {
+        Self::load_inner(dir, Some(names), true)
+    }
+
+    fn load_inner(dir: &Path, names: Option<&[&str]>, with_fused: bool) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu()?;
+        let mut exes = BTreeMap::new();
+        for (name, _spec) in manifest.entries.iter() {
+            if let Some(filter) = names {
+                if !filter.contains(&name.as_str()) {
+                    continue;
+                }
+            } else if !with_fused && name == "train_step_fused" {
+                continue;
+            }
+            let path = manifest.hlo_path(name)?;
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            log_compile(name, t0.elapsed().as_secs_f64());
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Engine { client, manifest, exes, stats: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute an entry point. Inputs are literals; the tuple result is
+    /// decomposed into one literal per declared result.
+    pub fn call(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("entry {name:?} not compiled"))?;
+        let spec = self.manifest.entry(name)?;
+        if inputs.len() != spec.args.len() {
+            return Err(anyhow!(
+                "{name}: got {} inputs, manifest says {}",
+                inputs.len(),
+                spec.args.len()
+            ));
+        }
+        let t0 = Instant::now();
+        let result = exe.execute::<Literal>(inputs)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.decompose_tuple()?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.lock().unwrap();
+            let e = stats.entry(name.to_string()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += dt;
+        }
+        if parts.len() != spec.results.len() {
+            return Err(anyhow!(
+                "{name}: tuple arity {} vs manifest {}",
+                parts.len(),
+                spec.results.len()
+            ));
+        }
+        Ok(parts)
+    }
+
+    /// Per-entry (calls, total_secs) wall-clock profile — the PJRT-backed
+    /// counterpart of the paper's CUDA-event profiler.
+    pub fn profile(&self) -> BTreeMap<String, (usize, f64)> {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+fn log_compile(name: &str, secs: f64) {
+    if std::env::var("LYNX_LOG_COMPILE").is_ok() {
+        eprintln!("compiled {name} in {secs:.3}s");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::literal::{lit_f32, lit_i32, to_scalar_f32, to_vec_f32};
+    use std::path::PathBuf;
+
+    fn engine() -> Option<Engine> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Engine::load(&dir, false).unwrap())
+    }
+
+    #[test]
+    fn adam_entry_round_trips() {
+        let Some(eng) = engine() else { return };
+        let n = eng.manifest.dims.layer_params;
+        let p = lit_f32(&vec![1.0f32; n], &[n]).unwrap();
+        let g = lit_f32(&vec![1.0f32; n], &[n]).unwrap();
+        let m = lit_f32(&vec![0.0f32; n], &[n]).unwrap();
+        let v = lit_f32(&vec![0.0f32; n], &[n]).unwrap();
+        let lr = xla::Literal::scalar(0.1f32);
+        let out = eng.call("adam_layer", &[p, g, m, v, lr]).unwrap();
+        assert_eq!(out.len(), 3);
+        let p2 = to_vec_f32(&out[0]).unwrap();
+        assert!(p2[0] < 1.0, "adam must step against the gradient");
+    }
+
+    #[test]
+    fn layer_fwd_and_bwd_compose() {
+        let Some(eng) = engine() else { return };
+        let d = &eng.manifest.dims;
+        let (b, s, h, p_len) = (d.micro_batch, d.seq, d.hidden, d.layer_params);
+        let p = lit_f32(&vec![0.01f32; p_len], &[p_len]).unwrap();
+        let x = lit_f32(&vec![0.5f32; b * s * h], &[b, s, h]).unwrap();
+        let full = eng.call("layer_fwd_full", &[p, x]).unwrap();
+        assert_eq!(full.len(), 1 + eng.manifest.stash.len());
+
+        // light == full[0]
+        let p = lit_f32(&vec![0.01f32; p_len], &[p_len]).unwrap();
+        let x = lit_f32(&vec![0.5f32; b * s * h], &[b, s, h]).unwrap();
+        let light = eng.call("layer_fwd_light", &[p, x]).unwrap();
+        assert_eq!(
+            to_vec_f32(&light[0]).unwrap(),
+            to_vec_f32(&full[0]).unwrap()
+        );
+
+        // bwd consumes (p, x, stash..., dy)
+        let p = lit_f32(&vec![0.01f32; p_len], &[p_len]).unwrap();
+        let x = lit_f32(&vec![0.5f32; b * s * h], &[b, s, h]).unwrap();
+        let dy = lit_f32(&vec![1.0f32; b * s * h], &[b, s, h]).unwrap();
+        let mut inputs = vec![p, x];
+        inputs.extend(full.into_iter().skip(1));
+        inputs.push(dy);
+        let bwd = eng.call("layer_bwd", &inputs).unwrap();
+        assert_eq!(bwd.len(), 2);
+        let dp = to_vec_f32(&bwd[1]).unwrap();
+        assert!(dp.iter().any(|&x| x != 0.0), "gradients must be nonzero");
+    }
+
+    #[test]
+    fn head_loss_is_finite_positive() {
+        let Some(eng) = engine() else { return };
+        let d = &eng.manifest.dims;
+        let (b, s, h) = (d.micro_batch, d.seq, d.hidden);
+        let hp = lit_f32(&vec![0.01f32; d.head_params], &[d.head_params]).unwrap();
+        let x = lit_f32(&vec![0.1f32; b * s * h], &[b, s, h]).unwrap();
+        let t = lit_i32(&vec![1i32; b * s], &[b, s]).unwrap();
+        let out = eng.call("head_fwd", &[hp, x, t]).unwrap();
+        let loss = to_scalar_f32(&out[0]).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    }
+
+    #[test]
+    fn wrong_arity_is_rejected() {
+        let Some(eng) = engine() else { return };
+        match eng.call("adam_layer", &[]) {
+            Ok(_) => panic!("arity check failed to trigger"),
+            Err(err) => assert!(format!("{err}").contains("inputs")),
+        }
+    }
+
+    #[test]
+    fn profile_accumulates() {
+        let Some(eng) = engine() else { return };
+        let n = eng.manifest.dims.head_params;
+        for _ in 0..2 {
+            let args = [
+                lit_f32(&vec![0.0f32; n], &[n]).unwrap(),
+                lit_f32(&vec![0.0f32; n], &[n]).unwrap(),
+                lit_f32(&vec![0.0f32; n], &[n]).unwrap(),
+                lit_f32(&vec![0.0f32; n], &[n]).unwrap(),
+                xla::Literal::scalar(0.1f32),
+            ];
+            eng.call("adam_head", &args).unwrap();
+        }
+        let prof = eng.profile();
+        assert_eq!(prof["adam_head"].0, 2);
+        assert!(prof["adam_head"].1 > 0.0);
+    }
+}

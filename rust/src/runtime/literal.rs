@@ -1,0 +1,85 @@
+//! Literal construction/extraction helpers for the PJRT boundary.
+
+use anyhow::Result;
+use xla::{ArrayElement, Literal};
+
+/// Build an f32 literal with the given dims from a flat slice.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    assert_eq!(data.len(), n, "data len {} vs dims {:?}", data.len(), dims);
+    let lit = Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal with the given dims.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    assert_eq!(data.len(), n);
+    let lit = Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims_i64)?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Extract an f32 vector regardless of shape.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a single f32 (loss values etc.).
+pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Total element count of a shape.
+pub fn elem_count(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+/// Typed raw copy out of a literal into a preallocated slice.
+pub fn copy_out<T: ArrayElement>(lit: &Literal, dst: &mut [T]) -> Result<()> {
+    lit.copy_raw_to(dst)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_with_shape() {
+        let lit = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let lit = lit_i32(&[7, 8, 9, 10], &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let lit = lit_scalar_f32(2.5);
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "data len")]
+    fn shape_mismatch_panics() {
+        let _ = lit_f32(&[1.0, 2.0], &[3]);
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The interchange contract (DESIGN.md §8): `python/compile/aot.py` lowers
+//! every model entry point to HLO **text** plus a `manifest.json`
+//! describing signatures and flat-parameter layouts. This module loads
+//! the manifest ([`artifact`]), compiles each entry on the PJRT CPU
+//! client ([`engine`]), and provides typed literal helpers ([`literal`]).
+//! Python never runs after `make artifacts`.
+
+pub mod artifact;
+pub mod engine;
+pub mod literal;
+
+pub use artifact::{EntrySpec, Manifest, ModelDims};
+pub use engine::Engine;
+pub use literal::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32};

@@ -1,0 +1,264 @@
+//! Dependency-driven timing of the 1F1B schedule.
+//!
+//! Items within a stage run sequentially in schedule order; across
+//! stages, `Fwd(s,m)` waits for `Fwd(s-1,m)` plus the p2p transfer and
+//! `Bwd(s,m)` waits for `Bwd(s+1,m)` plus p2p. Timing is resolved by
+//! fixpoint sweeps over the stages (dependencies form a DAG, so at most
+//! `num_stages` sweeps are needed).
+//!
+//! Lynx's flexible recomputation (paper Observation 3 + Opt 3) is modeled
+//! here: exposed recomputation of `Bwd(s,m)` does not depend on the
+//! incoming gradient, so in `lynx_absorb` mode it runs inside the idle
+//! gap while the stage waits for dy — during cool-down stalls and any
+//! steady-state bubble. Baseline policies trigger recomputation only when
+//! the backward op itself starts (on-demand in the critical path).
+
+use super::schedule::{stage_items, WorkItem};
+
+/// Per-stage timing inputs (seconds, per microbatch).
+#[derive(Debug, Clone)]
+pub struct StageTiming {
+    /// Forward duration (includes TP comm and any fwd-window recompute —
+    /// window capacity is enforced by the planner).
+    pub fwd: f64,
+    /// Backward duration excluding exposed recomputation.
+    pub bwd: f64,
+    /// Exposed (critical-path) recompute duration.
+    pub exposed: f64,
+    /// Activation p2p transfer time to the next stage.
+    pub p2p: f64,
+}
+
+/// Trace of one simulated iteration.
+#[derive(Debug, Clone)]
+pub struct PipelineTrace {
+    /// Pipeline makespan (first fwd start to last bwd end), seconds.
+    pub makespan: f64,
+    /// Per-stage busy time.
+    pub busy: Vec<f64>,
+    /// Per-stage idle time inside the active window.
+    pub idle: Vec<f64>,
+    /// Per-stage exposed-recompute time absorbed into stalls (Opt 3).
+    pub absorbed: Vec<f64>,
+    /// Per-stage remaining exposed recompute paid on the critical path.
+    pub exposed_paid: Vec<f64>,
+    /// fwd_end[s][m], bwd_end[s][m] completion times.
+    pub fwd_end: Vec<Vec<f64>>,
+    pub bwd_end: Vec<Vec<f64>>,
+}
+
+/// Run the 1F1B pipeline; `lynx_absorb` enables stall absorption of
+/// exposed recomputation (Lynx policies only).
+pub fn run_pipeline(
+    timings: &[StageTiming],
+    num_micro: usize,
+    lynx_absorb: bool,
+) -> PipelineTrace {
+    let p = timings.len();
+    assert!(p >= 1 && num_micro >= 1);
+    let items: Vec<Vec<WorkItem>> =
+        (0..p).map(|s| stage_items(s, p, num_micro)).collect();
+
+    let mut fwd_end = vec![vec![f64::INFINITY; num_micro]; p];
+    let mut bwd_end = vec![vec![f64::INFINITY; num_micro]; p];
+    let mut absorbed = vec![0.0; p];
+    let mut exposed_paid = vec![0.0; p];
+    let mut busy = vec![0.0; p];
+    let mut item_start = vec![vec![0.0f64; 2 * num_micro]; p];
+    let mut item_end = vec![vec![f64::INFINITY; 2 * num_micro]; p];
+
+    // Fixpoint sweeps: recompute the whole schedule until stable. The
+    // critical path zig-zags between stages once per microbatch, so the
+    // bound is O(stages + microbatches) sweeps.
+    let max_sweeps = 4 * (p + num_micro) + 8;
+    let mut converged = false;
+    for _sweep in 0..max_sweeps {
+        let mut changed = false;
+        for s in 0..p {
+            let t = &timings[s];
+            let mut prev_end = 0.0f64;
+            absorbed[s] = 0.0;
+            exposed_paid[s] = 0.0;
+            busy[s] = 0.0;
+            for (k, item) in items[s].iter().enumerate() {
+                let m = item.microbatch();
+                let (start, end) = match item {
+                    WorkItem::Fwd(_) => {
+                        let ready = if s == 0 {
+                            0.0
+                        } else {
+                            fwd_end[s - 1][m] + timings[s - 1].p2p
+                        };
+                        let start = prev_end.max(ready);
+                        (start, start + t.fwd)
+                    }
+                    WorkItem::Bwd(_) => {
+                        let dy_ready = if s + 1 == p {
+                            // Loss gradient is available right after fwd.
+                            fwd_end[s][m]
+                        } else {
+                            bwd_end[s + 1][m] + timings[s + 1].p2p
+                        };
+                        if lynx_absorb {
+                            // Recompute starts as soon as the stage is
+                            // free; the gap until dy hides part of it.
+                            let gap = (dy_ready - prev_end).max(0.0);
+                            let absorb = gap.min(t.exposed);
+                            absorbed[s] += absorb;
+                            exposed_paid[s] += t.exposed - absorb;
+                            let start = prev_end.max(dy_ready - absorb);
+                            let end = (prev_end + t.exposed).max(dy_ready) + t.bwd;
+                            (start, end)
+                        } else {
+                            exposed_paid[s] += t.exposed;
+                            let start = prev_end.max(dy_ready);
+                            (start, start + t.exposed + t.bwd)
+                        }
+                    }
+                };
+                if item_end[s][k] != end {
+                    changed = true;
+                }
+                item_start[s][k] = start;
+                item_end[s][k] = end;
+                match item {
+                    WorkItem::Fwd(_) => fwd_end[s][m] = end,
+                    WorkItem::Bwd(_) => bwd_end[s][m] = end,
+                }
+                prev_end = end;
+            }
+        }
+        if !changed {
+            converged = true;
+            break;
+        }
+    }
+    assert!(converged, "1F1B timing did not converge (p={p}, m={num_micro})");
+
+    let makespan = bwd_end
+        .iter()
+        .flat_map(|v| v.iter())
+        .cloned()
+        .fold(0.0, f64::max);
+    let mut idle = vec![0.0; p];
+    for s in 0..p {
+        let t = &timings[s];
+        busy[s] = items[s]
+            .iter()
+            .map(|it| match it {
+                WorkItem::Fwd(_) => t.fwd,
+                WorkItem::Bwd(_) => t.bwd,
+            })
+            .sum::<f64>()
+            + exposed_paid[s]
+            + absorbed[s];
+        idle[s] = (makespan - busy[s]).max(0.0);
+    }
+
+    PipelineTrace { makespan, busy, idle, absorbed, exposed_paid, fwd_end, bwd_end }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(p: usize, fwd: f64, bwd: f64, exposed: f64) -> Vec<StageTiming> {
+        (0..p)
+            .map(|_| StageTiming { fwd, bwd, exposed, p2p: 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn single_stage_single_micro() {
+        let tr = run_pipeline(&uniform(1, 2.0, 3.0, 0.5), 1, false);
+        assert!((tr.makespan - 5.5).abs() < 1e-9);
+        assert_eq!(tr.exposed_paid[0], 0.5);
+    }
+
+    #[test]
+    fn ideal_pipeline_makespan_formula() {
+        // Balanced stages, no recompute, no p2p: the classic 1F1B bound
+        // (p - 1 + m) · (f + b) when f == b.
+        let (p, m, f) = (4usize, 8usize, 1.0f64);
+        let tr = run_pipeline(&uniform(p, f, f, 0.0), m, false);
+        let expect = (p - 1 + m) as f64 * 2.0 * f;
+        assert!(
+            (tr.makespan - expect).abs() < 1e-9,
+            "makespan {} vs {}",
+            tr.makespan,
+            expect
+        );
+    }
+
+    #[test]
+    fn dependencies_are_respected() {
+        let tr = run_pipeline(&uniform(4, 1.0, 2.0, 0.0), 6, false);
+        for s in 1..4 {
+            for m in 0..6 {
+                assert!(tr.fwd_end[s][m] >= tr.fwd_end[s - 1][m] + 1.0 - 1e-9);
+            }
+        }
+        for s in 0..3 {
+            for m in 0..6 {
+                assert!(tr.bwd_end[s][m] >= tr.bwd_end[s + 1][m] + 2.0 - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn exposed_recompute_slows_baselines() {
+        let base = run_pipeline(&uniform(4, 1.0, 2.0, 0.0), 8, false).makespan;
+        let with_rc = run_pipeline(&uniform(4, 1.0, 2.0, 0.6), 8, false).makespan;
+        assert!(with_rc > base + 4.0, "{with_rc} vs {base}");
+    }
+
+    #[test]
+    fn absorption_hides_recompute_in_stalls() {
+        // Early stages idle while waiting for gradients during cool-down;
+        // lynx mode must hide some recompute there.
+        let t = uniform(4, 1.0, 2.0, 0.6);
+        let on_demand = run_pipeline(&t, 8, false);
+        let lynx = run_pipeline(&t, 8, true);
+        assert!(lynx.makespan <= on_demand.makespan + 1e-9);
+        let total_absorbed: f64 = lynx.absorbed.iter().sum();
+        assert!(total_absorbed > 0.0, "no absorption: {:?}", lynx.absorbed);
+        // Early stages absorb more than the last stage (paper Fig. 8).
+        assert!(lynx.absorbed[0] >= lynx.absorbed[3]);
+        // Accounting identity: absorbed + paid == total exposed work.
+        for s in 0..4 {
+            let total = lynx.absorbed[s] + lynx.exposed_paid[s];
+            assert!((total - 8.0 * 0.6).abs() < 1e-9, "stage {s}: {total}");
+        }
+    }
+
+    #[test]
+    fn last_stage_cannot_absorb_with_zero_gap() {
+        // On the last stage bwd follows its own fwd immediately: no gap.
+        let t = uniform(4, 1.0, 1.0, 0.5);
+        let lynx = run_pipeline(&t, 8, true);
+        assert!(lynx.absorbed[3] < 1e-9, "absorbed {:?}", lynx.absorbed);
+    }
+
+    #[test]
+    fn p2p_latency_extends_makespan() {
+        let mut t = uniform(4, 1.0, 2.0, 0.0);
+        let base = run_pipeline(&t, 4, false).makespan;
+        for st in &mut t {
+            st.p2p = 0.5;
+        }
+        let with_p2p = run_pipeline(&t, 4, false).makespan;
+        assert!(with_p2p > base, "{with_p2p} vs {base}");
+    }
+
+    #[test]
+    fn unbalanced_stage_dominates() {
+        let mut t = uniform(4, 1.0, 1.0, 0.0);
+        t[2].fwd = 3.0;
+        t[2].bwd = 3.0;
+        let tr = run_pipeline(&t, 16, false);
+        // Slowest stage sets the steady-state rate: makespan ≈ m·(f2+b2).
+        assert!(tr.makespan >= 16.0 * 6.0 - 1e-9);
+        // Other stages show large idle.
+        assert!(tr.idle[0] > tr.idle[2]);
+    }
+}

@@ -1,0 +1,118 @@
+//! ASCII Gantt rendering of a simulated 1F1B pipeline trace.
+//!
+//! Turns a [`super::engine::PipelineTrace`] into the familiar
+//! pipeline-parallelism diagram (paper Fig. 1(b) / Fig. 5): one row per
+//! stage, `F`/`B` cells per microbatch, `r` where exposed recomputation
+//! runs in the critical path, and `·` for idle. Used by
+//! `lynx simulate --gantt` and the quickstart docs.
+
+use super::engine::{PipelineTrace, StageTiming};
+use super::schedule::{stage_items, WorkItem};
+
+/// Render the trace as one text row per stage, `cols` characters wide.
+pub fn render_gantt(
+    timings: &[StageTiming],
+    trace: &PipelineTrace,
+    num_micro: usize,
+    cols: usize,
+) -> String {
+    let p = timings.len();
+    let span = trace.makespan.max(1e-12);
+    let scale = cols as f64 / span;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "1F1B gantt — {p} stages × {num_micro} microbatches, makespan {:.3}s\n",
+        trace.makespan
+    ));
+    for s in 0..p {
+        let mut row = vec!['·'; cols];
+        let items = stage_items(s, p, num_micro);
+        for item in items {
+            let m = item.microbatch();
+            let (start, end, label) = match item {
+                WorkItem::Fwd(_) => {
+                    let end = trace.fwd_end[s][m];
+                    (end - timings[s].fwd, end, fwd_char(m))
+                }
+                WorkItem::Bwd(_) => {
+                    let end = trace.bwd_end[s][m];
+                    // Exposed recompute (if any) precedes the backward
+                    // proper; mark it with 'r'.
+                    let bwd_start = end - timings[s].bwd;
+                    let rc_start = bwd_start - timings[s].exposed;
+                    paint(&mut row, rc_start, bwd_start, 'r', scale);
+                    (bwd_start, end, bwd_char(m))
+                }
+            };
+            paint(&mut row, start, end, label, scale);
+        }
+        out.push_str(&format!("stage{s} |"));
+        out.extend(row);
+        out.push_str("|\n");
+    }
+    out.push_str("        F/B = fwd/bwd (digit = microbatch mod 10 on capitals' rows), r = exposed recompute, · = idle\n");
+    out
+}
+
+fn fwd_char(m: usize) -> char {
+    char::from_digit((m % 10) as u32, 10).unwrap()
+}
+
+fn bwd_char(m: usize) -> char {
+    // Letters for backward so F/B phases are visually distinct.
+    (b'a' + (m % 10) as u8) as char
+}
+
+fn paint(row: &mut [char], start: f64, end: f64, c: char, scale: f64) {
+    if end <= start {
+        return;
+    }
+    let a = ((start * scale) as usize).min(row.len().saturating_sub(1));
+    let b = ((end * scale).ceil() as usize).clamp(a + 1, row.len());
+    for cell in row.iter_mut().take(b).skip(a) {
+        *cell = c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::run_pipeline;
+
+    fn uniform(p: usize, fwd: f64, bwd: f64, exposed: f64) -> Vec<StageTiming> {
+        (0..p).map(|_| StageTiming { fwd, bwd, exposed, p2p: 0.0 }).collect()
+    }
+
+    #[test]
+    fn renders_all_stages_and_legend() {
+        let t = uniform(4, 1.0, 2.0, 0.5);
+        let tr = run_pipeline(&t, 6, false);
+        let g = render_gantt(&t, &tr, 6, 100);
+        assert_eq!(g.matches("\nstage").count(), 4);
+        assert!(g.contains("makespan"));
+        assert!(g.contains('r'), "exposed recompute should be visible");
+        assert!(g.contains('·'), "bubbles should be visible");
+    }
+
+    #[test]
+    fn no_recompute_means_no_r_cells() {
+        let t = uniform(2, 1.0, 1.0, 0.0);
+        let tr = run_pipeline(&t, 3, false);
+        let g = render_gantt(&t, &tr, 3, 80);
+        assert!(!g
+            .lines()
+            .skip(1) // header mentions "microbatches"
+            .take(2)
+            .any(|l| l.contains('r')));
+    }
+
+    #[test]
+    fn first_stage_starts_at_origin() {
+        let t = uniform(3, 1.0, 1.0, 0.0);
+        let tr = run_pipeline(&t, 4, false);
+        let g = render_gantt(&t, &tr, 4, 60);
+        let stage0 = g.lines().nth(1).unwrap();
+        let first_cell = stage0.chars().nth("stage0 |".len()).unwrap();
+        assert_eq!(first_cell, '0', "stage0 starts with microbatch 0 fwd");
+    }
+}

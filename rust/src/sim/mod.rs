@@ -1,0 +1,23 @@
+//! Pipeline-training simulator.
+//!
+//! Substitutes the paper's 16×A100 testbeds (DESIGN.md §2): executes a
+//! (partition, recomputation plan) pair under 1F1B pipeline parallelism
+//! and produces iteration time, throughput, per-stage memory, and the
+//! recompute-path breakdowns behind Figs. 2, 6, 7, 8, 9 and 10.
+//!
+//! * [`schedule`] — the 1F1B work order per stage (warmup / steady /
+//!   cool-down, Fig. 1(b) and Fig. 5).
+//! * [`engine`] — dependency-driven timing of the schedule, including
+//!   Opt-3-style absorption of recomputation into pipeline stalls.
+//! * [`runner`] — glue: policy → plan → stage costs → simulated pipeline
+//!   → [`runner::SimReport`].
+
+pub mod engine;
+pub mod gantt;
+pub mod runner;
+pub mod schedule;
+
+pub use engine::{run_pipeline, PipelineTrace, StageTiming};
+pub use gantt::render_gantt;
+pub use runner::{simulate, PartitionMode, SimConfig, SimReport, StageReport};
+pub use schedule::{stage_items, WorkItem};

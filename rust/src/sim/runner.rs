@@ -1,0 +1,275 @@
+//! End-to-end simulation runner: policy → plans → pipeline → report.
+
+use super::engine::{run_pipeline, StageTiming};
+use crate::costmodel::CostModel;
+use crate::graph::{build_layer_graph, TrainSetup};
+use crate::plan::{
+    build_stage_ctx, dp_partition, lynx_partition, plan_stage, stage_cost, PolicyKind,
+};
+use crate::util::json::Json;
+
+/// Partitioning mode for a simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionMode {
+    /// Balance parameter counts (Megatron/DeepSpeed default).
+    Dp,
+    /// Recomputation-aware Algorithm 1.
+    Lynx,
+}
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub setup: TrainSetup,
+    pub policy: PolicyKind,
+    pub partition: PartitionMode,
+}
+
+/// Per-stage simulation results.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub n_layers: usize,
+    pub fwd: f64,
+    pub bwd: f64,
+    /// Exposed recompute planned per microbatch.
+    pub exposed_per_micro: f64,
+    /// Overlapped-in-window recompute per microbatch.
+    pub overlapped_per_micro: f64,
+    /// Would-be recompute time of retained tensors per microbatch.
+    pub retained_per_micro: f64,
+    /// Exposed recompute absorbed into stalls across the iteration (Opt 3).
+    pub absorbed_total: f64,
+    /// Exposed recompute actually paid across the iteration.
+    pub exposed_paid_total: f64,
+    pub comm_per_micro: f64,
+    pub peak_mem: f64,
+    pub idle: f64,
+    pub oom: bool,
+}
+
+/// Whole-run simulation report.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub config_label: String,
+    pub iteration_secs: f64,
+    /// Training throughput, samples/s.
+    pub throughput: f64,
+    pub stages: Vec<StageReport>,
+    pub partition: Vec<usize>,
+    /// Policy + partition search seconds.
+    pub search_secs: f64,
+    pub oom: bool,
+}
+
+impl SimReport {
+    /// Total recompute time paid in the critical path per iteration.
+    pub fn total_exposed_paid(&self) -> f64 {
+        self.stages.iter().map(|s| s.exposed_paid_total).sum()
+    }
+
+    /// Total recompute time hidden (windows + stalls) per iteration.
+    pub fn total_hidden(&self, num_micro: usize) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| s.overlapped_per_micro * num_micro as f64 + s.absorbed_total)
+            .sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("config", Json::from(self.config_label.clone()))
+            .set("iteration_secs", Json::from(self.iteration_secs))
+            .set("throughput", Json::from(self.throughput))
+            .set("oom", Json::from(self.oom))
+            .set("search_secs", Json::from(self.search_secs))
+            .set(
+                "partition",
+                Json::Arr(self.partition.iter().map(|&l| Json::from(l)).collect()),
+            );
+        let mut stages = Json::Arr(vec![]);
+        for s in &self.stages {
+            let mut so = Json::obj();
+            so.set("layers", Json::from(s.n_layers))
+                .set("fwd", Json::from(s.fwd))
+                .set("bwd", Json::from(s.bwd))
+                .set("exposed_paid", Json::from(s.exposed_paid_total))
+                .set("absorbed", Json::from(s.absorbed_total))
+                .set("peak_mem", Json::from(s.peak_mem))
+                .set("idle", Json::from(s.idle));
+            stages.push(so);
+        }
+        o.set("stages", stages);
+        o
+    }
+}
+
+/// Simulate one configuration end to end.
+///
+/// In `PartitionMode::Lynx` both the dp split (Algorithm 1's initial
+/// candidate) and the searched split are executed and the better one is
+/// kept — the partition policy maker's final evaluation step (Fig. 4 ⑦⑧).
+pub fn simulate(cm: &CostModel, cfg: &SimConfig) -> SimReport {
+    if cfg.partition == PartitionMode::Lynx {
+        let searched = simulate_one(cm, cfg);
+        let dp = simulate_one(cm, &SimConfig { partition: PartitionMode::Dp, ..cfg.clone() });
+        return match (searched.oom, dp.oom) {
+            (false, true) => searched,
+            (true, false) => dp,
+            _ => {
+                let mut best = if searched.throughput >= dp.throughput { searched } else { dp };
+                best.search_secs += 0.0;
+                best
+            }
+        };
+    }
+    simulate_one(cm, cfg)
+}
+
+fn simulate_one(cm: &CostModel, cfg: &SimConfig) -> SimReport {
+    let setup = &cfg.setup;
+    let g = build_layer_graph(setup);
+    let times = cm.layer_times(&g);
+
+    // ---- partition + plans ----
+    let (partition, plans, search_secs) = match cfg.partition {
+        PartitionMode::Dp => {
+            let part = dp_partition(setup.model.layers, setup.pp);
+            let mut plans = Vec::with_capacity(setup.pp);
+            let mut search = 0.0;
+            for stage in 0..setup.pp {
+                let ctx = build_stage_ctx(setup, cm, &g, &part, stage);
+                let out = plan_stage(cfg.policy, &g, &ctx, &times);
+                search += out.search_secs;
+                plans.push(out);
+            }
+            (part, plans, search)
+        }
+        PartitionMode::Lynx => {
+            let r = lynx_partition(setup, cm, &g, cfg.policy);
+            (r.partition, r.plans, r.search_secs)
+        }
+    };
+
+    // ---- per-stage costs ----
+    let mut stage_timings = Vec::with_capacity(setup.pp);
+    let mut reports = Vec::with_capacity(setup.pp);
+    let mut oom = false;
+    let boundary = cm.memory.boundary_bytes(setup);
+    for stage in 0..setup.pp {
+        let ctx = build_stage_ctx(setup, cm, &g, &partition, stage);
+        let cost = stage_cost(setup, cm, &g, &ctx, &plans[stage].plan);
+        oom |= plans[stage].oom || cost.oom;
+        stage_timings.push(StageTiming {
+            fwd: cost.fwd,
+            bwd: cost.bwd,
+            exposed: cost.exposed_recompute,
+            p2p: cm.comm.p2p_time(boundary),
+        });
+        reports.push((ctx, cost));
+    }
+
+    // ---- pipeline execution ----
+    let lynx_absorb = cfg.policy.is_lynx();
+    let trace = run_pipeline(&stage_timings, setup.num_micro, lynx_absorb);
+
+    // Optimizer step: a bandwidth-bound pass over the stage's model
+    // states, overlapping-free (paper ignores it too; kept for realism).
+    let opt_step = reports
+        .iter()
+        .map(|(_, c)| c.static_mem / (cm.topo.gpu.mem_bw * cm.topo.gpu.bw_eff))
+        .fold(0.0, f64::max);
+    let iteration_secs = trace.makespan + opt_step;
+    let throughput = setup.global_batch() as f64 / iteration_secs;
+
+    let stages = reports
+        .into_iter()
+        .enumerate()
+        .map(|(s, (_ctx, cost))| StageReport {
+            n_layers: partition[s],
+            fwd: cost.fwd,
+            bwd: cost.bwd,
+            exposed_per_micro: cost.exposed_recompute,
+            overlapped_per_micro: cost.overlapped_recompute,
+            retained_per_micro: cost.retained_time,
+            absorbed_total: trace.absorbed[s],
+            exposed_paid_total: trace.exposed_paid[s],
+            comm_per_micro: cost.comm_time,
+            peak_mem: cost.peak_mem,
+            idle: trace.idle[s],
+            oom: cost.oom,
+        })
+        .collect();
+
+    SimReport {
+        config_label: format!(
+            "{} {} tp{} pp{} mb{} x{} seq{} [{}]",
+            setup.model.name,
+            cm.topo.name,
+            setup.tp,
+            setup.pp,
+            setup.micro_batch,
+            setup.num_micro,
+            setup.seq,
+            cfg.policy.label(),
+        ),
+        iteration_secs,
+        throughput,
+        stages,
+        partition,
+        search_secs,
+        oom,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Topology;
+    use crate::graph::ModelConfig;
+
+    fn sim(policy: PolicyKind, partition: PartitionMode) -> SimReport {
+        let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(2, 4));
+        simulate(&cm, &SimConfig { setup, policy, partition })
+    }
+
+    #[test]
+    fn full_recompute_runs_and_reports() {
+        let r = sim(PolicyKind::Full, PartitionMode::Dp);
+        assert!(!r.oom);
+        assert!(r.throughput > 0.0);
+        assert_eq!(r.stages.len(), 4);
+        assert_eq!(r.partition, vec![8, 8, 8, 8]);
+        assert!(r.total_exposed_paid() > 0.0);
+    }
+
+    #[test]
+    fn lynx_heu_beats_full_recompute() {
+        let full = sim(PolicyKind::Full, PartitionMode::Dp);
+        let heu = sim(PolicyKind::LynxHeu, PartitionMode::Dp);
+        assert!(!heu.oom);
+        assert!(
+            heu.throughput > full.throughput,
+            "heu {} vs full {}",
+            heu.throughput,
+            full.throughput
+        );
+    }
+
+    #[test]
+    fn early_stages_use_more_memory_fig2b() {
+        let r = sim(PolicyKind::Block, PartitionMode::Dp);
+        let first = r.stages[0].peak_mem;
+        let last = r.stages[3].peak_mem;
+        assert!(first > last, "stage0 {first:.3e} vs stage3 {last:.3e}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = sim(PolicyKind::Full, PartitionMode::Dp);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.get("oom").unwrap().as_bool(), Some(false));
+        assert_eq!(parsed.get("stages").unwrap().as_arr().unwrap().len(), 4);
+    }
+}

@@ -1,0 +1,142 @@
+//! The 1F1B (one-forward-one-backward) pipeline schedule (paper §2.1,
+//! Fig. 1(b)): each stage runs a warmup of forwards, a steady phase of
+//! alternating F/B, and a cool-down of trailing backwards.
+
+/// One unit of stage work: forward or backward of a microbatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkItem {
+    Fwd(usize),
+    Bwd(usize),
+}
+
+impl WorkItem {
+    pub fn microbatch(&self) -> usize {
+        match *self {
+            WorkItem::Fwd(m) | WorkItem::Bwd(m) => m,
+        }
+    }
+
+    pub fn is_bwd(&self) -> bool {
+        matches!(self, WorkItem::Bwd(_))
+    }
+}
+
+/// The 1F1B work order for `stage` of `num_stages` with `num_micro`
+/// microbatches. Warmup depth is `min(num_stages - stage - 1, num_micro)`.
+pub fn stage_items(stage: usize, num_stages: usize, num_micro: usize) -> Vec<WorkItem> {
+    assert!(stage < num_stages);
+    let warmup = (num_stages - stage - 1).min(num_micro);
+    let mut items = Vec::with_capacity(2 * num_micro);
+    for m in 0..warmup {
+        items.push(WorkItem::Fwd(m));
+    }
+    // Steady: 1F1B pairs.
+    for k in 0..num_micro - warmup {
+        items.push(WorkItem::Fwd(warmup + k));
+        items.push(WorkItem::Bwd(k));
+    }
+    // Cool-down: drain remaining backwards.
+    for m in num_micro - warmup..num_micro {
+        items.push(WorkItem::Bwd(m));
+    }
+    items
+}
+
+/// Index of the cool-down boundary: items at or after this index are
+/// cool-down backwards (used by Opt-3 reporting).
+pub fn cooldown_start(stage: usize, num_stages: usize, num_micro: usize) -> usize {
+    let warmup = (num_stages - stage - 1).min(num_micro);
+    warmup + 2 * (num_micro - warmup)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn last_stage_strictly_alternates() {
+        let items = stage_items(3, 4, 5);
+        assert_eq!(
+            items,
+            vec![
+                WorkItem::Fwd(0),
+                WorkItem::Bwd(0),
+                WorkItem::Fwd(1),
+                WorkItem::Bwd(1),
+                WorkItem::Fwd(2),
+                WorkItem::Bwd(2),
+                WorkItem::Fwd(3),
+                WorkItem::Bwd(3),
+                WorkItem::Fwd(4),
+                WorkItem::Bwd(4),
+            ]
+        );
+    }
+
+    #[test]
+    fn first_stage_has_full_warmup() {
+        let items = stage_items(0, 4, 5);
+        assert_eq!(&items[..3], &[WorkItem::Fwd(0), WorkItem::Fwd(1), WorkItem::Fwd(2)]);
+        // Cool-down is the last `warmup` backwards.
+        assert_eq!(&items[items.len() - 3..], &[
+            WorkItem::Bwd(2),
+            WorkItem::Bwd(3),
+            WorkItem::Bwd(4)
+        ]);
+    }
+
+    #[test]
+    fn every_microbatch_appears_once_each_direction() {
+        for stage in 0..4 {
+            for m_count in [1usize, 2, 5, 8] {
+                let items = stage_items(stage, 4, m_count);
+                assert_eq!(items.len(), 2 * m_count);
+                for m in 0..m_count {
+                    assert_eq!(items.iter().filter(|i| **i == WorkItem::Fwd(m)).count(), 1);
+                    assert_eq!(items.iter().filter(|i| **i == WorkItem::Bwd(m)).count(), 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fwd_precedes_bwd_per_microbatch() {
+        for stage in 0..8 {
+            let items = stage_items(stage, 8, 12);
+            for m in 0..12 {
+                let f = items.iter().position(|i| *i == WorkItem::Fwd(m)).unwrap();
+                let b = items.iter().position(|i| *i == WorkItem::Bwd(m)).unwrap();
+                assert!(f < b);
+            }
+        }
+    }
+
+    #[test]
+    fn inflight_bound_matches_memory_model() {
+        // Max in-flight forwards (F done, B pending) must equal
+        // min(num_stages - stage, num_micro).
+        for stage in 0..4 {
+            let items = stage_items(stage, 4, 8);
+            let mut live: i64 = 0;
+            let mut peak: i64 = 0;
+            for it in items {
+                match it {
+                    WorkItem::Fwd(_) => {
+                        live += 1;
+                        peak = peak.max(live);
+                    }
+                    WorkItem::Bwd(_) => live -= 1,
+                }
+            }
+            assert_eq!(peak as usize, (4 - stage).min(8));
+        }
+    }
+
+    #[test]
+    fn cooldown_start_index() {
+        // stage 0 of 4, 8 microbatches: warmup 3, steady 10, cooldown at 13.
+        assert_eq!(cooldown_start(0, 4, 8), 13);
+        // last stage: no warmup, no cooldown (index = end).
+        assert_eq!(cooldown_start(3, 4, 8), 16);
+    }
+}

@@ -1,0 +1,21 @@
+//! Linear and mixed-integer programming substrate.
+//!
+//! The paper solves its scheduling formulations with Gurobi (§4, §7.6).
+//! Gurobi is unavailable here, so this module implements the solver stack
+//! from scratch:
+//!
+//! * [`linprog`] — dense two-phase primal simplex with Dantzig pricing and
+//!   a Bland's-rule anti-cycling fallback;
+//! * [`model`] — a small modelling layer (variables, bounds, linear
+//!   constraints, objective) that lowers to standard form;
+//! * [`bnb`] — depth-first branch-and-bound over binary variables with an
+//!   incumbent, LP-relaxation pruning, and a wall-clock budget (Gurobi's
+//!   time-limited behaviour, which the paper relies on for OPT).
+
+pub mod bnb;
+pub mod linprog;
+pub mod model;
+
+pub use bnb::{solve_milp, MilpOptions, MilpResult, MilpStatus};
+pub use linprog::{solve_lp, Cmp, LpProblem, LpSolution, LpStatus};
+pub use model::{Expr, Model, Var};

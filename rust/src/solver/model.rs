@@ -1,0 +1,232 @@
+//! Modelling layer: named variables with bounds and integrality, linear
+//! constraints, and lowering to the standard-form LP of [`super::linprog`].
+
+use super::linprog::{Cmp, LpProblem};
+
+/// Handle to a model variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Var(pub usize);
+
+/// A linear expression: sum of (var, coeff) plus a constant.
+#[derive(Debug, Clone, Default)]
+pub struct Expr {
+    pub terms: Vec<(Var, f64)>,
+    pub constant: f64,
+}
+
+impl Expr {
+    pub fn new() -> Expr {
+        Expr::default()
+    }
+
+    pub fn term(mut self, v: Var, c: f64) -> Expr {
+        self.add_term(v, c);
+        self
+    }
+
+    pub fn add_term(&mut self, v: Var, c: f64) {
+        if c != 0.0 {
+            self.terms.push((v, c));
+        }
+    }
+
+    pub fn plus(mut self, c: f64) -> Expr {
+        self.constant += c;
+        self
+    }
+
+    pub fn of(v: Var) -> Expr {
+        Expr::new().term(v, 1.0)
+    }
+
+    /// Merge duplicate variable terms.
+    fn canonical(&self) -> Vec<(usize, f64)> {
+        let mut acc: std::collections::BTreeMap<usize, f64> = Default::default();
+        for &(Var(i), c) in &self.terms {
+            *acc.entry(i).or_insert(0.0) += c;
+        }
+        acc.into_iter().filter(|&(_, c)| c != 0.0).collect()
+    }
+}
+
+#[derive(Debug, Clone)]
+struct VarDef {
+    name: String,
+    lo: f64,
+    hi: f64,
+    integer: bool,
+}
+
+/// A linear optimization model (minimization).
+#[derive(Debug, Clone, Default)]
+pub struct Model {
+    vars: Vec<VarDef>,
+    constraints: Vec<(Expr, Cmp, f64)>,
+    objective: Expr,
+}
+
+impl Model {
+    pub fn new() -> Model {
+        Model::default()
+    }
+
+    /// Binary 0/1 variable.
+    pub fn binary(&mut self, name: impl Into<String>) -> Var {
+        self.vars.push(VarDef { name: name.into(), lo: 0.0, hi: 1.0, integer: true });
+        Var(self.vars.len() - 1)
+    }
+
+    /// Continuous variable in [lo, hi] (hi may be f64::INFINITY).
+    pub fn cont(&mut self, name: impl Into<String>, lo: f64, hi: f64) -> Var {
+        assert!(lo >= 0.0, "model vars are nonnegative; shift before adding");
+        self.vars.push(VarDef { name: name.into(), lo, hi, integer: false });
+        Var(self.vars.len() - 1)
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    pub fn num_constraints(&self) -> usize {
+        self.constraints.len()
+    }
+
+    pub fn var_name(&self, v: Var) -> &str {
+        &self.vars[v.0].name
+    }
+
+    pub fn integer_vars(&self) -> Vec<Var> {
+        (0..self.vars.len()).filter(|&i| self.vars[i].integer).map(Var).collect()
+    }
+
+    pub fn add_le(&mut self, e: Expr, rhs: f64) {
+        self.constraints.push((e, Cmp::Le, rhs));
+    }
+
+    pub fn add_ge(&mut self, e: Expr, rhs: f64) {
+        self.constraints.push((e, Cmp::Ge, rhs));
+    }
+
+    pub fn add_eq(&mut self, e: Expr, rhs: f64) {
+        self.constraints.push((e, Cmp::Eq, rhs));
+    }
+
+    /// Fix a variable to a value (equality constraint shortcut).
+    pub fn fix(&mut self, v: Var, val: f64) {
+        self.add_eq(Expr::of(v), val);
+    }
+
+    pub fn minimize(&mut self, e: Expr) {
+        self.objective = e;
+    }
+
+    /// Lower to a standard-form LP with integrality relaxed.
+    /// `fixings` pins extra variables (used by branch-and-bound).
+    pub fn to_lp(&self, fixings: &[(Var, f64)]) -> LpProblem {
+        let n = self.vars.len();
+        let mut c = vec![0.0; n];
+        for (i, co) in self.objective.canonical() {
+            c[i] = co;
+        }
+        let mut rows: Vec<(Vec<(usize, f64)>, Cmp, f64)> = Vec::new();
+        for (e, cmp, rhs) in &self.constraints {
+            rows.push((e.canonical(), *cmp, rhs - e.constant));
+        }
+        // Variable bounds as rows (lo > 0 or finite hi).
+        for (i, v) in self.vars.iter().enumerate() {
+            if v.lo > 0.0 {
+                rows.push((vec![(i, 1.0)], Cmp::Ge, v.lo));
+            }
+            if v.hi.is_finite() {
+                rows.push((vec![(i, 1.0)], Cmp::Le, v.hi));
+            }
+        }
+        for &(Var(i), val) in fixings {
+            rows.push((vec![(i, 1.0)], Cmp::Eq, val));
+        }
+        LpProblem { n, c, rows }
+    }
+
+    /// Objective value of an assignment (plus the expression constant).
+    pub fn eval_objective(&self, x: &[f64]) -> f64 {
+        self.objective.canonical().iter().map(|&(i, c)| c * x[i]).sum::<f64>()
+            + self.objective.constant
+    }
+
+    /// Check an assignment against all constraints and bounds.
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        for (e, cmp, rhs) in &self.constraints {
+            let lhs: f64 =
+                e.canonical().iter().map(|&(i, c)| c * x[i]).sum::<f64>() + e.constant;
+            let ok = match cmp {
+                Cmp::Le => lhs <= rhs + tol,
+                Cmp::Ge => lhs >= rhs - tol,
+                Cmp::Eq => (lhs - rhs).abs() <= tol,
+            };
+            if !ok {
+                return false;
+            }
+        }
+        self.vars
+            .iter()
+            .zip(x)
+            .all(|(v, &xi)| xi >= v.lo - tol && xi <= v.hi + tol)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::linprog::{solve_lp, LpStatus};
+
+    #[test]
+    fn build_and_lower() {
+        let mut m = Model::new();
+        let x = m.cont("x", 0.0, 10.0);
+        let y = m.binary("y");
+        m.add_le(Expr::new().term(x, 1.0).term(y, 5.0), 8.0);
+        m.minimize(Expr::new().term(x, -1.0).term(y, -10.0));
+        let lp = m.to_lp(&[]);
+        assert_eq!(lp.n, 2);
+        let s = solve_lp(&lp);
+        assert_eq!(s.status, LpStatus::Optimal);
+        // Relaxation: y=1, x=3 -> obj -13.
+        assert!((s.obj + 13.0).abs() < 1e-6, "obj {}", s.obj);
+    }
+
+    #[test]
+    fn fixings_pin_variables() {
+        let mut m = Model::new();
+        let x = m.binary("x");
+        m.minimize(Expr::new().term(x, 1.0));
+        let s = solve_lp(&m.to_lp(&[(x, 1.0)]));
+        assert!((s.x[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn duplicate_terms_merge() {
+        let e = Expr::new().term(Var(0), 1.0).term(Var(0), 2.0);
+        assert_eq!(e.canonical(), vec![(0, 3.0)]);
+    }
+
+    #[test]
+    fn feasibility_checker() {
+        let mut m = Model::new();
+        let x = m.cont("x", 0.0, 5.0);
+        m.add_ge(Expr::of(x), 2.0);
+        assert!(m.is_feasible(&[3.0], 1e-9));
+        assert!(!m.is_feasible(&[1.0], 1e-9));
+        assert!(!m.is_feasible(&[6.0], 1e-9));
+    }
+
+    #[test]
+    fn expr_constant_moves_to_rhs() {
+        let mut m = Model::new();
+        let x = m.cont("x", 0.0, f64::INFINITY);
+        // x + 3 <= 5  ->  x <= 2
+        m.add_le(Expr::of(x).plus(3.0), 5.0);
+        m.minimize(Expr::new().term(x, -1.0));
+        let s = solve_lp(&m.to_lp(&[]));
+        assert!((s.x[0] - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,95 @@
+//! Trainer configuration.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Recomputation policy for the real trainer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainPolicy {
+    /// Keep every layer's stash from forward to backward (no
+    /// recomputation; maximal memory).
+    StoreAll,
+    /// Drop every stash and recompute on demand when backward starts —
+    /// Megatron full recomputation (recompute in the critical path).
+    OnDemand,
+    /// Drop every stash and recompute inside communication windows and
+    /// pipeline stalls — the Lynx schedule. Falls back to on-demand for
+    /// whatever could not be hidden, exactly like the paper's Phase 5.
+    Lynx,
+}
+
+impl TrainPolicy {
+    pub fn parse(s: &str) -> Option<TrainPolicy> {
+        Some(match s {
+            "store-all" | "store_all" => TrainPolicy::StoreAll,
+            "on-demand" | "full" | "megatron" => TrainPolicy::OnDemand,
+            "lynx" => TrainPolicy::Lynx,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TrainPolicy::StoreAll => "store-all",
+            TrainPolicy::OnDemand => "on-demand",
+            TrainPolicy::Lynx => "lynx",
+        }
+    }
+
+    pub fn evicts(&self) -> bool {
+        !matches!(self, TrainPolicy::StoreAll)
+    }
+}
+
+/// End-to-end trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Artifact directory (output of `make artifacts`).
+    pub artifacts: PathBuf,
+    /// Pipeline stages (threads). Must divide into the model's layers.
+    pub stages: usize,
+    /// Microbatches per optimizer step.
+    pub num_micro: usize,
+    /// Optimizer steps to run.
+    pub steps: usize,
+    /// Base Adam learning rate.
+    pub lr: f32,
+    pub policy: TrainPolicy,
+    /// Emulated stage-to-stage transfer time (the communication window
+    /// recomputation overlaps into). Zero disables emulation.
+    pub comm_delay: Duration,
+    pub seed: u64,
+    /// Print loss every N steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifacts: PathBuf::from("artifacts"),
+            stages: 2,
+            num_micro: 4,
+            steps: 20,
+            lr: 1e-3,
+            policy: TrainPolicy::Lynx,
+            comm_delay: Duration::from_millis(2),
+            seed: 42,
+            log_every: 5,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(TrainPolicy::parse("lynx"), Some(TrainPolicy::Lynx));
+        assert_eq!(TrainPolicy::parse("megatron"), Some(TrainPolicy::OnDemand));
+        assert_eq!(TrainPolicy::parse("store-all"), Some(TrainPolicy::StoreAll));
+        assert_eq!(TrainPolicy::parse("bogus"), None);
+        assert!(TrainPolicy::Lynx.evicts());
+        assert!(!TrainPolicy::StoreAll.evicts());
+    }
+}

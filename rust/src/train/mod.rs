@@ -1,0 +1,27 @@
+//! The real pipeline trainer: 1F1B over OS threads driving PJRT
+//! executables, with **Rust-owned activation stashes**.
+//!
+//! This is the paper's mechanism made concrete (DESIGN.md §4.5): the
+//! coordinator decides, per layer per microbatch, whether the stash of
+//! internal activations is kept from forward to backward, recomputed
+//! inside a communication/stall window, or recomputed on demand in the
+//! backward critical path. The JAX layer exports `layer_fwd_full`
+//! (returns y + stash), `layer_fwd_light` (y only), `layer_recompute`
+//! (x → stash, runnable at any time — paper Observation 3/Fig. 3) and
+//! `layer_bwd` (x, stash, dy → dx, dp).
+//!
+//! * [`config`] — trainer configuration and recompute policies;
+//! * [`data`] — synthetic Zipf+Markov corpus (WikiText-2 substitute);
+//! * [`params`] — flat parameter/optimizer state with layout-aware init;
+//! * [`stage`] — per-stage worker: schedule execution, stash management,
+//!   overlap-aware communication windows;
+//! * [`trainer`] — thread spawning, loss collection, reporting.
+
+pub mod config;
+pub mod data;
+pub mod params;
+pub mod stage;
+pub mod trainer;
+
+pub use config::{TrainConfig, TrainPolicy};
+pub use trainer::{train, TrainReport};

@@ -1,0 +1,126 @@
+//! Flat parameter vectors with Adam state and layout-aware init.
+
+use crate::util::prng::Pcg32;
+
+/// One flat parameter vector plus Adam moments.
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub data: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Gradient accumulator (summed over microbatches).
+    pub grad: Vec<f32>,
+}
+
+impl ParamSet {
+    /// Initialise from a (name, shape) layout: LayerNorm gains start at
+    /// 1, biases at 0, weights at N(0, 0.02²) — GPT-2 style.
+    pub fn init(layout: &[(String, Vec<usize>)], rng: &mut Pcg32) -> ParamSet {
+        let total: usize = layout.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        let mut data = Vec::with_capacity(total);
+        for (name, shape) in layout {
+            let n: usize = shape.iter().product();
+            if name.starts_with("ln") && name.ends_with("_g") {
+                data.extend(std::iter::repeat(1.0f32).take(n));
+            } else if name.starts_with('b') || name.ends_with("_b") {
+                data.extend(std::iter::repeat(0.0f32).take(n));
+            } else {
+                data.extend((0..n).map(|_| 0.02 * rng.normal() as f32));
+            }
+        }
+        debug_assert_eq!(data.len(), total);
+        ParamSet {
+            m: vec![0.0; total],
+            v: vec![0.0; total],
+            grad: vec![0.0; total],
+            data,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Add a microbatch gradient into the accumulator.
+    pub fn accumulate(&mut self, dp: &[f32]) {
+        debug_assert_eq!(dp.len(), self.grad.len());
+        for (g, &d) in self.grad.iter_mut().zip(dp) {
+            *g += d;
+        }
+    }
+
+    /// Scale the accumulated gradient (1/num_micro averaging) and return
+    /// it, clearing the accumulator.
+    pub fn take_grad(&mut self, scale: f32) -> Vec<f32> {
+        let mut out = std::mem::replace(&mut self.grad, vec![0.0; self.data.len()]);
+        for g in &mut out {
+            *g *= scale;
+        }
+        out
+    }
+}
+
+/// Bias-corrected Adam learning rate for step `t` (1-based), keeping the
+/// step counter on the Rust side (see `compile/model.py::adam_step`).
+pub fn adam_lr_t(lr: f32, t: usize, b1: f64, b2: f64) -> f32 {
+    let t = t as f64;
+    (lr as f64 * (1.0 - b2.powf(t)).sqrt() / (1.0 - b1.powf(t))) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("ln1_g".into(), vec![4]),
+            ("ln1_b".into(), vec![4]),
+            ("wqkv".into(), vec![4, 12]),
+            ("bqkv".into(), vec![12]),
+        ]
+    }
+
+    #[test]
+    fn init_respects_layout_rules() {
+        let mut rng = Pcg32::seeded(0);
+        let p = ParamSet::init(&layout(), &mut rng);
+        assert_eq!(p.len(), 4 + 4 + 48 + 12);
+        assert_eq!(&p.data[0..4], &[1.0; 4]); // ln gain
+        assert_eq!(&p.data[4..8], &[0.0; 4]); // ln bias
+        assert!(p.data[8..56].iter().any(|&x| x != 0.0)); // weights random
+        assert_eq!(&p.data[56..68], &[0.0; 12]); // bias
+        let std = {
+            let w = &p.data[8..56];
+            let mean: f32 = w.iter().sum::<f32>() / 48.0;
+            (w.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 48.0).sqrt()
+        };
+        assert!((0.005..0.05).contains(&std), "weight std {std}");
+    }
+
+    #[test]
+    fn grad_accumulate_and_take() {
+        let mut rng = Pcg32::seeded(1);
+        let mut p = ParamSet::init(&layout(), &mut rng);
+        let ones = vec![1.0f32; p.len()];
+        p.accumulate(&ones);
+        p.accumulate(&ones);
+        let g = p.take_grad(0.5);
+        assert!(g.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+        assert!(p.grad.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn adam_lr_bias_correction_converges_to_lr() {
+        // lr_t = lr·sqrt(1-b2^t)/(1-b1^t): ~0.316·lr at t=1, -> lr as
+        // t -> inf (this matches applying bias correction to m and v).
+        let l1 = adam_lr_t(1e-3, 1, 0.9, 0.999);
+        let l100 = adam_lr_t(1e-3, 100, 0.9, 0.999);
+        let l100k = adam_lr_t(1e-3, 100_000, 0.9, 0.999);
+        assert!((l1 - 3.162e-4).abs() < 1e-6, "l1 {l1}");
+        assert!(l100 < l100k && (l100k - 1e-3).abs() < 1e-6, "{l100} {l100k}");
+    }
+}

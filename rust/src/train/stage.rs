@@ -1,0 +1,491 @@
+//! Per-stage pipeline worker.
+//!
+//! Each stage runs the 1F1B schedule from `sim::schedule` against real
+//! PJRT executables. The recomputation mechanism mirrors the paper:
+//!
+//! * **StoreAll** — `layer_fwd_full`, stash kept until backward.
+//! * **OnDemand** — `layer_fwd_light`; `layer_recompute` runs inside the
+//!   backward item, serialised in the critical path (Megatron full).
+//! * **Lynx** — `layer_fwd_light`; `layer_recompute` runs inside the
+//!   emulated communication window after each forward send and inside
+//!   the stall while waiting for the next gradient (paper Opt 1–3 /
+//!   Observation 3); whatever is still missing when backward starts is
+//!   recomputed on demand (Phase 5).
+
+use super::config::{TrainConfig, TrainPolicy};
+use super::data::Corpus;
+use super::params::{adam_lr_t, ParamSet};
+use crate::runtime::literal::{lit_f32, lit_i32};
+use crate::runtime::Engine;
+use crate::sim::schedule::{stage_items, WorkItem};
+use crate::util::prng::Pcg32;
+use anyhow::{anyhow, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::time::Instant;
+use xla::Literal;
+
+/// Activation message between stages.
+pub struct ActMsg {
+    pub micro: usize,
+    pub data: Vec<f32>,
+}
+
+/// Per-stage timing/memory counters for one training run.
+#[derive(Debug, Clone, Default)]
+pub struct StageStats {
+    pub fwd_secs: f64,
+    pub bwd_secs: f64,
+    /// Recompute executed inside comm windows or stalls (hidden).
+    pub recompute_overlapped_secs: f64,
+    /// Recompute executed in the backward critical path (exposed).
+    pub recompute_exposed_secs: f64,
+    pub wait_secs: f64,
+    pub comm_secs: f64,
+    pub opt_secs: f64,
+    /// Peak live stash bytes observed.
+    pub peak_stash_bytes: usize,
+    /// Stash tensors obtained per path (Fig. 8's three paths).
+    pub stash_kept: usize,
+    pub stash_overlapped: usize,
+    pub stash_on_demand: usize,
+}
+
+/// Wiring of one stage thread.
+pub struct StageWiring {
+    pub stage: usize,
+    pub num_stages: usize,
+    /// Layer indices [lo, hi) owned by this stage.
+    pub layer_range: (usize, usize),
+    pub fwd_in: Option<Receiver<ActMsg>>,
+    pub fwd_out: Option<Sender<ActMsg>>,
+    pub bwd_in: Option<Receiver<ActMsg>>,
+    pub bwd_out: Option<Sender<ActMsg>>,
+    /// Per-step loss sink (last stage only).
+    pub loss_out: Option<Sender<(usize, f64)>>,
+}
+
+struct StashStore {
+    /// (micro, local_layer) -> stash literals.
+    map: HashMap<(usize, usize), Vec<Literal>>,
+    bytes_per_stash: usize,
+    live_bytes: usize,
+    peak_bytes: usize,
+}
+
+impl StashStore {
+    fn new(bytes_per_stash: usize) -> Self {
+        StashStore { map: HashMap::new(), bytes_per_stash, live_bytes: 0, peak_bytes: 0 }
+    }
+
+    fn insert(&mut self, key: (usize, usize), stash: Vec<Literal>) {
+        if self.map.insert(key, stash).is_none() {
+            self.live_bytes += self.bytes_per_stash;
+            self.peak_bytes = self.peak_bytes.max(self.live_bytes);
+        }
+    }
+
+    fn take(&mut self, key: &(usize, usize)) -> Option<Vec<Literal>> {
+        let out = self.map.remove(key);
+        if out.is_some() {
+            self.live_bytes -= self.bytes_per_stash;
+        }
+        out
+    }
+}
+
+/// Run one stage for the whole training run. Returns final stats and (for
+/// the last stage) nothing extra — losses flow through `loss_out`.
+pub fn run_stage(cfg: &TrainConfig, wiring: StageWiring) -> Result<StageStats> {
+    let is_first = wiring.stage == 0;
+    let is_last = wiring.stage + 1 == wiring.num_stages;
+    let mut entries = vec![
+        "layer_fwd_full",
+        "layer_fwd_light",
+        "layer_recompute",
+        "layer_bwd",
+        "adam_layer",
+    ];
+    if is_first {
+        entries.extend(["embed_fwd", "embed_bwd", "adam_embed"]);
+    }
+    if is_last {
+        entries.extend(["head_bwd", "adam_head"]);
+    }
+    let eng = Engine::load_subset(&cfg.artifacts, &entries)?;
+    let dims = eng.manifest.dims.clone();
+    let (b, s, h) = (dims.micro_batch, dims.seq, dims.hidden);
+    let act_dims = [b, s, h];
+    let _act_len = b * s * h;
+    let stash_bytes: usize = eng
+        .manifest
+        .stash
+        .iter()
+        .map(|(_, shape)| 4 * shape.iter().product::<usize>())
+        .sum();
+
+    // ---- parameters ----
+    let mut rng = Pcg32::new(cfg.seed, wiring.stage as u64 + 100);
+    let (lo, hi) = wiring.layer_range;
+    let mut layers: Vec<ParamSet> = (lo..hi)
+        .map(|_| ParamSet::init(&eng.manifest.layer_layout, &mut rng))
+        .collect();
+    let mut embed =
+        is_first.then(|| ParamSet::init(&eng.manifest.embed_layout, &mut rng));
+    let mut head = is_last.then(|| ParamSet::init(&eng.manifest.head_layout, &mut rng));
+
+    let corpus = Corpus::new(dims.vocab, cfg.seed);
+    let mut stats = StageStats::default();
+    let mut stash = StashStore::new(stash_bytes);
+
+    // Layer inputs (boundary checkpoints) per (micro, local layer), plus
+    // the head input for the last stage.
+    let mut inputs: HashMap<(usize, usize), Vec<f32>> = HashMap::new();
+    let mut head_inputs: HashMap<usize, Vec<f32>> = HashMap::new();
+
+    // Pending recompute tasks in backward consumption order.
+    let mut pending: VecDeque<(usize, usize)> = VecDeque::new();
+
+    let n_local = hi - lo;
+    let items = stage_items(wiring.stage, wiring.num_stages, cfg.num_micro);
+
+    // Prefetch bound (paper Opt 1's M_delta reservation): at most one
+    // microbatch's worth of recomputed stashes may be resident ahead of
+    // their backward — Lynx keeps near-on-demand memory, not store-all.
+    let prefetch_cap_bytes = (n_local + 1) * stash_bytes;
+
+    // Helper: run one pending recompute task (Lynx overlap path).
+    // Returns the seconds spent, or None when the queue is empty.
+    let mut do_one_recompute = |pending: &mut VecDeque<(usize, usize)>,
+                                stash: &mut StashStore,
+                                inputs: &HashMap<(usize, usize), Vec<f32>>,
+                                layers: &[ParamSet]|
+     -> Result<Option<f64>> {
+        if stash.live_bytes + stash_bytes > prefetch_cap_bytes {
+            return Ok(None);
+        }
+        let Some(key) = pending.pop_front() else {
+            return Ok(None);
+        };
+        let t0 = Instant::now();
+        let (micro, l) = key;
+        let x = &inputs[&(micro, l)];
+        let p_lit = lit_f32(&layers[l].data, &[layers[l].len()])?;
+        let x_lit = lit_f32(x, &act_dims)?;
+        let st = eng.call("layer_recompute", &[p_lit, x_lit])?;
+        stash.insert(key, st);
+        Ok(Some(t0.elapsed().as_secs_f64()))
+    };
+
+    for step in 0..cfg.steps {
+        for item in &items {
+            match *item {
+                WorkItem::Fwd(micro) => {
+                    // ---- obtain the stage input ----
+                    let mut act: Vec<f32> = if is_first {
+                        let toks = corpus.batch(step, micro, b, s);
+                        let (inp, _tgt) = Corpus::split(&toks, b, s);
+                        let e = embed.as_ref().unwrap();
+                        let e_lit = lit_f32(&e.data, &[e.len()])?;
+                        let t_lit = lit_i32(&inp, &[b, s])?;
+                        let out = eng.call("embed_fwd", &[e_lit, t_lit])?;
+                        out[0].to_vec::<f32>()?
+                    } else {
+                        let rx = wiring.fwd_in.as_ref().unwrap();
+                        recv_with_overlap(
+                            rx,
+                            cfg.policy,
+                            &mut pending,
+                            &mut stash,
+                            &inputs,
+                            &layers,
+                            &mut stats,
+                            &mut do_one_recompute,
+                        )?
+                        .data
+                    };
+
+                    // ---- forward through local layers ----
+                    let t0 = Instant::now();
+                    for l in 0..n_local {
+                        inputs.insert((micro, l), act.clone());
+                        let p_lit = lit_f32(&layers[l].data, &[layers[l].len()])?;
+                        let x_lit = lit_f32(&act, &act_dims)?;
+                        if cfg.policy.evicts() {
+                            let out = eng.call("layer_fwd_light", &[p_lit, x_lit])?;
+                            act = out[0].to_vec::<f32>()?;
+                        } else {
+                            let mut out = eng.call("layer_fwd_full", &[p_lit, x_lit])?;
+                            act = out[0].to_vec::<f32>()?;
+                            out.remove(0);
+                            stash.insert((micro, l), out);
+                            stats.stash_kept += 1;
+                        }
+                    }
+                    stats.fwd_secs += t0.elapsed().as_secs_f64();
+                    if cfg.policy.evicts() {
+                        // Backward consumes local layers in reverse order.
+                        for l in (0..n_local).rev() {
+                            pending.push_back((micro, l));
+                        }
+                    }
+
+                    // ---- ship the output (comm window) ----
+                    if is_last {
+                        head_inputs.insert(micro, act);
+                    } else {
+                        let msg = ActMsg { micro, data: act };
+                        send_with_window(
+                            &eng,
+                            wiring.fwd_out.as_ref().unwrap(),
+                            msg,
+                            cfg,
+                            &mut pending,
+                            &mut stash,
+                            &inputs,
+                            &layers,
+                            &mut stats,
+                            &mut do_one_recompute,
+                        )?;
+                    }
+                }
+                WorkItem::Bwd(micro) => {
+                    // ---- obtain dy ----
+                    let (mut dy, step_loss): (Vec<f32>, Option<f64>) = if is_last {
+                        let x = head_inputs.remove(&micro).unwrap();
+                        let toks = corpus.batch(step, micro, b, s);
+                        let (_inp, tgt) = Corpus::split(&toks, b, s);
+                        let hp = head.as_ref().unwrap();
+                        let t0 = Instant::now();
+                        let out = eng.call(
+                            "head_bwd",
+                            &[
+                                lit_f32(&hp.data, &[hp.len()])?,
+                                lit_f32(&x, &act_dims)?,
+                                lit_i32(&tgt, &[b, s])?,
+                            ],
+                        )?;
+                        stats.bwd_secs += t0.elapsed().as_secs_f64();
+                        let dx = out[0].to_vec::<f32>()?;
+                        let dh = out[1].to_vec::<f32>()?;
+                        let loss = out[2].get_first_element::<f32>()? as f64;
+                        head.as_mut().unwrap().accumulate(&dh);
+                        (dx, Some(loss))
+                    } else {
+                        let rx = wiring.bwd_in.as_ref().unwrap();
+                        let msg = recv_with_overlap(
+                            rx,
+                            cfg.policy,
+                            &mut pending,
+                            &mut stash,
+                            &inputs,
+                            &layers,
+                            &mut stats,
+                            &mut do_one_recompute,
+                        )?;
+                        (msg.data, None)
+                    };
+                    if let (Some(loss), Some(tx)) = (step_loss, wiring.loss_out.as_ref()) {
+                        let _ = tx.send((step, loss));
+                    }
+
+                    // ---- backward through local layers ----
+                    for l in (0..n_local).rev() {
+                        let key = (micro, l);
+                        let st = match stash.take(&key) {
+                            Some(st) => {
+                                if cfg.policy == TrainPolicy::StoreAll {
+                                    stats.stash_kept += 0; // counted at fwd
+                                } else {
+                                    stats.stash_overlapped += 1;
+                                }
+                                st
+                            }
+                            None => {
+                                // Phase-5 on-demand recompute in the
+                                // critical path.
+                                pending.retain(|k| *k != key);
+                                let t0 = Instant::now();
+                                let x = &inputs[&key];
+                                let p_lit =
+                                    lit_f32(&layers[l].data, &[layers[l].len()])?;
+                                let x_lit = lit_f32(x, &act_dims)?;
+                                let st = eng.call("layer_recompute", &[p_lit, x_lit])?;
+                                stats.recompute_exposed_secs +=
+                                    t0.elapsed().as_secs_f64();
+                                stats.stash_on_demand += 1;
+                                st
+                            }
+                        };
+                        let x = inputs.remove(&key).unwrap();
+                        let t0 = Instant::now();
+                        let mut args = Vec::with_capacity(3 + st.len());
+                        args.push(lit_f32(&layers[l].data, &[layers[l].len()])?);
+                        args.push(lit_f32(&x, &act_dims)?);
+                        args.extend(st);
+                        args.push(lit_f32(&dy, &act_dims)?);
+                        let out = eng.call("layer_bwd", &args)?;
+                        stats.bwd_secs += t0.elapsed().as_secs_f64();
+                        dy = out[0].to_vec::<f32>()?;
+                        let dp = out[1].to_vec::<f32>()?;
+                        layers[l].accumulate(&dp);
+                    }
+
+                    // ---- ship dx or fold into the embedding ----
+                    if is_first {
+                        let toks = corpus.batch(step, micro, b, s);
+                        let (inp, _tgt) = Corpus::split(&toks, b, s);
+                        let t0 = Instant::now();
+                        let out = eng.call(
+                            "embed_bwd",
+                            &[lit_i32(&inp, &[b, s])?, lit_f32(&dy, &act_dims)?],
+                        )?;
+                        stats.bwd_secs += t0.elapsed().as_secs_f64();
+                        let de = out[0].to_vec::<f32>()?;
+                        embed.as_mut().unwrap().accumulate(&de);
+                    } else {
+                        let msg = ActMsg { micro, data: dy };
+                        send_with_window(
+                            &eng,
+                            wiring.bwd_out.as_ref().unwrap(),
+                            msg,
+                            cfg,
+                            &mut pending,
+                            &mut stash,
+                            &inputs,
+                            &layers,
+                            &mut stats,
+                            &mut do_one_recompute,
+                        )?;
+                    }
+                }
+            }
+        }
+
+        // ---- optimizer step ----
+        let t0 = Instant::now();
+        let lr_t = adam_lr_t(cfg.lr, step + 1, 0.9, 0.999);
+        let scale = 1.0 / cfg.num_micro as f32;
+        for p in layers.iter_mut() {
+            apply_adam(&eng, "adam_layer", p, scale, lr_t)?;
+        }
+        if let Some(e) = embed.as_mut() {
+            apply_adam(&eng, "adam_embed", e, scale, lr_t)?;
+        }
+        if let Some(hd) = head.as_mut() {
+            apply_adam(&eng, "adam_head", hd, scale, lr_t)?;
+        }
+        stats.opt_secs += t0.elapsed().as_secs_f64();
+        pending.clear();
+    }
+
+    stats.peak_stash_bytes = stash.peak_bytes;
+    Ok(stats)
+}
+
+/// Blocking receive that, in Lynx mode, spends the wait on pending
+/// recomputation (paper Opt 3: stalls absorb recompute).
+#[allow(clippy::too_many_arguments)]
+fn recv_with_overlap(
+    rx: &Receiver<ActMsg>,
+    policy: TrainPolicy,
+    pending: &mut VecDeque<(usize, usize)>,
+    stash: &mut StashStore,
+    inputs: &HashMap<(usize, usize), Vec<f32>>,
+    layers: &[ParamSet],
+    stats: &mut StageStats,
+    do_one: &mut impl FnMut(
+        &mut VecDeque<(usize, usize)>,
+        &mut StashStore,
+        &HashMap<(usize, usize), Vec<f32>>,
+        &[ParamSet],
+    ) -> Result<Option<f64>>,
+) -> Result<ActMsg> {
+    if policy != TrainPolicy::Lynx {
+        let t0 = Instant::now();
+        let msg = rx.recv().map_err(|_| anyhow!("pipeline peer hung up"))?;
+        stats.wait_secs += t0.elapsed().as_secs_f64();
+        return Ok(msg);
+    }
+    loop {
+        match rx.try_recv() {
+            Ok(msg) => return Ok(msg),
+            Err(TryRecvError::Disconnected) => return Err(anyhow!("pipeline peer hung up")),
+            Err(TryRecvError::Empty) => {
+                match do_one(pending, stash, inputs, layers)? {
+                    Some(secs) => stats.recompute_overlapped_secs += secs,
+                    None => {
+                        // Nothing left to hide: block for real.
+                        let t0 = Instant::now();
+                        let msg =
+                            rx.recv().map_err(|_| anyhow!("pipeline peer hung up"))?;
+                        stats.wait_secs += t0.elapsed().as_secs_f64();
+                        return Ok(msg);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Send with an emulated transfer window; Lynx fills the window with
+/// recomputation (the paper's core mechanism — recompute inside comm).
+#[allow(clippy::too_many_arguments)]
+fn send_with_window(
+    _eng: &Engine,
+    tx: &Sender<ActMsg>,
+    msg: ActMsg,
+    cfg: &TrainConfig,
+    pending: &mut VecDeque<(usize, usize)>,
+    stash: &mut StashStore,
+    inputs: &HashMap<(usize, usize), Vec<f32>>,
+    layers: &[ParamSet],
+    stats: &mut StageStats,
+    do_one: &mut impl FnMut(
+        &mut VecDeque<(usize, usize)>,
+        &mut StashStore,
+        &HashMap<(usize, usize), Vec<f32>>,
+        &[ParamSet],
+    ) -> Result<Option<f64>>,
+) -> Result<()> {
+    let deadline = Instant::now() + cfg.comm_delay;
+    if cfg.policy == TrainPolicy::Lynx {
+        // Fill the window with recompute work.
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match do_one(pending, stash, inputs, layers)? {
+                Some(secs) => stats.recompute_overlapped_secs += secs,
+                None => break,
+            }
+        }
+    }
+    let now = Instant::now();
+    if now < deadline {
+        std::thread::sleep(deadline - now);
+        stats.comm_secs += (deadline - now).as_secs_f64();
+    }
+    tx.send(msg).map_err(|_| anyhow!("pipeline peer hung up"))?;
+    Ok(())
+}
+
+fn apply_adam(eng: &Engine, entry: &str, p: &mut ParamSet, scale: f32, lr_t: f32) -> Result<()> {
+    let n = p.len();
+    let grad = p.take_grad(scale);
+    let out = eng.call(
+        entry,
+        &[
+            lit_f32(&p.data, &[n])?,
+            lit_f32(&grad, &[n])?,
+            lit_f32(&p.m, &[n])?,
+            lit_f32(&p.v, &[n])?,
+            Literal::scalar(lr_t),
+        ],
+    )?;
+    p.data = out[0].to_vec::<f32>()?;
+    p.m = out[1].to_vec::<f32>()?;
+    p.v = out[2].to_vec::<f32>()?;
+    Ok(())
+}

@@ -1,0 +1,183 @@
+//! Tiny CLI argument parser (the `clap` crate is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands (handled by the caller via [`Args::positional`]), and
+//! automatic `--help` text generation.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option, used for help text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against `specs`.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, ArgError> {
+        let mut args = Args { specs: specs.to_vec(), ..Default::default() };
+        let known = |name: &str| specs.iter().find(|s| s.name == name);
+        let mut it = argv.iter().peekable();
+        while let Some(raw) = it.next() {
+            if let Some(body) = raw.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = known(&name).ok_or_else(|| ArgError::Unknown(name.clone()))?;
+                let value = if spec.takes_value {
+                    match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| ArgError::MissingValue(name.clone()))?,
+                    }
+                } else {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                };
+                args.flags.insert(name, value);
+            } else {
+                args.positional.push(raw.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str()).or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name)
+                .and_then(|s| s.default)
+        })
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, ArgError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| ArgError::BadValue(name.to_string(), v.to_string())),
+        }
+    }
+
+    /// Parse `--name` as T, falling back to the spec default; panics if
+    /// neither is present (programming error: specify a default).
+    pub fn req<T: std::str::FromStr>(&self, name: &str) -> Result<T, ArgError> {
+        self.get_parsed::<T>(name)?
+            .ok_or_else(|| ArgError::MissingValue(name.to_string()))
+    }
+
+    /// Render --help text from the specs.
+    pub fn help(specs: &[OptSpec], usage: &str) -> String {
+        let mut out = format!("usage: {usage}\n\noptions:\n");
+        for s in specs {
+            let arg = if s.takes_value {
+                format!("--{} <v>", s.name)
+            } else {
+                format!("--{}", s.name)
+            };
+            let dflt = s
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  {arg:<24} {}{dflt}\n", s.help));
+        }
+        out
+    }
+}
+
+/// Shorthand to build an OptSpec.
+pub const fn opt(
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<&'static str>,
+) -> OptSpec {
+    OptSpec { name, help, takes_value, default }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            opt("model", "model name", true, Some("gpt-1.3b")),
+            opt("batch", "batch size", true, Some("8")),
+            opt("verbose", "chatty output", false, None),
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_values_positionals() {
+        let a = Args::parse(&sv(&["run", "--model", "gpt-7b", "--verbose", "x"]), &specs())
+            .unwrap();
+        assert_eq!(a.positional(), &["run".to_string(), "x".to_string()]);
+        assert_eq!(a.get("model"), Some("gpt-7b"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.req::<usize>("batch").unwrap(), 8); // default
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&sv(&["--batch=32"]), &specs()).unwrap();
+        assert_eq!(a.req::<usize>("batch").unwrap(), 32);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(
+            Args::parse(&sv(&["--nope"]), &specs()),
+            Err(ArgError::Unknown(_))
+        ));
+        assert!(matches!(
+            Args::parse(&sv(&["--model"]), &specs()),
+            Err(ArgError::MissingValue(_))
+        ));
+        let a = Args::parse(&sv(&["--batch", "NaNope"]), &specs()).unwrap();
+        assert!(matches!(a.req::<usize>("batch"), Err(ArgError::BadValue(..))));
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = Args::help(&specs(), "lynx simulate [opts]");
+        assert!(h.contains("--model"));
+        assert!(h.contains("default: 8"));
+    }
+}

@@ -1,0 +1,172 @@
+//! Mini-criterion: a benchmark harness for `cargo bench` with
+//! `harness = false` targets (the `criterion` crate is unavailable
+//! offline).
+//!
+//! Provides warmup, adaptive iteration counts, outlier-robust statistics
+//! and a compact report format. Paper-figure benches use [`Bench::table`]
+//! to print the exact rows a figure/table in the paper reports.
+
+use super::stats::{fmt_duration, Summary};
+use std::time::Instant;
+
+/// Configuration for one benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// Target measurement time in seconds.
+    pub measure_secs: f64,
+    /// Warmup time in seconds.
+    pub warmup_secs: f64,
+    /// Max samples collected.
+    pub max_samples: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { measure_secs: 1.0, warmup_secs: 0.3, max_samples: 200 }
+    }
+}
+
+/// A named group of benchmarks (mirrors criterion's group concept).
+pub struct Bench {
+    name: String,
+    opts: BenchOpts,
+    results: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        let mut opts = BenchOpts::default();
+        // Honor quick mode for CI: LYNX_BENCH_QUICK=1 shortens runs.
+        if std::env::var("LYNX_BENCH_QUICK").is_ok() {
+            opts.measure_secs = 0.2;
+            opts.warmup_secs = 0.05;
+        }
+        println!("\n== bench group: {name} ==");
+        Bench { name: name.to_string(), opts, results: Vec::new() }
+    }
+
+    pub fn with_opts(mut self, opts: BenchOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Time `f`, which should perform one logical iteration and return a
+    /// value that is consumed by `std::hint::black_box`.
+    pub fn run<T>(&mut self, case: &str, mut f: impl FnMut() -> T) -> Summary {
+        // Warmup + calibration.
+        let start = Instant::now();
+        let mut iters_per_sample = 1usize;
+        let mut one = {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            t.elapsed().as_secs_f64()
+        };
+        while start.elapsed().as_secs_f64() < self.opts.warmup_secs {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            one = 0.5 * one + 0.5 * t.elapsed().as_secs_f64();
+        }
+        if one > 0.0 {
+            // Aim for ~1ms per sample so timer noise is negligible.
+            iters_per_sample = ((1e-3 / one).ceil() as usize).max(1);
+        }
+
+        // Measurement.
+        let mut samples = Vec::new();
+        let deadline = Instant::now();
+        while deadline.elapsed().as_secs_f64() < self.opts.measure_secs
+            && samples.len() < self.opts.max_samples
+        {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        let summary = Summary::of(&samples);
+        println!(
+            "  {case:<44} {:>10}/iter  (p50 {:>10}, p99 {:>10}, n={})",
+            fmt_duration(summary.mean),
+            fmt_duration(summary.p50),
+            fmt_duration(summary.p99),
+            summary.n * iters_per_sample,
+        );
+        self.results.push((case.to_string(), summary.clone()));
+        summary
+    }
+
+    /// Record an externally measured value (e.g. a simulated duration or a
+    /// solver search time) under this group, for table-style output.
+    pub fn record(&mut self, case: &str, value: f64, unit: &str) {
+        println!("  {case:<44} {value:>12.4} {unit}");
+        self.results
+            .push((case.to_string(), Summary::of(&[value])));
+    }
+
+    /// Print a paper-style table: header + aligned rows.
+    pub fn table(&self, title: &str, header: &[&str], rows: &[Vec<String>]) {
+        println!("\n-- {}: {title} --", self.name);
+        let widths: Vec<usize> = header
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                rows.iter()
+                    .map(|r| r.get(i).map(|c| c.len()).unwrap_or(0))
+                    .chain(std::iter::once(h.len()))
+                    .max()
+                    .unwrap()
+            })
+            .collect();
+        let fmt_row = |cells: Vec<String>| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(header.iter().map(|s| s.to_string()).collect()));
+        for r in rows {
+            println!("{}", fmt_row(r.clone()));
+        }
+    }
+
+    pub fn results(&self) -> &[(String, Summary)] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_timing() {
+        let mut b = Bench::new("selftest").with_opts(BenchOpts {
+            measure_secs: 0.05,
+            warmup_secs: 0.01,
+            max_samples: 50,
+        });
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.mean > 0.0);
+        assert!(s.mean < 0.01, "1000 mults should be far under 10ms");
+    }
+
+    #[test]
+    fn record_and_table_do_not_panic() {
+        let mut b = Bench::new("selftest2");
+        b.record("simulated throughput", 12.5, "samples/s");
+        b.table(
+            "demo",
+            &["model", "thpt"],
+            &[vec!["1.3B".into(), "12.5".into()]],
+        );
+        assert_eq!(b.results().len(), 1);
+    }
+}

@@ -1,0 +1,20 @@
+//! Utility substrates built from scratch for offline operation.
+//!
+//! The build environment has no network access and only the `xla`,
+//! `anyhow` and `thiserror` crates vendored, so the usual ecosystem
+//! crates (serde, rand, clap, criterion, proptest) are replaced by the
+//! small, well-tested substrates in this module:
+//!
+//! * [`json`] — JSON parser/serializer (profiler DB, artifact manifest).
+//! * [`prng`] — PCG32 PRNG with normal/zipf helpers (data gen, tests).
+//! * [`argparse`] — CLI flag parser for the launcher.
+//! * [`bench`] — mini-criterion: warmup + timed iterations + stats.
+//! * [`stats`] — summary statistics shared by bench and metrics.
+//! * [`propcheck`] — property-based test runner over PCG32 streams.
+
+pub mod argparse;
+pub mod bench;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;

@@ -1,0 +1,87 @@
+//! Property-based test runner (the `proptest` crate is unavailable
+//! offline).
+//!
+//! [`check`] runs a property over `n` cases generated from a seeded
+//! [`Pcg32`] stream; on failure it reports the case index and seed so the
+//! failure reproduces deterministically. Shrinking is intentionally out of
+//! scope — generators here produce small cases by construction.
+
+use super::prng::Pcg32;
+
+/// Default base seed; override with `LYNX_PROP_SEED=<u64>`.
+pub const DEFAULT_SEED: u64 = 0x5eed_1234_abcd_ef01;
+
+/// Run `prop` over `n` generated cases. `gen` receives a per-case PRNG.
+/// Panics with seed/case info on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    n: usize,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base_seed = std::env::var("LYNX_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_SEED);
+    for case in 0..n {
+        let mut rng =
+            Pcg32::new(base_seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15), 7);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case}/{n} \
+                 (rerun with LYNX_PROP_SEED={base_seed}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut seen = 0;
+        check(
+            "u32 halves",
+            50,
+            |rng| rng.next_u32() as u64,
+            |x| {
+                seen += 1;
+                if x / 2 * 2 <= *x {
+                    Ok(())
+                } else {
+                    Err("arith broke".into())
+                }
+            },
+        );
+        assert_eq!(seen, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_context() {
+        check(
+            "always fails",
+            10,
+            |rng| rng.below(100),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut a = Vec::new();
+        check("collect a", 5, |rng| rng.next_u32(), |x| {
+            a.push(*x);
+            Ok(())
+        });
+        let mut b = Vec::new();
+        check("collect b", 5, |rng| rng.next_u32(), |x| {
+            b.push(*x);
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

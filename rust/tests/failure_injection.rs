@@ -1,0 +1,90 @@
+//! Failure injection: the system must fail loudly and helpfully, never
+//! silently produce wrong results.
+
+use lynx::runtime::{Engine, Manifest};
+use lynx::train::{train, TrainConfig, TrainPolicy};
+use lynx::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lynx_failtest_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_artifacts_mention_make_artifacts() {
+    let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"));
+}
+
+#[test]
+fn wrong_manifest_format_rejected() {
+    let dir = tmpdir("wrong_format");
+    std::fs::write(dir.join("manifest.json"), r#"{"format": "hlo-text/999"}"#).unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err}").contains("unsupported"));
+}
+
+#[test]
+fn corrupt_manifest_json_rejected() {
+    let dir = tmpdir("corrupt_json");
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_compile_with_context() {
+    // Copy the real manifest but point one entry at garbage HLO.
+    let real = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !real.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = tmpdir("corrupt_hlo");
+    let mut manifest =
+        Json::parse(&std::fs::read_to_string(real.join("manifest.json")).unwrap()).unwrap();
+    // Keep only the adam_head entry to make the test fast.
+    let entries = manifest.get("entries").unwrap().as_obj().unwrap().clone();
+    let adam = entries.get("adam_head").unwrap().clone();
+    let mut only = Json::obj();
+    only.set("adam_head", adam);
+    manifest.set("entries", only);
+    std::fs::write(dir.join("manifest.json"), manifest.dump()).unwrap();
+    std::fs::write(dir.join("adam_head.hlo.txt"), "HloModule broken\n@@@garbage").unwrap();
+    let msg = match Engine::load_subset(&dir, &["adam_head"]) {
+        Ok(_) => panic!("corrupt HLO compiled successfully?!"),
+        Err(err) => format!("{err:#}"),
+    };
+    assert!(msg.contains("adam_head"), "error should name the artifact: {msg}");
+}
+
+#[test]
+fn trainer_rejects_bad_stage_counts() {
+    let real = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !real.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = TrainConfig {
+        artifacts: real,
+        stages: 999, // more stages than layers
+        num_micro: 1,
+        steps: 1,
+        lr: 1e-3,
+        policy: TrainPolicy::StoreAll,
+        comm_delay: Duration::ZERO,
+        seed: 0,
+        log_every: 0,
+    };
+    let err = train(&cfg).unwrap_err();
+    assert!(format!("{err}").contains("stages"));
+}
+
+#[test]
+fn cli_surfaces_errors_as_nonzero() {
+    let r = lynx::cli::run(&["simulate".into(), "--model".into(), "gpt-9000b".into()]);
+    assert!(r.is_err());
+}

@@ -1,0 +1,238 @@
+//! Cross-module integration tests: policies → plans → simulation, the
+//! orderings the paper's evaluation depends on, and property-based
+//! validity over random configurations.
+
+use lynx::costmodel::{CostModel, Topology};
+use lynx::graph::{build_layer_graph, ModelConfig, TrainSetup};
+use lynx::plan::{
+    build_stage_ctx, dp_partition_result, lynx_partition, plan_stage, stage_cost, PolicyKind,
+};
+use lynx::sim::{simulate, PartitionMode, SimConfig};
+use lynx::util::prng::Pcg32;
+use lynx::util::propcheck::check;
+
+fn sim(model: &str, mb: usize, policy: PolicyKind, partition: PartitionMode) -> lynx::sim::SimReport {
+    let setup = TrainSetup::new(ModelConfig::by_name(model).unwrap(), 4, 4, mb, 8);
+    let cm = CostModel::new(Topology::nvlink(4, 4));
+    simulate(&cm, &SimConfig { setup, policy, partition })
+}
+
+#[test]
+fn policy_throughput_ordering_matches_paper() {
+    // On a memory-pressured config: lynx-heu >= checkmate >= uniform(full)
+    // and lynx-opt >= lynx-heu (within solver tolerance).
+    let full = sim("7B", 16, PolicyKind::Uniform, PartitionMode::Dp);
+    let ckpt = sim("7B", 16, PolicyKind::Checkmate, PartitionMode::Dp);
+    let heu = sim("7B", 16, PolicyKind::LynxHeu, PartitionMode::Dp);
+    let opt = sim("7B", 16, PolicyKind::LynxOpt, PartitionMode::Dp);
+    assert!(!heu.oom && !full.oom);
+    assert!(
+        heu.throughput >= ckpt.throughput * 0.999,
+        "heu {} vs checkmate {}",
+        heu.throughput,
+        ckpt.throughput
+    );
+    assert!(
+        ckpt.throughput >= full.throughput * 0.999,
+        "checkmate {} vs uniform {}",
+        ckpt.throughput,
+        full.throughput
+    );
+    assert!(
+        opt.throughput >= heu.throughput * 0.98,
+        "opt {} vs heu {}",
+        opt.throughput,
+        heu.throughput
+    );
+}
+
+#[test]
+fn selective_ooms_where_paper_says() {
+    // 7B @ batch16 NVLink-4x4 (§7.2): selective cannot free enough memory.
+    let sel = sim("7B", 16, PolicyKind::Selective, PartitionMode::Dp);
+    assert!(sel.oom, "selective should OOM on 7B/batch16");
+    // Full recompute fits.
+    let full = sim("7B", 16, PolicyKind::Full, PartitionMode::Dp);
+    assert!(!full.oom);
+}
+
+#[test]
+fn lynx_partition_never_loses_to_dp() {
+    for model in ["1.3B", "7B"] {
+        let dp = sim(model, 8, PolicyKind::LynxHeu, PartitionMode::Dp);
+        let lx = sim(model, 8, PolicyKind::LynxHeu, PartitionMode::Lynx);
+        assert!(
+            lx.throughput >= dp.throughput * 0.999,
+            "{model}: lynx {} vs dp {}",
+            lx.throughput,
+            dp.throughput
+        );
+    }
+}
+
+#[test]
+fn pcie_overlap_gains_exceed_nvlink() {
+    // Paper §7.2: slower interconnects leave wider windows -> larger
+    // relative win for Lynx.
+    let gain = |topo: Topology, tp: usize| {
+        let setup = TrainSetup::new(ModelConfig::by_name("4.7B").unwrap(), tp, 4, 8, 8);
+        let cm = CostModel::new(topo);
+        let base = simulate(
+            &cm,
+            &SimConfig {
+                setup: setup.clone(),
+                policy: PolicyKind::Uniform,
+                partition: PartitionMode::Dp,
+            },
+        );
+        let heu = simulate(
+            &cm,
+            &SimConfig { setup, policy: PolicyKind::LynxHeu, partition: PartitionMode::Dp },
+        );
+        heu.throughput / base.throughput
+    };
+    let nv = gain(Topology::nvlink(4, 4), 4);
+    let pc = gain(Topology::pcie(2, 4), 2);
+    assert!(pc > nv, "pcie gain {pc:.3} should exceed nvlink gain {nv:.3}");
+}
+
+#[test]
+fn oom_configs_are_flagged_not_silently_run() {
+    // Store-everything on a big model must be reported as OOM.
+    let block0 = sim("13B", 16, PolicyKind::Selective, PartitionMode::Dp);
+    assert!(block0.oom);
+}
+
+#[test]
+fn prop_plans_valid_and_memory_respected_across_random_configs() {
+    check(
+        "plan validity across configs",
+        12,
+        |rng: &mut Pcg32| {
+            let models = ["1.3B", "4.7B", "7B"];
+            let model = *rng.choose(&models);
+            let tp = *rng.choose(&[2usize, 4]);
+            let mb = *rng.choose(&[4usize, 8, 16]);
+            let policy = *rng.choose(&[
+                PolicyKind::Full,
+                PolicyKind::Selective,
+                PolicyKind::Block,
+                PolicyKind::LynxHeu,
+            ]);
+            (model.to_string(), tp, mb, policy)
+        },
+        |(model, tp, mb, policy)| {
+            let setup =
+                TrainSetup::new(ModelConfig::by_name(model).unwrap(), *tp, 4, *mb, 8);
+            let cm = CostModel::new(Topology::nvlink(*tp, 4));
+            let g = build_layer_graph(&setup);
+            let times = cm.layer_times(&g);
+            let part = lynx::plan::dp_partition(setup.model.layers, 4);
+            for stage in 0..4 {
+                let ctx = build_stage_ctx(&setup, &cm, &g, &part, stage);
+                let out = plan_stage(*policy, &g, &ctx, &times);
+                for lp in &out.plan.layers {
+                    lp.validate(&g).map_err(|e| format!("{model} s{stage}: {e}"))?;
+                }
+                let cost = stage_cost(&setup, &cm, &g, &ctx, &out.plan);
+                if !out.oom && policy.is_lynx() && cost.peak_mem > cm.topo.gpu.usable_memory() {
+                    return Err(format!(
+                        "{model} s{stage}: lynx plan claims fit but peak {:.2e}",
+                        cost.peak_mem
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulated_makespan_bounds() {
+    // Makespan must be at least the bottleneck-stage lower bound and at
+    // most the fully-serial upper bound.
+    check(
+        "1F1B makespan bounds",
+        15,
+        |rng: &mut Pcg32| {
+            let p = rng.range(1, 6);
+            let m = rng.range(1, 12);
+            let timings: Vec<(f64, f64, f64)> = (0..p)
+                .map(|_| (0.5 + rng.f64(), 0.5 + rng.f64(), rng.f64() * 0.5))
+                .collect();
+            (timings, m)
+        },
+        |(timings, m)| {
+            use lynx::sim::engine::{run_pipeline, StageTiming};
+            let ts: Vec<StageTiming> = timings
+                .iter()
+                .map(|&(fwd, bwd, exposed)| StageTiming { fwd, bwd, exposed, p2p: 0.0 })
+                .collect();
+            for lynx_mode in [false, true] {
+                let tr = run_pipeline(&ts, *m, lynx_mode);
+                let bottleneck: f64 = timings
+                    .iter()
+                    .map(|&(f, b, e)| (f + b + if lynx_mode { 0.0 } else { e }) * *m as f64)
+                    .fold(0.0, f64::max);
+                let serial: f64 = timings
+                    .iter()
+                    .map(|&(f, b, e)| (f + b + e) * *m as f64)
+                    .sum();
+                if tr.makespan < bottleneck - 1e-9 {
+                    return Err(format!(
+                        "makespan {} below bottleneck bound {}",
+                        tr.makespan, bottleneck
+                    ));
+                }
+                if tr.makespan > serial + 1e-9 {
+                    return Err(format!(
+                        "makespan {} above serial bound {}",
+                        tr.makespan, serial
+                    ));
+                }
+                // Conservation: absorbed + paid = planned exposed work.
+                for (s, &(_, _, e)) in timings.iter().enumerate() {
+                    let total = tr.absorbed[s] + tr.exposed_paid[s];
+                    if (total - e * *m as f64).abs() > 1e-6 {
+                        return Err(format!("stage {s} recompute accounting off: {total}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partitioner_conserves_and_improves() {
+    check(
+        "partitioner invariants",
+        6,
+        |rng: &mut Pcg32| {
+            let model = *rng.choose(&["1.3B", "4.7B"]);
+            let pp = *rng.choose(&[2usize, 4]);
+            (model.to_string(), pp)
+        },
+        |(model, pp)| {
+            let setup = TrainSetup::new(ModelConfig::by_name(model).unwrap(), 2, *pp, 8, 8);
+            let cm = CostModel::new(Topology::nvlink(2, *pp));
+            let g = build_layer_graph(&setup);
+            let dp = dp_partition_result(&setup, &cm, &g, PolicyKind::Full);
+            let lx = lynx_partition(&setup, &cm, &g, PolicyKind::Full);
+            if lx.partition.iter().sum::<usize>() != setup.model.layers {
+                return Err("layer conservation violated".into());
+            }
+            if lx.partition.iter().any(|&l| l == 0) {
+                return Err("empty stage".into());
+            }
+            if lx.makespan() > dp.makespan() + 1e-12 {
+                return Err(format!(
+                    "lynx partition worse: {} vs {}",
+                    lx.makespan(),
+                    dp.makespan()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
