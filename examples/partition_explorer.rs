@@ -53,14 +53,8 @@ fn main() -> anyhow::Result<()> {
         }
 
         // Whole-pipeline effect.
-        let r_dp = simulate(
-            &cm,
-            &SimConfig { setup: setup.clone(), policy, partition: PartitionMode::Dp },
-        );
-        let r_lx = simulate(
-            &cm,
-            &SimConfig { setup: setup.clone(), policy, partition: PartitionMode::Lynx },
-        );
+        let r_dp = simulate(&cm, &SimConfig::new(setup.clone(), policy, PartitionMode::Dp));
+        let r_lx = simulate(&cm, &SimConfig::new(setup.clone(), policy, PartitionMode::Lynx));
         println!(
             "  simulated throughput: dp {:.2} -> lynx {:.2} samples/s ({:.2}x)\n",
             r_dp.throughput,

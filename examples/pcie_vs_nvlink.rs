@@ -33,21 +33,14 @@ fn main() {
         let best_megatron = [PolicyKind::Uniform, PolicyKind::Selective, PolicyKind::Block]
             .into_iter()
             .map(|p| {
-                simulate(
-                    &cm,
-                    &SimConfig { setup: setup.clone(), policy: p, partition: PartitionMode::Dp },
-                )
+                simulate(&cm, &SimConfig::new(setup.clone(), p, PartitionMode::Dp))
             })
             .filter(|r| !r.oom)
             .map(|r| r.throughput)
             .fold(0.0f64, f64::max);
         let lynx = simulate(
             &cm,
-            &SimConfig {
-                setup: setup.clone(),
-                policy: PolicyKind::LynxHeu,
-                partition: PartitionMode::Lynx,
-            },
+            &SimConfig::new(setup.clone(), PolicyKind::LynxHeu, PartitionMode::Lynx),
         );
         let hidden = lynx.total_hidden(setup.num_micro);
         let total = hidden + lynx.total_exposed_paid();

@@ -71,11 +71,11 @@ fn main() -> anyhow::Result<()> {
     for kind in [PolicyKind::Full, PolicyKind::Block, PolicyKind::LynxHeu, PolicyKind::LynxOpt] {
         let r = simulate(
             &cm,
-            &SimConfig {
-                setup: setup.clone(),
-                policy: kind,
-                partition: if kind.is_lynx() { PartitionMode::Lynx } else { PartitionMode::Dp },
-            },
+            &SimConfig::new(
+                setup.clone(),
+                kind,
+                if kind.is_lynx() { PartitionMode::Lynx } else { PartitionMode::Dp },
+            ),
         );
         println!(
             "  {:<10} {:>8.2} samples/s  iteration {:>9}  {}",

@@ -1,0 +1,76 @@
+//! Bench: cross-schedule pipeline comparison — per-schedule iteration
+//! time, bubble ratio and peak memory on the Table-2 GPT configs, plus
+//! the wall-clock cost of schedule construction.
+//!
+//! Consumes the same `experiments::schedule_runs` sweep as
+//! `lynx figures --fig schedules`, so the bench artifact and the figure
+//! can never drift apart. Run `cargo bench --bench bench_schedules`
+//! (set LYNX_BENCH_QUICK=1 for a reduced sweep). Emits
+//! `BENCH_schedules.json` into the working directory (override the
+//! directory with LYNX_BENCH_OUT).
+
+use lynx::experiments::schedule_runs;
+use lynx::sched::ScheduleKind;
+use lynx::util::bench::Bench;
+use lynx::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("schedules: cross-schedule pipeline comparison");
+
+    let t0 = Instant::now();
+    let runs = schedule_runs(quick);
+    let sweep_wall = t0.elapsed().as_secs_f64();
+
+    let mut rows = Vec::new();
+    let mut out = Json::Arr(vec![]);
+    for (model, mb, kind, r) in &runs {
+        b.record(
+            &format!("{model} mb{mb} {}", kind.label()),
+            r.iteration_secs,
+            "s/iter (simulated)",
+        );
+        let absorbed: f64 = r.stages.iter().map(|s| s.absorbed_total).sum();
+        let windows: f64 = r.stages.iter().map(|s| s.window_secs).sum();
+        rows.push(vec![
+            model.to_string(),
+            kind.label().to_string(),
+            format!("{:.3}", r.iteration_secs),
+            format!("{:.2}", r.throughput),
+            format!("{:.1}%", 100.0 * r.bubble_ratio),
+            format!("{:.1}", r.peak_mem() / 1e9),
+            format!("{}", r.oom),
+        ]);
+        let mut jo = Json::obj();
+        jo.set("model", Json::from(*model))
+            .set("micro_batch", Json::from(*mb))
+            .set("schedule", Json::from(kind.label()))
+            .set("iteration_secs", Json::from(r.iteration_secs))
+            .set("throughput", Json::from(r.throughput))
+            .set("bubble_ratio", Json::from(r.bubble_ratio))
+            .set("peak_mem_bytes", Json::from(r.peak_mem()))
+            .set("absorbed_secs", Json::from(absorbed))
+            .set("window_secs", Json::from(windows))
+            .set("oom", Json::from(r.oom));
+        out.push(jo);
+    }
+    b.record("full sweep wall-clock", sweep_wall, "s");
+    b.table(
+        "per-schedule iteration metrics (NVLink-4x4, Lynx-HEU)",
+        &["model", "schedule", "iter(s)", "thpt", "bubble", "peak GB", "oom"],
+        &rows,
+    );
+
+    // Schedule construction cost (the greedy generator is the slow one).
+    for kind in ScheduleKind::all() {
+        b.run(&format!("build {} (p=8, m=32)", kind.label()), || {
+            kind.build(8, 32).stage_items(0).len()
+        });
+    }
+
+    let dir = std::env::var("LYNX_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("BENCH_schedules.json");
+    std::fs::write(&path, out.pretty()).expect("write BENCH_schedules.json");
+    println!("\nwrote {}", path.display());
+}

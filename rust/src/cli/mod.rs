@@ -15,6 +15,7 @@ use crate::plan::{
     build_stage_ctx, dp_partition_result, lynx_partition, plan_stage, stage_cost, PolicyKind,
 };
 use crate::profiler::profile_model;
+use crate::sched::ScheduleKind;
 use crate::sim::{simulate, PartitionMode, SimConfig};
 use crate::train::{train, TrainConfig, TrainPolicy};
 use crate::util::argparse::{opt, Args, OptSpec};
@@ -36,6 +37,8 @@ fn common_specs() -> Vec<OptSpec> {
         opt("seq", "sequence length", true, Some("1024")),
         opt("policy", "full|selective|uniform|block|checkmate|lynx-heu|lynx-opt", true, Some("lynx-heu")),
         opt("partition", "dp|lynx", true, Some("dp")),
+        opt("schedule", "pipeline schedule: gpipe|1f1b|interleaved|zbh1", true, Some("1f1b")),
+        opt("chunks", "virtual chunks per stage (interleaved)", true, Some("2")),
         opt("help", "print help", false, None),
         // train-only options (accepted everywhere for simplicity)
         opt("artifacts", "artifact directory", true, Some("artifacts")),
@@ -47,12 +50,18 @@ fn common_specs() -> Vec<OptSpec> {
         opt("seed", "PRNG seed", true, Some("42")),
         opt("log-every", "loss log interval", true, Some("10")),
         // figures options
-        opt("fig", "figure id: 2a|2b|6a|6b|7|8|9|10a|10b|10c|table3|sp", true, None),
+        opt("fig", "figure id: 2a|2b|6a|6b|7|8|9|10a|10b|10c|table3|sp|schedules", true, None),
         opt("all", "regenerate every figure", false, None),
         opt("quick", "reduced configs for smoke runs", false, None),
         opt("out", "write figure JSON to this directory", true, None),
         opt("gantt", "render an ASCII pipeline gantt chart", false, None),
     ]
+}
+
+fn parse_schedule(a: &Args) -> Result<ScheduleKind> {
+    let name = a.get("schedule").unwrap();
+    let chunks: usize = a.req("chunks")?;
+    ScheduleKind::parse(name, chunks).ok_or_else(|| anyhow!("unknown schedule {name:?}"))
 }
 
 fn parse_policy(s: &str) -> Result<PolicyKind> {
@@ -118,11 +127,15 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
         "lynx" => PartitionMode::Lynx,
         other => return Err(anyhow!("unknown partition mode {other:?}")),
     };
+    let schedule = parse_schedule(a)?;
     let cm = CostModel::new(topo);
-    let r = simulate(&cm, &SimConfig { setup: setup.clone(), policy, partition });
+    let r = simulate(
+        &cm,
+        &SimConfig { setup: setup.clone(), policy, partition, schedule },
+    );
     println!("{}", r.to_json().pretty());
     if a.has("gantt") {
-        use crate::sim::{render_gantt, run_pipeline, StageTiming};
+        use crate::sim::{render_gantt, run_schedule, StageTiming};
         let timings: Vec<StageTiming> = r
             .stages
             .iter()
@@ -133,8 +146,9 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
                 p2p: cm.comm.p2p_time(cm.memory.boundary_bytes(&setup)),
             })
             .collect();
-        let trace = run_pipeline(&timings, setup.num_micro, policy.is_lynx());
-        println!("{}", render_gantt(&timings, &trace, setup.num_micro, 110));
+        let sched = schedule.build(setup.pp, setup.num_micro);
+        let trace = run_schedule(&timings, sched.as_ref(), policy.is_lynx());
+        println!("{}", render_gantt(&timings, &trace, 110));
     }
     Ok(if r.oom { 1 } else { 0 })
 }
@@ -211,6 +225,7 @@ fn cmd_figures(a: &Args) -> Result<i32> {
             "10c" => experiments::fig10('c', quick),
             "table3" => experiments::table3(quick),
             "sp" => experiments::fig_sp(),
+            "schedules" => experiments::schedule_matrix(quick),
             other => return Err(anyhow!("unknown figure {other:?}")),
         }]
     };
@@ -228,6 +243,14 @@ fn cmd_figures(a: &Args) -> Result<i32> {
 }
 
 fn cmd_train(a: &Args) -> Result<i32> {
+    // The real trainer executes 1F1B only; reject a silently-ignored
+    // --schedule instead of training under a different schedule than
+    // the user asked for.
+    if parse_schedule(a)? != ScheduleKind::OneFOneB {
+        return Err(anyhow!(
+            "lynx train supports only --schedule 1f1b (the simulator covers the rest)"
+        ));
+    }
     let policy = TrainPolicy::parse(a.get("train-policy").unwrap())
         .ok_or_else(|| anyhow!("unknown train policy"))?;
     let cfg = TrainConfig {
@@ -299,5 +322,33 @@ mod tests {
     #[test]
     fn bad_policy_is_error() {
         assert!(run(&sv(&["simulate", "--policy", "nope"])).is_err());
+    }
+
+    #[test]
+    fn simulate_accepts_every_schedule() {
+        for sched in ["gpipe", "1f1b", "interleaved", "zbh1"] {
+            let code = run(&sv(&[
+                "simulate",
+                "--model",
+                "1.3B",
+                "--tp",
+                "2",
+                "--pp",
+                "4",
+                "--micro-batch",
+                "4",
+                "--policy",
+                "block",
+                "--schedule",
+                sched,
+            ]))
+            .unwrap();
+            assert_eq!(code, 0, "schedule {sched}");
+        }
+    }
+
+    #[test]
+    fn bad_schedule_is_error() {
+        assert!(run(&sv(&["simulate", "--schedule", "zb-v2"])).is_err());
     }
 }

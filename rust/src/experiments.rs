@@ -9,6 +9,7 @@
 use crate::costmodel::{CostModel, Topology};
 use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
 use crate::plan::{build_stage_ctx, PolicyKind};
+use crate::sched::ScheduleKind;
 use crate::sim::{simulate, PartitionMode, SimConfig, SimReport};
 use crate::util::json::Json;
 
@@ -90,8 +91,10 @@ fn setup(model: &str, tp: usize, pp: usize, mb: usize) -> TrainSetup {
 }
 
 fn run(topo: Topology, setup: TrainSetup, policy: PolicyKind, partition: PartitionMode) -> SimReport {
+    // Paper experiments execute the paper's schedule (1F1B); the
+    // schedule_matrix experiment sweeps the other sched variants.
     let cm = CostModel::new(topo);
-    simulate(&cm, &SimConfig { setup, policy, partition })
+    simulate(&cm, &SimConfig::new(setup, policy, partition))
 }
 
 fn fmt_thpt(r: &SimReport) -> String {
@@ -547,6 +550,108 @@ pub fn fig_sp() -> FigureResult {
     }
 }
 
+// ------------------------------------------------------- schedule matrix
+
+/// One row of the cross-schedule sweep: (model, micro-batch, schedule,
+/// simulated report).
+pub type ScheduleRun = (&'static str, usize, ScheduleKind, SimReport);
+
+/// Raw results behind [`schedule_matrix`] and `bench_schedules`: every
+/// [`ScheduleKind`] on the Table-2 GPT configs, Lynx-HEU plans,
+/// dp-partition (isolates the schedule effect), NVLink-4x4.
+pub fn schedule_runs(quick: bool) -> Vec<ScheduleRun> {
+    let models: Vec<(&'static str, usize)> =
+        if quick { vec![("7B", 16)] } else { vec![("7B", 16), ("13B", 8)] };
+    let mut runs = Vec::new();
+    for (model, mb) in models {
+        for kind in ScheduleKind::all() {
+            let cm = CostModel::new(Topology::nvlink(4, 4));
+            let s = setup(model, 4, 4, mb);
+            let r = simulate(
+                &cm,
+                &SimConfig::new(s, PolicyKind::LynxHeu, PartitionMode::Dp)
+                    .with_schedule(kind),
+            );
+            runs.push((model, mb, kind, r));
+        }
+    }
+    runs
+}
+
+/// Cross-schedule evaluation table. Reports iteration time, throughput,
+/// bubble ratio, peak memory, and how much exposed recompute the Lynx
+/// absorber slotted into each schedule's overlap windows.
+pub fn schedule_matrix(quick: bool) -> FigureResult {
+    let runs = schedule_runs(quick);
+    let mut rows = Vec::new();
+    let mut notes = Vec::new();
+    let models: Vec<&'static str> = {
+        let mut ms: Vec<&'static str> = runs.iter().map(|(m, _, _, _)| *m).collect();
+        ms.dedup();
+        ms
+    };
+    for model in models {
+        let results: Vec<(ScheduleKind, &SimReport)> = runs
+            .iter()
+            .filter(|(m, _, _, _)| *m == model)
+            .map(|(_, _, k, r)| (*k, r))
+            .collect();
+        let bubble_1f1b = results
+            .iter()
+            .find(|(k, _)| *k == ScheduleKind::OneFOneB)
+            .map(|(_, r)| r.bubble_ratio)
+            .unwrap_or(0.0);
+        for (kind, r) in &results {
+            let absorbed: f64 = r.stages.iter().map(|st| st.absorbed_total).sum();
+            let windows: f64 = r.stages.iter().map(|st| st.window_secs).sum();
+            rows.push(vec![
+                model.to_string(),
+                kind.label().to_string(),
+                if r.oom { "OOM".into() } else { format!("{:.3}", r.iteration_secs) },
+                fmt_thpt(r),
+                format!("{:.1}%", 100.0 * r.bubble_ratio),
+                format!("{:.1}", r.peak_mem() / 1e9),
+                format!("{:.1}", 1e3 * absorbed),
+                format!("{:.1}", 1e3 * windows),
+            ]);
+        }
+        for (kind, r) in &results {
+            if matches!(kind, ScheduleKind::Interleaved { .. } | ScheduleKind::ZbH1)
+                && !r.oom
+                && bubble_1f1b > 0.0
+            {
+                notes.push(format!(
+                    "{model}: {} bubble {:.1}% vs 1f1b {:.1}%",
+                    kind.label(),
+                    100.0 * r.bubble_ratio,
+                    100.0 * bubble_1f1b
+                ));
+            }
+        }
+    }
+    notes.push(
+        "expected: interleaved/zbh1 shrink the 1f1b bubble; gpipe matches 1f1b time \
+         but holds every microbatch in memory"
+            .into(),
+    );
+    FigureResult {
+        id: "schedules",
+        title: "cross-schedule matrix (NVLink-4x4, Lynx-HEU, dp-partition)".into(),
+        header: vec![
+            "model".into(),
+            "schedule".into(),
+            "iter (s)".into(),
+            "thpt".into(),
+            "bubble".into(),
+            "peak GB".into(),
+            "absorbed ms".into(),
+            "windows ms".into(),
+        ],
+        rows,
+        notes,
+    }
+}
+
 /// All figures for `lynx figures --all` / EXPERIMENTS.md.
 pub fn all_figures(quick: bool) -> Vec<FigureResult> {
     vec![
@@ -562,5 +667,6 @@ pub fn all_figures(quick: bool) -> Vec<FigureResult> {
         fig10('c', quick),
         table3(quick),
         fig_sp(),
+        schedule_matrix(quick),
     ]
 }

@@ -15,9 +15,14 @@
 //!   (full/selective/uniform/block), Checkmate, **Lynx-OPT** (global MILP,
 //!   paper §4) and **Lynx-HEU** (per-layer ILP, paper §5), plus the
 //!   recomputation-aware partitioner (paper §6, Algorithm 1);
+//! * [`sched`] — pluggable pipeline schedules: GPipe, 1F1B,
+//!   interleaved-1F1B (virtual chunks) and ZB-H1 (split backward), each
+//!   exposing per-stage work orders, in-flight activation accounting and
+//!   the overlap windows the Lynx planner fills with recomputation;
 //! * [`sim`] — a discrete-event cluster simulator that executes
-//!   (partition, plan) pairs under 1F1B pipeline parallelism and produces
-//!   the metrics behind every figure in the paper's evaluation;
+//!   (partition, plan) pairs under any [`sched`] schedule and produces
+//!   the metrics behind every figure in the paper's evaluation, plus
+//!   per-schedule bubble ratios;
 //! * [`profiler`] — analytic + PJRT wall-clock profiling (paper Fig. 4
 //!   "model profiler");
 //! * [`runtime`] — PJRT CPU runtime loading AOT-compiled HLO artifacts;
@@ -33,6 +38,7 @@ pub mod graph;
 pub mod plan;
 pub mod profiler;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod solver;
 pub mod train;

@@ -5,6 +5,7 @@
 use super::types::{PlanOutcome, PolicyKind, StageCtx, StagePlan};
 use crate::costmodel::CostModel;
 use crate::graph::{LayerGraph, TrainSetup};
+use crate::sched::PipelineSchedule;
 
 /// Per-stage cost summary.
 #[derive(Debug, Clone)]
@@ -31,7 +32,8 @@ pub struct StageCost {
     pub oom: bool,
 }
 
-/// Build the [`StageCtx`] for `stage` under an explicit layer partition.
+/// Build the [`StageCtx`] for `stage` under an explicit layer partition,
+/// assuming the paper's default 1F1B in-flight accounting.
 pub fn build_stage_ctx(
     setup: &TrainSetup,
     cm: &CostModel,
@@ -39,9 +41,40 @@ pub fn build_stage_ctx(
     partition: &[usize],
     stage: usize,
 ) -> StageCtx {
-    let n_layers = partition[stage];
     let num_stages = partition.len();
     let n_batch = cm.memory.inflight_microbatches(stage, num_stages, setup.num_micro);
+    build_stage_ctx_with_nbatch(setup, cm, g, partition, stage, n_batch)
+}
+
+/// Build the [`StageCtx`] with the in-flight microbatch count reported by
+/// an executed [`PipelineSchedule`] (replay accounting). Interleaved
+/// schedules count chunk-units; they are converted to full-stage
+/// microbatch-equivalents (rounded up — each unit holds
+/// `n_layers / chunks` layers' activations).
+pub fn build_stage_ctx_for(
+    setup: &TrainSetup,
+    cm: &CostModel,
+    g: &LayerGraph,
+    partition: &[usize],
+    stage: usize,
+    sched: &dyn PipelineSchedule,
+) -> StageCtx {
+    let units = sched.peak_inflight(stage);
+    let v = sched.num_chunks();
+    let n_batch = ((units + v - 1) / v).max(1);
+    build_stage_ctx_with_nbatch(setup, cm, g, partition, stage, n_batch)
+}
+
+fn build_stage_ctx_with_nbatch(
+    setup: &TrainSetup,
+    cm: &CostModel,
+    g: &LayerGraph,
+    partition: &[usize],
+    stage: usize,
+    n_batch: usize,
+) -> StageCtx {
+    let n_layers = partition[stage];
+    let num_stages = partition.len();
     let static_mem = stage_static_mem(setup, cm, partition, stage);
     let times = cm.layer_times(g);
     let comm = g.comm_ops();
@@ -186,6 +219,24 @@ mod tests {
         assert_eq!(c3.n_batch, 1);
         // First stage carries embedding → smaller activation budget.
         assert!(c0.mem_budget < c3.mem_budget + 1.0);
+    }
+
+    #[test]
+    fn stage_ctx_follows_the_schedule_inflight() {
+        use crate::sched::ScheduleKind;
+        let (setup, cm, g) = fixture();
+        let part = vec![8, 8, 8, 8];
+        // GPipe holds every microbatch; 1F1B replay matches the closed
+        // form the memory model uses.
+        let gpipe = ScheduleKind::GPipe.build(4, setup.num_micro);
+        let c0 = build_stage_ctx_for(&setup, &cm, &g, &part, 0, gpipe.as_ref());
+        assert_eq!(c0.n_batch, setup.num_micro);
+        let ofob = ScheduleKind::OneFOneB.build(4, setup.num_micro);
+        for stage in 0..4 {
+            let via_sched = build_stage_ctx_for(&setup, &cm, &g, &part, stage, ofob.as_ref());
+            let classic = build_stage_ctx(&setup, &cm, &g, &part, stage);
+            assert_eq!(via_sched.n_batch, classic.n_batch, "stage {stage}");
+        }
     }
 
     #[test]

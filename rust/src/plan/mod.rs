@@ -16,7 +16,7 @@ pub mod partition;
 pub mod rules;
 pub mod types;
 
-pub use costeval::{build_stage_ctx, plan_stage, stage_cost, StageCost};
+pub use costeval::{build_stage_ctx, build_stage_ctx_for, plan_stage, stage_cost, StageCost};
 pub use heu::{heu_plan, HeuOptions};
 pub use opt::{checkmate_plan, opt_plan, OptOptions};
 pub use partition::{dp_partition, dp_partition_result, lynx_partition, PartitionResult};

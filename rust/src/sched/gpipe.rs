@@ -1,0 +1,91 @@
+//! GPipe: every stage runs all forwards, then all backwards (LIFO).
+//!
+//! The original pipeline-parallel schedule. Memory is maximal — all
+//! `num_micro` activations are live at the phase boundary — and the
+//! bubble sits between the forward and backward phases, which makes it
+//! the largest single overlap window any schedule offers the Lynx
+//! planner.
+
+use super::{PipelineSchedule, ScheduleKind, WorkItem};
+
+#[derive(Debug, Clone)]
+pub struct GPipe {
+    num_stages: usize,
+    num_micro: usize,
+}
+
+impl GPipe {
+    pub fn new(num_stages: usize, num_micro: usize) -> GPipe {
+        assert!(num_stages >= 1 && num_micro >= 1);
+        GPipe { num_stages, num_micro }
+    }
+}
+
+impl PipelineSchedule for GPipe {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::GPipe
+    }
+
+    fn num_stages(&self) -> usize {
+        self.num_stages
+    }
+
+    fn num_micro(&self) -> usize {
+        self.num_micro
+    }
+
+    fn stage_items(&self, stage: usize) -> Vec<WorkItem> {
+        assert!(stage < self.num_stages);
+        let mut items = Vec::with_capacity(2 * self.num_micro);
+        for m in 0..self.num_micro {
+            items.push(WorkItem::fwd(m, 0));
+        }
+        // Backward drains LIFO: the last forward's activations are the
+        // freshest and its dy arrives first on the last stage.
+        for m in (0..self.num_micro).rev() {
+            items.push(WorkItem::bwd(m, 0));
+        }
+        items
+    }
+
+    /// All microbatches are live at the forward/backward boundary.
+    fn peak_inflight(&self, _stage: usize) -> usize {
+        self.num_micro
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{peak_inflight_replay, validate_executable};
+
+    #[test]
+    fn forwards_then_backwards() {
+        let sched = GPipe::new(3, 4);
+        let items = sched.stage_items(1);
+        assert_eq!(items.len(), 8);
+        assert!(items[..4].iter().all(|i| i.is_fwd()));
+        assert!(items[4..].iter().all(|i| i.is_bwd()));
+        // LIFO backward order.
+        assert_eq!(items[4], WorkItem::bwd(3, 0));
+        assert_eq!(items[7], WorkItem::bwd(0, 0));
+    }
+
+    #[test]
+    fn peak_inflight_is_num_micro() {
+        let sched = GPipe::new(4, 6);
+        for s in 0..4 {
+            assert_eq!(sched.peak_inflight(s), 6);
+            assert_eq!(peak_inflight_replay(&sched.stage_items(s)), 6);
+        }
+    }
+
+    #[test]
+    fn executable_across_shapes() {
+        for p in [1usize, 2, 5] {
+            for m in [1usize, 3, 9] {
+                validate_executable(&GPipe::new(p, m)).unwrap();
+            }
+        }
+    }
+}

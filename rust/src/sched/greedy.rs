@@ -1,0 +1,236 @@
+//! Deadlock-free work-order generation by unit-time list scheduling.
+//!
+//! Interleaved-1F1B and ZB-H1 orders are hard to write in closed form
+//! for arbitrary (stages, microbatches, chunks): Megatron requires
+//! `num_micro % num_stages == 0`, and ZB-H1's W placement depends on
+//! where the bubbles fall. Instead the generator *executes* the schedule
+//! once under unit item durations: every stage consumes its forward /
+//! backward launch sequences in order, choosing the next item each tick
+//! by a schedule-specific preference rule, and only when the item's
+//! cross-stage dependencies have completed. The recorded per-stage order
+//! is feasible by construction — an order with a valid unit-time
+//! execution is acyclic against the dependency DAG, so the real-time
+//! engine converges for *any* positive durations.
+//!
+//! If the preference rule ever wedges (capacity rules can in principle
+//! starve progress), the generator falls back to the trivially-safe
+//! phase order (all forwards in launch order, then all backwards, W
+//! after its B) rather than emit an unexecutable schedule.
+
+use super::{bwd_upstream, fwd_upstream, WorkItem};
+
+/// Specification consumed by [`greedy_items`].
+pub(crate) struct GreedySpec {
+    pub num_stages: usize,
+    pub num_micro: usize,
+    pub num_chunks: usize,
+    /// Global forward launch order, identical across stages: (chunk, micro).
+    pub fseq: Vec<(usize, usize)>,
+    /// Global backward launch order, identical across stages.
+    pub bseq: Vec<(usize, usize)>,
+    /// Per-stage warmup: forwards issued before the first backward attempt.
+    pub warmup: Vec<usize>,
+    /// Per-stage cap on in-flight units (forwards done − backwards done);
+    /// bounds activation memory once warmup completes.
+    pub cap: Vec<usize>,
+    /// Emit a W (weight-grad) item for every backward (ZB-style split).
+    pub split_bwd: bool,
+}
+
+pub(crate) fn greedy_items(spec: &GreedySpec) -> Vec<Vec<WorkItem>> {
+    let p = spec.num_stages;
+    let m = spec.num_micro;
+    let v = spec.num_chunks;
+    let total = m * v;
+    assert_eq!(spec.fseq.len(), total);
+    assert_eq!(spec.bseq.len(), total);
+    let idx = |c: usize, mb: usize| c * m + mb;
+
+    // Completion tick (exclusive) per (stage, chunk*m+micro).
+    let mut f_done: Vec<Vec<Option<usize>>> = vec![vec![None; total]; p];
+    let mut b_done: Vec<Vec<Option<usize>>> = vec![vec![None; total]; p];
+    let mut fi = vec![0usize; p]; // next fseq index
+    let mut bi = vec![0usize; p]; // next bseq index
+    let mut wi = vec![0usize; p]; // W items emitted (consume bseq[0..bi])
+    let mut order: Vec<Vec<WorkItem>> = vec![Vec::with_capacity(3 * total); p];
+
+    let per_stage = total * if spec.split_bwd { 3 } else { 2 };
+    let goal = p * per_stage;
+    let mut executed = 0usize;
+    // Every tick at least one stage progresses in a feasible schedule;
+    // the bound is generous slack over the serial length.
+    let max_ticks = 4 * (goal + p + 8);
+
+    let done_by = |slot: &Option<usize>, tick: usize| matches!(slot, Some(t) if *t <= tick);
+
+    for tick in 0..max_ticks {
+        if executed == goal {
+            break;
+        }
+        // Decisions are made against completions from *earlier* ticks;
+        // mutations are buffered per tick.
+        let mut completions: Vec<(usize, WorkItem)> = Vec::new();
+        for s in 0..p {
+            if order[s].len() == per_stage {
+                continue;
+            }
+            let f_ready = fi[s] < total && {
+                let (c, mb) = spec.fseq[fi[s]];
+                match fwd_upstream(s, c, p) {
+                    None => true,
+                    Some((s2, c2)) => done_by(&f_done[s2][idx(c2, mb)], tick),
+                }
+            };
+            let b_ready = bi[s] < total && {
+                let (c, mb) = spec.bseq[bi[s]];
+                match bwd_upstream(s, c, p, v) {
+                    None => done_by(&f_done[s][idx(c, mb)], tick),
+                    Some((s2, c2)) => done_by(&b_done[s2][idx(c2, mb)], tick),
+                }
+            };
+            let inflight = fi[s] - bi[s];
+            let w_avail = spec.split_bwd && wi[s] < bi[s];
+
+            let choice = if fi[s] < spec.warmup[s] && f_ready {
+                // Warmup: fill the pipeline.
+                Some(WorkKindChoice::F)
+            } else if b_ready {
+                // Steady/cool-down: backwards drive the critical path.
+                Some(WorkKindChoice::B)
+            } else if f_ready && inflight < spec.cap[s] {
+                Some(WorkKindChoice::F)
+            } else if w_avail {
+                // Fill the stall with deferred weight-grad work.
+                Some(WorkKindChoice::W)
+            } else {
+                None
+            };
+
+            match choice {
+                Some(WorkKindChoice::F) => {
+                    let (c, mb) = spec.fseq[fi[s]];
+                    fi[s] += 1;
+                    order[s].push(WorkItem::fwd(mb, c));
+                    completions.push((s, WorkItem::fwd(mb, c)));
+                }
+                Some(WorkKindChoice::B) => {
+                    let (c, mb) = spec.bseq[bi[s]];
+                    bi[s] += 1;
+                    order[s].push(WorkItem::bwd(mb, c));
+                    completions.push((s, WorkItem::bwd(mb, c)));
+                }
+                Some(WorkKindChoice::W) => {
+                    let (c, mb) = spec.bseq[wi[s]];
+                    wi[s] += 1;
+                    order[s].push(WorkItem::wgrad(mb, c));
+                }
+                None => {}
+            }
+        }
+        let now: usize = order.iter().map(|o| o.len()).sum();
+        if now == executed {
+            // Nothing moved this tick. Readiness only depends on already
+            // applied completions and nothing is in flight under unit
+            // durations, so no future tick can differ: the rule set has
+            // wedged — emit the safe phase order instead.
+            return fallback_phase_order(spec);
+        }
+        for (s, it) in &completions {
+            let slot = idx(it.chunk, it.micro);
+            match it.kind {
+                super::WorkKind::Fwd => f_done[*s][slot] = Some(tick + 1),
+                super::WorkKind::Bwd => b_done[*s][slot] = Some(tick + 1),
+                super::WorkKind::WGrad => {}
+            }
+        }
+        executed = now;
+    }
+
+    if executed != goal {
+        return fallback_phase_order(spec);
+    }
+    order
+}
+
+enum WorkKindChoice {
+    F,
+    B,
+    W,
+}
+
+/// Trivially-safe order: all forwards in launch order, then each backward
+/// followed by its W. Identical across stages, so every dependency points
+/// at an earlier-or-equal launch position upstream — acyclic.
+fn fallback_phase_order(spec: &GreedySpec) -> Vec<Vec<WorkItem>> {
+    let mut one = Vec::with_capacity(spec.fseq.len() * 3);
+    for &(c, mb) in &spec.fseq {
+        one.push(WorkItem::fwd(mb, c));
+    }
+    for &(c, mb) in &spec.bseq {
+        one.push(WorkItem::bwd(mb, c));
+        if spec.split_bwd {
+            one.push(WorkItem::wgrad(mb, c));
+        }
+    }
+    vec![one; spec.num_stages]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::WorkKind;
+
+    fn simple_spec(p: usize, m: usize) -> GreedySpec {
+        GreedySpec {
+            num_stages: p,
+            num_micro: m,
+            num_chunks: 1,
+            fseq: (0..m).map(|q| (0, q)).collect(),
+            bseq: (0..m).map(|q| (0, q)).collect(),
+            warmup: (0..p).map(|s| p - s - 1).collect(),
+            cap: (0..p).map(|s| p - s).collect(),
+            split_bwd: false,
+        }
+    }
+
+    #[test]
+    fn unit_1f1b_matches_closed_form() {
+        // With 1F1B warmup/cap parameters the greedy generator reproduces
+        // the classic 1F1B item order on every stage.
+        for (p, m) in [(2usize, 3usize), (4, 8), (3, 2)] {
+            let items = greedy_items(&simple_spec(p, m));
+            for s in 0..p {
+                assert_eq!(
+                    items[s],
+                    crate::sched::onefoneb_items(s, p, m),
+                    "p={p} m={m} stage={s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn split_emits_all_wgrads() {
+        let mut spec = simple_spec(3, 4);
+        spec.split_bwd = true;
+        let items = greedy_items(&spec);
+        for s in 0..3 {
+            let w = items[s].iter().filter(|i| i.kind == WorkKind::WGrad).count();
+            assert_eq!(w, 4, "stage {s}: {:?}", items[s]);
+        }
+    }
+
+    #[test]
+    fn fallback_is_used_when_wedged() {
+        // cap 0 everywhere: no forward can ever issue after warmup 0.
+        let mut spec = simple_spec(2, 2);
+        spec.warmup = vec![0, 0];
+        spec.cap = vec![0, 0];
+        let items = greedy_items(&spec);
+        // Fallback: forwards then backwards on every stage.
+        for s in 0..2 {
+            assert!(items[s][..2].iter().all(|i| i.is_fwd()));
+            assert!(items[s][2..].iter().all(|i| i.is_bwd()));
+        }
+    }
+}

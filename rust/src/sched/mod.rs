@@ -1,0 +1,414 @@
+//! Pluggable pipeline-parallel training schedules.
+//!
+//! The paper evaluates Lynx under 1F1B only; this subsystem generalises
+//! the simulator to any pipeline schedule so recomputation overlap can be
+//! studied against different bubble structures ("Pipeline Parallelism
+//! with Controllable Memory" shows schedule choice moves both the bubbles
+//! and the peak activation memory):
+//!
+//! * [`GPipe`] — all forwards, then all backwards (maximal memory,
+//!   bubbles concentrated at the phase boundary);
+//! * [`OneFOneB`] — classic 1F1B (ported from the old
+//!   `sim::schedule`), warmup / steady / cool-down;
+//! * [`Interleaved1F1B`] — Megatron-style interleaved 1F1B over `v`
+//!   virtual model chunks per stage (smaller warm-up bubbles, more
+//!   in-flight chunk activations);
+//! * [`ZbH1`] — a zero-bubble-style schedule that splits backward into
+//!   B (input-grad, on the critical dataflow path) and W (weight-grad,
+//!   deferrable) items, filling cool-down stalls with W work.
+//!
+//! A schedule is a [`PipelineSchedule`]: a per-stage work order of
+//! [`WorkItem`]s (microbatch × model chunk × F/B/W kind), a replayable
+//! in-flight-activation account ([`peak_inflight_replay`]), and — via the
+//! generic executor in [`crate::sim::engine`] — explicit *overlap
+//! windows*: each stall's start and duration, which the Lynx planner
+//! consumes to slot recomputation off the critical path.
+//!
+//! Cross-stage dependencies are uniform over *virtual stages*
+//! `vs = chunk * num_stages + stage` ([`fwd_upstream`] /
+//! [`bwd_upstream`]): forwards flow up the virtual chain, input-grad
+//! backwards flow back down it, and W depends only on its own stage's B.
+
+pub mod gpipe;
+pub mod greedy;
+pub mod interleaved;
+pub mod onefoneb;
+pub mod zbh1;
+
+pub use gpipe::GPipe;
+pub use interleaved::Interleaved1F1B;
+pub use onefoneb::{cooldown_start, onefoneb_items, OneFOneB};
+pub use zbh1::ZbH1;
+
+/// Kind of one unit of stage work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkKind {
+    /// Forward of one microbatch through one model chunk.
+    Fwd,
+    /// Backward input-grad (for combined-backward schedules this is the
+    /// whole backward).
+    Bwd,
+    /// Deferred weight-grad (only emitted by backward-splitting
+    /// schedules such as ZB-H1).
+    WGrad,
+}
+
+/// One unit of work in a stage's order: kind × microbatch × model chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WorkItem {
+    pub kind: WorkKind,
+    pub micro: usize,
+    /// Virtual model chunk hosted by the stage (always 0 for
+    /// non-interleaved schedules).
+    pub chunk: usize,
+}
+
+impl WorkItem {
+    pub fn fwd(micro: usize, chunk: usize) -> WorkItem {
+        WorkItem { kind: WorkKind::Fwd, micro, chunk }
+    }
+
+    pub fn bwd(micro: usize, chunk: usize) -> WorkItem {
+        WorkItem { kind: WorkKind::Bwd, micro, chunk }
+    }
+
+    pub fn wgrad(micro: usize, chunk: usize) -> WorkItem {
+        WorkItem { kind: WorkKind::WGrad, micro, chunk }
+    }
+
+    pub fn microbatch(&self) -> usize {
+        self.micro
+    }
+
+    pub fn is_fwd(&self) -> bool {
+        self.kind == WorkKind::Fwd
+    }
+
+    pub fn is_bwd(&self) -> bool {
+        self.kind == WorkKind::Bwd
+    }
+
+    pub fn is_wgrad(&self) -> bool {
+        self.kind == WorkKind::WGrad
+    }
+}
+
+/// Names a pipeline schedule across config, CLI and benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    GPipe,
+    OneFOneB,
+    /// Interleaved 1F1B with `chunks` virtual chunks per stage.
+    Interleaved { chunks: usize },
+    ZbH1,
+}
+
+impl ScheduleKind {
+    /// Parse a CLI name; `chunks` applies to `interleaved`.
+    pub fn parse(s: &str, chunks: usize) -> Option<ScheduleKind> {
+        Some(match s {
+            "gpipe" => ScheduleKind::GPipe,
+            "1f1b" => ScheduleKind::OneFOneB,
+            "interleaved" => ScheduleKind::Interleaved { chunks: chunks.max(1) },
+            "zbh1" => ScheduleKind::ZbH1,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScheduleKind::GPipe => "gpipe",
+            ScheduleKind::OneFOneB => "1f1b",
+            ScheduleKind::Interleaved { .. } => "interleaved",
+            ScheduleKind::ZbH1 => "zbh1",
+        }
+    }
+
+    /// The four kinds with default parameters, for sweeps.
+    pub fn all() -> Vec<ScheduleKind> {
+        vec![
+            ScheduleKind::GPipe,
+            ScheduleKind::OneFOneB,
+            ScheduleKind::Interleaved { chunks: 2 },
+            ScheduleKind::ZbH1,
+        ]
+    }
+
+    /// Instantiate the schedule for a pipeline shape.
+    pub fn build(&self, num_stages: usize, num_micro: usize) -> Box<dyn PipelineSchedule> {
+        match *self {
+            ScheduleKind::GPipe => Box::new(GPipe::new(num_stages, num_micro)),
+            ScheduleKind::OneFOneB => Box::new(OneFOneB::new(num_stages, num_micro)),
+            ScheduleKind::Interleaved { chunks } => {
+                Box::new(Interleaved1F1B::new(num_stages, num_micro, chunks))
+            }
+            ScheduleKind::ZbH1 => Box::new(ZbH1::new(num_stages, num_micro)),
+        }
+    }
+}
+
+/// A pipeline-parallel training schedule.
+///
+/// Implementations generate each stage's work order; the simulator
+/// resolves timing and dependencies generically (see
+/// [`crate::sim::engine::run_schedule`]). Orders must be *executable*:
+/// the union of per-stage sequencing and the virtual-stage dependency
+/// edges must be acyclic — [`validate_executable`] checks this and the
+/// property suite runs it over the whole (schedule × shape) grid.
+pub trait PipelineSchedule: Send + Sync {
+    fn kind(&self) -> ScheduleKind;
+
+    fn num_stages(&self) -> usize;
+
+    fn num_micro(&self) -> usize;
+
+    /// Virtual model chunks per stage (1 for non-interleaved schedules).
+    fn num_chunks(&self) -> usize {
+        1
+    }
+
+    /// The stage's work order, covering every chunk it hosts.
+    fn stage_items(&self, stage: usize) -> Vec<WorkItem>;
+
+    /// For backward-splitting schedules: the fraction of the combined
+    /// backward attributable to the input-grad (B) item; `None` means the
+    /// backward runs as a single combined item.
+    fn backward_split(&self) -> Option<f64> {
+        None
+    }
+
+    /// Peak in-flight activation units on `stage` — one unit is one
+    /// microbatch through one hosted chunk. Defaults to replaying the
+    /// stage's work order; overrides must match the replay (property
+    /// tested).
+    fn peak_inflight(&self, stage: usize) -> usize {
+        peak_inflight_replay(&self.stage_items(stage))
+    }
+
+    fn label(&self) -> &'static str {
+        self.kind().label()
+    }
+}
+
+/// Replay a stage order counting live activation units: a forward
+/// allocates a unit, the matching input-grad backward releases it (the
+/// small residual W holds are ignored — ZB-H1 keeps 1F1B-level memory).
+pub fn peak_inflight_replay(items: &[WorkItem]) -> usize {
+    let mut live: i64 = 0;
+    let mut peak: i64 = 0;
+    for it in items {
+        match it.kind {
+            WorkKind::Fwd => {
+                live += 1;
+                peak = peak.max(live);
+            }
+            WorkKind::Bwd => live -= 1,
+            WorkKind::WGrad => {}
+        }
+    }
+    peak.max(0) as usize
+}
+
+/// Virtual stage index of `(stage, chunk)` in forward dataflow order.
+pub fn virtual_stage(stage: usize, chunk: usize, num_stages: usize) -> usize {
+    chunk * num_stages + stage
+}
+
+/// The `(stage, chunk)` whose forward output feeds `F(stage, chunk)`;
+/// `None` for the first virtual stage.
+pub fn fwd_upstream(stage: usize, chunk: usize, num_stages: usize) -> Option<(usize, usize)> {
+    if stage > 0 {
+        Some((stage - 1, chunk))
+    } else if chunk > 0 {
+        Some((num_stages - 1, chunk - 1))
+    } else {
+        None
+    }
+}
+
+/// The `(stage, chunk)` whose input-grad feeds `B(stage, chunk)`;
+/// `None` for the last virtual stage (its dy comes from the loss).
+pub fn bwd_upstream(
+    stage: usize,
+    chunk: usize,
+    num_stages: usize,
+    num_chunks: usize,
+) -> Option<(usize, usize)> {
+    if stage + 1 < num_stages {
+        Some((stage + 1, chunk))
+    } else if chunk + 1 < num_chunks {
+        Some((0, chunk + 1))
+    } else {
+        None
+    }
+}
+
+/// Check that the schedule's per-stage orders can execute to completion
+/// under the virtual-stage dependency rules (no deadlock) and that every
+/// (microbatch, chunk) appears exactly once per kind per stage. Returns a
+/// description of the first violation.
+pub fn validate_executable(sched: &dyn PipelineSchedule) -> Result<(), String> {
+    let items: Vec<Vec<WorkItem>> =
+        (0..sched.num_stages()).map(|s| sched.stage_items(s)).collect();
+    validate_items(
+        &items,
+        sched.num_stages(),
+        sched.num_micro(),
+        sched.num_chunks(),
+        sched.backward_split().is_some(),
+    )
+}
+
+/// Core of [`validate_executable`], usable on raw item lists before a
+/// schedule object exists (the interleaved constructor probes its closed
+/// form this way).
+pub fn validate_items(
+    items: &[Vec<WorkItem>],
+    p: usize,
+    m: usize,
+    v: usize,
+    split: bool,
+) -> Result<(), String> {
+    if items.len() != p {
+        return Err(format!("{} stage lists for {p} stages", items.len()));
+    }
+    // Completeness: each (micro, chunk) once per kind per stage.
+    for (s, list) in items.iter().enumerate() {
+        let expect = m * v * if split { 3 } else { 2 };
+        if list.len() != expect {
+            return Err(format!("stage {s}: {} items, expected {expect}", list.len()));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for it in list {
+            if it.micro >= m || it.chunk >= v {
+                return Err(format!("stage {s}: out-of-range item {it:?}"));
+            }
+            if it.kind == WorkKind::WGrad && !split {
+                return Err(format!("stage {s}: WGrad item from a combined-backward schedule"));
+            }
+            if !seen.insert(*it) {
+                return Err(format!("stage {s}: duplicate item {it:?}"));
+            }
+        }
+    }
+
+    // Executability: repeatedly run each stage's next item when its
+    // dependencies are complete. `done` is indexed [stage][chunk*m+micro]
+    // per kind.
+    let idx = |c: usize, mb: usize| c * m + mb;
+    let mut f_done = vec![vec![false; v * m]; p];
+    let mut b_done = vec![vec![false; v * m]; p];
+    let mut next = vec![0usize; p];
+    let total: usize = items.iter().map(|l| l.len()).sum();
+    let mut executed = 0usize;
+    loop {
+        let mut progressed = false;
+        for s in 0..p {
+            while next[s] < items[s].len() {
+                let it = items[s][next[s]];
+                let ready = match it.kind {
+                    WorkKind::Fwd => match fwd_upstream(s, it.chunk, p) {
+                        None => true,
+                        Some((s2, c2)) => f_done[s2][idx(c2, it.micro)],
+                    },
+                    WorkKind::Bwd => match bwd_upstream(s, it.chunk, p, v) {
+                        None => f_done[s][idx(it.chunk, it.micro)],
+                        Some((s2, c2)) => b_done[s2][idx(c2, it.micro)],
+                    },
+                    WorkKind::WGrad => b_done[s][idx(it.chunk, it.micro)],
+                };
+                if !ready {
+                    break;
+                }
+                match it.kind {
+                    WorkKind::Fwd => f_done[s][idx(it.chunk, it.micro)] = true,
+                    WorkKind::Bwd => b_done[s][idx(it.chunk, it.micro)] = true,
+                    WorkKind::WGrad => {}
+                }
+                next[s] += 1;
+                executed += 1;
+                progressed = true;
+            }
+        }
+        if executed == total {
+            return Ok(());
+        }
+        if !progressed {
+            let stuck: Vec<String> = (0..p)
+                .filter(|&s| next[s] < items[s].len())
+                .map(|s| format!("stage {s} at {:?}", items[s][next[s]]))
+                .collect();
+            return Err(format!("deadlock: {}", stuck.join(", ")));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in ScheduleKind::all() {
+            assert_eq!(ScheduleKind::parse(k.label(), 2), Some(k));
+        }
+        assert_eq!(ScheduleKind::parse("nope", 2), None);
+    }
+
+    #[test]
+    fn parse_respects_chunks() {
+        assert_eq!(
+            ScheduleKind::parse("interleaved", 3),
+            Some(ScheduleKind::Interleaved { chunks: 3 })
+        );
+        // chunks only applies to interleaved
+        assert_eq!(ScheduleKind::parse("1f1b", 3), Some(ScheduleKind::OneFOneB));
+    }
+
+    #[test]
+    fn virtual_stage_chain_is_consistent() {
+        let (p, v) = (4, 3);
+        // Walking fwd_upstream from the last virtual stage visits every
+        // virtual stage exactly once, in reverse order.
+        let mut at = Some((p - 1, v - 1));
+        let mut count = 0;
+        while let Some((s, c)) = at {
+            count += 1;
+            assert_eq!(virtual_stage(s, c, p), p * v - count);
+            at = fwd_upstream(s, c, p);
+        }
+        assert_eq!(count, p * v);
+        // bwd_upstream is the reverse walk.
+        let mut at = Some((0, 0));
+        let mut count = 0;
+        while let Some((s, c)) = at {
+            count += 1;
+            assert_eq!(virtual_stage(s, c, p), count - 1);
+            at = bwd_upstream(s, c, p, v);
+        }
+        assert_eq!(count, p * v);
+    }
+
+    #[test]
+    fn replay_counts_live_units() {
+        let items = vec![
+            WorkItem::fwd(0, 0),
+            WorkItem::fwd(1, 0),
+            WorkItem::bwd(0, 0),
+            WorkItem::wgrad(0, 0),
+            WorkItem::fwd(2, 0),
+            WorkItem::bwd(1, 0),
+            WorkItem::bwd(2, 0),
+        ];
+        assert_eq!(peak_inflight_replay(&items), 2);
+    }
+
+    #[test]
+    fn all_kinds_build_and_validate() {
+        for k in ScheduleKind::all() {
+            let sched = k.build(4, 8);
+            validate_executable(sched.as_ref())
+                .unwrap_or_else(|e| panic!("{}: {e}", k.label()));
+        }
+    }
+}

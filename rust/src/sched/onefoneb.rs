@@ -1,0 +1,169 @@
+//! The 1F1B (one-forward-one-backward) pipeline schedule (paper §2.1,
+//! Fig. 1(b)), ported from the old hard-coded `sim::schedule` module:
+//! each stage runs a warmup of forwards, a steady phase of alternating
+//! F/B, and a cool-down of trailing backwards.
+
+use super::{PipelineSchedule, ScheduleKind, WorkItem};
+
+/// The 1F1B work order for `stage` of `num_stages` with `num_micro`
+/// microbatches. Warmup depth is `min(num_stages - stage - 1, num_micro)`.
+pub fn onefoneb_items(stage: usize, num_stages: usize, num_micro: usize) -> Vec<WorkItem> {
+    assert!(stage < num_stages);
+    let warmup = (num_stages - stage - 1).min(num_micro);
+    let mut items = Vec::with_capacity(2 * num_micro);
+    for m in 0..warmup {
+        items.push(WorkItem::fwd(m, 0));
+    }
+    // Steady: 1F1B pairs.
+    for k in 0..num_micro - warmup {
+        items.push(WorkItem::fwd(warmup + k, 0));
+        items.push(WorkItem::bwd(k, 0));
+    }
+    // Cool-down: drain remaining backwards.
+    for m in num_micro - warmup..num_micro {
+        items.push(WorkItem::bwd(m, 0));
+    }
+    items
+}
+
+/// Index of the cool-down boundary: items at or after this index are
+/// cool-down backwards (used by Opt-3 reporting).
+pub fn cooldown_start(stage: usize, num_stages: usize, num_micro: usize) -> usize {
+    let warmup = (num_stages - stage - 1).min(num_micro);
+    warmup + 2 * (num_micro - warmup)
+}
+
+/// Classic 1F1B.
+#[derive(Debug, Clone)]
+pub struct OneFOneB {
+    num_stages: usize,
+    num_micro: usize,
+}
+
+impl OneFOneB {
+    pub fn new(num_stages: usize, num_micro: usize) -> OneFOneB {
+        assert!(num_stages >= 1 && num_micro >= 1);
+        OneFOneB { num_stages, num_micro }
+    }
+}
+
+impl PipelineSchedule for OneFOneB {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::OneFOneB
+    }
+
+    fn num_stages(&self) -> usize {
+        self.num_stages
+    }
+
+    fn num_micro(&self) -> usize {
+        self.num_micro
+    }
+
+    fn stage_items(&self, stage: usize) -> Vec<WorkItem> {
+        onefoneb_items(stage, self.num_stages, self.num_micro)
+    }
+
+    /// Closed form: stage `s` of `p` holds up to `p - s` in-flight
+    /// forwards before its first backward (Observation 2).
+    fn peak_inflight(&self, stage: usize) -> usize {
+        (self.num_stages - stage).min(self.num_micro)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::peak_inflight_replay;
+
+    #[test]
+    fn last_stage_strictly_alternates() {
+        let items = onefoneb_items(3, 4, 5);
+        assert_eq!(
+            items,
+            vec![
+                WorkItem::fwd(0, 0),
+                WorkItem::bwd(0, 0),
+                WorkItem::fwd(1, 0),
+                WorkItem::bwd(1, 0),
+                WorkItem::fwd(2, 0),
+                WorkItem::bwd(2, 0),
+                WorkItem::fwd(3, 0),
+                WorkItem::bwd(3, 0),
+                WorkItem::fwd(4, 0),
+                WorkItem::bwd(4, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn first_stage_has_full_warmup() {
+        let items = onefoneb_items(0, 4, 5);
+        assert_eq!(
+            &items[..3],
+            &[WorkItem::fwd(0, 0), WorkItem::fwd(1, 0), WorkItem::fwd(2, 0)]
+        );
+        // Cool-down is the last `warmup` backwards.
+        assert_eq!(&items[items.len() - 3..], &[
+            WorkItem::bwd(2, 0),
+            WorkItem::bwd(3, 0),
+            WorkItem::bwd(4, 0)
+        ]);
+    }
+
+    #[test]
+    fn every_microbatch_appears_once_each_direction() {
+        for stage in 0..4 {
+            for m_count in [1usize, 2, 5, 8] {
+                let items = onefoneb_items(stage, 4, m_count);
+                assert_eq!(items.len(), 2 * m_count);
+                for m in 0..m_count {
+                    assert_eq!(
+                        items.iter().filter(|i| **i == WorkItem::fwd(m, 0)).count(),
+                        1
+                    );
+                    assert_eq!(
+                        items.iter().filter(|i| **i == WorkItem::bwd(m, 0)).count(),
+                        1
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fwd_precedes_bwd_per_microbatch() {
+        for stage in 0..8 {
+            let items = onefoneb_items(stage, 8, 12);
+            for m in 0..12 {
+                let f = items.iter().position(|i| *i == WorkItem::fwd(m, 0)).unwrap();
+                let b = items.iter().position(|i| *i == WorkItem::bwd(m, 0)).unwrap();
+                assert!(f < b);
+            }
+        }
+    }
+
+    #[test]
+    fn inflight_closed_form_matches_replay() {
+        for p in [1usize, 2, 4, 6] {
+            for m in [1usize, 2, 5, 8, 12] {
+                let sched = OneFOneB::new(p, m);
+                for stage in 0..p {
+                    assert_eq!(
+                        sched.peak_inflight(stage),
+                        peak_inflight_replay(&sched.stage_items(stage)),
+                        "p={p} m={m} stage={stage}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cooldown_start_index() {
+        // stage 0 of 4, 8 microbatches: warmup 3, steady 10, cooldown at 13.
+        assert_eq!(cooldown_start(0, 4, 8), 13);
+        // last stage: no warmup, no cooldown (index = end).
+        assert_eq!(cooldown_start(3, 4, 8), 16);
+    }
+}

@@ -1,0 +1,151 @@
+//! ZB-H1: a zero-bubble-style 1F1B variant with split backward.
+//!
+//! Following "Zero Bubble Pipeline Parallelism" (H1 configuration), the
+//! backward pass is split into B (input-grad — the only part on the
+//! cross-stage dataflow critical path) and W (weight-grad — freely
+//! deferrable). Stages run the 1F1B F/B skeleton but park W items and
+//! replay them inside what would otherwise be warm-up/cool-down stalls,
+//! shrinking the bubble while keeping 1F1B-level activation memory
+//! (units are freed at B; the W residuals the coarse model ignores are
+//! what H1 trades against H2's larger memory).
+//!
+//! Orders come from the unit-time greedy generator: B when ready, else F
+//! within the 1F1B in-flight cap `p − s`, else a pending W.
+
+use super::greedy::{greedy_items, GreedySpec};
+use super::{PipelineSchedule, ScheduleKind, WorkItem};
+
+/// Fraction of the combined backward attributed to the input-grad (B)
+/// item; dX and dW each cost about one forward's FLOPs in a transformer
+/// block, so the split is even.
+pub const B_FRACTION: f64 = 0.5;
+
+#[derive(Debug, Clone)]
+pub struct ZbH1 {
+    num_stages: usize,
+    num_micro: usize,
+    items: Vec<Vec<WorkItem>>,
+}
+
+impl ZbH1 {
+    pub fn new(num_stages: usize, num_micro: usize) -> ZbH1 {
+        assert!(num_stages >= 1 && num_micro >= 1);
+        let (p, m) = (num_stages, num_micro);
+        let items = greedy_items(&GreedySpec {
+            num_stages: p,
+            num_micro: m,
+            num_chunks: 1,
+            fseq: (0..m).map(|q| (0, q)).collect(),
+            bseq: (0..m).map(|q| (0, q)).collect(),
+            warmup: (0..p).map(|s| (p - s - 1).min(m)).collect(),
+            cap: (0..p).map(|s| (p - s).min(m)).collect(),
+            split_bwd: true,
+        });
+        ZbH1 { num_stages, num_micro, items }
+    }
+}
+
+impl PipelineSchedule for ZbH1 {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::ZbH1
+    }
+
+    fn num_stages(&self) -> usize {
+        self.num_stages
+    }
+
+    fn num_micro(&self) -> usize {
+        self.num_micro
+    }
+
+    fn stage_items(&self, stage: usize) -> Vec<WorkItem> {
+        self.items[stage].clone()
+    }
+
+    fn backward_split(&self) -> Option<f64> {
+        Some(B_FRACTION)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{validate_executable, WorkKind};
+
+    #[test]
+    fn emits_f_b_w_for_every_microbatch() {
+        let sched = ZbH1::new(4, 6);
+        for s in 0..4 {
+            let items = sched.stage_items(s);
+            assert_eq!(items.len(), 18);
+            for q in 0..6 {
+                for kind in [WorkKind::Fwd, WorkKind::Bwd, WorkKind::WGrad] {
+                    assert_eq!(
+                        items
+                            .iter()
+                            .filter(|i| i.kind == kind && i.micro == q)
+                            .count(),
+                        1,
+                        "stage {s} micro {q} {kind:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn w_follows_its_b() {
+        let sched = ZbH1::new(4, 8);
+        for s in 0..4 {
+            let items = sched.stage_items(s);
+            for q in 0..8 {
+                let b = items
+                    .iter()
+                    .position(|i| i.kind == WorkKind::Bwd && i.micro == q)
+                    .unwrap();
+                let w = items
+                    .iter()
+                    .position(|i| i.kind == WorkKind::WGrad && i.micro == q)
+                    .unwrap();
+                assert!(b < w, "stage {s} micro {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn keeps_1f1b_memory() {
+        for p in [2usize, 4] {
+            for m in [4usize, 8] {
+                let zb = ZbH1::new(p, m);
+                let base = crate::sched::OneFOneB::new(p, m);
+                for s in 0..p {
+                    assert!(
+                        zb.peak_inflight(s) <= base.peak_inflight(s),
+                        "p={p} m={m} stage {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn executable_across_shape_grid() {
+        for p in [1usize, 2, 3, 5] {
+            for m in [1usize, 2, 4, 9] {
+                validate_executable(&ZbH1::new(p, m))
+                    .unwrap_or_else(|e| panic!("p={p} m={m}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn early_stages_park_w_for_the_cooldown() {
+        // Stage 0 has the deepest cool-down stall; at least one of its W
+        // items should run after its last forward (i.e. fill the drain).
+        let sched = ZbH1::new(4, 8);
+        let items = sched.stage_items(0);
+        let last_f = items.iter().rposition(|i| i.kind == WorkKind::Fwd).unwrap();
+        let w_after = items[last_f..].iter().filter(|i| i.kind == WorkKind::WGrad).count();
+        assert!(w_after >= 1, "{items:?}");
+    }
+}

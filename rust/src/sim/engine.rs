@@ -1,21 +1,32 @@
-//! Dependency-driven timing of the 1F1B schedule.
+//! Dependency-driven timing of any [`PipelineSchedule`].
 //!
 //! Items within a stage run sequentially in schedule order; across
-//! stages, `Fwd(s,m)` waits for `Fwd(s-1,m)` plus the p2p transfer and
-//! `Bwd(s,m)` waits for `Bwd(s+1,m)` plus p2p. Timing is resolved by
-//! fixpoint sweeps over the stages (dependencies form a DAG, so at most
-//! `num_stages` sweeps are needed).
+//! stages, `F(s,c,m)` waits for the upstream virtual stage's forward
+//! plus the p2p transfer, and `B(s,c,m)` waits for the downstream
+//! virtual stage's input-grad plus p2p ([`crate::sched::fwd_upstream`] /
+//! [`crate::sched::bwd_upstream`]). `W` (weight-grad) items wait only on
+//! their own stage's `B`. Timing is resolved by fixpoint sweeps over the
+//! stages (the dependencies form a DAG — schedules are validated
+//! executable — so convergence is bounded by the virtual-pipeline
+//! depth).
 //!
 //! Lynx's flexible recomputation (paper Observation 3 + Opt 3) is modeled
-//! here: exposed recomputation of `Bwd(s,m)` does not depend on the
+//! here: exposed recomputation of a backward does not depend on the
 //! incoming gradient, so in `lynx_absorb` mode it runs inside the idle
 //! gap while the stage waits for dy — during cool-down stalls and any
-//! steady-state bubble. Baseline policies trigger recomputation only when
-//! the backward op itself starts (on-demand in the critical path).
+//! steady-state bubble, under *every* schedule. Baseline policies trigger
+//! recomputation only when the backward op itself starts (on-demand in
+//! the critical path).
+//!
+//! After convergence the engine extracts the schedule's **overlap
+//! windows** — each stall's start and duration, plus how much exposed
+//! recompute the Lynx policy slotted into it — which is the interface the
+//! paper's planner consumes.
 
-use super::schedule::{stage_items, WorkItem};
+use crate::sched::{bwd_upstream, fwd_upstream, OneFOneB, PipelineSchedule, WorkItem, WorkKind};
 
-/// Per-stage timing inputs (seconds, per microbatch).
+/// Per-stage timing inputs (seconds, per microbatch through the whole
+/// stage; the engine divides by the schedule's chunk count).
 #[derive(Debug, Clone)]
 pub struct StageTiming {
     /// Forward duration (includes TP comm and any fwd-window recompute —
@@ -25,95 +36,168 @@ pub struct StageTiming {
     pub bwd: f64,
     /// Exposed (critical-path) recompute duration.
     pub exposed: f64,
-    /// Activation p2p transfer time to the next stage.
+    /// Activation p2p transfer time to the neighbouring stage.
     pub p2p: f64,
+}
+
+/// One stall in a stage's timeline: the gap before `before_item` (an
+/// index into the stage's work order). `consumed` is the exposed
+/// recompute the Lynx absorption policy ran inside the stall.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlapWindow {
+    pub start: f64,
+    pub dur: f64,
+    pub before_item: usize,
+    pub consumed: f64,
 }
 
 /// Trace of one simulated iteration.
 #[derive(Debug, Clone)]
 pub struct PipelineTrace {
-    /// Pipeline makespan (first fwd start to last bwd end), seconds.
+    /// Pipeline makespan (first fwd start to last item end), seconds.
     pub makespan: f64,
-    /// Per-stage busy time.
+    /// Per-stage busy time (absorbed recompute counts as busy).
     pub busy: Vec<f64>,
-    /// Per-stage idle time inside the active window.
+    /// Per-stage idle time inside the iteration.
     pub idle: Vec<f64>,
     /// Per-stage exposed-recompute time absorbed into stalls (Opt 3).
     pub absorbed: Vec<f64>,
     /// Per-stage remaining exposed recompute paid on the critical path.
     pub exposed_paid: Vec<f64>,
-    /// fwd_end[s][m], bwd_end[s][m] completion times.
+    /// `fwd_end[s][chunk * num_micro + micro]` completion times.
     pub fwd_end: Vec<Vec<f64>>,
+    /// Input-grad (B) completion times, same indexing.
     pub bwd_end: Vec<Vec<f64>>,
+    /// Per-stage work order, as executed.
+    pub items: Vec<Vec<WorkItem>>,
+    /// (start, end) of every item in `items`.
+    pub item_spans: Vec<Vec<(f64, f64)>>,
+    /// Stalls between items, per stage — the schedule's overlap windows.
+    pub windows: Vec<Vec<OverlapWindow>>,
+    /// Schedule shape, for renderers.
+    pub num_micro: usize,
+    pub num_chunks: usize,
+    /// Fraction of `StageTiming::bwd` carried by a B item (1.0 when the
+    /// schedule does not split backward).
+    pub bwd_frac: f64,
 }
 
-/// Run the 1F1B pipeline; `lynx_absorb` enables stall absorption of
-/// exposed recomputation (Lynx policies only).
+impl PipelineTrace {
+    /// Whole-pipeline bubble ratio: idle share of `stages × makespan`.
+    pub fn bubble_ratio(&self) -> f64 {
+        let p = self.busy.len() as f64;
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.busy.iter().sum::<f64>() / (p * self.makespan)).max(0.0)
+    }
+
+    /// Total overlap-window seconds on `stage` (stalls the planner could
+    /// still fill after absorption).
+    pub fn window_secs(&self, stage: usize) -> f64 {
+        self.windows[stage].iter().map(|w| w.dur).sum()
+    }
+
+    /// Total window seconds consumed by absorbed recomputation on `stage`.
+    pub fn window_consumed(&self, stage: usize) -> f64 {
+        self.windows[stage].iter().map(|w| w.consumed).sum()
+    }
+}
+
+/// Back-compat wrapper: run classic 1F1B (the only schedule the old
+/// hard-coded engine knew).
 pub fn run_pipeline(
     timings: &[StageTiming],
     num_micro: usize,
     lynx_absorb: bool,
 ) -> PipelineTrace {
-    let p = timings.len();
-    assert!(p >= 1 && num_micro >= 1);
-    let items: Vec<Vec<WorkItem>> =
-        (0..p).map(|s| stage_items(s, p, num_micro)).collect();
+    let sched = OneFOneB::new(timings.len(), num_micro);
+    run_schedule(timings, &sched, lynx_absorb)
+}
 
-    let mut fwd_end = vec![vec![f64::INFINITY; num_micro]; p];
-    let mut bwd_end = vec![vec![f64::INFINITY; num_micro]; p];
+/// Execute any [`PipelineSchedule`]; `lynx_absorb` enables stall
+/// absorption of exposed recomputation (Lynx policies only).
+pub fn run_schedule(
+    timings: &[StageTiming],
+    sched: &dyn PipelineSchedule,
+    lynx_absorb: bool,
+) -> PipelineTrace {
+    let p = timings.len();
+    assert_eq!(p, sched.num_stages(), "timings vs schedule stage count");
+    let m = sched.num_micro();
+    let v = sched.num_chunks();
+    assert!(p >= 1 && m >= 1 && v >= 1);
+    let vf = v as f64;
+    let bwd_frac = sched.backward_split().unwrap_or(1.0);
+    let items: Vec<Vec<WorkItem>> = (0..p).map(|s| sched.stage_items(s)).collect();
+    let idx = |c: usize, mb: usize| c * m + mb;
+
+    let mut fwd_end = vec![vec![f64::INFINITY; v * m]; p];
+    let mut bwd_end = vec![vec![f64::INFINITY; v * m]; p];
     let mut absorbed = vec![0.0; p];
     let mut exposed_paid = vec![0.0; p];
-    let mut busy = vec![0.0; p];
-    let mut item_start = vec![vec![0.0f64; 2 * num_micro]; p];
-    let mut item_end = vec![vec![f64::INFINITY; 2 * num_micro]; p];
+    let mut item_start: Vec<Vec<f64>> = items.iter().map(|l| vec![0.0; l.len()]).collect();
+    let mut item_end: Vec<Vec<f64>> =
+        items.iter().map(|l| vec![f64::INFINITY; l.len()]).collect();
+    let mut item_absorb: Vec<Vec<f64>> = items.iter().map(|l| vec![0.0; l.len()]).collect();
 
     // Fixpoint sweeps: recompute the whole schedule until stable. The
-    // critical path zig-zags between stages once per microbatch, so the
-    // bound is O(stages + microbatches) sweeps.
-    let max_sweeps = 4 * (p + num_micro) + 8;
+    // critical path zig-zags between virtual stages once per microbatch,
+    // so the bound is O((stages + microbatches) · chunks) sweeps.
+    let max_sweeps = 8 * ((p + m) * v + 4) + 16;
     let mut converged = false;
     for _sweep in 0..max_sweeps {
         let mut changed = false;
         for s in 0..p {
             let t = &timings[s];
+            let f_dur = t.fwd / vf;
+            let b_dur = t.bwd / vf * bwd_frac;
+            let w_dur = t.bwd / vf * (1.0 - bwd_frac);
+            let exposed = t.exposed / vf;
             let mut prev_end = 0.0f64;
             absorbed[s] = 0.0;
             exposed_paid[s] = 0.0;
-            busy[s] = 0.0;
             for (k, item) in items[s].iter().enumerate() {
-                let m = item.microbatch();
-                let (start, end) = match item {
-                    WorkItem::Fwd(_) => {
-                        let ready = if s == 0 {
-                            0.0
-                        } else {
-                            fwd_end[s - 1][m] + timings[s - 1].p2p
+                let slot = idx(item.chunk, item.micro);
+                let (start, end) = match item.kind {
+                    WorkKind::Fwd => {
+                        let ready = match fwd_upstream(s, item.chunk, p) {
+                            None => 0.0,
+                            Some((s2, c2)) => fwd_end[s2][idx(c2, item.micro)] + timings[s2].p2p,
                         };
                         let start = prev_end.max(ready);
-                        (start, start + t.fwd)
+                        (start, start + f_dur)
                     }
-                    WorkItem::Bwd(_) => {
-                        let dy_ready = if s + 1 == p {
-                            // Loss gradient is available right after fwd.
-                            fwd_end[s][m]
-                        } else {
-                            bwd_end[s + 1][m] + timings[s + 1].p2p
+                    WorkKind::Bwd => {
+                        let dy_ready = match bwd_upstream(s, item.chunk, p, v) {
+                            // Loss gradient is available right after the
+                            // last virtual stage's forward.
+                            None => fwd_end[s][slot],
+                            Some((s2, c2)) => bwd_end[s2][idx(c2, item.micro)] + timings[s2].p2p,
                         };
                         if lynx_absorb {
                             // Recompute starts as soon as the stage is
                             // free; the gap until dy hides part of it.
                             let gap = (dy_ready - prev_end).max(0.0);
-                            let absorb = gap.min(t.exposed);
+                            let absorb = gap.min(exposed);
                             absorbed[s] += absorb;
-                            exposed_paid[s] += t.exposed - absorb;
+                            exposed_paid[s] += exposed - absorb;
+                            item_absorb[s][k] = absorb;
                             let start = prev_end.max(dy_ready - absorb);
-                            let end = (prev_end + t.exposed).max(dy_ready) + t.bwd;
+                            let end = (prev_end + exposed).max(dy_ready) + b_dur;
                             (start, end)
                         } else {
-                            exposed_paid[s] += t.exposed;
+                            exposed_paid[s] += exposed;
                             let start = prev_end.max(dy_ready);
-                            (start, start + t.exposed + t.bwd)
+                            (start, start + exposed + b_dur)
                         }
+                    }
+                    WorkKind::WGrad => {
+                        // Weight-grad needs its own input-grad done; the
+                        // schedule orders W after B, but enforce anyway.
+                        let ready = bwd_end[s][slot];
+                        let start = prev_end.max(ready);
+                        (start, start + w_dur)
                     }
                 };
                 if item_end[s][k] != end {
@@ -121,9 +205,10 @@ pub fn run_pipeline(
                 }
                 item_start[s][k] = start;
                 item_end[s][k] = end;
-                match item {
-                    WorkItem::Fwd(_) => fwd_end[s][m] = end,
-                    WorkItem::Bwd(_) => bwd_end[s][m] = end,
+                match item.kind {
+                    WorkKind::Fwd => fwd_end[s][slot] = end,
+                    WorkKind::Bwd => bwd_end[s][slot] = end,
+                    WorkKind::WGrad => {}
                 }
                 prev_end = end;
             }
@@ -133,34 +218,82 @@ pub fn run_pipeline(
             break;
         }
     }
-    assert!(converged, "1F1B timing did not converge (p={p}, m={num_micro})");
+    assert!(
+        converged,
+        "{} timing did not converge (p={p}, m={m}, v={v})",
+        sched.label()
+    );
 
-    let makespan = bwd_end
+    let makespan = item_end
         .iter()
-        .flat_map(|v| v.iter())
+        .flat_map(|ends| ends.iter())
         .cloned()
         .fold(0.0, f64::max);
+
+    let mut busy = vec![0.0; p];
     let mut idle = vec![0.0; p];
+    let mut windows: Vec<Vec<OverlapWindow>> = vec![Vec::new(); p];
     for s in 0..p {
         let t = &timings[s];
+        let f_dur = t.fwd / vf;
+        let b_dur = t.bwd / vf * bwd_frac;
+        let w_dur = t.bwd / vf * (1.0 - bwd_frac);
         busy[s] = items[s]
             .iter()
-            .map(|it| match it {
-                WorkItem::Fwd(_) => t.fwd,
-                WorkItem::Bwd(_) => t.bwd,
+            .map(|it| match it.kind {
+                WorkKind::Fwd => f_dur,
+                WorkKind::Bwd => b_dur,
+                WorkKind::WGrad => w_dur,
             })
             .sum::<f64>()
             + exposed_paid[s]
             + absorbed[s];
         idle[s] = (makespan - busy[s]).max(0.0);
+
+        // Overlap windows: residual stalls between consecutive items
+        // (after any absorption already moved B starts earlier). The
+        // pipeline-fill gap before the first item is excluded — there is
+        // nothing to recompute before the first forward.
+        let mut prev_end = item_start[s].first().copied().unwrap_or(0.0);
+        for k in 0..items[s].len() {
+            let gap = item_start[s][k] - prev_end;
+            if gap > 1e-12 || item_absorb[s][k] > 1e-12 {
+                windows[s].push(OverlapWindow {
+                    start: prev_end,
+                    dur: gap.max(0.0),
+                    before_item: k,
+                    consumed: item_absorb[s][k],
+                });
+            }
+            prev_end = item_end[s][k];
+        }
     }
 
-    PipelineTrace { makespan, busy, idle, absorbed, exposed_paid, fwd_end, bwd_end }
+    PipelineTrace {
+        makespan,
+        busy,
+        idle,
+        absorbed,
+        exposed_paid,
+        fwd_end,
+        bwd_end,
+        items,
+        item_spans: item_start
+            .iter()
+            .zip(&item_end)
+            .map(|(ss, es)| ss.iter().cloned().zip(es.iter().cloned()).collect())
+            .collect(),
+        windows,
+        num_micro: m,
+        num_chunks: v,
+        bwd_frac,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::{GPipe, Interleaved1F1B, ScheduleKind, ZbH1};
 
     fn uniform(p: usize, fwd: f64, bwd: f64, exposed: f64) -> Vec<StageTiming> {
         (0..p)
@@ -260,5 +393,90 @@ mod tests {
         assert!(tr.makespan >= 16.0 * 6.0 - 1e-9);
         // Other stages show large idle.
         assert!(tr.idle[0] > tr.idle[2]);
+    }
+
+    // ---------------------------------------------- schedule generality
+
+    #[test]
+    fn gpipe_matches_1f1b_makespan_with_uniform_stages() {
+        // With balanced stages GPipe and 1F1B have the same critical path
+        // (they differ in memory, not bubbles).
+        let t = uniform(4, 1.0, 2.0, 0.0);
+        let g = run_schedule(&t, &GPipe::new(4, 8), false);
+        let o = run_pipeline(&t, 8, false);
+        assert!((g.makespan - o.makespan).abs() < 1e-9, "{} vs {}", g.makespan, o.makespan);
+    }
+
+    #[test]
+    fn interleaving_shrinks_the_bubble() {
+        let t = uniform(4, 1.0, 2.0, 0.0);
+        let o = run_pipeline(&t, 8, false);
+        let i2 = run_schedule(&t, &Interleaved1F1B::new(4, 8, 2), false);
+        assert!(
+            i2.bubble_ratio() < o.bubble_ratio() - 1e-9,
+            "interleaved {} vs 1f1b {}",
+            i2.bubble_ratio(),
+            o.bubble_ratio()
+        );
+        assert!(i2.makespan < o.makespan - 1e-9);
+    }
+
+    #[test]
+    fn zbh1_fills_cooldown_with_wgrad() {
+        let t = uniform(4, 1.0, 2.0, 0.0);
+        let o = run_pipeline(&t, 8, false);
+        let z = run_schedule(&t, &ZbH1::new(4, 8), false);
+        assert!(
+            z.bubble_ratio() < o.bubble_ratio() - 1e-9,
+            "zbh1 {} vs 1f1b {}",
+            z.bubble_ratio(),
+            o.bubble_ratio()
+        );
+        assert!(z.makespan < o.makespan - 1e-9);
+        // Total work per stage is identical — W is bwd time moved, not
+        // added.
+        assert!((z.busy[0] - o.busy[0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absorption_works_under_every_schedule() {
+        let t = uniform(4, 1.0, 2.0, 0.6);
+        for kind in ScheduleKind::all() {
+            let sched = kind.build(4, 8);
+            let od = run_schedule(&t, sched.as_ref(), false);
+            let lx = run_schedule(&t, sched.as_ref(), true);
+            assert!(
+                lx.makespan <= od.makespan + 1e-9,
+                "{}: {} vs {}",
+                kind.label(),
+                lx.makespan,
+                od.makespan
+            );
+            let absorbed: f64 = lx.absorbed.iter().sum();
+            assert!(absorbed > 0.0, "{}: no absorption", kind.label());
+            for s in 0..4 {
+                let total = lx.absorbed[s] + lx.exposed_paid[s];
+                assert!(
+                    (total - 8.0 * 0.6).abs() < 1e-9,
+                    "{} stage {s}: {total}",
+                    kind.label()
+                );
+            }
+            // Consumed window time must equal the absorbed total.
+            let consumed: f64 = (0..4).map(|s| lx.window_consumed(s)).sum();
+            assert!((consumed - absorbed).abs() < 1e-9, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn windows_cover_the_idle_gaps() {
+        let t = uniform(4, 1.0, 2.0, 0.0);
+        let tr = run_pipeline(&t, 8, false);
+        // Stage 0 stalls during cool-down: it must report windows.
+        assert!(tr.window_secs(0) > 0.0);
+        // Window time is bounded by the stage's idle time.
+        for s in 0..4 {
+            assert!(tr.window_secs(s) <= tr.idle[s] + 1e-9, "stage {s}");
+        }
     }
 }

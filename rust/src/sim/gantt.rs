@@ -1,56 +1,65 @@
-//! ASCII Gantt rendering of a simulated 1F1B pipeline trace.
+//! ASCII Gantt rendering of a simulated pipeline trace.
 //!
 //! Turns a [`super::engine::PipelineTrace`] into the familiar
-//! pipeline-parallelism diagram (paper Fig. 1(b) / Fig. 5): one row per
-//! stage, `F`/`B` cells per microbatch, `r` where exposed recomputation
-//! runs in the critical path, and `·` for idle. Used by
-//! `lynx simulate --gantt` and the quickstart docs.
+//! pipeline-parallelism diagram (paper Fig. 1(b) / Fig. 5) for any
+//! schedule: one row per (stage, chunk) — interleaved schedules get one
+//! row per hosted virtual chunk — with `F`/`B` cells per microbatch,
+//! `w` where a ZB-style schedule runs deferred weight-grad work, `r`
+//! where exposed recomputation runs in the critical path, and `·` for
+//! idle. Used by `lynx simulate --gantt` and the quickstart docs.
 
 use super::engine::{PipelineTrace, StageTiming};
-use super::schedule::{stage_items, WorkItem};
+use crate::sched::WorkKind;
 
-/// Render the trace as one text row per stage, `cols` characters wide.
-pub fn render_gantt(
-    timings: &[StageTiming],
-    trace: &PipelineTrace,
-    num_micro: usize,
-    cols: usize,
-) -> String {
+/// Render the trace as one text row per (stage, chunk), `cols` characters
+/// wide. `timings` must be the inputs the trace was produced from (used
+/// to split B spans into recompute + backward segments); the schedule
+/// shape is carried by the trace itself.
+pub fn render_gantt(timings: &[StageTiming], trace: &PipelineTrace, cols: usize) -> String {
     let p = timings.len();
+    let v = trace.num_chunks;
     let span = trace.makespan.max(1e-12);
     let scale = cols as f64 / span;
     let mut out = String::new();
     out.push_str(&format!(
-        "1F1B gantt — {p} stages × {num_micro} microbatches, makespan {:.3}s\n",
-        trace.makespan
+        "pipeline gantt — {p} stages × {} microbatches × {v} chunk(s), makespan {:.3}s\n",
+        trace.num_micro, trace.makespan
     ));
     for s in 0..p {
-        let mut row = vec!['·'; cols];
-        let items = stage_items(s, p, num_micro);
-        for item in items {
-            let m = item.microbatch();
-            let (start, end, label) = match item {
-                WorkItem::Fwd(_) => {
-                    let end = trace.fwd_end[s][m];
-                    (end - timings[s].fwd, end, fwd_char(m))
+        // One row per chunk hosted by the stage.
+        let mut rows = vec![vec!['·'; cols]; v];
+        let b_dur = timings[s].bwd / v as f64 * trace.bwd_frac;
+        for (k, item) in trace.items[s].iter().enumerate() {
+            let (start, end) = trace.item_spans[s][k];
+            let row = &mut rows[item.chunk];
+            match item.kind {
+                WorkKind::Fwd => paint(row, start, end, fwd_char(item.micro), scale),
+                WorkKind::Bwd => {
+                    // Exposed/absorbed recompute (if any) precedes the
+                    // backward proper; mark it with 'r'.
+                    let bwd_start = end - b_dur;
+                    if bwd_start > start + 1e-12 {
+                        paint(row, start, bwd_start, 'r', scale);
+                    }
+                    paint(row, bwd_start, end, bwd_char(item.micro), scale);
                 }
-                WorkItem::Bwd(_) => {
-                    let end = trace.bwd_end[s][m];
-                    // Exposed recompute (if any) precedes the backward
-                    // proper; mark it with 'r'.
-                    let bwd_start = end - timings[s].bwd;
-                    let rc_start = bwd_start - timings[s].exposed;
-                    paint(&mut row, rc_start, bwd_start, 'r', scale);
-                    (bwd_start, end, bwd_char(m))
-                }
-            };
-            paint(&mut row, start, end, label, scale);
+                WorkKind::WGrad => paint(row, start, end, 'w', scale),
+            }
         }
-        out.push_str(&format!("stage{s} |"));
-        out.extend(row);
-        out.push_str("|\n");
+        for (c, row) in rows.into_iter().enumerate() {
+            if v == 1 {
+                out.push_str(&format!("stage{s} |"));
+            } else {
+                out.push_str(&format!("stage{s}.{c}|"));
+            }
+            out.extend(row);
+            out.push_str("|\n");
+        }
     }
-    out.push_str("        F/B = fwd/bwd (digit = microbatch mod 10 on capitals' rows), r = exposed recompute, · = idle\n");
+    out.push_str(
+        "        F/B = fwd/bwd (digit = microbatch mod 10, letter = bwd), \
+         w = weight-grad, r = exposed recompute, · = idle\n",
+    );
     out
 }
 
@@ -77,7 +86,8 @@ fn paint(row: &mut [char], start: f64, end: f64, c: char, scale: f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::engine::run_pipeline;
+    use crate::sched::{Interleaved1F1B, ZbH1};
+    use crate::sim::engine::{run_pipeline, run_schedule};
 
     fn uniform(p: usize, fwd: f64, bwd: f64, exposed: f64) -> Vec<StageTiming> {
         (0..p).map(|_| StageTiming { fwd, bwd, exposed, p2p: 0.0 }).collect()
@@ -87,7 +97,7 @@ mod tests {
     fn renders_all_stages_and_legend() {
         let t = uniform(4, 1.0, 2.0, 0.5);
         let tr = run_pipeline(&t, 6, false);
-        let g = render_gantt(&t, &tr, 6, 100);
+        let g = render_gantt(&t, &tr, 100);
         assert_eq!(g.matches("\nstage").count(), 4);
         assert!(g.contains("makespan"));
         assert!(g.contains('r'), "exposed recompute should be visible");
@@ -98,7 +108,7 @@ mod tests {
     fn no_recompute_means_no_r_cells() {
         let t = uniform(2, 1.0, 1.0, 0.0);
         let tr = run_pipeline(&t, 3, false);
-        let g = render_gantt(&t, &tr, 3, 80);
+        let g = render_gantt(&t, &tr, 80);
         assert!(!g
             .lines()
             .skip(1) // header mentions "microbatches"
@@ -110,9 +120,28 @@ mod tests {
     fn first_stage_starts_at_origin() {
         let t = uniform(3, 1.0, 1.0, 0.0);
         let tr = run_pipeline(&t, 4, false);
-        let g = render_gantt(&t, &tr, 4, 60);
+        let g = render_gantt(&t, &tr, 60);
         let stage0 = g.lines().nth(1).unwrap();
         let first_cell = stage0.chars().nth("stage0 |".len()).unwrap();
         assert_eq!(first_cell, '0', "stage0 starts with microbatch 0 fwd");
+    }
+
+    #[test]
+    fn interleaved_renders_one_row_per_chunk() {
+        let t = uniform(4, 1.0, 2.0, 0.0);
+        let sched = Interleaved1F1B::new(4, 8, 2);
+        let tr = run_schedule(&t, &sched, false);
+        let g = render_gantt(&t, &tr, 100);
+        assert_eq!(g.matches("\nstage").count(), 8, "4 stages × 2 chunks:\n{g}");
+        assert!(g.contains("stage0.0|") && g.contains("stage0.1|"));
+    }
+
+    #[test]
+    fn zbh1_shades_wgrad_cells() {
+        let t = uniform(4, 1.0, 2.0, 0.0);
+        let sched = ZbH1::new(4, 8);
+        let tr = run_schedule(&t, &sched, false);
+        let g = render_gantt(&t, &tr, 120);
+        assert!(g.lines().skip(1).take(4).any(|l| l.contains('w')), "{g}");
     }
 }

@@ -1,23 +1,26 @@
 //! Pipeline-training simulator.
 //!
 //! Substitutes the paper's 16×A100 testbeds (DESIGN.md §2): executes a
-//! (partition, recomputation plan) pair under 1F1B pipeline parallelism
-//! and produces iteration time, throughput, per-stage memory, and the
-//! recompute-path breakdowns behind Figs. 2, 6, 7, 8, 9 and 10.
+//! (partition, recomputation plan) pair under any [`crate::sched`]
+//! pipeline schedule — GPipe, 1F1B, interleaved-1F1B or ZB-H1 — and
+//! produces iteration time, throughput, bubble ratio, per-stage memory,
+//! and the recompute-path breakdowns behind Figs. 2, 6, 7, 8, 9 and 10.
 //!
-//! * [`schedule`] — the 1F1B work order per stage (warmup / steady /
-//!   cool-down, Fig. 1(b) and Fig. 5).
-//! * [`engine`] — dependency-driven timing of the schedule, including
-//!   Opt-3-style absorption of recomputation into pipeline stalls.
+//! * [`crate::sched`] — the pluggable schedule subsystem (work orders,
+//!   in-flight accounting, overlap-window semantics). The old
+//!   `sim::schedule` 1F1B module lives on as
+//!   [`crate::sched::onefoneb`].
+//! * [`engine`] — dependency-driven timing of any schedule, including
+//!   Opt-3-style absorption of recomputation into pipeline stalls and
+//!   extraction of the residual overlap windows.
 //! * [`runner`] — glue: policy → plan → stage costs → simulated pipeline
 //!   → [`runner::SimReport`].
+//! * [`gantt`] — ASCII rendering, one row per (stage, chunk).
 
 pub mod engine;
 pub mod gantt;
 pub mod runner;
-pub mod schedule;
 
-pub use engine::{run_pipeline, PipelineTrace, StageTiming};
+pub use engine::{run_pipeline, run_schedule, OverlapWindow, PipelineTrace, StageTiming};
 pub use gantt::render_gantt;
 pub use runner::{simulate, PartitionMode, SimConfig, SimReport, StageReport};
-pub use schedule::{stage_items, WorkItem};

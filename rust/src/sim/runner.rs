@@ -1,11 +1,13 @@
-//! End-to-end simulation runner: policy → plans → pipeline → report.
+//! End-to-end simulation runner: policy → plans → schedule → pipeline →
+//! report.
 
-use super::engine::{run_pipeline, StageTiming};
+use super::engine::{run_schedule, StageTiming};
 use crate::costmodel::CostModel;
 use crate::graph::{build_layer_graph, TrainSetup};
 use crate::plan::{
-    build_stage_ctx, dp_partition, lynx_partition, plan_stage, stage_cost, PolicyKind,
+    build_stage_ctx_for, dp_partition, lynx_partition, plan_stage, stage_cost, PolicyKind,
 };
+use crate::sched::ScheduleKind;
 use crate::util::json::Json;
 
 /// Partitioning mode for a simulation.
@@ -23,6 +25,21 @@ pub struct SimConfig {
     pub setup: TrainSetup,
     pub policy: PolicyKind,
     pub partition: PartitionMode,
+    /// Pipeline schedule to execute (the paper evaluates 1F1B; the sched
+    /// subsystem adds GPipe, interleaved-1F1B and ZB-H1).
+    pub schedule: ScheduleKind,
+}
+
+impl SimConfig {
+    /// The paper's default: 1F1B.
+    pub fn new(setup: TrainSetup, policy: PolicyKind, partition: PartitionMode) -> SimConfig {
+        SimConfig { setup, policy, partition, schedule: ScheduleKind::OneFOneB }
+    }
+
+    pub fn with_schedule(mut self, schedule: ScheduleKind) -> SimConfig {
+        self.schedule = schedule;
+        self
+    }
 }
 
 /// Per-stage simulation results.
@@ -44,6 +61,10 @@ pub struct StageReport {
     pub comm_per_micro: f64,
     pub peak_mem: f64,
     pub idle: f64,
+    /// Residual overlap-window (stall) seconds the schedule exposes.
+    pub window_secs: f64,
+    /// Peak in-flight microbatch-equivalents the schedule reported.
+    pub inflight: usize,
     pub oom: bool,
 }
 
@@ -54,6 +75,9 @@ pub struct SimReport {
     pub iteration_secs: f64,
     /// Training throughput, samples/s.
     pub throughput: f64,
+    /// Idle share of `stages × makespan` under the executed schedule.
+    pub bubble_ratio: f64,
+    pub schedule: ScheduleKind,
     pub stages: Vec<StageReport>,
     pub partition: Vec<usize>,
     /// Policy + partition search seconds.
@@ -75,11 +99,18 @@ impl SimReport {
             .sum()
     }
 
+    /// Peak memory across stages.
+    pub fn peak_mem(&self) -> f64 {
+        self.stages.iter().map(|s| s.peak_mem).fold(0.0, f64::max)
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("config", Json::from(self.config_label.clone()))
+            .set("schedule", Json::from(self.schedule.label()))
             .set("iteration_secs", Json::from(self.iteration_secs))
             .set("throughput", Json::from(self.throughput))
+            .set("bubble_ratio", Json::from(self.bubble_ratio))
             .set("oom", Json::from(self.oom))
             .set("search_secs", Json::from(self.search_secs))
             .set(
@@ -95,7 +126,9 @@ impl SimReport {
                 .set("exposed_paid", Json::from(s.exposed_paid_total))
                 .set("absorbed", Json::from(s.absorbed_total))
                 .set("peak_mem", Json::from(s.peak_mem))
-                .set("idle", Json::from(s.idle));
+                .set("idle", Json::from(s.idle))
+                .set("window_secs", Json::from(s.window_secs))
+                .set("inflight", Json::from(s.inflight));
             stages.push(so);
         }
         o.set("stages", stages);
@@ -116,9 +149,11 @@ pub fn simulate(cm: &CostModel, cfg: &SimConfig) -> SimReport {
             (false, true) => searched,
             (true, false) => dp,
             _ => {
-                let mut best = if searched.throughput >= dp.throughput { searched } else { dp };
-                best.search_secs += 0.0;
-                best
+                if searched.throughput >= dp.throughput {
+                    searched
+                } else {
+                    dp
+                }
             }
         };
     }
@@ -129,15 +164,20 @@ fn simulate_one(cm: &CostModel, cfg: &SimConfig) -> SimReport {
     let setup = &cfg.setup;
     let g = build_layer_graph(setup);
     let times = cm.layer_times(&g);
+    let sched = cfg.schedule.build(setup.pp, setup.num_micro);
 
     // ---- partition + plans ----
+    // Plans are made against the executed schedule's in-flight counts;
+    // the Lynx partition search itself still scores candidates with the
+    // analytic 1F1B slot model (Algorithm 1), which is schedule-agnostic
+    // to first order.
     let (partition, plans, search_secs) = match cfg.partition {
         PartitionMode::Dp => {
             let part = dp_partition(setup.model.layers, setup.pp);
             let mut plans = Vec::with_capacity(setup.pp);
             let mut search = 0.0;
             for stage in 0..setup.pp {
-                let ctx = build_stage_ctx(setup, cm, &g, &part, stage);
+                let ctx = build_stage_ctx_for(setup, cm, &g, &part, stage, sched.as_ref());
                 let out = plan_stage(cfg.policy, &g, &ctx, &times);
                 search += out.search_secs;
                 plans.push(out);
@@ -146,7 +186,22 @@ fn simulate_one(cm: &CostModel, cfg: &SimConfig) -> SimReport {
         }
         PartitionMode::Lynx => {
             let r = lynx_partition(setup, cm, &g, cfg.policy);
-            (r.partition, r.plans, r.search_secs)
+            if cfg.schedule == ScheduleKind::OneFOneB {
+                (r.partition, r.plans, r.search_secs)
+            } else {
+                // Re-plan the searched split under the executed
+                // schedule's in-flight accounting.
+                let part = r.partition.clone();
+                let mut plans = Vec::with_capacity(setup.pp);
+                let mut search = r.search_secs;
+                for stage in 0..setup.pp {
+                    let ctx = build_stage_ctx_for(setup, cm, &g, &part, stage, sched.as_ref());
+                    let out = plan_stage(cfg.policy, &g, &ctx, &times);
+                    search += out.search_secs;
+                    plans.push(out);
+                }
+                (part, plans, search)
+            }
         }
     };
 
@@ -156,7 +211,7 @@ fn simulate_one(cm: &CostModel, cfg: &SimConfig) -> SimReport {
     let mut oom = false;
     let boundary = cm.memory.boundary_bytes(setup);
     for stage in 0..setup.pp {
-        let ctx = build_stage_ctx(setup, cm, &g, &partition, stage);
+        let ctx = build_stage_ctx_for(setup, cm, &g, &partition, stage, sched.as_ref());
         let cost = stage_cost(setup, cm, &g, &ctx, &plans[stage].plan);
         oom |= plans[stage].oom || cost.oom;
         stage_timings.push(StageTiming {
@@ -170,7 +225,7 @@ fn simulate_one(cm: &CostModel, cfg: &SimConfig) -> SimReport {
 
     // ---- pipeline execution ----
     let lynx_absorb = cfg.policy.is_lynx();
-    let trace = run_pipeline(&stage_timings, setup.num_micro, lynx_absorb);
+    let trace = run_schedule(&stage_timings, sched.as_ref(), lynx_absorb);
 
     // Optimizer step: a bandwidth-bound pass over the stage's model
     // states, overlapping-free (paper ignores it too; kept for realism).
@@ -180,11 +235,12 @@ fn simulate_one(cm: &CostModel, cfg: &SimConfig) -> SimReport {
         .fold(0.0, f64::max);
     let iteration_secs = trace.makespan + opt_step;
     let throughput = setup.global_batch() as f64 / iteration_secs;
+    let bubble_ratio = trace.bubble_ratio();
 
     let stages = reports
         .into_iter()
         .enumerate()
-        .map(|(s, (_ctx, cost))| StageReport {
+        .map(|(s, (ctx, cost))| StageReport {
             n_layers: partition[s],
             fwd: cost.fwd,
             bwd: cost.bwd,
@@ -196,13 +252,15 @@ fn simulate_one(cm: &CostModel, cfg: &SimConfig) -> SimReport {
             comm_per_micro: cost.comm_time,
             peak_mem: cost.peak_mem,
             idle: trace.idle[s],
+            window_secs: trace.window_secs(s),
+            inflight: ctx.n_batch,
             oom: cost.oom,
         })
         .collect();
 
     SimReport {
         config_label: format!(
-            "{} {} tp{} pp{} mb{} x{} seq{} [{}]",
+            "{} {} tp{} pp{} mb{} x{} seq{} [{}/{}]",
             setup.model.name,
             cm.topo.name,
             setup.tp,
@@ -211,9 +269,12 @@ fn simulate_one(cm: &CostModel, cfg: &SimConfig) -> SimReport {
             setup.num_micro,
             setup.seq,
             cfg.policy.label(),
+            cfg.schedule.label(),
         ),
         iteration_secs,
         throughput,
+        bubble_ratio,
+        schedule: cfg.schedule,
         stages,
         partition,
         search_secs,
@@ -228,9 +289,17 @@ mod tests {
     use crate::graph::ModelConfig;
 
     fn sim(policy: PolicyKind, partition: PartitionMode) -> SimReport {
+        sim_sched(policy, partition, ScheduleKind::OneFOneB)
+    }
+
+    fn sim_sched(
+        policy: PolicyKind,
+        partition: PartitionMode,
+        schedule: ScheduleKind,
+    ) -> SimReport {
         let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
         let cm = CostModel::new(Topology::nvlink(2, 4));
-        simulate(&cm, &SimConfig { setup, policy, partition })
+        simulate(&cm, &SimConfig::new(setup, policy, partition).with_schedule(schedule))
     }
 
     #[test]
@@ -271,5 +340,48 @@ mod tests {
         let parsed = Json::parse(&j.dump()).unwrap();
         assert_eq!(parsed.get("oom").unwrap().as_bool(), Some(false));
         assert_eq!(parsed.get("stages").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(
+            parsed.get("schedule").unwrap().as_str(),
+            Some("1f1b"),
+            "{}",
+            j.pretty()
+        );
+    }
+
+    #[test]
+    fn every_schedule_simulates_end_to_end() {
+        for kind in ScheduleKind::all() {
+            let r = sim_sched(PolicyKind::LynxHeu, PartitionMode::Dp, kind);
+            assert!(r.throughput > 0.0, "{}", kind.label());
+            assert!(r.bubble_ratio >= 0.0 && r.bubble_ratio < 1.0, "{}", kind.label());
+            assert!(r.config_label.contains(kind.label()));
+        }
+    }
+
+    #[test]
+    fn zbh1_reduces_bubble_vs_1f1b() {
+        let o = sim_sched(PolicyKind::LynxHeu, PartitionMode::Dp, ScheduleKind::OneFOneB);
+        let z = sim_sched(PolicyKind::LynxHeu, PartitionMode::Dp, ScheduleKind::ZbH1);
+        assert!(
+            z.bubble_ratio < o.bubble_ratio + 1e-12,
+            "zbh1 {} vs 1f1b {}",
+            z.bubble_ratio,
+            o.bubble_ratio
+        );
+        assert!(z.iteration_secs <= o.iteration_secs + 1e-9);
+    }
+
+    #[test]
+    fn gpipe_needs_more_memory_than_1f1b() {
+        let o = sim_sched(PolicyKind::Block, PartitionMode::Dp, ScheduleKind::OneFOneB);
+        let g = sim_sched(PolicyKind::Block, PartitionMode::Dp, ScheduleKind::GPipe);
+        // num_micro (8) in-flight vs p (4): GPipe stage-0 demand is higher.
+        assert!(
+            g.stages[0].inflight > o.stages[0].inflight,
+            "gpipe {} vs 1f1b {}",
+            g.stages[0].inflight,
+            o.stages[0].inflight
+        );
+        assert!(g.peak_mem() >= o.peak_mem());
     }
 }

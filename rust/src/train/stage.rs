@@ -1,6 +1,6 @@
 //! Per-stage pipeline worker.
 //!
-//! Each stage runs the 1F1B schedule from `sim::schedule` against real
+//! Each stage runs the 1F1B schedule from `sched::onefoneb` against real
 //! PJRT executables. The recomputation mechanism mirrors the paper:
 //!
 //! * **StoreAll** — `layer_fwd_full`, stash kept until backward.
@@ -17,7 +17,7 @@ use super::data::Corpus;
 use super::params::{adam_lr_t, ParamSet};
 use crate::runtime::literal::{lit_f32, lit_i32};
 use crate::runtime::Engine;
-use crate::sim::schedule::{stage_items, WorkItem};
+use crate::sched::{onefoneb_items, WorkKind};
 use crate::util::prng::Pcg32;
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
@@ -147,7 +147,9 @@ pub fn run_stage(cfg: &TrainConfig, wiring: StageWiring) -> Result<StageStats> {
     let mut pending: VecDeque<(usize, usize)> = VecDeque::new();
 
     let n_local = hi - lo;
-    let items = stage_items(wiring.stage, wiring.num_stages, cfg.num_micro);
+    // The real trainer executes classic 1F1B (the paper's schedule);
+    // the simulator additionally explores the other sched variants.
+    let items = onefoneb_items(wiring.stage, wiring.num_stages, cfg.num_micro);
 
     // Prefetch bound (paper Opt 1's M_delta reservation): at most one
     // microbatch's worth of recomputed stashes may be resident ahead of
@@ -179,8 +181,9 @@ pub fn run_stage(cfg: &TrainConfig, wiring: StageWiring) -> Result<StageStats> {
 
     for step in 0..cfg.steps {
         for item in &items {
-            match *item {
-                WorkItem::Fwd(micro) => {
+            let micro = item.micro;
+            match item.kind {
+                WorkKind::Fwd => {
                     // ---- obtain the stage input ----
                     let mut act: Vec<f32> = if is_first {
                         let toks = corpus.batch(step, micro, b, s);
@@ -249,7 +252,7 @@ pub fn run_stage(cfg: &TrainConfig, wiring: StageWiring) -> Result<StageStats> {
                         )?;
                     }
                 }
-                WorkItem::Bwd(micro) => {
+                WorkKind::Bwd => {
                     // ---- obtain dy ----
                     let (mut dy, step_loss): (Vec<f32>, Option<f64>) = if is_last {
                         let x = head_inputs.remove(&micro).unwrap();
@@ -359,6 +362,9 @@ pub fn run_stage(cfg: &TrainConfig, wiring: StageWiring) -> Result<StageStats> {
                         )?;
                     }
                 }
+                // 1F1B runs combined backwards; split-backward schedules
+                // exist only in the simulator.
+                WorkKind::WGrad => unreachable!("1F1B emits no WGrad items"),
             }
         }
 

@@ -5,6 +5,7 @@
 //! automatic `--help` text generation.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 /// Declarative description of one option, used for help text.
 #[derive(Debug, Clone)]
@@ -23,15 +24,24 @@ pub struct Args {
     specs: Vec<OptSpec>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArgError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     BadValue(String, String),
 }
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArgError::Unknown(n) => write!(f, "unknown option --{n}"),
+            ArgError::MissingValue(n) => write!(f, "option --{n} requires a value"),
+            ArgError::BadValue(n, v) => write!(f, "invalid value for --{n}: {v}"),
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 impl Args {
     /// Parse `argv` (without the program name) against `specs`.

@@ -1,9 +1,9 @@
 //! Utility substrates built from scratch for offline operation.
 //!
-//! The build environment has no network access and only the `xla`,
-//! `anyhow` and `thiserror` crates vendored, so the usual ecosystem
-//! crates (serde, rand, clap, criterion, proptest) are replaced by the
-//! small, well-tested substrates in this module:
+//! The build environment has no network access and only the `xla` stub
+//! and `anyhow` shim vendored (see `rust/vendor/`), so the usual
+//! ecosystem crates (serde, rand, clap, criterion, proptest, thiserror)
+//! are replaced by the small, well-tested substrates in this module:
 //!
 //! * [`json`] — JSON parser/serializer (profiler DB, artifact manifest).
 //! * [`prng`] — PCG32 PRNG with normal/zipf helpers (data gen, tests).

@@ -14,7 +14,7 @@ use lynx::util::propcheck::check;
 fn sim(model: &str, mb: usize, policy: PolicyKind, partition: PartitionMode) -> lynx::sim::SimReport {
     let setup = TrainSetup::new(ModelConfig::by_name(model).unwrap(), 4, 4, mb, 8);
     let cm = CostModel::new(Topology::nvlink(4, 4));
-    simulate(&cm, &SimConfig { setup, policy, partition })
+    simulate(&cm, &SimConfig::new(setup, policy, partition))
 }
 
 #[test]
@@ -79,16 +79,10 @@ fn pcie_overlap_gains_exceed_nvlink() {
         let cm = CostModel::new(topo);
         let base = simulate(
             &cm,
-            &SimConfig {
-                setup: setup.clone(),
-                policy: PolicyKind::Uniform,
-                partition: PartitionMode::Dp,
-            },
+            &SimConfig::new(setup.clone(), PolicyKind::Uniform, PartitionMode::Dp),
         );
-        let heu = simulate(
-            &cm,
-            &SimConfig { setup, policy: PolicyKind::LynxHeu, partition: PartitionMode::Dp },
-        );
+        let heu =
+            simulate(&cm, &SimConfig::new(setup, PolicyKind::LynxHeu, PartitionMode::Dp));
         heu.throughput / base.throughput
     };
     let nv = gain(Topology::nvlink(4, 4), 4);

@@ -1,0 +1,212 @@
+//! Property tests for the sched subsystem: every schedule × (stages,
+//! microbatches, chunks) grid point must produce a complete, executable
+//! work order whose reported in-flight peak matches a replay count, and
+//! the generic engine must respect schedule-independent timing bounds.
+
+use lynx::sched::{
+    peak_inflight_replay, validate_executable, PipelineSchedule, ScheduleKind, WorkKind,
+};
+use lynx::sim::engine::{run_schedule, StageTiming};
+use lynx::util::prng::Pcg32;
+use lynx::util::propcheck::check;
+
+const STAGES: [usize; 5] = [1, 2, 3, 4, 6];
+const MICROS: [usize; 7] = [1, 2, 3, 5, 8, 12, 16];
+const CHUNKS: [usize; 3] = [1, 2, 3];
+
+fn kinds_for(chunks: usize) -> Vec<ScheduleKind> {
+    vec![
+        ScheduleKind::GPipe,
+        ScheduleKind::OneFOneB,
+        ScheduleKind::Interleaved { chunks },
+        ScheduleKind::ZbH1,
+    ]
+}
+
+#[test]
+fn grid_every_item_once_and_dependencies_respected() {
+    for &p in &STAGES {
+        for &m in &MICROS {
+            for &v in &CHUNKS {
+                for kind in kinds_for(v) {
+                    let sched = kind.build(p, m);
+                    // validate_executable checks completeness (each
+                    // (micro, chunk) exactly once per kind per stage)
+                    // and deadlock-freedom of the dependency order.
+                    validate_executable(sched.as_ref()).unwrap_or_else(|e| {
+                        panic!("{} p={p} m={m} v={v}: {e}", kind.label())
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_reported_inflight_matches_replay() {
+    for &p in &STAGES {
+        for &m in &MICROS {
+            for &v in &CHUNKS {
+                for kind in kinds_for(v) {
+                    let sched = kind.build(p, m);
+                    for s in 0..p {
+                        let replay = peak_inflight_replay(&sched.stage_items(s));
+                        assert_eq!(
+                            sched.peak_inflight(s),
+                            replay,
+                            "{} p={p} m={m} v={v} stage={s}",
+                            kind.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_fwd_precedes_bwd_precedes_wgrad() {
+    for &p in &STAGES {
+        for &m in &[1usize, 3, 8] {
+            for kind in kinds_for(2) {
+                let sched = kind.build(p, m);
+                let v = sched.num_chunks();
+                for s in 0..p {
+                    let items = sched.stage_items(s);
+                    for q in 0..m {
+                        for c in 0..v {
+                            let pos = |k: WorkKind| {
+                                items
+                                    .iter()
+                                    .position(|i| i.kind == k && i.micro == q && i.chunk == c)
+                            };
+                            let f = pos(WorkKind::Fwd).unwrap();
+                            let b = pos(WorkKind::Bwd).unwrap();
+                            assert!(f < b, "{} p={p} m={m} s={s} q={q} c={c}", kind.label());
+                            if let Some(w) = pos(WorkKind::WGrad) {
+                                assert!(b < w, "{} W before B", kind.label());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn zbh1_never_exceeds_1f1b_inflight() {
+    for &p in &STAGES {
+        for &m in &MICROS {
+            let zb = ScheduleKind::ZbH1.build(p, m);
+            let base = ScheduleKind::OneFOneB.build(p, m);
+            for s in 0..p {
+                assert!(
+                    zb.peak_inflight(s) <= base.peak_inflight(s),
+                    "p={p} m={m} stage={s}: {} vs {}",
+                    zb.peak_inflight(s),
+                    base.peak_inflight(s)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_engine_bounds_hold_for_every_schedule() {
+    // Random stage timings: makespan within [bottleneck, serial] bounds
+    // and the absorbed+paid identity, under all four schedules.
+    check(
+        "schedule-generic makespan bounds",
+        10,
+        |rng: &mut Pcg32| {
+            let p = rng.range(1, 5);
+            let m = rng.range(1, 10);
+            let timings: Vec<(f64, f64, f64)> = (0..p)
+                .map(|_| (0.5 + rng.f64(), 0.5 + rng.f64(), rng.f64() * 0.5))
+                .collect();
+            (timings, m)
+        },
+        |(timings, m)| {
+            let p = timings.len();
+            let ts: Vec<StageTiming> = timings
+                .iter()
+                .map(|&(fwd, bwd, exposed)| StageTiming { fwd, bwd, exposed, p2p: 0.0 })
+                .collect();
+            for kind in ScheduleKind::all() {
+                let sched = kind.build(p, *m);
+                for lynx_mode in [false, true] {
+                    let tr = run_schedule(&ts, sched.as_ref(), lynx_mode);
+                    let serial: f64 = timings
+                        .iter()
+                        .map(|&(f, b, e)| (f + b + e) * *m as f64)
+                        .sum();
+                    // Work conservation per stage: busy time covers at
+                    // least fwd+bwd (+ paid exposed recompute).
+                    if tr.makespan > serial + 1e-9 {
+                        return Err(format!(
+                            "{}: makespan {} above serial bound {serial}",
+                            kind.label(),
+                            tr.makespan
+                        ));
+                    }
+                    let bottleneck: f64 = timings
+                        .iter()
+                        .map(|&(f, b, e)| {
+                            (f + b + if lynx_mode { 0.0 } else { e }) * *m as f64
+                        })
+                        .fold(0.0, f64::max);
+                    if tr.makespan < bottleneck - 1e-9 {
+                        return Err(format!(
+                            "{}: makespan {} below bottleneck {bottleneck}",
+                            kind.label(),
+                            tr.makespan
+                        ));
+                    }
+                    for (s, &(_, _, e)) in timings.iter().enumerate() {
+                        let total = tr.absorbed[s] + tr.exposed_paid[s];
+                        if (total - e * *m as f64).abs() > 1e-6 {
+                            return Err(format!(
+                                "{} stage {s}: absorbed+paid {total} != {}",
+                                kind.label(),
+                                e * *m as f64
+                            ));
+                        }
+                        // Windows never exceed idle, consumed never
+                        // exceeds absorbed.
+                        if tr.window_secs(s) > tr.idle[s] + 1e-6 {
+                            return Err(format!("{} stage {s}: windows > idle", kind.label()));
+                        }
+                        if tr.window_consumed(s) > tr.absorbed[s] + 1e-6 {
+                            return Err(format!(
+                                "{} stage {s}: consumed > absorbed",
+                                kind.label()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bubble_ordering_on_balanced_divisible_shapes() {
+    // On the Megatron-friendly shapes (m a multiple of p) with balanced
+    // stages: interleaving and ZB-H1 both shrink the 1F1B bubble.
+    for (p, m) in [(2usize, 4usize), (4, 8), (4, 16), (6, 12)] {
+        let ts: Vec<StageTiming> = (0..p)
+            .map(|_| StageTiming { fwd: 1.0, bwd: 2.0, exposed: 0.0, p2p: 0.0 })
+            .collect();
+        let bubble = |kind: ScheduleKind| {
+            let sched = kind.build(p, m);
+            run_schedule(&ts, sched.as_ref(), false).bubble_ratio()
+        };
+        let b_1f1b = bubble(ScheduleKind::OneFOneB);
+        let b_il = bubble(ScheduleKind::Interleaved { chunks: 2 });
+        let b_zb = bubble(ScheduleKind::ZbH1);
+        assert!(b_il < b_1f1b - 1e-9, "p={p} m={m}: interleaved {b_il} vs 1f1b {b_1f1b}");
+        assert!(b_zb < b_1f1b - 1e-9, "p={p} m={m}: zbh1 {b_zb} vs 1f1b {b_1f1b}");
+    }
+}

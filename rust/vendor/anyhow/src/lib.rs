@@ -1,0 +1,210 @@
+//! Offline vendored stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access, so this minimal shim
+//! provides the subset of the real `anyhow` API the workspace uses:
+//!
+//! * [`Error`] — a boxed-free error carrying a chain of display frames
+//!   (outermost context first, root cause last);
+//! * [`Result`] — the usual alias with `Error` as the default error type;
+//! * [`anyhow!`] / [`bail!`] / [`ensure!`] — formatting constructors;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Formatting matches the real crate closely enough for the repo's
+//! tests: `{e}` prints the outermost message, `{e:#}` prints the whole
+//! chain separated by `": "`, and `{e:?}` prints the message plus a
+//! "Caused by" list.
+
+use std::fmt;
+
+/// A chain of error messages: `frames[0]` is the outermost context,
+/// `frames[last]` the root cause.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { frames: vec![message.to_string()] }
+    }
+
+    /// Wrap with one more (outermost) context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the chain from the outermost message to the root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.frames.join(": "))
+        } else {
+            write!(f, "{}", self.frames.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        $crate::Error::msg(format!($fmt $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an [`Error`] when the condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($tt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_prints_outermost_only() {
+        let e: Error = Error::from(io_err()).context("loading manifest");
+        assert_eq!(format!("{e}"), "loading manifest");
+    }
+
+    #[test]
+    fn alternate_prints_chain() {
+        let e: Error = Error::from(io_err()).context("loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: file missing");
+    }
+
+    #[test]
+    fn debug_prints_caused_by() {
+        let e: Error = Error::from(io_err()).context("loading manifest");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("file missing"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn with_context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading config").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+        let o: Option<u32> = None;
+        let e = o.context("missing key").unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(format!("{e}"), "bad value 3");
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag must be set");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert!(f(false).is_err());
+        assert_eq!(f(true).unwrap(), 1);
+    }
+}

@@ -1,0 +1,308 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real crate links libxla and executes AOT-compiled HLO on a PJRT
+//! client; that native library is unavailable in this offline build
+//! environment. This stub keeps the whole workspace compiling and the
+//! pure-Rust paths fully functional:
+//!
+//! * [`Literal`] is a **real** in-memory tensor (f32/i32, shape, tuples)
+//!   — every literal helper and its tests work unchanged;
+//! * [`PjRtClient::compile`] and [`PjRtLoadedExecutable::execute`] return
+//!   a descriptive [`Error`] so runtime-backed paths (`lynx train`, the
+//!   artifact-gated tests) fail loudly instead of silently — exactly the
+//!   behaviour those paths already have when `artifacts/` is absent.
+//!
+//! Swap this path dependency for the real `xla` crate to run the PJRT
+//! trainer; no call-site changes are needed.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversions.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the real PJRT runtime; this build uses the offline \
+         xla stub (see rust/vendor/xla)"
+    ))
+}
+
+/// Element storage for the stub literal.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Scalar element types the stub supports (the repo only moves f32/i32
+/// across the PJRT boundary).
+pub trait ArrayElement: Sized + Copy {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(data: &Data) -> Option<&[Self]>;
+    #[doc(hidden)]
+    const TYPE_NAME: &'static str;
+}
+
+impl ArrayElement for f32 {
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+    fn unwrap(data: &Data) -> Option<&[f32]> {
+        match data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    const TYPE_NAME: &'static str = "f32";
+}
+
+impl ArrayElement for i32 {
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::I32(data)
+    }
+    fn unwrap(data: &Data) -> Option<&[i32]> {
+        match data {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    const TYPE_NAME: &'static str = "i32";
+}
+
+/// Array shape (dims in elements).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// In-memory tensor literal: typed flat storage plus a shape, or a tuple
+/// of literals (PJRT results arrive as one tuple literal).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Option<Data>,
+    dims: Vec<i64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: ArrayElement>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: Some(T::wrap(data.to_vec())),
+            tuple: None,
+        }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: ArrayElement>(x: T) -> Literal {
+        Literal { dims: vec![], data: Some(T::wrap(vec![x])), tuple: None }
+    }
+
+    /// Tuple literal (what `execute` returns in the real bindings).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { data: None, dims: vec![], tuple: Some(parts) }
+    }
+
+    /// Reshape without moving data; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if n != have {
+            return Err(Error(format!("reshape {dims:?} for {have} elements")));
+        }
+        let mut out = self.clone();
+        out.dims = dims.to_vec();
+        Ok(out)
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.as_ref().map(|d| d.len()).unwrap_or(0)
+    }
+
+    /// Flat copy of the elements, type-checked.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        let data = self
+            .data
+            .as_ref()
+            .ok_or_else(|| Error("to_vec on a tuple literal".into()))?;
+        T::unwrap(data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error(format!("literal is not {}", T::TYPE_NAME)))
+    }
+
+    /// First element (loss scalars etc.), type-checked.
+    pub fn get_first_element<T: ArrayElement>(&self) -> Result<T> {
+        let v = self.to_vec::<T>()?;
+        v.first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+
+    /// Raw copy into a preallocated slice.
+    pub fn copy_raw_to<T: ArrayElement>(&self, dst: &mut [T]) -> Result<()> {
+        let v = self.to_vec::<T>()?;
+        if v.len() != dst.len() {
+            return Err(Error(format!("copy_raw_to: {} vs {}", v.len(), dst.len())));
+        }
+        dst.copy_from_slice(&v);
+        Ok(())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if self.data.is_none() {
+            return Err(Error("array_shape on a tuple literal".into()));
+        }
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Split a tuple literal into its parts.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        self.tuple
+            .take()
+            .ok_or_else(|| Error("decompose_tuple on a non-tuple literal".into()))
+    }
+}
+
+/// Parsed HLO module handle. The stub only checks the artifact looks like
+/// HLO text; actual parsing needs the real bindings.
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        if !text.trim_start().starts_with("HloModule") {
+            return Err(Error(format!("{path} does not look like HLO text")));
+        }
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation handle built from a proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT device buffer. Never constructed by the stub (execution is
+/// gated), but the type must exist for signatures.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle. Construction is gated behind
+/// [`PjRtClient::compile`], which errors in the stub.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle. `cpu()` succeeds (cheap handle); `compile` is
+/// where the stub reports the missing runtime.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 2]);
+    }
+
+    #[test]
+    fn scalar_and_first_element() {
+        let lit = Literal::scalar(7i32);
+        assert_eq!(lit.get_first_element::<i32>().unwrap(), 7);
+        assert!(lit.get_first_element::<f32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes_once() {
+        let mut t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2.0f32)]);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn compile_reports_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation { _private: () };
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err}").contains("stub"));
+    }
+}

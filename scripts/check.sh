@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# CI gate: build, test, format, lint, and regenerate the schedule bench
+# artifact. Run from anywhere; operates on the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "SKIP: rustfmt not installed"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -- -D warnings =="
+    cargo clippy --workspace --all-targets -- -D warnings
+else
+    echo "SKIP: clippy not installed"
+fi
+
+echo "== bench: schedules (quick) =="
+# cargo runs benches with cwd at the package root (rust/); pin the
+# artifact to the repo root regardless.
+LYNX_BENCH_QUICK=1 LYNX_BENCH_OUT="$PWD" cargo bench --bench bench_schedules
+test -f BENCH_schedules.json
+echo "BENCH_schedules.json written"
+
+echo "OK"
