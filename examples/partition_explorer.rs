@@ -10,7 +10,10 @@
 
 use lynx::costmodel::{CostModel, Topology};
 use lynx::graph::{build_layer_graph, ModelConfig, TrainSetup};
-use lynx::plan::{dp_partition_result, lynx_partition, PolicyKind};
+use lynx::plan::{
+    dp_partition_result, exact_dp_partition, lynx_partition, CostTables, PlanCache, PolicyKind,
+    SearchOptions,
+};
 use lynx::sim::{simulate, PartitionMode, SimConfig};
 use lynx::util::stats::fmt_duration;
 
@@ -51,6 +54,19 @@ fn main() -> anyhow::Result<()> {
         for (i, d) in lx.durations.iter().enumerate() {
             println!("     stage{i}: {}", fmt_duration(*d));
         }
+
+        // Exact min-makespan DP over contiguous ranges (--search dp).
+        let tables = CostTables::new(&setup, &cm, &g);
+        let mut cache = PlanCache::new();
+        let ex = exact_dp_partition(&tables, &mut cache, policy, &SearchOptions::default());
+        println!(
+            "  dp-exact       {:?}  makespan/slot {}  ({} cells, {} solves, hit rate {:.0}%)",
+            ex.partition,
+            fmt_duration(ex.makespan()),
+            ex.evaluated,
+            ex.plan_solves,
+            100.0 * ex.hit_rate(),
+        );
 
         // Whole-pipeline effect.
         let r_dp = simulate(&cm, &SimConfig::new(setup.clone(), policy, PartitionMode::Dp));

@@ -10,7 +10,7 @@
 
 use lynx::costmodel::{CostModel, Topology};
 use lynx::graph::{build_layer_graph, ModelConfig, TrainSetup};
-use lynx::plan::{build_stage_ctx, dp_partition, plan_stage, stage_cost, PolicyKind};
+use lynx::plan::{dp_partition, plan_stage, CostTables, PolicyKind};
 use lynx::profiler::profile_model;
 use lynx::sim::{simulate, PartitionMode, SimConfig};
 use lynx::util::stats::{fmt_bytes, fmt_duration};
@@ -41,11 +41,12 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 3. Ask each policy for a stage plan and show what it costs.
+    // 3. Ask each policy for a stage plan and show what it costs. The
+    //    memoized CostTables are the planners' shared evaluation core.
     let g = build_layer_graph(&setup);
-    let times = cm.layer_times(&g);
+    let tables = CostTables::new(&setup, &cm, &g);
     let part = dp_partition(setup.model.layers, setup.pp);
-    let ctx = build_stage_ctx(&setup, &cm, &g, &part, 0);
+    let ctx = tables.build_ctx_1f1b(0, part[0]);
     println!("\nstage-0 plans (budget {}):", fmt_bytes(ctx.mem_budget));
     for kind in [
         PolicyKind::Full,
@@ -54,8 +55,8 @@ fn main() -> anyhow::Result<()> {
         PolicyKind::Checkmate,
         PolicyKind::LynxHeu,
     ] {
-        let out = plan_stage(kind, &g, &ctx, &times);
-        let cost = stage_cost(&setup, &cm, &g, &ctx, &out.plan);
+        let out = plan_stage(kind, &tables, &ctx);
+        let cost = tables.stage_cost(&ctx, &out.plan);
         println!(
             "  {:<10} exposed {:>9}/micro  hidden {:>9}  peak {:>9}  {}",
             kind.label(),

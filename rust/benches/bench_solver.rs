@@ -43,6 +43,7 @@ fn heu_fixture() -> (lynx::graph::LayerGraph, StageCtx, Vec<f64>) {
             stage: 0,
             num_stages: 4,
             mem_budget: f64::INFINITY,
+            static_mem: 0.0,
             fwd_window: [w1, w2],
             bwd_window: [w1, w2],
             boundary_bytes: boundary,
@@ -55,6 +56,7 @@ fn heu_fixture() -> (lynx::graph::LayerGraph, StageCtx, Vec<f64>) {
         stage: 0,
         num_stages: 4,
         mem_budget: store_all * 0.5,
+        static_mem: 0.0,
         fwd_window: [w1, w2],
         bwd_window: [w1, w2],
         boundary_bytes: boundary,

@@ -1,9 +1,133 @@
-//! Bench: regenerate paper Table 3 — policy search times for Lynx-OPT,
-//! Lynx-HEU and HEU+partitioning across model sizes.
+//! Bench: planner search time as a first-class benchmark.
+//!
+//! Prints the paper's Table 3 (policy search times) and runs the
+//! search-cost sweep behind `lynx figures --fig search`, emitting
+//! `BENCH_search.json` — the perf trajectory future PRs compare against.
+//! Per `(model, pp, policy)` the artifact records:
+//!
+//! * `evaluated` candidates and `plan_solves` (cache misses) of the
+//!   memoized + incremental greedy search, with its cache hit rate;
+//! * the same counters for the exact-DP search (cost cells);
+//! * the measured PR-1 reference loop (fresh per-search cache, every
+//!   stage of every candidate re-planned/re-costed): `pr1_plan_calls`
+//!   planner call sites, `pr1_plan_solves` misses, wall-clock;
+//! * `greedy_solve_reduction` = pr1_plan_calls / greedy plan_solves
+//!   (the ISSUE-2 acceptance metric: call sites the old loop executed
+//!   over marginal solves in the shared-cache workflow), its
+//!   conservative sibling `greedy_solve_reduction_strict`
+//!   (pr1_plan_solves / greedy plan_solves), and `dp_beats_greedy`.
+//!
+//! Run `cargo bench --bench bench_table3_search_time`
+//! (LYNX_BENCH_QUICK=1 for the reduced sweep; LYNX_BENCH_OUT overrides
+//! the output directory).
 
-use lynx::experiments::table3;
+use lynx::experiments::{search_runs, table3};
+use lynx::util::bench::Bench;
+use lynx::util::json::Json;
 
 fn main() {
     let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+
+    // Paper Table 3: HEU vs OPT vs HEU+partition search seconds.
     println!("{}", table3(quick).render());
+
+    let mut b = Bench::new("search: partition-search cost (memoized vs PR-1 loop)");
+    let runs = search_runs(quick);
+
+    let mut rows = Vec::new();
+    let mut out = Json::Arr(vec![]);
+    for r in &runs {
+        let label = format!("{} pp{} {}", r.model, r.pp, r.policy.label());
+        b.record(&format!("{label} greedy"), r.greedy.search_secs, "s search");
+        b.record(&format!("{label} dp-exact"), r.exact.search_secs, "s search");
+        b.record(&format!("{label} pr1 loop"), r.pr1.search_secs, "s search");
+
+        let reduction = r.greedy_solve_reduction();
+        let dp_beats_greedy = r.dp_dominates();
+        rows.push(vec![
+            r.model.to_string(),
+            format!("{}", r.pp),
+            r.policy.label().to_string(),
+            format!("{}", r.greedy.evaluated),
+            format!("{}", r.greedy.plan_solves),
+            format!("{}", r.pr1.plan_calls),
+            format!("{:.1}x", reduction),
+            format!("{:.0}%", 100.0 * r.greedy.hit_rate()),
+            format!("{}", dp_beats_greedy),
+        ]);
+
+        let mut jo = Json::obj();
+        jo.set("model", Json::from(r.model))
+            .set("pp", Json::from(r.pp))
+            .set("policy", Json::from(r.policy.label()))
+            // Memoized + incremental greedy (Algorithm 1).
+            .set("evaluated", Json::from(r.greedy.evaluated))
+            .set("plan_solves", Json::from(r.greedy.plan_solves))
+            .set("cache_hits", Json::from(r.greedy.cache_hits))
+            .set("cache_hit_rate", Json::from(r.greedy.hit_rate()))
+            .set("stage_evals", Json::from(r.greedy.stage_evals))
+            .set("wall_secs", Json::from(r.greedy.search_secs))
+            .set("greedy_makespan_secs", Json::from(r.greedy.makespan()))
+            .set("greedy_oom", Json::from(r.greedy.oom))
+            // Even-split baseline + exact DP.
+            .set("baseline_makespan_secs", Json::from(r.baseline.makespan()))
+            .set("dp_cells_evaluated", Json::from(r.exact.evaluated))
+            .set("dp_plan_solves", Json::from(r.exact.plan_solves))
+            .set("dp_cache_hit_rate", Json::from(r.exact.hit_rate()))
+            .set("dp_wall_secs", Json::from(r.exact.search_secs))
+            .set("dp_makespan_secs", Json::from(r.exact.makespan()))
+            .set("dp_oom", Json::from(r.exact.oom))
+            .set("dp_beats_greedy", Json::from(dp_beats_greedy))
+            // Measured PR-1 reference loop.
+            .set("pr1_evaluated", Json::from(r.pr1.evaluated))
+            .set("pr1_plan_calls", Json::from(r.pr1.plan_calls))
+            .set("pr1_plan_solves", Json::from(r.pr1.plan_solves))
+            .set("pr1_stage_evals", Json::from(r.pr1.stage_evals))
+            .set("pr1_wall_secs", Json::from(r.pr1.search_secs))
+            .set("greedy_solve_reduction", Json::from(reduction))
+            .set(
+                "greedy_solve_reduction_strict",
+                Json::from(r.greedy_solve_reduction_strict()),
+            );
+        out.push(jo);
+    }
+
+    b.table(
+        "greedy search vs PR-1 loop (shared PlanCache per model×pp)",
+        &[
+            "model",
+            "pp",
+            "policy",
+            "candidates",
+            "solves",
+            "pr1 calls",
+            "reduction",
+            "hit rate",
+            "dp<=greedy",
+        ],
+        &rows,
+    );
+
+    // Sweep-level summary row (the ISSUE-2 acceptance numbers).
+    let total_pr1: usize = runs.iter().map(|r| r.pr1.plan_calls).sum();
+    let total_solves: usize = runs.iter().map(|r| r.greedy.plan_solves).sum();
+    let mut summary = Json::obj();
+    summary
+        .set("summary", Json::from(true))
+        .set("total_pr1_plan_calls", Json::from(total_pr1))
+        .set("total_greedy_plan_solves", Json::from(total_solves))
+        .set(
+            "sweep_solve_reduction",
+            Json::from(total_pr1 as f64 / total_solves.max(1) as f64),
+        )
+        .set(
+            "dp_dominates_greedy_everywhere",
+            Json::from(runs.iter().all(|r| r.dp_dominates())),
+        );
+    out.push(summary);
+
+    let dir = std::env::var("LYNX_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("BENCH_search.json");
+    std::fs::write(&path, out.pretty()).expect("write BENCH_search.json");
+    println!("\nwrote {}", path.display());
 }

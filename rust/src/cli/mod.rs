@@ -12,7 +12,8 @@ use crate::costmodel::{CostModel, Topology};
 use crate::experiments;
 use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
 use crate::plan::{
-    build_stage_ctx, dp_partition_result, lynx_partition, plan_stage, stage_cost, PolicyKind,
+    dp_partition_result_cached, exact_dp_partition, lynx_partition_cached, CostTables,
+    PlanCache, PolicyKind, SearchKind, SearchOptions,
 };
 use crate::profiler::profile_model;
 use crate::sched::ScheduleKind;
@@ -37,6 +38,7 @@ fn common_specs() -> Vec<OptSpec> {
         opt("seq", "sequence length", true, Some("1024")),
         opt("policy", "full|selective|uniform|block|checkmate|lynx-heu|lynx-opt", true, Some("lynx-heu")),
         opt("partition", "dp|lynx", true, Some("dp")),
+        opt("search", "partition search algorithm: greedy|dp", true, Some("greedy")),
         opt("schedule", "pipeline schedule: gpipe|1f1b|interleaved|zbh1", true, Some("1f1b")),
         opt("chunks", "virtual chunks per stage (interleaved)", true, Some("2")),
         opt("help", "print help", false, None),
@@ -50,7 +52,7 @@ fn common_specs() -> Vec<OptSpec> {
         opt("seed", "PRNG seed", true, Some("42")),
         opt("log-every", "loss log interval", true, Some("10")),
         // figures options
-        opt("fig", "figure id: 2a|2b|6a|6b|7|8|9|10a|10b|10c|table3|sp|schedules", true, None),
+        opt("fig", "figure id: 2a|2b|6a|6b|7|8|9|10a|10b|10c|table3|sp|schedules|search", true, None),
         opt("all", "regenerate every figure", false, None),
         opt("quick", "reduced configs for smoke runs", false, None),
         opt("out", "write figure JSON to this directory", true, None),
@@ -158,12 +160,13 @@ fn cmd_plan(a: &Args) -> Result<i32> {
     let policy = parse_policy(a.get("policy").unwrap())?;
     let cm = CostModel::new(topo);
     let g = build_layer_graph(&setup);
-    let times = cm.layer_times(&g);
+    let tables = CostTables::new(&setup, &cm, &g);
+    let mut cache = PlanCache::new();
     let part = crate::plan::dp_partition(setup.model.layers, setup.pp);
     for stage in 0..setup.pp {
-        let ctx = build_stage_ctx(&setup, &cm, &g, &part, stage);
-        let out = plan_stage(policy, &g, &ctx, &times);
-        let cost = stage_cost(&setup, &cm, &g, &ctx, &out.plan);
+        let ctx = tables.build_ctx_1f1b(stage, part[stage]);
+        let out = cache.get_or_plan(&tables, &ctx, policy);
+        let cost = tables.stage_cost(&ctx, &out.plan);
         println!(
             "stage {stage}: layers={} oom={} search={:.3}s exposed={:.3}ms \
              overlapped={:.3}ms peak={}",
@@ -188,20 +191,56 @@ fn cmd_plan(a: &Args) -> Result<i32> {
 fn cmd_partition(a: &Args) -> Result<i32> {
     let (setup, topo) = build_setup(a)?;
     let policy = parse_policy(a.get("policy").unwrap())?;
+    let search = a.get("search").unwrap();
+    let search = SearchKind::parse(search)
+        .ok_or_else(|| anyhow!("unknown partition search {search:?} (greedy|dp)"))?;
+    let schedule = parse_schedule(a)?;
     let cm = CostModel::new(topo);
     let g = build_layer_graph(&setup);
-    let dp = dp_partition_result(&setup, &cm, &g, policy);
-    let lx = lynx_partition(&setup, &cm, &g, policy);
-    println!("dp-partition:   {:?} makespan {:.3}ms", dp.partition, 1e3 * dp.makespan());
+    // One shared evaluation core for the baseline and both searches: the
+    // plan cache makes repeat (role, layers, in-flight) subproblems free.
+    let tables = CostTables::new(&setup, &cm, &g);
+    let mut cache = PlanCache::new();
+    let opts = SearchOptions { schedule: Some(schedule), ..Default::default() };
+    let dp = dp_partition_result_cached(&tables, &mut cache, policy, &opts);
+    let lx = lynx_partition_cached(&tables, &mut cache, policy, &opts);
     println!(
-        "lynx-partition: {:?} makespan {:.3}ms ({:.2}x, search {:.2}s, {} evals)",
+        "dp-partition:   {:?} makespan {:.3}ms oom={}",
+        dp.partition,
+        1e3 * dp.makespan(),
+        dp.oom
+    );
+    println!(
+        "lynx-greedy:    {:?} makespan {:.3}ms ({:.2}x, search {:.2}s, {} candidates, \
+         {} solves, hit rate {:.0}%, oom={})",
         lx.partition,
         1e3 * lx.makespan(),
         dp.makespan() / lx.makespan(),
         lx.search_secs,
         lx.evaluated,
+        lx.plan_solves,
+        100.0 * lx.hit_rate(),
+        lx.oom,
     );
-    Ok(0)
+    let result = if search == SearchKind::Dp {
+        let ex = exact_dp_partition(&tables, &mut cache, policy, &opts);
+        println!(
+            "lynx-dp-exact:  {:?} makespan {:.3}ms ({:.2}x, search {:.2}s, {} cells, \
+             {} solves, hit rate {:.0}%, oom={})",
+            ex.partition,
+            1e3 * ex.makespan(),
+            dp.makespan() / ex.makespan(),
+            ex.search_secs,
+            ex.evaluated,
+            ex.plan_solves,
+            100.0 * ex.hit_rate(),
+            ex.oom,
+        );
+        ex
+    } else {
+        lx
+    };
+    Ok(if result.oom { 1 } else { 0 })
 }
 
 fn cmd_figures(a: &Args) -> Result<i32> {
@@ -226,6 +265,7 @@ fn cmd_figures(a: &Args) -> Result<i32> {
             "table3" => experiments::table3(quick),
             "sp" => experiments::fig_sp(),
             "schedules" => experiments::schedule_matrix(quick),
+            "search" => experiments::search_cost(quick),
             other => return Err(anyhow!("unknown figure {other:?}")),
         }]
     };
@@ -350,5 +390,33 @@ mod tests {
     #[test]
     fn bad_schedule_is_error() {
         assert!(run(&sv(&["simulate", "--schedule", "zb-v2"])).is_err());
+    }
+
+    #[test]
+    fn partition_runs_both_searches() {
+        for search in ["greedy", "dp"] {
+            let code = run(&sv(&[
+                "partition",
+                "--model",
+                "1.3B",
+                "--tp",
+                "2",
+                "--pp",
+                "4",
+                "--micro-batch",
+                "4",
+                "--policy",
+                "full",
+                "--search",
+                search,
+            ]))
+            .unwrap();
+            assert_eq!(code, 0, "search {search}");
+        }
+    }
+
+    #[test]
+    fn bad_search_is_error() {
+        assert!(run(&sv(&["partition", "--search", "annealing"])).is_err());
     }
 }

@@ -1,0 +1,186 @@
+//! The shared plan cache: memoized `plan_stage` outcomes.
+//!
+//! The paper's identical-structure observation applies to the partition
+//! search itself: a stage's recomputation plan depends only on its
+//! [`StageRole`], its layer count and its in-flight microbatch count —
+//! never on the raw stage index or on what the *other* stages host. The
+//! old search memoized per `(n_layers, stage)` inside a single
+//! `lynx_partition` call; [`PlanCache`] promotes that into a first-class
+//! cache keyed `(role, n_layers, n_batch, policy)` that is sound to
+//! share across an entire search, across the greedy and exact-DP
+//! searches, across pipeline schedules, and across policies in
+//! `experiments` — anything evaluated against the same
+//! `(graph, cost model, microbatch geometry)`.
+//!
+//! Hit/solve counters feed `BENCH_search.json` (planner search time is a
+//! first-class benchmark; see `benches/bench_table3_search_time.rs`).
+
+use super::costeval::plan_stage;
+use super::tables::{CostTables, StageRole};
+use super::types::{PlanOutcome, PolicyKind, StageCtx};
+use std::collections::HashMap;
+
+/// Everything a stage plan can depend on, given fixed
+/// `(setup, cost model, graph)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub role: StageRole,
+    pub n_layers: usize,
+    pub n_batch: usize,
+    pub policy: PolicyKind,
+}
+
+impl PlanKey {
+    /// Key of a stage context under `policy`.
+    pub fn of(ctx: &StageCtx, policy: PolicyKind) -> PlanKey {
+        PlanKey {
+            role: StageRole::of(ctx.stage, ctx.num_stages),
+            n_layers: ctx.n_layers,
+            n_batch: ctx.n_batch,
+            policy,
+        }
+    }
+}
+
+/// Memoized `plan_stage` outcomes with hit/solve accounting.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    map: HashMap<PlanKey, PlanOutcome>,
+    hits: usize,
+    solves: usize,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Cached lookup; counts a hit when present. Does **not** count a
+    /// miss — pair with [`insert_solved`](Self::insert_solved) after
+    /// actually running the planner (the threaded DP search computes
+    /// outside the cache lock).
+    pub fn lookup(&mut self, key: &PlanKey) -> Option<PlanOutcome> {
+        let out = self.map.get(key).cloned();
+        if out.is_some() {
+            self.hits += 1;
+        }
+        out
+    }
+
+    /// Record a freshly solved outcome and return the canonical entry.
+    /// The first insert wins (concurrent DP workers may race on a key;
+    /// keeping one plan per key keeps the whole search consistent); every
+    /// call counts one real solve.
+    pub fn insert_solved(&mut self, key: PlanKey, outcome: PlanOutcome) -> PlanOutcome {
+        self.solves += 1;
+        self.map.entry(key).or_insert(outcome).clone()
+    }
+
+    /// Plan `ctx` under `policy` through the cache.
+    pub fn get_or_plan(
+        &mut self,
+        tables: &CostTables,
+        ctx: &StageCtx,
+        policy: PolicyKind,
+    ) -> PlanOutcome {
+        let key = PlanKey::of(ctx, policy);
+        if let Some(out) = self.lookup(&key) {
+            return out;
+        }
+        let out = plan_stage(policy, tables, ctx);
+        self.insert_solved(key, out)
+    }
+
+    /// Cached plans.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Cache hits since construction.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Planner invocations (cache misses) since construction.
+    pub fn solves(&self) -> usize {
+        self.solves
+    }
+
+    /// hits / (hits + solves); 0 when untouched.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.solves;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Snapshot of `(hits, solves)` — callers diff two snapshots to
+    /// attribute counts to one search phase.
+    pub fn counters(&self) -> (usize, usize) {
+        (self.hits, self.solves)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{CostModel, Topology};
+    use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
+
+    fn tables() -> CostTables {
+        let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(2, 4));
+        let g = build_layer_graph(&setup);
+        CostTables::new(&setup, &cm, &g)
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let t = tables();
+        let mut c = PlanCache::new();
+        let ctx = t.build_ctx_1f1b(1, 8);
+        let a = c.get_or_plan(&t, &ctx, PolicyKind::Full);
+        let b = c.get_or_plan(&t, &ctx, PolicyKind::Full);
+        assert_eq!(c.solves(), 1);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(a.plan.layers.len(), b.plan.layers.len());
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn middle_stages_share_entries_only_when_inflight_matches() {
+        let t = tables();
+        let mut c = PlanCache::new();
+        // Stages 1 and 2 are both Middle but hold different in-flight
+        // counts under 1F1B — distinct keys.
+        let c1 = t.build_ctx_1f1b(1, 8);
+        let c2 = t.build_ctx_1f1b(2, 8);
+        c.get_or_plan(&t, &c1, PolicyKind::Full);
+        c.get_or_plan(&t, &c2, PolicyKind::Full);
+        assert_eq!(c.solves(), 2);
+        // Same middle stage context shape → shared entry even for a
+        // different stage index.
+        let mut c2b = t.build_ctx(1, 8, c2.n_batch);
+        c2b.stage = 2;
+        c.get_or_plan(&t, &c2b, PolicyKind::Full);
+        assert_eq!(c.solves(), 2);
+        assert_eq!(c.hits(), 1);
+    }
+
+    #[test]
+    fn policies_never_share_entries() {
+        let t = tables();
+        let mut c = PlanCache::new();
+        let ctx = t.build_ctx_1f1b(1, 8);
+        c.get_or_plan(&t, &ctx, PolicyKind::Full);
+        c.get_or_plan(&t, &ctx, PolicyKind::Selective);
+        assert_eq!(c.solves(), 2);
+        assert_eq!(c.hits(), 0);
+    }
+}

@@ -1,7 +1,15 @@
 //! The training cost model (paper Fig. 4): turns a (partition, plan)
 //! pair into per-stage timing and memory numbers, used by the partitioner
 //! loop and the simulator.
+//!
+//! The canonical evaluation path goes through [`super::tables::CostTables`]
+//! — build the tables once per `(setup, cost-model, graph)` and call
+//! [`CostTables::build_ctx`] / [`CostTables::stage_cost`]; nothing on
+//! that path walks `g.ops`. The free functions here are one-off
+//! conveniences (CLI inspection, tests) that build throwaway tables
+//! internally.
 
+use super::tables::CostTables;
 use super::types::{PlanOutcome, PolicyKind, StageCtx, StagePlan};
 use crate::costmodel::CostModel;
 use crate::graph::{LayerGraph, TrainSetup};
@@ -34,6 +42,9 @@ pub struct StageCost {
 
 /// Build the [`StageCtx`] for `stage` under an explicit layer partition,
 /// assuming the paper's default 1F1B in-flight accounting.
+///
+/// One-off convenience; hot paths hold a [`CostTables`] and call
+/// [`CostTables::build_ctx_1f1b`].
 pub fn build_stage_ctx(
     setup: &TrainSetup,
     cm: &CostModel,
@@ -41,9 +52,8 @@ pub fn build_stage_ctx(
     partition: &[usize],
     stage: usize,
 ) -> StageCtx {
-    let num_stages = partition.len();
-    let n_batch = cm.memory.inflight_microbatches(stage, num_stages, setup.num_micro);
-    build_stage_ctx_with_nbatch(setup, cm, g, partition, stage, n_batch)
+    let tables = CostTables::new(setup, cm, g);
+    tables.build_ctx_1f1b(stage, partition[stage])
 }
 
 /// Build the [`StageCtx`] with the in-flight microbatch count reported by
@@ -59,37 +69,9 @@ pub fn build_stage_ctx_for(
     stage: usize,
     sched: &dyn PipelineSchedule,
 ) -> StageCtx {
-    let units = sched.peak_inflight(stage);
-    let v = sched.num_chunks();
-    let n_batch = ((units + v - 1) / v).max(1);
-    build_stage_ctx_with_nbatch(setup, cm, g, partition, stage, n_batch)
-}
-
-fn build_stage_ctx_with_nbatch(
-    setup: &TrainSetup,
-    cm: &CostModel,
-    g: &LayerGraph,
-    partition: &[usize],
-    stage: usize,
-    n_batch: usize,
-) -> StageCtx {
-    let n_layers = partition[stage];
-    let num_stages = partition.len();
-    let static_mem = stage_static_mem(setup, cm, partition, stage);
-    let times = cm.layer_times(g);
-    let comm = g.comm_ops();
-    let (w1, w2) = (times[comm[0]], times[comm[1]]);
-    StageCtx {
-        n_layers,
-        n_batch,
-        stage,
-        num_stages,
-        mem_budget: (cm.topo.gpu.usable_memory() - static_mem).max(0.0),
-        fwd_window: [w1, w2],
-        // Backward all-reduces move the same bytes as forward.
-        bwd_window: [w1, w2],
-        boundary_bytes: cm.memory.boundary_bytes(setup),
-    }
+    let tables = CostTables::new(setup, cm, g);
+    let n_batch = tables.n_batch_for(stage, sched);
+    tables.build_ctx(stage, partition[stage], n_batch)
 }
 
 /// Static model-state bytes on `stage` (embedding on the first stage, the
@@ -104,7 +86,8 @@ pub fn stage_static_mem(
     cm.memory.static_bytes(setup, partition[stage], with_embedding)
 }
 
-/// Evaluate the cost of a planned stage.
+/// Evaluate the cost of a planned stage (one-off convenience for
+/// [`CostTables::stage_cost`]).
 pub fn stage_cost(
     setup: &TrainSetup,
     cm: &CostModel,
@@ -112,86 +95,26 @@ pub fn stage_cost(
     ctx: &StageCtx,
     plan: &StagePlan,
 ) -> StageCost {
-    let times = cm.layer_times(g);
-    let fwd_layer: f64 = times.iter().sum();
-    let bwd_layer: f64 = g.ops.iter().map(|o| cm.op_bwd_time(o)).sum();
-    let comm_layer: f64 = g
-        .ops
-        .iter()
-        .zip(&times)
-        .filter(|(o, _)| o.is_comm())
-        .map(|(o, t)| t + cm.op_bwd_time(o))
-        .sum();
-
-    let nl = ctx.n_layers as f64;
-    let mut fwd = fwd_layer * nl;
-    let mut bwd = bwd_layer * nl;
-
-    // Embedding on the first stage, LM head on the last.
-    let (s, b, h, v) = (
-        setup.seq as f64,
-        setup.micro_batch as f64,
-        setup.model.hidden as f64,
-        setup.model.vocab as f64,
-    );
-    if ctx.stage == 0 {
-        // Embedding lookup: bandwidth-bound gather.
-        fwd += cm.compute.time(0.0, 2.0 * s * b * h * 2.0);
-        bwd += cm.compute.time(0.0, 2.0 * s * b * h * 2.0);
-    }
-    if ctx.is_last_stage() {
-        // Logits matmul + softmax loss, TP-sharded over vocab.
-        let t = setup.tp as f64;
-        let logits_flops = 2.0 * s * b * h * v / t;
-        let logits_bytes = 2.0 * (s * b * h + h * v / t + s * b * v / t);
-        fwd += cm.compute.time(logits_flops, logits_bytes);
-        bwd += 2.0 * cm.compute.time(logits_flops, logits_bytes);
-    }
-
-    let exposed: f64 = plan.layers.iter().map(|l| l.exposed_time(&times)).sum();
-    let overlapped: f64 = plan.layers.iter().map(|l| l.overlapped_time(&times)).sum();
-    let retained: f64 = plan.layers.iter().map(|l| l.retained_time(&times)).sum();
-
-    let static_mem = {
-        // Reconstruct: budget = usable - static  ⇒  static = usable - budget.
-        (cm.topo.gpu.usable_memory() - ctx.mem_budget).max(0.0)
-    };
-    let activation = plan.activation_bytes(g, ctx);
-    let peak_mem = static_mem + activation;
-    let oom = peak_mem > cm.topo.gpu.usable_memory();
-
-    StageCost {
-        fwd,
-        bwd,
-        exposed_recompute: exposed,
-        overlapped_recompute: overlapped,
-        retained_time: retained,
-        comm_time: comm_layer * nl,
-        slot_time: fwd + bwd + exposed,
-        peak_mem,
-        static_mem,
-        oom,
-    }
+    CostTables::new(setup, cm, g).stage_cost(ctx, plan)
 }
 
-/// Dispatch a policy to its planner for one stage.
-pub fn plan_stage(
-    kind: PolicyKind,
-    g: &LayerGraph,
-    ctx: &StageCtx,
-    times: &[f64],
-) -> PlanOutcome {
+/// Dispatch a policy to its planner for one stage. All planners read
+/// their graph, op times and memoized sums from `tables`.
+pub fn plan_stage(kind: PolicyKind, tables: &CostTables, ctx: &StageCtx) -> PlanOutcome {
     use super::{heu, opt, rules};
+    let g = &tables.g;
     match kind {
         PolicyKind::Full => rules::full_plan(g, ctx),
         PolicyKind::Selective => rules::selective_plan(g, ctx),
         PolicyKind::Uniform => rules::uniform_best_group(g, ctx).1,
-        PolicyKind::Block => rules::block_best_k(g, ctx).1,
+        PolicyKind::Block => rules::block_best_k_fast(tables, ctx).1,
         PolicyKind::Checkmate => {
-            opt::checkmate_plan(g, ctx, times, &opt::OptOptions::default())
+            opt::checkmate_plan_cached(tables, ctx, &opt::OptOptions::default())
         }
-        PolicyKind::LynxHeu => heu::heu_plan(g, ctx, times, &heu::HeuOptions::default()),
-        PolicyKind::LynxOpt => opt::opt_plan(g, ctx, times, &opt::OptOptions::default()),
+        PolicyKind::LynxHeu => {
+            heu::heu_plan_cached(tables, ctx, &heu::HeuOptions::default())
+        }
+        PolicyKind::LynxOpt => opt::opt_plan_cached(tables, ctx, &opt::OptOptions::default()),
     }
 }
 
@@ -219,6 +142,8 @@ mod tests {
         assert_eq!(c3.n_batch, 1);
         // First stage carries embedding → smaller activation budget.
         assert!(c0.mem_budget < c3.mem_budget + 1.0);
+        // static_mem is carried directly and consistent with the budget.
+        assert!((c0.static_mem - (cm.topo.gpu.usable_memory() - c0.mem_budget)).abs() < 1.0);
     }
 
     #[test]
@@ -289,11 +214,10 @@ mod tests {
     #[test]
     fn policy_dispatch_produces_valid_plans() {
         let (setup, cm, g) = fixture();
-        let part = vec![8, 8, 8, 8];
-        let ctx = build_stage_ctx(&setup, &cm, &g, &part, 1);
-        let times = cm.layer_times(&g);
+        let tables = CostTables::new(&setup, &cm, &g);
+        let ctx = tables.build_ctx_1f1b(1, 8);
         for kind in [PolicyKind::Full, PolicyKind::Selective, PolicyKind::Block] {
-            let out = plan_stage(kind, &g, &ctx, &times);
+            let out = plan_stage(kind, &tables, &ctx);
             for lp in &out.plan.layers {
                 lp.validate(&g).unwrap();
             }

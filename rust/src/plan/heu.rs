@@ -21,6 +21,7 @@
 //! disabled and `M_fwd_comm` is dropped. Opt 1 is the `M_delta` term.
 //! Opt 3 (cooldown stalls) is applied by the simulator at execution time.
 
+use super::tables::CostTables;
 use super::types::{LayerPlan, Phase, PlanOutcome, StageCtx, StagePlan};
 use crate::graph::LayerGraph;
 use crate::solver::{solve_milp, Expr, MilpOptions, MilpResult, MilpStatus, Model, Var};
@@ -67,9 +68,39 @@ pub fn heu_plan(
     times: &[f64],
     opts: &HeuOptions,
 ) -> PlanOutcome {
+    let order = retain_order(g, times);
+    heu_plan_inner(g, ctx, times, opts, &order)
+}
+
+/// [`heu_plan`] reading graph, op times and the precomputed warm-start
+/// retention order from the memoized [`CostTables`].
+pub fn heu_plan_cached(tables: &CostTables, ctx: &StageCtx, opts: &HeuOptions) -> PlanOutcome {
+    heu_plan_inner(&tables.g, ctx, &tables.times, opts, &tables.retain_order)
+}
+
+/// Warm-start retention order: ops with nonzero output by descending
+/// recompute-seconds per byte. [`CostTables`] precomputes this once.
+pub fn retain_order(g: &LayerGraph, times: &[f64]) -> Vec<usize> {
+    let mut order: Vec<usize> =
+        (0..g.ops.len()).filter(|&i| g.ops[i].out_bytes > 0.0).collect();
+    order.sort_by(|&a, &b| {
+        let ra = times[a] / g.ops[a].out_bytes;
+        let rb = times[b] / g.ops[b].out_bytes;
+        rb.partial_cmp(&ra).unwrap()
+    });
+    order
+}
+
+fn heu_plan_inner(
+    g: &LayerGraph,
+    ctx: &StageCtx,
+    times: &[f64],
+    opts: &HeuOptions,
+    order: &[usize],
+) -> PlanOutcome {
     let (model, vars) = build_ilp(g, ctx, times, opts);
     let mut milp = opts.milp.clone();
-    milp.warm_starts = warm_starts(g, ctx, times, opts, &model, &vars);
+    milp.warm_starts = warm_starts(g, ctx, times, opts, order, &model, &vars);
     let result = solve_milp(&model, &milp);
     finish(g, ctx, result, &vars)
 }
@@ -102,6 +133,7 @@ fn warm_starts(
     ctx: &StageCtx,
     times: &[f64],
     opts: &HeuOptions,
+    order: &[usize],
     model: &Model,
     vars: &Vars,
 ) -> Vec<Vec<f64>> {
@@ -119,23 +151,17 @@ fn warm_starts(
     plans.push(full.clone());
 
     // Greedy family: retain ops by descending recompute-seconds-per-byte
-    // until a fraction of the M_fwd budget is spent, then pack the
-    // evicted prefix into the comm windows in topological order. Sweeping
-    // the retention fraction gives branch-and-bound several diverse
-    // incumbents to start from.
+    // (the precomputed `order`) until a fraction of the M_fwd budget is
+    // spent, then pack the evicted prefix into the comm windows in
+    // topological order. Sweeping the retention fraction gives
+    // branch-and-bound several diverse incumbents to start from.
     let nl = ctx.n_layers as f64;
     let nb = ctx.n_batch as f64;
     let budget = ctx.mem_budget - ctx.boundary_total();
-    let mut order: Vec<usize> = (0..n).filter(|&i| g.ops[i].out_bytes > 0.0).collect();
-    order.sort_by(|&a, &b| {
-        let ra = times[a] / g.ops[a].out_bytes;
-        let rb = times[b] / g.ops[b].out_bytes;
-        rb.partial_cmp(&ra).unwrap()
-    });
     for frac in [1.0, 0.85, 0.6, 0.3] {
         let mut greedy = full.clone();
         let mut used = nl * nb * g.ops[out_op].out_bytes;
-        for &i in &order {
+        for &i in order {
             if i == out_op {
                 continue;
             }
@@ -196,15 +222,40 @@ pub fn heu_plan_with_budget(
     opts: &HeuOptions,
     per_layer_budget: f64,
 ) -> PlanOutcome {
+    let order = retain_order(g, times);
+    heu_plan_with_budget_inner(g, ctx, times, opts, &order, per_layer_budget)
+}
+
+/// [`heu_plan_with_budget`] on the memoized tables.
+pub fn heu_plan_with_budget_cached(
+    tables: &CostTables,
+    ctx: &StageCtx,
+    opts: &HeuOptions,
+    per_layer_budget: f64,
+) -> PlanOutcome {
+    heu_plan_with_budget_inner(
+        &tables.g,
+        ctx,
+        &tables.times,
+        opts,
+        &tables.retain_order,
+        per_layer_budget,
+    )
+}
+
+pub(crate) fn heu_plan_with_budget_inner(
+    g: &LayerGraph,
+    ctx: &StageCtx,
+    times: &[f64],
+    opts: &HeuOptions,
+    order: &[usize],
+    per_layer_budget: f64,
+) -> PlanOutcome {
     let mut ctx2 = ctx.clone();
     // Convert per-layer allotment into the stage-level budget the ILP uses.
     ctx2.mem_budget =
         per_layer_budget * ctx.n_layers as f64 + ctx.boundary_total();
-    let (model, vars) = build_ilp(g, &ctx2, times, opts);
-    let mut milp = opts.milp.clone();
-    milp.warm_starts = warm_starts(g, &ctx2, times, opts, &model, &vars);
-    let result = solve_milp(&model, &milp);
-    finish(g, &ctx2, result, &vars)
+    heu_plan_inner(g, &ctx2, times, opts, order)
 }
 
 fn finish(g: &LayerGraph, ctx: &StageCtx, result: MilpResult, vars: &Vars) -> PlanOutcome {
@@ -447,6 +498,7 @@ mod tests {
                 stage: 0,
                 num_stages: 4,
                 mem_budget: f64::INFINITY,
+                static_mem: 0.0,
                 fwd_window: [w1, w2],
                 bwd_window: [w1, w2],
                 boundary_bytes: 2.0 * (1024 * 4 * 1792) as f64,
@@ -459,6 +511,7 @@ mod tests {
             stage: 0,
             num_stages: 4,
             mem_budget: store_all_stage * budget_frac,
+            static_mem: 0.0,
             fwd_window: [w1, w2],
             bwd_window: [w1, w2],
             boundary_bytes: 2.0 * (1024 * 4 * 1792) as f64,

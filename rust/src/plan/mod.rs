@@ -6,18 +6,57 @@
 //! * [`heu`] — **Lynx-HEU**: per-layer ILP with overlap windows (§5).
 //! * [`opt`] — **Lynx-OPT**: global heterogeneous-layer search (§4), and
 //!   the Checkmate baseline (global, no overlap).
-//! * [`partition`] — recomputation-aware partitioning, Algorithm 1 (§6).
+//! * [`partition`] — recomputation-aware partitioning: Algorithm 1
+//!   (greedy, incremental) and the exact min-makespan DP search.
 //! * [`costeval`] — the training cost model of Fig. 4.
+//! * [`tables`] / [`cache`] — the memoized evaluation core.
+//!
+//! # Evaluation-core architecture (CostTables + PlanCache)
+//!
+//! Planner search cost is a first-class concern (paper Table 3: the
+//! heuristic finds plans in seconds where op-granular MILP takes hours),
+//! so everything the planners evaluate repeatedly is memoized at two
+//! levels:
+//!
+//! 1. [`tables::CostTables`] is computed **once** per
+//!    `(setup, cost model, graph)`: per-op forward/backward times, the
+//!    per-layer fwd/bwd/comm sums, comm-window widths, activation-byte
+//!    prefix sums, static-memory coefficients and the stage-role extras
+//!    (embedding / LM head). Stage contexts build in O(1) and
+//!    `CostTables::stage_cost` never re-walks `g.ops` for the
+//!    plan-independent terms.
+//! 2. [`cache::PlanCache`] memoizes `plan_stage` outcomes keyed by
+//!    `(stage-role, n_layers, n_batch, policy)` — the complete
+//!    dependency set of a stage plan. One cache is soundly shared across
+//!    a whole partition search, across the greedy and exact-DP searches,
+//!    across pipeline schedules, and across policies (e.g. the
+//!    `experiments` sweeps); its hit/solve counters feed
+//!    `BENCH_search.json`.
+//!
+//! On top of the core, [`partition::lynx_partition_cached`] re-evaluates
+//! only the two stages a candidate move touches, and
+//! [`partition::exact_dp_partition`] solves min-makespan partitioning
+//! exactly with `O(S·L)` unique plans (threaded cell evaluation, OOM and
+//! bound pruning). Both accept a [`crate::sched::ScheduleKind`] so the
+//! memory budgets replay the executed schedule's in-flight counts.
 
+pub mod cache;
 pub mod costeval;
 pub mod heu;
 pub mod opt;
 pub mod partition;
 pub mod rules;
+pub mod tables;
 pub mod types;
 
+pub use cache::{PlanCache, PlanKey};
 pub use costeval::{build_stage_ctx, build_stage_ctx_for, plan_stage, stage_cost, StageCost};
 pub use heu::{heu_plan, HeuOptions};
 pub use opt::{checkmate_plan, opt_plan, OptOptions};
-pub use partition::{dp_partition, dp_partition_result, lynx_partition, PartitionResult};
+pub use partition::{
+    dp_partition, dp_partition_result, dp_partition_result_cached, exact_dp_partition,
+    lynx_partition, lynx_partition_cached, pr1_reference_partition, PartitionResult,
+    Pr1Reference, SearchKind, SearchOptions,
+};
+pub use tables::{CostTables, StageRole};
 pub use types::{LayerPlan, Phase, PlanOutcome, PolicyKind, StageCtx, StagePlan};

@@ -20,7 +20,8 @@
 //! OPT-vs-HEU search-time gap of Table 3 is reproduced structurally; the
 //! returned plan is a true global optimum over the generated menu.
 
-use super::heu::{heu_plan_with_budget, HeuOptions};
+use super::heu::{retain_order, HeuOptions};
+use super::tables::CostTables;
 use super::types::{LayerPlan, PlanOutcome, StageCtx, StagePlan};
 use crate::graph::LayerGraph;
 use crate::solver::{solve_milp, Expr, MilpOptions, MilpStatus, Model};
@@ -75,13 +76,39 @@ pub fn opt_plan(
     times: &[f64],
     opts: &OptOptions,
 ) -> PlanOutcome {
+    let store_all_bytes: f64 = g.ops.iter().map(|o| o.out_bytes).sum();
+    let order = retain_order(g, times);
+    opt_plan_inner(g, ctx, times, opts, store_all_bytes, &order)
+}
+
+/// [`opt_plan`] reading graph, op times, store-all bytes and the
+/// warm-start retention order from the memoized [`CostTables`].
+pub fn opt_plan_cached(tables: &CostTables, ctx: &StageCtx, opts: &OptOptions) -> PlanOutcome {
+    opt_plan_inner(
+        &tables.g,
+        ctx,
+        &tables.times,
+        opts,
+        tables.store_all_bytes,
+        &tables.retain_order,
+    )
+}
+
+fn opt_plan_inner(
+    g: &LayerGraph,
+    ctx: &StageCtx,
+    times: &[f64],
+    opts: &OptOptions,
+    store_all_bytes: f64,
+    order: &[usize],
+) -> PlanOutcome {
+    use super::heu::heu_plan_with_budget_inner;
     let start = Instant::now();
     let mut heu_opts = opts.heu.clone();
     heu_opts.overlap = opts.overlap;
 
     // ---- 1. menu generation ----
     let n = g.ops.len();
-    let store_all_bytes: f64 = g.ops.iter().map(|o| o.out_bytes).sum();
     let mut menu: Vec<Candidate> = Vec::new();
     let push_candidate = |plan: LayerPlan, menu: &mut Vec<Candidate>| {
         if plan.validate(g).is_err() {
@@ -116,7 +143,7 @@ pub fn opt_plan(
     for level in 0..opts.levels {
         let frac = (level + 1) as f64 / (opts.levels + 1) as f64;
         let per_layer = store_all_bytes * ctx.n_batch as f64 * frac;
-        let out = heu_plan_with_budget(g, ctx, times, &heu_opts, per_layer);
+        let out = heu_plan_with_budget_inner(g, ctx, times, &heu_opts, order, per_layer);
         if !out.plan.layers.is_empty() {
             push_candidate(out.plan.layers[0].clone(), &mut menu);
         }
@@ -213,6 +240,17 @@ pub fn checkmate_plan(
     opt_plan(g, ctx, times, &o)
 }
 
+/// [`checkmate_plan`] on the memoized tables.
+pub fn checkmate_plan_cached(
+    tables: &CostTables,
+    ctx: &StageCtx,
+    opts: &OptOptions,
+) -> PlanOutcome {
+    let mut o = opts.clone();
+    o.overlap = false;
+    opt_plan_cached(tables, ctx, &o)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +272,7 @@ mod tests {
                 stage: 0,
                 num_stages: 4,
                 mem_budget: f64::INFINITY,
+                static_mem: 0.0,
                 fwd_window: [w1, w2],
                 bwd_window: [w1, w2],
                 boundary_bytes: boundary,
@@ -247,6 +286,7 @@ mod tests {
             stage: 0,
             num_stages: 4,
             mem_budget: store_all * budget_frac,
+            static_mem: 0.0,
             fwd_window: [w1, w2],
             bwd_window: [w1, w2],
             boundary_bytes: boundary,

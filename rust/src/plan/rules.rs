@@ -10,6 +10,7 @@
 //! * **Block(k)** — fully recompute `k` of the stage's layers on demand;
 //!   store all activations of the rest.
 
+use super::tables::CostTables;
 use super::types::{LayerPlan, Phase, PlanOutcome, StageCtx, StagePlan};
 use crate::graph::{ComputeKind, LayerGraph, OpKind};
 
@@ -83,6 +84,23 @@ pub fn block_best_k(g: &LayerGraph, ctx: &StageCtx) -> (usize, PlanOutcome) {
     (ctx.n_layers, block_plan(g, ctx, ctx.n_layers))
 }
 
+/// Closed-form [`block_best_k`] on the memoized tables: a block-k stage
+/// retains `n_layers - k` store-all layers, so its activation demand is
+/// affine in `k` and the minimal feasible `k` needs no linear scan —
+/// `O(1)` instead of `O(n_layers)` `fits_memory` sweeps per call.
+pub fn block_best_k_fast(tables: &CostTables, ctx: &StageCtx) -> (usize, PlanOutcome) {
+    // activation(k) = (L-k)·n_batch·store_all + boundary  ≤  budget.
+    let per_layer = ctx.n_batch as f64 * tables.store_all_bytes;
+    let spare = ctx.mem_budget - ctx.boundary_total();
+    let k = if per_layer <= 0.0 {
+        0
+    } else {
+        let max_stored = (spare / per_layer).floor().max(0.0) as usize;
+        ctx.n_layers.saturating_sub(max_stored)
+    };
+    (k, block_plan(&tables.g, ctx, k))
+}
+
 /// Best uniform group size: largest group that fits (fewer checkpoints =
 /// less memory), since recompute cost is identical across group sizes at
 /// layer granularity.
@@ -112,6 +130,7 @@ mod tests {
             stage: 0,
             num_stages: 4,
             mem_budget: 30e9,
+            static_mem: 0.0,
             fwd_window: [1e-3, 1e-3],
             bwd_window: [1e-3, 1e-3],
             boundary_bytes: 2.0 * (1024 * 4 * 1792) as f64,
@@ -180,6 +199,26 @@ mod tests {
         assert!(k > 0 && !out.oom, "k={k}, oom={}", out.oom);
         // k-1 must not fit (minimality).
         assert!(block_plan(&g, &ctx, k - 1).oom);
+    }
+
+    #[test]
+    fn block_best_k_fast_matches_linear_scan() {
+        let s = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+        let g = build_layer_graph(&s);
+        let cm = CostModel::new(Topology::nvlink(2, 4));
+        let tables = CostTables::new(&s, &cm, &g);
+        let store_all = {
+            let ctx = tables.build_ctx_1f1b(0, 8);
+            block_plan(&g, &ctx, 0).plan.activation_bytes(&g, &ctx)
+        };
+        for frac in [0.05, 0.3, 0.6, 0.9, 1.5] {
+            let mut ctx = tables.build_ctx_1f1b(0, 8);
+            ctx.mem_budget = store_all * frac;
+            let (k_scan, out_scan) = block_best_k(&g, &ctx);
+            let (k_fast, out_fast) = block_best_k_fast(&tables, &ctx);
+            assert_eq!(k_fast, k_scan, "budget frac {frac}");
+            assert_eq!(out_fast.oom, out_scan.oom, "budget frac {frac}");
+        }
     }
 
     #[test]

@@ -1,0 +1,445 @@
+//! Memoized cost tables — the shared evaluation core of the planner.
+//!
+//! Every planner hot path (stage-cost evaluation, Algorithm-1 partition
+//! search, the per-layer ILP warm starts, the OPT menu sweep) used to
+//! re-derive the same quantities from the operator graph on every call:
+//! `cm.layer_times(g)` (a fresh `Vec` per call), the per-layer fwd/bwd/
+//! comm sums, the store-all activation bytes, and the static-memory
+//! terms. [`CostTables`] computes all of them **once** per
+//! `(setup, cost-model, graph)` and is threaded by reference through
+//! `costeval`, `heu`, `opt`, `rules` and the partition search, so no
+//! inner loop re-sums over `g.ops`.
+//!
+//! The tables also capture the *stage-role* structure the plan cache
+//! keys on: a stage influences its recomputation plan only through
+//! `(role, n_layers, n_batch)` — role being first/middle/last (embedding
+//! and LM-head statics, Opt-2 forward-window ban), never the raw stage
+//! index. See [`super::cache`].
+
+use super::costeval::StageCost;
+use super::types::{StageCtx, StagePlan};
+use crate::costmodel::CostModel;
+use crate::graph::{LayerGraph, TrainSetup};
+use crate::sched::PipelineSchedule;
+
+/// The role a stage plays in the pipeline — everything a recomputation
+/// plan can depend on besides `(n_layers, n_batch)`.
+///
+/// * `First` carries the embedding statics;
+/// * `Last` carries the (untied) LM head statics and disables the
+///   forward overlap windows (paper Opt 2);
+/// * `Solo` is a 1-stage pipeline (both of the above).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StageRole {
+    First,
+    Middle,
+    Last,
+    Solo,
+}
+
+impl StageRole {
+    /// Role of `stage` in a `num_stages`-deep pipeline.
+    pub fn of(stage: usize, num_stages: usize) -> StageRole {
+        match (stage == 0, stage + 1 == num_stages) {
+            (true, true) => StageRole::Solo,
+            (true, false) => StageRole::First,
+            (false, true) => StageRole::Last,
+            (false, false) => StageRole::Middle,
+        }
+    }
+
+    pub fn has_embedding(&self) -> bool {
+        !matches!(self, StageRole::Middle)
+    }
+
+    pub fn is_last(&self) -> bool {
+        matches!(self, StageRole::Last | StageRole::Solo)
+    }
+}
+
+/// Memoized per-(setup, cost-model, graph) evaluation tables.
+///
+/// Owns copies of the setup and layer graph so planner entry points only
+/// need `&CostTables`; construction is one pass over `g.ops`.
+#[derive(Debug, Clone)]
+pub struct CostTables {
+    /// The training setup the tables were built for.
+    pub setup: TrainSetup,
+    /// The (single-layer) operator graph.
+    pub g: LayerGraph,
+    /// Per-op forward times (what `cm.layer_times` recomputed per call).
+    pub times: Vec<f64>,
+    /// Per-op backward times.
+    pub bwd_times: Vec<f64>,
+    /// Σ forward time over one layer's ops.
+    pub fwd_layer: f64,
+    /// Σ backward time over one layer's ops.
+    pub bwd_layer: f64,
+    /// Σ (fwd + bwd) time of the comm ops of one layer.
+    pub comm_layer: f64,
+    /// Indices of the two forward all-reduce ops.
+    pub comm_ops: [usize; 2],
+    /// Comm-window widths [CTime1, CTime2] (backward mirrors forward).
+    pub window: [f64; 2],
+    /// Always-stored layer-boundary checkpoint bytes per layer-microbatch.
+    pub boundary_bytes: f64,
+    /// Prefix sums over per-op activation output bytes:
+    /// `out_bytes_prefix[i]` = Σ out_bytes of ops `0..i` (length n+1).
+    pub out_bytes_prefix: Vec<f64>,
+    /// Σ op output bytes of one layer (the store-all footprint).
+    pub store_all_bytes: f64,
+    /// Ops with nonzero output, sorted by descending recompute-seconds
+    /// per byte — the HEU warm-start retention order.
+    pub retain_order: Vec<usize>,
+    /// Usable device memory bytes.
+    pub usable_memory: f64,
+    /// Static model-state bytes per hosted transformer layer.
+    pub static_per_layer: f64,
+    /// Static embedding/LM-head bytes (first and last stages).
+    pub static_embedding: f64,
+    /// Stage-role extra times: embedding lookup on the first stage.
+    pub embed_fwd: f64,
+    pub embed_bwd: f64,
+    /// Stage-role extra times: logits matmul + loss on the last stage.
+    pub head_fwd: f64,
+    pub head_bwd: f64,
+    /// Pipeline depth the setup declares (`setup.pp`).
+    pub num_stages: usize,
+}
+
+impl CostTables {
+    /// Build the tables: one pass over `g.ops` plus O(n log n) for the
+    /// retention order.
+    pub fn new(setup: &TrainSetup, cm: &CostModel, g: &LayerGraph) -> CostTables {
+        let times = cm.layer_times(g);
+        let bwd_times: Vec<f64> = g.ops.iter().map(|o| cm.op_bwd_time(o)).collect();
+        let fwd_layer: f64 = times.iter().sum();
+        let bwd_layer: f64 = bwd_times.iter().sum();
+        let comm_layer: f64 = g
+            .ops
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.is_comm())
+            .map(|(i, _)| times[i] + bwd_times[i])
+            .sum();
+        let comm = g.comm_ops();
+        let comm_ops = [comm[0], comm[1]];
+        let window = [times[comm_ops[0]], times[comm_ops[1]]];
+
+        let mut out_bytes_prefix = Vec::with_capacity(g.ops.len() + 1);
+        let mut acc = 0.0;
+        out_bytes_prefix.push(0.0);
+        for o in &g.ops {
+            acc += o.out_bytes;
+            out_bytes_prefix.push(acc);
+        }
+        let store_all_bytes = acc;
+
+        let mut retain_order: Vec<usize> =
+            (0..g.ops.len()).filter(|&i| g.ops[i].out_bytes > 0.0).collect();
+        retain_order.sort_by(|&a, &b| {
+            let ra = times[a] / g.ops[a].out_bytes;
+            let rb = times[b] / g.ops[b].out_bytes;
+            rb.partial_cmp(&ra).unwrap()
+        });
+
+        // Stage-role extras (embedding on the first stage, LM head on the
+        // last) — previously re-derived inside every `stage_cost` call.
+        let (s, b, h, v) = (
+            setup.seq as f64,
+            setup.micro_batch as f64,
+            setup.model.hidden as f64,
+            setup.model.vocab as f64,
+        );
+        let embed_fwd = cm.compute.time(0.0, 2.0 * s * b * h * 2.0);
+        let embed_bwd = embed_fwd;
+        let t = setup.tp as f64;
+        let logits_flops = 2.0 * s * b * h * v / t;
+        let logits_bytes = 2.0 * (s * b * h + h * v / t + s * b * v / t);
+        let head_fwd = cm.compute.time(logits_flops, logits_bytes);
+        let head_bwd = 2.0 * head_fwd;
+
+        CostTables {
+            setup: setup.clone(),
+            g: g.clone(),
+            times,
+            bwd_times,
+            fwd_layer,
+            bwd_layer,
+            comm_layer,
+            comm_ops,
+            window,
+            boundary_bytes: cm.memory.boundary_bytes(setup),
+            out_bytes_prefix,
+            store_all_bytes,
+            retain_order,
+            usable_memory: cm.topo.gpu.usable_memory(),
+            static_per_layer: cm.memory.static_bytes(setup, 1, false),
+            static_embedding: cm.memory.static_bytes(setup, 0, true),
+            embed_fwd,
+            embed_bwd,
+            head_fwd,
+            head_bwd,
+            num_stages: setup.pp,
+        }
+    }
+
+    /// Σ out_bytes over the op index range `lo..hi` in O(1).
+    pub fn out_bytes_range(&self, lo: usize, hi: usize) -> f64 {
+        self.out_bytes_prefix[hi] - self.out_bytes_prefix[lo]
+    }
+
+    /// In-flight microbatches of `stage` under the paper's 1F1B closed
+    /// form.
+    pub fn n_batch_1f1b(&self, stage: usize) -> usize {
+        (self.num_stages - stage).min(self.setup.num_micro)
+    }
+
+    /// In-flight microbatch-equivalents reported by an executed schedule
+    /// (replay accounting; chunk-units rounded up to full-stage
+    /// microbatches exactly as `build_stage_ctx_for`).
+    pub fn n_batch_for(&self, stage: usize, sched: &dyn PipelineSchedule) -> usize {
+        let units = sched.peak_inflight(stage);
+        let v = sched.num_chunks();
+        ((units + v - 1) / v).max(1)
+    }
+
+    /// Static model-state bytes of `stage` hosting `n_layers` layers, O(1).
+    pub fn static_mem(&self, stage: usize, n_layers: usize) -> f64 {
+        let role = StageRole::of(stage, self.num_stages);
+        self.static_per_layer * n_layers as f64
+            + if role.has_embedding() { self.static_embedding } else { 0.0 }
+    }
+
+    /// Build a [`StageCtx`] in O(1) — no graph traversal, no allocation.
+    pub fn build_ctx(&self, stage: usize, n_layers: usize, n_batch: usize) -> StageCtx {
+        let static_mem = self.static_mem(stage, n_layers);
+        StageCtx {
+            n_layers,
+            n_batch,
+            stage,
+            num_stages: self.num_stages,
+            mem_budget: (self.usable_memory - static_mem).max(0.0),
+            static_mem,
+            fwd_window: self.window,
+            // Backward all-reduces move the same bytes as forward.
+            bwd_window: self.window,
+            boundary_bytes: self.boundary_bytes,
+        }
+    }
+
+    /// [`build_ctx`](Self::build_ctx) with the 1F1B in-flight count.
+    pub fn build_ctx_1f1b(&self, stage: usize, n_layers: usize) -> StageCtx {
+        self.build_ctx(stage, n_layers, self.n_batch_1f1b(stage))
+    }
+
+    /// Evaluate the cost of a planned stage using the memoized sums.
+    ///
+    /// Identical arithmetic to the original `costeval::stage_cost`, but
+    /// the per-layer fwd/bwd/comm sums and stage-role extras come from
+    /// the tables, the static memory comes straight from the ctx (no
+    /// lossy `usable - budget` reconstruction), and stages whose layers
+    /// share one plan (the common HEU case) fold the per-layer plan sums
+    /// into a single pass.
+    pub fn stage_cost(&self, ctx: &StageCtx, plan: &StagePlan) -> StageCost {
+        let nl = ctx.n_layers as f64;
+        let mut fwd = self.fwd_layer * nl;
+        let mut bwd = self.bwd_layer * nl;
+        let role = StageRole::of(ctx.stage, ctx.num_stages);
+        if matches!(role, StageRole::First | StageRole::Solo) {
+            fwd += self.embed_fwd;
+            bwd += self.embed_bwd;
+        }
+        if role.is_last() {
+            fwd += self.head_fwd;
+            bwd += self.head_bwd;
+        }
+
+        let uniform = plan.layers.len() > 1
+            && plan.layers.iter().skip(1).all(|l| l == &plan.layers[0]);
+        let (exposed, overlapped, retained) = if uniform {
+            let l0 = &plan.layers[0];
+            let k = plan.layers.len() as f64;
+            (
+                l0.exposed_time(&self.times) * k,
+                l0.overlapped_time(&self.times) * k,
+                l0.retained_time(&self.times) * k,
+            )
+        } else {
+            (
+                plan.layers.iter().map(|l| l.exposed_time(&self.times)).sum(),
+                plan.layers.iter().map(|l| l.overlapped_time(&self.times)).sum(),
+                plan.layers.iter().map(|l| l.retained_time(&self.times)).sum(),
+            )
+        };
+
+        let activation = plan.activation_bytes(&self.g, ctx);
+        let peak_mem = ctx.static_mem + activation;
+        let oom = peak_mem > self.usable_memory;
+
+        StageCost {
+            fwd,
+            bwd,
+            exposed_recompute: exposed,
+            overlapped_recompute: overlapped,
+            retained_time: retained,
+            comm_time: self.comm_layer * nl,
+            slot_time: fwd + bwd + exposed,
+            peak_mem,
+            static_mem: ctx.static_mem,
+            oom,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Topology;
+    use crate::graph::{build_layer_graph, ModelConfig};
+    use crate::plan::types::LayerPlan;
+    use crate::sched::ScheduleKind;
+
+    fn fixture() -> (TrainSetup, CostModel, LayerGraph) {
+        let setup = TrainSetup::new(ModelConfig::by_name("7B").unwrap(), 4, 4, 2, 8);
+        let cm = CostModel::new(Topology::nvlink(4, 4));
+        let g = build_layer_graph(&setup);
+        (setup, cm, g)
+    }
+
+    #[test]
+    fn tables_match_cost_model_sums() {
+        let (setup, cm, g) = fixture();
+        let t = CostTables::new(&setup, &cm, &g);
+        assert_eq!(t.times, cm.layer_times(&g));
+        let fwd: f64 = cm.layer_times(&g).iter().sum();
+        assert!((t.fwd_layer - fwd).abs() < 1e-15);
+        assert!((t.store_all_bytes - g.total_out_bytes()).abs() < 1.0);
+        assert_eq!(t.out_bytes_prefix.len(), g.ops.len() + 1);
+        assert!((t.out_bytes_range(0, g.ops.len()) - t.store_all_bytes).abs() < 1.0);
+    }
+
+    #[test]
+    fn build_ctx_matches_legacy_arithmetic() {
+        // Hand-written replica of the pre-memoization `build_stage_ctx`
+        // (per-call graph walks), so the O(1) path is checked against the
+        // original definition, not against itself.
+        let (setup, cm, g) = fixture();
+        let t = CostTables::new(&setup, &cm, &g);
+        let part = vec![8, 8, 8, 8];
+        for stage in 0..4 {
+            let n_batch = cm.memory.inflight_microbatches(stage, part.len(), setup.num_micro);
+            let with_embedding = stage == 0 || stage + 1 == part.len();
+            let static_mem = cm.memory.static_bytes(&setup, part[stage], with_embedding);
+            let times = cm.layer_times(&g);
+            let comm = g.comm_ops();
+            let fast = t.build_ctx_1f1b(stage, part[stage]);
+            assert_eq!(fast.n_batch, n_batch, "stage {stage}");
+            assert!(
+                (fast.mem_budget - (cm.topo.gpu.usable_memory() - static_mem).max(0.0)).abs()
+                    < 1.0,
+                "stage {stage}"
+            );
+            assert!((fast.static_mem - static_mem).abs() < 1.0, "stage {stage}");
+            assert_eq!(fast.fwd_window, [times[comm[0]], times[comm[1]]]);
+            assert_eq!(fast.boundary_bytes, cm.memory.boundary_bytes(&setup));
+        }
+    }
+
+    #[test]
+    fn stage_cost_matches_legacy_arithmetic() {
+        // Hand-written replica of the pre-memoization `stage_cost` body.
+        let (setup, cm, g) = fixture();
+        let t = CostTables::new(&setup, &cm, &g);
+        let part = vec![8, 8, 8, 8];
+        let times = cm.layer_times(&g);
+        let fwd_layer: f64 = times.iter().sum();
+        let bwd_layer: f64 = g.ops.iter().map(|o| cm.op_bwd_time(o)).sum();
+        let comm_layer: f64 = g
+            .ops
+            .iter()
+            .zip(&times)
+            .filter(|(o, _)| o.is_comm())
+            .map(|(o, ti)| ti + cm.op_bwd_time(o))
+            .sum();
+        for stage in 0..4 {
+            let ctx = t.build_ctx_1f1b(stage, part[stage]);
+            for plan in [
+                StagePlan::uniform(LayerPlan::full_recompute(g.ops.len()), 8),
+                StagePlan::uniform(LayerPlan::store_all(g.ops.len()), 8),
+            ] {
+                let nl = ctx.n_layers as f64;
+                let mut fwd = fwd_layer * nl;
+                let mut bwd = bwd_layer * nl;
+                let (s, b, h, v) = (
+                    setup.seq as f64,
+                    setup.micro_batch as f64,
+                    setup.model.hidden as f64,
+                    setup.model.vocab as f64,
+                );
+                if ctx.stage == 0 {
+                    fwd += cm.compute.time(0.0, 2.0 * s * b * h * 2.0);
+                    bwd += cm.compute.time(0.0, 2.0 * s * b * h * 2.0);
+                }
+                if ctx.is_last_stage() {
+                    let tp = setup.tp as f64;
+                    let logits_flops = 2.0 * s * b * h * v / tp;
+                    let logits_bytes = 2.0 * (s * b * h + h * v / tp + s * b * v / tp);
+                    fwd += cm.compute.time(logits_flops, logits_bytes);
+                    bwd += 2.0 * cm.compute.time(logits_flops, logits_bytes);
+                }
+                let exposed: f64 =
+                    plan.layers.iter().map(|l| l.exposed_time(&times)).sum();
+                let activation = plan.activation_bytes(&g, &ctx);
+                let peak = ctx.static_mem + activation;
+
+                let fast = t.stage_cost(&ctx, &plan);
+                assert!((fast.fwd - fwd).abs() < 1e-12, "stage {stage}");
+                assert!((fast.bwd - bwd).abs() < 1e-12, "stage {stage}");
+                assert!((fast.slot_time - (fwd + bwd + exposed)).abs() < 1e-12);
+                assert!((fast.peak_mem - peak).abs() < 1.0);
+                assert!((fast.comm_time - comm_layer * nl).abs() < 1e-12);
+                assert_eq!(fast.oom, peak > cm.topo.gpu.usable_memory());
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_plan_stage_cost_matches_uniform_fast_path() {
+        // A stage whose layers all share a plan must cost the same whether
+        // the evaluator takes the folded or the per-layer path.
+        let (setup, cm, g) = fixture();
+        let t = CostTables::new(&setup, &cm, &g);
+        let ctx = t.build_ctx_1f1b(1, 8);
+        let uniform = StagePlan::uniform(LayerPlan::full_recompute(g.ops.len()), 8);
+        let mut mixed = uniform.clone();
+        mixed.layers[7] = LayerPlan::store_all(g.ops.len());
+        let cu = t.stage_cost(&ctx, &uniform);
+        let cm_ = t.stage_cost(&ctx, &mixed);
+        // The mixed plan retains one layer: less exposed recompute.
+        assert!(cm_.exposed_recompute < cu.exposed_recompute);
+        assert!(cm_.retained_time > cu.retained_time);
+    }
+
+    #[test]
+    fn stage_roles_cover_pipeline_shapes() {
+        assert_eq!(StageRole::of(0, 1), StageRole::Solo);
+        assert_eq!(StageRole::of(0, 4), StageRole::First);
+        assert_eq!(StageRole::of(3, 4), StageRole::Last);
+        assert_eq!(StageRole::of(2, 4), StageRole::Middle);
+        assert!(StageRole::Solo.is_last() && StageRole::Solo.has_embedding());
+        assert!(!StageRole::Middle.has_embedding());
+    }
+
+    #[test]
+    fn n_batch_follows_schedule_replay() {
+        let (setup, cm, g) = fixture();
+        let t = CostTables::new(&setup, &cm, &g);
+        let gpipe = ScheduleKind::GPipe.build(4, setup.num_micro);
+        assert_eq!(t.n_batch_for(0, gpipe.as_ref()), setup.num_micro);
+        let ofob = ScheduleKind::OneFOneB.build(4, setup.num_micro);
+        for stage in 0..4 {
+            assert_eq!(t.n_batch_for(stage, ofob.as_ref()), t.n_batch_1f1b(stage));
+        }
+    }
+}

@@ -178,6 +178,11 @@ pub struct StageCtx {
     /// Dynamic memory budget in bytes (device memory minus model states
     /// and framework reserves), for activations of this stage.
     pub mem_budget: f64,
+    /// Static model-state bytes of this stage. Carried explicitly so cost
+    /// evaluation never has to reconstruct it as `usable - budget` (which
+    /// clamps at zero and loses information when statics exceed device
+    /// memory).
+    pub static_mem: f64,
     /// Forward comm window durations [CTime1, CTime2] (seconds).
     pub fwd_window: [f64; 2],
     /// Backward comm window durations [CTime3, CTime4].
@@ -212,13 +217,28 @@ impl StagePlan {
 
     /// Peak activation memory of this stage per paper Eq. 17 terms
     /// (M_fwd + M_fwd_comm + M_delta), excluding static model states.
+    ///
+    /// Stages whose layers share one plan (the HEU "identical
+    /// structures" case) are folded into a single per-layer pass.
     pub fn activation_bytes(&self, g: &LayerGraph, ctx: &StageCtx) -> f64 {
-        let m_fwd: f64 = self
-            .layers
-            .iter()
-            .map(|p| p.retained_bytes(g) * ctx.n_batch as f64)
-            .sum();
-        let m_fwd_comm: f64 = self.layers.iter().map(|p| p.fwd_comm_bytes(g)).sum();
+        let uniform =
+            self.layers.len() > 1 && self.layers.iter().skip(1).all(|l| l == &self.layers[0]);
+        let (m_fwd, m_fwd_comm): (f64, f64) = if uniform {
+            let k = self.layers.len() as f64;
+            let l0 = &self.layers[0];
+            (
+                l0.retained_bytes(g) * ctx.n_batch as f64 * k,
+                l0.fwd_comm_bytes(g) * k,
+            )
+        } else {
+            (
+                self.layers
+                    .iter()
+                    .map(|p| p.retained_bytes(g) * ctx.n_batch as f64)
+                    .sum(),
+                self.layers.iter().map(|p| p.fwd_comm_bytes(g)).sum(),
+            )
+        };
         // M_delta: one layer's worth of backward-window recompute outputs
         // (Opt 1 reservation — the first backward layer's recompute runs in
         // the previous microbatch's window).
@@ -346,6 +366,7 @@ mod tests {
             stage: 0,
             num_stages: 4,
             mem_budget: f64::INFINITY,
+            static_mem: 0.0,
             fwd_window: [1e-3; 2],
             bwd_window: [1e-3; 2],
             boundary_bytes: 2.0 * (s.seq * s.micro_batch * s.model.hidden) as f64,

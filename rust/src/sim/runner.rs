@@ -5,7 +5,7 @@ use super::engine::{run_schedule, StageTiming};
 use crate::costmodel::CostModel;
 use crate::graph::{build_layer_graph, TrainSetup};
 use crate::plan::{
-    build_stage_ctx_for, dp_partition, lynx_partition, plan_stage, stage_cost, PolicyKind,
+    dp_partition, lynx_partition_cached, CostTables, PlanCache, PolicyKind, SearchOptions,
 };
 use crate::sched::ScheduleKind;
 use crate::util::json::Json;
@@ -142,9 +142,18 @@ impl SimReport {
 /// candidate) and the searched split are executed and the better one is
 /// kept — the partition policy maker's final evaluation step (Fig. 4 ⑦⑧).
 pub fn simulate(cm: &CostModel, cfg: &SimConfig) -> SimReport {
+    // One evaluation core per simulate call: the searched and dp
+    // candidates (Lynx mode) share every cached stage plan.
+    let tables = CostTables::new(&cfg.setup, cm, &build_layer_graph(&cfg.setup));
+    let mut cache = PlanCache::new();
     if cfg.partition == PartitionMode::Lynx {
-        let searched = simulate_one(cm, cfg);
-        let dp = simulate_one(cm, &SimConfig { partition: PartitionMode::Dp, ..cfg.clone() });
+        let searched = simulate_one(cm, cfg, &tables, &mut cache);
+        let dp = simulate_one(
+            cm,
+            &SimConfig { partition: PartitionMode::Dp, ..cfg.clone() },
+            &tables,
+            &mut cache,
+        );
         return match (searched.oom, dp.oom) {
             (false, true) => searched,
             (true, false) => dp,
@@ -157,51 +166,40 @@ pub fn simulate(cm: &CostModel, cfg: &SimConfig) -> SimReport {
             }
         };
     }
-    simulate_one(cm, cfg)
+    simulate_one(cm, cfg, &tables, &mut cache)
 }
 
-fn simulate_one(cm: &CostModel, cfg: &SimConfig) -> SimReport {
+fn simulate_one(
+    cm: &CostModel,
+    cfg: &SimConfig,
+    tables: &CostTables,
+    cache: &mut PlanCache,
+) -> SimReport {
     let setup = &cfg.setup;
-    let g = build_layer_graph(setup);
-    let times = cm.layer_times(&g);
     let sched = cfg.schedule.build(setup.pp, setup.num_micro);
+    let search_opts = SearchOptions { schedule: Some(cfg.schedule), ..Default::default() };
 
     // ---- partition + plans ----
-    // Plans are made against the executed schedule's in-flight counts;
-    // the Lynx partition search itself still scores candidates with the
-    // analytic 1F1B slot model (Algorithm 1), which is schedule-agnostic
-    // to first order.
+    // Both the plans and the partition search run against the executed
+    // schedule's replayed in-flight counts (schedule-aware Algorithm 1),
+    // so no post-search re-planning is needed.
     let (partition, plans, search_secs) = match cfg.partition {
         PartitionMode::Dp => {
             let part = dp_partition(setup.model.layers, setup.pp);
             let mut plans = Vec::with_capacity(setup.pp);
             let mut search = 0.0;
             for stage in 0..setup.pp {
-                let ctx = build_stage_ctx_for(setup, cm, &g, &part, stage, sched.as_ref());
-                let out = plan_stage(cfg.policy, &g, &ctx, &times);
+                let n_batch = tables.n_batch_for(stage, sched.as_ref());
+                let ctx = tables.build_ctx(stage, part[stage], n_batch);
+                let out = cache.get_or_plan(tables, &ctx, cfg.policy);
                 search += out.search_secs;
                 plans.push(out);
             }
             (part, plans, search)
         }
         PartitionMode::Lynx => {
-            let r = lynx_partition(setup, cm, &g, cfg.policy);
-            if cfg.schedule == ScheduleKind::OneFOneB {
-                (r.partition, r.plans, r.search_secs)
-            } else {
-                // Re-plan the searched split under the executed
-                // schedule's in-flight accounting.
-                let part = r.partition.clone();
-                let mut plans = Vec::with_capacity(setup.pp);
-                let mut search = r.search_secs;
-                for stage in 0..setup.pp {
-                    let ctx = build_stage_ctx_for(setup, cm, &g, &part, stage, sched.as_ref());
-                    let out = plan_stage(cfg.policy, &g, &ctx, &times);
-                    search += out.search_secs;
-                    plans.push(out);
-                }
-                (part, plans, search)
-            }
+            let r = lynx_partition_cached(tables, cache, cfg.policy, &search_opts);
+            (r.partition, r.plans, r.search_secs)
         }
     };
 
@@ -211,8 +209,9 @@ fn simulate_one(cm: &CostModel, cfg: &SimConfig) -> SimReport {
     let mut oom = false;
     let boundary = cm.memory.boundary_bytes(setup);
     for stage in 0..setup.pp {
-        let ctx = build_stage_ctx_for(setup, cm, &g, &partition, stage, sched.as_ref());
-        let cost = stage_cost(setup, cm, &g, &ctx, &plans[stage].plan);
+        let n_batch = tables.n_batch_for(stage, sched.as_ref());
+        let ctx = tables.build_ctx(stage, partition[stage], n_batch);
+        let cost = tables.stage_cost(&ctx, &plans[stage].plan);
         oom |= plans[stage].oom || cost.oom;
         stage_timings.push(StageTiming {
             fwd: cost.fwd,

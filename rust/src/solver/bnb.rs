@@ -82,8 +82,12 @@ pub fn solve_milp(model: &Model, opts: &MilpOptions) -> MilpResult {
         }
     }
 
+    // Lower the model once; every node below only appends fixing rows
+    // (see `Model::extend_lp` — canonicalising per node dominated search).
+    let base_lp = model.to_lp(&[]);
+
     // Root relaxation for the gap test.
-    let root = solve_lp(&model.to_lp(&[]));
+    let root = solve_lp(&base_lp);
     let root_bound = match root.status {
         LpStatus::Optimal => root.obj,
         LpStatus::Infeasible => {
@@ -117,7 +121,7 @@ pub fn solve_milp(model: &Model, opts: &MilpOptions) -> MilpResult {
             break;
         }
         nodes += 1;
-        let sol = solve_lp(&model.to_lp(&fixings));
+        let sol = solve_lp(&model.extend_lp(&base_lp, &fixings));
         match sol.status {
             LpStatus::Infeasible => continue,
             LpStatus::Unbounded => {

@@ -147,6 +147,22 @@ impl Model {
         LpProblem { n, c, rows }
     }
 
+    /// Extend an already-lowered LP with branch fixings.
+    ///
+    /// `to_lp` canonicalises every constraint (a `BTreeMap` per row);
+    /// doing that once per branch-and-bound *node* dominated MILP search
+    /// time. The solver now lowers the model once (`to_lp(&[])`) and
+    /// appends the per-node fixing rows to a clone of the base — the
+    /// memoized-lowering analogue of the planner's cost tables.
+    pub fn extend_lp(&self, base: &LpProblem, fixings: &[(Var, f64)]) -> LpProblem {
+        let mut lp = base.clone();
+        lp.rows.reserve(fixings.len());
+        for &(Var(i), val) in fixings {
+            lp.rows.push((vec![(i, 1.0)], Cmp::Eq, val));
+        }
+        lp
+    }
+
     /// Objective value of an assignment (plus the expression constant).
     pub fn eval_objective(&self, x: &[f64]) -> f64 {
         self.objective.canonical().iter().map(|&(i, c)| c * x[i]).sum::<f64>()
@@ -201,6 +217,24 @@ mod tests {
         m.minimize(Expr::new().term(x, 1.0));
         let s = solve_lp(&m.to_lp(&[(x, 1.0)]));
         assert!((s.x[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn extend_lp_matches_direct_lowering() {
+        let mut m = Model::new();
+        let x = m.cont("x", 0.0, 10.0);
+        let y = m.binary("y");
+        m.add_le(Expr::new().term(x, 1.0).term(y, 5.0), 8.0);
+        m.minimize(Expr::new().term(x, -1.0).term(y, -10.0));
+        let base = m.to_lp(&[]);
+        let fixings = [(y, 1.0)];
+        let direct = m.to_lp(&fixings);
+        let extended = m.extend_lp(&base, &fixings);
+        assert_eq!(direct.rows.len(), extended.rows.len());
+        let a = solve_lp(&direct);
+        let b = solve_lp(&extended);
+        assert_eq!(a.status, b.status);
+        assert!((a.obj - b.obj).abs() < 1e-9);
     }
 
     #[test]

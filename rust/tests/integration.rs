@@ -5,7 +5,7 @@
 use lynx::costmodel::{CostModel, Topology};
 use lynx::graph::{build_layer_graph, ModelConfig, TrainSetup};
 use lynx::plan::{
-    build_stage_ctx, dp_partition_result, lynx_partition, plan_stage, stage_cost, PolicyKind,
+    dp_partition_result, lynx_partition, plan_stage, CostTables, PolicyKind,
 };
 use lynx::sim::{simulate, PartitionMode, SimConfig};
 use lynx::util::prng::Pcg32;
@@ -120,15 +120,15 @@ fn prop_plans_valid_and_memory_respected_across_random_configs() {
                 TrainSetup::new(ModelConfig::by_name(model).unwrap(), *tp, 4, *mb, 8);
             let cm = CostModel::new(Topology::nvlink(*tp, 4));
             let g = build_layer_graph(&setup);
-            let times = cm.layer_times(&g);
+            let tables = CostTables::new(&setup, &cm, &g);
             let part = lynx::plan::dp_partition(setup.model.layers, 4);
             for stage in 0..4 {
-                let ctx = build_stage_ctx(&setup, &cm, &g, &part, stage);
-                let out = plan_stage(*policy, &g, &ctx, &times);
+                let ctx = tables.build_ctx_1f1b(stage, part[stage]);
+                let out = plan_stage(*policy, &tables, &ctx);
                 for lp in &out.plan.layers {
                     lp.validate(&g).map_err(|e| format!("{model} s{stage}: {e}"))?;
                 }
-                let cost = stage_cost(&setup, &cm, &g, &ctx, &out.plan);
+                let cost = tables.stage_cost(&ctx, &out.plan);
                 if !out.oom && policy.is_lynx() && cost.peak_mem > cm.topo.gpu.usable_memory() {
                     return Err(format!(
                         "{model} s{stage}: lynx plan claims fit but peak {:.2e}",

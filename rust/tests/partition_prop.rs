@@ -1,0 +1,182 @@
+//! Property suite for the partition-search subsystem over the
+//! model × pp grid: exact-DP dominance, greedy-vs-baseline ordering,
+//! layer conservation, and cached-vs-uncached equivalence.
+//!
+//! Uses the deterministic rule policies (full / selective / block) so
+//! equality assertions are exact; the ILP policies go through the same
+//! `PlanCache` code paths (covered by unit tests in `plan::partition`).
+
+use lynx::costmodel::{CostModel, Topology};
+use lynx::graph::{build_layer_graph, ModelConfig, TrainSetup};
+use lynx::plan::{
+    dp_partition_result_cached, exact_dp_partition, lynx_partition, lynx_partition_cached,
+    pr1_reference_partition, CostTables, PartitionResult, PlanCache, PolicyKind, SearchOptions,
+};
+
+const EPS: f64 = 1e-9;
+
+fn grid() -> Vec<(&'static str, usize, usize)> {
+    // (model, tp, pp)
+    vec![
+        ("1.3B", 2, 2),
+        ("1.3B", 2, 4),
+        ("1.3B", 2, 8),
+        ("4.7B", 4, 2),
+        ("4.7B", 4, 4),
+        ("4.7B", 4, 8),
+    ]
+}
+
+fn policies() -> Vec<PolicyKind> {
+    vec![PolicyKind::Full, PolicyKind::Selective, PolicyKind::Block]
+}
+
+fn check_partition(r: &PartitionResult, total_layers: usize, label: &str) {
+    assert_eq!(
+        r.partition.iter().sum::<usize>(),
+        total_layers,
+        "{label}: layers not conserved: {:?}",
+        r.partition
+    );
+    assert!(
+        r.partition.iter().all(|&l| l >= 1),
+        "{label}: empty stage in {:?}",
+        r.partition
+    );
+    assert_eq!(r.partition.len(), r.durations.len(), "{label}");
+    assert_eq!(r.partition.len(), r.plans.len(), "{label}");
+}
+
+#[test]
+fn search_grid_dp_le_greedy_le_baseline() {
+    for (model, tp, pp) in grid() {
+        let setup = TrainSetup::new(ModelConfig::by_name(model).unwrap(), tp, pp, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(tp, pp));
+        let g = build_layer_graph(&setup);
+        let tables = CostTables::new(&setup, &cm, &g);
+        let mut cache = PlanCache::new();
+        let opts = SearchOptions::default();
+        for policy in policies() {
+            let label = format!("{model} tp{tp} pp{pp} {policy:?}");
+            let baseline = dp_partition_result_cached(&tables, &mut cache, policy, &opts);
+            let greedy = lynx_partition_cached(&tables, &mut cache, policy, &opts);
+            let exact = exact_dp_partition(&tables, &mut cache, policy, &opts);
+            check_partition(&baseline, setup.model.layers, &label);
+            check_partition(&greedy, setup.model.layers, &label);
+            check_partition(&exact, setup.model.layers, &label);
+
+            // Greedy starts from the baseline and only accepts improving
+            // feasible moves.
+            assert!(
+                greedy.makespan() <= baseline.makespan() + EPS,
+                "{label}: greedy {} > baseline {}",
+                greedy.makespan(),
+                baseline.makespan()
+            );
+            // Exact DP dominates greedy lexicographically:
+            // feasibility first, then makespan.
+            if !greedy.oom {
+                assert!(!exact.oom, "{label}: DP lost feasibility");
+                assert!(
+                    exact.makespan() <= greedy.makespan() + EPS,
+                    "{label}: dp {} > greedy {}",
+                    exact.makespan(),
+                    greedy.makespan()
+                );
+            } else if exact.oom {
+                assert!(
+                    exact.makespan() <= greedy.makespan() + EPS,
+                    "{label}: infeasible dp {} > greedy {}",
+                    exact.makespan(),
+                    greedy.makespan()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_and_uncached_searches_produce_identical_plans() {
+    for (model, tp, pp) in grid() {
+        let setup = TrainSetup::new(ModelConfig::by_name(model).unwrap(), tp, pp, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(tp, pp));
+        let g = build_layer_graph(&setup);
+        let tables = CostTables::new(&setup, &cm, &g);
+        for policy in policies() {
+            let label = format!("{model} tp{tp} pp{pp} {policy:?}");
+            // Warm shared cache via baseline + DP, then run greedy on it.
+            let mut shared = PlanCache::new();
+            let opts = SearchOptions::default();
+            dp_partition_result_cached(&tables, &mut shared, policy, &opts);
+            exact_dp_partition(&tables, &mut shared, policy, &opts);
+            let warm = lynx_partition_cached(&tables, &mut shared, policy, &opts);
+            // Fresh-cache run (the convenience wrapper).
+            let cold = lynx_partition(&setup, &cm, &g, policy);
+
+            assert_eq!(warm.partition, cold.partition, "{label}");
+            for (a, b) in warm.durations.iter().zip(&cold.durations) {
+                assert!((a - b).abs() < EPS, "{label}: {a} vs {b}");
+            }
+            for (pa, pb) in warm.plans.iter().zip(&cold.plans) {
+                assert_eq!(pa.plan.layers, pb.plan.layers, "{label}");
+                assert_eq!(pa.oom, pb.oom, "{label}");
+            }
+            assert_eq!(warm.oom, cold.oom, "{label}");
+            // A warm greedy re-run needs zero planner solves.
+            let rerun = lynx_partition_cached(&tables, &mut shared, policy, &opts);
+            assert_eq!(rerun.plan_solves, 0, "{label}");
+            assert_eq!(rerun.partition, warm.partition, "{label}");
+        }
+    }
+}
+
+#[test]
+fn incremental_greedy_equals_pr1_reference_on_grid() {
+    for (model, tp, pp) in grid() {
+        let setup = TrainSetup::new(ModelConfig::by_name(model).unwrap(), tp, pp, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(tp, pp));
+        let g = build_layer_graph(&setup);
+        for policy in policies() {
+            let label = format!("{model} tp{tp} pp{pp} {policy:?}");
+            let new = lynx_partition(&setup, &cm, &g, policy);
+            let old = pr1_reference_partition(&setup, &cm, &g, policy);
+            assert_eq!(new.partition, old.partition, "{label}");
+            assert_eq!(new.evaluated, old.evaluated, "{label}");
+            for (a, b) in new.durations.iter().zip(&old.durations) {
+                assert!((a - b).abs() < EPS, "{label}: {a} vs {b}");
+            }
+            // The whole point: strictly less evaluation work.
+            assert!(
+                new.stage_evals <= old.stage_evals,
+                "{label}: incremental {} vs pr1 {}",
+                new.stage_evals,
+                old.stage_evals
+            );
+        }
+    }
+}
+
+#[test]
+fn threaded_dp_matches_serial_dp_on_grid() {
+    for (model, tp, pp) in [("1.3B", 2, 4), ("4.7B", 4, 8)] {
+        let setup = TrainSetup::new(ModelConfig::by_name(model).unwrap(), tp, pp, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(tp, pp));
+        let g = build_layer_graph(&setup);
+        let tables = CostTables::new(&setup, &cm, &g);
+        for policy in policies() {
+            let serial = {
+                let mut cache = PlanCache::new();
+                let opts = SearchOptions { threads: 1, ..Default::default() };
+                exact_dp_partition(&tables, &mut cache, policy, &opts)
+            };
+            let threaded = {
+                let mut cache = PlanCache::new();
+                let opts = SearchOptions { threads: 4, ..Default::default() };
+                exact_dp_partition(&tables, &mut cache, policy, &opts)
+            };
+            assert_eq!(serial.partition, threaded.partition, "{model} pp{pp} {policy:?}");
+            assert!((serial.makespan() - threaded.makespan()).abs() < EPS);
+            assert_eq!(serial.oom, threaded.oom);
+        }
+    }
+}

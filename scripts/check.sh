@@ -31,4 +31,9 @@ LYNX_BENCH_QUICK=1 LYNX_BENCH_OUT="$PWD" cargo bench --bench bench_schedules
 test -f BENCH_schedules.json
 echo "BENCH_schedules.json written"
 
+echo "== bench: search time (quick) =="
+LYNX_BENCH_QUICK=1 LYNX_BENCH_OUT="$PWD" cargo bench --bench bench_table3_search_time
+test -f BENCH_search.json
+echo "BENCH_search.json written"
+
 echo "OK"
