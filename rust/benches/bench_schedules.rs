@@ -1,6 +1,10 @@
 //! Bench: cross-schedule pipeline comparison — per-schedule iteration
-//! time, bubble ratio and peak memory on the Table-2 GPT configs, plus
-//! the wall-clock cost of schedule construction.
+//! time, bubble ratio, peak memory under both the exact W-residual
+//! accounting and the B-freed H1 approximation (`peak_mem_bytes` vs
+//! `peak_mem_h1_bytes`; `scripts/check.sh` fails if exact ever drops
+//! below H1) on the Table-2 GPT configs, plus the wall-clock cost of
+//! schedule construction. Includes the `7B-h1-overcommit` stress row
+//! where the exact accounting rejects (OOM) a plan H1 certified.
 //!
 //! Consumes the same `experiments::schedule_runs` sweep as
 //! `lynx figures --fig schedules`, so the bench artifact and the figure
@@ -40,7 +44,9 @@ fn main() {
             format!("{:.2}", r.throughput),
             format!("{:.1}%", 100.0 * r.bubble_ratio),
             format!("{:.1}", r.peak_mem() / 1e9),
+            format!("{:.1}", r.peak_mem_h1() / 1e9),
             format!("{}", r.oom),
+            format!("{}", r.oom_h1),
         ]);
         let mut jo = Json::obj();
         jo.set("model", Json::from(*model))
@@ -50,15 +56,21 @@ fn main() {
             .set("throughput", Json::from(r.throughput))
             .set("bubble_ratio", Json::from(r.bubble_ratio))
             .set("peak_mem_bytes", Json::from(r.peak_mem()))
+            .set("peak_mem_h1_bytes", Json::from(r.peak_mem_h1()))
             .set("absorbed_secs", Json::from(absorbed))
             .set("window_secs", Json::from(windows))
-            .set("oom", Json::from(r.oom));
+            .set("oom", Json::from(r.oom))
+            .set("oom_h1", Json::from(r.oom_h1))
+            .set("h1_overcommitted", Json::from(r.h1_overcommitted()));
         out.push(jo);
     }
     b.record("full sweep wall-clock", sweep_wall, "s");
     b.table(
         "per-schedule iteration metrics (NVLink-4x4, Lynx-HEU)",
-        &["model", "schedule", "iter(s)", "thpt", "bubble", "peak GB", "oom"],
+        &[
+            "model", "schedule", "iter(s)", "thpt", "bubble", "peak GB", "h1 GB", "oom",
+            "oom_h1",
+        ],
         &rows,
     );
 

@@ -40,6 +40,8 @@ fn heu_fixture() -> (lynx::graph::LayerGraph, StageCtx, Vec<f64>) {
         let ctx0 = StageCtx {
             n_layers: 8,
             n_batch: 4,
+            n_batch_frac: 4.0,
+            n_batch_frac_h1: 4.0,
             stage: 0,
             num_stages: 4,
             mem_budget: f64::INFINITY,
@@ -53,6 +55,8 @@ fn heu_fixture() -> (lynx::graph::LayerGraph, StageCtx, Vec<f64>) {
     let ctx = StageCtx {
         n_layers: 8,
         n_batch: 4,
+        n_batch_frac: 4.0,
+        n_batch_frac_h1: 4.0,
         stage: 0,
         num_stages: 4,
         mem_budget: store_all * 0.5,

@@ -66,6 +66,7 @@ fn main() {
             .set("cache_hits", Json::from(r.greedy.cache_hits))
             .set("cache_hit_rate", Json::from(r.greedy.hit_rate()))
             .set("stage_evals", Json::from(r.greedy.stage_evals))
+            .set("probes_pruned", Json::from(r.greedy.probes_pruned))
             .set("wall_secs", Json::from(r.greedy.search_secs))
             .set("greedy_makespan_secs", Json::from(r.greedy.makespan()))
             .set("greedy_oom", Json::from(r.greedy.oom))
@@ -108,14 +109,17 @@ fn main() {
         &rows,
     );
 
-    // Sweep-level summary row (the ISSUE-2 acceptance numbers).
+    // Sweep-level summary row (the ISSUE-2 acceptance numbers, plus the
+    // ISSUE-3 makespan-bound pruning total).
     let total_pr1: usize = runs.iter().map(|r| r.pr1.plan_calls).sum();
     let total_solves: usize = runs.iter().map(|r| r.greedy.plan_solves).sum();
+    let total_pruned: usize = runs.iter().map(|r| r.greedy.probes_pruned).sum();
     let mut summary = Json::obj();
     summary
         .set("summary", Json::from(true))
         .set("total_pr1_plan_calls", Json::from(total_pr1))
         .set("total_greedy_plan_solves", Json::from(total_solves))
+        .set("total_probes_pruned", Json::from(total_pruned))
         .set(
             "sweep_solve_reduction",
             Json::from(total_pr1 as f64 / total_solves.max(1) as f64),

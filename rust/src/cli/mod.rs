@@ -39,7 +39,12 @@ fn common_specs() -> Vec<OptSpec> {
         opt("policy", "full|selective|uniform|block|checkmate|lynx-heu|lynx-opt", true, Some("lynx-heu")),
         opt("partition", "dp|lynx", true, Some("dp")),
         opt("search", "partition search algorithm: greedy|dp", true, Some("greedy")),
-        opt("schedule", "pipeline schedule: gpipe|1f1b|interleaved|zbh1", true, Some("1f1b")),
+        opt(
+            "schedule",
+            "pipeline schedule: gpipe|1f1b|interleaved|zbh1|zbh2|zbv",
+            true,
+            Some("1f1b"),
+        ),
         opt("chunks", "virtual chunks per stage (interleaved)", true, Some("2")),
         opt("help", "print help", false, None),
         // train-only options (accepted everywhere for simplicity)
@@ -64,6 +69,42 @@ fn parse_schedule(a: &Args) -> Result<ScheduleKind> {
     let name = a.get("schedule").unwrap();
     let chunks: usize = a.req("chunks")?;
     ScheduleKind::parse(name, chunks).ok_or_else(|| anyhow!("unknown schedule {name:?}"))
+}
+
+/// Warn (once per process) when the requested schedule shape cannot use
+/// its tight order and silently runs a looser fallback instead: ragged
+/// interleaved shapes (Megatron itself rejects them outright) drop to
+/// the greedy generator, and a wedged ZB-V shape would drop to the safe
+/// phase order (GPipe-like memory, large bubble).
+fn warn_schedule_fallback(kind: ScheduleKind, setup: &TrainSetup) {
+    use crate::sched::{Interleaved1F1B, ZbV};
+    use std::sync::Once;
+    static RAGGED_WARNING: Once = Once::new();
+    static ZBV_WARNING: Once = Once::new();
+    match kind {
+        ScheduleKind::Interleaved { chunks }
+            if Interleaved1F1B::shape_uses_fallback(setup.pp, setup.num_micro, chunks) =>
+        {
+            RAGGED_WARNING.call_once(|| {
+                eprintln!(
+                    "warning: interleaved schedule with num_micro={} not divisible by pp={} \
+                     cannot use the tight Megatron order; running the feasible-but-looser \
+                     greedy order (expect a slightly larger bubble)",
+                    setup.num_micro, setup.pp
+                );
+            });
+        }
+        ScheduleKind::ZbV if ZbV::shape_uses_fallback(setup.pp, setup.num_micro) => {
+            ZBV_WARNING.call_once(|| {
+                eprintln!(
+                    "warning: zbv wave generator wedged for pp={} num_micro={}; running \
+                     the safe phase order instead (GPipe-level memory, larger bubble)",
+                    setup.pp, setup.num_micro
+                );
+            });
+        }
+        _ => {}
+    }
 }
 
 fn parse_policy(s: &str) -> Result<PolicyKind> {
@@ -130,6 +171,7 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
         other => return Err(anyhow!("unknown partition mode {other:?}")),
     };
     let schedule = parse_schedule(a)?;
+    warn_schedule_fallback(schedule, &setup);
     let cm = CostModel::new(topo);
     let r = simulate(
         &cm,
@@ -195,6 +237,7 @@ fn cmd_partition(a: &Args) -> Result<i32> {
     let search = SearchKind::parse(search)
         .ok_or_else(|| anyhow!("unknown partition search {search:?} (greedy|dp)"))?;
     let schedule = parse_schedule(a)?;
+    warn_schedule_fallback(schedule, &setup);
     let cm = CostModel::new(topo);
     let g = build_layer_graph(&setup);
     // One shared evaluation core for the baseline and both searches: the
@@ -366,7 +409,7 @@ mod tests {
 
     #[test]
     fn simulate_accepts_every_schedule() {
-        for sched in ["gpipe", "1f1b", "interleaved", "zbh1"] {
+        for sched in ["gpipe", "1f1b", "interleaved", "zbh1", "zbh2", "zbv"] {
             let code = run(&sv(&[
                 "simulate",
                 "--model",

@@ -556,13 +556,53 @@ pub fn fig_sp() -> FigureResult {
 
 // ------------------------------------------------------- schedule matrix
 
-/// One row of the cross-schedule sweep: (model, micro-batch, schedule,
-/// simulated report).
+/// One row of the cross-schedule sweep: (config label, micro-batch,
+/// schedule, simulated report).
 pub type ScheduleRun = (&'static str, usize, ScheduleKind, SimReport);
+
+/// Find a setup where the exact W-residual accounting rejects (OOM) a
+/// configuration the B-freed H1 approximation certifies: 7B, NVLink-4x4,
+/// ZB-H2 (deep warm-up + W residual), the budget-independent Selective
+/// policy, scanning microbatch size and sequence length for the window
+/// where the H1 peak fits the device but the exact peak does not.
+/// Deterministic; returns `None` only if the cost model changes enough
+/// to close every window (regression tested).
+pub fn h1_overcommit_case() -> Option<TrainSetup> {
+    let cm = CostModel::new(Topology::nvlink(4, 4));
+    // Schedule shape and partition depend only on (pp, num_micro, layers),
+    // which the scan never varies — build them once.
+    let sched = ScheduleKind::ZbH2.build(4, NUM_MICRO);
+    let part = crate::plan::dp_partition(ModelConfig::by_name("7B").unwrap().layers, 4);
+    for mb in [4usize, 8, 16] {
+        let mut seq = 512;
+        while seq <= 6144 {
+            let s = setup("7B", 4, 4, mb).with_seq(seq);
+            let g = build_layer_graph(&s);
+            let tables = crate::plan::CostTables::new(&s, &cm, &g);
+            let mut h1_fits = true;
+            let mut exact_ooms = false;
+            for stage in 0..s.pp {
+                let h1 = tables.n_batch_frac_h1_for(stage, sched.as_ref());
+                let ctx_h1 = tables.build_ctx_frac(stage, part[stage], h1, h1);
+                let ctx_ex = tables.build_ctx_sched(stage, part[stage], sched.as_ref());
+                let plan = crate::plan::plan_stage(PolicyKind::Selective, &tables, &ctx_h1);
+                h1_fits &= !plan.oom && !tables.stage_cost(&ctx_h1, &plan.plan).oom;
+                exact_ooms |= tables.stage_cost(&ctx_ex, &plan.plan).oom;
+            }
+            if h1_fits && exact_ooms {
+                return Some(s);
+            }
+            seq += 16;
+        }
+    }
+    None
+}
 
 /// Raw results behind [`schedule_matrix`] and `bench_schedules`: every
 /// [`ScheduleKind`] on the Table-2 GPT configs, Lynx-HEU plans,
-/// dp-partition (isolates the schedule effect), NVLink-4x4.
+/// dp-partition (isolates the schedule effect), NVLink-4x4 — plus one
+/// stress row ([`h1_overcommit_case`], Selective/ZB-H2) where the exact
+/// accounting rejects what the H1 approximation certified.
 pub fn schedule_runs(quick: bool) -> Vec<ScheduleRun> {
     let models: Vec<(&'static str, usize)> =
         if quick { vec![("7B", 16)] } else { vec![("7B", 16), ("13B", 8)] };
@@ -579,12 +619,23 @@ pub fn schedule_runs(quick: bool) -> Vec<ScheduleRun> {
             runs.push((model, mb, kind, r));
         }
     }
+    if let Some(s) = h1_overcommit_case() {
+        let cm = CostModel::new(Topology::nvlink(4, 4));
+        let mb = s.micro_batch;
+        let r = simulate(
+            &cm,
+            &SimConfig::new(s, PolicyKind::Selective, PartitionMode::Dp)
+                .with_schedule(ScheduleKind::ZbH2),
+        );
+        runs.push(("7B-h1-overcommit", mb, ScheduleKind::ZbH2, r));
+    }
     runs
 }
 
 /// Cross-schedule evaluation table. Reports iteration time, throughput,
-/// bubble ratio, peak memory, and how much exposed recompute the Lynx
-/// absorber slotted into each schedule's overlap windows.
+/// bubble ratio, peak memory under both the exact W-residual accounting
+/// and the B-freed H1 approximation, and how much exposed recompute the
+/// Lynx absorber slotted into each schedule's overlap windows.
 pub fn schedule_matrix(quick: bool) -> FigureResult {
     let runs = schedule_runs(quick);
     let mut rows = Vec::new();
@@ -615,6 +666,9 @@ pub fn schedule_matrix(quick: bool) -> FigureResult {
                 fmt_thpt(r),
                 format!("{:.1}%", 100.0 * r.bubble_ratio),
                 format!("{:.1}", r.peak_mem() / 1e9),
+                format!("{:.1}", r.peak_mem_h1() / 1e9),
+                format!("{}", r.oom),
+                format!("{}", r.oom_h1),
                 format!("{:.1}", 1e3 * absorbed),
                 format!("{:.1}", 1e3 * windows),
             ]);
@@ -631,11 +685,22 @@ pub fn schedule_matrix(quick: bool) -> FigureResult {
                     100.0 * bubble_1f1b
                 ));
             }
+            if r.h1_overcommitted() {
+                notes.push(format!(
+                    "{model}: {} exact accounting rejects a plan the H1 approximation \
+                     certified (exact peak {:.1} GB vs {:.1} GB under the B-freed \
+                     approximation)",
+                    kind.label(),
+                    r.peak_mem() / 1e9,
+                    r.peak_mem_h1() / 1e9,
+                ));
+            }
         }
     }
     notes.push(
-        "expected: interleaved/zbh1 shrink the 1f1b bubble; gpipe matches 1f1b time \
-         but holds every microbatch in memory"
+        "expected: interleaved/zbh1/zbh2/zbv shrink the 1f1b bubble; gpipe matches \
+         1f1b time but holds every microbatch; split-backward peaks exceed their \
+         H1 column by the W residual"
             .into(),
     );
     FigureResult {
@@ -648,6 +713,9 @@ pub fn schedule_matrix(quick: bool) -> FigureResult {
             "thpt".into(),
             "bubble".into(),
             "peak GB".into(),
+            "h1 GB".into(),
+            "oom".into(),
+            "oom_h1".into(),
             "absorbed ms".into(),
             "windows ms".into(),
         ],

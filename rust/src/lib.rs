@@ -16,13 +16,18 @@
 //!   paper §4) and **Lynx-HEU** (per-layer ILP, paper §5), plus the
 //!   recomputation-aware partitioner (paper §6, Algorithm 1);
 //! * [`sched`] — pluggable pipeline schedules: GPipe, 1F1B,
-//!   interleaved-1F1B (virtual chunks) and ZB-H1 (split backward), each
-//!   exposing per-stage work orders, in-flight activation accounting and
-//!   the overlap windows the Lynx planner fills with recomputation;
+//!   interleaved-1F1B (virtual chunks), and the zero-bubble family —
+//!   ZB-H1, ZB-H2 (warm-up bubble filled with extra in-flight forwards)
+//!   and ZB-V (wave schedule over a V-shaped chunk placement). Each
+//!   exposes per-stage work orders, **exact** in-flight activation
+//!   accounting (split-backward replay: B releases `1 − w`, the
+//!   weight-grad residual `w` is held until W) and the overlap windows
+//!   the Lynx planner fills with recomputation;
 //! * [`sim`] — a discrete-event cluster simulator that executes
-//!   (partition, plan) pairs under any [`sched`] schedule and produces
-//!   the metrics behind every figure in the paper's evaluation, plus
-//!   per-schedule bubble ratios;
+//!   (partition, plan) pairs under any [`sched`] schedule (including
+//!   V-shaped chunk placements) and produces the metrics behind every
+//!   figure in the paper's evaluation, plus per-schedule bubble ratios
+//!   and exact-vs-H1 peak-memory comparisons;
 //! * [`profiler`] — analytic + PJRT wall-clock profiling (paper Fig. 4
 //!   "model profiler");
 //! * [`runtime`] — PJRT CPU runtime loading AOT-compiled HLO artifacts;

@@ -6,7 +6,8 @@
 //! never on the raw stage index or on what the *other* stages host. The
 //! old search memoized per `(n_layers, stage)` inside a single
 //! `lynx_partition` call; [`PlanCache`] promotes that into a first-class
-//! cache keyed `(role, n_layers, n_batch, policy)` that is sound to
+//! cache keyed `(role, n_layers, quantized exact in-flight, policy)`
+//! that is sound to
 //! share across an entire search, across the greedy and exact-DP
 //! searches, across pipeline schedules, and across policies in
 //! `experiments` — anything evaluated against the same
@@ -26,17 +27,28 @@ use std::collections::HashMap;
 pub struct PlanKey {
     pub role: StageRole,
     pub n_layers: usize,
-    pub n_batch: usize,
+    /// Exact in-flight microbatch-equivalents, quantized to 1/4096 units
+    /// so the fractional W-residual accounting stays hashable. Integer
+    /// counts map to exact multiples of [`PlanKey::N_BATCH_SCALE`].
+    pub n_batch_q: u64,
+    /// The B-freed part of the in-flight count, same quantization — the
+    /// budget a plan sees depends on both (retained bytes scale by the
+    /// B-freed part; the excess is the fixed W reserve).
+    pub n_batch_h1_q: u64,
     pub policy: PolicyKind,
 }
 
 impl PlanKey {
+    /// Quantization denominator for [`Self::n_batch_q`].
+    pub const N_BATCH_SCALE: f64 = 4096.0;
+
     /// Key of a stage context under `policy`.
     pub fn of(ctx: &StageCtx, policy: PolicyKind) -> PlanKey {
         PlanKey {
             role: StageRole::of(ctx.stage, ctx.num_stages),
             n_layers: ctx.n_layers,
-            n_batch: ctx.n_batch,
+            n_batch_q: (ctx.n_batch_frac * Self::N_BATCH_SCALE).round() as u64,
+            n_batch_h1_q: (ctx.n_batch_frac_h1 * Self::N_BATCH_SCALE).round() as u64,
             policy,
         }
     }

@@ -56,11 +56,11 @@ pub fn build_stage_ctx(
     tables.build_ctx_1f1b(stage, partition[stage])
 }
 
-/// Build the [`StageCtx`] with the in-flight microbatch count reported by
-/// an executed [`PipelineSchedule`] (replay accounting). Interleaved
-/// schedules count chunk-units; they are converted to full-stage
-/// microbatch-equivalents (rounded up — each unit holds
-/// `n_layers / chunks` layers' activations).
+/// Build the [`StageCtx`] with the **exact** in-flight count reported by
+/// an executed [`PipelineSchedule`]: the split-backward replay tracks
+/// B-released and W-released fractions separately (weighted by
+/// `CostTables::w_residual_frac`) and chunk units convert to full-stage
+/// microbatch-equivalents at `units / chunks` without rounding.
 pub fn build_stage_ctx_for(
     setup: &TrainSetup,
     cm: &CostModel,
@@ -70,8 +70,7 @@ pub fn build_stage_ctx_for(
     sched: &dyn PipelineSchedule,
 ) -> StageCtx {
     let tables = CostTables::new(setup, cm, g);
-    let n_batch = tables.n_batch_for(stage, sched);
-    tables.build_ctx(stage, partition[stage], n_batch)
+    tables.build_ctx_sched(stage, partition[stage], sched)
 }
 
 /// Static model-state bytes on `stage` (embedding on the first stage, the
@@ -161,7 +160,27 @@ mod tests {
             let via_sched = build_stage_ctx_for(&setup, &cm, &g, &part, stage, ofob.as_ref());
             let classic = build_stage_ctx(&setup, &cm, &g, &part, stage);
             assert_eq!(via_sched.n_batch, classic.n_batch, "stage {stage}");
+            assert!((via_sched.n_batch_frac - classic.n_batch_frac).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn split_backward_ctx_prices_the_w_residual() {
+        use crate::sched::ScheduleKind;
+        let (setup, cm, g) = fixture();
+        let part = vec![8, 8, 8, 8];
+        let zb = ScheduleKind::ZbH1.build(4, setup.num_micro);
+        let ofob = ScheduleKind::OneFOneB.build(4, setup.num_micro);
+        let mut some_gap = false;
+        for stage in 0..4 {
+            let z = build_stage_ctx_for(&setup, &cm, &g, &part, stage, zb.as_ref());
+            let o = build_stage_ctx_for(&setup, &cm, &g, &part, stage, ofob.as_ref());
+            // ZB-H1's B-freed profile matches 1F1B, so any excess is the
+            // W residual the exact accounting now prices.
+            assert!(z.n_batch_frac >= o.n_batch_frac - 1e-12, "stage {stage}");
+            some_gap |= z.n_batch_frac > o.n_batch_frac + 1e-9;
+        }
+        assert!(some_gap, "no stage priced a W residual");
     }
 
     #[test]

@@ -156,8 +156,11 @@ fn warm_starts(
     // topological order. Sweeping the retention fraction gives
     // branch-and-bound several diverse incumbents to start from.
     let nl = ctx.n_layers as f64;
-    let nb = ctx.n_batch as f64;
-    let budget = ctx.mem_budget - ctx.boundary_total();
+    // Retained bytes live from forward to B; the W-residual reserve is
+    // plan-independent and comes straight off the budget.
+    let nb = ctx.n_batch_frac_h1;
+    let budget =
+        ctx.mem_budget - ctx.boundary_total() - ctx.w_residual_reserve(g.total_out_bytes());
     for frac in [1.0, 0.85, 0.6, 0.3] {
         let mut greedy = full.clone();
         let mut used = nl * nb * g.ops[out_op].out_bytes;
@@ -252,9 +255,11 @@ pub(crate) fn heu_plan_with_budget_inner(
     per_layer_budget: f64,
 ) -> PlanOutcome {
     let mut ctx2 = ctx.clone();
-    // Convert per-layer allotment into the stage-level budget the ILP uses.
-    ctx2.mem_budget =
-        per_layer_budget * ctx.n_layers as f64 + ctx.boundary_total();
+    // Convert per-layer allotment into the stage-level budget the ILP
+    // uses (it subtracts the boundary and W-reserve terms back off).
+    ctx2.mem_budget = per_layer_budget * ctx.n_layers as f64
+        + ctx.boundary_total()
+        + ctx.w_residual_reserve(g.total_out_bytes());
     heu_plan_inner(g, &ctx2, times, opts, order)
 }
 
@@ -403,13 +408,15 @@ fn build_ilp(
         }
     }
 
-    // Eq. 17/18/20 memory: N_layer·N_batch·Σ S_i·M_i (M_fwd)
+    // Eq. 17/18/20 memory: N_layer·N_batch·Σ S_i·M_i (M_fwd, B-freed
+    //   in-flight scale)
     //   + N_layer·Σ (z_fwd1 + z_fwd2)·M_i (M_fwd_comm, skipped on last
     //     stage per Opt 2)
     //   + Σ (z_bwd1 + z_bwd2)·M_i (M_delta, Opt 1 reservation: one layer)
-    //   + boundary checkpoints <= budget.
+    //   + boundary checkpoints + the plan-independent W-residual reserve
+    //   <= budget.
     let nl = ctx.n_layers as f64;
-    let nb = ctx.n_batch as f64;
+    let nb = ctx.n_batch_frac_h1;
     let mut mem = Expr::new();
     for i in 0..n {
         let mi = g.ops[i].out_bytes;
@@ -430,7 +437,10 @@ fn build_ilp(
             }
         }
     }
-    m.add_le(mem, ctx.mem_budget - ctx.boundary_total());
+    m.add_le(
+        mem,
+        ctx.mem_budget - ctx.boundary_total() - ctx.w_residual_reserve(g.total_out_bytes()),
+    );
 
     // Objective (Eq. 12): minimise critical-path recomputation, with a
     // small bias toward retention to consume idle memory.
@@ -495,6 +505,8 @@ mod tests {
             let ctx0 = StageCtx {
                 n_layers: 8,
                 n_batch: 4,
+                n_batch_frac: 4.0,
+                n_batch_frac_h1: 4.0,
                 stage: 0,
                 num_stages: 4,
                 mem_budget: f64::INFINITY,
@@ -508,6 +520,8 @@ mod tests {
         let ctx = StageCtx {
             n_layers: 8,
             n_batch: 4,
+            n_batch_frac: 4.0,
+            n_batch_frac_h1: 4.0,
             stage: 0,
             num_stages: 4,
             mem_budget: store_all_stage * budget_frac,

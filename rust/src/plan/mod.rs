@@ -34,11 +34,16 @@
 //!    `BENCH_search.json`.
 //!
 //! On top of the core, [`partition::lynx_partition_cached`] re-evaluates
-//! only the two stages a candidate move touches, and
+//! only the two stages a candidate move touches (skipping probes whose
+//! recompute-free makespan bound already matches the incumbent), and
 //! [`partition::exact_dp_partition`] solves min-makespan partitioning
 //! exactly with `O(S·L)` unique plans (threaded cell evaluation, OOM and
 //! bound pruning). Both accept a [`crate::sched::ScheduleKind`] so the
-//! memory budgets replay the executed schedule's in-flight counts.
+//! memory budgets replay the executed schedule's **exact** in-flight
+//! counts: the split-backward replay tracks B-released and W-released
+//! fractions separately (`CostTables::w_residual_frac` weights the
+//! residual), so zero-bubble schedules are admitted only when their true
+//! peak fits the device.
 
 pub mod cache;
 pub mod costeval;

@@ -142,7 +142,7 @@ fn opt_plan_inner(
     // Budget sweep.
     for level in 0..opts.levels {
         let frac = (level + 1) as f64 / (opts.levels + 1) as f64;
-        let per_layer = store_all_bytes * ctx.n_batch as f64 * frac;
+        let per_layer = store_all_bytes * ctx.n_batch_frac_h1 * frac;
         let out = heu_plan_with_budget_inner(g, ctx, times, &heu_opts, order, per_layer);
         if !out.plan.layers.is_empty() {
             push_candidate(out.plan.layers[0].clone(), &mut menu);
@@ -151,15 +151,20 @@ fn opt_plan_inner(
 
     // ---- 2. global multiple-choice assignment ----
     let nl = ctx.n_layers;
-    let nb = ctx.n_batch as f64;
-    // Reserve the worst-case Opt-1 M_delta (one layer's backward-window
-    // recompute residency) so the chosen combination can never exceed the
-    // stage evaluator's Eq.-17 accounting.
+    // Retained bytes live forward-to-B (B-freed scale); the W-residual
+    // reserve is plan-independent and comes off the budget with the
+    // worst-case Opt-1 M_delta (one layer's backward-window recompute
+    // residency), so the chosen combination can never exceed the stage
+    // evaluator's Eq.-17 accounting.
+    let nb = ctx.n_batch_frac_h1;
     let max_delta = menu
         .iter()
         .map(|c| c.plan.bwd_window_bytes(g))
         .fold(0.0, f64::max);
-    let dynamic_budget = ctx.mem_budget - ctx.boundary_total() - max_delta;
+    let dynamic_budget = ctx.mem_budget
+        - ctx.boundary_total()
+        - ctx.w_residual_reserve(g.total_out_bytes())
+        - max_delta;
     let mut m = Model::new();
     let mut x = vec![vec![]; nl];
     for (l, xl) in x.iter_mut().enumerate() {
@@ -269,6 +274,8 @@ mod tests {
             let ctx0 = StageCtx {
                 n_layers: 4,
                 n_batch: 4,
+                n_batch_frac: 4.0,
+                n_batch_frac_h1: 4.0,
                 stage: 0,
                 num_stages: 4,
                 mem_budget: f64::INFINITY,
@@ -283,6 +290,8 @@ mod tests {
         let ctx = StageCtx {
             n_layers: 4,
             n_batch: 4,
+            n_batch_frac: 4.0,
+            n_batch_frac_h1: 4.0,
             stage: 0,
             num_stages: 4,
             mem_budget: store_all * budget_frac,

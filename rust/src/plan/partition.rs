@@ -95,6 +95,10 @@ pub struct PartitionResult {
     pub cache_hits: usize,
     /// Stage cost evaluations (ctx build + `stage_cost`) this search ran.
     pub stage_evals: usize,
+    /// Greedy inner-loop probes skipped by the makespan-bound pruning
+    /// (the candidate's recompute-free bound already matched or exceeded
+    /// the incumbent, so planning it could not have helped).
+    pub probes_pruned: usize,
 }
 
 impl PartitionResult {
@@ -129,15 +133,27 @@ pub fn dp_partition(total_layers: usize, stages: usize) -> Vec<usize> {
         .collect()
 }
 
-/// Per-stage in-flight microbatch counts for the search: the 1F1B closed
-/// form, or a replay of the configured schedule's work order.
-fn inflight_counts(tables: &CostTables, opts: &SearchOptions) -> Vec<usize> {
+/// Per-stage exact in-flight microbatch-equivalents for the search —
+/// `(full, B-freed)` fraction pairs: the 1F1B closed form, or the
+/// configured schedule's exact split-backward replay (B- and W-released
+/// fractions weighted by the tables' `w_residual_frac`).
+fn inflight_counts(tables: &CostTables, opts: &SearchOptions) -> Vec<(f64, f64)> {
     match opts.schedule {
-        None => (0..tables.num_stages).map(|s| tables.n_batch_1f1b(s)).collect(),
+        None => (0..tables.num_stages)
+            .map(|s| {
+                let f = tables.n_batch_1f1b(s) as f64;
+                (f, f)
+            })
+            .collect(),
         Some(kind) => {
             let sched = kind.build(tables.num_stages, tables.setup.num_micro);
             (0..tables.num_stages)
-                .map(|s| tables.n_batch_for(s, sched.as_ref()))
+                .map(|s| {
+                    (
+                        tables.n_batch_frac_for(s, sched.as_ref()),
+                        tables.n_batch_frac_h1_for(s, sched.as_ref()),
+                    )
+                })
                 .collect()
         }
     }
@@ -150,9 +166,9 @@ fn eval_stage(
     policy: PolicyKind,
     stage: usize,
     n_layers: usize,
-    n_batch: usize,
+    n_batch: (f64, f64),
 ) -> (PlanOutcome, f64, bool) {
-    let ctx = tables.build_ctx(stage, n_layers, n_batch);
+    let ctx = tables.build_ctx_frac(stage, n_layers, n_batch.0, n_batch.1);
     let outcome = cache.get_or_plan(tables, &ctx, policy);
     let cost = tables.stage_cost(&ctx, &outcome.plan);
     let oom = outcome.oom || cost.oom;
@@ -187,6 +203,7 @@ pub fn lynx_partition_cached(
     let n_batch = inflight_counts(tables, opts);
     let mut evaluated = 0usize;
     let mut stage_evals = 0usize;
+    let mut probes_pruned = 0usize;
 
     // InitialPartitionNoOOM: the even split; full recompute always fits in
     // practice, and evaluation flags OOM if not.
@@ -214,6 +231,29 @@ pub fn lynx_partition_cached(
         order.sort_by(|&a, &b| durs[a].partial_cmp(&durs[b]).unwrap());
         for &idx_short in order.iter().take(stages - 1) {
             if idx_short == idx_longest || best[idx_longest] <= 1 {
+                continue;
+            }
+            // Makespan-bound pruning (ROADMAP follow-up): the candidate's
+            // longest stage is at least the recompute-free bound of the
+            // two probe stages and the untouched stages' known
+            // durations. If that bound already matches or exceeds the
+            // incumbent, the move cannot improve — skip the probes
+            // without planning them. The accept test below requires
+            // `cand_longest < d_longest - 1e-12`, so this skip is
+            // exactly equivalent to evaluating and rejecting.
+            let lb_a = time_lower_bound(tables, idx_longest, best[idx_longest] - 1);
+            let lb_b = time_lower_bound(tables, idx_short, best[idx_short] + 1);
+            let others_max = durs
+                .iter()
+                .enumerate()
+                .filter(|&(s, _)| s != idx_longest && s != idx_short)
+                .map(|(_, &d)| d)
+                .fold(0.0f64, f64::max);
+            if lb_a.max(lb_b).max(others_max) >= d_longest - 1e-12 {
+                // Still counts as a considered candidate (the PR-1 loop
+                // evaluates and rejects it), but costs zero stage evals.
+                evaluated += 1;
+                probes_pruned += 1;
                 continue;
             }
             // Incremental evaluation: a move changes only two stages.
@@ -276,6 +316,7 @@ pub fn lynx_partition_cached(
         plan_solves: solves1 - solves0,
         cache_hits: hits1 - hits0,
         stage_evals,
+        probes_pruned,
     }
 }
 
@@ -324,6 +365,7 @@ pub fn dp_partition_result_cached(
         oom,
         plan_solves: solves1 - solves0,
         cache_hits: hits1 - hits0,
+        probes_pruned: 0,
     }
 }
 
@@ -388,8 +430,12 @@ pub fn exact_dp_partition(
     for (s, row) in cells.iter_mut().enumerate() {
         for l in 1..=max_l {
             let lb_time = time_lower_bound(tables, s, l);
+            // Minimal possible activation: boundary checkpoints (B-freed
+            // scale) plus the plan-independent W-residual reserve.
             let lb_mem = tables.static_mem(s, l)
-                + tables.boundary_bytes * l as f64 * n_batch[s] as f64;
+                + (tables.boundary_bytes * n_batch[s].1
+                    + (n_batch[s].0 - n_batch[s].1).max(0.0) * tables.store_all_bytes)
+                    * l as f64;
             if lb_mem > tables.usable_memory {
                 // No plan can fit: boundary checkpoints alone overflow.
                 row.push(Cell { slot: lb_time, oom: true, pruned: true });
@@ -457,6 +503,7 @@ pub fn exact_dp_partition(
         plan_solves: solves1 - solves0,
         cache_hits: hits1 - hits0,
         stage_evals,
+        probes_pruned: 0,
     }
 }
 
@@ -534,7 +581,7 @@ fn eval_cells(
     cache: &mut PlanCache,
     policy: PolicyKind,
     todo: &[(usize, usize)],
-    n_batch: &[usize],
+    n_batch: &[(f64, f64)],
     threads: usize,
 ) -> Vec<(f64, bool)> {
     let auto = if threads == 0 {
@@ -570,7 +617,7 @@ fn eval_cells(
                         if i % t != w {
                             continue;
                         }
-                        let ctx = tables.build_ctx(s, l, n_batch[s]);
+                        let ctx = tables.build_ctx_frac(s, l, n_batch[s].0, n_batch[s].1);
                         let key = PlanKey::of(&ctx, policy);
                         let cached = shared.lock().unwrap().lookup(&key);
                         let outcome = match cached {
@@ -818,6 +865,25 @@ mod tests {
     }
 
     #[test]
+    fn makespan_bound_pruning_fires_without_changing_results() {
+        // The equivalence with the PR-1 loop (previous test) shows the
+        // pruned search accepts the same moves; here: the bound actually
+        // fires (the terminating round probes a tied/short stage whose
+        // recompute-free bound already matches the incumbent) and every
+        // pruned probe saved two stage evaluations.
+        let (setup, cm, g) = fixture();
+        let mut any_pruned = 0usize;
+        for policy in [PolicyKind::Full, PolicyKind::Selective, PolicyKind::Block] {
+            let new = lynx_partition(&setup, &cm, &g, policy);
+            let old = pr1_reference_partition(&setup, &cm, &g, policy);
+            assert_eq!(new.partition, old.partition, "{policy:?}");
+            assert_eq!(new.evaluated, old.evaluated, "{policy:?}");
+            any_pruned += new.probes_pruned;
+        }
+        assert!(any_pruned >= 1, "the makespan bound never pruned a probe");
+    }
+
+    #[test]
     fn incremental_greedy_does_fewer_stage_evals() {
         let (setup, cm, g) = fixture();
         let new = lynx_partition(&setup, &cm, &g, PolicyKind::Full);
@@ -890,6 +956,28 @@ mod tests {
         assert!(r.evaluated < 200, "evaluated {}", r.evaluated);
         assert!(!r.oom);
         assert!(r.plan_solves + r.cache_hits >= r.stage_evals);
+    }
+
+    #[test]
+    fn split_backward_budgets_reach_both_searches() {
+        // ZB-H2's exact in-flight (extra warm-up forwards + W residual)
+        // must flow into the budgets of both searches: results stay
+        // layer-conserving and no worse than greedy under the DP.
+        let (setup, cm, g) = fixture();
+        let tables = CostTables::new(&setup, &cm, &g);
+        let mut cache = PlanCache::new();
+        let opts = SearchOptions {
+            schedule: Some(ScheduleKind::ZbH2),
+            ..Default::default()
+        };
+        let greedy = lynx_partition_cached(&tables, &mut cache, PolicyKind::Block, &opts);
+        let dp = exact_dp_partition(&tables, &mut cache, PolicyKind::Block, &opts);
+        assert_eq!(greedy.partition.iter().sum::<usize>(), setup.model.layers);
+        assert_eq!(dp.partition.iter().sum::<usize>(), setup.model.layers);
+        match (greedy.oom, dp.oom) {
+            (false, false) => assert!(dp.makespan() <= greedy.makespan() + 1e-12),
+            (oom_g, oom_dp) => assert!(oom_dp <= oom_g, "DP must not OOM when greedy fits"),
+        }
     }
 
     #[test]

@@ -89,9 +89,13 @@ pub fn block_best_k(g: &LayerGraph, ctx: &StageCtx) -> (usize, PlanOutcome) {
 /// affine in `k` and the minimal feasible `k` needs no linear scan —
 /// `O(1)` instead of `O(n_layers)` `fits_memory` sweeps per call.
 pub fn block_best_k_fast(tables: &CostTables, ctx: &StageCtx) -> (usize, PlanOutcome) {
-    // activation(k) = (L-k)·n_batch·store_all + boundary  ≤  budget.
-    let per_layer = ctx.n_batch as f64 * tables.store_all_bytes;
-    let spare = ctx.mem_budget - ctx.boundary_total();
+    // activation(k) = (L-k)·n_batch_h1·store_all + boundary + W-reserve
+    // ≤ budget (retained bytes scale by the B-freed in-flight count; the
+    // deferred weight-grad inputs are plan-independent).
+    let per_layer = ctx.n_batch_frac_h1 * tables.store_all_bytes;
+    let spare = ctx.mem_budget
+        - ctx.boundary_total()
+        - ctx.w_residual_reserve(tables.store_all_bytes);
     let k = if per_layer <= 0.0 {
         0
     } else {
@@ -127,6 +131,8 @@ mod tests {
         let ctx = StageCtx {
             n_layers: 8,
             n_batch: 4,
+            n_batch_frac: 4.0,
+            n_batch_frac_h1: 4.0,
             stage: 0,
             num_stages: 4,
             mem_budget: 30e9,

@@ -19,7 +19,7 @@
 use super::costeval::StageCost;
 use super::types::{StageCtx, StagePlan};
 use crate::costmodel::CostModel;
-use crate::graph::{LayerGraph, TrainSetup};
+use crate::graph::{ComputeKind, LayerGraph, OpKind, TrainSetup};
 use crate::sched::PipelineSchedule;
 
 /// The role a stage plays in the pipeline — everything a recomputation
@@ -88,6 +88,14 @@ pub struct CostTables {
     pub out_bytes_prefix: Vec<f64>,
     /// Σ op output bytes of one layer (the store-all footprint).
     pub store_all_bytes: f64,
+    /// Σ out_bytes of the (unique) inputs the weighted matmuls need for
+    /// their weight-grad — the bytes a split backward holds from B
+    /// until W.
+    pub w_grad_input_bytes: f64,
+    /// `w_grad_input_bytes / store_all_bytes`: the fraction of one
+    /// activation unit a deferred W item keeps resident. Feeds the exact
+    /// in-flight replay (`PipelineSchedule::peak_inflight_exact`).
+    pub w_residual_frac: f64,
     /// Ops with nonzero output, sorted by descending recompute-seconds
     /// per byte — the HEU warm-start retention order.
     pub retain_order: Vec<usize>,
@@ -135,6 +143,38 @@ impl CostTables {
         }
         let store_all_bytes = acc;
 
+        // Bytes the weight-grad (W) pass still needs after the input-grad
+        // (B) released everything else: the inputs of the weighted
+        // matmuls, i.e. the unique deps of QKV/out-proj/MLP projections.
+        let mut w_dep = vec![false; g.ops.len()];
+        for o in &g.ops {
+            if matches!(
+                o.kind,
+                OpKind::Compute(
+                    ComputeKind::QkvProj
+                        | ComputeKind::AttnOutProj
+                        | ComputeKind::MlpUp
+                        | ComputeKind::MlpDown
+                )
+            ) {
+                for &d in &o.deps {
+                    w_dep[d] = true;
+                }
+            }
+        }
+        let w_grad_input_bytes: f64 = g
+            .ops
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| w_dep[*i])
+            .map(|(_, o)| o.out_bytes)
+            .sum();
+        let w_residual_frac = if store_all_bytes > 0.0 {
+            (w_grad_input_bytes / store_all_bytes).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+
         let mut retain_order: Vec<usize> =
             (0..g.ops.len()).filter(|&i| g.ops[i].out_bytes > 0.0).collect();
         retain_order.sort_by(|&a, &b| {
@@ -172,6 +212,8 @@ impl CostTables {
             boundary_bytes: cm.memory.boundary_bytes(setup),
             out_bytes_prefix,
             store_all_bytes,
+            w_grad_input_bytes,
+            w_residual_frac,
             retain_order,
             usable_memory: cm.topo.gpu.usable_memory(),
             static_per_layer: cm.memory.static_bytes(setup, 1, false),
@@ -195,13 +237,29 @@ impl CostTables {
         (self.num_stages - stage).min(self.setup.num_micro)
     }
 
-    /// In-flight microbatch-equivalents reported by an executed schedule
-    /// (replay accounting; chunk-units rounded up to full-stage
-    /// microbatches exactly as `build_stage_ctx_for`).
+    /// Exact peak in-flight microbatch-equivalents of `stage` under an
+    /// executed schedule: the split-backward replay (B-released and
+    /// W-released fractions weighted by [`Self::w_residual_frac`]), with
+    /// chunk units converted at `units / chunks` — no rounding. This is
+    /// the quantity every memory budget scales by.
+    pub fn n_batch_frac_for(&self, stage: usize, sched: &dyn PipelineSchedule) -> f64 {
+        sched.peak_inflight_exact(stage, self.w_residual_frac) / sched.num_chunks() as f64
+    }
+
+    /// The same replay under the B-freed (H1) approximation — the
+    /// comparison baseline the benches report against. Note it shares
+    /// this PR's exact `units / chunks` conversion (the pre-fix code
+    /// additionally rounded chunk units up to whole microbatches), so
+    /// the reported exact-vs-H1 gap isolates the W residual alone and
+    /// `exact >= h1` holds structurally for every schedule.
+    pub fn n_batch_frac_h1_for(&self, stage: usize, sched: &dyn PipelineSchedule) -> f64 {
+        sched.peak_inflight_exact(stage, 0.0) / sched.num_chunks() as f64
+    }
+
+    /// Whole-microbatch in-flight count reported by an executed schedule:
+    /// ceiling of the exact fraction (reporting / cache display).
     pub fn n_batch_for(&self, stage: usize, sched: &dyn PipelineSchedule) -> usize {
-        let units = sched.peak_inflight(stage);
-        let v = sched.num_chunks();
-        ((units + v - 1) / v).max(1)
+        (self.n_batch_frac_for(stage, sched).ceil() as usize).max(1)
     }
 
     /// Static model-state bytes of `stage` hosting `n_layers` layers, O(1).
@@ -212,11 +270,31 @@ impl CostTables {
     }
 
     /// Build a [`StageCtx`] in O(1) — no graph traversal, no allocation.
+    /// Whole-unit counts have no W residual (`n_batch_frac_h1 == frac`).
     pub fn build_ctx(&self, stage: usize, n_layers: usize, n_batch: usize) -> StageCtx {
+        self.build_ctx_frac(stage, n_layers, n_batch as f64, n_batch as f64)
+    }
+
+    /// [`build_ctx`](Self::build_ctx) with exact fractional in-flight
+    /// counts: `n_batch_frac` is the full split-backward replay,
+    /// `n_batch_frac_h1` its B-freed part (`n_batch` is the exact
+    /// count's ceiling). The excess between the two is charged as the
+    /// plan-independent weight-grad-input reserve.
+    pub fn build_ctx_frac(
+        &self,
+        stage: usize,
+        n_layers: usize,
+        n_batch_frac: f64,
+        n_batch_frac_h1: f64,
+    ) -> StageCtx {
+        debug_assert!(n_batch_frac > 0.0 && n_batch_frac.is_finite());
+        debug_assert!(n_batch_frac_h1 > 0.0 && n_batch_frac_h1 <= n_batch_frac + 1e-12);
         let static_mem = self.static_mem(stage, n_layers);
         StageCtx {
             n_layers,
-            n_batch,
+            n_batch: (n_batch_frac.ceil() as usize).max(1),
+            n_batch_frac,
+            n_batch_frac_h1,
             stage,
             num_stages: self.num_stages,
             mem_budget: (self.usable_memory - static_mem).max(0.0),
@@ -226,6 +304,22 @@ impl CostTables {
             bwd_window: self.window,
             boundary_bytes: self.boundary_bytes,
         }
+    }
+
+    /// Build the [`StageCtx`] for `stage` under an executed schedule's
+    /// exact in-flight replay (both the full and the B-freed fraction).
+    pub fn build_ctx_sched(
+        &self,
+        stage: usize,
+        n_layers: usize,
+        sched: &dyn PipelineSchedule,
+    ) -> StageCtx {
+        self.build_ctx_frac(
+            stage,
+            n_layers,
+            self.n_batch_frac_for(stage, sched),
+            self.n_batch_frac_h1_for(stage, sched),
+        )
     }
 
     /// [`build_ctx`](Self::build_ctx) with the 1F1B in-flight count.
@@ -441,5 +535,72 @@ mod tests {
         for stage in 0..4 {
             assert_eq!(t.n_batch_for(stage, ofob.as_ref()), t.n_batch_1f1b(stage));
         }
+    }
+
+    #[test]
+    fn w_residual_frac_covers_the_matmul_inputs() {
+        let (setup, cm, g) = fixture();
+        let t = CostTables::new(&setup, &cm, &g);
+        // ln1 + attn_context + ln2 + gelu outputs, by graph construction.
+        let expect: f64 = [0usize, 4, 8, 10].iter().map(|&i| g.ops[i].out_bytes).sum();
+        assert!((t.w_grad_input_bytes - expect).abs() < 1.0);
+        assert!(t.w_residual_frac > 0.0 && t.w_residual_frac < 1.0);
+        assert!(
+            (t.w_residual_frac - t.w_grad_input_bytes / t.store_all_bytes).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn exact_inflight_dominates_h1_for_split_backward() {
+        let (setup, cm, g) = fixture();
+        let t = CostTables::new(&setup, &cm, &g);
+        for kind in [ScheduleKind::ZbH1, ScheduleKind::ZbH2, ScheduleKind::ZbV] {
+            let sched = kind.build(4, setup.num_micro);
+            let mut some_gap = false;
+            for stage in 0..4 {
+                let exact = t.n_batch_frac_for(stage, sched.as_ref());
+                let h1 = t.n_batch_frac_h1_for(stage, sched.as_ref());
+                assert!(exact >= h1 - 1e-12, "{} stage {stage}", kind.label());
+                some_gap |= exact > h1 + 1e-9;
+            }
+            assert!(some_gap, "{}: no W residual priced", kind.label());
+        }
+        // Combined-backward schedules: exact == H1 exactly.
+        for kind in [ScheduleKind::GPipe, ScheduleKind::OneFOneB] {
+            let sched = kind.build(4, setup.num_micro);
+            for stage in 0..4 {
+                assert_eq!(
+                    t.n_batch_frac_for(stage, sched.as_ref()),
+                    t.n_batch_frac_h1_for(stage, sched.as_ref())
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn build_ctx_frac_scales_memory_continuously() {
+        let (setup, cm, g) = fixture();
+        let t = CostTables::new(&setup, &cm, &g);
+        let plan = crate::plan::types::StagePlan::uniform(
+            crate::plan::types::LayerPlan::store_all(g.ops.len()),
+            8,
+        );
+        let lo = t.build_ctx_frac(1, 8, 2.0, 2.0);
+        let mid = t.build_ctx_frac(1, 8, 2.5, 2.0);
+        let hi = t.build_ctx_frac(1, 8, 3.0, 2.0);
+        assert_eq!(mid.n_batch, 3); // ceiling for whole-unit consumers
+        let (a, b, c) = (
+            t.stage_cost(&lo, &plan).peak_mem,
+            t.stage_cost(&mid, &plan).peak_mem,
+            t.stage_cost(&hi, &plan).peak_mem,
+        );
+        assert!(a < b && b < c, "{a} {b} {c}");
+        // The W-residual excess is priced at the store-all footprint.
+        assert!(
+            (b - a - 0.5 * t.store_all_bytes * 8.0).abs() < 1.0,
+            "reserve step {} vs {}",
+            b - a,
+            0.5 * t.store_all_bytes * 8.0
+        );
     }
 }

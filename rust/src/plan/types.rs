@@ -170,8 +170,24 @@ impl LayerPlan {
 pub struct StageCtx {
     /// Transformer layers hosted by this stage.
     pub n_layers: usize,
-    /// In-flight microbatches before the first backward (`N_batch`).
+    /// In-flight microbatches before the first backward (`N_batch`),
+    /// rounded up from [`Self::n_batch_frac`] — kept for reporting and
+    /// whole-unit consumers.
     pub n_batch: usize,
+    /// Exact peak in-flight microbatch-equivalents: the split-backward
+    /// replay counts B-released and W-released fractions separately and
+    /// interleaved/V chunk units convert at `units / chunks` without
+    /// rounding. The excess over [`Self::n_batch_frac_h1`] is the
+    /// W-residual the plan-independent reserve prices.
+    pub n_batch_frac: f64,
+    /// The B-freed part of `n_batch_frac` (same replay with the W
+    /// residual zeroed). Plan-retained bytes live from forward to B, so
+    /// they scale by this; the residual between B and W is charged
+    /// separately via [`Self::w_residual_reserve`], because the tensors
+    /// the weight-grad needs stay resident regardless of what the
+    /// recomputation plan retains. Equals `n_batch_frac` for
+    /// combined-backward schedules.
+    pub n_batch_frac_h1: f64,
     /// Stage position.
     pub stage: usize,
     pub num_stages: usize,
@@ -196,9 +212,27 @@ impl StageCtx {
         self.stage + 1 == self.num_stages
     }
 
-    /// Constant memory consumed by boundary checkpoints.
+    /// Constant memory consumed by boundary checkpoints. Boundaries feed
+    /// the backward/recompute pass and are released at B, so they scale
+    /// by the B-freed in-flight count.
     pub fn boundary_total(&self) -> f64 {
-        self.boundary_bytes * self.n_layers as f64 * self.n_batch as f64
+        self.boundary_bytes * self.n_layers as f64 * self.n_batch_frac_h1
+    }
+
+    /// In-flight microbatch-equivalents still held between B and W at the
+    /// peak (0 for combined-backward schedules).
+    pub fn w_residual_units(&self) -> f64 {
+        (self.n_batch_frac - self.n_batch_frac_h1).max(0.0)
+    }
+
+    /// Plan-independent bytes reserved for deferred weight-grad inputs:
+    /// the exact replay weights each deferred unit by
+    /// `w_grad_input_bytes / store_all_bytes`, so multiplying the unit
+    /// excess back by the store-all footprint yields exactly
+    /// `deferred × w_grad_input_bytes` per layer — the tensors W needs,
+    /// which stay resident whether the plan retained or recomputed them.
+    pub fn w_residual_reserve(&self, store_all_layer_bytes: f64) -> f64 {
+        self.w_residual_units() * store_all_layer_bytes * self.n_layers as f64
     }
 }
 
@@ -216,7 +250,11 @@ impl StagePlan {
     }
 
     /// Peak activation memory of this stage per paper Eq. 17 terms
-    /// (M_fwd + M_fwd_comm + M_delta), excluding static model states.
+    /// (M_fwd + M_fwd_comm + M_delta), excluding static model states,
+    /// plus the split-backward W-residual reserve: plan-retained bytes
+    /// live from forward to B (× `n_batch_frac_h1`), and the deferred
+    /// weight-grad inputs — plan-independent — occupy
+    /// `w_residual_units × store-all` per layer until their W runs.
     ///
     /// Stages whose layers share one plan (the HEU "identical
     /// structures" case) are folded into a single per-layer pass.
@@ -227,14 +265,14 @@ impl StagePlan {
             let k = self.layers.len() as f64;
             let l0 = &self.layers[0];
             (
-                l0.retained_bytes(g) * ctx.n_batch as f64 * k,
+                l0.retained_bytes(g) * ctx.n_batch_frac_h1 * k,
                 l0.fwd_comm_bytes(g) * k,
             )
         } else {
             (
                 self.layers
                     .iter()
-                    .map(|p| p.retained_bytes(g) * ctx.n_batch as f64)
+                    .map(|p| p.retained_bytes(g) * ctx.n_batch_frac_h1)
                     .sum(),
                 self.layers.iter().map(|p| p.fwd_comm_bytes(g)).sum(),
             )
@@ -248,6 +286,7 @@ impl StagePlan {
             .map(|p| p.bwd_window_bytes(g))
             .unwrap_or(0.0);
         m_fwd + m_fwd_comm + m_delta + ctx.boundary_total()
+            + ctx.w_residual_reserve(g.total_out_bytes())
     }
 
     /// True when this stage plan fits the stage's memory budget.
@@ -360,9 +399,11 @@ mod tests {
     fn activation_memory_scales_with_nbatch() {
         let (s, g) = setup();
         let n = g.ops.len();
-        let mk_ctx = |n_batch| StageCtx {
+        let mk_ctx = |n_batch: usize| StageCtx {
             n_layers: 8,
             n_batch,
+            n_batch_frac: n_batch as f64,
+            n_batch_frac_h1: n_batch as f64,
             stage: 0,
             num_stages: 4,
             mem_budget: f64::INFINITY,
@@ -375,6 +416,44 @@ mod tests {
         let m1 = plan.activation_bytes(&g, &mk_ctx(1));
         let m4 = plan.activation_bytes(&g, &mk_ctx(4));
         assert!(m4 > 3.5 * m1 && m4 < 4.5 * m1);
+        // Fractional in-flight scales memory continuously.
+        let mut half = mk_ctx(2);
+        half.n_batch_frac = 1.5;
+        half.n_batch_frac_h1 = 1.5;
+        let mh = plan.activation_bytes(&g, &half);
+        assert!(mh > m1 && mh < plan.activation_bytes(&g, &mk_ctx(2)));
+    }
+
+    #[test]
+    fn w_residual_reserve_is_plan_independent() {
+        // The deferred weight-grad inputs occupy memory whether the plan
+        // retained or evicted them: the same in-flight excess must add
+        // the same bytes on top of a full-recompute plan as on store-all.
+        let (s, g) = setup();
+        let n = g.ops.len();
+        let mut ctx = StageCtx {
+            n_layers: 8,
+            n_batch: 4,
+            n_batch_frac: 4.0,
+            n_batch_frac_h1: 4.0,
+            stage: 0,
+            num_stages: 4,
+            mem_budget: f64::INFINITY,
+            static_mem: 0.0,
+            fwd_window: [1e-3; 2],
+            bwd_window: [1e-3; 2],
+            boundary_bytes: 2.0 * (s.seq * s.micro_batch * s.model.hidden) as f64,
+        };
+        let full = StagePlan::uniform(LayerPlan::full_recompute(n), 8);
+        let store = StagePlan::uniform(LayerPlan::store_all(n), 8);
+        let full_0 = full.activation_bytes(&g, &ctx);
+        let store_0 = store.activation_bytes(&g, &ctx);
+        // Add 1.5 deferred microbatch-equivalents of W residual.
+        ctx.n_batch_frac = 5.5;
+        let expect = 1.5 * g.total_out_bytes() * 8.0;
+        assert!((full.activation_bytes(&g, &ctx) - full_0 - expect).abs() < 1.0);
+        assert!((store.activation_bytes(&g, &ctx) - store_0 - expect).abs() < 1.0);
+        assert_eq!(ctx.w_residual_units(), 1.5);
     }
 
     #[test]

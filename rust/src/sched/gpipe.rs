@@ -52,6 +52,12 @@ impl PipelineSchedule for GPipe {
     fn peak_inflight(&self, _stage: usize) -> usize {
         self.num_micro
     }
+
+    /// Combined backward: the exact peak equals the unit count (validated
+    /// against the exact replay by the property grid).
+    fn peak_inflight_exact(&self, _stage: usize, _w_hold: f64) -> f64 {
+        self.num_micro as f64
+    }
 }
 
 #[cfg(test)]

@@ -1,14 +1,14 @@
 //! Deadlock-free work-order generation by unit-time list scheduling.
 //!
-//! Interleaved-1F1B and ZB-H1 orders are hard to write in closed form
-//! for arbitrary (stages, microbatches, chunks): Megatron requires
-//! `num_micro % num_stages == 0`, and ZB-H1's W placement depends on
-//! where the bubbles fall. Instead the generator *executes* the schedule
-//! once under unit item durations: every stage consumes its forward /
-//! backward launch sequences in order, choosing the next item each tick
-//! by a schedule-specific preference rule, and only when the item's
-//! cross-stage dependencies have completed. The recorded per-stage order
-//! is feasible by construction — an order with a valid unit-time
+//! Interleaved-1F1B and the zero-bubble orders are hard to write in
+//! closed form for arbitrary (stages, microbatches, chunks): Megatron
+//! requires `num_micro % num_stages == 0`, and ZB-H1/H2's W placement
+//! depends on where the bubbles fall. Instead the generator *executes*
+//! the schedule once under unit item durations: every stage consumes its
+//! forward / backward launch sequences in order, choosing the next item
+//! each tick by a schedule-specific preference rule, and only when the
+//! item's cross-stage dependencies have completed. The recorded per-stage
+//! order is feasible by construction — an order with a valid unit-time
 //! execution is acyclic against the dependency DAG, so the real-time
 //! engine converges for *any* positive durations.
 //!
@@ -19,7 +19,9 @@
 
 use super::{bwd_upstream, fwd_upstream, WorkItem};
 
-/// Specification consumed by [`greedy_items`].
+/// Specification consumed by [`greedy_items`]. Dependencies follow the
+/// Megatron interleaved chunk placement; ZB-V's V-shaped placement uses
+/// its own per-chunk-queue generator in [`super::zbv`].
 pub(crate) struct GreedySpec {
     pub num_stages: usize,
     pub num_micro: usize,
@@ -35,6 +37,11 @@ pub(crate) struct GreedySpec {
     pub cap: Vec<usize>,
     /// Emit a W (weight-grad) item for every backward (ZB-style split).
     pub split_bwd: bool,
+    /// Drain a deferred W before admitting a new forward once the
+    /// backlog of B-done-but-W-pending microbatches reaches this bound
+    /// (`None` = defer W freely into stalls). Bounds the W-residual
+    /// memory the exact in-flight accounting prices.
+    pub w_backlog: Option<usize>,
 }
 
 pub(crate) fn greedy_items(spec: &GreedySpec) -> Vec<Vec<WorkItem>> {
@@ -90,6 +97,8 @@ pub(crate) fn greedy_items(spec: &GreedySpec) -> Vec<Vec<WorkItem>> {
             };
             let inflight = fi[s] - bi[s];
             let w_avail = spec.split_bwd && wi[s] < bi[s];
+            let w_pressure = w_avail
+                && matches!(spec.w_backlog, Some(bound) if bi[s] - wi[s] >= bound);
 
             let choice = if fi[s] < spec.warmup[s] && f_ready {
                 // Warmup: fill the pipeline.
@@ -97,6 +106,10 @@ pub(crate) fn greedy_items(spec: &GreedySpec) -> Vec<Vec<WorkItem>> {
             } else if b_ready {
                 // Steady/cool-down: backwards drive the critical path.
                 Some(WorkKindChoice::B)
+            } else if w_pressure {
+                // Deferred weight-grad backlog at its bound: drain it
+                // before admitting more forwards.
+                Some(WorkKindChoice::W)
             } else if f_ready && inflight < spec.cap[s] {
                 Some(WorkKindChoice::F)
             } else if w_avail {
@@ -190,6 +203,7 @@ mod tests {
             warmup: (0..p).map(|s| p - s - 1).collect(),
             cap: (0..p).map(|s| p - s).collect(),
             split_bwd: false,
+            w_backlog: None,
         }
     }
 
@@ -217,6 +231,28 @@ mod tests {
         for s in 0..3 {
             let w = items[s].iter().filter(|i| i.kind == WorkKind::WGrad).count();
             assert_eq!(w, 4, "stage {s}: {:?}", items[s]);
+        }
+    }
+
+    #[test]
+    fn w_backlog_bound_is_respected() {
+        // With a backlog bound of 1 every W runs before the next forward
+        // admission, so B-done-not-W'd never exceeds 1 at any prefix.
+        let mut spec = simple_spec(4, 8);
+        spec.split_bwd = true;
+        spec.w_backlog = Some(1);
+        let items = greedy_items(&spec);
+        for s in 0..4 {
+            let (mut b, mut w) = (0i64, 0i64);
+            for it in &items[s] {
+                match it.kind {
+                    WorkKind::Bwd => b += 1,
+                    WorkKind::WGrad => w += 1,
+                    WorkKind::Fwd => {
+                        assert!(b - w <= 1, "stage {s}: backlog {} before F", b - w)
+                    }
+                }
+            }
         }
     }
 

@@ -24,7 +24,7 @@
 //! can never reach the engine.
 
 use super::greedy::{greedy_items, GreedySpec};
-use super::{validate_items, PipelineSchedule, ScheduleKind, WorkItem};
+use super::{validate_items, Placement, PipelineSchedule, ScheduleKind, WorkItem};
 
 #[derive(Debug, Clone)]
 pub struct Interleaved1F1B {
@@ -32,6 +32,9 @@ pub struct Interleaved1F1B {
     num_micro: usize,
     chunks: usize,
     items: Vec<Vec<WorkItem>>,
+    /// True when the ragged-shape greedy fallback produced the order
+    /// instead of the tight Megatron closed form (the CLI warns once).
+    used_fallback: bool,
 }
 
 /// Global forward / backward launch orders shared by every stage:
@@ -89,14 +92,16 @@ impl Interleaved1F1B {
     pub fn new(num_stages: usize, num_micro: usize, chunks: usize) -> Interleaved1F1B {
         assert!(num_stages >= 1 && num_micro >= 1 && chunks >= 1);
         let (p, m, v) = (num_stages, num_micro, chunks);
+        let mut used_fallback = false;
         let items = if v == 1 {
             // One chunk per stage is exactly classic 1F1B.
             (0..p).map(|s| super::onefoneb_items(s, p, m)).collect()
         } else {
             let closed = closed_form(p, m, v);
-            if validate_items(&closed, p, m, v, false).is_ok() {
+            if validate_items(&closed, p, m, v, false, Placement::Interleaved).is_ok() {
                 closed
             } else {
+                used_fallback = true;
                 let r = p.min(m);
                 let (fseq, bseq) = launch_orders(m, v, r);
                 let total = m * v;
@@ -112,18 +117,45 @@ impl Interleaved1F1B {
                     warmup,
                     cap,
                     split_bwd: false,
+                    w_backlog: None,
                 });
                 // The generator is feasible-by-construction; make the
                 // doc's "every order is re-validated" promise literal
                 // so a future GreedySpec tweak cannot ship a deadlocked
                 // order into the engine's opaque convergence assert.
-                if let Err(e) = validate_items(&greedy, p, m, v, false) {
+                if let Err(e) = validate_items(&greedy, p, m, v, false, Placement::Interleaved)
+                {
                     panic!("interleaved greedy order invalid (p={p} m={m} v={v}): {e}");
                 }
                 greedy
             }
         };
-        Interleaved1F1B { num_stages, num_micro, chunks, items }
+        Interleaved1F1B { num_stages, num_micro, chunks, items, used_fallback }
+    }
+
+    /// True when this shape could not use the tight Megatron closed form
+    /// and the (feasible but looser) greedy generator produced the order.
+    /// Divisible shapes (`num_micro % num_stages == 0`) never fall back
+    /// (regression tested).
+    pub fn used_greedy_fallback(&self) -> bool {
+        self.used_fallback
+    }
+
+    /// Probe whether a shape would take the greedy fallback path (the
+    /// CLI warns on this). Only validates the closed form — it does not
+    /// run the greedy generator, so the probe is cheap even on the
+    /// ragged shapes it flags.
+    pub fn shape_uses_fallback(num_stages: usize, num_micro: usize, chunks: usize) -> bool {
+        chunks > 1
+            && validate_items(
+                &closed_form(num_stages, num_micro, chunks),
+                num_stages,
+                num_micro,
+                chunks,
+                false,
+                Placement::Interleaved,
+            )
+            .is_err()
     }
 }
 
@@ -166,11 +198,41 @@ mod tests {
     fn divisible_shapes_use_the_closed_form() {
         // m % p == 0: the Megatron order must validate and be used.
         let closed = closed_form(4, 8, 2);
-        validate_items(&closed, 4, 8, 2, false).unwrap();
+        validate_items(&closed, 4, 8, 2, false, Placement::Interleaved).unwrap();
         let sched = Interleaved1F1B::new(4, 8, 2);
+        assert!(!sched.used_greedy_fallback());
         for s in 0..4 {
             assert_eq!(sched.stage_items(s), closed[s], "stage {s}");
         }
+    }
+
+    #[test]
+    fn divisible_shapes_never_take_the_fallback_path() {
+        // Regression (ROADMAP): every Megatron-divisible shape must use
+        // the tight closed form, across chunk counts.
+        for p in [1usize, 2, 3, 4, 6, 8] {
+            for mult in [1usize, 2, 3, 4] {
+                for v in [2usize, 3] {
+                    let sched = Interleaved1F1B::new(p, p * mult, v);
+                    assert!(
+                        !sched.used_greedy_fallback(),
+                        "p={p} m={} v={v} fell back",
+                        p * mult
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_shapes_report_the_fallback() {
+        // A ragged shape whose closed form deadlocks takes the greedy
+        // path and says so — the CLI's one-shot warning keys off this.
+        // (Some ragged shapes still validate in closed form — e.g.
+        // (4, 6, 2) — and must not report a fallback.)
+        assert!(Interleaved1F1B::shape_uses_fallback(6, 8, 2));
+        assert!(!Interleaved1F1B::shape_uses_fallback(4, 6, 2));
+        assert!(!Interleaved1F1B::shape_uses_fallback(4, 8, 2));
     }
 
     #[test]

@@ -15,30 +15,46 @@
 //!   in-flight chunk activations);
 //! * [`ZbH1`] — a zero-bubble-style schedule that splits backward into
 //!   B (input-grad, on the critical dataflow path) and W (weight-grad,
-//!   deferrable) items, filling cool-down stalls with W work.
+//!   deferrable) items, filling cool-down stalls with W work;
+//! * [`ZbH2`] — the higher-memory zero-bubble variant: extra in-flight
+//!   forwards fill the warm-up bubble, trading ~2× stage-0 activation
+//!   memory for bubble (Qi et al., arXiv:2405.15362);
+//! * [`ZbV`] — wave-style split-backward schedule over a **V-shaped**
+//!   chunk placement (each stage hosts one descending and one ascending
+//!   chunk; the first stage also computes the loss), equalising peak
+//!   memory across stages.
 //!
 //! A schedule is a [`PipelineSchedule`]: a per-stage work order of
 //! [`WorkItem`]s (microbatch × model chunk × F/B/W kind), a replayable
-//! in-flight-activation account ([`peak_inflight_replay`]), and — via the
-//! generic executor in [`crate::sim::engine`] — explicit *overlap
-//! windows*: each stall's start and duration, which the Lynx planner
-//! consumes to slot recomputation off the critical path.
+//! in-flight-activation account (the exact split-backward replay
+//! [`peak_inflight_replay_exact`] plus the coarse B-freed count
+//! [`peak_inflight_replay`]), and — via the generic executor in
+//! [`crate::sim::engine`] — explicit *overlap windows*: each stall's
+//! start and duration, which the Lynx planner consumes to slot
+//! recomputation off the critical path.
 //!
-//! Cross-stage dependencies are uniform over *virtual stages*
-//! `vs = chunk * num_stages + stage` ([`fwd_upstream`] /
-//! [`bwd_upstream`]): forwards flow up the virtual chain, input-grad
+//! Cross-stage dependencies follow the schedule's [`Placement`] of model
+//! chunks onto *virtual stages* ([`fwd_upstream_of`] /
+//! [`bwd_upstream_of`]): forwards flow up the virtual chain, input-grad
 //! backwards flow back down it, and W depends only on its own stage's B.
+//! [`Placement::Interleaved`] is the Megatron mapping
+//! `vs = chunk * num_stages + stage`; [`Placement::VShape`] is ZB-V's
+//! down-then-up mapping.
 
 pub mod gpipe;
 pub mod greedy;
 pub mod interleaved;
 pub mod onefoneb;
 pub mod zbh1;
+pub mod zbh2;
+pub mod zbv;
 
 pub use gpipe::GPipe;
 pub use interleaved::Interleaved1F1B;
 pub use onefoneb::{cooldown_start, onefoneb_items, OneFOneB};
 pub use zbh1::ZbH1;
+pub use zbh2::ZbH2;
+pub use zbv::ZbV;
 
 /// Kind of one unit of stage work.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -101,6 +117,8 @@ pub enum ScheduleKind {
     /// Interleaved 1F1B with `chunks` virtual chunks per stage.
     Interleaved { chunks: usize },
     ZbH1,
+    ZbH2,
+    ZbV,
 }
 
 impl ScheduleKind {
@@ -111,6 +129,8 @@ impl ScheduleKind {
             "1f1b" => ScheduleKind::OneFOneB,
             "interleaved" => ScheduleKind::Interleaved { chunks: chunks.max(1) },
             "zbh1" => ScheduleKind::ZbH1,
+            "zbh2" => ScheduleKind::ZbH2,
+            "zbv" => ScheduleKind::ZbV,
             _ => return None,
         })
     }
@@ -121,16 +141,20 @@ impl ScheduleKind {
             ScheduleKind::OneFOneB => "1f1b",
             ScheduleKind::Interleaved { .. } => "interleaved",
             ScheduleKind::ZbH1 => "zbh1",
+            ScheduleKind::ZbH2 => "zbh2",
+            ScheduleKind::ZbV => "zbv",
         }
     }
 
-    /// The four kinds with default parameters, for sweeps.
+    /// Every kind with default parameters, for sweeps.
     pub fn all() -> Vec<ScheduleKind> {
         vec![
             ScheduleKind::GPipe,
             ScheduleKind::OneFOneB,
             ScheduleKind::Interleaved { chunks: 2 },
             ScheduleKind::ZbH1,
+            ScheduleKind::ZbH2,
+            ScheduleKind::ZbV,
         ]
     }
 
@@ -143,6 +167,8 @@ impl ScheduleKind {
                 Box::new(Interleaved1F1B::new(num_stages, num_micro, chunks))
             }
             ScheduleKind::ZbH1 => Box::new(ZbH1::new(num_stages, num_micro)),
+            ScheduleKind::ZbH2 => Box::new(ZbH2::new(num_stages, num_micro)),
+            ScheduleKind::ZbV => Box::new(ZbV::new(num_stages, num_micro)),
         }
     }
 }
@@ -177,12 +203,33 @@ pub trait PipelineSchedule: Send + Sync {
         None
     }
 
-    /// Peak in-flight activation units on `stage` — one unit is one
-    /// microbatch through one hosted chunk. Defaults to replaying the
-    /// stage's work order; overrides must match the replay (property
-    /// tested).
+    /// How this schedule maps model chunks onto virtual stages.
+    fn placement(&self) -> Placement {
+        Placement::Interleaved
+    }
+
+    /// Peak in-flight activation units on `stage` under the **B-freed
+    /// approximation** — one unit is one microbatch through one hosted
+    /// chunk, released entirely at its input-grad (B) item. For
+    /// split-backward schedules this is the H1 approximation that
+    /// under-counts the residual held until W; exact accounting is
+    /// [`peak_inflight_exact`](Self::peak_inflight_exact). Defaults to
+    /// replaying the stage's work order; overrides must match the replay
+    /// (property tested).
     fn peak_inflight(&self, stage: usize) -> usize {
         peak_inflight_replay(&self.stage_items(stage))
+    }
+
+    /// Exact peak in-flight activation units on `stage`: a forward
+    /// allocates one unit; its B releases `1 - w_hold`; the residual
+    /// `w_hold` is held until the matching W completes. `w_hold` is the
+    /// byte share of a unit the weight-grad needs (see
+    /// `CostTables::w_residual_frac`); combined-backward schedules ignore
+    /// it (their B releases the whole unit). Overrides must match the
+    /// replay (property tested against [`peak_inflight_replay_exact`]).
+    fn peak_inflight_exact(&self, stage: usize, w_hold: f64) -> f64 {
+        let w = if self.backward_split().is_some() { w_hold } else { 0.0 };
+        peak_inflight_replay_exact(&self.stage_items(stage), w)
     }
 
     fn label(&self) -> &'static str {
@@ -190,9 +237,11 @@ pub trait PipelineSchedule: Send + Sync {
     }
 }
 
-/// Replay a stage order counting live activation units: a forward
-/// allocates a unit, the matching input-grad backward releases it (the
-/// small residual W holds are ignored — ZB-H1 keeps 1F1B-level memory).
+/// Replay a stage order counting live activation units under the B-freed
+/// approximation: a forward allocates a unit, the matching input-grad
+/// backward releases all of it. For split-backward schedules this is the
+/// H1 approximation (the W residual is not counted); the exact account is
+/// [`peak_inflight_replay_exact`].
 pub fn peak_inflight_replay(items: &[WorkItem]) -> usize {
     let mut live: i64 = 0;
     let mut peak: i64 = 0;
@@ -209,9 +258,117 @@ pub fn peak_inflight_replay(items: &[WorkItem]) -> usize {
     peak.max(0) as usize
 }
 
+/// Exact split-backward replay: a forward allocates 1.0 unit, its B
+/// releases `1 - w_hold`, and its W releases the residual `w_hold` (the
+/// fraction of a unit's activation bytes the weight-grad still needs —
+/// inputs of the weighted matmuls). With `w_hold = 0` this equals
+/// [`peak_inflight_replay`]; the result is monotone non-decreasing in
+/// `w_hold` (property tested). Callers must pass `w_hold = 0` for item
+/// lists without W items (combined backward) — the trait default
+/// [`PipelineSchedule::peak_inflight_exact`] gates on `backward_split`.
+pub fn peak_inflight_replay_exact(items: &[WorkItem], w_hold: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&w_hold));
+    let mut live = 0.0f64;
+    let mut peak = 0.0f64;
+    for it in items {
+        match it.kind {
+            WorkKind::Fwd => {
+                live += 1.0;
+                peak = peak.max(live);
+            }
+            WorkKind::Bwd => live -= 1.0 - w_hold,
+            WorkKind::WGrad => live -= w_hold,
+        }
+    }
+    peak.max(0.0)
+}
+
+/// How a schedule maps its model chunks onto virtual stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Placement {
+    /// Megatron interleaving: chunk `c` of stage `s` sits at virtual
+    /// stage `c·p + s` — every chunk traverses the stages in order.
+    #[default]
+    Interleaved,
+    /// ZB-V: exactly two chunks per stage; chunk 0 descends the stages
+    /// (`vs = s`) and chunk 1 ascends back (`vs = 2p−1−s`), so stage 0
+    /// hosts both the first and the last virtual stage (and the loss).
+    VShape,
+}
+
 /// Virtual stage index of `(stage, chunk)` in forward dataflow order.
 pub fn virtual_stage(stage: usize, chunk: usize, num_stages: usize) -> usize {
     chunk * num_stages + stage
+}
+
+/// [`virtual_stage`] under an explicit chunk [`Placement`].
+pub fn virtual_stage_of(pl: Placement, stage: usize, chunk: usize, num_stages: usize) -> usize {
+    match pl {
+        Placement::Interleaved => virtual_stage(stage, chunk, num_stages),
+        Placement::VShape => {
+            debug_assert!(chunk < 2);
+            if chunk == 0 {
+                stage
+            } else {
+                2 * num_stages - 1 - stage
+            }
+        }
+    }
+}
+
+/// [`fwd_upstream`] under an explicit chunk [`Placement`].
+pub fn fwd_upstream_of(
+    pl: Placement,
+    stage: usize,
+    chunk: usize,
+    num_stages: usize,
+) -> Option<(usize, usize)> {
+    match pl {
+        Placement::Interleaved => fwd_upstream(stage, chunk, num_stages),
+        Placement::VShape => {
+            if chunk == 0 {
+                if stage > 0 {
+                    Some((stage - 1, 0))
+                } else {
+                    None
+                }
+            } else if stage + 1 == num_stages {
+                // The V's turning point: chunk 1 starts where chunk 0
+                // ended, on the same stage.
+                Some((num_stages - 1, 0))
+            } else {
+                Some((stage + 1, 1))
+            }
+        }
+    }
+}
+
+/// [`bwd_upstream`] under an explicit chunk [`Placement`].
+pub fn bwd_upstream_of(
+    pl: Placement,
+    stage: usize,
+    chunk: usize,
+    num_stages: usize,
+    num_chunks: usize,
+) -> Option<(usize, usize)> {
+    match pl {
+        Placement::Interleaved => bwd_upstream(stage, chunk, num_stages, num_chunks),
+        Placement::VShape => {
+            if chunk == 1 {
+                // Chunk 1 of stage 0 is the last virtual stage: its dy
+                // comes from the loss (computed on stage 0 itself).
+                if stage == 0 {
+                    None
+                } else {
+                    Some((stage - 1, 1))
+                }
+            } else if stage + 1 == num_stages {
+                Some((num_stages - 1, 1))
+            } else {
+                Some((stage + 1, 0))
+            }
+        }
+    }
 }
 
 /// The `(stage, chunk)` whose forward output feeds `F(stage, chunk)`;
@@ -256,18 +413,20 @@ pub fn validate_executable(sched: &dyn PipelineSchedule) -> Result<(), String> {
         sched.num_micro(),
         sched.num_chunks(),
         sched.backward_split().is_some(),
+        sched.placement(),
     )
 }
 
 /// Core of [`validate_executable`], usable on raw item lists before a
-/// schedule object exists (the interleaved constructor probes its closed
-/// form this way).
+/// schedule object exists (the interleaved and ZB-V constructors probe
+/// their generated orders this way).
 pub fn validate_items(
     items: &[Vec<WorkItem>],
     p: usize,
     m: usize,
     v: usize,
     split: bool,
+    placement: Placement,
 ) -> Result<(), String> {
     if items.len() != p {
         return Err(format!("{} stage lists for {p} stages", items.len()));
@@ -307,11 +466,11 @@ pub fn validate_items(
             while next[s] < items[s].len() {
                 let it = items[s][next[s]];
                 let ready = match it.kind {
-                    WorkKind::Fwd => match fwd_upstream(s, it.chunk, p) {
+                    WorkKind::Fwd => match fwd_upstream_of(placement, s, it.chunk, p) {
                         None => true,
                         Some((s2, c2)) => f_done[s2][idx(c2, it.micro)],
                     },
-                    WorkKind::Bwd => match bwd_upstream(s, it.chunk, p, v) {
+                    WorkKind::Bwd => match bwd_upstream_of(placement, s, it.chunk, p, v) {
                         None => f_done[s][idx(it.chunk, it.micro)],
                         Some((s2, c2)) => b_done[s2][idx(c2, it.micro)],
                     },
@@ -401,6 +560,65 @@ mod tests {
             WorkItem::bwd(2, 0),
         ];
         assert_eq!(peak_inflight_replay(&items), 2);
+        // Exact replay with w_hold = 0 matches the B-freed count.
+        assert!((peak_inflight_replay_exact(&items, 0.0) - 2.0).abs() < 1e-12);
+        // Here W0 runs before the next F, so the residual is released in
+        // time and the exact peak matches the B-freed count.
+        assert!((peak_inflight_replay_exact(&items, 0.5) - 2.0).abs() < 1e-12);
+        let deferred = vec![
+            WorkItem::fwd(0, 0),
+            WorkItem::fwd(1, 0),
+            WorkItem::bwd(0, 0),
+            WorkItem::fwd(2, 0),
+            WorkItem::bwd(1, 0),
+            WorkItem::bwd(2, 0),
+            WorkItem::wgrad(0, 0),
+            WorkItem::wgrad(1, 0),
+            WorkItem::wgrad(2, 0),
+        ];
+        assert_eq!(peak_inflight_replay(&deferred), 2);
+        assert!((peak_inflight_replay_exact(&deferred, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vshape_virtual_chain_is_consistent() {
+        let p = 4;
+        // Walking fwd_upstream_of from the last virtual stage (stage 0,
+        // chunk 1) visits every virtual stage exactly once, descending.
+        let mut at = Some((0usize, 1usize));
+        let mut count = 0;
+        while let Some((s, c)) = at {
+            count += 1;
+            assert_eq!(virtual_stage_of(Placement::VShape, s, c, p), 2 * p - count);
+            at = fwd_upstream_of(Placement::VShape, s, c, p);
+        }
+        assert_eq!(count, 2 * p);
+        // bwd_upstream_of is the reverse walk from (0, 0).
+        let mut at = Some((0usize, 0usize));
+        let mut count = 0;
+        while let Some((s, c)) = at {
+            count += 1;
+            assert_eq!(virtual_stage_of(Placement::VShape, s, c, p), count - 1);
+            at = bwd_upstream_of(Placement::VShape, s, c, p, 2);
+        }
+        assert_eq!(count, 2 * p);
+    }
+
+    #[test]
+    fn interleaved_placement_matches_legacy_functions() {
+        let (p, v) = (4, 3);
+        for s in 0..p {
+            for c in 0..v {
+                assert_eq!(
+                    fwd_upstream_of(Placement::Interleaved, s, c, p),
+                    fwd_upstream(s, c, p)
+                );
+                assert_eq!(
+                    bwd_upstream_of(Placement::Interleaved, s, c, p, v),
+                    bwd_upstream(s, c, p, v)
+                );
+            }
+        }
     }
 
     #[test]

@@ -69,6 +69,13 @@ impl PipelineSchedule for OneFOneB {
     fn peak_inflight(&self, stage: usize) -> usize {
         (self.num_stages - stage).min(self.num_micro)
     }
+
+    /// Combined backward frees the whole unit at B, so the exact peak is
+    /// the closed form regardless of `w_hold` (validated against the
+    /// exact replay by the property grid).
+    fn peak_inflight_exact(&self, stage: usize, _w_hold: f64) -> f64 {
+        self.peak_inflight(stage) as f64
+    }
 }
 
 #[cfg(test)]

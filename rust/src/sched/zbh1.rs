@@ -2,15 +2,19 @@
 //!
 //! Following "Zero Bubble Pipeline Parallelism" (H1 configuration), the
 //! backward pass is split into B (input-grad — the only part on the
-//! cross-stage dataflow critical path) and W (weight-grad — freely
-//! deferrable). Stages run the 1F1B F/B skeleton but park W items and
-//! replay them inside what would otherwise be warm-up/cool-down stalls,
-//! shrinking the bubble while keeping 1F1B-level activation memory
-//! (units are freed at B; the W residuals the coarse model ignores are
-//! what H1 trades against H2's larger memory).
+//! cross-stage dataflow critical path) and W (weight-grad — deferrable)
+//! items. Stages run the 1F1B F/B skeleton but park W items and replay
+//! them inside what would otherwise be warm-up/cool-down stalls,
+//! shrinking the bubble. Deferring W is not free: the tensors the
+//! weight-grad needs stay resident from B until W, so H1's true peak
+//! memory sits *above* the B-freed (1F1B-style) unit count — the exact
+//! replay ([`crate::sched::peak_inflight_replay_exact`]) prices that
+//! residual, and a backlog bound keeps the deferral from growing with
+//! the microbatch count.
 //!
-//! Orders come from the unit-time greedy generator: B when ready, else F
-//! within the 1F1B in-flight cap `p − s`, else a pending W.
+//! Orders come from the unit-time greedy generator: B when ready, else W
+//! when the deferral backlog hits `num_stages`, else F within the 1F1B
+//! in-flight cap `p − s`, else a pending W.
 
 use super::greedy::{greedy_items, GreedySpec};
 use super::{PipelineSchedule, ScheduleKind, WorkItem};
@@ -40,6 +44,7 @@ impl ZbH1 {
             warmup: (0..p).map(|s| (p - s - 1).min(m)).collect(),
             cap: (0..p).map(|s| (p - s).min(m)).collect(),
             split_bwd: true,
+            w_backlog: Some(p),
         });
         ZbH1 { num_stages, num_micro, items }
     }
@@ -70,7 +75,9 @@ impl PipelineSchedule for ZbH1 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::{validate_executable, WorkKind};
+    use crate::sched::{
+        peak_inflight_replay_exact, validate_executable, WorkKind,
+    };
 
     #[test]
     fn emits_f_b_w_for_every_microbatch() {
@@ -113,7 +120,9 @@ mod tests {
     }
 
     #[test]
-    fn keeps_1f1b_memory() {
+    fn b_freed_count_stays_at_1f1b_level() {
+        // The B-freed unit count (the H1 approximation) matches 1F1B's
+        // profile; the exact replay sits above it by the W residual.
         for p in [2usize, 4] {
             for m in [4usize, 8] {
                 let zb = ZbH1::new(p, m);
@@ -124,6 +133,41 @@ mod tests {
                         "p={p} m={m} stage {s}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_peak_prices_the_w_residual() {
+        // The exact replay strictly exceeds the B-freed count somewhere
+        // (the residual the old accounting ignored), but stays bounded by
+        // the backlog rule: at most cap + w_hold · backlog-bound units.
+        for m in [8usize, 16, 32] {
+            let sched = ZbH1::new(4, m);
+            let mut some_gap = false;
+            for s in 0..4 {
+                let h1 = sched.peak_inflight(s) as f64;
+                let exact = sched.peak_inflight_exact(s, 0.5);
+                assert!(exact >= h1 - 1e-12, "m={m} stage {s}");
+                some_gap |= exact > h1 + 1e-9;
+                assert!(
+                    exact <= h1 + 0.5 * 4.0 + 1e-9,
+                    "m={m} stage {s}: exact {exact} vs h1 {h1}"
+                );
+            }
+            assert!(some_gap, "m={m}: no stage shows a W residual");
+        }
+    }
+
+    #[test]
+    fn exact_matches_item_replay() {
+        let sched = ZbH1::new(4, 8);
+        for s in 0..4 {
+            for w in [0.0, 0.3, 1.0] {
+                assert_eq!(
+                    sched.peak_inflight_exact(s, w),
+                    peak_inflight_replay_exact(&sched.stage_items(s), w)
+                );
             }
         }
     }

@@ -1,0 +1,145 @@
+//! ZB-H2: the higher-memory zero-bubble configuration.
+//!
+//! Where ZB-H1 keeps the 1F1B in-flight profile and only re-times the
+//! split backward, H2 (Qi et al., "Zero Bubble Pipeline Parallelism")
+//! *fills the warm-up bubble with extra in-flight forwards*: stage `s`
+//! warms up `min(2(p−s)−1, m)` microbatches — almost twice 1F1B's
+//! `p−s−1` — so backwards never wait on the fill phase and the leftover
+//! stalls are packed with deferred W items. The price is memory: the
+//! first stage holds up to `2p−1` microbatches' activations instead of
+//! `p`. That trade is exactly what the exact W-residual accounting
+//! prices: H2 is only admissible when its *true* peak (B-freed units
+//! plus W residuals) fits the device, which the schedule-aware
+//! partition searches now check (`CostTables::n_batch_frac_for`).
+//!
+//! Orders come from the unit-time greedy generator with the deepened
+//! warmup/cap and the same W-backlog bound as H1.
+
+use super::greedy::{greedy_items, GreedySpec};
+use super::zbh1::B_FRACTION;
+use super::{PipelineSchedule, ScheduleKind, WorkItem};
+
+#[derive(Debug, Clone)]
+pub struct ZbH2 {
+    num_stages: usize,
+    num_micro: usize,
+    items: Vec<Vec<WorkItem>>,
+}
+
+impl ZbH2 {
+    pub fn new(num_stages: usize, num_micro: usize) -> ZbH2 {
+        assert!(num_stages >= 1 && num_micro >= 1);
+        let (p, m) = (num_stages, num_micro);
+        let items = greedy_items(&GreedySpec {
+            num_stages: p,
+            num_micro: m,
+            num_chunks: 1,
+            fseq: (0..m).map(|q| (0, q)).collect(),
+            bseq: (0..m).map(|q| (0, q)).collect(),
+            warmup: (0..p).map(|s| (2 * (p - s) - 1).min(m)).collect(),
+            cap: (0..p).map(|s| (2 * (p - s) - 1).min(m).max(1)).collect(),
+            split_bwd: true,
+            w_backlog: Some(p),
+        });
+        ZbH2 { num_stages, num_micro, items }
+    }
+}
+
+impl PipelineSchedule for ZbH2 {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::ZbH2
+    }
+
+    fn num_stages(&self) -> usize {
+        self.num_stages
+    }
+
+    fn num_micro(&self) -> usize {
+        self.num_micro
+    }
+
+    fn stage_items(&self, stage: usize) -> Vec<WorkItem> {
+        self.items[stage].clone()
+    }
+
+    fn backward_split(&self) -> Option<f64> {
+        Some(B_FRACTION)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{validate_executable, WorkKind, ZbH1};
+
+    #[test]
+    fn emits_f_b_w_for_every_microbatch() {
+        let sched = ZbH2::new(4, 6);
+        for s in 0..4 {
+            let items = sched.stage_items(s);
+            assert_eq!(items.len(), 18);
+            for q in 0..6 {
+                for kind in [WorkKind::Fwd, WorkKind::Bwd, WorkKind::WGrad] {
+                    assert_eq!(
+                        items.iter().filter(|i| i.kind == kind && i.micro == q).count(),
+                        1,
+                        "stage {s} micro {q} {kind:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deeper_warmup_than_h1() {
+        // Stage 0 of 4 with enough microbatches warms up 2p−1 = 7
+        // forwards before its first backward (H1 warms up p−1 = 3).
+        let sched = ZbH2::new(4, 8);
+        let items = sched.stage_items(0);
+        let first_b = items.iter().position(|i| i.kind == WorkKind::Bwd).unwrap();
+        assert_eq!(first_b, 7, "{items:?}");
+        assert_eq!(sched.peak_inflight(0), 7);
+    }
+
+    #[test]
+    fn pays_more_memory_than_h1_for_less_or_equal_bubble_work() {
+        for (p, m) in [(2usize, 4usize), (4, 8), (4, 16)] {
+            let h1 = ZbH1::new(p, m);
+            let h2 = ZbH2::new(p, m);
+            // Strictly more in-flight on the early stages (both in the
+            // B-freed approximation and exactly)...
+            assert!(h2.peak_inflight(0) > h1.peak_inflight(0), "p={p} m={m}");
+            assert!(
+                h2.peak_inflight_exact(0, 0.5) > h1.peak_inflight_exact(0, 0.5),
+                "p={p} m={m}"
+            );
+            // ...and the exact peak dominates the B-freed count per stage.
+            for s in 0..p {
+                assert!(
+                    h2.peak_inflight_exact(s, 0.5)
+                        >= h2.peak_inflight(s) as f64 - 1e-12,
+                    "p={p} m={m} stage {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn executable_across_shape_grid() {
+        for p in [1usize, 2, 3, 5] {
+            for m in [1usize, 2, 4, 9] {
+                validate_executable(&ZbH2::new(p, m))
+                    .unwrap_or_else(|e| panic!("p={p} m={m}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn single_stage_degenerates_to_h1() {
+        // p = 1: warmup/cap collapse to 1; both variants produce the
+        // same strict F B W order.
+        let h1 = ZbH1::new(1, 4);
+        let h2 = ZbH2::new(1, 4);
+        assert_eq!(h1.stage_items(0), h2.stage_items(0));
+    }
+}

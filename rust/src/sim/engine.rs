@@ -23,7 +23,10 @@
 //! recompute the Lynx policy slotted into it — which is the interface the
 //! paper's planner consumes.
 
-use crate::sched::{bwd_upstream, fwd_upstream, OneFOneB, PipelineSchedule, WorkItem, WorkKind};
+use crate::sched::{
+    bwd_upstream_of, fwd_upstream_of, peak_inflight_replay_exact, OneFOneB, PipelineSchedule,
+    WorkItem, WorkKind,
+};
 
 /// Per-stage timing inputs (seconds, per microbatch through the whole
 /// stage; the engine divides by the schedule's chunk count).
@@ -80,6 +83,9 @@ pub struct PipelineTrace {
     /// Fraction of `StageTiming::bwd` carried by a B item (1.0 when the
     /// schedule does not split backward).
     pub bwd_frac: f64,
+    /// Whether the executed schedule split its backward into B + W items
+    /// (gates the W-residual term of [`Self::peak_units`]).
+    pub split_backward: bool,
 }
 
 impl PipelineTrace {
@@ -101,6 +107,16 @@ impl PipelineTrace {
     /// Total window seconds consumed by absorbed recomputation on `stage`.
     pub fn window_consumed(&self, stage: usize) -> f64 {
         self.windows[stage].iter().map(|w| w.consumed).sum()
+    }
+
+    /// Exact peak in-flight activation units on `stage` as executed:
+    /// replays the stage's item order with a forward allocating one
+    /// chunk unit, B releasing `1 − w_hold` and W the residual `w_hold`
+    /// (0 for combined-backward traces). This is the engine-side view of
+    /// the exact W-residual accounting the planner budgets with.
+    pub fn peak_units(&self, stage: usize, w_hold: f64) -> f64 {
+        let w = if self.split_backward { w_hold } else { 0.0 };
+        peak_inflight_replay_exact(&self.items[stage], w)
     }
 }
 
@@ -128,7 +144,9 @@ pub fn run_schedule(
     let v = sched.num_chunks();
     assert!(p >= 1 && m >= 1 && v >= 1);
     let vf = v as f64;
+    let split_backward = sched.backward_split().is_some();
     let bwd_frac = sched.backward_split().unwrap_or(1.0);
+    let placement = sched.placement();
     let items: Vec<Vec<WorkItem>> = (0..p).map(|s| sched.stage_items(s)).collect();
     let idx = |c: usize, mb: usize| c * m + mb;
 
@@ -161,19 +179,27 @@ pub fn run_schedule(
                 let slot = idx(item.chunk, item.micro);
                 let (start, end) = match item.kind {
                     WorkKind::Fwd => {
-                        let ready = match fwd_upstream(s, item.chunk, p) {
+                        let ready = match fwd_upstream_of(placement, s, item.chunk, p) {
                             None => 0.0,
-                            Some((s2, c2)) => fwd_end[s2][idx(c2, item.micro)] + timings[s2].p2p,
+                            Some((s2, c2)) => {
+                                // No p2p hop between two chunks hosted by
+                                // the same stage (the V's turning point).
+                                let link = if s2 == s { 0.0 } else { timings[s2].p2p };
+                                fwd_end[s2][idx(c2, item.micro)] + link
+                            }
                         };
                         let start = prev_end.max(ready);
                         (start, start + f_dur)
                     }
                     WorkKind::Bwd => {
-                        let dy_ready = match bwd_upstream(s, item.chunk, p, v) {
+                        let dy_ready = match bwd_upstream_of(placement, s, item.chunk, p, v) {
                             // Loss gradient is available right after the
                             // last virtual stage's forward.
                             None => fwd_end[s][slot],
-                            Some((s2, c2)) => bwd_end[s2][idx(c2, item.micro)] + timings[s2].p2p,
+                            Some((s2, c2)) => {
+                                let link = if s2 == s { 0.0 } else { timings[s2].p2p };
+                                bwd_end[s2][idx(c2, item.micro)] + link
+                            }
                         };
                         if lynx_absorb {
                             // Recompute starts as soon as the stage is
@@ -287,6 +313,7 @@ pub fn run_schedule(
         num_micro: m,
         num_chunks: v,
         bwd_frac,
+        split_backward,
     }
 }
 
@@ -436,6 +463,50 @@ mod tests {
         // Total work per stage is identical — W is bwd time moved, not
         // added.
         assert!((z.busy[0] - o.busy[0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zbh2_and_zbv_shrink_the_1f1b_bubble() {
+        use crate::sched::{ZbH2, ZbV};
+        let t = uniform(4, 1.0, 2.0, 0.0);
+        let o = run_pipeline(&t, 8, false);
+        let h2 = run_schedule(&t, &ZbH2::new(4, 8), false);
+        let zv = run_schedule(&t, &ZbV::new(4, 8), false);
+        assert!(h2.bubble_ratio() < o.bubble_ratio() - 1e-9);
+        assert!(zv.bubble_ratio() < o.bubble_ratio() - 1e-9);
+        // The V's near-immediate backward chase beats even ZB-H1 here.
+        let h1 = run_schedule(&t, &ZbH1::new(4, 8), false);
+        assert!(
+            zv.bubble_ratio() < h1.bubble_ratio() + 1e-9,
+            "zbv {} vs zbh1 {}",
+            zv.bubble_ratio(),
+            h1.bubble_ratio()
+        );
+        // Work conservation holds for both.
+        assert!((h2.busy[0] - o.busy[0]).abs() < 1e-9);
+        assert!((zv.busy[0] - o.busy[0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_peak_units_match_schedule_replay() {
+        use crate::sched::ZbH2;
+        let t = uniform(4, 1.0, 2.0, 0.3);
+        for w in [0.0, 0.4, 1.0] {
+            let sched = ZbH2::new(4, 8);
+            let tr = run_schedule(&t, &sched, true);
+            for s in 0..4 {
+                assert_eq!(
+                    tr.peak_units(s, w),
+                    sched.peak_inflight_exact(s, w),
+                    "stage {s} w={w}"
+                );
+            }
+            // Combined-backward traces ignore w_hold.
+            let o = run_pipeline(&t, 8, false);
+            for s in 0..4 {
+                assert_eq!(o.peak_units(s, w), o.peak_units(s, 0.0), "stage {s}");
+            }
+        }
     }
 
     #[test]

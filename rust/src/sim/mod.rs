@@ -2,9 +2,11 @@
 //!
 //! Substitutes the paper's 16×A100 testbeds (DESIGN.md §2): executes a
 //! (partition, recomputation plan) pair under any [`crate::sched`]
-//! pipeline schedule — GPipe, 1F1B, interleaved-1F1B or ZB-H1 — and
-//! produces iteration time, throughput, bubble ratio, per-stage memory,
-//! and the recompute-path breakdowns behind Figs. 2, 6, 7, 8, 9 and 10.
+//! pipeline schedule — GPipe, 1F1B, interleaved-1F1B, ZB-H1/H2 or ZB-V —
+//! and produces iteration time, throughput, bubble ratio, per-stage
+//! memory under both the exact W-residual accounting and the B-freed H1
+//! approximation, and the recompute-path breakdowns behind Figs. 2, 6,
+//! 7, 8, 9 and 10.
 //!
 //! * [`crate::sched`] — the pluggable schedule subsystem (work orders,
 //!   in-flight accounting, overlap-window semantics). The old

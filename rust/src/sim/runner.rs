@@ -59,13 +59,27 @@ pub struct StageReport {
     /// Exposed recompute actually paid across the iteration.
     pub exposed_paid_total: f64,
     pub comm_per_micro: f64,
+    /// Peak memory bytes under the exact W-residual accounting.
     pub peak_mem: f64,
+    /// Peak memory bytes of the same plan under the B-freed (H1)
+    /// approximation (same fractional chunk-unit conversion, W residual
+    /// zeroed) — the gap to `peak_mem` is exactly the residual the
+    /// coarse accounting ignored.
+    pub peak_mem_h1: f64,
     pub idle: f64,
     /// Residual overlap-window (stall) seconds the schedule exposes.
     pub window_secs: f64,
-    /// Peak in-flight microbatch-equivalents the schedule reported.
+    /// Peak in-flight microbatch-equivalents (ceiling of the exact
+    /// fraction) the schedule reported.
     pub inflight: usize,
+    /// Exact peak in-flight microbatch-equivalents (B- and W-released
+    /// fractions tracked separately).
+    pub inflight_exact: f64,
+    /// True when the exact accounting overflows device memory.
     pub oom: bool,
+    /// True when even the B-freed approximation overflows (the stage was
+    /// infeasible under the old model too).
+    pub oom_h1: bool,
 }
 
 /// Whole-run simulation report.
@@ -82,7 +96,11 @@ pub struct SimReport {
     pub partition: Vec<usize>,
     /// Policy + partition search seconds.
     pub search_secs: f64,
+    /// OOM under the exact W-residual accounting.
     pub oom: bool,
+    /// OOM under the B-freed (H1) approximation. `oom && !oom_h1` is a
+    /// configuration the old accounting would have wrongly certified.
+    pub oom_h1: bool,
 }
 
 impl SimReport {
@@ -99,9 +117,21 @@ impl SimReport {
             .sum()
     }
 
-    /// Peak memory across stages.
+    /// Peak memory across stages (exact accounting).
     pub fn peak_mem(&self) -> f64 {
         self.stages.iter().map(|s| s.peak_mem).fold(0.0, f64::max)
+    }
+
+    /// Peak memory across stages under the B-freed (H1) approximation.
+    pub fn peak_mem_h1(&self) -> f64 {
+        self.stages.iter().map(|s| s.peak_mem_h1).fold(0.0, f64::max)
+    }
+
+    /// True when the exact accounting rejects a configuration the H1
+    /// approximation accepted — the class of silent OOMs this accounting
+    /// exists to catch.
+    pub fn h1_overcommitted(&self) -> bool {
+        self.oom && !self.oom_h1
     }
 
     pub fn to_json(&self) -> Json {
@@ -112,6 +142,7 @@ impl SimReport {
             .set("throughput", Json::from(self.throughput))
             .set("bubble_ratio", Json::from(self.bubble_ratio))
             .set("oom", Json::from(self.oom))
+            .set("oom_h1", Json::from(self.oom_h1))
             .set("search_secs", Json::from(self.search_secs))
             .set(
                 "partition",
@@ -126,9 +157,11 @@ impl SimReport {
                 .set("exposed_paid", Json::from(s.exposed_paid_total))
                 .set("absorbed", Json::from(s.absorbed_total))
                 .set("peak_mem", Json::from(s.peak_mem))
+                .set("peak_mem_h1", Json::from(s.peak_mem_h1))
                 .set("idle", Json::from(s.idle))
                 .set("window_secs", Json::from(s.window_secs))
-                .set("inflight", Json::from(s.inflight));
+                .set("inflight", Json::from(s.inflight))
+                .set("inflight_exact", Json::from(s.inflight_exact));
             stages.push(so);
         }
         o.set("stages", stages);
@@ -189,8 +222,7 @@ fn simulate_one(
             let mut plans = Vec::with_capacity(setup.pp);
             let mut search = 0.0;
             for stage in 0..setup.pp {
-                let n_batch = tables.n_batch_for(stage, sched.as_ref());
-                let ctx = tables.build_ctx(stage, part[stage], n_batch);
+                let ctx = tables.build_ctx_sched(stage, part[stage], sched.as_ref());
                 let out = cache.get_or_plan(tables, &ctx, cfg.policy);
                 search += out.search_secs;
                 plans.push(out);
@@ -204,22 +236,37 @@ fn simulate_one(
     };
 
     // ---- per-stage costs ----
+    // The exact in-flight accounting drives the real budgets; the same
+    // plan is also costed under the B-freed (H1) approximation so every
+    // report carries the gap the old model hid.
     let mut stage_timings = Vec::with_capacity(setup.pp);
     let mut reports = Vec::with_capacity(setup.pp);
     let mut oom = false;
+    let mut oom_h1 = false;
     let boundary = cm.memory.boundary_bytes(setup);
     for stage in 0..setup.pp {
-        let n_batch = tables.n_batch_for(stage, sched.as_ref());
-        let ctx = tables.build_ctx(stage, partition[stage], n_batch);
+        let ctx = tables.build_ctx_sched(stage, partition[stage], sched.as_ref());
         let cost = tables.stage_cost(&ctx, &plans[stage].plan);
+        // B-freed certification of the same plan: both fractions at the
+        // H1 value, so the W reserve is zero. Combined-backward
+        // schedules have no residual — the exact costing already is the
+        // H1 one, so skip the duplicate evaluation.
+        let h1 = tables.n_batch_frac_h1_for(stage, sched.as_ref());
+        let cost_h1 = if ctx.w_residual_units() > 0.0 {
+            let ctx_h1 = tables.build_ctx_frac(stage, partition[stage], h1, h1);
+            tables.stage_cost(&ctx_h1, &plans[stage].plan)
+        } else {
+            cost.clone()
+        };
         oom |= plans[stage].oom || cost.oom;
+        oom_h1 |= cost_h1.oom;
         stage_timings.push(StageTiming {
             fwd: cost.fwd,
             bwd: cost.bwd,
             exposed: cost.exposed_recompute,
             p2p: cm.comm.p2p_time(boundary),
         });
-        reports.push((ctx, cost));
+        reports.push((ctx, cost, cost_h1));
     }
 
     // ---- pipeline execution ----
@@ -230,7 +277,7 @@ fn simulate_one(
     // states, overlapping-free (paper ignores it too; kept for realism).
     let opt_step = reports
         .iter()
-        .map(|(_, c)| c.static_mem / (cm.topo.gpu.mem_bw * cm.topo.gpu.bw_eff))
+        .map(|(_, c, _)| c.static_mem / (cm.topo.gpu.mem_bw * cm.topo.gpu.bw_eff))
         .fold(0.0, f64::max);
     let iteration_secs = trace.makespan + opt_step;
     let throughput = setup.global_batch() as f64 / iteration_secs;
@@ -239,7 +286,7 @@ fn simulate_one(
     let stages = reports
         .into_iter()
         .enumerate()
-        .map(|(s, (ctx, cost))| StageReport {
+        .map(|(s, (ctx, cost, cost_h1))| StageReport {
             n_layers: partition[s],
             fwd: cost.fwd,
             bwd: cost.bwd,
@@ -250,10 +297,13 @@ fn simulate_one(
             exposed_paid_total: trace.exposed_paid[s],
             comm_per_micro: cost.comm_time,
             peak_mem: cost.peak_mem,
+            peak_mem_h1: cost_h1.peak_mem,
             idle: trace.idle[s],
             window_secs: trace.window_secs(s),
             inflight: ctx.n_batch,
+            inflight_exact: ctx.n_batch_frac,
             oom: cost.oom,
+            oom_h1: cost_h1.oom,
         })
         .collect();
 
@@ -278,6 +328,7 @@ fn simulate_one(
         partition,
         search_secs,
         oom,
+        oom_h1,
     }
 }
 
@@ -368,6 +419,33 @@ mod tests {
             o.bubble_ratio
         );
         assert!(z.iteration_secs <= o.iteration_secs + 1e-9);
+    }
+
+    #[test]
+    fn exact_peak_never_below_h1_peak() {
+        // The exact W-residual accounting can only add memory on top of
+        // the B-freed approximation, for every schedule and stage.
+        for kind in ScheduleKind::all() {
+            let r = sim_sched(PolicyKind::Block, PartitionMode::Dp, kind);
+            for (s, st) in r.stages.iter().enumerate() {
+                assert!(
+                    st.peak_mem >= st.peak_mem_h1 - 1.0,
+                    "{} stage {s}: exact {:.3e} < h1 {:.3e}",
+                    kind.label(),
+                    st.peak_mem,
+                    st.peak_mem_h1
+                );
+                assert!(st.inflight_exact <= st.inflight as f64 + 1e-12);
+            }
+        }
+        // Split-backward schedules actually pay a residual somewhere.
+        let r = sim_sched(PolicyKind::Block, PartitionMode::Dp, ScheduleKind::ZbH1);
+        assert!(
+            r.peak_mem() > r.peak_mem_h1() + 1.0,
+            "zbh1: exact {:.3e} vs h1 {:.3e}",
+            r.peak_mem(),
+            r.peak_mem_h1()
+        );
     }
 
     #[test]

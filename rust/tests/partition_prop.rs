@@ -157,6 +157,47 @@ fn incremental_greedy_equals_pr1_reference_on_grid() {
 }
 
 #[test]
+fn schedule_aware_searches_consume_exact_budgets() {
+    // Split-backward schedules (exact W-residual replay) and the
+    // V-placement flow through both searches: layers conserved, DP
+    // lexicographically dominant, and the zero-bubble variants' larger
+    // exact budgets never *help* feasibility relative to 1F1B.
+    use lynx::sched::ScheduleKind;
+    for (model, tp, pp) in [("1.3B", 2, 4), ("4.7B", 4, 4)] {
+        let setup = TrainSetup::new(ModelConfig::by_name(model).unwrap(), tp, pp, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(tp, pp));
+        let g = build_layer_graph(&setup);
+        let tables = CostTables::new(&setup, &cm, &g);
+        let mut cache = PlanCache::new();
+        let base = {
+            let opts = SearchOptions {
+                schedule: Some(ScheduleKind::OneFOneB),
+                ..Default::default()
+            };
+            lynx_partition_cached(&tables, &mut cache, PolicyKind::Block, &opts)
+        };
+        for kind in [ScheduleKind::ZbH1, ScheduleKind::ZbH2, ScheduleKind::ZbV] {
+            let label = format!("{model} pp{pp} {}", kind.label());
+            let opts = SearchOptions { schedule: Some(kind), ..Default::default() };
+            let greedy = lynx_partition_cached(&tables, &mut cache, PolicyKind::Block, &opts);
+            let exact = exact_dp_partition(&tables, &mut cache, PolicyKind::Block, &opts);
+            check_partition(&greedy, setup.model.layers, &label);
+            check_partition(&exact, setup.model.layers, &label);
+            if !greedy.oom {
+                assert!(!exact.oom, "{label}: DP lost feasibility");
+                assert!(exact.makespan() <= greedy.makespan() + EPS, "{label}");
+            }
+            // A schedule whose exact in-flight dominates 1F1B's cannot be
+            // feasible where 1F1B is not (same policy, same layers).
+            assert!(
+                !base.oom || greedy.oom,
+                "{label}: split-backward feasible where 1F1B OOMs"
+            );
+        }
+    }
+}
+
+#[test]
 fn threaded_dp_matches_serial_dp_on_grid() {
     for (model, tp, pp) in [("1.3B", 2, 4), ("4.7B", 4, 8)] {
         let setup = TrainSetup::new(ModelConfig::by_name(model).unwrap(), tp, pp, 4, 8);

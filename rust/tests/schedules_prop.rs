@@ -1,10 +1,13 @@
 //! Property tests for the sched subsystem: every schedule × (stages,
 //! microbatches, chunks) grid point must produce a complete, executable
-//! work order whose reported in-flight peak matches a replay count, and
-//! the generic engine must respect schedule-independent timing bounds.
+//! work order whose reported in-flight peaks (both the B-freed
+//! approximation and the exact W-residual replay) match replay counts,
+//! and the generic engine must respect schedule-independent timing
+//! bounds.
 
 use lynx::sched::{
-    peak_inflight_replay, validate_executable, PipelineSchedule, ScheduleKind, WorkKind,
+    peak_inflight_replay, peak_inflight_replay_exact, validate_executable, PipelineSchedule,
+    ScheduleKind, WorkKind,
 };
 use lynx::sim::engine::{run_schedule, StageTiming};
 use lynx::util::prng::Pcg32;
@@ -13,6 +16,7 @@ use lynx::util::propcheck::check;
 const STAGES: [usize; 5] = [1, 2, 3, 4, 6];
 const MICROS: [usize; 7] = [1, 2, 3, 5, 8, 12, 16];
 const CHUNKS: [usize; 3] = [1, 2, 3];
+const W_HOLDS: [f64; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
 
 fn kinds_for(chunks: usize) -> Vec<ScheduleKind> {
     vec![
@@ -20,6 +24,8 @@ fn kinds_for(chunks: usize) -> Vec<ScheduleKind> {
         ScheduleKind::OneFOneB,
         ScheduleKind::Interleaved { chunks },
         ScheduleKind::ZbH1,
+        ScheduleKind::ZbH2,
+        ScheduleKind::ZbV,
     ]
 }
 
@@ -60,6 +66,99 @@ fn grid_reported_inflight_matches_replay() {
                     }
                 }
             }
+        }
+    }
+}
+
+#[test]
+fn grid_exact_inflight_overrides_match_the_exact_replay() {
+    // Satellite: peak-in-flight overrides (1F1B / GPipe closed forms)
+    // are validated against the *exact* replay, not the B-freed one,
+    // across the whole grid and every W-residual weight.
+    for &p in &STAGES {
+        for &m in &MICROS {
+            for &v in &CHUNKS {
+                for kind in kinds_for(v) {
+                    let sched = kind.build(p, m);
+                    let split = sched.backward_split().is_some();
+                    for s in 0..p {
+                        let items = sched.stage_items(s);
+                        for &w in &W_HOLDS {
+                            let expect =
+                                peak_inflight_replay_exact(&items, if split { w } else { 0.0 });
+                            let got = sched.peak_inflight_exact(s, w);
+                            assert!(
+                                (got - expect).abs() < 1e-12,
+                                "{} p={p} m={m} v={v} stage={s} w={w}: {got} vs {expect}",
+                                kind.label()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_exact_peak_dominates_h1_and_is_monotone_in_w() {
+    // Satellite property grid: for every (schedule × shape) cell the
+    // exact peak is >= the H1 (B-freed) peak — equal for
+    // combined-backward schedules, equal at w = 0 for all — and is
+    // monotone non-decreasing in the W-residual weight.
+    for &p in &STAGES {
+        for &m in &MICROS {
+            for &v in &CHUNKS {
+                for kind in kinds_for(v) {
+                    let sched = kind.build(p, m);
+                    let split = sched.backward_split().is_some();
+                    for s in 0..p {
+                        let h1 = sched.peak_inflight(s) as f64;
+                        let label =
+                            format!("{} p={p} m={m} v={v} stage={s}", kind.label());
+                        assert!(
+                            (sched.peak_inflight_exact(s, 0.0) - h1).abs() < 1e-12,
+                            "{label}: exact(0) != H1"
+                        );
+                        let mut prev = -1.0f64;
+                        for &w in &W_HOLDS {
+                            let exact = sched.peak_inflight_exact(s, w);
+                            assert!(exact >= h1 - 1e-12, "{label} w={w}: exact < H1");
+                            assert!(
+                                exact >= prev - 1e-12,
+                                "{label}: not monotone at w={w}"
+                            );
+                            prev = exact;
+                            if !split {
+                                assert!(
+                                    (exact - h1).abs() < 1e-12,
+                                    "{label} w={w}: combined backward must equal H1"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn split_backward_schedules_pay_a_strict_residual_somewhere() {
+    // The gap the bugfix exists to price: on real shapes every
+    // split-backward schedule has at least one stage whose exact peak
+    // strictly exceeds the B-freed count.
+    for (p, m) in [(2usize, 4usize), (4, 8), (4, 16), (6, 12)] {
+        for kind in [ScheduleKind::ZbH1, ScheduleKind::ZbH2, ScheduleKind::ZbV] {
+            let sched = kind.build(p, m);
+            let gap = (0..p)
+                .map(|s| sched.peak_inflight_exact(s, 0.5) - sched.peak_inflight(s) as f64)
+                .fold(0.0f64, f64::max);
+            assert!(
+                gap > 1e-9,
+                "{} p={p} m={m}: no stage pays a W residual",
+                kind.label()
+            );
         }
     }
 }
@@ -110,6 +209,32 @@ fn zbh1_never_exceeds_1f1b_inflight() {
             }
         }
     }
+}
+
+#[test]
+fn exact_accounting_rejects_a_partition_h1_accepted() {
+    // The acceptance case for the bugfix: a concrete (model, pp, seq)
+    // setup where the B-freed H1 approximation certifies the Selective
+    // plan under ZB-H2 but the exact W-residual accounting overflows the
+    // device — end to end through the simulator, and the same case the
+    // `7B-h1-overcommit` row of BENCH_schedules.json reports.
+    use lynx::costmodel::{CostModel, Topology};
+    use lynx::experiments::h1_overcommit_case;
+    use lynx::plan::PolicyKind;
+    use lynx::sim::{simulate, PartitionMode, SimConfig};
+
+    let setup = h1_overcommit_case()
+        .expect("no (micro-batch, seq) window where exact OOMs but H1 fits");
+    let cm = CostModel::new(Topology::nvlink(4, 4));
+    let r = simulate(
+        &cm,
+        &SimConfig::new(setup, PolicyKind::Selective, PartitionMode::Dp)
+            .with_schedule(ScheduleKind::ZbH2),
+    );
+    assert!(r.oom, "exact accounting should reject this plan");
+    assert!(!r.oom_h1, "the H1 approximation should have certified it");
+    assert!(r.h1_overcommitted());
+    assert!(r.peak_mem() > r.peak_mem_h1());
 }
 
 #[test]
@@ -194,7 +319,9 @@ fn prop_engine_bounds_hold_for_every_schedule() {
 #[test]
 fn bubble_ordering_on_balanced_divisible_shapes() {
     // On the Megatron-friendly shapes (m a multiple of p) with balanced
-    // stages: interleaving and ZB-H1 both shrink the 1F1B bubble.
+    // stages: interleaving and every zero-bubble variant shrink the
+    // 1F1B bubble, and ZB-H2's deeper warmup never bubbles more than
+    // ZB-H1 (it trades memory, not time, for that).
     for (p, m) in [(2usize, 4usize), (4, 8), (4, 16), (6, 12)] {
         let ts: Vec<StageTiming> = (0..p)
             .map(|_| StageTiming { fwd: 1.0, bwd: 2.0, exposed: 0.0, p2p: 0.0 })
@@ -206,7 +333,12 @@ fn bubble_ordering_on_balanced_divisible_shapes() {
         let b_1f1b = bubble(ScheduleKind::OneFOneB);
         let b_il = bubble(ScheduleKind::Interleaved { chunks: 2 });
         let b_zb = bubble(ScheduleKind::ZbH1);
+        let b_h2 = bubble(ScheduleKind::ZbH2);
+        let b_zv = bubble(ScheduleKind::ZbV);
         assert!(b_il < b_1f1b - 1e-9, "p={p} m={m}: interleaved {b_il} vs 1f1b {b_1f1b}");
         assert!(b_zb < b_1f1b - 1e-9, "p={p} m={m}: zbh1 {b_zb} vs 1f1b {b_1f1b}");
+        assert!(b_h2 < b_1f1b - 1e-9, "p={p} m={m}: zbh2 {b_h2} vs 1f1b {b_1f1b}");
+        assert!(b_zv < b_1f1b - 1e-9, "p={p} m={m}: zbv {b_zv} vs 1f1b {b_1f1b}");
+        assert!(b_h2 <= b_zb + 1e-9, "p={p} m={m}: zbh2 {b_h2} vs zbh1 {b_zb}");
     }
 }

@@ -31,6 +31,19 @@ LYNX_BENCH_QUICK=1 LYNX_BENCH_OUT="$PWD" cargo bench --bench bench_schedules
 test -f BENCH_schedules.json
 echo "BENCH_schedules.json written"
 
+echo "== gate: exact W-residual peak >= H1 peak =="
+python3 - <<'EOF'
+import json
+rows = [r for r in json.load(open('BENCH_schedules.json')) if isinstance(r, dict)]
+bad = [r for r in rows
+       if r.get('peak_mem_bytes', 0) < r.get('peak_mem_h1_bytes', 0) - 1.0]
+assert rows, 'BENCH_schedules.json has no rows'
+assert not bad, f'exact peak below its H1 counterpart: {bad}'
+assert any(r.get('h1_overcommitted') for r in rows), \
+    'no row demonstrates the exact accounting rejecting an H1-certified plan'
+print(f'OK: {len(rows)} rows, exact >= H1 everywhere, overcommit row present')
+EOF
+
 echo "== bench: search time (quick) =="
 LYNX_BENCH_QUICK=1 LYNX_BENCH_OUT="$PWD" cargo bench --bench bench_table3_search_time
 test -f BENCH_search.json
