@@ -42,7 +42,7 @@ fn main() {
             &cm,
             &SimConfig::new(setup.clone(), PolicyKind::LynxHeu, PartitionMode::Lynx),
         );
-        let hidden = lynx.total_hidden(setup.num_micro);
+        let hidden = lynx.total_hidden();
         let total = hidden + lynx.total_exposed_paid();
         println!(
             "{:>12.0} {:>12.2} {:>12.2} {:>9.2}x {:>11.0}%",

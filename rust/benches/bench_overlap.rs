@@ -1,0 +1,76 @@
+//! Bench: planned-vs-achieved recompute overlap across executed link
+//! bandwidth — the event engine's conservation artifact.
+//!
+//! Consumes the same `experiments::overlap_runs` sweep as
+//! `lynx figures --fig overlap` (plans fixed at plan bandwidth, executed
+//! comm widths scaled by `bw`), so the bench artifact and the figure can
+//! never drift apart. Emits `BENCH_overlap.json`; `scripts/check.sh`
+//! gates that no row has `achieved_overlap` above `planned_overlap`
+//! (conservation) and that overlap is fully achieved at `bw <= 1`.
+//!
+//! Run `cargo bench --bench bench_overlap` (LYNX_BENCH_QUICK=1 for the
+//! reduced sweep; LYNX_BENCH_OUT overrides the output directory).
+
+use lynx::experiments::overlap_runs;
+use lynx::util::bench::Bench;
+use lynx::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("overlap: planned vs achieved across executed bandwidth");
+
+    let t0 = Instant::now();
+    let runs = overlap_runs(quick);
+    let sweep_wall = t0.elapsed().as_secs_f64();
+
+    let mut rows = Vec::new();
+    let mut out = Json::Arr(vec![]);
+    for r in &runs {
+        let planned = r.report.planned_overlap();
+        let achieved = r.report.achieved_overlap();
+        let absorbed: f64 = r.report.stages.iter().map(|s| s.absorbed_total).sum();
+        b.record(
+            &format!("{} {} bw{:.2}", r.schedule.label(), r.policy.label(), r.bw_scale),
+            r.report.iteration_secs,
+            "s/iter (simulated)",
+        );
+        rows.push(vec![
+            r.schedule.label().to_string(),
+            r.policy.label().to_string(),
+            format!("{:.2}", r.bw_scale),
+            format!("{:.2}", 1e3 * planned),
+            format!("{:.2}", 1e3 * achieved),
+            if planned > 0.0 {
+                format!("{:.0}%", 100.0 * achieved / planned)
+            } else {
+                "-".into()
+            },
+        ]);
+        let mut jo = Json::obj();
+        jo.set("model", Json::from(r.model))
+            .set("micro_batch", Json::from(r.micro_batch))
+            .set("schedule", Json::from(r.schedule.label()))
+            .set("policy", Json::from(r.policy.label()))
+            .set("bw_scale", Json::from(r.bw_scale))
+            .set("iteration_secs", Json::from(r.report.iteration_secs))
+            .set("throughput", Json::from(r.report.throughput))
+            .set("planned_overlap_secs", Json::from(planned))
+            .set("achieved_overlap_secs", Json::from(achieved))
+            .set("absorbed_secs", Json::from(absorbed))
+            .set("exposed_paid_secs", Json::from(r.report.total_exposed_paid()))
+            .set("oom", Json::from(r.report.oom));
+        out.push(jo);
+    }
+    b.record("full sweep wall-clock", sweep_wall, "s");
+    b.table(
+        "planned vs achieved overlap (7B, batch 16, NVLink-4x4, Lynx plans)",
+        &["schedule", "policy", "bw", "planned ms", "achieved ms", "achieved/planned"],
+        &rows,
+    );
+
+    let dir = std::env::var("LYNX_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("BENCH_overlap.json");
+    std::fs::write(&path, out.pretty()).expect("write BENCH_overlap.json");
+    println!("\nwrote {}", path.display());
+}

@@ -21,9 +21,59 @@
 //! (LYNX_BENCH_QUICK=1 for the reduced sweep; LYNX_BENCH_OUT overrides
 //! the output directory).
 
+use lynx::costmodel::{CostModel, Topology};
 use lynx::experiments::{search_runs, table3};
+use lynx::graph::{build_layer_graph, ModelConfig, TrainSetup};
+use lynx::plan::{
+    lynx_partition_cached, CostTables, PlanCache, PolicyKind, SearchOptions,
+};
 use lynx::util::bench::Bench;
 use lynx::util::json::Json;
+
+/// Disk-persistence phase (ROADMAP item): the same partition search run
+/// cold (empty disk cache), persisted, then warm-from-disk in a fresh
+/// cache object — the JSON row separates warm-from-disk hits from
+/// in-process hits so the cross-invocation reuse is measurable.
+fn disk_cache_phase(b: &mut Bench, out: &mut Json) {
+    let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 4, 4, 8, 8);
+    let cm = CostModel::new(Topology::nvlink(4, 4));
+    let g = build_layer_graph(&setup);
+    let tables = CostTables::new(&setup, &cm, &g);
+    let fp = PlanCache::fingerprint(&tables, &cm);
+    let dir = std::env::temp_dir().join("lynx_bench_plancache");
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = SearchOptions::default();
+
+    let t0 = std::time::Instant::now();
+    let mut cold = PlanCache::with_disk(&dir, &fp);
+    let r_cold = lynx_partition_cached(&tables, &mut cold, PolicyKind::LynxHeu, &opts);
+    cold.persist().expect("persist plan cache");
+    let cold_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = std::time::Instant::now();
+    let mut warm = PlanCache::with_disk(&dir, &fp);
+    let r_warm = lynx_partition_cached(&tables, &mut warm, PolicyKind::LynxHeu, &opts);
+    let warm_secs = t1.elapsed().as_secs_f64();
+    assert_eq!(r_cold.partition, r_warm.partition, "disk cache changed the result");
+
+    b.record("disk-cache cold search (1.3B pp4 lynx-heu)", cold_secs, "s");
+    b.record("disk-cache warm-from-disk search", warm_secs, "s");
+
+    let mut jo = Json::obj();
+    jo.set("disk_cache_phase", Json::from(true))
+        .set("model", Json::from("1.3B"))
+        .set("pp", Json::from(4usize))
+        .set("policy", Json::from(PolicyKind::LynxHeu.label()))
+        .set("cold_plan_solves", Json::from(cold.solves()))
+        .set("cold_wall_secs", Json::from(cold_secs))
+        .set("warm_entries_loaded", Json::from(warm.warm_entries()))
+        .set("warm_plan_solves", Json::from(warm.solves()))
+        .set("warm_disk_hits", Json::from(warm.disk_hits()))
+        .set("warm_inprocess_hits", Json::from(warm.hits() - warm.disk_hits()))
+        .set("warm_wall_secs", Json::from(warm_secs));
+    out.push(jo);
+    let _ = std::fs::remove_dir_all(&dir);
+}
 
 fn main() {
     let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
@@ -108,6 +158,9 @@ fn main() {
         ],
         &rows,
     );
+
+    // Disk-backed cache: cold vs warm-from-disk, in its own JSON row.
+    disk_cache_phase(&mut b, &mut out);
 
     // Sweep-level summary row (the ISSUE-2 acceptance numbers, plus the
     // ISSUE-3 makespan-bound pruning total).

@@ -17,11 +17,13 @@ use crate::plan::{
 };
 use crate::profiler::profile_model;
 use crate::sched::ScheduleKind;
-use crate::sim::{simulate, PartitionMode, SimConfig};
+use crate::sim::{simulate_cached, DpMode, PartitionMode, SimConfig};
 use crate::train::{train, TrainConfig, TrainPolicy};
 use crate::util::argparse::{opt, Args, OptSpec};
 use crate::util::stats::fmt_bytes;
+use crate::util::warn::warn_once;
 use anyhow::{anyhow, Result};
+use std::path::Path;
 use std::time::Duration;
 
 const USAGE: &str = "lynx <simulate|plan|partition|figures|train|profile> [options]
@@ -46,6 +48,10 @@ fn common_specs() -> Vec<OptSpec> {
             Some("1f1b"),
         ),
         opt("chunks", "virtual chunks per stage (interleaved)", true, Some("2")),
+        opt("bw", "executed link-bandwidth multiplier (plans stay at 1.0)", true, Some("1.0")),
+        opt("dp-overlap", "DP gradient sync: off|serial|overlap", true, Some("off")),
+        opt("p2p-over-tp", "serialize p2p wire time with TP traffic", false, None),
+        opt("cache-dir", "persist the plan cache to this directory", true, None),
         opt("help", "print help", false, None),
         // train-only options (accepted everywhere for simplicity)
         opt("artifacts", "artifact directory", true, Some("artifacts")),
@@ -57,7 +63,7 @@ fn common_specs() -> Vec<OptSpec> {
         opt("seed", "PRNG seed", true, Some("42")),
         opt("log-every", "loss log interval", true, Some("10")),
         // figures options
-        opt("fig", "figure id: 2a|2b|6a|6b|7|8|9|10a|10b|10c|table3|sp|schedules|search", true, None),
+        opt("fig", "figure id: 2a|2b|6a|6b|7|8|9|10a|10b|10c|table3|sp|schedules|search|overlap", true, None),
         opt("all", "regenerate every figure", false, None),
         opt("quick", "reduced configs for smoke runs", false, None),
         opt("out", "write figure JSON to this directory", true, None),
@@ -71,40 +77,77 @@ fn parse_schedule(a: &Args) -> Result<ScheduleKind> {
     ScheduleKind::parse(name, chunks).ok_or_else(|| anyhow!("unknown schedule {name:?}"))
 }
 
-/// Warn (once per process) when the requested schedule shape cannot use
-/// its tight order and silently runs a looser fallback instead: ragged
-/// interleaved shapes (Megatron itself rejects them outright) drop to
-/// the greedy generator, and a wedged ZB-V shape would drop to the safe
-/// phase order (GPipe-like memory, large bubble).
-fn warn_schedule_fallback(kind: ScheduleKind, setup: &TrainSetup) {
+/// Warn (once per process, via the shared [`warn_once`] registry) when
+/// the requested schedule shape cannot use its tight order and silently
+/// runs a looser fallback instead: ragged interleaved shapes (Megatron
+/// itself rejects them outright) drop to the greedy generator, and a
+/// wedged ZB-V shape would drop to the safe phase order (GPipe-like
+/// memory, large bubble). Returns whether a warning fired (tests assert
+/// the once-only behavior through this).
+fn warn_schedule_fallback(kind: ScheduleKind, setup: &TrainSetup) -> bool {
     use crate::sched::{Interleaved1F1B, ZbV};
-    use std::sync::Once;
-    static RAGGED_WARNING: Once = Once::new();
-    static ZBV_WARNING: Once = Once::new();
     match kind {
         ScheduleKind::Interleaved { chunks }
             if Interleaved1F1B::shape_uses_fallback(setup.pp, setup.num_micro, chunks) =>
         {
-            RAGGED_WARNING.call_once(|| {
-                eprintln!(
-                    "warning: interleaved schedule with num_micro={} not divisible by pp={} \
+            warn_once(
+                "sched-interleaved-ragged",
+                &format!(
+                    "interleaved schedule with num_micro={} not divisible by pp={} \
                      cannot use the tight Megatron order; running the feasible-but-looser \
                      greedy order (expect a slightly larger bubble)",
                     setup.num_micro, setup.pp
-                );
-            });
+                ),
+            )
         }
-        ScheduleKind::ZbV if ZbV::shape_uses_fallback(setup.pp, setup.num_micro) => {
-            ZBV_WARNING.call_once(|| {
-                eprintln!(
-                    "warning: zbv wave generator wedged for pp={} num_micro={}; running \
-                     the safe phase order instead (GPipe-level memory, larger bubble)",
-                    setup.pp, setup.num_micro
-                );
-            });
-        }
-        _ => {}
+        ScheduleKind::ZbV if ZbV::shape_uses_fallback(setup.pp, setup.num_micro) => warn_once(
+            "sched-zbv-wedged",
+            &format!(
+                "zbv wave generator wedged for pp={} num_micro={}; running \
+                 the safe phase order instead (GPipe-level memory, larger bubble)",
+                setup.pp, setup.num_micro
+            ),
+        ),
+        _ => false,
     }
+}
+
+/// Parse the event-engine execution knobs shared by `simulate`.
+fn parse_exec_knobs(a: &Args) -> Result<(f64, DpMode, bool)> {
+    let bw: f64 = a.req("bw")?;
+    if !(bw.is_finite() && bw > 0.0) {
+        return Err(anyhow!("--bw must be a positive finite multiplier"));
+    }
+    let dp = a.get("dp-overlap").unwrap();
+    let dp = DpMode::parse(dp).ok_or_else(|| anyhow!("unknown --dp-overlap {dp:?}"))?;
+    Ok((bw, dp, a.has("p2p-over-tp")))
+}
+
+/// Build the plan cache for an invocation: disk-backed when
+/// `--cache-dir` is given, in-memory otherwise.
+fn open_cache(a: &Args, tables: &CostTables, cm: &CostModel) -> PlanCache {
+    match a.get("cache-dir") {
+        Some(dir) => {
+            PlanCache::with_disk(Path::new(dir), &PlanCache::fingerprint(tables, cm))
+        }
+        None => PlanCache::new(),
+    }
+}
+
+/// Persist a disk-backed cache and report its traffic on stderr.
+fn close_cache(a: &Args, cache: &PlanCache) -> Result<()> {
+    if a.get("cache-dir").is_some() {
+        cache.persist()?;
+        eprintln!(
+            "plan cache: {} entries ({} warm from disk), {} disk hits / {} hits, {} solves",
+            cache.len(),
+            cache.warm_entries(),
+            cache.disk_hits(),
+            cache.hits(),
+            cache.solves(),
+        );
+    }
+    Ok(())
 }
 
 fn parse_policy(s: &str) -> Result<PolicyKind> {
@@ -171,15 +214,27 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
         other => return Err(anyhow!("unknown partition mode {other:?}")),
     };
     let schedule = parse_schedule(a)?;
+    let (bw_scale, dp_mode, p2p_over_tp) = parse_exec_knobs(a)?;
     warn_schedule_fallback(schedule, &setup);
     let cm = CostModel::new(topo);
-    let r = simulate(
-        &cm,
-        &SimConfig { setup: setup.clone(), policy, partition, schedule },
-    );
+    let tables = CostTables::new(&setup, &cm, &build_layer_graph(&setup));
+    let mut cache = open_cache(a, &tables, &cm);
+    let cfg = SimConfig {
+        setup: setup.clone(),
+        policy,
+        partition,
+        schedule,
+        bw_scale,
+        dp_mode,
+        p2p_over_tp,
+    };
+    let (r, trace) = simulate_cached(&cm, &cfg, &tables, &mut cache);
+    close_cache(a, &cache)?;
     println!("{}", r.to_json().pretty());
     if a.has("gantt") {
-        use crate::sim::{render_gantt, run_schedule, StageTiming};
+        use crate::sim::{render_gantt, StageTiming};
+        // Scalar timings only feed the renderer's B-span split; the
+        // trace itself carries the executed two-stream timeline.
         let timings: Vec<StageTiming> = r
             .stages
             .iter()
@@ -190,8 +245,6 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
                 p2p: cm.comm.p2p_time(cm.memory.boundary_bytes(&setup)),
             })
             .collect();
-        let sched = schedule.build(setup.pp, setup.num_micro);
-        let trace = run_schedule(&timings, sched.as_ref(), policy.is_lynx());
         println!("{}", render_gantt(&timings, &trace, 110));
     }
     Ok(if r.oom { 1 } else { 0 })
@@ -241,9 +294,10 @@ fn cmd_partition(a: &Args) -> Result<i32> {
     let cm = CostModel::new(topo);
     let g = build_layer_graph(&setup);
     // One shared evaluation core for the baseline and both searches: the
-    // plan cache makes repeat (role, layers, in-flight) subproblems free.
+    // plan cache makes repeat (role, layers, in-flight) subproblems free
+    // — and spans invocations when --cache-dir is given.
     let tables = CostTables::new(&setup, &cm, &g);
-    let mut cache = PlanCache::new();
+    let mut cache = open_cache(a, &tables, &cm);
     let opts = SearchOptions { schedule: Some(schedule), ..Default::default() };
     let dp = dp_partition_result_cached(&tables, &mut cache, policy, &opts);
     let lx = lynx_partition_cached(&tables, &mut cache, policy, &opts);
@@ -283,6 +337,7 @@ fn cmd_partition(a: &Args) -> Result<i32> {
     } else {
         lx
     };
+    close_cache(a, &cache)?;
     Ok(if result.oom { 1 } else { 0 })
 }
 
@@ -309,6 +364,7 @@ fn cmd_figures(a: &Args) -> Result<i32> {
             "sp" => experiments::fig_sp(),
             "schedules" => experiments::schedule_matrix(quick),
             "search" => experiments::search_cost(quick),
+            "overlap" => experiments::overlap_sweep(quick),
             other => return Err(anyhow!("unknown figure {other:?}")),
         }]
     };
@@ -461,5 +517,86 @@ mod tests {
     #[test]
     fn bad_search_is_error() {
         assert!(run(&sv(&["partition", "--search", "annealing"])).is_err());
+    }
+
+    #[test]
+    fn schedule_fallback_warns_exactly_once_per_invocation() {
+        use crate::util::warn::reset_warning;
+        let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 6, 4, 8);
+        let ragged = ScheduleKind::Interleaved { chunks: 2 };
+        reset_warning("sched-interleaved-ragged");
+        assert!(warn_schedule_fallback(ragged, &setup), "first call must warn");
+        assert!(!warn_schedule_fallback(ragged, &setup), "second call must be silent");
+        assert!(!warn_schedule_fallback(ragged, &setup));
+        // Divisible shapes never warn.
+        let even = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+        reset_warning("sched-interleaved-ragged");
+        assert!(!warn_schedule_fallback(ragged, &even));
+    }
+
+    #[test]
+    fn simulate_accepts_exec_knobs() {
+        let code = run(&sv(&[
+            "simulate",
+            "--model",
+            "1.3B",
+            "--tp",
+            "2",
+            "--pp",
+            "4",
+            "--micro-batch",
+            "4",
+            "--policy",
+            "block",
+            "--bw",
+            "2.0",
+            "--dp-overlap",
+            "overlap",
+            "--p2p-over-tp",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn bad_bw_and_dp_are_errors() {
+        assert!(run(&sv(&["simulate", "--bw", "-1"])).is_err());
+        assert!(run(&sv(&["simulate", "--dp-overlap", "maybe"])).is_err());
+    }
+
+    #[test]
+    fn cache_dir_persists_across_invocations() {
+        let dir = std::env::temp_dir().join("lynx_cli_cache_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_str().unwrap().to_string();
+        let args = [
+            "simulate",
+            "--model",
+            "1.3B",
+            "--tp",
+            "2",
+            "--pp",
+            "4",
+            "--micro-batch",
+            "4",
+            "--policy",
+            "block",
+            "--cache-dir",
+            &dir_s,
+        ];
+        assert_eq!(run(&sv(&args)).unwrap(), 0);
+        // A plancache file exists after the cold run.
+        let files: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().to_string())
+            .collect();
+        assert!(
+            files.iter().any(|f| f.starts_with("plancache-") && f.ends_with(".json")),
+            "{files:?}"
+        );
+        // Warm run succeeds against the same directory.
+        assert_eq!(run(&sv(&args)).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

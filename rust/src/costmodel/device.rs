@@ -120,6 +120,18 @@ impl Topology {
     pub fn gpus(&self) -> usize {
         self.tp * self.pp
     }
+
+    /// Copy of the topology with every link's bus bandwidth scaled by
+    /// `k` (latency untouched) — the `--bw` execution-bandwidth sweep.
+    /// `k > 1` models a faster fabric (narrower comm windows), `k < 1` a
+    /// slower one.
+    pub fn with_bw_scale(&self, k: f64) -> Topology {
+        assert!(k.is_finite() && k > 0.0, "bandwidth scale must be positive");
+        let mut t = self.clone();
+        t.tp_link.bus_bw *= k;
+        t.pp_link.bus_bw *= k;
+        t
+    }
 }
 
 #[cfg(test)]

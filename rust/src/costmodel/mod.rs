@@ -38,6 +38,13 @@ impl CostModel {
         }
     }
 
+    /// Copy of the model with every link's bandwidth scaled by `k` —
+    /// the execution side of the `--bw` sweep (plans stay at the
+    /// original tables; only the executed comm widths change).
+    pub fn with_bw_scale(&self, k: f64) -> CostModel {
+        CostModel::new(self.topo.with_bw_scale(k))
+    }
+
     /// Execution time of one op (forward), seconds.
     pub fn op_time(&self, op: &Op) -> f64 {
         if op.is_comm() {

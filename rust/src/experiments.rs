@@ -724,6 +724,134 @@ pub fn schedule_matrix(quick: bool) -> FigureResult {
     }
 }
 
+// ------------------------------------------------ overlap validation sweep
+
+/// One cell of the planned-vs-achieved overlap sweep.
+#[derive(Debug, Clone)]
+pub struct OverlapRun {
+    pub model: &'static str,
+    pub micro_batch: usize,
+    pub schedule: ScheduleKind,
+    pub policy: PolicyKind,
+    /// Executed link-bandwidth multiplier (plans stay at 1.0).
+    pub bw_scale: f64,
+    pub report: SimReport,
+}
+
+/// Raw results behind `lynx figures --fig overlap` and `bench_overlap` /
+/// `BENCH_overlap.json`: a bandwidth sweep over every schedule with Lynx
+/// plans on a memory-pressured config (7B, batch 16, NVLink-4x4 — the
+/// regime where the planner actually fills the comm windows, Fig. 8).
+/// Plans are made once per (schedule, policy) at plan bandwidth; only
+/// the executed link widths move, so the sweep isolates **achieved**
+/// overlap against **planned**. The conservation gate
+/// (`achieved <= planned`, equality at `bw <= 1`) runs in
+/// `scripts/check.sh` over these rows.
+pub fn overlap_runs(quick: bool) -> Vec<OverlapRun> {
+    let scales: Vec<f64> =
+        if quick { vec![0.5, 1.0, 4.0] } else { vec![0.25, 0.5, 1.0, 2.0, 4.0, 8.0] };
+    let kinds: Vec<ScheduleKind> = if quick {
+        vec![ScheduleKind::OneFOneB, ScheduleKind::ZbH1, ScheduleKind::ZbV]
+    } else {
+        ScheduleKind::all()
+    };
+    let policies: Vec<PolicyKind> =
+        if quick { vec![PolicyKind::LynxHeu] } else { vec![PolicyKind::LynxHeu, PolicyKind::LynxOpt] };
+    let (model, mb) = ("7B", 16usize);
+    let cm = CostModel::new(Topology::nvlink(4, 4));
+    // Plans are bandwidth-invariant by design, and the plan cache keys
+    // on (role, layers, in-flight, policy): one evaluation core serves
+    // the whole sweep, so each (schedule, policy) plans once and every
+    // bw cell replays it (only the executed widths move).
+    let s0 = setup(model, 4, 4, mb);
+    let tables = CostTables::new(&s0, &cm, &build_layer_graph(&s0));
+    let mut cache = PlanCache::new();
+    let mut runs = Vec::new();
+    for &kind in &kinds {
+        for &policy in &policies {
+            for &bw in &scales {
+                let s = setup(model, 4, 4, mb);
+                let cfg = SimConfig::new(s, policy, PartitionMode::Dp)
+                    .with_schedule(kind)
+                    .with_bw(bw);
+                let (r, _) = crate::sim::simulate_cached(&cm, &cfg, &tables, &mut cache);
+                runs.push(OverlapRun {
+                    model,
+                    micro_batch: mb,
+                    schedule: kind,
+                    policy,
+                    bw_scale: bw,
+                    report: r,
+                });
+            }
+        }
+    }
+    runs
+}
+
+/// Planned-vs-achieved overlap across the bandwidth sweep: at plan
+/// bandwidth (and below) the engine hides everything the planner placed;
+/// faster executed links shrink the windows and the achieved share
+/// drops — the planner's static window widths become stale, which is
+/// exactly the gap this experiment measures.
+pub fn overlap_sweep(quick: bool) -> FigureResult {
+    let runs = overlap_runs(quick);
+    let mut rows = Vec::new();
+    let mut notes = Vec::new();
+    let mut conserved = true;
+    let mut full_at_plan_bw = true;
+    for r in &runs {
+        let planned = r.report.planned_overlap();
+        let achieved = r.report.achieved_overlap();
+        let absorbed: f64 = r.report.stages.iter().map(|s| s.absorbed_total).sum();
+        conserved &= achieved <= planned + 1e-9;
+        if r.bw_scale <= 1.0 + 1e-12 {
+            full_at_plan_bw &= (achieved - planned).abs() <= 1e-9;
+        }
+        rows.push(vec![
+            r.schedule.label().to_string(),
+            r.policy.label().to_string(),
+            format!("{:.2}", r.bw_scale),
+            if r.report.oom { "OOM".into() } else { format!("{:.3}", r.report.iteration_secs) },
+            format!("{:.2}", 1e3 * planned),
+            format!("{:.2}", 1e3 * achieved),
+            if planned > 0.0 {
+                format!("{:.0}%", 100.0 * achieved / planned)
+            } else {
+                "-".into()
+            },
+            format!("{:.2}", 1e3 * absorbed),
+            format!("{:.2}", 1e3 * r.report.total_exposed_paid()),
+        ]);
+    }
+    notes.push(format!(
+        "conservation (achieved <= planned on every cell): {conserved}; fully achieved at bw <= 1: {full_at_plan_bw}"
+    ));
+    notes.push(
+        "faster executed links shrink the comm windows below the plan's widths: the \
+         spilled remainder runs on the critical path (achieved < planned)"
+            .into(),
+    );
+    FigureResult {
+        id: "overlap",
+        title: "planned vs achieved recompute overlap across executed bandwidth (7B, batch 16, NVLink-4x4)"
+            .into(),
+        header: vec![
+            "schedule".into(),
+            "policy".into(),
+            "bw".into(),
+            "iter (s)".into(),
+            "planned ms".into(),
+            "achieved ms".into(),
+            "achieved/planned".into(),
+            "absorbed ms".into(),
+            "exposed ms".into(),
+        ],
+        rows,
+        notes,
+    }
+}
+
 // ------------------------------------------------- search-cost experiment
 
 /// One configuration of the planner search-cost sweep: the PR-1
@@ -893,5 +1021,6 @@ pub fn all_figures(quick: bool) -> Vec<FigureResult> {
         fig_sp(),
         schedule_matrix(quick),
         search_cost(quick),
+        overlap_sweep(quick),
     ]
 }

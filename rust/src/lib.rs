@@ -23,11 +23,16 @@
 //!   accounting (split-backward replay: B releases `1 − w`, the
 //!   weight-grad residual `w` is held until W) and the overlap windows
 //!   the Lynx planner fills with recomputation;
-//! * [`sim`] — a discrete-event cluster simulator that executes
-//!   (partition, plan) pairs under any [`sched`] schedule (including
-//!   V-shaped chunk placements) and produces the metrics behind every
-//!   figure in the paper's evaluation, plus per-schedule bubble ratios
-//!   and exact-vs-H1 peak-memory comparisons;
+//! * [`sim`] — a per-stage **two-resource** (compute stream + comm
+//!   stream) discrete-event simulator: work items expand into compute
+//!   slices interleaved with per-layer TP collectives, recomputation is
+//!   *executed* inside the collectives and pipeline stalls (reporting
+//!   planned vs achieved overlap per stage), p2p occupies a modeled
+//!   inter-stage link, and an optional DP gradient all-reduce closes
+//!   the iteration. Produces the metrics behind every figure in the
+//!   paper's evaluation, plus per-schedule bubble ratios,
+//!   exact-vs-H1 peak-memory comparisons and the `--bw` overlap
+//!   validation sweep;
 //! * [`profiler`] — analytic + PJRT wall-clock profiling (paper Fig. 4
 //!   "model profiler");
 //! * [`runtime`] — PJRT CPU runtime loading AOT-compiled HLO artifacts;

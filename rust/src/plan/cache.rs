@@ -1,4 +1,5 @@
-//! The shared plan cache: memoized `plan_stage` outcomes.
+//! The shared plan cache: memoized `plan_stage` outcomes, optionally
+//! persisted to disk across CLI invocations.
 //!
 //! The paper's identical-structure observation applies to the partition
 //! search itself: a stage's recomputation plan depends only on its
@@ -7,19 +8,28 @@
 //! old search memoized per `(n_layers, stage)` inside a single
 //! `lynx_partition` call; [`PlanCache`] promotes that into a first-class
 //! cache keyed `(role, n_layers, quantized exact in-flight, policy)`
-//! that is sound to
-//! share across an entire search, across the greedy and exact-DP
-//! searches, across pipeline schedules, and across policies in
+//! that is sound to share across an entire search, across the greedy and
+//! exact-DP searches, across pipeline schedules, and across policies in
 //! `experiments` — anything evaluated against the same
 //! `(graph, cost model, microbatch geometry)`.
 //!
-//! Hit/solve counters feed `BENCH_search.json` (planner search time is a
-//! first-class benchmark; see `benches/bench_table3_search_time.rs`).
+//! **Disk persistence** (`lynx … --cache-dir DIR`, ROADMAP item):
+//! [`PlanCache::with_disk`] loads `DIR/plancache-<fingerprint>.json`,
+//! where the fingerprint hashes everything a plan can depend on —
+//! model, topology, batch geometry, and the cost-model-derived op
+//! times/memory coefficients ([`PlanCache::fingerprint`]) — so a stale
+//! file can never be consulted for a different configuration.
+//! [`PlanCache::persist`] writes the merged cache back. Hit counters
+//! distinguish warm-from-disk hits ([`PlanCache::disk_hits`]) from
+//! in-process hits; `BENCH_search.json` reports both.
 
 use super::costeval::plan_stage;
 use super::tables::{CostTables, StageRole};
-use super::types::{PlanOutcome, PolicyKind, StageCtx};
+use super::types::{LayerPlan, Phase, PlanOutcome, PolicyKind, StageCtx, StagePlan};
+use crate::costmodel::CostModel;
+use crate::util::json::Json;
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 
 /// Everything a stage plan can depend on, given fixed
 /// `(setup, cost model, graph)`.
@@ -54,12 +64,22 @@ impl PlanKey {
     }
 }
 
-/// Memoized `plan_stage` outcomes with hit/solve accounting.
+#[derive(Debug, Clone)]
+struct Entry {
+    out: PlanOutcome,
+    from_disk: bool,
+}
+
+/// Memoized `plan_stage` outcomes with hit/solve accounting and optional
+/// disk persistence.
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    map: HashMap<PlanKey, PlanOutcome>,
+    map: HashMap<PlanKey, Entry>,
     hits: usize,
     solves: usize,
+    disk_hits: usize,
+    warm_entries: usize,
+    path: Option<PathBuf>,
 }
 
 impl PlanCache {
@@ -67,16 +87,115 @@ impl PlanCache {
         PlanCache::default()
     }
 
-    /// Cached lookup; counts a hit when present. Does **not** count a
-    /// miss — pair with [`insert_solved`](Self::insert_solved) after
-    /// actually running the planner (the threaded DP search computes
-    /// outside the cache lock).
-    pub fn lookup(&mut self, key: &PlanKey) -> Option<PlanOutcome> {
-        let out = self.map.get(key).cloned();
-        if out.is_some() {
-            self.hits += 1;
+    /// Fingerprint of everything a cached plan depends on: model name,
+    /// batch geometry, topology, and an FNV-1a hash over the
+    /// cost-model-derived tables (per-op times, memory coefficients).
+    /// Two invocations share cache entries iff their fingerprints match.
+    pub fn fingerprint(tables: &CostTables, cm: &CostModel) -> String {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut eat = |x: f64| {
+            for b in x.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        for &t in tables.times.iter().chain(tables.bwd_times.iter()) {
+            eat(t);
         }
-        out
+        eat(tables.usable_memory);
+        eat(tables.static_per_layer);
+        eat(tables.static_embedding);
+        eat(tables.boundary_bytes);
+        eat(tables.store_all_bytes);
+        eat(tables.w_residual_frac);
+        let s = &tables.setup;
+        format!(
+            "{}-tp{}-pp{}-mb{}x{}-seq{}{}-{}-{h:016x}",
+            s.model.name,
+            s.tp,
+            s.pp,
+            s.micro_batch,
+            s.num_micro,
+            s.seq,
+            if s.sequence_parallel { "-sp" } else { "" },
+            cm.topo.name,
+        )
+    }
+
+    /// Cache file path for a fingerprint under `dir`.
+    pub fn disk_path(dir: &Path, fingerprint: &str) -> PathBuf {
+        dir.join(format!("plancache-{fingerprint}.json"))
+    }
+
+    /// Open a disk-backed cache: load `dir/plancache-<fingerprint>.json`
+    /// when present (a corrupt or mismatched file is ignored — the cache
+    /// just starts cold), and remember the path for [`Self::persist`].
+    pub fn with_disk(dir: &Path, fingerprint: &str) -> PlanCache {
+        let path = Self::disk_path(dir, fingerprint);
+        let mut cache = PlanCache { path: Some(path.clone()), ..PlanCache::default() };
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            return cache;
+        };
+        let Ok(doc) = Json::parse(&text) else {
+            crate::util::warn::warn_once(
+                "plancache-corrupt",
+                &format!("ignoring corrupt plan cache {}", path.display()),
+            );
+            return cache;
+        };
+        if doc.get("fingerprint").and_then(|f| f.as_str()) != Some(fingerprint) {
+            return cache;
+        }
+        let Some(entries) = doc.get("entries").and_then(|e| e.as_arr()) else {
+            return cache;
+        };
+        for e in entries {
+            if let Some((key, out)) = parse_entry(e) {
+                cache.map.insert(key, Entry { out, from_disk: true });
+            }
+        }
+        cache.warm_entries = cache.map.len();
+        cache
+    }
+
+    /// Write the cache to its disk path (no-op for in-memory caches).
+    pub fn persist(&self) -> std::io::Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let fingerprint = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .and_then(|s| s.strip_prefix("plancache-"))
+            .unwrap_or("")
+            .to_string();
+        let mut entries = Json::Arr(vec![]);
+        let mut keys: Vec<&PlanKey> = self.map.keys().collect();
+        keys.sort_by_key(|k| (k.role.label(), k.n_layers, k.n_batch_q, k.policy.label()));
+        for key in keys {
+            entries.push(dump_entry(key, &self.map[key].out));
+        }
+        let mut doc = Json::obj();
+        doc.set("version", Json::from(1usize))
+            .set("fingerprint", Json::from(fingerprint))
+            .set("entries", entries);
+        std::fs::write(path, doc.pretty())
+    }
+
+    /// Cached lookup; counts a hit when present (and a disk hit when the
+    /// entry was warm-loaded). Does **not** count a miss — pair with
+    /// [`insert_solved`](Self::insert_solved) after actually running the
+    /// planner (the threaded DP search computes outside the cache lock).
+    pub fn lookup(&mut self, key: &PlanKey) -> Option<PlanOutcome> {
+        let entry = self.map.get(key)?;
+        self.hits += 1;
+        if entry.from_disk {
+            self.disk_hits += 1;
+        }
+        Some(entry.out.clone())
     }
 
     /// Record a freshly solved outcome and return the canonical entry.
@@ -85,7 +204,11 @@ impl PlanCache {
     /// call counts one real solve.
     pub fn insert_solved(&mut self, key: PlanKey, outcome: PlanOutcome) -> PlanOutcome {
         self.solves += 1;
-        self.map.entry(key).or_insert(outcome).clone()
+        self.map
+            .entry(key)
+            .or_insert(Entry { out: outcome, from_disk: false })
+            .out
+            .clone()
     }
 
     /// Plan `ctx` under `policy` through the cache.
@@ -117,6 +240,16 @@ impl PlanCache {
         self.hits
     }
 
+    /// Hits served by entries that were warm-loaded from disk.
+    pub fn disk_hits(&self) -> usize {
+        self.disk_hits
+    }
+
+    /// Entries that arrived from disk at construction.
+    pub fn warm_entries(&self) -> usize {
+        self.warm_entries
+    }
+
     /// Planner invocations (cache misses) since construction.
     pub fn solves(&self) -> usize {
         self.solves
@@ -139,17 +272,99 @@ impl PlanCache {
     }
 }
 
+fn dump_entry(key: &PlanKey, out: &PlanOutcome) -> Json {
+    let mut layers = Json::Arr(vec![]);
+    for lp in &out.plan.layers {
+        let mut lo = Json::obj();
+        lo.set(
+            "retain",
+            Json::Arr(lp.retain.iter().map(|&r| Json::from(r)).collect()),
+        )
+        .set(
+            "phase",
+            Json::Arr(
+                lp.phase
+                    .iter()
+                    .map(|p| Json::from(p.map(|p| p as i64).unwrap_or(-1)))
+                    .collect(),
+            ),
+        );
+        layers.push(lo);
+    }
+    let mut e = Json::obj();
+    e.set("role", Json::from(key.role.label()))
+        .set("n_layers", Json::from(key.n_layers))
+        .set("n_batch_q", Json::from(key.n_batch_q as i64))
+        .set("n_batch_h1_q", Json::from(key.n_batch_h1_q as i64))
+        .set("policy", Json::from(key.policy.label()))
+        .set("search_secs", Json::from(out.search_secs))
+        .set("oom", Json::from(out.oom))
+        .set("layers", layers);
+    e
+}
+
+fn parse_entry(e: &Json) -> Option<(PlanKey, PlanOutcome)> {
+    let key = PlanKey {
+        role: StageRole::parse(e.get("role")?.as_str()?)?,
+        n_layers: e.get("n_layers")?.as_usize()?,
+        n_batch_q: u64::try_from(e.get("n_batch_q")?.as_i64()?).ok()?,
+        n_batch_h1_q: u64::try_from(e.get("n_batch_h1_q")?.as_i64()?).ok()?,
+        policy: PolicyKind::parse(e.get("policy")?.as_str()?)?,
+    };
+    let mut layers = Vec::new();
+    for lo in e.get("layers")?.as_arr()? {
+        let retain: Vec<bool> = lo
+            .get("retain")?
+            .as_arr()?
+            .iter()
+            .map(|r| r.as_bool())
+            .collect::<Option<Vec<bool>>>()?;
+        let phase: Vec<Option<Phase>> = lo
+            .get("phase")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let i = p.as_i64()?;
+                Some(if (0..=4).contains(&i) {
+                    Some(Phase::from_index(i as usize))
+                } else {
+                    None
+                })
+            })
+            .collect::<Option<Vec<Option<Phase>>>>()?;
+        if retain.len() != phase.len() {
+            return None;
+        }
+        layers.push(LayerPlan { retain, phase });
+    }
+    if layers.len() != key.n_layers {
+        return None;
+    }
+    Some((
+        key,
+        PlanOutcome {
+            plan: StagePlan { layers },
+            search_secs: e.get("search_secs")?.as_f64()?,
+            oom: e.get("oom")?.as_bool()?,
+        },
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::costmodel::{CostModel, Topology};
     use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
 
-    fn tables() -> CostTables {
+    fn core() -> (CostTables, CostModel) {
         let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
         let cm = CostModel::new(Topology::nvlink(2, 4));
         let g = build_layer_graph(&setup);
-        CostTables::new(&setup, &cm, &g)
+        (CostTables::new(&setup, &cm, &g), cm)
+    }
+
+    fn tables() -> CostTables {
+        core().0
     }
 
     #[test]
@@ -161,6 +376,7 @@ mod tests {
         let b = c.get_or_plan(&t, &ctx, PolicyKind::Full);
         assert_eq!(c.solves(), 1);
         assert_eq!(c.hits(), 1);
+        assert_eq!(c.disk_hits(), 0);
         assert_eq!(a.plan.layers.len(), b.plan.layers.len());
         assert!((c.hit_rate() - 0.5).abs() < 1e-12);
     }
@@ -194,5 +410,89 @@ mod tests {
         c.get_or_plan(&t, &ctx, PolicyKind::Selective);
         assert_eq!(c.solves(), 2);
         assert_eq!(c.hits(), 0);
+    }
+
+    #[test]
+    fn disk_roundtrip_preserves_plans_and_counts_warm_hits() {
+        let (t, cm) = core();
+        let dir = std::env::temp_dir().join("lynx_plancache_test_roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let fp = PlanCache::fingerprint(&t, &cm);
+
+        // Cold run: solve a few stages, persist.
+        let mut cold = PlanCache::with_disk(&dir, &fp);
+        assert_eq!(cold.warm_entries(), 0);
+        for stage in 0..4 {
+            let ctx = t.build_ctx_1f1b(stage, 8);
+            cold.get_or_plan(&t, &ctx, PolicyKind::Block);
+            cold.get_or_plan(&t, &ctx, PolicyKind::LynxHeu);
+        }
+        let solved = cold.solves();
+        assert!(solved > 0);
+        cold.persist().unwrap();
+        assert!(PlanCache::disk_path(&dir, &fp).exists());
+
+        // Warm run: same configuration → every plan comes from disk.
+        let mut warm = PlanCache::with_disk(&dir, &fp);
+        assert_eq!(warm.warm_entries(), cold.len());
+        for stage in 0..4 {
+            let ctx = t.build_ctx_1f1b(stage, 8);
+            let fresh = crate::plan::plan_stage(PolicyKind::Block, &t, &ctx);
+            let cached = warm.get_or_plan(&t, &ctx, PolicyKind::Block);
+            assert_eq!(cached.oom, fresh.oom, "stage {stage}");
+            assert_eq!(cached.plan.layers.len(), fresh.plan.layers.len());
+            for (a, b) in cached.plan.layers.iter().zip(&fresh.plan.layers) {
+                assert_eq!(a.retain, b.retain, "stage {stage}");
+                assert_eq!(a.phase, b.phase, "stage {stage}");
+            }
+        }
+        assert_eq!(warm.solves(), 0, "warm run must not re-solve");
+        assert_eq!(warm.disk_hits(), warm.hits());
+        assert!(warm.disk_hits() > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatched_fingerprint_starts_cold() {
+        let (t, cm) = core();
+        let dir = std::env::temp_dir().join("lynx_plancache_test_mismatch");
+        let _ = std::fs::remove_dir_all(&dir);
+        let fp = PlanCache::fingerprint(&t, &cm);
+        let mut c = PlanCache::with_disk(&dir, &fp);
+        let ctx = t.build_ctx_1f1b(0, 8);
+        c.get_or_plan(&t, &ctx, PolicyKind::Full);
+        c.persist().unwrap();
+        // Tamper: rename the file to a different fingerprint — the
+        // stored fingerprint no longer matches and must be ignored.
+        let other = PlanCache::disk_path(&dir, "other-fingerprint");
+        std::fs::rename(PlanCache::disk_path(&dir, &fp), &other).unwrap();
+        let warm = PlanCache::with_disk(&dir, "other-fingerprint");
+        assert_eq!(warm.warm_entries(), 0, "mismatched fingerprint must not load");
+        // Corrupt file: also ignored, cache starts cold.
+        std::fs::write(PlanCache::disk_path(&dir, &fp), "{not json").unwrap();
+        let corrupt = PlanCache::with_disk(&dir, &fp);
+        assert_eq!(corrupt.warm_entries(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_tracks_the_configuration() {
+        let (t, cm) = core();
+        let fp1 = PlanCache::fingerprint(&t, &cm);
+        // Different microbatch geometry → different fingerprint.
+        let setup2 = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 8, 8);
+        let g2 = build_layer_graph(&setup2);
+        let t2 = CostTables::new(&setup2, &cm, &g2);
+        let fp2 = PlanCache::fingerprint(&t2, &cm);
+        assert_ne!(fp1, fp2);
+        // Different topology (cost model) → different fingerprint.
+        let cm3 = CostModel::new(Topology::pcie(2, 4));
+        let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+        let g3 = build_layer_graph(&setup);
+        let t3 = CostTables::new(&setup, &cm3, &g3);
+        let fp3 = PlanCache::fingerprint(&t3, &cm3);
+        assert_ne!(fp1, fp3);
+        // Deterministic.
+        assert_eq!(fp1, PlanCache::fingerprint(&t, &cm));
     }
 }

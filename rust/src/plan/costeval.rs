@@ -8,6 +8,13 @@
 //! that path walks `g.ops`. The free functions here are one-off
 //! conveniences (CLI inspection, tests) that build throwaway tables
 //! internally.
+//!
+//! [`StageCost`] is the *planner-side* scalar view of a stage; the
+//! runner expands the same plan into the per-layer segment lists
+//! (`CostTables::fwd_layer_segments` / `bwd_layer_segments`) the event
+//! engine executes, so `exposed_recompute` / `overlapped_recompute`
+//! here are exactly the engine's absorbable-exposed input and planned
+//! window overlap.
 
 use super::tables::CostTables;
 use super::types::{PlanOutcome, PolicyKind, StageCtx, StagePlan};

@@ -178,13 +178,9 @@ fn warm_starts(
         if opts.overlap {
             // Window packing in topological order. An op may enter window
             // t only if every dep is retained or scheduled in a phase <= t.
-            let window_caps = [
-                if ctx.is_last_stage() { 0.0 } else { ctx.fwd_window[0] },
-                if ctx.is_last_stage() { 0.0 } else { ctx.fwd_window[1] },
-                ctx.bwd_window[0],
-                ctx.bwd_window[1],
-            ];
-            let mut remaining = window_caps;
+            // Capacities are the same comm-segment widths the event
+            // engine executes (StageCtx::window_caps, Opt 2 included).
+            let mut remaining = ctx.window_caps();
             for i in 0..n {
                 if greedy.retain[i] || g.ops[i].is_comm() {
                     continue;
@@ -292,6 +288,9 @@ fn build_ilp(
     let n = g.ops.len();
     let mut m = Model::new();
 
+    // Shared window capacities (StageCtx::window_caps) — identical to
+    // the comm segments the event engine executes. Note Opt 2 is handled
+    // by `phase_allowed` below, so the ILP keeps the raw widths here.
     let window_time = |t: usize| -> f64 {
         match Phase::from_index(t) {
             Phase::FwdComm1 => ctx.fwd_window[0],

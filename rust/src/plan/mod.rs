@@ -11,7 +11,7 @@
 //! * [`costeval`] — the training cost model of Fig. 4.
 //! * [`tables`] / [`cache`] — the memoized evaluation core.
 //!
-//! # Evaluation-core architecture (CostTables + PlanCache)
+//! # Evaluation-core architecture (CostTables + PlanCache + segments)
 //!
 //! Planner search cost is a first-class concern (paper Table 3: the
 //! heuristic finds plans in seconds where op-granular MILP takes hours),
@@ -30,8 +30,24 @@
 //!    dependency set of a stage plan. One cache is soundly shared across
 //!    a whole partition search, across the greedy and exact-DP searches,
 //!    across pipeline schedules, and across policies (e.g. the
-//!    `experiments` sweeps); its hit/solve counters feed
-//!    `BENCH_search.json`.
+//!    `experiments` sweeps) — and, with `--cache-dir`, across CLI
+//!    invocations: [`cache::PlanCache::with_disk`] keys the persisted
+//!    file on a `(model, topology, batch-geometry, cost-model)`
+//!    fingerprint, and its counters separate warm-from-disk hits from
+//!    in-process hits in `BENCH_search.json`.
+//!
+//! # Planner ↔ engine contract (the segment model)
+//!
+//! The window capacities the planners pack recompute into
+//! ([`types::StageCtx::window_caps`], paper Eq. 15 + Opt 2) are the
+//! *same* per-layer comm-segment widths the two-resource event engine
+//! executes ([`tables::CostTables::fwd_layer_segments`] /
+//! [`tables::CostTables::bwd_layer_segments`] →
+//! `sim::engine::run_schedule_segments`). At plan bandwidth the engine
+//! therefore achieves exactly the overlap the planner assumed
+//! (`achieved_overlap == planned_overlap`, property-tested); under a
+//! `--bw` sweep the executed widths move while the plan stays fixed, and
+//! the report measures how much of the planned overlap survives.
 //!
 //! On top of the core, [`partition::lynx_partition_cached`] re-evaluates
 //! only the two stages a candidate move touches (skipping probes whose

@@ -19,6 +19,12 @@
 //! Search cost scales as `levels × ILP + MILP(layers × levels)`, so the
 //! OPT-vs-HEU search-time gap of Table 3 is reproduced structurally; the
 //! returned plan is a true global optimum over the generated menu.
+//!
+//! Window capacities flow in through the per-layer ILP
+//! ([`StageCtx::window_caps`] semantics: Eq. 15 widths, Opt-2 forward
+//! ban), so OPT's phase assignments execute 1:1 as comm-segment
+//! recompute in the event engine — the same planner↔engine contract the
+//! `plan` module docs describe.
 
 use super::heu::{retain_order, HeuOptions};
 use super::tables::CostTables;

@@ -20,7 +20,7 @@ use super::costeval::StageCost;
 use super::types::{StageCtx, StagePlan};
 use crate::costmodel::CostModel;
 use crate::graph::{ComputeKind, LayerGraph, OpKind, TrainSetup};
-use crate::sched::PipelineSchedule;
+use crate::sched::{PipelineSchedule, Segment};
 
 /// The role a stage plays in the pipeline — everything a recomputation
 /// plan can depend on besides `(n_layers, n_batch)`.
@@ -54,6 +54,26 @@ impl StageRole {
 
     pub fn is_last(&self) -> bool {
         matches!(self, StageRole::Last | StageRole::Solo)
+    }
+
+    /// Stable name, used by the disk-backed plan cache.
+    pub fn label(&self) -> &'static str {
+        match self {
+            StageRole::First => "first",
+            StageRole::Middle => "middle",
+            StageRole::Last => "last",
+            StageRole::Solo => "solo",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<StageRole> {
+        Some(match s {
+            "first" => StageRole::First,
+            "middle" => StageRole::Middle,
+            "last" => StageRole::Last,
+            "solo" => StageRole::Solo,
+            _ => return None,
+        })
     }
 }
 
@@ -229,6 +249,53 @@ impl CostTables {
     /// Σ out_bytes over the op index range `lo..hi` in O(1).
     pub fn out_bytes_range(&self, lo: usize, hi: usize) -> f64 {
         self.out_bytes_prefix[hi] - self.out_bytes_prefix[lo]
+    }
+
+    /// One layer's **forward segment pattern**: the op walk with compute
+    /// folded between the two TP all-reduces, under per-op times
+    /// `times`. Pass [`Self::times`] for the plan-bandwidth layout (its
+    /// comm widths are exactly [`Self::window`], which is what the
+    /// planners budget against via `StageCtx::fwd_window`) or an
+    /// execution cost model's times for a bandwidth sweep — planner and
+    /// engine consume the *same* segment model, only the executed widths
+    /// move.
+    pub fn fwd_layer_segments(&self, times: &[f64]) -> Vec<Segment> {
+        debug_assert_eq!(times.len(), self.g.ops.len());
+        let mut segs = Vec::with_capacity(5);
+        let mut acc = 0.0f64;
+        for (i, op) in self.g.ops.iter().enumerate() {
+            if op.is_comm() {
+                segs.push(Segment::comp(acc));
+                acc = 0.0;
+                segs.push(Segment::comm(times[i]));
+            } else {
+                acc += times[i];
+            }
+        }
+        segs.push(Segment::comp(acc));
+        segs
+    }
+
+    /// One layer's **input-grad (B) segment pattern**: the reversed op
+    /// walk with the mirrored all-reduces, under per-op backward times
+    /// `bwd_times`; compute segments scale by `frac` (the B share of a
+    /// split backward, 1.0 when combined — the dX path carries all the
+    /// TP comm, the deferred dW carries none).
+    pub fn bwd_layer_segments(&self, bwd_times: &[f64], frac: f64) -> Vec<Segment> {
+        debug_assert_eq!(bwd_times.len(), self.g.ops.len());
+        let mut segs = Vec::with_capacity(5);
+        let mut acc = 0.0f64;
+        for (i, op) in self.g.ops.iter().enumerate().rev() {
+            if op.is_comm() {
+                segs.push(Segment::comp(acc * frac));
+                acc = 0.0;
+                segs.push(Segment::comm(bwd_times[i]));
+            } else {
+                acc += bwd_times[i];
+            }
+        }
+        segs.push(Segment::comp(acc * frac));
+        segs
     }
 
     /// In-flight microbatches of `stage` under the paper's 1F1B closed
@@ -575,6 +642,43 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn layer_segments_conserve_the_scalar_sums() {
+        // The segment expansion is a *refinement* of the per-layer
+        // scalars: compute + comm segments sum back to fwd_layer /
+        // bwd_layer, and the comm widths are exactly the planner windows.
+        let (setup, cm, g) = fixture();
+        let t = CostTables::new(&setup, &cm, &g);
+        let fwd = t.fwd_layer_segments(&t.times);
+        let total: f64 = fwd.iter().map(|s| s.dur).sum();
+        assert!((total - t.fwd_layer).abs() < 1e-12);
+        let widths: Vec<f64> =
+            fwd.iter().filter(|s| s.is_comm()).map(|s| s.dur).collect();
+        assert_eq!(widths.len(), 2);
+        assert!((widths[0] - t.window[0]).abs() < 1e-15);
+        assert!((widths[1] - t.window[1]).abs() < 1e-15);
+        // Backward: reversed walk, comm mirrored in [w2, w1] order.
+        let bwd = t.bwd_layer_segments(&t.bwd_times, 1.0);
+        let btotal: f64 = bwd.iter().map(|s| s.dur).sum();
+        assert!((btotal - t.bwd_layer).abs() < 1e-12);
+        let bwidths: Vec<f64> =
+            bwd.iter().filter(|s| s.is_comm()).map(|s| s.dur).collect();
+        assert_eq!(bwidths.len(), 2);
+        // The B fraction scales only the compute segments.
+        let half = t.bwd_layer_segments(&t.bwd_times, 0.5);
+        let hcomp: f64 = half.iter().filter(|s| !s.is_comm()).map(|s| s.dur).sum();
+        let fcomp: f64 = bwd.iter().filter(|s| !s.is_comm()).map(|s| s.dur).sum();
+        assert!((hcomp - 0.5 * fcomp).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_role_label_roundtrip() {
+        for role in [StageRole::First, StageRole::Middle, StageRole::Last, StageRole::Solo] {
+            assert_eq!(StageRole::parse(role.label()), Some(role));
+        }
+        assert_eq!(StageRole::parse("edge"), None);
     }
 
     #[test]

@@ -212,6 +212,23 @@ impl StageCtx {
         self.stage + 1 == self.num_stages
     }
 
+    /// Per-phase overlap-window capacities
+    /// `[FwdComm1, FwdComm2, BwdComm1, BwdComm2]` in seconds — the same
+    /// collective widths the event engine executes as comm segments
+    /// (paper Eq. 15). Opt 2 bans the forward windows on the last stage
+    /// (its fwd output feeds the loss immediately), so they report 0
+    /// capacity there. Both Lynx planners pack against exactly this
+    /// array.
+    pub fn window_caps(&self) -> [f64; 4] {
+        let last = self.is_last_stage();
+        [
+            if last { 0.0 } else { self.fwd_window[0] },
+            if last { 0.0 } else { self.fwd_window[1] },
+            self.bwd_window[0],
+            self.bwd_window[1],
+        ]
+    }
+
     /// Constant memory consumed by boundary checkpoints. Boundaries feed
     /// the backward/recompute pass and are released at B, so they scale
     /// by the B-freed in-flight count.
@@ -329,6 +346,21 @@ impl PolicyKind {
 
     pub fn is_lynx(&self) -> bool {
         matches!(self, PolicyKind::LynxHeu | PolicyKind::LynxOpt)
+    }
+
+    /// Inverse of [`Self::label`] (canonical names only; the CLI layers
+    /// its aliases on top). Used by the disk-backed plan cache.
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        Some(match s {
+            "full" => PolicyKind::Full,
+            "selective" => PolicyKind::Selective,
+            "uniform" => PolicyKind::Uniform,
+            "block" => PolicyKind::Block,
+            "checkmate" => PolicyKind::Checkmate,
+            "lynx-heu" => PolicyKind::LynxHeu,
+            "lynx-opt" => PolicyKind::LynxOpt,
+            _ => return None,
+        })
     }
 }
 
@@ -454,6 +486,41 @@ mod tests {
         assert!((full.activation_bytes(&g, &ctx) - full_0 - expect).abs() < 1.0);
         assert!((store.activation_bytes(&g, &ctx) - store_0 - expect).abs() < 1.0);
         assert_eq!(ctx.w_residual_units(), 1.5);
+    }
+
+    #[test]
+    fn window_caps_ban_fwd_windows_on_the_last_stage() {
+        let mk = |stage: usize| StageCtx {
+            n_layers: 4,
+            n_batch: 2,
+            n_batch_frac: 2.0,
+            n_batch_frac_h1: 2.0,
+            stage,
+            num_stages: 4,
+            mem_budget: 1.0,
+            static_mem: 0.0,
+            fwd_window: [0.1, 0.2],
+            bwd_window: [0.3, 0.4],
+            boundary_bytes: 0.0,
+        };
+        assert_eq!(mk(1).window_caps(), [0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(mk(3).window_caps(), [0.0, 0.0, 0.3, 0.4]);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [
+            PolicyKind::Full,
+            PolicyKind::Selective,
+            PolicyKind::Uniform,
+            PolicyKind::Block,
+            PolicyKind::Checkmate,
+            PolicyKind::LynxHeu,
+            PolicyKind::LynxOpt,
+        ] {
+            assert_eq!(PolicyKind::parse(p.label()), Some(p));
+        }
+        assert_eq!(PolicyKind::parse("heuristic"), None);
     }
 
     #[test]

@@ -33,6 +33,13 @@
 //! start and duration, which the Lynx planner consumes to slot
 //! recomputation off the critical path.
 //!
+//! For execution, every `WorkItem` expands into [`Segment`]s — compute
+//! slices interleaved with TP-collective slices (the per-layer comm
+//! widths come from `plan::CostTables`, not pre-summed scalars) — which
+//! the two-resource event engine schedules onto a per-stage compute
+//! stream and comm stream, so planned window recomputation is *executed*
+//! inside the collectives rather than assumed hidden.
+//!
 //! Cross-stage dependencies follow the schedule's [`Placement`] of model
 //! chunks onto *virtual stages* ([`fwd_upstream_of`] /
 //! [`bwd_upstream_of`]): forwards flow up the virtual chain, input-grad
@@ -55,6 +62,42 @@ pub use onefoneb::{cooldown_start, onefoneb_items, OneFOneB};
 pub use zbh1::ZbH1;
 pub use zbh2::ZbH2;
 pub use zbv::ZbV;
+
+/// Kind of one sub-segment a [`WorkItem`] expands into: a compute slice
+/// (occupies the stage's compute stream) or a TP-collective slice
+/// (occupies the comm stream). The two-resource event engine
+/// ([`crate::sim::engine::run_schedule_segments`]) executes these
+/// interleaved, so recomputation can run on the compute stream *inside*
+/// a collective instead of being analytically subtracted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegKind {
+    /// Compute slice (matmuls, norms, recompute).
+    Comp,
+    /// TP-collective slice (all-reduce wire time).
+    Comm,
+}
+
+/// One sub-segment of a work item: kind × duration (seconds, whole-stage
+/// per-microbatch; the engine divides by the schedule's chunk count).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub kind: SegKind,
+    pub dur: f64,
+}
+
+impl Segment {
+    pub fn comp(dur: f64) -> Segment {
+        Segment { kind: SegKind::Comp, dur }
+    }
+
+    pub fn comm(dur: f64) -> Segment {
+        Segment { kind: SegKind::Comm, dur }
+    }
+
+    pub fn is_comm(&self) -> bool {
+        self.kind == SegKind::Comm
+    }
+}
 
 /// Kind of one unit of stage work.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

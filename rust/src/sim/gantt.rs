@@ -2,19 +2,23 @@
 //!
 //! Turns a [`super::engine::PipelineTrace`] into the familiar
 //! pipeline-parallelism diagram (paper Fig. 1(b) / Fig. 5) for any
-//! schedule: one row per (stage, chunk) — interleaved schedules get one
-//! row per hosted virtual chunk — with `F`/`B` cells per microbatch,
-//! `w` where a ZB-style schedule runs deferred weight-grad work, `r`
-//! where exposed recomputation runs in the critical path, and `·` for
-//! idle. Used by `lynx simulate --gantt` and the quickstart docs.
+//! schedule, now with **both streams** rendered: one row per
+//! (stage, chunk) for the compute stream — `F`/`B` cells per microbatch,
+//! `w` for deferred weight-grad, `+` where absorbed recompute filled a
+//! stall (distinct from `r`, exposed recompute paid on the critical
+//! path), `·` for idle — plus a `stage<N>.c` comm-stream row whenever
+//! the trace carries comm spans: `c` for TP collectives, `p` for p2p
+//! wire time serialized onto the stream, `g` for the DP gradient
+//! all-reduce. Used by `lynx simulate --gantt` and the quickstart docs.
 
-use super::engine::{PipelineTrace, StageTiming};
+use super::engine::{CommTag, PipelineTrace, StageTiming};
 use crate::sched::WorkKind;
 
-/// Render the trace as one text row per (stage, chunk), `cols` characters
-/// wide. `timings` must be the inputs the trace was produced from (used
-/// to split B spans into recompute + backward segments); the schedule
-/// shape is carried by the trace itself.
+/// Render the trace as one text row per (stage, chunk) — plus a comm row
+/// per stage when the trace has comm spans — `cols` characters wide.
+/// `timings` must be the scalar inputs the trace's stages were costed
+/// from (used to split B spans into recompute + backward segments); the
+/// schedule shape is carried by the trace itself.
 pub fn render_gantt(timings: &[StageTiming], trace: &PipelineTrace, cols: usize) -> String {
     let p = timings.len();
     let v = trace.num_chunks;
@@ -35,11 +39,19 @@ pub fn render_gantt(timings: &[StageTiming], trace: &PipelineTrace, cols: usize)
             match item.kind {
                 WorkKind::Fwd => paint(row, start, end, fwd_char(item.micro), scale),
                 WorkKind::Bwd => {
-                    // Exposed/absorbed recompute (if any) precedes the
-                    // backward proper; mark it with 'r'.
-                    let bwd_start = end - b_dur;
-                    if bwd_start > start + 1e-12 {
-                        paint(row, start, bwd_start, 'r', scale);
+                    // Stall-absorbed recompute ('+') precedes the exposed
+                    // remainder ('r'); the backward proper closes the
+                    // span. `b_dur` is the plan-bandwidth scalar, so an
+                    // executed span (bw sweep, window spill) can be
+                    // shorter than it — clamp the split into the span so
+                    // glyphs never bleed over neighbouring items.
+                    let absorb = trace.item_absorb[s][k];
+                    let bwd_start = (end - b_dur).clamp(start + absorb, end);
+                    if absorb > 1e-12 {
+                        paint(row, start, (start + absorb).min(bwd_start), '+', scale);
+                    }
+                    if bwd_start > start + absorb + 1e-12 {
+                        paint(row, start + absorb, bwd_start, 'r', scale);
                     }
                     paint(row, bwd_start, end, bwd_char(item.micro), scale);
                 }
@@ -55,10 +67,27 @@ pub fn render_gantt(timings: &[StageTiming], trace: &PipelineTrace, cols: usize)
             out.extend(row);
             out.push_str("|\n");
         }
+        // The comm stream, when the trace was produced by the segment
+        // engine (the scalar wrapper leaves it empty).
+        if !trace.comm_spans[s].is_empty() {
+            let mut crow = vec!['·'; cols];
+            for cs in &trace.comm_spans[s] {
+                let ch = match cs.tag {
+                    CommTag::Tp => 'c',
+                    CommTag::P2p => 'p',
+                    CommTag::Dp => 'g',
+                };
+                paint(&mut crow, cs.start, cs.end, ch, scale);
+            }
+            out.push_str(&format!("stage{s}.c|"));
+            out.extend(crow);
+            out.push_str("|\n");
+        }
     }
     out.push_str(
         "        F/B = fwd/bwd (digit = microbatch mod 10, letter = bwd), \
-         w = weight-grad, r = exposed recompute, · = idle\n",
+         w = weight-grad, + = absorbed recompute, r = exposed recompute, \
+         · = idle; comm rows: c = TP collective, p = p2p wire, g = DP sync\n",
     );
     out
 }
@@ -86,8 +115,10 @@ fn paint(row: &mut [char], start: f64, end: f64, c: char, scale: f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::{Interleaved1F1B, ZbH1};
-    use crate::sim::engine::{run_pipeline, run_schedule};
+    use crate::sched::{Interleaved1F1B, OneFOneB, Segment, ZbH1};
+    use crate::sim::engine::{
+        run_pipeline, run_schedule, run_schedule_segments, LinkCfg, StageSegments,
+    };
 
     fn uniform(p: usize, fwd: f64, bwd: f64, exposed: f64) -> Vec<StageTiming> {
         (0..p).map(|_| StageTiming { fwd, bwd, exposed, p2p: 0.0 }).collect()
@@ -143,5 +174,49 @@ mod tests {
         let tr = run_schedule(&t, &sched, false);
         let g = render_gantt(&t, &tr, 120);
         assert!(g.lines().skip(1).take(4).any(|l| l.contains('w')), "{g}");
+    }
+
+    #[test]
+    fn golden_absorbed_vs_exposed_glyphs() {
+        // 2 stages × 2 microbatches, f=b=1, exposed 0.5, lynx absorption:
+        // stage 0 absorbs its recompute into the dy stalls ('+'), stage 1
+        // has no stall and pays it exposed ('r'). Spans are round
+        // numbers, so the render is byte-exact.
+        let t = uniform(2, 1.0, 1.0, 0.5);
+        let tr = run_pipeline(&t, 2, true);
+        assert!((tr.makespan - 7.0).abs() < 1e-12, "makespan {}", tr.makespan);
+        let g = render_gantt(&t, &tr, 70);
+        let lines: Vec<&str> = g.lines().collect();
+        assert_eq!(
+            lines[1],
+            "stage0 |00000000001111111111··········+++++aaaaaaaaaa··········+++++bbbbbbbbbb|",
+            "{g}"
+        );
+        assert_eq!(
+            lines[2],
+            "stage1 |··········0000000000rrrrraaaaaaaaaa1111111111rrrrrbbbbbbbbbb··········|",
+            "{g}"
+        );
+    }
+
+    #[test]
+    fn golden_comm_row_renders_the_second_stream() {
+        // One stage, one microbatch, a hand-built segment item: compute
+        // [0,1), a TP collective [1,2) on the comm stream, backward
+        // [2,4). The comm row must show exactly that collective.
+        let segs = vec![StageSegments {
+            fwd: vec![Segment::comp(1.0), Segment::comm(1.0)],
+            bwd: vec![Segment::comp(2.0)],
+            ..StageSegments::default()
+        }];
+        let sched = OneFOneB::new(1, 1);
+        let tr = run_schedule_segments(&segs, &LinkCfg::default(), &sched, false);
+        assert!((tr.makespan - 4.0).abs() < 1e-12);
+        let t = vec![StageTiming { fwd: 2.0, bwd: 2.0, exposed: 0.0, p2p: 0.0 }];
+        let g = render_gantt(&t, &tr, 40);
+        let lines: Vec<&str> = g.lines().collect();
+        assert_eq!(lines[1], "stage0 |00000000000000000000aaaaaaaaaaaaaaaaaaaa|", "{g}");
+        assert_eq!(lines[2], "stage0.c|··········cccccccccc····················|", "{g}");
+        assert!(g.contains("c = TP collective"));
     }
 }

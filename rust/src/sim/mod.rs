@@ -1,28 +1,56 @@
-//! Pipeline-training simulator.
+//! Pipeline-training simulator: a per-stage **two-resource discrete-event
+//! engine**.
 //!
-//! Substitutes the paper's 16×A100 testbeds (DESIGN.md §2): executes a
-//! (partition, recomputation plan) pair under any [`crate::sched`]
-//! pipeline schedule — GPipe, 1F1B, interleaved-1F1B, ZB-H1/H2 or ZB-V —
-//! and produces iteration time, throughput, bubble ratio, per-stage
-//! memory under both the exact W-residual accounting and the B-freed H1
-//! approximation, and the recompute-path breakdowns behind Figs. 2, 6,
-//! 7, 8, 9 and 10.
+//! Substitutes the paper's 16×A100 testbeds (DESIGN.md §2). Each
+//! [`crate::sched::WorkItem`] of the executed schedule expands into
+//! sub-segments ([`crate::sched::Segment`]): compute slices interleaved
+//! with the per-layer TP-collective slices exposed by
+//! `plan::CostTables`. The engine schedules them onto two streams per
+//! stage — compute and comm — plus a modeled inter-stage p2p link
+//! (latency + bytes/bandwidth, optionally contending with TP traffic)
+//! and an optional end-of-iteration DP gradient all-reduce
+//! ([`engine::DpMode`]).
+//!
+//! The point of the segment model is that Lynx's overlap is **executed,
+//! not assumed**: window-planned recomputation (`LayerPlan` phase
+//! assignments) runs on the compute stream inside the matching
+//! collective, stall recomputation is absorbed while a backward waits
+//! for dy, and every trace reports per-stage `planned_overlap` vs
+//! `achieved_overlap` — equal at plan bandwidth, diverging under a
+//! `--bw` sweep when the executed windows shrink below what the planner
+//! assumed (`achieved <= planned` is a conservation invariant gated in
+//! CI via `BENCH_overlap.json`).
 //!
 //! * [`crate::sched`] — the pluggable schedule subsystem (work orders,
-//!   in-flight accounting, overlap-window semantics). The old
-//!   `sim::schedule` 1F1B module lives on as
-//!   [`crate::sched::onefoneb`].
-//! * [`engine`] — dependency-driven timing of any schedule, including
-//!   Opt-3-style absorption of recomputation into pipeline stalls and
-//!   extraction of the residual overlap windows.
-//! * [`runner`] — glue: policy → plan → stage costs → simulated pipeline
-//!   → [`runner::SimReport`].
-//! * [`gantt`] — ASCII rendering, one row per (stage, chunk).
+//!   segment vocabulary, in-flight accounting, overlap-window
+//!   semantics).
+//! * [`engine`] — the event core: [`engine::run_schedule_segments`]
+//!   (full segment + link inputs) and the scalar wrapper
+//!   [`engine::run_schedule`].
+//! * [`fixpoint`] — the PR-3 item-sweep engine, kept as the equivalence
+//!   oracle: with zero comm widths and infinite bandwidth the event
+//!   engine reproduces its traces exactly (grid-tested across all six
+//!   schedules in `tests/overlap_prop.rs`).
+//! * [`runner`] — glue: policy → plan → per-layer segments → simulated
+//!   pipeline → [`runner::SimReport`] (peak memory under both the exact
+//!   W-residual accounting and the B-freed H1 approximation, bubble
+//!   ratios, and the planned/achieved overlap columns).
+//! * [`gantt`] — ASCII rendering: one row per (stage, chunk) plus a comm
+//!   row per stage; absorbed recompute, exposed recompute and the comm
+//!   traffic classes get distinct glyphs.
 
 pub mod engine;
+pub mod fixpoint;
 pub mod gantt;
 pub mod runner;
 
-pub use engine::{run_pipeline, run_schedule, OverlapWindow, PipelineTrace, StageTiming};
+pub use engine::{
+    run_pipeline, run_schedule, run_schedule_segments, CommSpan, CommTag, DpMode, LinkCfg,
+    OverlapWindow, PipelineTrace, StageSegments, StageTiming,
+};
+pub use fixpoint::run_schedule_fixpoint;
 pub use gantt::render_gantt;
-pub use runner::{simulate, PartitionMode, SimConfig, SimReport, StageReport};
+pub use runner::{
+    simulate, simulate_cached, simulate_traced, PartitionMode, SimConfig, SimReport,
+    StageReport,
+};

@@ -1,13 +1,26 @@
-//! End-to-end simulation runner: policy → plans → schedule → pipeline →
-//! report.
+//! End-to-end simulation runner: policy → plans → per-layer segments →
+//! event-driven pipeline → report.
+//!
+//! The runner is where the planner's world meets the engine's: stage
+//! plans are made against the plan-bandwidth [`CostTables`] (window
+//! widths, budgets), then **executed** as segment lists built from an
+//! execution cost model whose link bandwidths may be scaled
+//! ([`SimConfig::bw_scale`]). The per-stage report carries both sides:
+//! `planned_overlap` (window recompute the planner placed) vs
+//! `achieved_overlap` (what actually hid inside the executed
+//! collectives).
 
-use super::engine::{run_schedule, StageTiming};
+use super::engine::{
+    run_schedule_segments, DpMode, LinkCfg, PipelineTrace, StageSegments,
+};
 use crate::costmodel::CostModel;
 use crate::graph::{build_layer_graph, TrainSetup};
 use crate::plan::{
-    dp_partition, lynx_partition_cached, CostTables, PlanCache, PolicyKind, SearchOptions,
+    dp_partition, lynx_partition_cached, CostTables, Phase, PlanCache, PolicyKind, SearchOptions,
+    StageCtx, StagePlan, StageRole,
 };
-use crate::sched::ScheduleKind;
+use crate::plan::costeval::StageCost;
+use crate::sched::{ScheduleKind, Segment};
 use crate::util::json::Json;
 
 /// Partitioning mode for a simulation.
@@ -26,18 +39,50 @@ pub struct SimConfig {
     pub policy: PolicyKind,
     pub partition: PartitionMode,
     /// Pipeline schedule to execute (the paper evaluates 1F1B; the sched
-    /// subsystem adds GPipe, interleaved-1F1B and ZB-H1).
+    /// subsystem adds GPipe, interleaved-1F1B and the ZB family).
     pub schedule: ScheduleKind,
+    /// Executed link-bandwidth multiplier (`--bw`). Plans are always
+    /// made at scale 1.0; only the executed comm widths and p2p wire
+    /// times move, so the report isolates planned vs achieved overlap.
+    pub bw_scale: f64,
+    /// End-of-iteration DP gradient-sync mode (`--dp-overlap`).
+    pub dp_mode: DpMode,
+    /// Serialize p2p wire time onto the sender's comm stream so it
+    /// contends with TP collectives (`--p2p-over-tp`).
+    pub p2p_over_tp: bool,
 }
 
 impl SimConfig {
-    /// The paper's default: 1F1B.
+    /// The paper's default: 1F1B, plan-bandwidth links, no DP sync.
     pub fn new(setup: TrainSetup, policy: PolicyKind, partition: PartitionMode) -> SimConfig {
-        SimConfig { setup, policy, partition, schedule: ScheduleKind::OneFOneB }
+        SimConfig {
+            setup,
+            policy,
+            partition,
+            schedule: ScheduleKind::OneFOneB,
+            bw_scale: 1.0,
+            dp_mode: DpMode::Off,
+            p2p_over_tp: false,
+        }
     }
 
     pub fn with_schedule(mut self, schedule: ScheduleKind) -> SimConfig {
         self.schedule = schedule;
+        self
+    }
+
+    pub fn with_bw(mut self, bw_scale: f64) -> SimConfig {
+        self.bw_scale = bw_scale;
+        self
+    }
+
+    pub fn with_dp(mut self, dp_mode: DpMode) -> SimConfig {
+        self.dp_mode = dp_mode;
+        self
+    }
+
+    pub fn with_p2p_over_tp(mut self, yes: bool) -> SimConfig {
+        self.p2p_over_tp = yes;
         self
     }
 }
@@ -59,6 +104,14 @@ pub struct StageReport {
     /// Exposed recompute actually paid across the iteration.
     pub exposed_paid_total: f64,
     pub comm_per_micro: f64,
+    /// Window recompute the planner placed, per iteration (executed by
+    /// the event engine inside the TP collectives).
+    pub planned_overlap: f64,
+    /// Window recompute that actually ran concurrently with comm —
+    /// `achieved <= planned` always; equal at plan bandwidth.
+    pub achieved_overlap: f64,
+    /// Comm-stream busy seconds across the iteration.
+    pub comm_busy: f64,
     /// Peak memory bytes under the exact W-residual accounting.
     pub peak_mem: f64,
     /// Peak memory bytes of the same plan under the B-freed (H1)
@@ -67,7 +120,8 @@ pub struct StageReport {
     /// coarse accounting ignored.
     pub peak_mem_h1: f64,
     pub idle: f64,
-    /// Residual overlap-window (stall) seconds the schedule exposes.
+    /// Overlap-window (full pre-absorption stall) seconds the schedule
+    /// exposes.
     pub window_secs: f64,
     /// Peak in-flight microbatch-equivalents (ceiling of the exact
     /// fraction) the schedule reported.
@@ -89,9 +143,12 @@ pub struct SimReport {
     pub iteration_secs: f64,
     /// Training throughput, samples/s.
     pub throughput: f64,
-    /// Idle share of `stages × makespan` under the executed schedule.
+    /// Compute-idle share of `stages × makespan` under the executed
+    /// schedule.
     pub bubble_ratio: f64,
     pub schedule: ScheduleKind,
+    /// Executed bandwidth scale (1.0 = plan bandwidth).
+    pub bw_scale: f64,
     pub stages: Vec<StageReport>,
     pub partition: Vec<usize>,
     /// Policy + partition search seconds.
@@ -109,12 +166,23 @@ impl SimReport {
         self.stages.iter().map(|s| s.exposed_paid_total).sum()
     }
 
-    /// Total recompute time hidden (windows + stalls) per iteration.
-    pub fn total_hidden(&self, num_micro: usize) -> f64 {
+    /// Total recompute time hidden (achieved window overlap + stall
+    /// absorption) per iteration, as executed by the event engine.
+    pub fn total_hidden(&self) -> f64 {
         self.stages
             .iter()
-            .map(|s| s.overlapped_per_micro * num_micro as f64 + s.absorbed_total)
+            .map(|s| s.achieved_overlap + s.absorbed_total)
             .sum()
+    }
+
+    /// Window recompute the planner placed, summed over stages.
+    pub fn planned_overlap(&self) -> f64 {
+        self.stages.iter().map(|s| s.planned_overlap).sum()
+    }
+
+    /// Window recompute the engine actually hid, summed over stages.
+    pub fn achieved_overlap(&self) -> f64 {
+        self.stages.iter().map(|s| s.achieved_overlap).sum()
     }
 
     /// Peak memory across stages (exact accounting).
@@ -138,9 +206,12 @@ impl SimReport {
         let mut o = Json::obj();
         o.set("config", Json::from(self.config_label.clone()))
             .set("schedule", Json::from(self.schedule.label()))
+            .set("bw_scale", Json::from(self.bw_scale))
             .set("iteration_secs", Json::from(self.iteration_secs))
             .set("throughput", Json::from(self.throughput))
             .set("bubble_ratio", Json::from(self.bubble_ratio))
+            .set("planned_overlap", Json::from(self.planned_overlap()))
+            .set("achieved_overlap", Json::from(self.achieved_overlap()))
             .set("oom", Json::from(self.oom))
             .set("oom_h1", Json::from(self.oom_h1))
             .set("search_secs", Json::from(self.search_secs))
@@ -156,6 +227,9 @@ impl SimReport {
                 .set("bwd", Json::from(s.bwd))
                 .set("exposed_paid", Json::from(s.exposed_paid_total))
                 .set("absorbed", Json::from(s.absorbed_total))
+                .set("planned_overlap", Json::from(s.planned_overlap))
+                .set("achieved_overlap", Json::from(s.achieved_overlap))
+                .set("comm_busy", Json::from(s.comm_busy))
                 .set("peak_mem", Json::from(s.peak_mem))
                 .set("peak_mem_h1", Json::from(s.peak_mem_h1))
                 .set("idle", Json::from(s.idle))
@@ -169,29 +243,47 @@ impl SimReport {
     }
 }
 
-/// Simulate one configuration end to end.
+/// Simulate one configuration end to end (report only).
+pub fn simulate(cm: &CostModel, cfg: &SimConfig) -> SimReport {
+    simulate_traced(cm, cfg).0
+}
+
+/// Simulate and also return the executed [`PipelineTrace`] (comm spans,
+/// item spans, windows) — the Gantt renderer consumes it.
 ///
 /// In `PartitionMode::Lynx` both the dp split (Algorithm 1's initial
 /// candidate) and the searched split are executed and the better one is
 /// kept — the partition policy maker's final evaluation step (Fig. 4 ⑦⑧).
-pub fn simulate(cm: &CostModel, cfg: &SimConfig) -> SimReport {
+pub fn simulate_traced(cm: &CostModel, cfg: &SimConfig) -> (SimReport, PipelineTrace) {
     // One evaluation core per simulate call: the searched and dp
     // candidates (Lynx mode) share every cached stage plan.
     let tables = CostTables::new(&cfg.setup, cm, &build_layer_graph(&cfg.setup));
     let mut cache = PlanCache::new();
+    simulate_cached(cm, cfg, &tables, &mut cache)
+}
+
+/// [`simulate_traced`] against a caller-owned evaluation core — the
+/// entry point the CLI uses with a disk-backed [`PlanCache`]
+/// (`--cache-dir`).
+pub fn simulate_cached(
+    cm: &CostModel,
+    cfg: &SimConfig,
+    tables: &CostTables,
+    cache: &mut PlanCache,
+) -> (SimReport, PipelineTrace) {
     if cfg.partition == PartitionMode::Lynx {
-        let searched = simulate_one(cm, cfg, &tables, &mut cache);
+        let searched = simulate_one(cm, cfg, tables, cache);
         let dp = simulate_one(
             cm,
             &SimConfig { partition: PartitionMode::Dp, ..cfg.clone() },
-            &tables,
-            &mut cache,
+            tables,
+            cache,
         );
-        return match (searched.oom, dp.oom) {
+        return match (searched.0.oom, dp.0.oom) {
             (false, true) => searched,
             (true, false) => dp,
             _ => {
-                if searched.throughput >= dp.throughput {
+                if searched.0.throughput >= dp.0.throughput {
                     searched
                 } else {
                     dp
@@ -199,7 +291,98 @@ pub fn simulate(cm: &CostModel, cfg: &SimConfig) -> SimReport {
             }
         };
     }
-    simulate_one(cm, cfg, &tables, &mut cache)
+    simulate_one(cm, cfg, tables, cache)
+}
+
+/// Build one stage's segment expansion: per-layer compute/comm
+/// interleave from the execution cost model, window recompute from the
+/// plan's phase assignments, stage-role extras (embedding / LM head) as
+/// boundary compute slices, and the link/DP parameters.
+#[allow(clippy::too_many_arguments)]
+fn stage_segments(
+    tables: &CostTables,
+    exec_cm: &CostModel,
+    exec_times: &[f64],
+    exec_bwd: &[f64],
+    ctx: &StageCtx,
+    plan: &StagePlan,
+    bwd_split: Option<f64>,
+    cost: &StageCost,
+    dp_mode: DpMode,
+) -> StageSegments {
+    let frac = bwd_split.unwrap_or(1.0);
+    let fwd_pat = tables.fwd_layer_segments(exec_times);
+    let bwd_pat = tables.bwd_layer_segments(exec_bwd, frac);
+    let role = StageRole::of(ctx.stage, ctx.num_stages);
+    let mut fwd: Vec<Segment> = Vec::new();
+    let mut fwd_rc: Vec<f64> = Vec::new();
+    let mut bwd: Vec<Segment> = Vec::new();
+    let mut bwd_rc: Vec<f64> = Vec::new();
+    if matches!(role, StageRole::First | StageRole::Solo) {
+        fwd.push(Segment::comp(tables.embed_fwd));
+    }
+    for lp in &plan.layers {
+        fwd.extend_from_slice(&fwd_pat);
+        // Window recompute is priced at plan-time op costs (compute ops
+        // are bandwidth-independent).
+        fwd_rc.push(lp.phase_time(&tables.times, Phase::FwdComm1));
+        fwd_rc.push(lp.phase_time(&tables.times, Phase::FwdComm2));
+    }
+    if role.is_last() {
+        fwd.push(Segment::comp(tables.head_fwd));
+        // The backward starts at the head on the last stage.
+        bwd.push(Segment::comp(tables.head_bwd * frac));
+    }
+    for lp in plan.layers.iter().rev() {
+        bwd.extend_from_slice(&bwd_pat);
+        // Backward walks the layer in reverse: window 2 precedes 1.
+        bwd_rc.push(lp.phase_time(&tables.times, Phase::BwdComm2));
+        bwd_rc.push(lp.phase_time(&tables.times, Phase::BwdComm1));
+    }
+    if matches!(role, StageRole::First | StageRole::Solo) {
+        bwd.push(Segment::comp(tables.embed_bwd * frac));
+    }
+    let wgrad = if bwd_split.is_some() {
+        let bwd_comm: f64 = tables
+            .g
+            .ops
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.is_comm())
+            .map(|(i, _)| exec_bwd[i])
+            .sum();
+        let bwd_compute = exec_bwd.iter().sum::<f64>() - bwd_comm;
+        let mut extras = 0.0;
+        if matches!(role, StageRole::First | StageRole::Solo) {
+            extras += tables.embed_bwd;
+        }
+        if role.is_last() {
+            extras += tables.head_bwd;
+        }
+        vec![Segment::comp(
+            (1.0 - frac) * (bwd_compute * ctx.n_layers as f64 + extras),
+        )]
+    } else {
+        Vec::new()
+    };
+    let dp_secs = if dp_mode == DpMode::Off {
+        0.0
+    } else {
+        // fp16 gradients are 1/8 of the 16-byte/param model states; a
+        // ring all-reduce moves ~2× the buffer over the inter-node link.
+        exec_cm.comm.p2p_time(2.0 * ctx.static_mem / 8.0)
+    };
+    StageSegments {
+        fwd,
+        bwd,
+        wgrad,
+        exposed: cost.exposed_recompute,
+        fwd_rc,
+        bwd_rc,
+        p2p_latency: exec_cm.topo.pp_link.latency,
+        p2p_bytes: tables.boundary_bytes,
+        dp_secs,
+    }
 }
 
 fn simulate_one(
@@ -207,7 +390,7 @@ fn simulate_one(
     cfg: &SimConfig,
     tables: &CostTables,
     cache: &mut PlanCache,
-) -> SimReport {
+) -> (SimReport, PipelineTrace) {
     let setup = &cfg.setup;
     let sched = cfg.schedule.build(setup.pp, setup.num_micro);
     let search_opts = SearchOptions { schedule: Some(cfg.schedule), ..Default::default() };
@@ -235,15 +418,25 @@ fn simulate_one(
         }
     };
 
-    // ---- per-stage costs ----
+    // ---- execution cost model (bandwidth sweep) ----
+    // Plans and budgets stay at the plan-bandwidth tables; the executed
+    // comm widths come from a link-scaled copy of the cost model.
+    let exec_cm = if (cfg.bw_scale - 1.0).abs() < 1e-12 {
+        cm.clone()
+    } else {
+        cm.with_bw_scale(cfg.bw_scale)
+    };
+    let exec_times = exec_cm.layer_times(&tables.g);
+    let exec_bwd: Vec<f64> = tables.g.ops.iter().map(|o| exec_cm.op_bwd_time(o)).collect();
+
+    // ---- per-stage costs + segments ----
     // The exact in-flight accounting drives the real budgets; the same
     // plan is also costed under the B-freed (H1) approximation so every
     // report carries the gap the old model hid.
-    let mut stage_timings = Vec::with_capacity(setup.pp);
+    let mut segments = Vec::with_capacity(setup.pp);
     let mut reports = Vec::with_capacity(setup.pp);
     let mut oom = false;
     let mut oom_h1 = false;
-    let boundary = cm.memory.boundary_bytes(setup);
     for stage in 0..setup.pp {
         let ctx = tables.build_ctx_sched(stage, partition[stage], sched.as_ref());
         let cost = tables.stage_cost(&ctx, &plans[stage].plan);
@@ -260,18 +453,28 @@ fn simulate_one(
         };
         oom |= plans[stage].oom || cost.oom;
         oom_h1 |= cost_h1.oom;
-        stage_timings.push(StageTiming {
-            fwd: cost.fwd,
-            bwd: cost.bwd,
-            exposed: cost.exposed_recompute,
-            p2p: cm.comm.p2p_time(boundary),
-        });
+        segments.push(stage_segments(
+            tables,
+            &exec_cm,
+            &exec_times,
+            &exec_bwd,
+            &ctx,
+            &plans[stage].plan,
+            sched.backward_split(),
+            &cost,
+            cfg.dp_mode,
+        ));
         reports.push((ctx, cost, cost_h1));
     }
 
     // ---- pipeline execution ----
     let lynx_absorb = cfg.policy.is_lynx();
-    let trace = run_schedule(&stage_timings, sched.as_ref(), lynx_absorb);
+    let link = LinkCfg {
+        p2p_bandwidth: exec_cm.topo.pp_link.bus_bw,
+        serialize_p2p_with_tp: cfg.p2p_over_tp,
+        dp_mode: cfg.dp_mode,
+    };
+    let trace = run_schedule_segments(&segments, &link, sched.as_ref(), lynx_absorb);
 
     // Optimizer step: a bandwidth-bound pass over the stage's model
     // states, overlapping-free (paper ignores it too; kept for realism).
@@ -296,6 +499,9 @@ fn simulate_one(
             absorbed_total: trace.absorbed[s],
             exposed_paid_total: trace.exposed_paid[s],
             comm_per_micro: cost.comm_time,
+            planned_overlap: trace.planned_overlap[s],
+            achieved_overlap: trace.achieved_overlap[s],
+            comm_busy: trace.comm_busy[s],
             peak_mem: cost.peak_mem,
             peak_mem_h1: cost_h1.peak_mem,
             idle: trace.idle[s],
@@ -307,29 +513,39 @@ fn simulate_one(
         })
         .collect();
 
-    SimReport {
-        config_label: format!(
-            "{} {} tp{} pp{} mb{} x{} seq{} [{}/{}]",
-            setup.model.name,
-            cm.topo.name,
-            setup.tp,
-            setup.pp,
-            setup.micro_batch,
-            setup.num_micro,
-            setup.seq,
-            cfg.policy.label(),
-            cfg.schedule.label(),
-        ),
+    let mut label = format!(
+        "{} {} tp{} pp{} mb{} x{} seq{} [{}/{}]",
+        setup.model.name,
+        cm.topo.name,
+        setup.tp,
+        setup.pp,
+        setup.micro_batch,
+        setup.num_micro,
+        setup.seq,
+        cfg.policy.label(),
+        cfg.schedule.label(),
+    );
+    if (cfg.bw_scale - 1.0).abs() > 1e-12 {
+        label.push_str(&format!(" bw{:.2}", cfg.bw_scale));
+    }
+    if cfg.dp_mode != DpMode::Off {
+        label.push_str(&format!(" dp-{}", cfg.dp_mode.label()));
+    }
+
+    let report = SimReport {
+        config_label: label,
         iteration_secs,
         throughput,
         bubble_ratio,
         schedule: cfg.schedule,
+        bw_scale: cfg.bw_scale,
         stages,
         partition,
         search_secs,
         oom,
         oom_h1,
-    }
+    };
+    (report, trace)
 }
 
 #[cfg(test)]
@@ -396,6 +612,10 @@ mod tests {
             "{}",
             j.pretty()
         );
+        // The overlap columns are part of the report contract.
+        assert!(parsed.get("planned_overlap").unwrap().as_f64().is_some());
+        let st0 = &parsed.get("stages").unwrap().as_arr().unwrap()[0];
+        assert!(st0.get("achieved_overlap").unwrap().as_f64().is_some());
     }
 
     #[test]
@@ -460,5 +680,88 @@ mod tests {
             o.stages[0].inflight
         );
         assert!(g.peak_mem() >= o.peak_mem());
+    }
+
+    // ------------------------------------------- overlap instrumentation
+
+    #[test]
+    fn achieved_matches_planned_at_plan_bandwidth() {
+        // At bw_scale 1 the executed windows are exactly the planner's:
+        // everything placed in a window hides, and the planned total is
+        // the plan's overlapped recompute × microbatches.
+        for kind in ScheduleKind::all() {
+            let r = sim_sched(PolicyKind::LynxHeu, PartitionMode::Dp, kind);
+            for (s, st) in r.stages.iter().enumerate() {
+                assert!(
+                    (st.achieved_overlap - st.planned_overlap).abs() < 1e-9,
+                    "{} stage {s}: achieved {} vs planned {}",
+                    kind.label(),
+                    st.achieved_overlap,
+                    st.planned_overlap
+                );
+                let expect = st.overlapped_per_micro * 8.0;
+                assert!(
+                    (st.planned_overlap - expect).abs() < 1e-9,
+                    "{} stage {s}: planned {} vs overlapped×m {}",
+                    kind.label(),
+                    st.planned_overlap,
+                    expect
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn faster_executed_links_lose_achieved_overlap() {
+        let setup = TrainSetup::new(ModelConfig::by_name("7B").unwrap(), 4, 4, 16, 8);
+        let cm = CostModel::new(Topology::nvlink(4, 4));
+        let at = |bw: f64| {
+            simulate(
+                &cm,
+                &SimConfig::new(setup.clone(), PolicyKind::LynxHeu, PartitionMode::Dp)
+                    .with_bw(bw),
+            )
+        };
+        let base = at(1.0);
+        assert!(base.planned_overlap() > 0.0, "plan must overlap something");
+        assert!((base.achieved_overlap() - base.planned_overlap()).abs() < 1e-9);
+        let fast = at(16.0);
+        // Same plan, same planned total; narrower executed windows.
+        assert!((fast.planned_overlap() - base.planned_overlap()).abs() < 1e-9);
+        assert!(
+            fast.achieved_overlap() < fast.planned_overlap() - 1e-12,
+            "achieved {} vs planned {}",
+            fast.achieved_overlap(),
+            fast.planned_overlap()
+        );
+        // Conservation: never above planned, for every stage.
+        for r in [&base, &fast] {
+            for st in &r.stages {
+                assert!(st.achieved_overlap <= st.planned_overlap + 1e-9);
+            }
+        }
+        // Slower links widen the windows: overlap stays fully achieved.
+        let slow = at(0.25);
+        assert!((slow.achieved_overlap() - slow.planned_overlap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dp_sync_costs_time_and_overlap_recovers_some() {
+        let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(2, 4));
+        let mk = |mode: DpMode| {
+            simulate(
+                &cm,
+                &SimConfig::new(setup.clone(), PolicyKind::LynxHeu, PartitionMode::Dp)
+                    .with_schedule(ScheduleKind::ZbH1)
+                    .with_dp(mode),
+            )
+        };
+        let off = mk(DpMode::Off);
+        let serial = mk(DpMode::Serial);
+        let overlap = mk(DpMode::Overlap);
+        assert!(serial.iteration_secs > off.iteration_secs + 1e-9);
+        assert!(overlap.iteration_secs <= serial.iteration_secs + 1e-9);
+        assert!(overlap.iteration_secs >= off.iteration_secs - 1e-9);
     }
 }

@@ -11,6 +11,8 @@
 //! * [`bench`] — mini-criterion: warmup + timed iterations + stats.
 //! * [`stats`] — summary statistics shared by bench and metrics.
 //! * [`propcheck`] — property-based test runner over PCG32 streams.
+//! * [`warn`] — process-wide warn-once registry (schedule fallbacks,
+//!   corrupt cache files).
 
 pub mod argparse;
 pub mod bench;
@@ -18,3 +20,4 @@ pub mod json;
 pub mod prng;
 pub mod propcheck;
 pub mod stats;
+pub mod warn;

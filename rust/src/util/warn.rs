@@ -1,0 +1,56 @@
+//! Process-wide warn-once plumbing.
+//!
+//! Several subsystems degrade gracefully and want to tell the user
+//! exactly once per invocation (ragged-interleaved fallback, wedged
+//! ZB-V, corrupt plan-cache files). Before this module each site carried
+//! its own `std::sync::Once` static; [`warn_once`] centralises the
+//! registry, keyed by a caller-chosen string, and reports whether the
+//! warning actually fired so call sites (and tests) can observe the
+//! once-only behavior.
+
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+fn registry() -> &'static Mutex<HashSet<String>> {
+    static REG: OnceLock<Mutex<HashSet<String>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashSet::new()))
+}
+
+/// Emit `warning: {msg}` to stderr the first time `key` is seen in this
+/// process; subsequent calls with the same key are silent. Returns
+/// whether the warning fired.
+pub fn warn_once(key: &str, msg: &str) -> bool {
+    let mut reg = registry().lock().unwrap();
+    if reg.insert(key.to_string()) {
+        eprintln!("warning: {msg}");
+        true
+    } else {
+        false
+    }
+}
+
+/// Forget `key`, so the next [`warn_once`] fires again (tests).
+pub fn reset_warning(key: &str) {
+    registry().lock().unwrap().remove(key);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_exactly_once_per_key() {
+        reset_warning("warn-test-a");
+        reset_warning("warn-test-b");
+        assert!(warn_once("warn-test-a", "first"));
+        assert!(!warn_once("warn-test-a", "second"));
+        assert!(!warn_once("warn-test-a", "third"));
+        // Independent keys have independent lifecycles.
+        assert!(warn_once("warn-test-b", "other"));
+        assert!(!warn_once("warn-test-b", "other again"));
+        // Reset re-arms a single key only.
+        reset_warning("warn-test-a");
+        assert!(warn_once("warn-test-a", "after reset"));
+        assert!(!warn_once("warn-test-b", "still armed"));
+    }
+}

@@ -1,0 +1,188 @@
+//! Property grids for the two-resource event engine (PR 4).
+//!
+//! 1. **Equivalence contract**: with zero comm widths and infinite link
+//!    bandwidth (the scalar `run_schedule` wrapper), the event engine
+//!    reproduces the PR-3 fixpoint engine — makespan, busy, absorbed,
+//!    paid, item spans and overlap windows — across every schedule ×
+//!    shape × absorption mode, with random timings and p2p latencies.
+//! 2. **Window conservation**: `consumed <= dur` on every reported
+//!    window (the full pre-absorption-stall convention).
+//! 3. **Overlap conservation** at the simulate level: on every
+//!    (schedule × policy) cell, per-stage
+//!    `achieved_overlap <= planned_overlap + eps`; equality at plan
+//!    bandwidth; faster executed links only lose overlap.
+
+use lynx::costmodel::{CostModel, Topology};
+use lynx::graph::{ModelConfig, TrainSetup};
+use lynx::plan::PolicyKind;
+use lynx::sched::ScheduleKind;
+use lynx::sim::engine::{run_schedule, StageTiming};
+use lynx::sim::fixpoint::run_schedule_fixpoint;
+use lynx::sim::{simulate, PartitionMode, SimConfig};
+use lynx::util::prng::Pcg32;
+
+const EPS: f64 = 1e-9;
+
+fn kinds() -> Vec<ScheduleKind> {
+    ScheduleKind::all()
+}
+
+#[test]
+fn grid_event_engine_reproduces_the_fixpoint_engine_at_zero_comm() {
+    let mut rng = Pcg32::new(0xfeed_beef, 7);
+    for &p in &[1usize, 2, 3, 4, 6] {
+        for &m in &[1usize, 2, 3, 5, 8, 12] {
+            for kind in kinds() {
+                let sched = kind.build(p, m);
+                for trial in 0..2 {
+                    let timings: Vec<StageTiming> = (0..p)
+                        .map(|_| StageTiming {
+                            fwd: 0.5 + rng.f64(),
+                            bwd: 0.5 + rng.f64(),
+                            exposed: rng.f64() * 0.6,
+                            p2p: if trial == 0 { 0.0 } else { rng.f64() * 0.3 },
+                        })
+                        .collect();
+                    for lynx in [false, true] {
+                        let ev = run_schedule(&timings, sched.as_ref(), lynx);
+                        let fx = run_schedule_fixpoint(&timings, sched.as_ref(), lynx);
+                        let tag = format!("{} p={p} m={m} lynx={lynx}", kind.label());
+                        assert!(
+                            (ev.makespan - fx.makespan).abs() < EPS,
+                            "{tag}: makespan {} vs {}",
+                            ev.makespan,
+                            fx.makespan
+                        );
+                        for s in 0..p {
+                            assert!((ev.busy[s] - fx.busy[s]).abs() < 1e-8, "{tag} busy[{s}]");
+                            assert!((ev.idle[s] - fx.idle[s]).abs() < 1e-8, "{tag} idle[{s}]");
+                            assert!(
+                                (ev.absorbed[s] - fx.absorbed[s]).abs() < EPS,
+                                "{tag} absorbed[{s}]"
+                            );
+                            assert!(
+                                (ev.exposed_paid[s] - fx.exposed_paid[s]).abs() < EPS,
+                                "{tag} paid[{s}]"
+                            );
+                            for (k, (a, b)) in
+                                ev.item_spans[s].iter().zip(&fx.item_spans[s]).enumerate()
+                            {
+                                assert!(
+                                    (a.0 - b.0).abs() < 1e-8 && (a.1 - b.1).abs() < 1e-8,
+                                    "{tag} span[{s}][{k}]: {a:?} vs {b:?}"
+                                );
+                            }
+                            assert_eq!(
+                                ev.windows[s].len(),
+                                fx.windows[s].len(),
+                                "{tag} window count[{s}]"
+                            );
+                            for (a, b) in ev.windows[s].iter().zip(&fx.windows[s]) {
+                                assert!(
+                                    (a.start - b.start).abs() < 1e-8
+                                        && (a.dur - b.dur).abs() < 1e-8
+                                        && (a.consumed - b.consumed).abs() < 1e-8
+                                        && a.before_item == b.before_item,
+                                    "{tag} window mismatch"
+                                );
+                                // Full-stall convention, both engines.
+                                assert!(a.consumed <= a.dur + EPS, "{tag} consumed > dur");
+                            }
+                            // The degenerate mapping must not fabricate
+                            // a comm stream or window overlap.
+                            assert!(ev.comm_spans[s].is_empty(), "{tag}");
+                            assert_eq!(ev.planned_overlap[s], 0.0, "{tag}");
+                            assert_eq!(ev.achieved_overlap[s], 0.0, "{tag}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_achieved_overlap_never_exceeds_planned_per_schedule_and_policy() {
+    // Every (schedule × policy) cell on the memory-pressured 7B config:
+    // conservation per stage, exact achievement at plan bandwidth, and
+    // the planned total equals the plan's overlapped recompute × m.
+    let cm = CostModel::new(Topology::nvlink(4, 4));
+    let policies = [PolicyKind::Full, PolicyKind::Block, PolicyKind::LynxHeu];
+    for kind in kinds() {
+        for policy in policies {
+            let setup = TrainSetup::new(ModelConfig::by_name("7B").unwrap(), 4, 4, 16, 8);
+            let r = simulate(
+                &cm,
+                &SimConfig::new(setup, policy, PartitionMode::Dp).with_schedule(kind),
+            );
+            for (s, st) in r.stages.iter().enumerate() {
+                let tag = format!("{} {} stage {s}", kind.label(), policy.label());
+                assert!(
+                    st.achieved_overlap <= st.planned_overlap + EPS,
+                    "{tag}: achieved {} > planned {}",
+                    st.achieved_overlap,
+                    st.planned_overlap
+                );
+                // At plan bandwidth the windows are exactly as planned.
+                assert!(
+                    (st.achieved_overlap - st.planned_overlap).abs() < EPS,
+                    "{tag}: achieved {} != planned {} at bw 1",
+                    st.achieved_overlap,
+                    st.planned_overlap
+                );
+                let expect = st.overlapped_per_micro * 8.0;
+                assert!(
+                    (st.planned_overlap - expect).abs() < EPS,
+                    "{tag}: planned {} vs overlapped×m {}",
+                    st.planned_overlap,
+                    expect
+                );
+                // Baseline policies never place window recompute.
+                if !policy.is_lynx() {
+                    assert_eq!(st.planned_overlap, 0.0, "{tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bandwidth_sweep_only_loses_overlap_and_stays_conservative() {
+    let cm = CostModel::new(Topology::nvlink(4, 4));
+    for kind in [ScheduleKind::OneFOneB, ScheduleKind::ZbH1, ScheduleKind::ZbV] {
+        let at = |bw: f64| {
+            let setup = TrainSetup::new(ModelConfig::by_name("7B").unwrap(), 4, 4, 16, 8);
+            simulate(
+                &cm,
+                &SimConfig::new(setup, PolicyKind::LynxHeu, PartitionMode::Dp)
+                    .with_schedule(kind)
+                    .with_bw(bw),
+            )
+        };
+        let slow = at(0.5);
+        let base = at(1.0);
+        let fast = at(8.0);
+        let tag = kind.label();
+        // The plan (and thus the planned total) is bandwidth-invariant.
+        assert!(
+            (slow.planned_overlap() - base.planned_overlap()).abs() < EPS
+                && (fast.planned_overlap() - base.planned_overlap()).abs() < EPS,
+            "{tag}: planned moved with bw"
+        );
+        assert!(base.planned_overlap() > 0.0, "{tag}: plan hides nothing");
+        // Full achievement at and below plan bandwidth; loss above.
+        assert!((slow.achieved_overlap() - slow.planned_overlap()).abs() < EPS, "{tag}");
+        assert!((base.achieved_overlap() - base.planned_overlap()).abs() < EPS, "{tag}");
+        assert!(
+            fast.achieved_overlap() < fast.planned_overlap() - EPS,
+            "{tag}: no spill at bw 8 ({} vs {})",
+            fast.achieved_overlap(),
+            fast.planned_overlap()
+        );
+        for r in [&slow, &base, &fast] {
+            for st in &r.stages {
+                assert!(st.achieved_overlap <= st.planned_overlap + EPS, "{tag}");
+            }
+        }
+    }
+}

@@ -297,16 +297,31 @@ fn prop_engine_bounds_hold_for_every_schedule() {
                                 e * *m as f64
                             ));
                         }
-                        // Windows never exceed idle, consumed never
-                        // exceeds absorbed.
-                        if tr.window_secs(s) > tr.idle[s] + 1e-6 {
-                            return Err(format!("{} stage {s}: windows > idle", kind.label()));
+                        // Windows report the *full pre-absorption*
+                        // stalls: bounded by idle plus the absorbed time
+                        // that filled them; consumed never exceeds
+                        // absorbed, and per window consumed <= dur.
+                        if tr.window_secs(s) > tr.idle[s] + tr.absorbed[s] + 1e-6 {
+                            return Err(format!(
+                                "{} stage {s}: windows > idle + absorbed",
+                                kind.label()
+                            ));
                         }
                         if tr.window_consumed(s) > tr.absorbed[s] + 1e-6 {
                             return Err(format!(
                                 "{} stage {s}: consumed > absorbed",
                                 kind.label()
                             ));
+                        }
+                        for w in &tr.windows[s] {
+                            if w.consumed > w.dur + 1e-9 {
+                                return Err(format!(
+                                    "{} stage {s}: window consumed {} > dur {}",
+                                    kind.label(),
+                                    w.consumed,
+                                    w.dur
+                                ));
+                            }
                         }
                     }
                 }

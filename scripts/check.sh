@@ -49,4 +49,31 @@ LYNX_BENCH_QUICK=1 LYNX_BENCH_OUT="$PWD" cargo bench --bench bench_table3_search
 test -f BENCH_search.json
 echo "BENCH_search.json written"
 
+echo "== bench: overlap (quick bandwidth sweep) =="
+LYNX_BENCH_QUICK=1 LYNX_BENCH_OUT="$PWD" cargo bench --bench bench_overlap
+test -f BENCH_overlap.json
+echo "BENCH_overlap.json written"
+
+echo "== gate: achieved overlap <= planned (event-engine conservation) =="
+python3 - <<'EOF'
+import json
+rows = [r for r in json.load(open('BENCH_overlap.json')) if isinstance(r, dict)]
+assert rows, 'BENCH_overlap.json has no rows'
+eps = 1e-6
+bad = [r for r in rows
+       if r['achieved_overlap_secs'] > r['planned_overlap_secs'] + eps]
+assert not bad, f'achieved overlap exceeds planned (conservation broken): {bad}'
+stale = [r for r in rows
+         if r['bw_scale'] <= 1.0 + 1e-9
+         and abs(r['achieved_overlap_secs'] - r['planned_overlap_secs']) > eps]
+assert not stale, f'overlap not fully achieved at plan bandwidth: {stale}'
+assert any(r['planned_overlap_secs'] > 0 for r in rows), 'no cell planned any overlap'
+assert any(r['bw_scale'] > 1.0
+           and r['achieved_overlap_secs'] < r['planned_overlap_secs'] - eps
+           for r in rows), \
+    'bandwidth sweep never exposed a planned-vs-achieved gap'
+print(f'OK: {len(rows)} rows, achieved <= planned everywhere, '
+      'gap visible above plan bandwidth')
+EOF
+
 echo "OK"
