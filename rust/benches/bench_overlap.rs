@@ -60,6 +60,15 @@ fn main() {
             .set("absorbed_secs", Json::from(absorbed))
             .set("exposed_paid_secs", Json::from(r.report.total_exposed_paid()))
             .set("oom", Json::from(r.report.oom));
+        if let Some(rp) = &r.replan {
+            // Re-planned at the executed bandwidth: the makespan delta
+            // is what the stale plan-bandwidth windows cost.
+            jo.set("replan_iteration_secs", Json::from(rp.iteration_secs))
+                .set(
+                    "replan_delta_secs",
+                    Json::from(r.replan_delta_secs().unwrap_or(0.0)),
+                );
+        }
         out.push(jo);
     }
     b.record("full sweep wall-clock", sweep_wall, "s");

@@ -1,0 +1,94 @@
+//! Bench: cluster-topology sweep — inter-node bandwidth vs
+//! topology-aware partitioning, plus the uniform-topology equivalence
+//! witness.
+//!
+//! Consumes the same `experiments::topo_runs` sweep as
+//! `lynx figures --fig topo` (2 nodes × 6 GPUs, tp 4 × pp 3: stage 1's
+//! TP group straddles the IB edge), so the bench artifact and the
+//! figure can never drift apart. Emits `BENCH_topo.json`;
+//! `scripts/check.sh` gates that on every row the topology-aware
+//! partition's makespan is no worse than the topology-blind one, that
+//! the per-stage window capacities are heterogeneous (the straddling
+//! stage's windows ride IB), and that the degenerate uniform cluster
+//! reproduces the scalar-link engine to round-off.
+//!
+//! Run `cargo bench --bench bench_topo` (LYNX_BENCH_QUICK=1 for the
+//! reduced sweep; LYNX_BENCH_OUT overrides the output directory).
+
+use lynx::experiments::{topo_runs, topo_uniform_equivalence_max_err};
+use lynx::util::bench::Bench;
+use lynx::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("topo: inter-node bandwidth vs topology-aware partitioning");
+
+    let t0 = Instant::now();
+    let runs = topo_runs(quick);
+    let sweep_wall = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let equiv_err = topo_uniform_equivalence_max_err();
+    let equiv_wall = t1.elapsed().as_secs_f64();
+
+    let mut rows = Vec::new();
+    let mut out = Json::Arr(vec![]);
+    for r in &runs {
+        let wmin = r.stage_window_secs.iter().cloned().fold(f64::MAX, f64::min);
+        let wmax = r.stage_window_secs.iter().cloned().fold(0.0f64, f64::max);
+        b.record(
+            &format!("ib {:.1} GB/s (aware)", r.inter_bw_gbps),
+            r.aware.iteration_secs,
+            "s/iter (simulated)",
+        );
+        rows.push(vec![
+            format!("{:.1}", r.inter_bw_gbps),
+            format!("{:.3}", r.blind.iteration_secs),
+            format!("{:.3}", r.aware.iteration_secs),
+            format!("{:.2}x", r.blind.iteration_secs / r.aware.iteration_secs),
+            format!("{:?}", r.aware.partition),
+            format!("{:.2}/{:.2}", 1e3 * wmin, 1e3 * wmax),
+        ]);
+        let mut jo = Json::obj();
+        jo.set("inter_bw_gbps", Json::from(r.inter_bw_gbps))
+            .set("blind_iteration_secs", Json::from(r.blind.iteration_secs))
+            .set("aware_iteration_secs", Json::from(r.aware.iteration_secs))
+            .set(
+                "aware_partition",
+                Json::Arr(r.aware.partition.iter().map(|&l| Json::from(l)).collect()),
+            )
+            .set(
+                "blind_partition",
+                Json::Arr(r.blind.partition.iter().map(|&l| Json::from(l)).collect()),
+            )
+            .set("window_min_secs", Json::from(wmin))
+            .set("window_max_secs", Json::from(wmax))
+            .set("planned_overlap_secs", Json::from(r.aware.planned_overlap()))
+            .set("achieved_overlap_secs", Json::from(r.aware.achieved_overlap()))
+            .set("blind_planned_overlap_secs", Json::from(r.blind.planned_overlap()))
+            .set("blind_achieved_overlap_secs", Json::from(r.blind.achieved_overlap()))
+            .set("aware_oom", Json::from(r.aware.oom))
+            .set("blind_oom", Json::from(r.blind.oom));
+        out.push(jo);
+    }
+    // Equivalence witness row: the scalar-link engine vs the degenerate
+    // uniform cluster, max relative error across every schedule.
+    let mut eq = Json::obj();
+    eq.set("kind", Json::from("uniform-equivalence"))
+        .set("max_rel_err", Json::from(equiv_err));
+    out.push(eq);
+
+    b.record("full sweep wall-clock", sweep_wall, "s");
+    b.record("uniform-equivalence check", equiv_wall, "s");
+    b.table(
+        "topology-aware vs topology-blind partitioning (7B, batch 16, 2x6 NVLink/IB)",
+        &["ib GB/s", "blind iter", "aware iter", "speedup", "aware part", "win min/max ms"],
+        &rows,
+    );
+    println!("\nuniform-topology equivalence max rel err: {equiv_err:.2e}");
+
+    let dir = std::env::var("LYNX_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("BENCH_topo.json");
+    std::fs::write(&path, out.pretty()).expect("write BENCH_topo.json");
+    println!("wrote {}", path.display());
+}

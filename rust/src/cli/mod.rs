@@ -32,9 +32,16 @@ const USAGE: &str = "lynx <simulate|plan|partition|figures|train|profile> [optio
 fn common_specs() -> Vec<OptSpec> {
     vec![
         opt("model", "model preset: 1.3B|4.7B|7B|13B|20B", true, Some("1.3B")),
-        opt("topo", "topology: nvlink|pcie", true, Some("nvlink")),
+        opt(
+            "topo",
+            "topology: nvlink|pcie (uniform) or dgx-a100|pcie-box|<nodes>x<gpus>[:nvlink=GBps,pcie=GBps,ib=GBps,intra-lat=us,inter-lat=us] (hierarchical)",
+            true,
+            Some("nvlink"),
+        ),
         opt("tp", "tensor-parallel width", true, Some("4")),
         opt("pp", "pipeline stages", true, Some("4")),
+        opt("dp", "data-parallel world size", true, Some("1")),
+        opt("zero1", "shard fp32 optimizer states across the DP group (ZeRO-1)", false, None),
         opt("micro-batch", "microbatch size", true, Some("8")),
         opt("num-micro", "microbatches per step", true, Some("8")),
         opt("seq", "sequence length", true, Some("1024")),
@@ -49,6 +56,7 @@ fn common_specs() -> Vec<OptSpec> {
         ),
         opt("chunks", "virtual chunks per stage (interleaved)", true, Some("2")),
         opt("bw", "executed link-bandwidth multiplier (plans stay at 1.0)", true, Some("1.0")),
+        opt("replan-at-bw", "re-plan at the executed --bw instead of keeping the stale plan-bandwidth windows", false, None),
         opt("dp-overlap", "DP gradient sync: off|serial|overlap", true, Some("off")),
         opt("p2p-over-tp", "serialize p2p wire time with TP traffic", false, None),
         opt("cache-dir", "persist the plan cache to this directory", true, None),
@@ -63,7 +71,7 @@ fn common_specs() -> Vec<OptSpec> {
         opt("seed", "PRNG seed", true, Some("42")),
         opt("log-every", "loss log interval", true, Some("10")),
         // figures options
-        opt("fig", "figure id: 2a|2b|6a|6b|7|8|9|10a|10b|10c|table3|sp|schedules|search|overlap", true, None),
+        opt("fig", "figure id: 2a|2b|6a|6b|7|8|9|10a|10b|10c|table3|sp|schedules|search|overlap|topo", true, None),
         opt("all", "regenerate every figure", false, None),
         opt("quick", "reduced configs for smoke runs", false, None),
         opt("out", "write figure JSON to this directory", true, None),
@@ -163,18 +171,53 @@ fn parse_policy(s: &str) -> Result<PolicyKind> {
     })
 }
 
+/// Resolve a `--topo` spec into a [`Topology`]: the legacy uniform
+/// names, a hierarchical preset (auto-sized to the job), or an explicit
+/// `<nodes>x<gpus>[:overrides]` cluster.
+fn parse_topology(spec: &str, tp: usize, pp: usize, dp: usize) -> Result<Topology> {
+    use crate::topo::ClusterTopology;
+    let world = tp * pp * dp;
+    let topo = match spec {
+        "nvlink" => Topology::nvlink(tp, pp).with_dp(dp),
+        "pcie" => Topology::pcie(tp, pp).with_dp(dp),
+        "dgx-a100" => {
+            let nodes = ((world + 7) / 8).max(1);
+            Topology::hierarchical(ClusterTopology::dgx_a100(nodes), tp, pp, dp)
+        }
+        "pcie-box" => {
+            let nodes = ((world + 3) / 4).max(1);
+            Topology::hierarchical(ClusterTopology::pcie_box(nodes), tp, pp, dp)
+        }
+        other => {
+            let cluster = ClusterTopology::parse(other).map_err(|e| anyhow!(e))?;
+            if let Some(total) = cluster.total_gpus() {
+                if world > total {
+                    return Err(anyhow!(
+                        "job needs {world} GPUs (tp {tp} × pp {pp} × dp {dp}) but \
+                         topology {other:?} has {total}"
+                    ));
+                }
+            }
+            Topology::hierarchical(cluster, tp, pp, dp)
+        }
+    };
+    Ok(topo)
+}
+
 fn build_setup(a: &Args) -> Result<(TrainSetup, Topology)> {
     let model = a.get("model").unwrap();
     let m = ModelConfig::by_name(model).ok_or_else(|| anyhow!("unknown model {model:?}"))?;
     let tp: usize = a.req("tp")?;
     let pp: usize = a.req("pp")?;
-    let topo = match a.get("topo").unwrap() {
-        "nvlink" => Topology::nvlink(tp, pp),
-        "pcie" => Topology::pcie(tp, pp),
-        other => return Err(anyhow!("unknown topo {other:?}")),
-    };
+    let dp: usize = a.req("dp")?;
+    if dp == 0 {
+        return Err(anyhow!("--dp must be >= 1"));
+    }
+    let topo = parse_topology(a.get("topo").unwrap(), tp, pp, dp)?;
     let setup = TrainSetup::new(m, tp, pp, a.req("micro-batch")?, a.req("num-micro")?)
-        .with_seq(a.req("seq")?);
+        .with_seq(a.req("seq")?)
+        .with_dp(dp)
+        .with_zero1(a.has("zero1"));
     Ok((setup, topo))
 }
 
@@ -216,7 +259,14 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
     let schedule = parse_schedule(a)?;
     let (bw_scale, dp_mode, p2p_over_tp) = parse_exec_knobs(a)?;
     warn_schedule_fallback(schedule, &setup);
-    let cm = CostModel::new(topo);
+    // --replan-at-bw: instead of executing stale plan-bandwidth windows
+    // at the scaled bandwidth, plan *and* execute at the executed
+    // bandwidth (the closed loop the overlap sweep measures against).
+    let (cm, bw_scale) = if a.has("replan-at-bw") && (bw_scale - 1.0).abs() > 1e-12 {
+        (CostModel::new(topo.with_bw_scale(bw_scale)), 1.0)
+    } else {
+        (CostModel::new(topo), bw_scale)
+    };
     let tables = CostTables::new(&setup, &cm, &build_layer_graph(&setup));
     let mut cache = open_cache(a, &tables, &cm);
     let cfg = SimConfig {
@@ -227,6 +277,7 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
         bw_scale,
         dp_mode,
         p2p_over_tp,
+        fixed_partition: None,
     };
     let (r, trace) = simulate_cached(&cm, &cfg, &tables, &mut cache);
     close_cache(a, &cache)?;
@@ -365,6 +416,7 @@ fn cmd_figures(a: &Args) -> Result<i32> {
             "schedules" => experiments::schedule_matrix(quick),
             "search" => experiments::search_cost(quick),
             "overlap" => experiments::overlap_sweep(quick),
+            "topo" => experiments::topo_sweep(quick),
             other => return Err(anyhow!("unknown figure {other:?}")),
         }]
     };
@@ -562,6 +614,68 @@ mod tests {
     fn bad_bw_and_dp_are_errors() {
         assert!(run(&sv(&["simulate", "--bw", "-1"])).is_err());
         assert!(run(&sv(&["simulate", "--dp-overlap", "maybe"])).is_err());
+        assert!(run(&sv(&["simulate", "--dp", "0"])).is_err());
+    }
+
+    #[test]
+    fn hierarchical_topologies_parse_and_simulate() {
+        for topo in ["dgx-a100", "pcie-box", "2x6", "2x8:nvlink=200,ib=20"] {
+            let code = run(&sv(&[
+                "simulate",
+                "--model",
+                "1.3B",
+                "--tp",
+                "2",
+                "--pp",
+                "4",
+                "--micro-batch",
+                "4",
+                "--policy",
+                "block",
+                "--topo",
+                topo,
+            ]))
+            .unwrap();
+            assert_eq!(code, 0, "topo {topo}");
+        }
+    }
+
+    #[test]
+    fn oversubscribed_and_malformed_topologies_are_errors() {
+        // 1 node x 2 GPUs cannot host tp 2 × pp 4.
+        assert!(run(&sv(&[
+            "simulate", "--model", "1.3B", "--tp", "2", "--pp", "4", "--topo", "1x2",
+        ]))
+        .is_err());
+        assert!(run(&sv(&["simulate", "--topo", "mesh"])).is_err());
+        assert!(run(&sv(&["simulate", "--topo", "2x8:warp=9"])).is_err());
+    }
+
+    #[test]
+    fn dp_and_replan_knobs_simulate() {
+        let code = run(&sv(&[
+            "simulate",
+            "--model",
+            "1.3B",
+            "--tp",
+            "2",
+            "--pp",
+            "4",
+            "--dp",
+            "2",
+            "--zero1",
+            "--micro-batch",
+            "4",
+            "--policy",
+            "block",
+            "--dp-overlap",
+            "serial",
+            "--bw",
+            "4.0",
+            "--replan-at-bw",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
     }
 
     #[test]

@@ -1,8 +1,17 @@
 //! Communication time models: TP collectives and PP point-to-point.
+//!
+//! The actual formulas live in [`crate::topo::collectives`] and are
+//! parameterised by a [`LinkSpec`] — the bottleneck edge of the group
+//! being priced. `CommModel` binds them to the topology's *uniform*
+//! links (the scalar model every pre-topo consumer uses); per-stage
+//! pricing goes through [`super::CostModel::layer_times_at`] and the
+//! `Topology::{tp_link_for, pp_link_between, dp_ring_for}` accessors,
+//! which resolve each group's edge from the rank placement first.
 
 use super::device::LinkSpec;
+use crate::topo::collectives::{group_allreduce_secs, p2p_secs};
 
-/// Collective/p2p cost model over the topology's links.
+/// Collective/p2p cost model over the topology's uniform links.
 #[derive(Debug, Clone)]
 pub struct CommModel {
     pub tp_link: LinkSpec,
@@ -17,18 +26,22 @@ impl CommModel {
     /// All-reduce wall time given the *wire* bytes already computed by the
     /// graph builder (`2(t-1)/t × buffer`). At TP=1 this is free.
     pub fn allreduce_time(&self, wire_bytes: f64) -> f64 {
-        if wire_bytes <= 0.0 {
-            return 0.0;
-        }
-        self.tp_link.latency + wire_bytes / self.tp_link.bus_bw
+        group_allreduce_secs(&self.tp_link, wire_bytes)
+    }
+
+    /// All-reduce over an explicit group link (the topology-aware path).
+    pub fn allreduce_over(&self, link: &LinkSpec, wire_bytes: f64) -> f64 {
+        group_allreduce_secs(link, wire_bytes)
     }
 
     /// Pipeline p2p transfer of an activation buffer between stages.
     pub fn p2p_time(&self, bytes: f64) -> f64 {
-        if bytes <= 0.0 {
-            return 0.0;
-        }
-        self.pp_link.latency + bytes / self.pp_link.bus_bw
+        p2p_secs(&self.pp_link, bytes)
+    }
+
+    /// P2p transfer over an explicit boundary link.
+    pub fn p2p_over(&self, link: &LinkSpec, bytes: f64) -> f64 {
+        p2p_secs(link, bytes)
     }
 }
 

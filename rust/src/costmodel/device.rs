@@ -1,5 +1,8 @@
 //! Device and interconnect specifications (paper §7.1 testbeds).
 
+use crate::topo::cluster::Fabric as ClusterFabric;
+use crate::topo::{ClusterTopology, Placement};
+
 /// GPU specification. Defaults model the paper's A100 40GB.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GpuSpec {
@@ -83,15 +86,27 @@ impl LinkSpec {
 }
 
 /// A cluster topology: `tp` GPUs per stage over `tp_link`, `pp` stages
-/// over `pp_link`. Named like the paper: NVLink-2x8 = TP 2, 8 stages.
+/// over `pp_link`, `dp` data-parallel replicas. Named like the paper:
+/// NVLink-2x8 = TP 2, 8 stages.
+///
+/// `tp_link` / `pp_link` are the **uniform** scalar links every width
+/// was priced with before the topo subsystem; when `cluster` is set,
+/// the per-stage accessors ([`Self::tp_link_for`],
+/// [`Self::pp_link_between`], [`Self::dp_ring_for`]) price each group
+/// over its *actual* bottleneck edge under the Megatron rank placement
+/// instead. `cluster: None` keeps the scalar model bit-exactly.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Topology {
     pub name: String,
     pub gpu: GpuSpec,
     pub tp: usize,
     pub pp: usize,
+    /// Data-parallel world size (1 = no DP dimension, the paper setup).
+    pub dp: usize,
     pub tp_link: LinkSpec,
     pub pp_link: LinkSpec,
+    /// Hierarchical fabric; `None` = the uniform scalar-link model.
+    pub cluster: Option<ClusterTopology>,
 }
 
 impl Topology {
@@ -101,8 +116,10 @@ impl Topology {
             gpu: GpuSpec::a100_sxm(),
             tp,
             pp,
+            dp: 1,
             tp_link: LinkSpec::nvlink(),
             pp_link: LinkSpec::infiniband(),
+            cluster: None,
         }
     }
 
@@ -112,13 +129,130 @@ impl Topology {
             gpu: GpuSpec::a100_pcie(),
             tp,
             pp,
+            dp: 1,
             tp_link: LinkSpec::pcie(),
             pp_link: LinkSpec::infiniband(),
+            cluster: None,
         }
     }
 
+    /// Topology over an explicit hierarchical cluster. The scalar
+    /// `tp_link` / `pp_link` fields are set to the intra- and inter-node
+    /// tiers respectively (the values stage-0-style aligned groups see),
+    /// so topology-unaware consumers keep sensible defaults. Panics if
+    /// the job does not fit the cluster.
+    pub fn hierarchical(cluster: ClusterTopology, tp: usize, pp: usize, dp: usize) -> Topology {
+        assert!(dp >= 1, "dp world size must be >= 1");
+        if let Some(total) = cluster.total_gpus() {
+            assert!(
+                tp * pp * dp <= total,
+                "job needs {} GPUs but cluster {} has {}",
+                tp * pp * dp,
+                cluster.name,
+                total
+            );
+        }
+        let gpu = match cluster.group_link(false).kind {
+            LinkKind::Pcie => GpuSpec::a100_pcie(),
+            _ => GpuSpec::a100_sxm(),
+        };
+        Topology {
+            name: format!("{}-{tp}x{pp}", cluster.name),
+            gpu,
+            tp,
+            pp,
+            dp,
+            tp_link: cluster.group_link(false).clone(),
+            pp_link: cluster.boundary_link(true).clone(),
+            cluster: Some(cluster),
+        }
+    }
+
+    /// Copy with the DP world size replaced.
+    pub fn with_dp(mut self, dp: usize) -> Topology {
+        assert!(dp >= 1, "dp world size must be >= 1");
+        self.dp = dp;
+        self
+    }
+
+    /// Copy with the cluster fabric attached (links untouched).
+    pub fn with_cluster(mut self, cluster: ClusterTopology) -> Topology {
+        self.cluster = Some(cluster);
+        self
+    }
+
     pub fn gpus(&self) -> usize {
-        self.tp * self.pp
+        self.tp * self.pp * self.dp
+    }
+
+    /// Rank placement of this job on its cluster. Uniform topologies map
+    /// onto one flat node (nothing ever crosses).
+    pub fn placement(&self) -> Placement {
+        let gpn = self
+            .cluster
+            .as_ref()
+            .and_then(|c| c.gpus_per_node())
+            .unwrap_or_else(|| self.gpus().max(1));
+        Placement::new(self.tp, self.pp, self.dp, gpn)
+    }
+
+    /// The link stage `stage`'s TP collectives price over: the uniform
+    /// `tp_link` without a cluster, otherwise the bottleneck tier of the
+    /// stage's (worst) TP group under the rank placement.
+    pub fn tp_link_for(&self, stage: usize) -> LinkSpec {
+        match &self.cluster {
+            None => self.tp_link.clone(),
+            Some(c) => c.group_link(self.placement().tp_group_crosses(stage)).clone(),
+        }
+    }
+
+    /// The link the pipeline boundary between `stage` and `stage + 1`
+    /// prices over.
+    pub fn pp_link_between(&self, stage: usize, next: usize) -> LinkSpec {
+        let boundary = stage.min(next);
+        match &self.cluster {
+            None => self.pp_link.clone(),
+            Some(c) => {
+                if boundary + 1 >= self.pp {
+                    return c.boundary_link(true).clone();
+                }
+                c.boundary_link(self.placement().pp_boundary_crosses(boundary)).clone()
+            }
+        }
+    }
+
+    /// Bottleneck edge of stage `stage`'s DP gradient ring. Without a
+    /// cluster the ring is priced over the inter-stage link (gradient
+    /// syncs classically ride the IB fabric), matching the legacy
+    /// `--dp-overlap` pricing.
+    pub fn dp_ring_for(&self, stage: usize) -> LinkSpec {
+        match &self.cluster {
+            None => self.pp_link.clone(),
+            Some(c) => match &c.fabric {
+                ClusterFabric::Uniform { pp_link, .. } => pp_link.clone(),
+                ClusterFabric::Hierarchical { .. } => {
+                    c.group_link(self.placement().dp_group_crosses(stage)).clone()
+                }
+            },
+        }
+    }
+
+    /// Does boundary `stage → stage + 1`'s p2p ride the same fabric tier
+    /// as the sender's TP collectives (so the wire contends with TP
+    /// traffic — the hierarchical generalisation of `--p2p-over-tp`)?
+    /// Only intra-node hops on a hierarchical fabric share a tier; the
+    /// uniform model never contends unless the global flag forces it.
+    pub fn boundary_shares_tp_tier(&self, boundary: usize) -> bool {
+        match &self.cluster {
+            Some(c) if matches!(c.fabric, ClusterFabric::Hierarchical { .. }) => {
+                if boundary + 1 >= self.pp {
+                    return false;
+                }
+                let p = self.placement();
+                !p.pp_boundary_crosses(boundary) && !p.tp_group_crosses(boundary)
+            }
+            _ => false,
+        }
     }
 
     /// Copy of the topology with every link's bus bandwidth scaled by
@@ -130,6 +264,7 @@ impl Topology {
         let mut t = self.clone();
         t.tp_link.bus_bw *= k;
         t.pp_link.bus_bw *= k;
+        t.cluster = self.cluster.as_ref().map(|c| c.with_bw_scale(k));
         t
     }
 }
@@ -150,5 +285,71 @@ mod tests {
         assert_eq!(Topology::nvlink(2, 8).name, "NVLink-2x8");
         assert_eq!(Topology::pcie(2, 4).name, "PCIe-2x4");
         assert_eq!(Topology::nvlink(4, 4).gpus(), 16);
+    }
+
+    #[test]
+    fn uniform_topology_per_stage_links_are_the_scalars() {
+        let t = Topology::nvlink(4, 4);
+        for s in 0..4 {
+            assert_eq!(t.tp_link_for(s), t.tp_link);
+            assert_eq!(t.dp_ring_for(s), t.pp_link);
+        }
+        for b in 0..3 {
+            assert_eq!(t.pp_link_between(b, b + 1), t.pp_link);
+            assert!(!t.boundary_shares_tp_tier(b));
+        }
+    }
+
+    #[test]
+    fn hierarchical_links_follow_the_placement() {
+        // 2 nodes x 6, tp 4, pp 3: stage 1's TP group straddles nodes ->
+        // priced over IB; stages 0/2 stay on NVLink. Boundaries 0 and 1
+        // both touch the straddling stage's ranks.
+        let c = ClusterTopology::parse("2x6").unwrap();
+        let t = Topology::hierarchical(c, 4, 3, 1);
+        assert_eq!(t.tp_link_for(0).kind, LinkKind::NvLink);
+        assert_eq!(t.tp_link_for(1).kind, LinkKind::Infiniband);
+        assert_eq!(t.tp_link_for(2).kind, LinkKind::NvLink);
+        assert!(t.pp_link_between(0, 1).kind == LinkKind::Infiniband);
+        // Aligned dgx: everything intra except the node-boundary cut.
+        let d = Topology::hierarchical(ClusterTopology::dgx_a100(2), 4, 4, 1);
+        for s in 0..4 {
+            assert_eq!(d.tp_link_for(s).kind, LinkKind::NvLink);
+        }
+        assert_eq!(d.pp_link_between(0, 1).kind, LinkKind::NvLink);
+        assert_eq!(d.pp_link_between(1, 2).kind, LinkKind::Infiniband);
+        assert_eq!(d.pp_link_between(2, 3).kind, LinkKind::NvLink);
+        // Intra-node boundaries share the NVLink tier with TP traffic.
+        assert!(d.boundary_shares_tp_tier(0));
+        assert!(!d.boundary_shares_tp_tier(1));
+    }
+
+    #[test]
+    fn dp_ring_crosses_when_replicas_span_nodes() {
+        // tp 4, pp 1, dp 4 on 2x8: one stage's 16 ranks span both nodes,
+        // so the gradient ring bottlenecks on IB.
+        let t = Topology::hierarchical(ClusterTopology::dgx_a100(2), 4, 1, 4);
+        assert_eq!(t.dp_ring_for(0).kind, LinkKind::Infiniband);
+        // dp 2 fits one node: ring stays on NVLink.
+        let t2 = Topology::hierarchical(ClusterTopology::dgx_a100(2), 4, 2, 2);
+        assert_eq!(t2.dp_ring_for(0).kind, LinkKind::NvLink);
+        assert_eq!(t2.gpus(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "job needs")]
+    fn oversubscribed_cluster_panics() {
+        let _ = Topology::hierarchical(ClusterTopology::dgx_a100(1), 4, 4, 2);
+    }
+
+    #[test]
+    fn bw_scale_reaches_the_cluster_tiers() {
+        let t = Topology::hierarchical(ClusterTopology::dgx_a100(2), 4, 4, 1);
+        let s = t.with_bw_scale(0.5);
+        assert!((s.tp_link.bus_bw - 0.5 * t.tp_link.bus_bw).abs() < 1.0);
+        let c = s.cluster.as_ref().unwrap();
+        assert!(
+            (c.group_link(true).bus_bw - 0.5 * LinkSpec::infiniband().bus_bw).abs() < 1.0
+        );
     }
 }

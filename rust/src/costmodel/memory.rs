@@ -12,15 +12,29 @@ pub struct MemoryModel {}
 
 impl MemoryModel {
     /// Static (model-state) bytes per GPU for `layers` transformer layers
-    /// plus optional embedding, sharded over TP.
+    /// plus optional embedding, sharded over TP. Under ZeRO-1
+    /// (`setup.zero1`) the fp32 optimizer states (12 of the 16 bytes per
+    /// parameter) additionally shard across the DP group; fp16 weights
+    /// and gradients (4 bytes) stay replicated. At `dp == 1` or with
+    /// ZeRO off this is exactly the paper's 16 bytes/parameter.
     pub fn static_bytes(&self, setup: &TrainSetup, layers: usize, with_embedding: bool) -> f64 {
-        let per_layer = 16.0 * setup.model.params_per_layer() / setup.tp as f64;
+        let shard = if setup.zero1 { setup.dp.max(1) as f64 } else { 1.0 };
+        let per_param = 4.0 + 12.0 / shard;
+        let per_layer = per_param * setup.model.params_per_layer() / setup.tp as f64;
         let emb = if with_embedding {
-            16.0 * setup.model.params_embedding(setup.seq) / setup.tp as f64
+            per_param * setup.model.params_embedding(setup.seq) / setup.tp as f64
         } else {
             0.0
         };
         per_layer * layers as f64 + emb
+    }
+
+    /// fp16 gradient bytes of a stage's parameters (2 bytes/parameter,
+    /// never sharded — these are what the DP ring all-reduces).
+    pub fn grad_bytes(&self, setup: &TrainSetup, layers: usize, with_embedding: bool) -> f64 {
+        let params = setup.model.params_per_layer() * layers as f64
+            + if with_embedding { setup.model.params_embedding(setup.seq) } else { 0.0 };
+        2.0 * params / setup.tp as f64
     }
 
     /// Bytes of the layer-boundary activation (the checkpoint input of a
@@ -72,6 +86,22 @@ mod tests {
             (6e9..12e9).contains(&states),
             "model states {states:.3e} should be ~8-9GB"
         );
+    }
+
+    #[test]
+    fn zero1_shards_only_the_optimizer_states() {
+        let s = setup();
+        let m = MemoryModel::default();
+        let full = m.static_bytes(&s, 4, true);
+        // dp alone changes nothing without ZeRO.
+        let dp = s.clone().with_dp(4);
+        assert_eq!(m.static_bytes(&dp, 4, true), full);
+        // ZeRO-1 over dp=4: 4 + 12/4 = 7 bytes/param.
+        let z = dp.with_zero1(true);
+        let sharded = m.static_bytes(&z, 4, true);
+        assert!((sharded / full - 7.0 / 16.0).abs() < 1e-12, "{sharded} vs {full}");
+        // Gradients are 1/8 of the unsharded states either way.
+        assert!((m.grad_bytes(&z, 4, true) - full / 8.0).abs() < 1.0);
     }
 
     #[test]

@@ -5,7 +5,16 @@
 //! the calibrated substitute (DESIGN.md §2): op execution time from a
 //! roofline over FLOPs and bytes, collective time from ring all-reduce
 //! bandwidth terms, and memory from mixed-precision training accounting
-//! (16 bytes per parameter for model states, §2.1).
+//! (16 bytes per parameter for model states, §2.1; ZeRO-1 shards the
+//! fp32 optimizer states across DP when enabled).
+//!
+//! Communication pricing is topology-aware: [`Topology`] optionally
+//! carries a [`crate::topo::ClusterTopology`], and the per-stage
+//! accessors (`tp_link_for`, `pp_link_between`, `dp_ring_for`) resolve
+//! each parallel group's bottleneck edge under the Megatron rank
+//! placement. [`CostModel::layer_times_at`] prices a stage's collectives
+//! over that edge; without a cluster everything degenerates to the two
+//! scalar links bit-exactly.
 
 pub mod comm;
 pub mod compute;
@@ -47,8 +56,14 @@ impl CostModel {
 
     /// Execution time of one op (forward), seconds.
     pub fn op_time(&self, op: &Op) -> f64 {
+        self.op_time_over(op, &self.comm.tp_link)
+    }
+
+    /// [`Self::op_time`] with the comm ops priced over an explicit group
+    /// link — the topology-aware path. Compute ops are link-independent.
+    pub fn op_time_over(&self, op: &Op, link: &device::LinkSpec) -> f64 {
         if op.is_comm() {
-            self.comm.allreduce_time(op.comm_bytes)
+            self.comm.allreduce_over(link, op.comm_bytes)
         } else {
             self.compute.time(op.flops, op.bytes_accessed)
         }
@@ -59,16 +74,35 @@ impl CostModel {
         g.ops.iter().map(|o| self.op_time(o)).collect()
     }
 
+    /// Per-op forward times with the TP collectives priced over stage
+    /// `stage`'s actual group link (identical to [`Self::layer_times`]
+    /// on a uniform topology — same formula, same link).
+    pub fn layer_times_at(&self, g: &LayerGraph, stage: usize) -> Vec<f64> {
+        let link = self.topo.tp_link_for(stage);
+        g.ops.iter().map(|o| self.op_time_over(o, &link)).collect()
+    }
+
     /// Backward time of one op. Matmul backward does ~2x forward work
     /// (dX and dW); elementwise/norm backward ~1.5x; comms mirror forward.
     pub fn op_bwd_time(&self, op: &Op) -> f64 {
+        self.op_bwd_time_over(op, &self.comm.tp_link)
+    }
+
+    /// [`Self::op_bwd_time`] over an explicit group link.
+    pub fn op_bwd_time_over(&self, op: &Op, link: &device::LinkSpec) -> f64 {
         if op.is_comm() {
-            self.comm.allreduce_time(op.comm_bytes)
+            self.comm.allreduce_over(link, op.comm_bytes)
         } else if op.flops > op.bytes_accessed {
-            2.0 * self.op_time(op)
+            2.0 * self.op_time_over(op, link)
         } else {
-            1.5 * self.op_time(op)
+            1.5 * self.op_time_over(op, link)
         }
+    }
+
+    /// Per-op backward times for stage `stage`'s group link.
+    pub fn layer_bwd_times_at(&self, g: &LayerGraph, stage: usize) -> Vec<f64> {
+        let link = self.topo.tp_link_for(stage);
+        g.ops.iter().map(|o| self.op_bwd_time_over(o, &link)).collect()
     }
 }
 

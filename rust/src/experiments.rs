@@ -736,6 +736,20 @@ pub struct OverlapRun {
     /// Executed link-bandwidth multiplier (plans stay at 1.0).
     pub bw_scale: f64,
     pub report: SimReport,
+    /// The same cell **re-planned at the executed bandwidth** (plans and
+    /// execution both at `bw_scale` — no stale windows). `None` at plan
+    /// bandwidth, where the stale run already is the re-planned one. The
+    /// makespan delta against [`Self::report`] measures what the stale
+    /// plan-bandwidth windows cost.
+    pub replan: Option<SimReport>,
+}
+
+impl OverlapRun {
+    /// Stale-minus-replanned iteration seconds (positive = re-planning
+    /// at the executed bandwidth would have been faster).
+    pub fn replan_delta_secs(&self) -> Option<f64> {
+        self.replan.as_ref().map(|r| self.report.iteration_secs - r.iteration_secs)
+    }
 }
 
 /// Raw results behind `lynx figures --fig overlap` and `bench_overlap` /
@@ -761,20 +775,34 @@ pub fn overlap_runs(quick: bool) -> Vec<OverlapRun> {
     let cm = CostModel::new(Topology::nvlink(4, 4));
     // Plans are bandwidth-invariant by design, and the plan cache keys
     // on (role, layers, in-flight, policy): one evaluation core serves
-    // the whole sweep, so each (schedule, policy) plans once and every
-    // bw cell replays it (only the executed widths move).
+    // every stale cell, so each (schedule, policy) plans once and every
+    // bw cell replays it (only the executed widths move). The re-planned
+    // runs need per-bandwidth tables (their windows *are* the executed
+    // ones), shared across schedules and policies within one bw.
     let s0 = setup(model, 4, 4, mb);
     let tables = CostTables::new(&s0, &cm, &build_layer_graph(&s0));
     let mut cache = PlanCache::new();
     let mut runs = Vec::new();
-    for &kind in &kinds {
-        for &policy in &policies {
-            for &bw in &scales {
+    for &bw in &scales {
+        let mut replan_core = if (bw - 1.0).abs() > 1e-12 {
+            let exec_cm = cm.with_bw_scale(bw);
+            let t = CostTables::new(&s0, &exec_cm, &build_layer_graph(&s0));
+            Some((exec_cm, t, PlanCache::new()))
+        } else {
+            None
+        };
+        for &kind in &kinds {
+            for &policy in &policies {
                 let s = setup(model, 4, 4, mb);
                 let cfg = SimConfig::new(s, policy, PartitionMode::Dp)
                     .with_schedule(kind)
                     .with_bw(bw);
                 let (r, _) = crate::sim::simulate_cached(&cm, &cfg, &tables, &mut cache);
+                let replan = replan_core.as_mut().map(|(exec_cm, t, c)| {
+                    let cfg = SimConfig::new(setup(model, 4, 4, mb), policy, PartitionMode::Dp)
+                        .with_schedule(kind);
+                    crate::sim::simulate_cached(exec_cm, &cfg, t, c).0
+                });
                 runs.push(OverlapRun {
                     model,
                     micro_batch: mb,
@@ -782,6 +810,7 @@ pub fn overlap_runs(quick: bool) -> Vec<OverlapRun> {
                     policy,
                     bw_scale: bw,
                     report: r,
+                    replan,
                 });
             }
         }
@@ -800,6 +829,7 @@ pub fn overlap_sweep(quick: bool) -> FigureResult {
     let mut notes = Vec::new();
     let mut conserved = true;
     let mut full_at_plan_bw = true;
+    let mut worst_stale_delta = 0.0f64;
     for r in &runs {
         let planned = r.report.planned_overlap();
         let achieved = r.report.achieved_overlap();
@@ -807,6 +837,10 @@ pub fn overlap_sweep(quick: bool) -> FigureResult {
         conserved &= achieved <= planned + 1e-9;
         if r.bw_scale <= 1.0 + 1e-12 {
             full_at_plan_bw &= (achieved - planned).abs() <= 1e-9;
+        }
+        let delta = r.replan_delta_secs();
+        if let Some(d) = delta {
+            worst_stale_delta = worst_stale_delta.max(d);
         }
         rows.push(vec![
             r.schedule.label().to_string(),
@@ -822,6 +856,14 @@ pub fn overlap_sweep(quick: bool) -> FigureResult {
             },
             format!("{:.2}", 1e3 * absorbed),
             format!("{:.2}", 1e3 * r.report.total_exposed_paid()),
+            match &r.replan {
+                Some(rp) => format!("{:.3}", rp.iteration_secs),
+                None => "-".into(),
+            },
+            match delta {
+                Some(d) => format!("{:+.2}", 1e3 * d),
+                None => "-".into(),
+            },
         ]);
     }
     notes.push(format!(
@@ -832,6 +874,11 @@ pub fn overlap_sweep(quick: bool) -> FigureResult {
          spilled remainder runs on the critical path (achieved < planned)"
             .into(),
     );
+    notes.push(format!(
+        "replan column: plans remade at the executed bandwidth (no stale windows); \
+         worst stale-plan cost across the sweep: {:.2} ms/iter",
+        1e3 * worst_stale_delta
+    ));
     FigureResult {
         id: "overlap",
         title: "planned vs achieved recompute overlap across executed bandwidth (7B, batch 16, NVLink-4x4)"
@@ -846,6 +893,183 @@ pub fn overlap_sweep(quick: bool) -> FigureResult {
             "achieved/planned".into(),
             "absorbed ms".into(),
             "exposed ms".into(),
+            "replan iter (s)".into(),
+            "stale cost ms".into(),
+        ],
+        rows,
+        notes,
+    }
+}
+
+// ------------------------------------------------- topology experiment
+
+/// One row of the cluster-topology sweep: a heterogeneous 2-node fabric
+/// whose inter-node bandwidth varies while the intra-node fabric stays
+/// fixed, comparing topology-aware against topology-blind partitioning
+/// **executed on the same hierarchical topology**.
+#[derive(Debug, Clone)]
+pub struct TopoRun {
+    /// Swept inter-node bus bandwidth, GB/s.
+    pub inter_bw_gbps: f64,
+    /// Best of {topology-aware search, topology-blind candidate} — the
+    /// aware planner's final evaluation step always includes the blind
+    /// partition as a candidate, so it can never do worse.
+    pub aware: SimReport,
+    /// The topology-blind partition (searched on the uniform scalar
+    /// links) executed on the hierarchical topology.
+    pub blind: SimReport,
+    /// Per-stage forward-window capacity (CTime1 + CTime2) in seconds at
+    /// plan bandwidth — heterogeneous across the inter-node boundary.
+    pub stage_window_secs: Vec<f64>,
+}
+
+/// The topo sweep's fixed shape: 2 nodes × 6 GPUs (NVLink intra, IB
+/// inter), tp 4 × pp 3 — stage 1's TP group *straddles* the node
+/// boundary, so its collectives ride IB: wider windows, more comm. The
+/// partition search sees that through the per-stage tables.
+fn topo_sweep_topology(inter_bw_gbps: f64) -> Topology {
+    use crate::topo::ClusterTopology;
+    let cluster = ClusterTopology::parse("2x6")
+        .expect("static topo spec")
+        .with_inter_bw(inter_bw_gbps * 1e9);
+    Topology::hierarchical(cluster, 4, 3, 1)
+}
+
+/// Raw results behind `lynx figures --fig topo` and `bench_topo` /
+/// `BENCH_topo.json`.
+pub fn topo_runs(quick: bool) -> Vec<TopoRun> {
+    let sweeps: Vec<f64> = if quick { vec![5.0, 20.0] } else { vec![2.5, 5.0, 10.0, 20.0, 40.0] };
+    let (model, mb) = ("7B", 16usize);
+    // Topology-blind reference partition: searched once on the uniform
+    // scalar links (every stage pretends to sit on NVLink) — exactly
+    // what a fabric-unaware Algorithm 1 computes.
+    let s = TrainSetup::new(ModelConfig::by_name(model).unwrap(), 4, 3, mb, NUM_MICRO);
+    let uniform_cm = CostModel::new(Topology::nvlink(4, 3));
+    let g = build_layer_graph(&s);
+    let blind_part =
+        crate::plan::lynx_partition(&s, &uniform_cm, &g, PolicyKind::LynxHeu).partition;
+    let mut runs = Vec::new();
+    for &bw in &sweeps {
+        let cm = CostModel::new(topo_sweep_topology(bw));
+        let tables = CostTables::new(&s, &cm, &g);
+        let stage_window_secs: Vec<f64> = (0..s.pp)
+            .map(|st| tables.window_for(st)[0] + tables.window_for(st)[1])
+            .collect();
+        let blind = simulate(
+            &cm,
+            &SimConfig::new(s.clone(), PolicyKind::LynxHeu, PartitionMode::Dp)
+                .with_fixed_partition(blind_part.clone()),
+        );
+        let searched =
+            simulate(&cm, &SimConfig::new(s.clone(), PolicyKind::LynxHeu, PartitionMode::Lynx));
+        // Final evaluation step (paper Fig. 4 ⑦⑧): the aware planner also
+        // evaluates the blind candidate and keeps the better execution —
+        // the same selection rule the Lynx dual-run uses.
+        let (aware, _) = crate::sim::better_outcome((searched, ()), (blind.clone(), ()));
+        runs.push(TopoRun { inter_bw_gbps: bw, aware, blind, stage_window_secs });
+    }
+    runs
+}
+
+/// Max relative deviation between the legacy scalar-link path
+/// (`cluster: None`) and the identical topology expressed as a
+/// degenerate uniform cluster, across every schedule — the
+/// uniform-topology equivalence the topo subsystem guarantees. Gated at
+/// ~0 by `scripts/check.sh` via `BENCH_topo.json`.
+pub fn topo_uniform_equivalence_max_err() -> f64 {
+    use crate::topo::ClusterTopology;
+    let legacy_topo = Topology::nvlink(2, 4);
+    let cluster_topo = legacy_topo.clone().with_cluster(ClusterTopology::uniform(
+        legacy_topo.tp_link.clone(),
+        legacy_topo.pp_link.clone(),
+    ));
+    let mut worst = 0.0f64;
+    let rel = |a: f64, b: f64| {
+        let d = (a - b).abs();
+        if a.abs() > 1e-12 {
+            d / a.abs()
+        } else {
+            d
+        }
+    };
+    for kind in ScheduleKind::all() {
+        let mk = |topo: &Topology| {
+            let s = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, NUM_MICRO);
+            simulate(
+                &CostModel::new(topo.clone()),
+                &SimConfig::new(s, PolicyKind::LynxHeu, PartitionMode::Dp).with_schedule(kind),
+            )
+        };
+        let a = mk(&legacy_topo);
+        let b = mk(&cluster_topo);
+        worst = worst.max(rel(a.iteration_secs, b.iteration_secs));
+        worst = worst.max(rel(a.throughput, b.throughput));
+        for (x, y) in a.stages.iter().zip(&b.stages) {
+            worst = worst.max(rel(x.planned_overlap, y.planned_overlap));
+            worst = worst.max(rel(x.achieved_overlap, y.achieved_overlap));
+            worst = worst.max(rel(x.peak_mem, y.peak_mem));
+            worst = worst.max(rel(x.window_secs, y.window_secs));
+        }
+    }
+    worst
+}
+
+/// Topology sweep table: inter-node bandwidth vs per-stage windows and
+/// topology-aware vs topology-blind partition makespans.
+pub fn topo_sweep(quick: bool) -> FigureResult {
+    let runs = topo_runs(quick);
+    let mut rows = Vec::new();
+    let mut notes = Vec::new();
+    let mut aware_never_worse = true;
+    let mut hetero_windows = false;
+    for r in &runs {
+        let wmin = r.stage_window_secs.iter().cloned().fold(f64::MAX, f64::min);
+        let wmax = r.stage_window_secs.iter().cloned().fold(0.0f64, f64::max);
+        hetero_windows |= wmax > wmin * (1.0 + 1e-9);
+        aware_never_worse &= r.aware.iteration_secs <= r.blind.iteration_secs + 1e-9;
+        rows.push(vec![
+            format!("{:.1}", r.inter_bw_gbps),
+            format!("{:.3}", r.blind.iteration_secs),
+            format!("{:.3}", r.aware.iteration_secs),
+            format!("{:.2}x", r.blind.iteration_secs / r.aware.iteration_secs),
+            format!("{:?}", r.aware.partition),
+            format!("{:?}", r.blind.partition),
+            format!("{:.2}", 1e3 * wmin),
+            format!("{:.2}", 1e3 * wmax),
+            format!("{:.1}", 1e3 * r.aware.planned_overlap()),
+            format!("{:.1}", 1e3 * r.aware.achieved_overlap()),
+        ]);
+    }
+    notes.push(format!(
+        "aware <= blind on every row: {aware_never_worse}; per-stage windows \
+         heterogeneous (straddling stage rides IB): {hetero_windows}"
+    ));
+    notes.push(format!(
+        "uniform-topology equivalence max rel err: {:.2e}",
+        topo_uniform_equivalence_max_err()
+    ));
+    notes.push(
+        "2 nodes x 6 GPUs, tp 4 x pp 3: stage 1's TP group straddles the node \
+         boundary — slower IB widens its windows, and the topology-aware \
+         partition shifts layers accordingly"
+            .into(),
+    );
+    FigureResult {
+        id: "topo",
+        title: "cluster-topology sweep: inter-node bandwidth vs topology-aware partitioning \
+                (7B, batch 16, 2x6 NVLink/IB)"
+            .into(),
+        header: vec![
+            "ib GB/s".into(),
+            "blind iter (s)".into(),
+            "aware iter (s)".into(),
+            "speedup".into(),
+            "aware part".into(),
+            "blind part".into(),
+            "win min ms".into(),
+            "win max ms".into(),
+            "planned ms".into(),
+            "achieved ms".into(),
         ],
         rows,
         notes,
@@ -1022,5 +1246,6 @@ pub fn all_figures(quick: bool) -> Vec<FigureResult> {
         schedule_matrix(quick),
         search_cost(quick),
         overlap_sweep(quick),
+        topo_sweep(quick),
     ]
 }

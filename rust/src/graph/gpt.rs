@@ -78,6 +78,15 @@ pub struct TrainSetup {
     pub micro_batch: usize,
     /// Microbatches per global batch (pipeline depth).
     pub num_micro: usize,
+    /// Data-parallel world size: `dp` replicas of the whole (tp × pp)
+    /// pipeline, each processing `num_micro` microbatches per step and
+    /// all-reducing gradients at the end of the iteration. 1 = no DP
+    /// dimension (the paper setup).
+    pub dp: usize,
+    /// ZeRO-1: shard the fp32 optimizer states (12 of the 16 bytes per
+    /// parameter) across the DP group; fp16 weights and gradients stay
+    /// replicated. No effect at `dp == 1`.
+    pub zero1: bool,
     /// Sequence length.
     pub seq: usize,
     /// Sequence parallelism on top of TP (paper §8): shards the
@@ -87,7 +96,17 @@ pub struct TrainSetup {
 
 impl TrainSetup {
     pub fn new(model: ModelConfig, tp: usize, pp: usize, micro_batch: usize, num_micro: usize) -> Self {
-        TrainSetup { model, tp, pp, micro_batch, num_micro, seq: 1024, sequence_parallel: false }
+        TrainSetup {
+            model,
+            tp,
+            pp,
+            micro_batch,
+            num_micro,
+            dp: 1,
+            zero1: false,
+            seq: 1024,
+            sequence_parallel: false,
+        }
     }
 
     pub fn with_seq(mut self, seq: usize) -> Self {
@@ -95,14 +114,28 @@ impl TrainSetup {
         self
     }
 
-    /// Global batch size in samples.
+    /// Builder: set the DP world size.
+    pub fn with_dp(mut self, dp: usize) -> Self {
+        assert!(dp >= 1, "dp world size must be >= 1");
+        self.dp = dp;
+        self
+    }
+
+    /// Builder: enable ZeRO-1 optimizer-state sharding across DP.
+    pub fn with_zero1(mut self, on: bool) -> Self {
+        self.zero1 = on;
+        self
+    }
+
+    /// Global batch size in samples (every DP replica contributes
+    /// `num_micro` microbatches per step).
     pub fn global_batch(&self) -> usize {
-        self.micro_batch * self.num_micro
+        self.micro_batch * self.num_micro * self.dp
     }
 
     /// Total GPUs used.
     pub fn gpus(&self) -> usize {
-        self.tp * self.pp
+        self.tp * self.pp * self.dp
     }
 }
 
@@ -146,5 +179,16 @@ mod tests {
         assert_eq!(s.gpus(), 16);
         assert_eq!(s.seq, 1024);
         assert_eq!(s.with_seq(2048).seq, 2048);
+    }
+
+    #[test]
+    fn dp_scales_batch_and_world() {
+        let s = TrainSetup::new(ModelConfig::by_name("7B").unwrap(), 4, 4, 2, 8);
+        assert_eq!(s.dp, 1);
+        assert!(!s.zero1);
+        let d = s.with_dp(4).with_zero1(true);
+        assert_eq!(d.global_batch(), 64);
+        assert_eq!(d.gpus(), 64);
+        assert!(d.zero1);
     }
 }

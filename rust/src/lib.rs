@@ -33,6 +33,12 @@
 //!   paper's evaluation, plus per-schedule bubble ratios,
 //!   exact-vs-H1 peak-memory comparisons and the `--bw` overlap
 //!   validation sweep;
+//! * [`topo`] — the cluster-topology subsystem: hierarchical fabrics
+//!   (nodes × devices, NVLink/PCIe intra-node, IB inter-node), rank
+//!   placement for (pp, dp, tp) groups, and group-aware collective
+//!   pricing over each group's actual bottleneck edge. Per-stage window
+//!   capacities, boundary p2p widths and DP-ring costs all derive from
+//!   it; the uniform fabric reproduces the scalar link model bit-exactly;
 //! * [`profiler`] — analytic + PJRT wall-clock profiling (paper Fig. 4
 //!   "model profiler");
 //! * [`runtime`] — PJRT CPU runtime loading AOT-compiled HLO artifacts;
@@ -51,6 +57,7 @@ pub mod runtime;
 pub mod sched;
 pub mod sim;
 pub mod solver;
+pub mod topo;
 pub mod train;
 pub mod util;
 

@@ -45,6 +45,12 @@ pub struct PlanKey {
     /// budget a plan sees depends on both (retained bytes scale by the
     /// B-freed part; the excess is the fixed W reserve).
     pub n_batch_h1_q: u64,
+    /// FNV-1a hash (masked to 63 bits for JSON roundtripping) of the
+    /// stage's comm-window capacities. On a hierarchical fabric two
+    /// same-role stages can sit on different tiers — wider windows admit
+    /// different plans, so they must not share cache entries. Constant
+    /// on uniform topologies.
+    pub win_q: u64,
     pub policy: PolicyKind,
 }
 
@@ -59,9 +65,24 @@ impl PlanKey {
             n_layers: ctx.n_layers,
             n_batch_q: (ctx.n_batch_frac * Self::N_BATCH_SCALE).round() as u64,
             n_batch_h1_q: (ctx.n_batch_frac_h1 * Self::N_BATCH_SCALE).round() as u64,
+            win_q: window_bits(ctx),
             policy,
         }
     }
+}
+
+/// Hash of everything *stage-link-dependent* a plan can see through its
+/// context: the four window capacities. (The per-op comm times are a
+/// function of the same group link, so the windows subsume them.)
+fn window_bits(ctx: &StageCtx) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for w in ctx.fwd_window.iter().chain(ctx.bwd_window.iter()) {
+        for b in w.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h & 0x7fff_ffff_ffff_ffff
 }
 
 #[derive(Debug, Clone)]
@@ -102,6 +123,16 @@ impl PlanCache {
         for &t in tables.times.iter().chain(tables.bwd_times.iter()) {
             eat(t);
         }
+        // Per-stage topology-derived widths: two clusters with the same
+        // uniform links but different fabrics must not share a cache.
+        for w in &tables.stage_window {
+            eat(w[0]);
+            eat(w[1]);
+        }
+        for &(lat, bw) in tables.stage_p2p.iter().chain(tables.stage_dp_link.iter()) {
+            eat(lat);
+            eat(bw);
+        }
         eat(tables.usable_memory);
         eat(tables.static_per_layer);
         eat(tables.static_embedding);
@@ -110,10 +141,12 @@ impl PlanCache {
         eat(tables.w_residual_frac);
         let s = &tables.setup;
         format!(
-            "{}-tp{}-pp{}-mb{}x{}-seq{}{}-{}-{h:016x}",
+            "{}-tp{}-pp{}-dp{}{}-mb{}x{}-seq{}{}-{}-{h:016x}",
             s.model.name,
             s.tp,
             s.pp,
+            s.dp,
+            if s.zero1 { "z1" } else { "" },
             s.micro_batch,
             s.num_micro,
             s.seq,
@@ -174,7 +207,7 @@ impl PlanCache {
             .to_string();
         let mut entries = Json::Arr(vec![]);
         let mut keys: Vec<&PlanKey> = self.map.keys().collect();
-        keys.sort_by_key(|k| (k.role.label(), k.n_layers, k.n_batch_q, k.policy.label()));
+        keys.sort_by_key(|k| (k.role.label(), k.n_layers, k.n_batch_q, k.win_q, k.policy.label()));
         for key in keys {
             entries.push(dump_entry(key, &self.map[key].out));
         }
@@ -296,6 +329,7 @@ fn dump_entry(key: &PlanKey, out: &PlanOutcome) -> Json {
         .set("n_layers", Json::from(key.n_layers))
         .set("n_batch_q", Json::from(key.n_batch_q as i64))
         .set("n_batch_h1_q", Json::from(key.n_batch_h1_q as i64))
+        .set("win_q", Json::from(key.win_q as i64))
         .set("policy", Json::from(key.policy.label()))
         .set("search_secs", Json::from(out.search_secs))
         .set("oom", Json::from(out.oom))
@@ -309,6 +343,7 @@ fn parse_entry(e: &Json) -> Option<(PlanKey, PlanOutcome)> {
         n_layers: e.get("n_layers")?.as_usize()?,
         n_batch_q: u64::try_from(e.get("n_batch_q")?.as_i64()?).ok()?,
         n_batch_h1_q: u64::try_from(e.get("n_batch_h1_q")?.as_i64()?).ok()?,
+        win_q: u64::try_from(e.get("win_q")?.as_i64()?).ok()?,
         policy: PolicyKind::parse(e.get("policy")?.as_str()?)?,
     };
     let mut layers = Vec::new();
@@ -399,6 +434,28 @@ mod tests {
         c.get_or_plan(&t, &c2b, PolicyKind::Full);
         assert_eq!(c.solves(), 2);
         assert_eq!(c.hits(), 1);
+    }
+
+    #[test]
+    fn different_window_capacities_never_share_entries() {
+        // Two same-role, same-shape stages on different fabric tiers
+        // (wider windows) must key separately — and the key must be
+        // stable for identical windows.
+        let t = tables();
+        let mut c = PlanCache::new();
+        let ctx = t.build_ctx_1f1b(1, 8);
+        let mut wide = ctx.clone();
+        wide.fwd_window = [ctx.fwd_window[0] * 4.0, ctx.fwd_window[1] * 4.0];
+        wide.bwd_window = wide.fwd_window;
+        assert_ne!(PlanKey::of(&ctx, PolicyKind::Full), PlanKey::of(&wide, PolicyKind::Full));
+        assert_eq!(
+            PlanKey::of(&ctx, PolicyKind::Full),
+            PlanKey::of(&ctx.clone(), PolicyKind::Full)
+        );
+        c.get_or_plan(&t, &ctx, PolicyKind::Full);
+        c.get_or_plan(&t, &wide, PolicyKind::Full);
+        assert_eq!(c.solves(), 2);
+        assert_eq!(c.hits(), 0);
     }
 
     #[test]

@@ -73,9 +73,11 @@ pub fn heu_plan(
 }
 
 /// [`heu_plan`] reading graph, op times and the precomputed warm-start
-/// retention order from the memoized [`CostTables`].
+/// retention order from the memoized [`CostTables`]. The op times are
+/// the *stage's* (comm ops priced over its actual group link), matching
+/// the window capacities carried by `ctx`.
 pub fn heu_plan_cached(tables: &CostTables, ctx: &StageCtx, opts: &HeuOptions) -> PlanOutcome {
-    heu_plan_inner(&tables.g, ctx, &tables.times, opts, &tables.retain_order)
+    heu_plan_inner(&tables.g, ctx, tables.times_for(ctx.stage), opts, &tables.retain_order)
 }
 
 /// Warm-start retention order: ops with nonzero output by descending
@@ -235,7 +237,7 @@ pub fn heu_plan_with_budget_cached(
     heu_plan_with_budget_inner(
         &tables.g,
         ctx,
-        &tables.times,
+        tables.times_for(ctx.stage),
         opts,
         &tables.retain_order,
         per_layer_budget,

@@ -26,8 +26,11 @@
 //!    `CostTables::stage_cost` never re-walks `g.ops` for the
 //!    plan-independent terms.
 //! 2. [`cache::PlanCache`] memoizes `plan_stage` outcomes keyed by
-//!    `(stage-role, n_layers, n_batch, policy)` — the complete
-//!    dependency set of a stage plan. One cache is soundly shared across
+//!    `(stage-role, n_layers, n_batch, window-capacities, policy)` — the
+//!    complete dependency set of a stage plan (the window component is
+//!    constant on uniform fabrics and separates same-role stages whose
+//!    TP groups sit on different tiers of a hierarchical cluster). One
+//!    cache is soundly shared across
 //!    a whole partition search, across the greedy and exact-DP searches,
 //!    across pipeline schedules, and across policies (e.g. the
 //!    `experiments` sweeps) — and, with `--cache-dir`, across CLI

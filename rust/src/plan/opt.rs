@@ -93,7 +93,7 @@ pub fn opt_plan_cached(tables: &CostTables, ctx: &StageCtx, opts: &OptOptions) -
     opt_plan_inner(
         &tables.g,
         ctx,
-        &tables.times,
+        tables.times_for(ctx.stage),
         opts,
         tables.store_all_bytes,
         &tables.retain_order,

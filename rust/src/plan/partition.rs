@@ -561,10 +561,11 @@ fn run_dp(
     Some(part)
 }
 
-/// Recompute-free slot-time lower bound of stage `s` hosting `l` layers.
+/// Recompute-free slot-time lower bound of stage `s` hosting `l` layers
+/// (per-stage sums: a stage on the slow fabric tier has a higher floor).
 fn time_lower_bound(tables: &CostTables, s: usize, l: usize) -> f64 {
     let role = StageRole::of(s, tables.num_stages);
-    let mut t = (tables.fwd_layer + tables.bwd_layer) * l as f64;
+    let mut t = (tables.stage_fwd_layer[s] + tables.stage_bwd_layer[s]) * l as f64;
     if matches!(role, StageRole::First | StageRole::Solo) {
         t += tables.embed_fwd + tables.embed_bwd;
     }

@@ -99,8 +99,33 @@ pub struct CostTables {
     pub comm_layer: f64,
     /// Indices of the two forward all-reduce ops.
     pub comm_ops: [usize; 2],
-    /// Comm-window widths [CTime1, CTime2] (backward mirrors forward).
+    /// Comm-window widths [CTime1, CTime2] (backward mirrors forward)
+    /// under the topology's *uniform* TP link. Per-stage planning reads
+    /// [`Self::window_for`] — on a hierarchical fabric a stage whose TP
+    /// group straddles the inter-node edge gets wider windows.
     pub window: [f64; 2],
+    /// Per-stage per-op forward times: entry `s` prices the TP
+    /// collectives over stage `s`'s actual group link (every entry
+    /// equals [`Self::times`] on a uniform topology, bit-exactly — same
+    /// formula, same link).
+    pub stage_times: Vec<Vec<f64>>,
+    /// Per-stage per-op backward times.
+    pub stage_bwd_times: Vec<Vec<f64>>,
+    /// Per-stage Σ forward / Σ backward / Σ comm time over one layer.
+    pub stage_fwd_layer: Vec<f64>,
+    pub stage_bwd_layer: Vec<f64>,
+    pub stage_comm_layer: Vec<f64>,
+    /// Per-stage comm-window widths.
+    pub stage_window: Vec<[f64; 2]>,
+    /// Outgoing pipeline-boundary link `(latency, bus_bw)` of stage
+    /// `s → s+1`; the last entry repeats the uniform pp link (no
+    /// outgoing boundary).
+    pub stage_p2p: Vec<(f64, f64)>,
+    /// Boundary `s` rides the same fabric tier as stage `s`'s TP
+    /// collectives (shared-tier contention input for the event engine).
+    pub stage_p2p_shared_tier: Vec<bool>,
+    /// Per-stage DP gradient-ring bottleneck `(latency, bus_bw)`.
+    pub stage_dp_link: Vec<(f64, f64)>,
     /// Always-stored layer-boundary checkpoint bytes per layer-microbatch.
     pub boundary_bytes: f64,
     /// Prefix sums over per-op activation output bytes:
@@ -153,6 +178,43 @@ impl CostTables {
         let comm = g.comm_ops();
         let comm_ops = [comm[0], comm[1]];
         let window = [times[comm_ops[0]], times[comm_ops[1]]];
+
+        // Per-stage tables: each stage's TP collectives priced over its
+        // actual group link under the rank placement. On a uniform
+        // topology `tp_link_for` returns the scalar link, so every entry
+        // reproduces the scalar vectors bit-exactly (same code path).
+        let pp = setup.pp;
+        let mut stage_times = Vec::with_capacity(pp);
+        let mut stage_bwd_times = Vec::with_capacity(pp);
+        let mut stage_fwd_layer = Vec::with_capacity(pp);
+        let mut stage_bwd_layer = Vec::with_capacity(pp);
+        let mut stage_comm_layer = Vec::with_capacity(pp);
+        let mut stage_window = Vec::with_capacity(pp);
+        let mut stage_p2p = Vec::with_capacity(pp);
+        let mut stage_p2p_shared_tier = Vec::with_capacity(pp);
+        let mut stage_dp_link = Vec::with_capacity(pp);
+        for s in 0..pp {
+            let st = cm.layer_times_at(g, s);
+            let sb = cm.layer_bwd_times_at(g, s);
+            stage_fwd_layer.push(st.iter().sum());
+            stage_bwd_layer.push(sb.iter().sum());
+            stage_comm_layer.push(
+                g.ops
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, o)| o.is_comm())
+                    .map(|(i, _)| st[i] + sb[i])
+                    .sum(),
+            );
+            stage_window.push([st[comm_ops[0]], st[comm_ops[1]]]);
+            stage_times.push(st);
+            stage_bwd_times.push(sb);
+            let p2p = cm.topo.pp_link_between(s, s + 1);
+            stage_p2p.push((p2p.latency, p2p.bus_bw));
+            stage_p2p_shared_tier.push(cm.topo.boundary_shares_tp_tier(s));
+            let dpl = cm.topo.dp_ring_for(s);
+            stage_dp_link.push((dpl.latency, dpl.bus_bw));
+        }
 
         let mut out_bytes_prefix = Vec::with_capacity(g.ops.len() + 1);
         let mut acc = 0.0;
@@ -229,6 +291,15 @@ impl CostTables {
             comm_layer,
             comm_ops,
             window,
+            stage_times,
+            stage_bwd_times,
+            stage_fwd_layer,
+            stage_bwd_layer,
+            stage_comm_layer,
+            stage_window,
+            stage_p2p,
+            stage_p2p_shared_tier,
+            stage_dp_link,
             boundary_bytes: cm.memory.boundary_bytes(setup),
             out_bytes_prefix,
             store_all_bytes,
@@ -249,6 +320,29 @@ impl CostTables {
     /// Σ out_bytes over the op index range `lo..hi` in O(1).
     pub fn out_bytes_range(&self, lo: usize, hi: usize) -> f64 {
         self.out_bytes_prefix[hi] - self.out_bytes_prefix[lo]
+    }
+
+    /// Per-op forward times for `stage` (TP collectives priced over the
+    /// stage's actual group link).
+    pub fn times_for(&self, stage: usize) -> &[f64] {
+        &self.stage_times[stage]
+    }
+
+    /// Per-op backward times for `stage`.
+    pub fn bwd_times_for(&self, stage: usize) -> &[f64] {
+        &self.stage_bwd_times[stage]
+    }
+
+    /// Comm-window widths of `stage` — what the planners budget against
+    /// and what [`StageCtx::fwd_window`] carries.
+    pub fn window_for(&self, stage: usize) -> [f64; 2] {
+        self.stage_window[stage]
+    }
+
+    /// True when any two stages see different window capacities — i.e.
+    /// the fabric is heterogeneous from the planner's point of view.
+    pub fn windows_are_heterogeneous(&self) -> bool {
+        self.stage_window.iter().any(|w| *w != self.stage_window[0])
     }
 
     /// One layer's **forward segment pattern**: the op walk with compute
@@ -357,6 +451,7 @@ impl CostTables {
         debug_assert!(n_batch_frac > 0.0 && n_batch_frac.is_finite());
         debug_assert!(n_batch_frac_h1 > 0.0 && n_batch_frac_h1 <= n_batch_frac + 1e-12);
         let static_mem = self.static_mem(stage, n_layers);
+        let window = self.window_for(stage);
         StageCtx {
             n_layers,
             n_batch: (n_batch_frac.ceil() as usize).max(1),
@@ -366,9 +461,9 @@ impl CostTables {
             num_stages: self.num_stages,
             mem_budget: (self.usable_memory - static_mem).max(0.0),
             static_mem,
-            fwd_window: self.window,
+            fwd_window: window,
             // Backward all-reduces move the same bytes as forward.
-            bwd_window: self.window,
+            bwd_window: window,
             boundary_bytes: self.boundary_bytes,
         }
     }
@@ -404,8 +499,11 @@ impl CostTables {
     /// into a single pass.
     pub fn stage_cost(&self, ctx: &StageCtx, plan: &StagePlan) -> StageCost {
         let nl = ctx.n_layers as f64;
-        let mut fwd = self.fwd_layer * nl;
-        let mut bwd = self.bwd_layer * nl;
+        // Per-stage sums: a stage whose TP group straddles the slow
+        // inter-node tier pays more comm time (and offers wider windows).
+        let times = self.times_for(ctx.stage);
+        let mut fwd = self.stage_fwd_layer[ctx.stage] * nl;
+        let mut bwd = self.stage_bwd_layer[ctx.stage] * nl;
         let role = StageRole::of(ctx.stage, ctx.num_stages);
         if matches!(role, StageRole::First | StageRole::Solo) {
             fwd += self.embed_fwd;
@@ -422,15 +520,15 @@ impl CostTables {
             let l0 = &plan.layers[0];
             let k = plan.layers.len() as f64;
             (
-                l0.exposed_time(&self.times) * k,
-                l0.overlapped_time(&self.times) * k,
-                l0.retained_time(&self.times) * k,
+                l0.exposed_time(times) * k,
+                l0.overlapped_time(times) * k,
+                l0.retained_time(times) * k,
             )
         } else {
             (
-                plan.layers.iter().map(|l| l.exposed_time(&self.times)).sum(),
-                plan.layers.iter().map(|l| l.overlapped_time(&self.times)).sum(),
-                plan.layers.iter().map(|l| l.retained_time(&self.times)).sum(),
+                plan.layers.iter().map(|l| l.exposed_time(times)).sum(),
+                plan.layers.iter().map(|l| l.overlapped_time(times)).sum(),
+                plan.layers.iter().map(|l| l.retained_time(times)).sum(),
             )
         };
 
@@ -444,7 +542,7 @@ impl CostTables {
             exposed_recompute: exposed,
             overlapped_recompute: overlapped,
             retained_time: retained,
-            comm_time: self.comm_layer * nl,
+            comm_time: self.stage_comm_layer[ctx.stage] * nl,
             slot_time: fwd + bwd + exposed,
             peak_mem,
             static_mem: ctx.static_mem,
@@ -671,6 +769,56 @@ mod tests {
         let hcomp: f64 = half.iter().filter(|s| !s.is_comm()).map(|s| s.dur).sum();
         let fcomp: f64 = bwd.iter().filter(|s| !s.is_comm()).map(|s| s.dur).sum();
         assert!((hcomp - 0.5 * fcomp).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_topology_per_stage_tables_equal_the_scalars() {
+        let (setup, cm, g) = fixture();
+        let t = CostTables::new(&setup, &cm, &g);
+        assert!(!t.windows_are_heterogeneous());
+        for s in 0..setup.pp {
+            assert_eq!(t.times_for(s), &t.times[..], "stage {s}");
+            assert_eq!(t.bwd_times_for(s), &t.bwd_times[..], "stage {s}");
+            assert_eq!(t.window_for(s), t.window, "stage {s}");
+            assert_eq!(t.stage_fwd_layer[s], t.fwd_layer);
+            assert_eq!(t.stage_bwd_layer[s], t.bwd_layer);
+            assert_eq!(t.stage_comm_layer[s], t.comm_layer);
+            assert_eq!(t.stage_p2p[s], (cm.topo.pp_link.latency, cm.topo.pp_link.bus_bw));
+            assert!(!t.stage_p2p_shared_tier[s]);
+        }
+    }
+
+    #[test]
+    fn straddling_tp_group_widens_that_stages_windows() {
+        use crate::topo::ClusterTopology;
+        // 2 nodes x 6, tp 4, pp 3: stage 1's TP group crosses the IB
+        // edge — wider windows, more comm time, same compute.
+        let setup = TrainSetup::new(ModelConfig::by_name("7B").unwrap(), 4, 3, 2, 8);
+        let cm = CostModel::new(crate::costmodel::Topology::hierarchical(
+            ClusterTopology::parse("2x6").unwrap(),
+            4,
+            3,
+            1,
+        ));
+        let g = build_layer_graph(&setup);
+        let t = CostTables::new(&setup, &cm, &g);
+        assert!(t.windows_are_heterogeneous());
+        assert!(t.window_for(1)[0] > t.window_for(0)[0]);
+        assert!(t.window_for(1)[1] > t.window_for(0)[1]);
+        assert_eq!(t.window_for(0), t.window_for(2));
+        assert!(t.stage_comm_layer[1] > t.stage_comm_layer[0]);
+        // The straddling stage's ctx carries its own window caps.
+        let c0 = t.build_ctx_1f1b(0, 11);
+        let c1 = t.build_ctx_1f1b(1, 11);
+        assert!(c1.fwd_window[0] > c0.fwd_window[0]);
+        // Compute ops are link-independent: only comm entries differ.
+        for (i, op) in g.ops.iter().enumerate() {
+            if op.is_comm() {
+                assert!(t.times_for(1)[i] > t.times_for(0)[i]);
+            } else {
+                assert_eq!(t.times_for(1)[i], t.times_for(0)[i]);
+            }
+        }
     }
 
     #[test]

@@ -115,9 +115,21 @@ pub struct LinkCfg {
     /// P2P wire bandwidth, bytes/s; `INFINITY` degenerates to pure
     /// latency (the fixpoint engine's model).
     pub p2p_bandwidth: f64,
+    /// Per-boundary wire bandwidth overrides: entry `i` is the link
+    /// between stages `i` and `i + 1` (both directions). Boundaries
+    /// beyond the vector fall back to [`Self::p2p_bandwidth`]; empty =
+    /// uniform. This is how hierarchical fabrics reach the engine — an
+    /// inter-node cut carries a slower edge than an intra-node one.
+    pub edge_bandwidth: Vec<f64>,
     /// Serialize the p2p wire time onto the sender's comm stream so it
     /// contends with TP collectives (congested-fabric scenario).
     pub serialize_p2p_with_tp: bool,
+    /// Per-boundary shared-tier contention: boundary `i`'s wire
+    /// serializes with the sender's TP collectives even when the global
+    /// flag is off — the hierarchical generalisation of
+    /// `--p2p-over-tp` (an intra-node hop rides the same NVLink/PCIe
+    /// tier as the stage's TP traffic; an IB hop does not).
+    pub edge_shared_tier: Vec<bool>,
     pub dp_mode: DpMode,
 }
 
@@ -125,9 +137,26 @@ impl Default for LinkCfg {
     fn default() -> LinkCfg {
         LinkCfg {
             p2p_bandwidth: f64::INFINITY,
+            edge_bandwidth: Vec::new(),
             serialize_p2p_with_tp: false,
+            edge_shared_tier: Vec::new(),
             dp_mode: DpMode::Off,
         }
+    }
+}
+
+impl LinkCfg {
+    /// Wire bandwidth of the boundary between `src` and `dst`.
+    fn bandwidth_between(&self, src: usize, dst: usize) -> f64 {
+        let boundary = src.min(dst);
+        self.edge_bandwidth.get(boundary).copied().unwrap_or(self.p2p_bandwidth)
+    }
+
+    /// Does the boundary between `src` and `dst` contend with the
+    /// sender's TP traffic?
+    fn contends(&self, src: usize, dst: usize) -> bool {
+        self.serialize_p2p_with_tp
+            || self.edge_shared_tier.get(src.min(dst)).copied().unwrap_or(false)
     }
 }
 
@@ -154,8 +183,13 @@ pub struct StageSegments {
     /// Planned window recompute per comm segment of `bwd` (`BwdComm2`
     /// then `BwdComm1` per layer — backward walks the layer in reverse).
     pub bwd_rc: Vec<f64>,
-    /// P2P latency of this stage's outgoing link, seconds.
+    /// P2P latency of this stage's outgoing (downstream) link, seconds.
     pub p2p_latency: f64,
+    /// Latency of the stage's *incoming*-boundary link, used for its
+    /// upstream (gradient) sends on heterogeneous fabrics. `None` falls
+    /// back to [`Self::p2p_latency`] (the uniform model, and the scalar
+    /// wrapper's behaviour).
+    pub p2p_latency_up: Option<f64>,
     /// Activation bytes shipped per microbatch to the neighbouring stage.
     pub p2p_bytes: f64,
     /// End-of-iteration DP gradient all-reduce seconds (0 = none).
@@ -344,19 +378,23 @@ fn p2p_arrive(
     comm_spans: &mut [Vec<CommSpan>],
     comm_busy: &mut [f64],
 ) -> f64 {
-    let lat = segs[src].p2p_latency;
-    let bytes = segs[src].p2p_bytes;
-    let wire = if link.p2p_bandwidth.is_finite() && bytes > 0.0 {
-        bytes / link.p2p_bandwidth
+    // Upstream (gradient) sends ride the sender's *incoming* boundary on
+    // heterogeneous fabrics; downstream sends its outgoing one.
+    let lat = if src > dst {
+        segs[src].p2p_latency_up.unwrap_or(segs[src].p2p_latency)
     } else {
-        0.0
+        segs[src].p2p_latency
     };
+    let bytes = segs[src].p2p_bytes;
+    let bw = link.bandwidth_between(src, dst);
+    let wire = if bw.is_finite() && bytes > 0.0 { bytes / bw } else { 0.0 };
     if wire <= 0.0 {
         return t_ready + lat;
     }
+    let contends = link.contends(src, dst);
     let slot = link_free.entry((src, dst)).or_insert(0.0);
     let mut start = (*slot).max(t_ready);
-    if link.serialize_p2p_with_tp {
+    if contends {
         // First-fit gap among the sender's known comm spans (kept sorted
         // by start): skip every span that overlaps [start, start + wire).
         for cs in comm_spans[src].iter() {
@@ -372,7 +410,7 @@ fn p2p_arrive(
     }
     let end = start + wire;
     *slot = end;
-    if link.serialize_p2p_with_tp {
+    if contends {
         let span = CommSpan { start, end, tag: CommTag::P2p };
         // Insert at the sorted position so later first-fit scans (and
         // the Gantt comm row) see a chronological list.
@@ -1142,6 +1180,90 @@ mod tests {
         assert!(wired.makespan <= congested.makespan + 1e-9);
         // Congestion mode accounts the wire time on the sender's stream.
         assert!(congested.comm_spans[0].iter().any(|c| c.tag == CommTag::P2p));
+    }
+
+    #[test]
+    fn per_edge_bandwidth_overrides_the_uniform_wire() {
+        // One slow boundary must cost at least as much as the uniform
+        // fast fabric, and slowing any single edge further never helps.
+        let sched = ScheduleKind::OneFOneB.build(4, 8);
+        let mut segs = seg_stages(4, 2, 0.05, 0.08, 1.0, 0.0, 0.0, None, 1.0);
+        for s in &mut segs {
+            s.p2p_latency = 0.01;
+            s.p2p_bytes = 1e6;
+        }
+        let run = |edges: Vec<f64>| {
+            run_schedule_segments(
+                &segs,
+                &LinkCfg { p2p_bandwidth: 1e8, edge_bandwidth: edges, ..LinkCfg::default() },
+                sched.as_ref(),
+                false,
+            )
+            .makespan
+        };
+        let uniform = run(vec![]);
+        let explicit = run(vec![1e8, 1e8, 1e8]);
+        assert!((uniform - explicit).abs() < 1e-12, "{uniform} vs {explicit}");
+        for slow_edge in 0..3 {
+            let mut edges = vec![1e8, 1e8, 1e8];
+            edges[slow_edge] = 1e6;
+            let slowed = run(edges.clone());
+            assert!(slowed >= uniform - 1e-9, "edge {slow_edge}: {slowed} vs {uniform}");
+            // Monotone: slowing the same edge further never decreases.
+            edges[slow_edge] = 5e5;
+            assert!(run(edges) >= slowed - 1e-9, "edge {slow_edge} not monotone");
+        }
+    }
+
+    #[test]
+    fn shared_tier_edges_contend_like_p2p_over_tp() {
+        let sched = ScheduleKind::OneFOneB.build(4, 8);
+        let mut segs = seg_stages(4, 2, 0.05, 0.08, 1.0, 0.0, 0.0, None, 1.0);
+        for s in &mut segs {
+            s.p2p_latency = 0.01;
+            s.p2p_bytes = 1e6;
+        }
+        let base = LinkCfg { p2p_bandwidth: 1e7, ..LinkCfg::default() };
+        let free = run_schedule_segments(&segs, &base, sched.as_ref(), false);
+        let tiered = run_schedule_segments(
+            &segs,
+            &LinkCfg { edge_shared_tier: vec![true, false, false], ..base.clone() },
+            sched.as_ref(),
+            false,
+        );
+        let global = run_schedule_segments(
+            &segs,
+            &LinkCfg { serialize_p2p_with_tp: true, ..base },
+            sched.as_ref(),
+            false,
+        );
+        // Only the shared-tier boundary's sender records P2p spans.
+        assert!(tiered.comm_spans[0].iter().any(|c| c.tag == CommTag::P2p));
+        assert!(!tiered.comm_spans[2].iter().any(|c| c.tag == CommTag::P2p));
+        // Contention only adds constraints relative to the free wire.
+        assert!(free.makespan <= tiered.makespan + 1e-9);
+        assert!(free.makespan <= global.makespan + 1e-9);
+        assert!(global.comm_spans[2].iter().any(|c| c.tag == CommTag::P2p));
+    }
+
+    #[test]
+    fn upstream_latency_override_is_respected() {
+        // Heterogeneous upstream latency: raising it delays gradient
+        // arrival and can only extend the makespan.
+        let sched = ScheduleKind::OneFOneB.build(3, 6);
+        let mk = |up: Option<f64>| {
+            let mut segs = seg_stages(3, 2, 0.05, 0.08, 1.0, 0.0, 0.0, None, 1.0);
+            for s in &mut segs {
+                s.p2p_latency = 0.01;
+                s.p2p_latency_up = up;
+            }
+            run_schedule_segments(&segs, &LinkCfg::default(), sched.as_ref(), false).makespan
+        };
+        let same = mk(None);
+        let matched = mk(Some(0.01));
+        let slower = mk(Some(0.5));
+        assert!((same - matched).abs() < 1e-12, "{same} vs {matched}");
+        assert!(slower > same + 1e-9, "{slower} vs {same}");
     }
 
     #[test]

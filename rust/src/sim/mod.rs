@@ -9,7 +9,11 @@
 //! stage — compute and comm — plus a modeled inter-stage p2p link
 //! (latency + bytes/bandwidth, optionally contending with TP traffic)
 //! and an optional end-of-iteration DP gradient all-reduce
-//! ([`engine::DpMode`]).
+//! ([`engine::DpMode`]). Links are per-edge: on a hierarchical fabric
+//! ([`crate::topo`]) every pipeline boundary carries its own bandwidth
+//! ([`engine::LinkCfg::edge_bandwidth`]) and intra-node hops contend
+//! with the sender's TP tier ([`engine::LinkCfg::edge_shared_tier`]);
+//! the uniform topology degenerates to the scalar wire bit-exactly.
 //!
 //! The point of the segment model is that Lynx's overlap is **executed,
 //! not assumed**: window-planned recomputation (`LayerPlan` phase
@@ -51,6 +55,6 @@ pub use engine::{
 pub use fixpoint::run_schedule_fixpoint;
 pub use gantt::render_gantt;
 pub use runner::{
-    simulate, simulate_cached, simulate_traced, PartitionMode, SimConfig, SimReport,
-    StageReport,
+    better_outcome, simulate, simulate_cached, simulate_traced, PartitionMode, SimConfig,
+    SimReport, StageReport,
 };

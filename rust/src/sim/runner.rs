@@ -16,11 +16,12 @@ use super::engine::{
 use crate::costmodel::CostModel;
 use crate::graph::{build_layer_graph, TrainSetup};
 use crate::plan::{
-    dp_partition, lynx_partition_cached, CostTables, Phase, PlanCache, PolicyKind, SearchOptions,
-    StageCtx, StagePlan, StageRole,
+    dp_partition, lynx_partition_cached, CostTables, Phase, PlanCache, PlanOutcome, PolicyKind,
+    SearchOptions, StageCtx, StagePlan, StageRole,
 };
 use crate::plan::costeval::StageCost;
-use crate::sched::{ScheduleKind, Segment};
+use crate::sched::{PipelineSchedule, ScheduleKind, Segment};
+use crate::topo::dp_ring_allreduce_secs;
 use crate::util::json::Json;
 
 /// Partitioning mode for a simulation.
@@ -50,6 +51,11 @@ pub struct SimConfig {
     /// Serialize p2p wire time onto the sender's comm stream so it
     /// contends with TP collectives (`--p2p-over-tp`).
     pub p2p_over_tp: bool,
+    /// Execute this exact layer partition instead of searching —
+    /// topology experiments use it to run a *foreign* (e.g.
+    /// topology-blind) partition on this topology. Overrides
+    /// [`Self::partition`]; per-stage plans are still made normally.
+    pub fixed_partition: Option<Vec<usize>>,
 }
 
 impl SimConfig {
@@ -63,7 +69,13 @@ impl SimConfig {
             bw_scale: 1.0,
             dp_mode: DpMode::Off,
             p2p_over_tp: false,
+            fixed_partition: None,
         }
+    }
+
+    pub fn with_fixed_partition(mut self, partition: Vec<usize>) -> SimConfig {
+        self.fixed_partition = Some(partition);
+        self
     }
 
     pub fn with_schedule(mut self, schedule: ScheduleKind) -> SimConfig {
@@ -271,7 +283,7 @@ pub fn simulate_cached(
     tables: &CostTables,
     cache: &mut PlanCache,
 ) -> (SimReport, PipelineTrace) {
-    if cfg.partition == PartitionMode::Lynx {
+    if cfg.partition == PartitionMode::Lynx && cfg.fixed_partition.is_none() {
         let searched = simulate_one(cm, cfg, tables, cache);
         let dp = simulate_one(
             cm,
@@ -279,19 +291,28 @@ pub fn simulate_cached(
             tables,
             cache,
         );
-        return match (searched.0.oom, dp.0.oom) {
-            (false, true) => searched,
-            (true, false) => dp,
-            _ => {
-                if searched.0.throughput >= dp.0.throughput {
-                    searched
-                } else {
-                    dp
-                }
-            }
-        };
+        return better_outcome(searched, dp);
     }
     simulate_one(cm, cfg, tables, cache)
+}
+
+/// Lexicographic (feasibility, then throughput) choice between two
+/// simulated outcomes — the partition policy maker's final evaluation
+/// step (paper Fig. 4 ⑦⑧). Shared by the Lynx dual-run and the topo
+/// experiment's aware-vs-blind selection so the "never worse than the
+/// alternative candidate" guarantee cannot drift between them.
+pub fn better_outcome<T>(a: (SimReport, T), b: (SimReport, T)) -> (SimReport, T) {
+    match (a.0.oom, b.0.oom) {
+        (false, true) => a,
+        (true, false) => b,
+        _ => {
+            if a.0.throughput >= b.0.throughput {
+                a
+            } else {
+                b
+            }
+        }
+    }
 }
 
 /// Build one stage's segment expansion: per-layer compute/comm
@@ -318,15 +339,17 @@ fn stage_segments(
     let mut fwd_rc: Vec<f64> = Vec::new();
     let mut bwd: Vec<Segment> = Vec::new();
     let mut bwd_rc: Vec<f64> = Vec::new();
+    // Window recompute is priced at the stage's plan-time op costs
+    // (compute ops are bandwidth-independent; the stage's own tables
+    // match the window caps its plan was packed against).
+    let plan_times = tables.times_for(ctx.stage);
     if matches!(role, StageRole::First | StageRole::Solo) {
         fwd.push(Segment::comp(tables.embed_fwd));
     }
     for lp in &plan.layers {
         fwd.extend_from_slice(&fwd_pat);
-        // Window recompute is priced at plan-time op costs (compute ops
-        // are bandwidth-independent).
-        fwd_rc.push(lp.phase_time(&tables.times, Phase::FwdComm1));
-        fwd_rc.push(lp.phase_time(&tables.times, Phase::FwdComm2));
+        fwd_rc.push(lp.phase_time(plan_times, Phase::FwdComm1));
+        fwd_rc.push(lp.phase_time(plan_times, Phase::FwdComm2));
     }
     if role.is_last() {
         fwd.push(Segment::comp(tables.head_fwd));
@@ -336,8 +359,8 @@ fn stage_segments(
     for lp in plan.layers.iter().rev() {
         bwd.extend_from_slice(&bwd_pat);
         // Backward walks the layer in reverse: window 2 precedes 1.
-        bwd_rc.push(lp.phase_time(&tables.times, Phase::BwdComm2));
-        bwd_rc.push(lp.phase_time(&tables.times, Phase::BwdComm1));
+        bwd_rc.push(lp.phase_time(plan_times, Phase::BwdComm2));
+        bwd_rc.push(lp.phase_time(plan_times, Phase::BwdComm1));
     }
     if matches!(role, StageRole::First | StageRole::Solo) {
         bwd.push(Segment::comp(tables.embed_bwd * frac));
@@ -367,10 +390,26 @@ fn stage_segments(
     };
     let dp_secs = if dp_mode == DpMode::Off {
         0.0
-    } else {
-        // fp16 gradients are 1/8 of the 16-byte/param model states; a
-        // ring all-reduce moves ~2× the buffer over the inter-node link.
+    } else if tables.setup.dp <= 1 {
+        // Legacy single-replica pricing (PR-4 back-compat): fp16
+        // gradients are 1/8 of the 16-byte/param model states; a ring
+        // all-reduce moves ~2× the buffer over the inter-node link.
         exec_cm.comm.p2p_time(2.0 * ctx.static_mem / 8.0)
+    } else {
+        // Real DP group: ring all-reduce of the (unsharded) fp16
+        // gradients over the group's bottleneck edge under the rank
+        // placement — 2(d-1) latency hops, 2(d-1)/d of the buffer.
+        let link = exec_cm.topo.dp_ring_for(ctx.stage);
+        let grads = exec_cm.memory.grad_bytes(&tables.setup, ctx.n_layers, role.has_embedding());
+        dp_ring_allreduce_secs(&link, tables.setup.dp, grads)
+    };
+    // Boundary links: outgoing (downstream) and incoming (upstream) —
+    // distinct tiers when the stage sits next to an inter-node cut.
+    let p2p_latency = exec_cm.topo.pp_link_between(ctx.stage, ctx.stage + 1).latency;
+    let p2p_latency_up = if ctx.stage > 0 {
+        Some(exec_cm.topo.pp_link_between(ctx.stage - 1, ctx.stage).latency)
+    } else {
+        None
     };
     StageSegments {
         fwd,
@@ -379,10 +418,31 @@ fn stage_segments(
         exposed: cost.exposed_recompute,
         fwd_rc,
         bwd_rc,
-        p2p_latency: exec_cm.topo.pp_link.latency,
+        p2p_latency,
+        p2p_latency_up,
         p2p_bytes: tables.boundary_bytes,
         dp_secs,
     }
+}
+
+/// Plan every stage of an explicit partition through the cache (the
+/// even-split and fixed-partition paths).
+fn plan_partition(
+    tables: &CostTables,
+    cache: &mut PlanCache,
+    policy: PolicyKind,
+    sched: &dyn PipelineSchedule,
+    part: Vec<usize>,
+) -> (Vec<usize>, Vec<PlanOutcome>, f64) {
+    let mut plans = Vec::with_capacity(part.len());
+    let mut search = 0.0;
+    for (stage, &n_layers) in part.iter().enumerate() {
+        let ctx = tables.build_ctx_sched(stage, n_layers, sched);
+        let out = cache.get_or_plan(tables, &ctx, policy);
+        search += out.search_secs;
+        plans.push(out);
+    }
+    (part, plans, search)
 }
 
 fn simulate_one(
@@ -392,6 +452,24 @@ fn simulate_one(
     cache: &mut PlanCache,
 ) -> (SimReport, PipelineTrace) {
     let setup = &cfg.setup;
+    // The DP/TP/PP geometry lives both on the setup (batch math, graph)
+    // and on the topology (placement, link classes). A mismatch on a
+    // hierarchical fabric would price groups off the wrong edges — e.g.
+    // a dp-4 gradient ring over a link chosen as if there were one
+    // replica — so reject it outright. (Uniform topologies ignore the
+    // placement entirely; legacy tests construct those freely.)
+    if cm.topo.cluster.is_some() {
+        assert!(
+            cm.topo.tp == setup.tp && cm.topo.pp == setup.pp && cm.topo.dp == setup.dp,
+            "topology geometry tp{} pp{} dp{} must match the setup tp{} pp{} dp{}",
+            cm.topo.tp,
+            cm.topo.pp,
+            cm.topo.dp,
+            setup.tp,
+            setup.pp,
+            setup.dp,
+        );
+    }
     let sched = cfg.schedule.build(setup.pp, setup.num_micro);
     let search_opts = SearchOptions { schedule: Some(cfg.schedule), ..Default::default() };
 
@@ -399,20 +477,21 @@ fn simulate_one(
     // Both the plans and the partition search run against the executed
     // schedule's replayed in-flight counts (schedule-aware Algorithm 1),
     // so no post-search re-planning is needed.
-    let (partition, plans, search_secs) = match cfg.partition {
-        PartitionMode::Dp => {
-            let part = dp_partition(setup.model.layers, setup.pp);
-            let mut plans = Vec::with_capacity(setup.pp);
-            let mut search = 0.0;
-            for stage in 0..setup.pp {
-                let ctx = tables.build_ctx_sched(stage, part[stage], sched.as_ref());
-                let out = cache.get_or_plan(tables, &ctx, cfg.policy);
-                search += out.search_secs;
-                plans.push(out);
-            }
-            (part, plans, search)
+    let (partition, plans, search_secs) = match (&cfg.fixed_partition, cfg.partition) {
+        (Some(part), _) => {
+            assert_eq!(part.len(), setup.pp, "fixed partition must match pp");
+            assert_eq!(
+                part.iter().sum::<usize>(),
+                setup.model.layers,
+                "fixed partition must cover every layer"
+            );
+            plan_partition(tables, cache, cfg.policy, sched.as_ref(), part.clone())
         }
-        PartitionMode::Lynx => {
+        (None, PartitionMode::Dp) => {
+            let part = dp_partition(setup.model.layers, setup.pp);
+            plan_partition(tables, cache, cfg.policy, sched.as_ref(), part)
+        }
+        (None, PartitionMode::Lynx) => {
             let r = lynx_partition_cached(tables, cache, cfg.policy, &search_opts);
             (r.partition, r.plans, r.search_secs)
         }
@@ -420,14 +499,17 @@ fn simulate_one(
 
     // ---- execution cost model (bandwidth sweep) ----
     // Plans and budgets stay at the plan-bandwidth tables; the executed
-    // comm widths come from a link-scaled copy of the cost model.
+    // comm widths come from a link-scaled copy of the cost model,
+    // priced per stage (each stage's TP group over its actual edge).
     let exec_cm = if (cfg.bw_scale - 1.0).abs() < 1e-12 {
         cm.clone()
     } else {
         cm.with_bw_scale(cfg.bw_scale)
     };
-    let exec_times = exec_cm.layer_times(&tables.g);
-    let exec_bwd: Vec<f64> = tables.g.ops.iter().map(|o| exec_cm.op_bwd_time(o)).collect();
+    let exec_times: Vec<Vec<f64>> =
+        (0..setup.pp).map(|s| exec_cm.layer_times_at(&tables.g, s)).collect();
+    let exec_bwd: Vec<Vec<f64>> =
+        (0..setup.pp).map(|s| exec_cm.layer_bwd_times_at(&tables.g, s)).collect();
 
     // ---- per-stage costs + segments ----
     // The exact in-flight accounting drives the real budgets; the same
@@ -456,8 +538,8 @@ fn simulate_one(
         segments.push(stage_segments(
             tables,
             &exec_cm,
-            &exec_times,
-            &exec_bwd,
+            &exec_times[stage],
+            &exec_bwd[stage],
             &ctx,
             &plans[stage].plan,
             sched.backward_split(),
@@ -469,9 +551,22 @@ fn simulate_one(
 
     // ---- pipeline execution ----
     let lynx_absorb = cfg.policy.is_lynx();
+    // Per-boundary edges reach the engine only when a cluster is
+    // attached; the uniform path keeps the scalar wire bit-exactly.
+    let n_bounds = setup.pp.saturating_sub(1);
+    let (edge_bandwidth, edge_shared_tier) = if exec_cm.topo.cluster.is_some() {
+        (
+            (0..n_bounds).map(|b| exec_cm.topo.pp_link_between(b, b + 1).bus_bw).collect(),
+            (0..n_bounds).map(|b| exec_cm.topo.boundary_shares_tp_tier(b)).collect(),
+        )
+    } else {
+        (Vec::new(), Vec::new())
+    };
     let link = LinkCfg {
         p2p_bandwidth: exec_cm.topo.pp_link.bus_bw,
+        edge_bandwidth,
         serialize_p2p_with_tp: cfg.p2p_over_tp,
+        edge_shared_tier,
         dp_mode: cfg.dp_mode,
     };
     let trace = run_schedule_segments(&segments, &link, sched.as_ref(), lynx_absorb);
@@ -530,6 +625,13 @@ fn simulate_one(
     }
     if cfg.dp_mode != DpMode::Off {
         label.push_str(&format!(" dp-{}", cfg.dp_mode.label()));
+    }
+    if setup.dp > 1 {
+        label.push_str(&format!(
+            " dp{}{}",
+            setup.dp,
+            if setup.zero1 { "+zero1" } else { "" }
+        ));
     }
 
     let report = SimReport {
@@ -743,6 +845,82 @@ mod tests {
         // Slower links widen the windows: overlap stays fully achieved.
         let slow = at(0.25);
         assert!((slow.achieved_overlap() - slow.planned_overlap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fixed_partition_is_executed_verbatim() {
+        let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(2, 4));
+        let part = vec![10, 9, 7, 6];
+        let r = simulate(
+            &cm,
+            &SimConfig::new(setup, PolicyKind::Block, PartitionMode::Dp)
+                .with_fixed_partition(part.clone()),
+        );
+        assert_eq!(r.partition, part);
+        assert!(r.throughput > 0.0);
+    }
+
+    #[test]
+    fn real_dp_group_prices_the_gradient_ring() {
+        let cm = CostModel::new(Topology::nvlink(2, 4));
+        let mk = |dp: usize, mode: DpMode| {
+            let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8)
+                .with_dp(dp);
+            simulate(
+                &cm,
+                &SimConfig::new(setup, PolicyKind::Block, PartitionMode::Dp).with_dp(mode),
+            )
+        };
+        let off = mk(2, DpMode::Off);
+        let d2 = mk(2, DpMode::Serial);
+        let d4 = mk(4, DpMode::Serial);
+        // The sync costs time, and a wider group moves more wire bytes
+        // (2(d-1)/d) over more hops.
+        assert!(d2.iteration_secs > off.iteration_secs + 1e-9);
+        assert!(d4.iteration_secs > d2.iteration_secs + 1e-12);
+        // Throughput counts every replica's samples.
+        assert!(d2.config_label.contains("dp2"), "{}", d2.config_label);
+        let per_iter2 = d2.throughput * d2.iteration_secs;
+        let per_iter4 = d4.throughput * d4.iteration_secs;
+        assert!((per_iter4 / per_iter2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero1_shrinks_static_memory_in_reports() {
+        let cm = CostModel::new(Topology::nvlink(2, 4));
+        let mk = |zero1: bool| {
+            let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8)
+                .with_dp(4)
+                .with_zero1(zero1);
+            // Full recompute: the plan is budget-independent, so the
+            // report isolates the static-memory sharding.
+            simulate(&cm, &SimConfig::new(setup, PolicyKind::Full, PartitionMode::Dp))
+        };
+        let plain = mk(false);
+        let sharded = mk(true);
+        assert!(sharded.peak_mem() < plain.peak_mem() - 1.0);
+    }
+
+    #[test]
+    fn hierarchical_cluster_simulates_end_to_end() {
+        use crate::topo::ClusterTopology;
+        let topo =
+            Topology::hierarchical(ClusterTopology::parse("2x6").unwrap(), 4, 3, 1);
+        let cm = CostModel::new(topo);
+        let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 4, 3, 4, 8);
+        for kind in ScheduleKind::all() {
+            let r = simulate(
+                &cm,
+                &SimConfig::new(setup.clone(), PolicyKind::LynxHeu, PartitionMode::Dp)
+                    .with_schedule(kind),
+            );
+            assert!(r.throughput > 0.0, "{}", kind.label());
+            // Conservation holds on heterogeneous fabrics too.
+            for st in &r.stages {
+                assert!(st.achieved_overlap <= st.planned_overlap + 1e-9, "{}", kind.label());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! Physical cluster description: nodes × devices with per-tier links.
+
+use crate::costmodel::device::{LinkKind, LinkSpec};
+
+/// The fabric shape of a cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fabric {
+    /// Degenerate single-tier fabric: every TP collective prices over
+    /// `tp_link` and every pipeline boundary over `pp_link`, regardless
+    /// of placement — exactly the PR-4 scalar link model. The property
+    /// suite asserts that a `Uniform` cluster reproduces the
+    /// `cluster: None` scalar path bit-exactly, which pins the whole
+    /// per-stage derivation pipeline.
+    Uniform { tp_link: LinkSpec, pp_link: LinkSpec },
+    /// `nodes × gpus_per_node` with an intra-node tier (NVLink / PCIe)
+    /// and an inter-node tier (IB). Any group or boundary that straddles
+    /// a node boundary prices over `inter`.
+    Hierarchical {
+        nodes: usize,
+        gpus_per_node: usize,
+        intra: LinkSpec,
+        inter: LinkSpec,
+    },
+}
+
+/// A named cluster topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterTopology {
+    pub name: String,
+    pub fabric: Fabric,
+}
+
+impl ClusterTopology {
+    /// Uniform fabric carrying the legacy scalar links.
+    pub fn uniform(tp_link: LinkSpec, pp_link: LinkSpec) -> ClusterTopology {
+        ClusterTopology { name: "uniform".into(), fabric: Fabric::Uniform { tp_link, pp_link } }
+    }
+
+    /// Hierarchical fabric from explicit parts.
+    pub fn hierarchical(
+        name: impl Into<String>,
+        nodes: usize,
+        gpus_per_node: usize,
+        intra: LinkSpec,
+        inter: LinkSpec,
+    ) -> ClusterTopology {
+        assert!(nodes >= 1 && gpus_per_node >= 1, "cluster must have devices");
+        ClusterTopology {
+            name: name.into(),
+            fabric: Fabric::Hierarchical { nodes, gpus_per_node, intra, inter },
+        }
+    }
+
+    /// DGX-A100 preset: `nodes` × 8 A100-SXM over NVLink, ConnectX IB
+    /// between nodes.
+    pub fn dgx_a100(nodes: usize) -> ClusterTopology {
+        ClusterTopology::hierarchical(
+            format!("dgx-a100-{nodes}n"),
+            nodes,
+            8,
+            LinkSpec::nvlink(),
+            LinkSpec::infiniband(),
+        )
+    }
+
+    /// PCIe-box preset: `nodes` × 4 A100-PCIe sharing a PCIe switch, IB
+    /// between boxes (the paper's PCIe testbed shape).
+    pub fn pcie_box(nodes: usize) -> ClusterTopology {
+        ClusterTopology::hierarchical(
+            format!("pcie-box-{nodes}n"),
+            nodes,
+            4,
+            LinkSpec::pcie(),
+            LinkSpec::infiniband(),
+        )
+    }
+
+    /// Parse `"<nodes>x<gpus>[:key=val,...]"`. Keys (bandwidths in GB/s,
+    /// latencies in µs):
+    ///
+    /// * `nvlink=BW` / `pcie=BW` — intra-node tier kind + bus bandwidth;
+    /// * `ib=BW` — inter-node bus bandwidth;
+    /// * `intra-lat=US` / `inter-lat=US` — per-collective latencies.
+    ///
+    /// Defaults: NVLink intra, IB inter, at the preset calibrations.
+    pub fn parse(spec: &str) -> Result<ClusterTopology, String> {
+        let (shape, opts) = match spec.split_once(':') {
+            Some((s, o)) => (s, Some(o)),
+            None => (spec, None),
+        };
+        let (nodes_s, gpus_s) = shape
+            .split_once('x')
+            .ok_or_else(|| format!("topology {spec:?}: expected <nodes>x<gpus-per-node>"))?;
+        let nodes: usize = nodes_s
+            .parse()
+            .map_err(|_| format!("topology {spec:?}: bad node count {nodes_s:?}"))?;
+        let gpus: usize = gpus_s
+            .parse()
+            .map_err(|_| format!("topology {spec:?}: bad gpus-per-node {gpus_s:?}"))?;
+        if nodes == 0 || gpus == 0 {
+            return Err(format!("topology {spec:?}: zero-sized cluster"));
+        }
+        let mut intra = LinkSpec::nvlink();
+        let mut inter = LinkSpec::infiniband();
+        // Explicit latency overrides are applied *after* any link-class
+        // switch, so `pcie=12,intra-lat=30` and `intra-lat=30,pcie=12`
+        // agree and `pcie=..` alone keeps PCIe's calibrated latency.
+        let mut intra_lat: Option<f64> = None;
+        let mut inter_lat: Option<f64> = None;
+        if let Some(opts) = opts {
+            for kv in opts.split(',').filter(|s| !s.is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("topology {spec:?}: expected key=val, got {kv:?}"))?;
+                let num: f64 = v
+                    .parse()
+                    .map_err(|_| format!("topology {spec:?}: bad value {v:?} for {k}"))?;
+                if !(num.is_finite() && num > 0.0) {
+                    return Err(format!("topology {spec:?}: {k} must be positive"));
+                }
+                match k {
+                    "nvlink" => {
+                        intra = LinkSpec::nvlink();
+                        intra.bus_bw = num * 1e9;
+                    }
+                    "pcie" => {
+                        intra = LinkSpec::pcie();
+                        intra.bus_bw = num * 1e9;
+                    }
+                    "ib" | "inter" => inter.bus_bw = num * 1e9,
+                    "intra-lat" => intra_lat = Some(num * 1e-6),
+                    "inter-lat" => inter_lat = Some(num * 1e-6),
+                    other => {
+                        return Err(format!("topology {spec:?}: unknown key {other:?}"))
+                    }
+                }
+            }
+        }
+        if let Some(lat) = intra_lat {
+            intra.latency = lat;
+        }
+        if let Some(lat) = inter_lat {
+            inter.latency = lat;
+        }
+        Ok(ClusterTopology::hierarchical(spec.to_string(), nodes, gpus, intra, inter))
+    }
+
+    /// Total device count (`None` for the unbounded uniform fabric).
+    pub fn total_gpus(&self) -> Option<usize> {
+        match &self.fabric {
+            Fabric::Uniform { .. } => None,
+            Fabric::Hierarchical { nodes, gpus_per_node, .. } => Some(nodes * gpus_per_node),
+        }
+    }
+
+    /// Devices per node (`None` for uniform: one flat tier).
+    pub fn gpus_per_node(&self) -> Option<usize> {
+        match &self.fabric {
+            Fabric::Uniform { .. } => None,
+            Fabric::Hierarchical { gpus_per_node, .. } => Some(*gpus_per_node),
+        }
+    }
+
+    /// The link a group prices over, given whether it crosses nodes.
+    pub fn group_link(&self, crosses_nodes: bool) -> &LinkSpec {
+        match &self.fabric {
+            Fabric::Uniform { tp_link, .. } => tp_link,
+            Fabric::Hierarchical { intra, inter, .. } => {
+                if crosses_nodes {
+                    inter
+                } else {
+                    intra
+                }
+            }
+        }
+    }
+
+    /// The link a pipeline boundary prices over.
+    pub fn boundary_link(&self, crosses_nodes: bool) -> &LinkSpec {
+        match &self.fabric {
+            Fabric::Uniform { pp_link, .. } => pp_link,
+            Fabric::Hierarchical { intra, inter, .. } => {
+                if crosses_nodes {
+                    inter
+                } else {
+                    intra
+                }
+            }
+        }
+    }
+
+    /// Copy with every link's bus bandwidth scaled by `k` (latency
+    /// untouched) — the execution side of the `--bw` sweep.
+    pub fn with_bw_scale(&self, k: f64) -> ClusterTopology {
+        assert!(k.is_finite() && k > 0.0, "bandwidth scale must be positive");
+        let scale = |l: &LinkSpec| LinkSpec { bus_bw: l.bus_bw * k, ..l.clone() };
+        let fabric = match &self.fabric {
+            Fabric::Uniform { tp_link, pp_link } => {
+                Fabric::Uniform { tp_link: scale(tp_link), pp_link: scale(pp_link) }
+            }
+            Fabric::Hierarchical { nodes, gpus_per_node, intra, inter } => {
+                Fabric::Hierarchical {
+                    nodes: *nodes,
+                    gpus_per_node: *gpus_per_node,
+                    intra: scale(intra),
+                    inter: scale(inter),
+                }
+            }
+        };
+        ClusterTopology { name: self.name.clone(), fabric }
+    }
+
+    /// Copy with the inter-node bus bandwidth replaced (bytes/s) — the
+    /// `bench_topo` inter-node sweep. No-op on uniform fabrics.
+    pub fn with_inter_bw(&self, bus_bw: f64) -> ClusterTopology {
+        assert!(bus_bw.is_finite() && bus_bw > 0.0);
+        let mut c = self.clone();
+        if let Fabric::Hierarchical { inter, .. } = &mut c.fabric {
+            inter.bus_bw = bus_bw;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_hierarchical_and_sized() {
+        let d = ClusterTopology::dgx_a100(2);
+        assert_eq!(d.total_gpus(), Some(16));
+        assert_eq!(d.gpus_per_node(), Some(8));
+        assert_eq!(d.group_link(false).kind, LinkKind::NvLink);
+        assert_eq!(d.group_link(true).kind, LinkKind::Infiniband);
+        let p = ClusterTopology::pcie_box(3);
+        assert_eq!(p.total_gpus(), Some(12));
+        assert_eq!(p.group_link(false).kind, LinkKind::Pcie);
+    }
+
+    #[test]
+    fn parse_shape_and_overrides() {
+        let c = ClusterTopology::parse("2x6:nvlink=200,ib=25,inter-lat=8").unwrap();
+        assert_eq!(c.total_gpus(), Some(12));
+        let intra = c.group_link(false);
+        assert_eq!(intra.kind, LinkKind::NvLink);
+        assert!((intra.bus_bw - 200e9).abs() < 1.0);
+        let inter = c.group_link(true);
+        assert!((inter.bus_bw - 25e9).abs() < 1.0);
+        assert!((inter.latency - 8e-6).abs() < 1e-12);
+        // PCIe intra override changes the kind AND adopts PCIe's
+        // calibrated latency (not NVLink's), matching the pcie-box
+        // preset; an explicit intra-lat wins in either key order.
+        let p = ClusterTopology::parse("1x4:pcie=12").unwrap();
+        assert_eq!(p.group_link(false).kind, LinkKind::Pcie);
+        assert_eq!(p.group_link(false).latency, LinkSpec::pcie().latency);
+        let a = ClusterTopology::parse("1x4:pcie=12,intra-lat=30").unwrap();
+        let b = ClusterTopology::parse("1x4:intra-lat=30,pcie=12").unwrap();
+        assert_eq!(a.group_link(false), b.group_link(false));
+        assert!((a.group_link(false).latency - 30e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(ClusterTopology::parse("2").is_err());
+        assert!(ClusterTopology::parse("0x8").is_err());
+        assert!(ClusterTopology::parse("2x8:warp=9").is_err());
+        assert!(ClusterTopology::parse("2x8:ib=-1").is_err());
+        assert!(ClusterTopology::parse("2x8:ib").is_err());
+    }
+
+    #[test]
+    fn uniform_fabric_ignores_crossing() {
+        let u = ClusterTopology::uniform(LinkSpec::nvlink(), LinkSpec::infiniband());
+        assert_eq!(u.group_link(true), u.group_link(false));
+        assert_eq!(u.boundary_link(true).kind, LinkKind::Infiniband);
+        assert_eq!(u.total_gpus(), None);
+    }
+
+    #[test]
+    fn bw_scale_touches_every_tier() {
+        let c = ClusterTopology::dgx_a100(2).with_bw_scale(2.0);
+        assert!((c.group_link(false).bus_bw - 2.0 * LinkSpec::nvlink().bus_bw).abs() < 1.0);
+        assert!((c.group_link(true).bus_bw - 2.0 * LinkSpec::infiniband().bus_bw).abs() < 1.0);
+        // Latency untouched.
+        assert_eq!(c.group_link(false).latency, LinkSpec::nvlink().latency);
+        let i = ClusterTopology::dgx_a100(2).with_inter_bw(5e9);
+        assert!((i.group_link(true).bus_bw - 5e9).abs() < 1.0);
+        assert_eq!(i.group_link(false).bus_bw, LinkSpec::nvlink().bus_bw);
+    }
+}

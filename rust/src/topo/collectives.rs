@@ -1,0 +1,87 @@
+//! Group-aware collective cost formulas.
+//!
+//! All formulas price over a single [`LinkSpec`] — the *bottleneck* edge
+//! of the group, which the caller derives from the placement (a ring
+//! that straddles the node boundary moves every byte over the inter-node
+//! edge at the steady state, so the slowest edge gates the collective).
+
+use crate::costmodel::device::LinkSpec;
+
+/// Ring all-reduce / all-gather wall time for wire bytes that were
+/// **already scaled** by the ring factor (the graph builder emits
+/// `2(t-1)/t × buffer` for TP all-reduces): one latency term plus the
+/// wire over the group's bottleneck bus bandwidth. This is bit-identical
+/// to the legacy scalar `CommModel::allreduce_time` when `link` is the
+/// uniform TP link — the equivalence the uniform-topology property grid
+/// pins.
+pub fn group_allreduce_secs(link: &LinkSpec, wire_bytes: f64) -> f64 {
+    if wire_bytes <= 0.0 {
+        return 0.0;
+    }
+    link.latency + wire_bytes / link.bus_bw
+}
+
+/// Point-to-point transfer over an actual boundary edge.
+pub fn p2p_secs(link: &LinkSpec, bytes: f64) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    link.latency + bytes / link.bus_bw
+}
+
+/// DP gradient ring all-reduce over a `world`-wide group: `2(world-1)`
+/// hops of per-step latency plus `2(world-1)/world` of the *unscaled*
+/// gradient buffer over the bottleneck edge (reduce-scatter +
+/// all-gather, each rank forwarding its 1/world shard per step).
+/// Free for a single replica.
+pub fn dp_ring_allreduce_secs(link: &LinkSpec, world: usize, grad_bytes: f64) -> f64 {
+    if world <= 1 || grad_bytes <= 0.0 {
+        return 0.0;
+    }
+    let hops = 2 * (world - 1);
+    hops as f64 * link.latency
+        + (2.0 * (world - 1) as f64 / world as f64) * grad_bytes / link.bus_bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::device::LinkKind;
+
+    fn link(bw: f64, lat: f64) -> LinkSpec {
+        LinkSpec { kind: LinkKind::Infiniband, bus_bw: bw, latency: lat }
+    }
+
+    #[test]
+    fn allreduce_matches_the_legacy_scalar_formula() {
+        use crate::costmodel::CommModel;
+        let tp = LinkSpec::nvlink();
+        let pp = LinkSpec::infiniband();
+        let cm = CommModel::new(tp.clone(), pp.clone());
+        for bytes in [0.0, 1e6, 64e6, 1e9] {
+            assert_eq!(group_allreduce_secs(&tp, bytes), cm.allreduce_time(bytes));
+            assert_eq!(p2p_secs(&pp, bytes), cm.p2p_time(bytes));
+        }
+    }
+
+    #[test]
+    fn dp_ring_scales_with_world_size() {
+        let l = link(10e9, 5e-6);
+        assert_eq!(dp_ring_allreduce_secs(&l, 1, 1e9), 0.0);
+        let d2 = dp_ring_allreduce_secs(&l, 2, 1e9);
+        let d4 = dp_ring_allreduce_secs(&l, 4, 1e9);
+        let d8 = dp_ring_allreduce_secs(&l, 8, 1e9);
+        // Wire term grows as 2(d-1)/d -> 2: monotone, bounded.
+        assert!(d2 < d4 && d4 < d8, "{d2} {d4} {d8}");
+        assert!(d8 < 2.0 * 1e9 / 10e9 + 14.0 * 5e-6 + 1e-9);
+        // d=2 moves exactly one buffer's worth of bytes over the wire.
+        assert!((d2 - (2.0 * 5e-6 + 1e9 / 10e9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slower_bottleneck_costs_more() {
+        let fast = dp_ring_allreduce_secs(&link(20e9, 5e-6), 4, 1e9);
+        let slow = dp_ring_allreduce_secs(&link(5e9, 5e-6), 4, 1e9);
+        assert!(slow > 3.0 * fast);
+    }
+}

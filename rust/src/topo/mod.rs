@@ -1,0 +1,51 @@
+//! Cluster-topology subsystem: hierarchical fabrics, rank placement and
+//! group-aware collective pricing.
+//!
+//! Every communication width in the planner and the simulator used to be
+//! priced off two scalar links (`Topology::tp_link` / `pp_link`): one
+//! uniform TP-collective bandwidth for every stage and one uniform
+//! inter-stage p2p bandwidth for every pipeline boundary. Real clusters
+//! are hierarchical — NVLink (or PCIe) inside a node, InfiniBand across
+//! nodes — and both the paper's overlap windows (Eq. 15) and its
+//! recomputation-aware partitioning shift materially when a parallel
+//! group straddles fabric tiers: a TP group that crosses the inter-node
+//! edge gets *wider* collective windows (more recompute hides there),
+//! and a pipeline cut placed on the slow edge pays more p2p but buys
+//! overlap capacity.
+//!
+//! The subsystem has three parts:
+//!
+//! * [`ClusterTopology`] ([`cluster`]) — the physical fabric: `nodes ×
+//!   gpus_per_node` with per-tier link classes (intra-node NVLink/PCIe,
+//!   inter-node IB), presets (`dgx-a100`, `pcie-box`) and the CLI
+//!   `--topo <nodes>x<gpus>[:nvlink=..,ib=..]` parser. A degenerate
+//!   [`Fabric::Uniform`] carries the two legacy scalar links and prices
+//!   every group off them regardless of placement, which is the bridge
+//!   that lets the property suite assert the cluster-aware plumbing
+//!   collapses to the PR-4 scalar model bit-exactly.
+//! * [`Placement`] ([`placement`]) — maps `(pp stage, dp rank, tp rank)`
+//!   onto devices in Megatron rank order (tp innermost, then dp, then
+//!   pp; nodes filled in global-rank order) and answers the only
+//!   question pricing needs: does this group / this boundary cross the
+//!   node boundary?
+//! * [`collectives`] — the group-aware cost formulas: ring all-reduce
+//!   over the group's *slowest* edge, p2p over the actual boundary edge,
+//!   and the DP gradient ring (`2(d-1)` latency hops + `2(d-1)/d` of the
+//!   buffer over the bottleneck edge).
+//!
+//! Consumers: `costmodel::Topology` carries an optional
+//! `ClusterTopology` and exposes per-stage link accessors
+//! (`tp_link_for`, `pp_link_between`, `dp_ring_for`);
+//! `plan::CostTables` derives per-stage op times, window capacities and
+//! boundary links from them (so planner window capacities differ per
+//! stage and both partition searches become topology-aware);
+//! `sim::runner` feeds per-edge bandwidths and shared-tier contention
+//! flags into the event engine's `LinkCfg`.
+
+pub mod cluster;
+pub mod collectives;
+pub mod placement;
+
+pub use cluster::{ClusterTopology, Fabric};
+pub use collectives::{dp_ring_allreduce_secs, group_allreduce_secs, p2p_secs};
+pub use placement::{Device, Placement};

@@ -1,0 +1,144 @@
+//! Rank → device placement for hierarchical clusters.
+//!
+//! Megatron rank order: tensor-parallel ranks are innermost (consecutive
+//! global ranks, so TP collectives stay on the fastest fabric whenever
+//! the group fits in a node), data-parallel ranks next, pipeline stages
+//! outermost. Nodes are filled in global-rank order.
+
+/// A physical device slot: which node, which local GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Device {
+    pub node: usize,
+    pub slot: usize,
+}
+
+/// Maps `(pp stage, dp rank, tp rank)` onto devices of a
+/// `gpus_per_node`-wide cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub tp: usize,
+    pub pp: usize,
+    pub dp: usize,
+    pub gpus_per_node: usize,
+}
+
+impl Placement {
+    pub fn new(tp: usize, pp: usize, dp: usize, gpus_per_node: usize) -> Placement {
+        assert!(tp >= 1 && pp >= 1 && dp >= 1 && gpus_per_node >= 1);
+        Placement { tp, pp, dp, gpus_per_node }
+    }
+
+    /// Total devices the job occupies.
+    pub fn world(&self) -> usize {
+        self.tp * self.pp * self.dp
+    }
+
+    /// Global rank of `(stage, dp_rank, tp_rank)` — tp innermost, dp
+    /// next, pp outermost (the Megatron convention).
+    pub fn global_rank(&self, stage: usize, dp_rank: usize, tp_rank: usize) -> usize {
+        debug_assert!(stage < self.pp && dp_rank < self.dp && tp_rank < self.tp);
+        stage * (self.dp * self.tp) + dp_rank * self.tp + tp_rank
+    }
+
+    /// Device hosting a global rank (nodes filled in rank order).
+    pub fn device_of_rank(&self, rank: usize) -> Device {
+        Device { node: rank / self.gpus_per_node, slot: rank % self.gpus_per_node }
+    }
+
+    /// Device hosting `(stage, dp_rank, tp_rank)`.
+    pub fn device(&self, stage: usize, dp_rank: usize, tp_rank: usize) -> Device {
+        self.device_of_rank(self.global_rank(stage, dp_rank, tp_rank))
+    }
+
+    /// Does any of this stage's TP groups (one per dp rank) straddle a
+    /// node boundary? TP ranks are consecutive global ranks, so a group
+    /// crosses iff its first and last member land on different nodes.
+    /// The *worst* group across dp replicas prices the stage: replicas
+    /// execute in lockstep, so the slowest collective gates the step.
+    pub fn tp_group_crosses(&self, stage: usize) -> bool {
+        (0..self.dp).any(|d| {
+            self.device(stage, d, 0).node != self.device(stage, d, self.tp - 1).node
+        })
+    }
+
+    /// Does the pipeline boundary `stage → stage + 1` cross a node
+    /// boundary for any `(dp rank, tp rank)` peer pair? Any crossing
+    /// pair prices the whole boundary (the stage waits for its slowest
+    /// activation transfer).
+    pub fn pp_boundary_crosses(&self, boundary: usize) -> bool {
+        debug_assert!(boundary + 1 < self.pp);
+        self.dp_tp_pairs().any(|(d, t)| {
+            self.device(boundary, d, t).node != self.device(boundary + 1, d, t).node
+        })
+    }
+
+    /// Does any DP group of this stage (one per tp rank; members strided
+    /// by `tp` in global rank) span more than one node? The ring's
+    /// bottleneck edge is inter-node iff the sorted group does not fit a
+    /// node.
+    pub fn dp_group_crosses(&self, stage: usize) -> bool {
+        if self.dp <= 1 {
+            return false;
+        }
+        (0..self.tp).any(|t| {
+            self.device(stage, 0, t).node != self.device(stage, self.dp - 1, t).node
+        })
+    }
+
+    fn dp_tp_pairs(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let tp = self.tp;
+        (0..self.dp).flat_map(move |d| (0..tp).map(move |t| (d, t)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn megatron_rank_order_is_tp_innermost() {
+        let p = Placement::new(4, 2, 2, 8);
+        assert_eq!(p.global_rank(0, 0, 0), 0);
+        assert_eq!(p.global_rank(0, 0, 3), 3);
+        assert_eq!(p.global_rank(0, 1, 0), 4);
+        assert_eq!(p.global_rank(1, 0, 0), 8);
+        assert_eq!(p.world(), 16);
+    }
+
+    #[test]
+    fn aligned_tp_groups_stay_in_node() {
+        // 2 nodes x 8, tp 4: every TP group fits a node; the stage-0/1
+        // boundary is intra-node, 1/2 crosses.
+        let p = Placement::new(4, 4, 1, 8);
+        for s in 0..4 {
+            assert!(!p.tp_group_crosses(s), "stage {s}");
+        }
+        assert!(!p.pp_boundary_crosses(0));
+        assert!(p.pp_boundary_crosses(1));
+        assert!(!p.pp_boundary_crosses(2));
+    }
+
+    #[test]
+    fn misaligned_tp_group_straddles_the_node() {
+        // 2 nodes x 6, tp 4, pp 3: stage 1 hosts ranks 4..8, which
+        // straddle the node-0/node-1 boundary.
+        let p = Placement::new(4, 3, 1, 6);
+        assert!(!p.tp_group_crosses(0));
+        assert!(p.tp_group_crosses(1));
+        assert!(!p.tp_group_crosses(2));
+    }
+
+    #[test]
+    fn dp_groups_cross_when_replicas_span_nodes() {
+        // tp 4, dp 2 -> 8 ranks per stage; with 8-GPU nodes each stage's
+        // dp group stays inside a node.
+        let p = Placement::new(4, 2, 2, 8);
+        assert!(!p.dp_group_crosses(0));
+        // 4-GPU nodes: the two replicas of one stage land on different
+        // nodes, so the gradient ring rides the inter-node edge.
+        let q = Placement::new(4, 2, 2, 4);
+        assert!(q.dp_group_crosses(0));
+        // dp 1 never crosses.
+        assert!(!Placement::new(4, 2, 1, 2).dp_group_crosses(0));
+    }
+}

@@ -1,0 +1,189 @@
+//! Property grids for the cluster-topology subsystem (PR 5).
+//!
+//! 1. **Uniform equivalence**: a degenerate uniform cluster (the legacy
+//!    scalar links wrapped in `ClusterTopology::uniform`) reproduces the
+//!    `cluster: None` scalar path exactly — makespan, throughput,
+//!    per-stage windows, planned/achieved overlap and peak memory —
+//!    across every schedule × policy × shape. This pins the whole
+//!    per-stage derivation pipeline (tables, plan keys, engine edges,
+//!    DP pricing) to the PR-4 behaviour.
+//! 2. **Heterogeneity**: on a 2-node fabric whose middle stage's TP
+//!    group straddles the node boundary, that stage's window capacities
+//!    are strictly wider and its plans can hide more recompute.
+//! 3. **Monotonicity**: slowing any single fabric tier (intra bus,
+//!    inter bus) never decreases the simulated makespan, across
+//!    schedules.
+//! 4. **Topology-aware search**: the aware partition (best of searched
+//!    and even-split) is never worse than executing the
+//!    topology-blind partition on the same fabric.
+
+use lynx::costmodel::{CostModel, Topology};
+use lynx::graph::{ModelConfig, TrainSetup};
+use lynx::plan::{CostTables, PolicyKind};
+use lynx::sched::ScheduleKind;
+use lynx::sim::{simulate, PartitionMode, SimConfig};
+use lynx::topo::ClusterTopology;
+
+const EPS: f64 = 1e-9;
+
+fn sim_on(
+    topo: &Topology,
+    setup: &TrainSetup,
+    policy: PolicyKind,
+    kind: ScheduleKind,
+) -> lynx::sim::SimReport {
+    simulate(
+        &CostModel::new(topo.clone()),
+        &SimConfig::new(setup.clone(), policy, PartitionMode::Dp).with_schedule(kind),
+    )
+}
+
+#[test]
+fn grid_uniform_cluster_reproduces_the_scalar_engine() {
+    for &(tp, pp) in &[(2usize, 4usize), (4, 2), (2, 3)] {
+        let legacy = Topology::nvlink(tp, pp);
+        let uniform = legacy.clone().with_cluster(ClusterTopology::uniform(
+            legacy.tp_link.clone(),
+            legacy.pp_link.clone(),
+        ));
+        let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), tp, pp, 4, 8);
+        // The derived tables must be bit-identical before any sim runs.
+        let g = lynx::graph::build_layer_graph(&setup);
+        let ta = CostTables::new(&setup, &CostModel::new(legacy.clone()), &g);
+        let tb = CostTables::new(&setup, &CostModel::new(uniform.clone()), &g);
+        for s in 0..pp {
+            assert_eq!(ta.times_for(s), tb.times_for(s), "stage {s}");
+            assert_eq!(ta.window_for(s), tb.window_for(s), "stage {s}");
+            assert_eq!(ta.stage_p2p[s], tb.stage_p2p[s], "stage {s}");
+            assert_eq!(ta.stage_dp_link[s], tb.stage_dp_link[s], "stage {s}");
+        }
+        for kind in ScheduleKind::all() {
+            for policy in [PolicyKind::Block, PolicyKind::LynxHeu] {
+                let a = sim_on(&legacy, &setup, policy, kind);
+                let b = sim_on(&uniform, &setup, policy, kind);
+                let tag = format!("{} {} tp{tp} pp{pp}", kind.label(), policy.label());
+                assert!(
+                    (a.iteration_secs - b.iteration_secs).abs() < 1e-12,
+                    "{tag}: {} vs {}",
+                    a.iteration_secs,
+                    b.iteration_secs
+                );
+                assert_eq!(a.partition, b.partition, "{tag}");
+                assert_eq!(a.oom, b.oom, "{tag}");
+                for (s, (x, y)) in a.stages.iter().zip(&b.stages).enumerate() {
+                    assert!(
+                        (x.planned_overlap - y.planned_overlap).abs() < 1e-12
+                            && (x.achieved_overlap - y.achieved_overlap).abs() < 1e-12
+                            && (x.peak_mem - y.peak_mem).abs() < 1.0
+                            && (x.window_secs - y.window_secs).abs() < 1e-12,
+                        "{tag} stage {s}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn straddling_stage_gets_wider_windows_and_hides_more() {
+    // 2 nodes x 6, tp 4, pp 3: stage 1 rides IB.
+    let topo = Topology::hierarchical(ClusterTopology::parse("2x6").unwrap(), 4, 3, 1);
+    let setup = TrainSetup::new(ModelConfig::by_name("7B").unwrap(), 4, 3, 16, 8);
+    let cm = CostModel::new(topo.clone());
+    let g = lynx::graph::build_layer_graph(&setup);
+    let t = CostTables::new(&setup, &cm, &g);
+    assert!(t.windows_are_heterogeneous());
+    let w = |s: usize| t.window_for(s)[0] + t.window_for(s)[1];
+    assert!(w(1) > w(0) * 2.0, "stage 1 {} vs stage 0 {}", w(1), w(0));
+    assert!((w(0) - w(2)).abs() < 1e-15, "aligned stages match");
+    // The straddling stage pays strictly more TP comm per microbatch
+    // (same layer count as stage 0 under the even split of 32 over 3).
+    let r = sim_on(&topo, &setup, PolicyKind::LynxHeu, ScheduleKind::OneFOneB);
+    assert!(!r.oom);
+    assert_eq!(r.stages[0].n_layers, r.stages[1].n_layers);
+    assert!(
+        r.stages[1].comm_per_micro > r.stages[0].comm_per_micro + EPS,
+        "IB collectives not priced: {} vs {}",
+        r.stages[1].comm_per_micro,
+        r.stages[0].comm_per_micro
+    );
+    // The memory-pressured plans hide recomputation somewhere, and
+    // conservation still holds on the heterogeneous fabric.
+    assert!(r.planned_overlap() > 0.0);
+    for st in &r.stages {
+        assert!(st.achieved_overlap <= st.planned_overlap + EPS);
+    }
+}
+
+#[test]
+fn grid_slowing_any_tier_never_speeds_up_the_pipeline() {
+    let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 4, 3, 4, 8);
+    let base = ClusterTopology::parse("2x6").unwrap();
+    for kind in ScheduleKind::all() {
+        for policy in [PolicyKind::Block, PolicyKind::LynxHeu] {
+            let at = |c: &ClusterTopology| {
+                sim_on(
+                    &Topology::hierarchical(c.clone(), 4, 3, 1),
+                    &setup,
+                    policy,
+                    kind,
+                )
+                .iteration_secs
+            };
+            let reference = at(&base);
+            // Slow the inter-node tier 4x, then the whole fabric 4x.
+            let slow_inter = at(&base.with_inter_bw(2.5e9));
+            let slow_all = at(&base.with_bw_scale(0.25));
+            let tag = format!("{} {}", kind.label(), policy.label());
+            assert!(
+                slow_inter >= reference - EPS,
+                "{tag}: slower IB sped up the pipeline ({slow_inter} vs {reference})"
+            );
+            assert!(
+                slow_all >= slow_inter - EPS,
+                "{tag}: slower fabric sped up the pipeline ({slow_all} vs {slow_inter})"
+            );
+        }
+    }
+}
+
+#[test]
+fn aware_partition_never_loses_to_the_blind_one() {
+    let runs = lynx::experiments::topo_runs(true);
+    assert!(!runs.is_empty());
+    for r in &runs {
+        assert!(
+            r.blind.oom || r.aware.iteration_secs <= r.blind.iteration_secs + EPS,
+            "ib {} GB/s: aware {} vs blind {}",
+            r.inter_bw_gbps,
+            r.aware.iteration_secs,
+            r.blind.iteration_secs
+        );
+        // The sweep's fabric is genuinely heterogeneous.
+        let wmin = r.stage_window_secs.iter().cloned().fold(f64::MAX, f64::min);
+        let wmax = r.stage_window_secs.iter().cloned().fold(0.0f64, f64::max);
+        assert!(wmax > wmin + EPS, "windows uniform at ib {}", r.inter_bw_gbps);
+    }
+}
+
+#[test]
+fn replan_at_executed_bandwidth_is_reported() {
+    let runs = lynx::experiments::overlap_runs(true);
+    let mut any_replan = false;
+    for r in &runs {
+        match (&r.replan, r.bw_scale) {
+            (None, bw) => assert!((bw - 1.0).abs() < 1e-12, "missing replan at bw {bw}"),
+            (Some(rp), _) => {
+                any_replan = true;
+                // A re-planned run fully achieves its own planned
+                // overlap: its windows are the executed ones.
+                assert!(
+                    (rp.achieved_overlap() - rp.planned_overlap()).abs() < 1e-6,
+                    "replan not self-consistent at bw {}",
+                    r.bw_scale
+                );
+            }
+        }
+    }
+    assert!(any_replan, "sweep produced no re-planned cells");
+}

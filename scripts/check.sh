@@ -76,4 +76,31 @@ print(f'OK: {len(rows)} rows, achieved <= planned everywhere, '
       'gap visible above plan bandwidth')
 EOF
 
+echo "== bench: topo (quick inter-node sweep) =="
+LYNX_BENCH_QUICK=1 LYNX_BENCH_OUT="$PWD" cargo bench --bench bench_topo
+test -f BENCH_topo.json
+echo "BENCH_topo.json written"
+
+echo "== gate: uniform-topology equivalence + topology-aware partitioning =="
+python3 - <<'EOF'
+import json
+rows = [r for r in json.load(open('BENCH_topo.json')) if isinstance(r, dict)]
+sweep = [r for r in rows if 'inter_bw_gbps' in r]
+assert sweep, 'BENCH_topo.json has no sweep rows'
+eps = 1e-9
+worse = [r for r in sweep
+         if not r.get('blind_oom')
+         and r['aware_iteration_secs'] > r['blind_iteration_secs'] + eps]
+assert not worse, f'topology-aware partition worse than topology-blind: {worse}'
+flat = [r for r in sweep
+        if not (r['window_max_secs'] > r['window_min_secs'] + 1e-12)]
+assert not flat, f'per-stage window capacities not heterogeneous: {flat}'
+equiv = [r for r in rows if r.get('kind') == 'uniform-equivalence']
+assert equiv, 'uniform-equivalence witness row missing'
+assert equiv[0]['max_rel_err'] < 1e-9, \
+    f'uniform topology does not reproduce the scalar engine: {equiv[0]}'
+print(f'OK: {len(sweep)} sweep rows, aware <= blind everywhere, windows '
+      f"heterogeneous, uniform equivalence err {equiv[0]['max_rel_err']:.2e}")
+EOF
+
 echo "OK"
