@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
             ex.partition,
             fmt_duration(ex.makespan()),
             ex.evaluated,
-            ex.plan_solves,
+            ex.plan_solves(),
             100.0 * ex.hit_rate(),
         );
 

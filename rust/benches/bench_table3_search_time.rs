@@ -30,6 +30,13 @@ use lynx::plan::{
 use lynx::util::bench::Bench;
 use lynx::util::json::Json;
 
+/// Pull one counter out of a registry snapshot. The JSON artifact is a
+/// projection of the observability registry (`obs::metrics`), not of
+/// hand-threaded struct fields; a key a search never touched reads 0.
+fn counter(snap: &Json, name: &str) -> Json {
+    snap.expect("counters").get(name).cloned().unwrap_or(Json::Num(0.0))
+}
+
 /// Disk-persistence phase (ROADMAP item): the same partition search run
 /// cold (empty disk cache), persisted, then warm-from-disk in a fresh
 /// cache object — the JSON row separates warm-from-disk hits from
@@ -99,31 +106,34 @@ fn main() {
             format!("{}", r.pp),
             r.policy.label().to_string(),
             format!("{}", r.greedy.evaluated),
-            format!("{}", r.greedy.plan_solves),
-            format!("{}", r.pr1.plan_calls),
+            format!("{}", r.greedy.plan_solves()),
+            format!("{}", r.pr1.plan_calls()),
             format!("{:.1}x", reduction),
             format!("{:.0}%", 100.0 * r.greedy.hit_rate()),
             format!("{}", dp_beats_greedy),
         ]);
 
+        let gsnap = r.greedy.metrics.snapshot();
+        let esnap = r.exact.metrics.snapshot();
+        let psnap = r.pr1.metrics.snapshot();
         let mut jo = Json::obj();
         jo.set("model", Json::from(r.model))
             .set("pp", Json::from(r.pp))
             .set("policy", Json::from(r.policy.label()))
             // Memoized + incremental greedy (Algorithm 1).
             .set("evaluated", Json::from(r.greedy.evaluated))
-            .set("plan_solves", Json::from(r.greedy.plan_solves))
-            .set("cache_hits", Json::from(r.greedy.cache_hits))
+            .set("plan_solves", counter(&gsnap, "search.plan_solves"))
+            .set("cache_hits", counter(&gsnap, "search.cache_hits"))
             .set("cache_hit_rate", Json::from(r.greedy.hit_rate()))
-            .set("stage_evals", Json::from(r.greedy.stage_evals))
-            .set("probes_pruned", Json::from(r.greedy.probes_pruned))
+            .set("stage_evals", counter(&gsnap, "search.stage_evals"))
+            .set("probes_pruned", counter(&gsnap, "search.probes_pruned"))
             .set("wall_secs", Json::from(r.greedy.search_secs))
             .set("greedy_makespan_secs", Json::from(r.greedy.makespan()))
             .set("greedy_oom", Json::from(r.greedy.oom))
             // Even-split baseline + exact DP.
             .set("baseline_makespan_secs", Json::from(r.baseline.makespan()))
             .set("dp_cells_evaluated", Json::from(r.exact.evaluated))
-            .set("dp_plan_solves", Json::from(r.exact.plan_solves))
+            .set("dp_plan_solves", counter(&esnap, "search.plan_solves"))
             .set("dp_cache_hit_rate", Json::from(r.exact.hit_rate()))
             .set("dp_wall_secs", Json::from(r.exact.search_secs))
             .set("dp_makespan_secs", Json::from(r.exact.makespan()))
@@ -131,9 +141,9 @@ fn main() {
             .set("dp_beats_greedy", Json::from(dp_beats_greedy))
             // Measured PR-1 reference loop.
             .set("pr1_evaluated", Json::from(r.pr1.evaluated))
-            .set("pr1_plan_calls", Json::from(r.pr1.plan_calls))
-            .set("pr1_plan_solves", Json::from(r.pr1.plan_solves))
-            .set("pr1_stage_evals", Json::from(r.pr1.stage_evals))
+            .set("pr1_plan_calls", counter(&psnap, "pr1.plan_calls"))
+            .set("pr1_plan_solves", counter(&psnap, "pr1.plan_solves"))
+            .set("pr1_stage_evals", counter(&psnap, "pr1.stage_evals"))
             .set("pr1_wall_secs", Json::from(r.pr1.search_secs))
             .set("greedy_solve_reduction", Json::from(reduction))
             .set(
@@ -164,9 +174,9 @@ fn main() {
 
     // Sweep-level summary row (the ISSUE-2 acceptance numbers, plus the
     // ISSUE-3 makespan-bound pruning total).
-    let total_pr1: usize = runs.iter().map(|r| r.pr1.plan_calls).sum();
-    let total_solves: usize = runs.iter().map(|r| r.greedy.plan_solves).sum();
-    let total_pruned: usize = runs.iter().map(|r| r.greedy.probes_pruned).sum();
+    let total_pr1: usize = runs.iter().map(|r| r.pr1.plan_calls()).sum();
+    let total_solves: usize = runs.iter().map(|r| r.greedy.plan_solves()).sum();
+    let total_pruned: usize = runs.iter().map(|r| r.greedy.probes_pruned()).sum();
     let mut summary = Json::obj();
     summary
         .set("summary", Json::from(true))

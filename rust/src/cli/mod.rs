@@ -11,15 +11,17 @@
 use crate::costmodel::{CostModel, Topology};
 use crate::experiments;
 use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
+use crate::obs::{partition_report, run_report};
 use crate::plan::{
     dp_partition_result_cached, exact_dp_partition, lynx_partition_cached, CostTables,
-    PlanCache, PolicyKind, SearchKind, SearchOptions,
+    PartitionResult, PlanCache, PolicyKind, SearchKind, SearchOptions,
 };
 use crate::profiler::profile_model;
 use crate::sched::ScheduleKind;
-use crate::sim::{simulate_cached, DpMode, PartitionMode, SimConfig};
+use crate::sim::{simulate_observed, DpMode, PartitionMode, SimConfig};
 use crate::train::{train, TrainConfig, TrainPolicy};
 use crate::util::argparse::{opt, Args, OptSpec};
+use crate::util::json::Json;
 use crate::util::stats::fmt_bytes;
 use crate::util::warn::warn_once;
 use anyhow::{anyhow, Result};
@@ -27,7 +29,13 @@ use std::path::Path;
 use std::time::Duration;
 
 const USAGE: &str = "lynx <simulate|plan|partition|figures|train|profile> [options]
-       lynx <subcommand> --help";
+       lynx <subcommand> --help
+
+Inspecting a run: `simulate --gantt` renders an ASCII timeline;
+`--trace-out f.json` writes the same recorded spans as Chrome-trace
+JSON (open in Perfetto / chrome://tracing; flow arrows link each
+overlapped recompute to the collective hiding it); `--metrics-out`
+writes a versioned JSON report (see README \"Inspecting a run\").";
 
 fn common_specs() -> Vec<OptSpec> {
     vec![
@@ -76,6 +84,19 @@ fn common_specs() -> Vec<OptSpec> {
         opt("quick", "reduced configs for smoke runs", false, None),
         opt("out", "write figure JSON to this directory", true, None),
         opt("gantt", "render an ASCII pipeline gantt chart", false, None),
+        // observability artifacts
+        opt(
+            "trace-out",
+            "write the run's span timeline as Chrome-trace JSON (open in Perfetto or chrome://tracing)",
+            true,
+            None,
+        ),
+        opt(
+            "metrics-out",
+            "write a versioned JSON run report (simulate: lynx.report.v1; partition: lynx.partition_report.v1)",
+            true,
+            None,
+        ),
     ]
 }
 
@@ -279,13 +300,13 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
         p2p_over_tp,
         fixed_partition: None,
     };
-    let (r, trace) = simulate_cached(&cm, &cfg, &tables, &mut cache);
+    let (r, trace, obs) = simulate_observed(&cm, &cfg, &tables, &mut cache);
     close_cache(a, &cache)?;
     println!("{}", r.to_json().pretty());
     if a.has("gantt") {
-        use crate::sim::{render_gantt, StageTiming};
+        use crate::sim::{render_gantt_recorded, StageTiming};
         // Scalar timings only feed the renderer's B-span split; the
-        // trace itself carries the executed two-stream timeline.
+        // recording carries the executed two-stream timeline.
         let timings: Vec<StageTiming> = r
             .stages
             .iter()
@@ -296,7 +317,23 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
                 p2p: cm.comm.p2p_time(cm.memory.boundary_bytes(&setup)),
             })
             .collect();
-        println!("{}", render_gantt(&timings, &trace, 110));
+        println!("{}", render_gantt_recorded(&timings, &obs.recording, trace.bwd_frac, 110));
+    }
+    if let Some(path) = a.get("trace-out") {
+        let extra = [
+            ("config", Json::from(r.config_label.clone())),
+            ("schedule", Json::from(r.schedule.label())),
+        ];
+        std::fs::write(path, obs.recording.to_chrome_trace(&extra).pretty())?;
+        eprintln!("wrote trace {path}");
+    }
+    if let Some(path) = a.get("metrics-out") {
+        // One registry for the report: engine counters plus whatever the
+        // planner/cache layer recorded while building the plans.
+        let mut metrics = obs.metrics;
+        metrics.merge(cache.metrics());
+        std::fs::write(path, run_report(&r, &trace, &metrics).pretty())?;
+        eprintln!("wrote report {path}");
     }
     Ok(if r.oom { 1 } else { 0 })
 }
@@ -366,11 +403,11 @@ fn cmd_partition(a: &Args) -> Result<i32> {
         dp.makespan() / lx.makespan(),
         lx.search_secs,
         lx.evaluated,
-        lx.plan_solves,
+        lx.plan_solves(),
         100.0 * lx.hit_rate(),
         lx.oom,
     );
-    let result = if search == SearchKind::Dp {
+    let exact = if search == SearchKind::Dp {
         let ex = exact_dp_partition(&tables, &mut cache, policy, &opts);
         println!(
             "lynx-dp-exact:  {:?} makespan {:.3}ms ({:.2}x, search {:.2}s, {} cells, \
@@ -380,15 +417,26 @@ fn cmd_partition(a: &Args) -> Result<i32> {
             dp.makespan() / ex.makespan(),
             ex.search_secs,
             ex.evaluated,
-            ex.plan_solves,
+            ex.plan_solves(),
             100.0 * ex.hit_rate(),
             ex.oom,
         );
-        ex
+        Some(ex)
     } else {
-        lx
+        None
     };
+    if let Some(path) = a.get("metrics-out") {
+        let mut searches: Vec<(&str, &PartitionResult)> = vec![("dp", &dp), ("greedy", &lx)];
+        if let Some(ex) = &exact {
+            searches.push(("exact-dp", ex));
+        }
+        let report =
+            partition_report(policy.label(), schedule.label(), &searches, cache.metrics());
+        std::fs::write(path, report.pretty())?;
+        eprintln!("wrote report {path}");
+    }
     close_cache(a, &cache)?;
+    let result = exact.unwrap_or(lx);
     Ok(if result.oom { 1 } else { 0 })
 }
 
@@ -676,6 +724,85 @@ mod tests {
         ]))
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn simulate_writes_trace_and_report_artifacts() {
+        let dir = std::env::temp_dir().join("lynx_cli_obs_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let tr = dir.join("t.json");
+        let mr = dir.join("m.json");
+        let code = run(&sv(&[
+            "simulate",
+            "--model",
+            "1.3B",
+            "--tp",
+            "2",
+            "--pp",
+            "4",
+            "--micro-batch",
+            "4",
+            "--policy",
+            "block",
+            "--schedule",
+            "zbv",
+            "--trace-out",
+            tr.to_str().unwrap(),
+            "--metrics-out",
+            mr.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let t = Json::parse(&std::fs::read_to_string(&tr).unwrap()).unwrap();
+        assert_eq!(
+            t.expect("otherData").expect("schema").as_str(),
+            Some("lynx.trace.v1")
+        );
+        assert!(matches!(t.expect("traceEvents"), Json::Arr(_)));
+        let m = Json::parse(&std::fs::read_to_string(&mr).unwrap()).unwrap();
+        assert_eq!(m.expect("schema").as_str(), Some(crate::obs::REPORT_SCHEMA));
+        assert_eq!(m.expect("stages").as_arr().unwrap().len(), 4);
+        assert!(m.expect("metrics").expect("counters").get("engine.items.fwd").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partition_writes_partition_report() {
+        let dir = std::env::temp_dir().join("lynx_cli_obs_part_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mr = dir.join("p.json");
+        let code = run(&sv(&[
+            "partition",
+            "--model",
+            "1.3B",
+            "--tp",
+            "2",
+            "--pp",
+            "4",
+            "--micro-batch",
+            "4",
+            "--policy",
+            "block",
+            "--search",
+            "dp",
+            "--metrics-out",
+            mr.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let m = Json::parse(&std::fs::read_to_string(&mr).unwrap()).unwrap();
+        assert_eq!(
+            m.expect("schema").as_str(),
+            Some(crate::obs::PARTITION_REPORT_SCHEMA)
+        );
+        let searches = m.expect("searches").as_arr().unwrap();
+        assert_eq!(searches.len(), 3, "dp + greedy + exact-dp");
+        for s in searches {
+            assert!(s.expect("metrics").get("counters").is_some());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1105,14 +1105,14 @@ impl SearchRun {
     /// solver-runs-only ratio is [`Self::greedy_solve_reduction_strict`];
     /// both go into `BENCH_search.json`.
     pub fn greedy_solve_reduction(&self) -> f64 {
-        self.pr1.plan_calls as f64 / (self.greedy.plan_solves.max(1)) as f64
+        self.pr1.plan_calls() as f64 / (self.greedy.plan_solves().max(1)) as f64
     }
 
     /// Conservative variant: PR-1's actual solver runs (its per-search
     /// `(n_layers, stage)` cache misses) over the greedy's marginal
     /// solves on the shared cache.
     pub fn greedy_solve_reduction_strict(&self) -> f64 {
-        self.pr1.plan_solves as f64 / (self.greedy.plan_solves.max(1)) as f64
+        self.pr1.plan_solves() as f64 / (self.greedy.plan_solves().max(1)) as f64
     }
 
     /// Lexicographic dominance of the exact DP over the greedy result:
@@ -1181,14 +1181,14 @@ pub fn search_cost(quick: bool) -> FigureResult {
     for r in &runs {
         worst_reduction = worst_reduction.min(r.greedy_solve_reduction());
         dp_never_worse &= r.dp_dominates();
-        total_pr1_calls += r.pr1.plan_calls;
-        total_solves += r.greedy.plan_solves;
+        total_pr1_calls += r.pr1.plan_calls();
+        total_solves += r.greedy.plan_solves();
         rows.push(vec![
             r.model.to_string(),
             format!("{}", r.pp),
             r.policy.label().to_string(),
-            format!("{}", r.pr1.plan_calls),
-            format!("{}", r.greedy.plan_solves),
+            format!("{}", r.pr1.plan_calls()),
+            format!("{}", r.greedy.plan_solves()),
             format!("{:.1}x", r.greedy_solve_reduction()),
             format!("{:.0}%", 100.0 * r.greedy.hit_rate()),
             format!("{:.0}%", 100.0 * r.exact.hit_rate()),

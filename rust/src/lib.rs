@@ -33,6 +33,11 @@
 //!   paper's evaluation, plus per-schedule bubble ratios,
 //!   exact-vs-H1 peak-memory comparisons and the `--bw` overlap
 //!   validation sweep;
+//! * [`obs`] — observability: typed span tracing on per-stage
+//!   compute/comm tracks with a Chrome-trace/Perfetto exporter
+//!   (`--trace-out`), an explicit label-keyed metrics registry threaded
+//!   through the cache/planners/searches/engine, and versioned JSON run
+//!   reports (`--metrics-out`);
 //! * [`topo`] — the cluster-topology subsystem: hierarchical fabrics
 //!   (nodes × devices, NVLink/PCIe intra-node, IB inter-node), rank
 //!   placement for (pp, dp, tp) groups, and group-aware collective
@@ -51,6 +56,7 @@ pub mod cli;
 pub mod costmodel;
 pub mod experiments;
 pub mod graph;
+pub mod obs;
 pub mod plan;
 pub mod profiler;
 pub mod runtime;

@@ -1,0 +1,259 @@
+//! Label-keyed metrics registry: counters, gauges and summary
+//! histograms, snapshot to JSON.
+//!
+//! Registries are plain values passed down explicitly (no globals, no
+//! interior mutability): a subsystem that wants to be counted takes a
+//! `&mut MetricsRegistry` and bumps canonical dotted names
+//! (`"cache.hits"`, `"search.plan_solves"`, `"planner.heu.solves"`).
+//! Worker threads record into a local registry and [`MetricsRegistry::merge`]
+//! back — every combinator is order-independent, so threaded searches
+//! stay deterministic.
+//!
+//! Storage is `BTreeMap`-backed, so [`MetricsRegistry::snapshot`] is
+//! deterministic byte-for-byte: the same run always serialises the same
+//! JSON. Counters are exact `u64`s (snapshots stay exact below 2^53);
+//! histograms keep the order-independent summary (count / sum / min /
+//! max) rather than buckets — enough for the bench emitters and run
+//! reports without a bucketing policy to tune.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Order-independent summary of observed values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSummary {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl HistogramSummary {
+    fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    fn merge(&mut self, other: &HistogramSummary) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    fn new(v: f64) -> HistogramSummary {
+        HistogramSummary { count: 1, sum: v, min: v, max: v }
+    }
+}
+
+/// The registry: three value families keyed by canonical dotted names.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, HistogramSummary>,
+}
+
+/// Render a `name{k=v,...}` label-keyed series name. Labels are sorted
+/// by the caller's ordering; pass them pre-sorted for canonical keys.
+pub fn labeled(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let body: Vec<String> = labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    format!("{name}{{{}}}", body.join(","))
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Bump a counter by one.
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Bump a counter by `delta`.
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Read a counter (0 when never bumped).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge to an absolute value (last write wins).
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Read a gauge.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record one observation into a summary histogram.
+    pub fn observe(&mut self, name: &str, value: f64) {
+        match self.histograms.get_mut(name) {
+            Some(h) => h.observe(value),
+            None => {
+                self.histograms.insert(name.to_string(), HistogramSummary::new(value));
+            }
+        }
+    }
+
+    /// Read a histogram summary.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSummary> {
+        self.histograms.get(name)
+    }
+
+    /// Fold another registry into this one (counters and histogram
+    /// summaries add; gauges take the other side's value). Used to
+    /// combine worker-thread registries — addition commutes, so the
+    /// merged result is independent of worker interleaving.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.histograms {
+            match self.histograms.get_mut(k) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.histograms.insert(k.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Deterministic JSON snapshot:
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {name:
+    /// {count,sum,min,max}}}`. Counter values below 2^53 are exact.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.set(k, Json::from(*v as f64));
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges.set(k, Json::from(*v));
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &self.histograms {
+            let mut hj = Json::obj();
+            hj.set("count", Json::from(h.count as f64))
+                .set("sum", Json::from(h.sum))
+                .set("min", Json::from(h.min))
+                .set("max", Json::from(h.max));
+            hists.set(k, hj);
+        }
+        let mut out = Json::obj();
+        out.set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_default_to_zero() {
+        let mut m = MetricsRegistry::new();
+        assert_eq!(m.counter("cache.hits"), 0);
+        m.inc("cache.hits");
+        m.add("cache.hits", 3);
+        assert_eq!(m.counter("cache.hits"), 4);
+    }
+
+    #[test]
+    fn gauges_last_write_wins() {
+        let mut m = MetricsRegistry::new();
+        m.set_gauge("engine.makespan_secs", 1.5);
+        m.set_gauge("engine.makespan_secs", 2.5);
+        assert_eq!(m.gauge("engine.makespan_secs"), Some(2.5));
+    }
+
+    #[test]
+    fn histograms_summarise() {
+        let mut m = MetricsRegistry::new();
+        m.observe("planner.heu.search_secs", 2.0);
+        m.observe("planner.heu.search_secs", 4.0);
+        let h = m.histogram("planner.heu.search_secs").unwrap();
+        assert_eq!(h.count, 2);
+        assert_eq!(h.sum, 6.0);
+        assert_eq!(h.min, 2.0);
+        assert_eq!(h.max, 4.0);
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let mk = |hits: u64, obs: &[f64]| {
+            let mut m = MetricsRegistry::new();
+            m.add("hits", hits);
+            for &v in obs {
+                m.observe("t", v);
+            }
+            m
+        };
+        let (a, b) = (mk(2, &[1.0, 5.0]), mk(3, &[0.5]));
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.counter("hits"), 5);
+        assert_eq!(ab.histogram("t").unwrap().min, 0.5);
+        assert_eq!(ab.histogram("t").unwrap().max, 5.0);
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_and_exact() {
+        let mut m = MetricsRegistry::new();
+        m.add("b.second", 7);
+        m.add("a.first", (1u64 << 53) - 1);
+        m.set_gauge("g", 0.25);
+        m.observe("h", 3.0);
+        let s1 = m.snapshot().dump();
+        let s2 = m.snapshot().dump();
+        assert_eq!(s1, s2);
+        let back = Json::parse(&s1).unwrap();
+        assert_eq!(
+            back.get("counters").unwrap().get("a.first").unwrap().as_f64().unwrap(),
+            ((1u64 << 53) - 1) as f64
+        );
+        // BTreeMap ordering: "a.first" serialises before "b.second".
+        assert!(s1.find("a.first").unwrap() < s1.find("b.second").unwrap());
+    }
+
+    #[test]
+    fn labeled_series_names() {
+        assert_eq!(labeled("plan.solves", &[]), "plan.solves");
+        assert_eq!(
+            labeled("plan.solves", &[("policy", "lynx-heu"), ("stage", "3")]),
+            "plan.solves{policy=lynx-heu,stage=3}"
+        );
+    }
+
+    #[test]
+    fn empty_registry_snapshot_shape() {
+        let m = MetricsRegistry::new();
+        assert!(m.is_empty());
+        let s = m.snapshot();
+        assert!(s.get("counters").is_some());
+        assert!(s.get("gauges").is_some());
+        assert!(s.get("histograms").is_some());
+    }
+}

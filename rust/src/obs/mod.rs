@@ -1,0 +1,34 @@
+//! Observability: event tracing, metrics, and machine-readable reports.
+//!
+//! One spine for everything a run can tell you about itself, split into
+//! three pieces that share no state but compose in the runner:
+//!
+//! * [`trace`] — typed spans on per-stage compute/comm tracks, recorded
+//!   by the simulation engine at execution time with sim-clock
+//!   timestamps (deterministic; no wall clock anywhere near a span).
+//!   The span taxonomy and track model are documented on
+//!   [`trace::SpanKind`]; [`trace::SpanRecorder::to_chrome_trace`]
+//!   exports Chrome-trace/Perfetto JSON (`lynx simulate --trace-out`)
+//!   with process = stage, thread = stream, and flow events linking
+//!   each overlapped recompute phase to the collective that hid it.
+//!   The ASCII gantt renders from the same recorded spans, so the two
+//!   views cannot disagree.
+//! * [`metrics`] — a label-keyed counter/gauge/histogram registry
+//!   passed down explicitly (no globals). The plan cache, both
+//!   partition searches, and the HEU/OPT planners record into it;
+//!   bench emitters read from [`metrics::MetricsRegistry::snapshot`].
+//! * [`report`] — versioned JSON run reports (`--metrics-out`): schema
+//!   `lynx.report.v1` for a simulated iteration (per-stage bubble
+//!   breakdown, overlap efficiency, exact-vs-H1 memory peaks, registry
+//!   snapshot) and `lynx.partition_report.v1` for partition searches.
+//!   Bump the version constants in [`report`] when a field changes
+//!   meaning; `scripts/validate_obs.py` checks artifacts against the
+//!   current schemas.
+
+pub mod metrics;
+pub mod report;
+pub mod trace;
+
+pub use metrics::{labeled, HistogramSummary, MetricsRegistry};
+pub use report::{partition_report, run_report, PARTITION_REPORT_SCHEMA, REPORT_SCHEMA};
+pub use trace::{Span, SpanKind, SpanRecorder, Track, TraceSink, NO_INDEX};

@@ -1,0 +1,215 @@
+//! Versioned machine-readable run reports (`--metrics-out`).
+//!
+//! Two schemas, both plain JSON with a `schema` tag so downstream
+//! tooling can dispatch and `scripts/validate_obs.py` can gate shape:
+//!
+//! * `lynx.report.v1` ([`run_report`]) — one simulated iteration:
+//!   headline numbers, a per-stage bubble breakdown (warmup / stall /
+//!   tail idle plus the exposed-recompute and comm-serialized seconds
+//!   paid on the critical path), overlap efficiency, memory peaks under
+//!   the exact and H1 accountings, and the run's metrics-registry
+//!   snapshot.
+//! * `lynx.partition_report.v1` ([`partition_report`]) — one partition
+//!   search invocation: per-search partitions, makespans and
+//!   search-counter snapshots plus the shared plan-cache snapshot.
+//!
+//! Everything is computed from the executed [`PipelineTrace`] and the
+//! [`crate::sim::SimReport`] — no second accounting path that could
+//! drift from what the engine measured.
+
+use super::metrics::MetricsRegistry;
+use crate::plan::PartitionResult;
+use crate::sim::{PipelineTrace, SimReport};
+use crate::util::json::Json;
+
+/// Current iteration-report schema tag.
+pub const REPORT_SCHEMA: &str = "lynx.report.v1";
+/// Current partition-report schema tag.
+pub const PARTITION_REPORT_SCHEMA: &str = "lynx.partition_report.v1";
+
+/// Overlap efficiency: achieved / planned, defined as 1.0 when nothing
+/// was planned (an empty window set is vacuously fully achieved).
+fn efficiency(achieved: f64, planned: f64) -> f64 {
+    if planned > 0.0 {
+        achieved / planned
+    } else {
+        1.0
+    }
+}
+
+/// Build the `lynx.report.v1` JSON for one simulated iteration.
+///
+/// The per-stage bubble breakdown decomposes each stage's timeline:
+///
+/// * `warmup_secs` — idle before the stage's first item starts;
+/// * `stall_secs` — residual (post-absorption) dependency stalls
+///   between items: window seconds minus the recompute absorbed into
+///   them;
+/// * `tail_secs` — remaining idle (cool-down after the stage's last
+///   item until the pipeline drains);
+/// * `exposed_recompute_secs` — recompute paid on the critical path
+///   (busy, not idle — listed because it is overhead the plan failed to
+///   hide);
+/// * `comm_serialized_secs` — planned window recompute that spilled
+///   back onto the compute stream because the executed window was
+///   narrower than planned (`planned − achieved`).
+pub fn run_report(r: &SimReport, trace: &PipelineTrace, metrics: &MetricsRegistry) -> Json {
+    let mut stages = Json::Arr(vec![]);
+    for (s, st) in r.stages.iter().enumerate() {
+        let warmup = trace.item_spans[s].first().map(|&(start, _)| start).unwrap_or(0.0);
+        let stall = (trace.window_secs(s) - trace.window_consumed(s)).max(0.0);
+        let tail = (trace.idle[s] - warmup - stall).max(0.0);
+        let serialized = (trace.planned_overlap[s] - trace.achieved_overlap[s]).max(0.0);
+        let mut bubble = Json::obj();
+        bubble
+            .set("warmup_secs", Json::from(warmup))
+            .set("stall_secs", Json::from(stall))
+            .set("tail_secs", Json::from(tail));
+        let mut so = Json::obj();
+        so.set("stage", Json::from(s))
+            .set("layers", Json::from(st.n_layers))
+            .set("busy_secs", Json::from(trace.busy[s]))
+            .set("comm_busy_secs", Json::from(trace.comm_busy[s]))
+            .set("idle_secs", Json::from(trace.idle[s]))
+            .set("bubble", bubble)
+            .set("exposed_recompute_secs", Json::from(st.exposed_paid_total))
+            .set("comm_serialized_secs", Json::from(serialized))
+            .set("absorbed_secs", Json::from(st.absorbed_total))
+            .set("planned_overlap_secs", Json::from(st.planned_overlap))
+            .set("achieved_overlap_secs", Json::from(st.achieved_overlap))
+            .set(
+                "overlap_efficiency",
+                Json::from(efficiency(st.achieved_overlap, st.planned_overlap)),
+            )
+            .set("peak_mem_bytes", Json::from(st.peak_mem))
+            .set("peak_mem_h1_bytes", Json::from(st.peak_mem_h1))
+            .set("oom", Json::from(st.oom))
+            .set("oom_h1", Json::from(st.oom_h1));
+        stages.push(so);
+    }
+    let mut overlap = Json::obj();
+    overlap
+        .set("planned_secs", Json::from(r.planned_overlap()))
+        .set("achieved_secs", Json::from(r.achieved_overlap()))
+        .set(
+            "efficiency",
+            Json::from(efficiency(r.achieved_overlap(), r.planned_overlap())),
+        );
+    let mut memory = Json::obj();
+    memory
+        .set("peak_bytes", Json::from(r.peak_mem()))
+        .set("peak_h1_bytes", Json::from(r.peak_mem_h1()))
+        .set("h1_overcommitted", Json::from(r.h1_overcommitted()));
+    let mut out = Json::obj();
+    out.set("schema", Json::from(REPORT_SCHEMA))
+        .set("config", Json::from(r.config_label.clone()))
+        .set("schedule", Json::from(r.schedule.label()))
+        .set("bw_scale", Json::from(r.bw_scale))
+        .set("makespan_secs", Json::from(trace.makespan))
+        .set("iteration_secs", Json::from(r.iteration_secs))
+        .set("throughput", Json::from(r.throughput))
+        .set("bubble_ratio", Json::from(r.bubble_ratio))
+        .set("oom", Json::from(r.oom))
+        .set("oom_h1", Json::from(r.oom_h1))
+        .set(
+            "partition",
+            Json::Arr(r.partition.iter().map(|&l| Json::from(l)).collect()),
+        )
+        .set("stages", stages)
+        .set("overlap", overlap)
+        .set("memory", memory)
+        .set("metrics", metrics.snapshot());
+    out
+}
+
+/// Build the `lynx.partition_report.v1` JSON for a partition-search
+/// invocation: one entry per executed search (named `dp` / `greedy` /
+/// `exact-dp` by the caller) plus the shared plan-cache registry.
+pub fn partition_report(
+    policy: &str,
+    schedule: &str,
+    searches: &[(&str, &PartitionResult)],
+    cache_metrics: &MetricsRegistry,
+) -> Json {
+    let mut arr = Json::Arr(vec![]);
+    for (name, res) in searches {
+        let mut so = Json::obj();
+        so.set("search", Json::from(*name))
+            .set(
+                "partition",
+                Json::Arr(res.partition.iter().map(|&l| Json::from(l)).collect()),
+            )
+            .set("makespan_secs", Json::from(res.makespan()))
+            .set("search_secs", Json::from(res.search_secs))
+            .set("evaluated", Json::from(res.evaluated))
+            .set("oom", Json::from(res.oom))
+            .set("metrics", res.metrics.snapshot());
+        arr.push(so);
+    }
+    let mut out = Json::obj();
+    out.set("schema", Json::from(PARTITION_REPORT_SCHEMA))
+        .set("policy", Json::from(policy))
+        .set("schedule", Json::from(schedule))
+        .set("searches", arr)
+        .set("cache_metrics", cache_metrics.snapshot());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{CostModel, Topology};
+    use crate::graph::{ModelConfig, TrainSetup};
+    use crate::sched::ScheduleKind;
+    use crate::sim::{simulate_traced, PartitionMode, SimConfig};
+
+    fn traced(kind: ScheduleKind) -> (SimReport, PipelineTrace) {
+        let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(2, 4));
+        simulate_traced(
+            &cm,
+            &SimConfig::new(setup, crate::plan::PolicyKind::LynxHeu, PartitionMode::Dp)
+                .with_schedule(kind),
+        )
+    }
+
+    #[test]
+    fn report_has_schema_and_stage_breakdown() {
+        let (r, trace) = traced(ScheduleKind::OneFOneB);
+        let j = run_report(&r, &trace, &MetricsRegistry::new());
+        assert_eq!(j.expect("schema").as_str(), Some(REPORT_SCHEMA));
+        let stages = j.expect("stages").as_arr().unwrap();
+        assert_eq!(stages.len(), 4);
+        for st in stages {
+            let idle = st.expect("idle_secs").as_f64().unwrap();
+            let b = st.expect("bubble");
+            let warmup = b.expect("warmup_secs").as_f64().unwrap();
+            let stall = b.expect("stall_secs").as_f64().unwrap();
+            let tail = b.expect("tail_secs").as_f64().unwrap();
+            // The three idle components tile the stage's idle time.
+            assert!(
+                (warmup + stall + tail - idle).abs() < 1e-6,
+                "{warmup} + {stall} + {tail} != {idle}"
+            );
+            let eff = st.expect("overlap_efficiency").as_f64().unwrap();
+            assert!((0.0..=1.0 + 1e-9).contains(&eff));
+        }
+    }
+
+    #[test]
+    fn report_efficiency_is_one_at_plan_bandwidth() {
+        let (r, trace) = traced(ScheduleKind::ZbV);
+        let j = run_report(&r, &trace, &MetricsRegistry::new());
+        let eff = j.expect("overlap").expect("efficiency").as_f64().unwrap();
+        assert!((eff - 1.0).abs() < 1e-9, "efficiency {eff}");
+        assert!(j.expect("makespan_secs").as_f64().unwrap() > 0.0);
+        // Round-trips through the parser.
+        assert!(Json::parse(&j.pretty()).is_ok());
+    }
+
+    #[test]
+    fn vacuous_efficiency_is_one() {
+        assert_eq!(efficiency(0.0, 0.0), 1.0);
+        assert_eq!(efficiency(1.0, 2.0), 0.5);
+    }
+}

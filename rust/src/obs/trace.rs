@@ -1,0 +1,413 @@
+//! Typed event spans on per-stage compute/comm tracks, plus the
+//! Chrome-trace / Perfetto exporter.
+//!
+//! # Track model
+//!
+//! Every span lives on one of two tracks of one pipeline stage,
+//! mirroring the event engine's two resources:
+//!
+//! * [`Track::Compute`] — the SM stream: F/B/W slices, recompute in all
+//!   three dispositions (absorbed into a dependency stall, hidden
+//!   inside a collective, or exposed/serialized on the critical path),
+//!   and stall spans covering pure dependency gaps.
+//! * [`Track::Comm`] — the NIC/NVLink stream: TP collectives, p2p wire
+//!   occupancy (when it contends with TP), and the DP gradient sync.
+//!
+//! Spans carry **sim-clock** timestamps (seconds from iteration start):
+//! the engine emits them at execution time, so a recording is exactly
+//! as deterministic as the simulation itself — no wall clock anywhere.
+//!
+//! # Span taxonomy
+//!
+//! | kind | track | meaning |
+//! |------|-------|---------|
+//! | `Fwd` / `Bwd` / `WGrad`  | compute | one compute slice of an item |
+//! | `RecomputeAbsorbed`      | compute | recompute hidden in a dependency stall |
+//! | `RecomputeOverlapped`    | compute | recompute hidden inside a collective |
+//! | `RecomputeExposed`       | compute | recompute paid on the critical path |
+//! | `CommSerialized`         | compute | planned-overlap spill re-serialized |
+//! | `Stall`                  | compute | pure dependency gap (no work) |
+//! | `CommTp`                 | comm    | TP collective segment |
+//! | `CommP2p`                | comm    | p2p wire slot contending with TP |
+//! | `CommDp`                 | comm    | DP gradient all-reduce |
+//!
+//! The emission discipline is *accumulator mirroring*: the engine emits
+//! a compute-track span for every addition to its per-stage `busy`
+//! accumulator and a comm-track span for every addition to `comm_busy`
+//! (every recorded [`crate::sim::CommSpan`]). Consequently, per stage,
+//! work-span durations sum to `busy[s]`, comm-span durations sum to
+//! `comm_busy[s]`, and spans on one track never overlap — properties
+//! the `trace_prop` grid holds over every schedule.
+//!
+//! A [`SpanRecorder`] recording renders two ways — the ASCII gantt and
+//! [`SpanRecorder::to_chrome_trace`] (`lynx simulate --trace-out`),
+//! which emits Chrome-trace JSON (open in Perfetto or
+//! `chrome://tracing`) with process = stage, thread = track, and flow
+//! events linking each overlapped recompute phase to the collective
+//! that hides it.
+
+use crate::util::json::Json;
+
+/// Sentinel for "no microbatch / no chunk" on spans that do not belong
+/// to a schedule item (stalls, DP sync).
+pub const NO_INDEX: usize = usize::MAX;
+
+/// Which per-stage resource a span occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Track {
+    Compute,
+    Comm,
+}
+
+impl Track {
+    pub fn label(self) -> &'static str {
+        match self {
+            Track::Compute => "compute",
+            Track::Comm => "comm",
+        }
+    }
+}
+
+/// What a span represents (see the module-level taxonomy table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    Fwd,
+    Bwd,
+    WGrad,
+    RecomputeAbsorbed,
+    RecomputeOverlapped,
+    RecomputeExposed,
+    CommSerialized,
+    Stall,
+    CommTp,
+    CommP2p,
+    CommDp,
+}
+
+impl SpanKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::Fwd => "fwd",
+            SpanKind::Bwd => "bwd",
+            SpanKind::WGrad => "wgrad",
+            SpanKind::RecomputeAbsorbed => "recompute-absorbed",
+            SpanKind::RecomputeOverlapped => "recompute-overlapped",
+            SpanKind::RecomputeExposed => "recompute-exposed",
+            SpanKind::CommSerialized => "comm-serialized",
+            SpanKind::Stall => "stall",
+            SpanKind::CommTp => "comm-tp",
+            SpanKind::CommP2p => "comm-p2p",
+            SpanKind::CommDp => "comm-dp",
+        }
+    }
+
+    /// Inverse of [`Self::label`] (used by the profiler-db span
+    /// serialization).
+    pub fn from_label(s: &str) -> Option<SpanKind> {
+        Some(match s {
+            "fwd" => SpanKind::Fwd,
+            "bwd" => SpanKind::Bwd,
+            "wgrad" => SpanKind::WGrad,
+            "recompute-absorbed" => SpanKind::RecomputeAbsorbed,
+            "recompute-overlapped" => SpanKind::RecomputeOverlapped,
+            "recompute-exposed" => SpanKind::RecomputeExposed,
+            "comm-serialized" => SpanKind::CommSerialized,
+            "stall" => SpanKind::Stall,
+            "comm-tp" => SpanKind::CommTp,
+            "comm-p2p" => SpanKind::CommP2p,
+            "comm-dp" => SpanKind::CommDp,
+            _ => return None,
+        })
+    }
+
+    /// The track this kind lives on.
+    pub fn track(self) -> Track {
+        match self {
+            SpanKind::CommTp | SpanKind::CommP2p | SpanKind::CommDp => Track::Comm,
+            _ => Track::Compute,
+        }
+    }
+
+    /// Kinds whose durations the engine also adds to `busy[s]` — the
+    /// compute track minus stalls.
+    pub fn is_compute_work(self) -> bool {
+        self.track() == Track::Compute && self != SpanKind::Stall
+    }
+}
+
+/// One typed event on a stage track, in sim-clock seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub stage: usize,
+    pub kind: SpanKind,
+    pub start: f64,
+    pub end: f64,
+    /// Microbatch index ([`NO_INDEX`] when not item-scoped).
+    pub micro: usize,
+    /// Virtual chunk ([`NO_INDEX`] when not item-scoped).
+    pub chunk: usize,
+    /// Flow id pairing an overlapped recompute span with the collective
+    /// span hiding it (both carry the same id).
+    pub flow: Option<u64>,
+}
+
+impl Span {
+    pub fn track(&self) -> Track {
+        self.kind.track()
+    }
+
+    pub fn dur(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Receiver for spans emitted by the engine (and, for measured real
+/// runs, [`crate::profiler::ProfileDb::record_span`]).
+pub trait TraceSink {
+    fn span(&mut self, span: Span);
+}
+
+/// The default sink: records every span for later rendering/export.
+#[derive(Debug, Clone, Default)]
+pub struct SpanRecorder {
+    spans: Vec<Span>,
+}
+
+impl TraceSink for SpanRecorder {
+    fn span(&mut self, span: Span) {
+        self.spans.push(span);
+    }
+}
+
+impl SpanRecorder {
+    pub fn new() -> SpanRecorder {
+        SpanRecorder::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// All spans in emission order.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Number of stages touched (max stage index + 1).
+    pub fn n_stages(&self) -> usize {
+        self.spans.iter().map(|s| s.stage + 1).max().unwrap_or(0)
+    }
+
+    /// Spans of one stage track, sorted by start time.
+    pub fn stage_track(&self, stage: usize, track: Track) -> Vec<&Span> {
+        let mut out: Vec<&Span> = self
+            .spans
+            .iter()
+            .filter(|s| s.stage == stage && s.track() == track)
+            .collect();
+        out.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        out
+    }
+
+    /// Total duration of the given kinds on one stage.
+    pub fn sum_kinds(&self, stage: usize, kinds: &[SpanKind]) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.stage == stage && kinds.contains(&s.kind))
+            .map(|s| s.dur())
+            .sum()
+    }
+
+    /// Total compute-track *work* (everything `busy[s]` counts).
+    pub fn compute_work(&self, stage: usize) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.stage == stage && s.kind.is_compute_work())
+            .map(|s| s.dur())
+            .sum()
+    }
+
+    /// Total comm-track occupancy (everything `comm_busy[s]` counts).
+    pub fn comm_work(&self, stage: usize) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.stage == stage && s.track() == Track::Comm)
+            .map(|s| s.dur())
+            .sum()
+    }
+
+    /// Export the recording as Chrome-trace JSON (Perfetto /
+    /// `chrome://tracing`): one process per stage, threads `compute`
+    /// (tid 0) and `comm` (tid 1), `X` duration events in microseconds,
+    /// and `s`/`f` flow-event pairs linking each overlapped recompute
+    /// span to the collective hiding it. `extra` lands in `otherData`
+    /// next to the schema tag.
+    pub fn to_chrome_trace(&self, extra: &[(&str, Json)]) -> Json {
+        let mut events = Json::Arr(Vec::new());
+        // Metadata: name processes and threads so Perfetto shows
+        // "stage N > compute/comm" instead of bare pids.
+        for stage in 0..self.n_stages() {
+            let mut pn = Json::obj();
+            let mut pn_args = Json::obj();
+            pn_args.set("name", Json::from(format!("stage {stage}")));
+            pn.set("ph", Json::from("M"))
+                .set("name", Json::from("process_name"))
+                .set("pid", Json::from(stage))
+                .set("tid", Json::from(0usize))
+                .set("args", pn_args);
+            events.push(pn);
+            for (tid, tname) in [(0usize, "compute"), (1usize, "comm")] {
+                let mut tn = Json::obj();
+                let mut tn_args = Json::obj();
+                tn_args.set("name", Json::from(tname));
+                tn.set("ph", Json::from("M"))
+                    .set("name", Json::from("thread_name"))
+                    .set("pid", Json::from(stage))
+                    .set("tid", Json::from(tid))
+                    .set("args", tn_args);
+                events.push(tn);
+            }
+        }
+        let us = 1e6; // sim seconds -> trace microseconds
+        for s in &self.spans {
+            let tid = match s.track() {
+                Track::Compute => 0usize,
+                Track::Comm => 1usize,
+            };
+            let mut args = Json::obj();
+            if s.micro != NO_INDEX {
+                args.set("micro", Json::from(s.micro));
+            }
+            if s.chunk != NO_INDEX {
+                args.set("chunk", Json::from(s.chunk));
+            }
+            let mut ev = Json::obj();
+            ev.set("name", Json::from(s.kind.label()))
+                .set("cat", Json::from(s.track().label()))
+                .set("ph", Json::from("X"))
+                .set("pid", Json::from(s.stage))
+                .set("tid", Json::from(tid))
+                .set("ts", Json::from(s.start * us))
+                .set("dur", Json::from(s.dur() * us))
+                .set("args", args);
+            events.push(ev);
+            if let Some(id) = s.flow {
+                // Flow start on the collective, finish (binding point
+                // "enclosing slice") on the recompute span it hides.
+                let ph = match s.track() {
+                    Track::Comm => "s",
+                    Track::Compute => "f",
+                };
+                let mut fl = Json::obj();
+                fl.set("name", Json::from("overlap"))
+                    .set("cat", Json::from("flow"))
+                    .set("ph", Json::from(ph))
+                    .set("id", Json::from(id as f64))
+                    .set("pid", Json::from(s.stage))
+                    .set("tid", Json::from(tid))
+                    .set("ts", Json::from(s.start * us));
+                if ph == "f" {
+                    fl.set("bp", Json::from("e"));
+                }
+                events.push(fl);
+            }
+        }
+        let mut other = Json::obj();
+        other.set("schema", Json::from("lynx.trace.v1"));
+        for (k, v) in extra {
+            other.set(k, v.clone());
+        }
+        let mut out = Json::obj();
+        out.set("traceEvents", events)
+            .set("displayTimeUnit", Json::from("ms"))
+            .set("otherData", other);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(stage: usize, kind: SpanKind, start: f64, end: f64) -> Span {
+        Span { stage, kind, start, end, micro: NO_INDEX, chunk: NO_INDEX, flow: None }
+    }
+
+    #[test]
+    fn kinds_map_to_tracks() {
+        assert_eq!(SpanKind::Fwd.track(), Track::Compute);
+        assert_eq!(SpanKind::Stall.track(), Track::Compute);
+        assert_eq!(SpanKind::CommTp.track(), Track::Comm);
+        assert_eq!(SpanKind::CommDp.track(), Track::Comm);
+        assert!(SpanKind::RecomputeAbsorbed.is_compute_work());
+        assert!(!SpanKind::Stall.is_compute_work());
+        assert!(!SpanKind::CommTp.is_compute_work());
+    }
+
+    #[test]
+    fn recorder_sums_and_filters() {
+        let mut r = SpanRecorder::new();
+        r.span(span(0, SpanKind::Fwd, 0.0, 1.0));
+        r.span(span(0, SpanKind::CommTp, 1.0, 1.5));
+        r.span(span(0, SpanKind::Stall, 2.0, 3.0));
+        r.span(span(1, SpanKind::Bwd, 4.0, 6.0));
+        assert_eq!(r.n_stages(), 2);
+        assert_eq!(r.compute_work(0), 1.0);
+        assert_eq!(r.comm_work(0), 0.5);
+        assert_eq!(r.compute_work(1), 2.0);
+        assert_eq!(r.stage_track(0, Track::Compute).len(), 2);
+        assert_eq!(r.sum_kinds(0, &[SpanKind::Stall]), 1.0);
+    }
+
+    #[test]
+    fn chrome_trace_shape_and_flow_pairs() {
+        let mut r = SpanRecorder::new();
+        let mut comm = span(0, SpanKind::CommTp, 0.0, 2.0);
+        comm.flow = Some(1);
+        let mut rc = span(0, SpanKind::RecomputeOverlapped, 0.5, 1.5);
+        rc.flow = Some(1);
+        r.span(comm);
+        r.span(rc);
+        let j = r.to_chrome_trace(&[("schedule", Json::from("1f1b"))]);
+        assert_eq!(
+            j.expect("otherData").expect("schema").as_str().unwrap(),
+            "lynx.trace.v1"
+        );
+        let evs = match j.expect("traceEvents") {
+            Json::Arr(v) => v.clone(),
+            _ => panic!("traceEvents not an array"),
+        };
+        let phs: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("ph").and_then(|p| p.as_str())).collect();
+        assert!(phs.contains(&"M"));
+        assert!(phs.contains(&"X"));
+        assert!(phs.contains(&"s"), "flow start missing: {phs:?}");
+        assert!(phs.contains(&"f"), "flow finish missing: {phs:?}");
+        // Flow pair shares the id; X events are in microseconds.
+        let flow_ids: Vec<f64> = evs
+            .iter()
+            .filter(|e| matches!(e.get("ph").and_then(|p| p.as_str()), Some("s") | Some("f")))
+            .map(|e| e.expect("id").as_f64().unwrap())
+            .collect();
+        assert_eq!(flow_ids, vec![1.0, 1.0]);
+        let x_durs: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .map(|e| e.expect("dur").as_f64().unwrap())
+            .collect();
+        assert_eq!(x_durs, vec![2e6, 1e6]);
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_the_parser() {
+        let mut r = SpanRecorder::new();
+        r.span(span(0, SpanKind::Fwd, 0.0, 1.0));
+        let text = r.to_chrome_trace(&[]).pretty();
+        let back = Json::parse(&text).unwrap();
+        assert!(matches!(back.expect("traceEvents"), Json::Arr(_)));
+    }
+}

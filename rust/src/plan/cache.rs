@@ -23,10 +23,11 @@
 //! distinguish warm-from-disk hits ([`PlanCache::disk_hits`]) from
 //! in-process hits; `BENCH_search.json` reports both.
 
-use super::costeval::plan_stage;
+use super::costeval::plan_stage_metered;
 use super::tables::{CostTables, StageRole};
 use super::types::{LayerPlan, Phase, PlanOutcome, PolicyKind, StageCtx, StagePlan};
 use crate::costmodel::CostModel;
+use crate::obs::MetricsRegistry;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -91,15 +92,13 @@ struct Entry {
     from_disk: bool,
 }
 
-/// Memoized `plan_stage` outcomes with hit/solve accounting and optional
-/// disk persistence.
+/// Memoized `plan_stage` outcomes with hit/solve accounting (kept in an
+/// embedded [`MetricsRegistry`] under `cache.*` / `planner.*` keys) and
+/// optional disk persistence.
 #[derive(Debug, Default)]
 pub struct PlanCache {
     map: HashMap<PlanKey, Entry>,
-    hits: usize,
-    solves: usize,
-    disk_hits: usize,
-    warm_entries: usize,
+    metrics: MetricsRegistry,
     path: Option<PathBuf>,
 }
 
@@ -187,7 +186,7 @@ impl PlanCache {
                 cache.map.insert(key, Entry { out, from_disk: true });
             }
         }
-        cache.warm_entries = cache.map.len();
+        cache.metrics.add("cache.warm_entries", cache.map.len() as u64);
         cache
     }
 
@@ -224,9 +223,9 @@ impl PlanCache {
     /// planner (the threaded DP search computes outside the cache lock).
     pub fn lookup(&mut self, key: &PlanKey) -> Option<PlanOutcome> {
         let entry = self.map.get(key)?;
-        self.hits += 1;
+        self.metrics.inc("cache.hits");
         if entry.from_disk {
-            self.disk_hits += 1;
+            self.metrics.inc("cache.disk_hits");
         }
         Some(entry.out.clone())
     }
@@ -236,7 +235,7 @@ impl PlanCache {
     /// keeping one plan per key keeps the whole search consistent); every
     /// call counts one real solve.
     pub fn insert_solved(&mut self, key: PlanKey, outcome: PlanOutcome) -> PlanOutcome {
-        self.solves += 1;
+        self.metrics.inc("cache.solves");
         self.map
             .entry(key)
             .or_insert(Entry { out: outcome, from_disk: false })
@@ -255,7 +254,7 @@ impl PlanCache {
         if let Some(out) = self.lookup(&key) {
             return out;
         }
-        let out = plan_stage(policy, tables, ctx);
+        let out = plan_stage_metered(policy, tables, ctx, &mut self.metrics);
         self.insert_solved(key, out)
     }
 
@@ -270,38 +269,50 @@ impl PlanCache {
 
     /// Cache hits since construction.
     pub fn hits(&self) -> usize {
-        self.hits
+        self.metrics.counter("cache.hits") as usize
     }
 
     /// Hits served by entries that were warm-loaded from disk.
     pub fn disk_hits(&self) -> usize {
-        self.disk_hits
+        self.metrics.counter("cache.disk_hits") as usize
     }
 
     /// Entries that arrived from disk at construction.
     pub fn warm_entries(&self) -> usize {
-        self.warm_entries
+        self.metrics.counter("cache.warm_entries") as usize
     }
 
     /// Planner invocations (cache misses) since construction.
     pub fn solves(&self) -> usize {
-        self.solves
+        self.metrics.counter("cache.solves") as usize
     }
 
     /// hits / (hits + solves); 0 when untouched.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.solves;
+        let total = self.hits() + self.solves();
         if total == 0 {
             0.0
         } else {
-            self.hits as f64 / total as f64
+            self.hits() as f64 / total as f64
         }
     }
 
     /// Snapshot of `(hits, solves)` — callers diff two snapshots to
     /// attribute counts to one search phase.
     pub fn counters(&self) -> (usize, usize) {
-        (self.hits, self.solves)
+        (self.hits(), self.solves())
+    }
+
+    /// The cache's registry (`cache.*` hit/solve counters plus the
+    /// `planner.*` counters recorded by the planners it invoked).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Fold a worker-local registry into the cache's own (threaded
+    /// searches record planner counters outside the cache lock).
+    pub fn absorb_metrics(&mut self, other: &MetricsRegistry) {
+        self.metrics.merge(other);
     }
 }
 

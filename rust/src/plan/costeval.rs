@@ -124,6 +124,49 @@ pub fn plan_stage(kind: PolicyKind, tables: &CostTables, ctx: &StageCtx) -> Plan
     }
 }
 
+/// Record the canonical per-policy planner counters for one outcome:
+/// `planner.<policy>.solves`, a `planner.<policy>.search_secs`
+/// histogram, and `planner.<policy>.oom` for infeasible outcomes.
+pub(crate) fn record_planner(
+    m: &mut crate::obs::MetricsRegistry,
+    label: &str,
+    out: &PlanOutcome,
+) {
+    m.inc(&format!("planner.{label}.solves"));
+    m.observe(&format!("planner.{label}.search_secs"), out.search_secs);
+    if out.oom {
+        m.inc(&format!("planner.{label}.oom"));
+    }
+}
+
+/// [`plan_stage`] recording per-policy planner counters into `m` (see
+/// [`record_planner`]; the ILP policies route through their own metered
+/// entry points). This is the path [`super::PlanCache::get_or_plan`]
+/// takes, so every cache miss shows up in the cache's registry
+/// attributed to its planner.
+pub fn plan_stage_metered(
+    kind: PolicyKind,
+    tables: &CostTables,
+    ctx: &StageCtx,
+    m: &mut crate::obs::MetricsRegistry,
+) -> PlanOutcome {
+    use super::{heu, opt};
+    match kind {
+        PolicyKind::Checkmate => {
+            opt::checkmate_plan_metered(tables, ctx, &opt::OptOptions::default(), m)
+        }
+        PolicyKind::LynxHeu => {
+            heu::heu_plan_metered(tables, ctx, &heu::HeuOptions::default(), m)
+        }
+        PolicyKind::LynxOpt => opt::opt_plan_metered(tables, ctx, &opt::OptOptions::default(), m),
+        _ => {
+            let out = plan_stage(kind, tables, ctx);
+            record_planner(m, kind.label(), &out);
+            out
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -80,6 +80,19 @@ pub fn heu_plan_cached(tables: &CostTables, ctx: &StageCtx, opts: &HeuOptions) -
     heu_plan_inner(&tables.g, ctx, tables.times_for(ctx.stage), opts, &tables.retain_order)
 }
 
+/// [`heu_plan_cached`] recording `planner.lynx-heu.*` counters into `m`
+/// (solve count, search-time histogram, infeasible outcomes).
+pub fn heu_plan_metered(
+    tables: &CostTables,
+    ctx: &StageCtx,
+    opts: &HeuOptions,
+    m: &mut crate::obs::MetricsRegistry,
+) -> PlanOutcome {
+    let out = heu_plan_cached(tables, ctx, opts);
+    super::costeval::record_planner(m, "lynx-heu", &out);
+    out
+}
+
 /// Warm-start retention order: ops with nonzero output by descending
 /// recompute-seconds per byte. [`CostTables`] precomputes this once.
 pub fn retain_order(g: &LayerGraph, times: &[f64]) -> Vec<usize> {

@@ -100,6 +100,19 @@ pub fn opt_plan_cached(tables: &CostTables, ctx: &StageCtx, opts: &OptOptions) -
     )
 }
 
+/// [`opt_plan_cached`] recording `planner.lynx-opt.*` counters into `m`
+/// (solve count, search-time histogram, infeasible outcomes).
+pub fn opt_plan_metered(
+    tables: &CostTables,
+    ctx: &StageCtx,
+    opts: &OptOptions,
+    m: &mut crate::obs::MetricsRegistry,
+) -> PlanOutcome {
+    let out = opt_plan_cached(tables, ctx, opts);
+    super::costeval::record_planner(m, "lynx-opt", &out);
+    out
+}
+
 fn opt_plan_inner(
     g: &LayerGraph,
     ctx: &StageCtx,
@@ -260,6 +273,18 @@ pub fn checkmate_plan_cached(
     let mut o = opts.clone();
     o.overlap = false;
     opt_plan_cached(tables, ctx, &o)
+}
+
+/// [`checkmate_plan_cached`] recording `planner.checkmate.*` counters.
+pub fn checkmate_plan_metered(
+    tables: &CostTables,
+    ctx: &StageCtx,
+    opts: &OptOptions,
+    m: &mut crate::obs::MetricsRegistry,
+) -> PlanOutcome {
+    let out = checkmate_plan_cached(tables, ctx, opts);
+    super::costeval::record_planner(m, "checkmate", &out);
+    out
 }
 
 #[cfg(test)]

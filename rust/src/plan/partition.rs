@@ -27,11 +27,12 @@
 //! cache) as the measured baseline for `BENCH_search.json`.
 
 use super::cache::{PlanCache, PlanKey};
-use super::costeval::plan_stage;
+use super::costeval::{plan_stage, plan_stage_metered};
 use super::tables::{CostTables, StageRole};
 use super::types::{PlanOutcome, PolicyKind};
 use crate::costmodel::CostModel;
 use crate::graph::{LayerGraph, TrainSetup};
+use crate::obs::MetricsRegistry;
 use crate::sched::ScheduleKind;
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -89,16 +90,9 @@ pub struct PartitionResult {
     /// True when the returned partition still exceeds device memory
     /// under its best plans (no feasible partition was found).
     pub oom: bool,
-    /// `plan_stage` invocations this search triggered (cache misses).
-    pub plan_solves: usize,
-    /// Plan-cache hits this search observed.
-    pub cache_hits: usize,
-    /// Stage cost evaluations (ctx build + `stage_cost`) this search ran.
-    pub stage_evals: usize,
-    /// Greedy inner-loop probes skipped by the makespan-bound pruning
-    /// (the candidate's recompute-free bound already matched or exceeded
-    /// the incumbent, so planning it could not have helped).
-    pub probes_pruned: usize,
+    /// Search counters (`search.*` keys; see the accessors below), the
+    /// single accounting path the bench emitters snapshot from.
+    pub metrics: MetricsRegistry,
 }
 
 impl PartitionResult {
@@ -110,13 +104,35 @@ impl PartitionResult {
         self.oom || self.plans.iter().any(|p| p.oom)
     }
 
+    /// `plan_stage` invocations this search triggered (cache misses).
+    pub fn plan_solves(&self) -> usize {
+        self.metrics.counter("search.plan_solves") as usize
+    }
+
+    /// Plan-cache hits this search observed.
+    pub fn cache_hits(&self) -> usize {
+        self.metrics.counter("search.cache_hits") as usize
+    }
+
+    /// Stage cost evaluations (ctx build + `stage_cost`) this search ran.
+    pub fn stage_evals(&self) -> usize {
+        self.metrics.counter("search.stage_evals") as usize
+    }
+
+    /// Greedy inner-loop probes skipped by the makespan-bound pruning
+    /// (the candidate's recompute-free bound already matched or exceeded
+    /// the incumbent, so planning it could not have helped).
+    pub fn probes_pruned(&self) -> usize {
+        self.metrics.counter("search.probes_pruned") as usize
+    }
+
     /// Cache hit rate observed by this search.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.cache_hits + self.plan_solves;
+        let total = self.cache_hits() + self.plan_solves();
         if total == 0 {
             0.0
         } else {
-            self.cache_hits as f64 / total as f64
+            self.cache_hits() as f64 / total as f64
         }
     }
 }
@@ -201,9 +217,8 @@ pub fn lynx_partition_cached(
     let stages = tables.num_stages;
     let total_layers = tables.setup.model.layers;
     let n_batch = inflight_counts(tables, opts);
+    let mut metrics = MetricsRegistry::new();
     let mut evaluated = 0usize;
-    let mut stage_evals = 0usize;
-    let mut probes_pruned = 0usize;
 
     // InitialPartitionNoOOM: the even split; full recompute always fits in
     // practice, and evaluation flags OOM if not.
@@ -213,7 +228,7 @@ pub fn lynx_partition_cached(
     let mut ooms = Vec::with_capacity(stages);
     for stage in 0..stages {
         let (p, d, o) = eval_stage(tables, cache, policy, stage, best[stage], n_batch[stage]);
-        stage_evals += 1;
+        metrics.inc("search.stage_evals");
         plans.push(p);
         durs.push(d);
         ooms.push(o);
@@ -253,7 +268,7 @@ pub fn lynx_partition_cached(
                 // Still counts as a considered candidate (the PR-1 loop
                 // evaluates and rejects it), but costs zero stage evals.
                 evaluated += 1;
-                probes_pruned += 1;
+                metrics.inc("search.probes_pruned");
                 continue;
             }
             // Incremental evaluation: a move changes only two stages.
@@ -273,7 +288,7 @@ pub fn lynx_partition_cached(
                 best[idx_short] + 1,
                 n_batch[idx_short],
             );
-            stage_evals += 2;
+            metrics.add("search.stage_evals", 2);
             evaluated += 1;
             let cand_oom = o_a
                 || o_b
@@ -306,6 +321,8 @@ pub fn lynx_partition_cached(
     }
 
     let (hits1, solves1) = cache.counters();
+    metrics.add("search.plan_solves", (solves1 - solves0) as u64);
+    metrics.add("search.cache_hits", (hits1 - hits0) as u64);
     PartitionResult {
         partition: best,
         plans,
@@ -313,10 +330,7 @@ pub fn lynx_partition_cached(
         search_secs: start.elapsed().as_secs_f64(),
         evaluated,
         oom: ooms.iter().any(|&o| o),
-        plan_solves: solves1 - solves0,
-        cache_hits: hits1 - hits0,
-        stage_evals,
-        probes_pruned,
+        metrics,
     }
 }
 
@@ -355,17 +369,18 @@ pub fn dp_partition_result_cached(
         oom |= o;
     }
     let (hits1, solves1) = cache.counters();
+    let mut metrics = MetricsRegistry::new();
+    metrics.add("search.stage_evals", partition.len() as u64);
+    metrics.add("search.plan_solves", (solves1 - solves0) as u64);
+    metrics.add("search.cache_hits", (hits1 - hits0) as u64);
     PartitionResult {
-        stage_evals: partition.len(),
         partition,
         plans,
         durations,
         search_secs: start.elapsed().as_secs_f64(),
         evaluated: 1,
         oom,
-        plan_solves: solves1 - solves0,
-        cache_hits: hits1 - hits0,
-        probes_pruned: 0,
+        metrics,
     }
 }
 
@@ -493,6 +508,10 @@ pub fn exact_dp_partition(
     debug_assert!(fallback || !oom, "feasible DP returned an OOM partition");
 
     let (hits1, solves1) = cache.counters();
+    let mut metrics = MetricsRegistry::new();
+    metrics.add("search.stage_evals", stage_evals as u64);
+    metrics.add("search.plan_solves", (solves1 - solves0) as u64);
+    metrics.add("search.cache_hits", (hits1 - hits0) as u64);
     PartitionResult {
         partition,
         plans,
@@ -500,10 +519,7 @@ pub fn exact_dp_partition(
         search_secs: start.elapsed().as_secs_f64(),
         evaluated: cells_evaluated,
         oom,
-        plan_solves: solves1 - solves0,
-        cache_hits: hits1 - hits0,
-        stage_evals,
-        probes_pruned: 0,
+        metrics,
     }
 }
 
@@ -608,12 +624,16 @@ fn eval_cells(
     // the canonical plan for its key).
     let shared = Mutex::new(std::mem::take(cache));
     let mut results = vec![(0.0, false); todo.len()];
+    let mut worker_metrics: Vec<MetricsRegistry> = Vec::with_capacity(t);
     std::thread::scope(|scope| {
         let shared = &shared;
         let handles: Vec<_> = (0..t)
             .map(|w| {
                 scope.spawn(move || {
                     let mut out: Vec<(usize, f64, bool)> = Vec::new();
+                    // Planner counters recorded outside the lock, folded
+                    // back into the cache's registry after the join.
+                    let mut local = MetricsRegistry::new();
                     for (i, &(s, l)) in todo.iter().enumerate() {
                         if i % t != w {
                             continue;
@@ -624,24 +644,29 @@ fn eval_cells(
                         let outcome = match cached {
                             Some(o) => o,
                             None => {
-                                let o = plan_stage(policy, tables, &ctx);
+                                let o = plan_stage_metered(policy, tables, &ctx, &mut local);
                                 shared.lock().unwrap().insert_solved(key, o)
                             }
                         };
                         let cost = tables.stage_cost(&ctx, &outcome.plan);
                         out.push((i, cost.slot_time, outcome.oom || cost.oom));
                     }
-                    out
+                    (out, local)
                 })
             })
             .collect();
         for h in handles {
-            for (i, slot, oom) in h.join().expect("DP cost-cell worker panicked") {
+            let (out, local) = h.join().expect("DP cost-cell worker panicked");
+            for (i, slot, oom) in out {
                 results[i] = (slot, oom);
             }
+            worker_metrics.push(local);
         }
     });
     *cache = shared.into_inner().expect("plan cache mutex poisoned");
+    for m in &worker_metrics {
+        cache.absorb_metrics(m);
+    }
     results
 }
 
@@ -652,18 +677,29 @@ pub struct Pr1Reference {
     pub partition: Vec<usize>,
     pub durations: Vec<f64>,
     pub evaluated: usize,
-    /// Planner *call sites* executed: every stage of every candidate.
-    pub plan_calls: usize,
-    /// Planner invocations that actually solved (per-search cache misses).
-    pub plan_solves: usize,
-    /// Stage cost evaluations (every stage of every candidate).
-    pub stage_evals: usize,
     pub search_secs: f64,
+    /// Baseline counters (`pr1.*` keys; see the accessors below).
+    pub metrics: MetricsRegistry,
 }
 
 impl Pr1Reference {
     pub fn makespan(&self) -> f64 {
         self.durations.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Planner *call sites* executed: every stage of every candidate.
+    pub fn plan_calls(&self) -> usize {
+        self.metrics.counter("pr1.plan_calls") as usize
+    }
+
+    /// Planner invocations that actually solved (per-search cache misses).
+    pub fn plan_solves(&self) -> usize {
+        self.metrics.counter("pr1.plan_solves") as usize
+    }
+
+    /// Stage cost evaluations (every stage of every candidate).
+    pub fn stage_evals(&self) -> usize {
+        self.metrics.counter("pr1.stage_evals") as usize
     }
 }
 
@@ -687,7 +723,7 @@ pub fn pr1_reference_partition(
     let tables = CostTables::new(setup, cm, g);
     let mut cache: HashMap<(usize, usize), PlanOutcome> = HashMap::new();
     let mut evaluated = 0usize;
-    let mut counters = Pr1Counters::default();
+    let mut counters = MetricsRegistry::new();
 
     let mut best = dp_partition(total_layers, stages);
     let (mut best_durs, _best_oom) =
@@ -727,18 +763,9 @@ pub fn pr1_reference_partition(
         partition: best,
         durations: best_durs,
         evaluated,
-        plan_calls: counters.plan_calls,
-        plan_solves: counters.plan_solves,
-        stage_evals: counters.stage_evals,
         search_secs: start.elapsed().as_secs_f64(),
+        metrics: counters,
     }
-}
-
-#[derive(Debug, Default)]
-struct Pr1Counters {
-    plan_calls: usize,
-    plan_solves: usize,
-    stage_evals: usize,
 }
 
 /// PR-1 `evaluate`: plan + cost every stage of the candidate, re-deriving
@@ -753,7 +780,7 @@ fn pr1_evaluate(
     policy: PolicyKind,
     partition: &[usize],
     cache: &mut HashMap<(usize, usize), PlanOutcome>,
-    counters: &mut Pr1Counters,
+    counters: &mut MetricsRegistry,
 ) -> (Vec<f64>, bool) {
     let times = cm.layer_times(g);
     let fwd_layer: f64 = times.iter().sum();
@@ -763,17 +790,17 @@ fn pr1_evaluate(
     for stage in 0..partition.len() {
         let n_batch = cm.memory.inflight_microbatches(stage, partition.len(), setup.num_micro);
         let ctx = tables.build_ctx(stage, partition[stage], n_batch);
-        counters.plan_calls += 1;
+        counters.inc("pr1.plan_calls");
         let outcome = match cache.get(&(partition[stage], stage)) {
             Some(o) => o.clone(),
             None => {
-                counters.plan_solves += 1;
+                counters.inc("pr1.plan_solves");
                 let o = plan_stage(policy, tables, &ctx);
                 cache.insert((partition[stage], stage), o.clone());
                 o
             }
         };
-        counters.stage_evals += 1;
+        counters.inc("pr1.stage_evals");
         let nl = ctx.n_layers as f64;
         let mut fwd = fwd_layer * nl;
         let mut bwd = bwd_layer * nl;
@@ -879,7 +906,7 @@ mod tests {
             let old = pr1_reference_partition(&setup, &cm, &g, policy);
             assert_eq!(new.partition, old.partition, "{policy:?}");
             assert_eq!(new.evaluated, old.evaluated, "{policy:?}");
-            any_pruned += new.probes_pruned;
+            any_pruned += new.probes_pruned();
         }
         assert!(any_pruned >= 1, "the makespan bound never pruned a probe");
     }
@@ -890,12 +917,12 @@ mod tests {
         let new = lynx_partition(&setup, &cm, &g, PolicyKind::Full);
         let old = pr1_reference_partition(&setup, &cm, &g, PolicyKind::Full);
         assert!(
-            new.stage_evals < old.stage_evals,
+            new.stage_evals() < old.stage_evals(),
             "incremental {} vs pr1 {}",
-            new.stage_evals,
-            old.stage_evals
+            new.stage_evals(),
+            old.stage_evals()
         );
-        assert!(new.plan_solves <= old.plan_calls);
+        assert!(new.plan_solves() <= old.plan_calls());
     }
 
     #[test]
@@ -956,7 +983,7 @@ mod tests {
         let r = lynx_partition(&setup, &cm, &g, PolicyKind::Full);
         assert!(r.evaluated < 200, "evaluated {}", r.evaluated);
         assert!(!r.oom);
-        assert!(r.plan_solves + r.cache_hits >= r.stage_evals);
+        assert!(r.plan_solves() + r.cache_hits() >= r.stage_evals());
     }
 
     #[test]

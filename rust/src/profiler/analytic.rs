@@ -35,6 +35,7 @@ pub fn profile_model(setup: &TrainSetup, cm: &CostModel) -> ProfileDb {
         micro_batch: setup.micro_batch,
         seq: setup.seq,
         records,
+        spans: Vec::new(),
     }
 }
 

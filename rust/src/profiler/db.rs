@@ -1,5 +1,7 @@
-//! Profile database: JSON-serializable per-operator records.
+//! Profile database: JSON-serializable per-operator records, plus an
+//! optional measured-span timeline sharing the simulator's span type.
 
+use crate::obs::{Span, SpanKind, TraceSink, NO_INDEX};
 use crate::util::json::Json;
 use std::path::Path;
 
@@ -25,9 +27,24 @@ pub struct ProfileDb {
     pub micro_batch: usize,
     pub seq: usize,
     pub records: Vec<OpRecord>,
+    /// Measured spans recorded via [`ProfileDb::record_span`] — the same
+    /// span type the simulation engine emits, so measured timelines
+    /// export (and diff against simulated ones) through one pipeline.
+    pub spans: Vec<Span>,
+}
+
+impl TraceSink for ProfileDb {
+    fn span(&mut self, span: Span) {
+        self.spans.push(span);
+    }
 }
 
 impl ProfileDb {
+    /// Record one measured span ([`TraceSink`] as an inherent method, so
+    /// callers don't need the trait in scope).
+    pub fn record_span(&mut self, span: Span) {
+        self.spans.push(span);
+    }
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("model", Json::from(self.model.clone()))
@@ -49,6 +66,29 @@ impl ProfileDb {
             recs.push(ro);
         }
         o.set("records", recs);
+        // Spans are optional in the schema: ops-only databases (every
+        // pre-existing artifact) serialize exactly as before.
+        if !self.spans.is_empty() {
+            let mut spans = Json::Arr(vec![]);
+            for s in &self.spans {
+                let mut so = Json::obj();
+                so.set("stage", Json::from(s.stage))
+                    .set("kind", Json::from(s.kind.label()))
+                    .set("start", Json::from(s.start))
+                    .set("end", Json::from(s.end));
+                if s.micro != NO_INDEX {
+                    so.set("micro", Json::from(s.micro));
+                }
+                if s.chunk != NO_INDEX {
+                    so.set("chunk", Json::from(s.chunk));
+                }
+                if let Some(id) = s.flow {
+                    so.set("flow", Json::from(id as f64));
+                }
+                spans.push(so);
+            }
+            o.set("spans", spans);
+        }
         o
     }
 
@@ -74,6 +114,24 @@ impl ProfileDb {
                 })
             })
             .collect::<Option<Vec<_>>>()?;
+        let spans = match j.get("spans") {
+            None => Vec::new(),
+            Some(js) => js
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    Some(Span {
+                        stage: s.get("stage")?.as_usize()?,
+                        kind: SpanKind::from_label(s.get("kind")?.as_str()?)?,
+                        start: s.get("start")?.as_f64()?,
+                        end: s.get("end")?.as_f64()?,
+                        micro: s.get("micro").and_then(|m| m.as_usize()).unwrap_or(NO_INDEX),
+                        chunk: s.get("chunk").and_then(|c| c.as_usize()).unwrap_or(NO_INDEX),
+                        flow: s.get("flow").and_then(|f| f.as_f64()).map(|f| f as u64),
+                    })
+                })
+                .collect::<Option<Vec<_>>>()?,
+        };
         Some(ProfileDb {
             model: j.get("model")?.as_str()?.to_string(),
             topology: j.get("topology")?.as_str()?.to_string(),
@@ -82,6 +140,7 @@ impl ProfileDb {
             micro_batch: j.get("micro_batch")?.as_usize()?,
             seq: j.get("seq")?.as_usize()?,
             records,
+            spans,
         })
     }
 
@@ -117,6 +176,7 @@ mod tests {
                 out_bytes: 1024.0,
                 deps: vec![],
             }],
+            spans: vec![],
         }
     }
 
@@ -142,5 +202,34 @@ mod tests {
     fn bad_schema_rejected() {
         let j = Json::parse(r#"{"model": "x"}"#).unwrap();
         assert!(ProfileDb::from_json(&j).is_none());
+    }
+
+    #[test]
+    fn recorded_spans_roundtrip_exact() {
+        let mut db = sample();
+        db.record_span(Span {
+            stage: 1,
+            kind: SpanKind::Fwd,
+            start: 0.5,
+            end: 1.25,
+            micro: 3,
+            chunk: 0,
+            flow: None,
+        });
+        db.record_span(Span {
+            stage: 1,
+            kind: SpanKind::CommTp,
+            start: 1.25,
+            end: 2.0,
+            micro: NO_INDEX,
+            chunk: NO_INDEX,
+            flow: Some(7),
+        });
+        let back = ProfileDb::from_json(&db.to_json()).unwrap();
+        assert_eq!(db, back);
+        // TraceSink path records into the same vec.
+        let mut db2 = sample();
+        db2.span(db.spans[0]);
+        assert_eq!(db2.spans.len(), 1);
     }
 }

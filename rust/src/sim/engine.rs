@@ -29,6 +29,13 @@
 //! stream, either serialized after the stage's last item or overlapped
 //! with the trailing weight-grad work ([`DpMode`]).
 //!
+//! The `_obs` entry points additionally emit a typed span
+//! ([`crate::obs::Span`]) for every interval the engine charges to a
+//! stream — compute slices, recompute in all three dispositions,
+//! TP/p2p/DP collectives, spill, stalls — using the same sim-clock
+//! timestamps the accounting uses, so recorded traces and reported
+//! aggregates cannot disagree.
+//!
 //! **Equivalence contract** (grid-tested): with zero comm widths and
 //! infinite link bandwidth — [`StageSegments::from_scalar`], which is
 //! what [`run_schedule`] feeds — this engine reproduces the PR-3
@@ -36,11 +43,47 @@
 //! (makespan, busy, absorbed, item spans, windows) to fp round-off on
 //! every schedule.
 
+use crate::obs::{MetricsRegistry, Span, SpanKind, TraceSink, NO_INDEX};
 use crate::sched::{
     bwd_upstream_of, fwd_upstream_of, peak_inflight_replay_exact, OneFOneB, PipelineSchedule,
     SegKind, Segment, WorkItem, WorkKind,
 };
 use std::collections::HashMap;
+
+/// Observation context threaded through the event core: an optional
+/// span sink and an optional metrics registry, both borrowed from the
+/// caller. Every `busy`/`comm_busy` accumulation in the engine pairs
+/// with exactly one emitted span, so recorded span durations sum to the
+/// trace's busy times by construction (grid-tested in
+/// `tests/trace_prop.rs`). With both sides `None` (the plain
+/// [`run_schedule_segments`] entry point) observation is free.
+struct ObsCtx<'a> {
+    sink: Option<&'a mut dyn TraceSink>,
+    metrics: Option<&'a mut MetricsRegistry>,
+    /// Next flow-event id linking an overlapped recompute slice to the
+    /// collective that hid it. Ids are per-run and deterministic.
+    flow_next: u64,
+}
+
+impl ObsCtx<'_> {
+    fn emit(&mut self, span: Span) {
+        if let Some(sink) = self.sink.as_mut() {
+            sink.span(span);
+        }
+    }
+
+    fn flow(&mut self) -> u64 {
+        self.flow_next += 1;
+        self.inc("engine.overlap.flow_links");
+        self.flow_next
+    }
+
+    fn inc(&mut self, name: &str) {
+        if let Some(m) = self.metrics.as_mut() {
+            m.inc(name);
+        }
+    }
+}
 
 /// Per-stage scalar timing inputs (seconds, per microbatch through the
 /// whole stage; the engine divides by the schedule's chunk count). The
@@ -346,12 +389,24 @@ pub fn run_schedule(
     sched: &dyn PipelineSchedule,
     lynx_absorb: bool,
 ) -> PipelineTrace {
+    run_schedule_obs(timings, sched, lynx_absorb, None, None)
+}
+
+/// [`run_schedule`] with observation: spans into `sink`, counters into
+/// `metrics` (either side optional).
+pub fn run_schedule_obs(
+    timings: &[StageTiming],
+    sched: &dyn PipelineSchedule,
+    lynx_absorb: bool,
+    sink: Option<&mut dyn TraceSink>,
+    metrics: Option<&mut MetricsRegistry>,
+) -> PipelineTrace {
     assert_eq!(timings.len(), sched.num_stages(), "timings vs schedule stage count");
     let segs: Vec<StageSegments> = timings
         .iter()
         .map(|t| StageSegments::from_scalar(t, sched.backward_split()))
         .collect();
-    run_schedule_segments(&segs, &LinkCfg::default(), sched, lynx_absorb)
+    run_schedule_segments_obs(&segs, &LinkCfg::default(), sched, lynx_absorb, sink, metrics)
 }
 
 /// Arrival time at `dst` of data leaving `src` at `t_ready`: wire time
@@ -372,11 +427,14 @@ fn p2p_arrive(
     t_ready: f64,
     src: usize,
     dst: usize,
+    micro: usize,
+    chunk: usize,
     segs: &[StageSegments],
     link: &LinkCfg,
     link_free: &mut HashMap<(usize, usize), f64>,
     comm_spans: &mut [Vec<CommSpan>],
     comm_busy: &mut [f64],
+    obs: &mut ObsCtx,
 ) -> f64 {
     // Upstream (gradient) sends ride the sender's *incoming* boundary on
     // heterogeneous fabrics; downstream sends its outgoing one.
@@ -418,6 +476,16 @@ fn p2p_arrive(
             .partition_point(|cs| cs.start <= span.start);
         comm_spans[src].insert(at, span);
         comm_busy[src] += wire;
+        obs.emit(Span {
+            stage: src,
+            kind: SpanKind::CommP2p,
+            start,
+            end,
+            micro,
+            chunk,
+            flow: None,
+        });
+        obs.inc("engine.p2p.contended");
     }
     end + lat
 }
@@ -427,6 +495,13 @@ fn p2p_arrive(
 /// executed width of the planned window recompute (`rc`, one entry per
 /// comm segment); the excess spills onto the compute stream right after
 /// the window. Returns `(first segment start, final end)`.
+///
+/// `item` is `(span kind for compute slices, micro, chunk)` — compute
+/// slices are traced unconditionally (zero-duration ones included, so a
+/// renderer can recover exact item starts), TP collectives only when
+/// they occupy wire time, hidden recompute as `RecomputeOverlapped`
+/// sharing a flow id with its collective, and spill as
+/// `CommSerialized`.
 #[allow(clippy::too_many_arguments)]
 fn run_segs(
     s: usize,
@@ -434,6 +509,7 @@ fn run_segs(
     rc: &[f64],
     vf: f64,
     mut cur: f64,
+    item: (SpanKind, usize, usize),
     comp_free: &mut [f64],
     comm_free: &mut [f64],
     comm_spans: &mut [Vec<CommSpan>],
@@ -441,7 +517,9 @@ fn run_segs(
     busy: &mut [f64],
     planned: &mut [f64],
     achieved: &mut [f64],
+    obs: &mut ObsCtx,
 ) -> (Option<f64>, f64) {
+    let (kind, micro, chunk) = item;
     let mut first: Option<f64> = None;
     let mut ci = 0usize;
     for seg in seglist {
@@ -456,6 +534,7 @@ fn run_segs(
                 if first.is_none() {
                     first = Some(start);
                 }
+                obs.emit(Span { stage: s, kind, start, end, micro, chunk, flow: None });
             }
             SegKind::Comm => {
                 let r = if ci < rc.len() { rc[ci] / vf } else { 0.0 };
@@ -463,17 +542,39 @@ fn run_segs(
                 let cstart = cur.max(comm_free[s]);
                 let cend = cstart + dur;
                 comm_free[s] = cend;
-                if dur > 1e-15 {
-                    comm_spans[s].push(CommSpan { start: cstart, end: cend, tag: CommTag::Tp });
-                }
                 comm_busy[s] += dur;
                 planned[s] += r;
                 // The compute stream hides recompute inside the window.
                 let avail = (cend - cstart.max(comp_free[s])).max(0.0);
                 let hidden = r.min(avail);
+                // A flow event needs both endpoints: only link when the
+                // collective is wide enough to be traced at all.
+                let flow = if hidden > 0.0 && dur > 1e-15 { Some(obs.flow()) } else { None };
+                if dur > 1e-15 {
+                    comm_spans[s].push(CommSpan { start: cstart, end: cend, tag: CommTag::Tp });
+                    obs.emit(Span {
+                        stage: s,
+                        kind: SpanKind::CommTp,
+                        start: cstart,
+                        end: cend,
+                        micro,
+                        chunk,
+                        flow,
+                    });
+                }
                 if hidden > 0.0 {
-                    comp_free[s] = comp_free[s].max(cstart) + hidden;
+                    let hstart = comp_free[s].max(cstart);
+                    comp_free[s] = hstart + hidden;
                     busy[s] += hidden;
+                    obs.emit(Span {
+                        stage: s,
+                        kind: SpanKind::RecomputeOverlapped,
+                        start: hstart,
+                        end: comp_free[s],
+                        micro,
+                        chunk,
+                        flow,
+                    });
                 }
                 achieved[s] += hidden;
                 cur = cend;
@@ -489,6 +590,16 @@ fn run_segs(
                     comp_free[s] = send;
                     busy[s] += spill;
                     cur = send;
+                    obs.inc("engine.windows.spilled");
+                    obs.emit(Span {
+                        stage: s,
+                        kind: SpanKind::CommSerialized,
+                        start: sstart,
+                        end: send,
+                        micro,
+                        chunk,
+                        flow: None,
+                    });
                 }
             }
         }
@@ -506,6 +617,24 @@ pub fn run_schedule_segments(
     sched: &dyn PipelineSchedule,
     lynx_absorb: bool,
 ) -> PipelineTrace {
+    run_schedule_segments_obs(segs, link, sched, lynx_absorb, None, None)
+}
+
+/// [`run_schedule_segments`] with observation. Spans carry sim-clock
+/// timestamps and are emitted at the exact points the engine charges
+/// `busy`/`comm_busy`, so per-track span sums reproduce the trace's
+/// accounting; overlapped recompute spans share a flow id with the
+/// collective that hid them.
+pub fn run_schedule_segments_obs(
+    segs: &[StageSegments],
+    link: &LinkCfg,
+    sched: &dyn PipelineSchedule,
+    lynx_absorb: bool,
+    sink: Option<&mut dyn TraceSink>,
+    metrics: Option<&mut MetricsRegistry>,
+) -> PipelineTrace {
+    let mut obs = ObsCtx { sink, metrics, flow_next: 0 };
+    let obs = &mut obs;
     let p = segs.len();
     assert_eq!(p, sched.num_stages(), "segments vs schedule stage count");
     let m = sched.num_micro();
@@ -566,11 +695,14 @@ pub fn run_schedule_segments(
                                         src_end,
                                         s2,
                                         s,
+                                        it.micro,
+                                        c2,
                                         segs,
                                         link,
                                         &mut link_free,
                                         &mut comm_spans,
                                         &mut comm_busy,
+                                        obs,
                                     )
                                 }
                             }
@@ -582,6 +714,7 @@ pub fn run_schedule_segments(
                             &segs[s].fwd_rc,
                             vf,
                             ready,
+                            (SpanKind::Fwd, it.micro, it.chunk),
                             &mut comp_free,
                             &mut comm_free,
                             &mut comm_spans,
@@ -589,6 +722,7 @@ pub fn run_schedule_segments(
                             &mut busy,
                             &mut planned,
                             &mut achieved,
+                            obs,
                         );
                         fwd_end[s][slot] = end;
                         f_set[s][slot] = true;
@@ -617,11 +751,14 @@ pub fn run_schedule_segments(
                                         src_end,
                                         s2,
                                         s,
+                                        it.micro,
+                                        c2,
                                         segs,
                                         link,
                                         &mut link_free,
                                         &mut comm_spans,
                                         &mut comm_busy,
+                                        obs,
                                     )
                                 }
                             }
@@ -642,6 +779,30 @@ pub fn run_schedule_segments(
                         if exposed_i > 0.0 {
                             comp_free[s] = cur;
                             busy[s] += exposed_i;
+                            // The exposed recompute tiles [rc_start, cur]:
+                            // the stall-hidden prefix, then the paid rest.
+                            if absorb > 0.0 {
+                                obs.emit(Span {
+                                    stage: s,
+                                    kind: SpanKind::RecomputeAbsorbed,
+                                    start: rc_start,
+                                    end: rc_start + absorb,
+                                    micro: it.micro,
+                                    chunk: it.chunk,
+                                    flow: None,
+                                });
+                            }
+                            if exposed_i - absorb > 0.0 {
+                                obs.emit(Span {
+                                    stage: s,
+                                    kind: SpanKind::RecomputeExposed,
+                                    start: rc_start + absorb,
+                                    end: cur,
+                                    micro: it.micro,
+                                    chunk: it.chunk,
+                                    flow: None,
+                                });
+                            }
                         }
                         absorbed[s] += absorb;
                         exposed_paid[s] += exposed_i - absorb;
@@ -652,6 +813,7 @@ pub fn run_schedule_segments(
                             &segs[s].bwd_rc,
                             vf,
                             cur,
+                            (SpanKind::Bwd, it.micro, it.chunk),
                             &mut comp_free,
                             &mut comm_free,
                             &mut comm_spans,
@@ -659,6 +821,7 @@ pub fn run_schedule_segments(
                             &mut busy,
                             &mut planned,
                             &mut achieved,
+                            obs,
                         );
                         bwd_end[s][slot] = end;
                         b_set[s][slot] = true;
@@ -679,6 +842,7 @@ pub fn run_schedule_segments(
                             &[],
                             vf,
                             ready,
+                            (SpanKind::WGrad, it.micro, it.chunk),
                             &mut comp_free,
                             &mut comm_free,
                             &mut comm_spans,
@@ -686,10 +850,16 @@ pub fn run_schedule_segments(
                             &mut busy,
                             &mut planned,
                             &mut achieved,
+                            obs,
                         );
                         (first.unwrap_or(fallback), end)
                     }
                 };
+                obs.inc(match it.kind {
+                    WorkKind::Fwd => "engine.items.fwd",
+                    WorkKind::Bwd => "engine.items.bwd",
+                    WorkKind::WGrad => "engine.items.wgrad",
+                });
                 item_start[s][next[s]] = start;
                 item_end[s][next[s]] = end;
                 next[s] += 1;
@@ -724,9 +894,22 @@ pub fn run_schedule_segments(
         comm_free[s] = end;
         comm_spans[s].push(CommSpan { start, end, tag: CommTag::Dp });
         comm_busy[s] += d;
+        obs.emit(Span {
+            stage: s,
+            kind: SpanKind::CommDp,
+            start,
+            end,
+            micro: NO_INDEX,
+            chunk: NO_INDEX,
+            flow: None,
+        });
+        obs.inc("engine.dp.syncs");
         stage_end[s] = last.max(end);
     }
     let makespan = stage_end.iter().cloned().fold(0.0, f64::max);
+    if let Some(m) = obs.metrics.as_mut() {
+        m.set_gauge("engine.makespan_secs", makespan);
+    }
 
     // ---- windows: full pre-absorption stalls + consumed ----
     let mut windows: Vec<Vec<OverlapWindow>> = vec![Vec::new(); p];
@@ -743,6 +926,21 @@ pub fn run_schedule_segments(
                     dur: gap.max(0.0) + consumed,
                     before_item: k,
                     consumed,
+                });
+                obs.inc("engine.windows");
+            }
+            if gap > 1e-12 {
+                // Residual (post-absorption) stall: the absorbed prefix
+                // is already traced as a RecomputeAbsorbed span starting
+                // at item_start[k] (the item box opens at rc_start).
+                obs.emit(Span {
+                    stage: s,
+                    kind: SpanKind::Stall,
+                    start: prev_end,
+                    end: item_start[s][k],
+                    micro: NO_INDEX,
+                    chunk: NO_INDEX,
+                    flow: None,
                 });
             }
             prev_end = item_end[s][k];

@@ -10,9 +10,35 @@
 //! the trace carries comm spans: `c` for TP collectives, `p` for p2p
 //! wire time serialized onto the stream, `g` for the DP gradient
 //! all-reduce. Used by `lynx simulate --gantt` and the quickstart docs.
+//!
+//! Two front ends share one painting core: [`render_gantt`] draws from
+//! the engine's [`PipelineTrace`] (item spans recorded directly), and
+//! [`render_gantt_recorded`] reconstructs the same item boxes from an
+//! [`obs::SpanRecorder`](crate::obs::SpanRecorder) timeline — the
+//! recorded spans carry enough structure (kind, microbatch, chunk) that
+//! both renderers produce byte-identical output for the same run.
 
 use super::engine::{CommTag, PipelineTrace, StageTiming};
+use crate::obs::{Span, SpanKind, SpanRecorder, Track, NO_INDEX};
 use crate::sched::WorkKind;
+
+/// One compute-row box: a scheduled item with its executed extent and
+/// the stall-absorbed recompute prefix (B items only).
+struct ItemBox {
+    kind: WorkKind,
+    micro: usize,
+    chunk: usize,
+    start: f64,
+    end: f64,
+    absorb: f64,
+}
+
+/// One comm-row box, already reduced to its glyph.
+struct CommBox {
+    start: f64,
+    end: f64,
+    ch: char,
+}
 
 /// Render the trace as one text row per (stage, chunk) — plus a comm row
 /// per stage when the trace has comm spans — `cols` characters wide.
@@ -21,20 +47,228 @@ use crate::sched::WorkKind;
 /// schedule shape is carried by the trace itself.
 pub fn render_gantt(timings: &[StageTiming], trace: &PipelineTrace, cols: usize) -> String {
     let p = timings.len();
-    let v = trace.num_chunks;
-    let span = trace.makespan.max(1e-12);
+    let mut items: Vec<Vec<ItemBox>> = Vec::with_capacity(p);
+    let mut comm: Vec<Vec<CommBox>> = Vec::with_capacity(p);
+    for s in 0..p {
+        items.push(
+            trace.items[s]
+                .iter()
+                .enumerate()
+                .map(|(k, item)| {
+                    let (start, end) = trace.item_spans[s][k];
+                    ItemBox {
+                        kind: item.kind,
+                        micro: item.micro,
+                        chunk: item.chunk,
+                        start,
+                        end,
+                        absorb: trace.item_absorb[s][k],
+                    }
+                })
+                .collect(),
+        );
+        comm.push(
+            trace.comm_spans[s]
+                .iter()
+                .map(|cs| CommBox {
+                    start: cs.start,
+                    end: cs.end,
+                    ch: match cs.tag {
+                        CommTag::Tp => 'c',
+                        CommTag::P2p => 'p',
+                        CommTag::Dp => 'g',
+                    },
+                })
+                .collect(),
+        );
+    }
+    render_core(
+        timings,
+        trace.num_micro,
+        trace.num_chunks,
+        trace.makespan,
+        trace.bwd_frac,
+        &items,
+        &comm,
+        cols,
+    )
+}
+
+/// [`render_gantt`] over a recorded span timeline instead of the trace:
+/// item boxes are reconstructed from the spans the engine emitted while
+/// executing. `bwd_frac` is the executed backward fraction
+/// ([`PipelineTrace::bwd_frac`]; 1.0 for combined-backward schedules) —
+/// the one scalar of the trace the span stream does not carry.
+///
+/// Reconstruction rules (mirroring the engine's emission):
+/// * a compute-track `Fwd`/`Bwd`/`WGrad` span belongs to the item named
+///   by its `(micro, chunk)`; `RecomputeAbsorbed`/`RecomputeExposed`
+///   prefix the B item and pin its true start (`rc_start`);
+/// * `CommTp`, `RecomputeOverlapped` and `CommSerialized` spans carry
+///   the item's `(micro, chunk)` but not its phase — they are attributed
+///   temporally (an item's spans all precede the same microbatch's next
+///   phase on that stage, a schedule dependency);
+/// * the item box is the min-start/max-end hull of its spans, which
+///   equals the engine's recorded `(start, end)` because the first
+///   segment's span opens at the item start and `cur` never advances
+///   past the last emitted span's end.
+pub fn render_gantt_recorded(
+    timings: &[StageTiming],
+    rec: &SpanRecorder,
+    bwd_frac: f64,
+    cols: usize,
+) -> String {
+    let p = timings.len();
+    let mut num_micro = 0usize;
+    let mut num_chunks = 1usize;
+    let mut makespan = 0.0f64;
+    for sp in rec.spans() {
+        makespan = makespan.max(sp.end);
+        if sp.micro != NO_INDEX {
+            num_micro = num_micro.max(sp.micro + 1);
+        }
+        if sp.chunk != NO_INDEX {
+            num_chunks = num_chunks.max(sp.chunk + 1);
+        }
+    }
+    let mut items: Vec<Vec<ItemBox>> = Vec::with_capacity(p);
+    let mut comm: Vec<Vec<CommBox>> = Vec::with_capacity(p);
+    for s in 0..p {
+        items.push(reconstruct_items(rec, s));
+        // Replay the engine's comm-span ordering so overlapping cells
+        // resolve to the same glyph: TP/DP spans are appended in
+        // emission order, p2p slots are backfilled at their sorted
+        // position (first-fit can land them before already-recorded
+        // collectives).
+        let mut row: Vec<CommBox> = Vec::new();
+        for sp in rec.spans().iter().filter(|sp| sp.stage == s && sp.kind.track() == Track::Comm) {
+            let cb = CommBox {
+                start: sp.start,
+                end: sp.end,
+                ch: match sp.kind {
+                    SpanKind::CommP2p => 'p',
+                    SpanKind::CommDp => 'g',
+                    _ => 'c',
+                },
+            };
+            if sp.kind == SpanKind::CommP2p {
+                let at = row.partition_point(|cs| cs.start <= cb.start);
+                row.insert(at, cb);
+            } else {
+                row.push(cb);
+            }
+        }
+        comm.push(row);
+    }
+    render_core(timings, num_micro, num_chunks, makespan, bwd_frac, &items, &comm, cols)
+}
+
+/// Which item phase a compute-side span unambiguously names, if any.
+fn phase_of(kind: SpanKind) -> Option<WorkKind> {
+    match kind {
+        SpanKind::Fwd => Some(WorkKind::Fwd),
+        SpanKind::Bwd | SpanKind::RecomputeAbsorbed | SpanKind::RecomputeExposed => {
+            Some(WorkKind::Bwd)
+        }
+        SpanKind::WGrad => Some(WorkKind::WGrad),
+        _ => None,
+    }
+}
+
+/// Rebuild stage `s`'s item boxes from the recorded spans.
+fn reconstruct_items(rec: &SpanRecorder, s: usize) -> Vec<ItemBox> {
+    use std::collections::BTreeMap;
+    // (micro, chunk, phase-rank) → box under construction. Phase rank
+    // orders F(0) < B(1) < W(2) for the temporal attribution below.
+    let rank = |k: WorkKind| match k {
+        WorkKind::Fwd => 0usize,
+        WorkKind::Bwd => 1,
+        WorkKind::WGrad => 2,
+    };
+    let stage_spans: Vec<&Span> = rec
+        .spans()
+        .iter()
+        .filter(|sp| sp.stage == s && sp.micro != NO_INDEX && sp.kind != SpanKind::Stall)
+        .collect();
+    let mut boxes: BTreeMap<(usize, usize, usize), ItemBox> = BTreeMap::new();
+    for sp in &stage_spans {
+        let Some(phase) = phase_of(sp.kind) else { continue };
+        let e = boxes.entry((sp.micro, sp.chunk, rank(phase))).or_insert(ItemBox {
+            kind: phase,
+            micro: sp.micro,
+            chunk: sp.chunk,
+            start: f64::INFINITY,
+            end: f64::NEG_INFINITY,
+            absorb: 0.0,
+        });
+        e.start = e.start.min(sp.start);
+        e.end = e.end.max(sp.end);
+        if sp.kind == SpanKind::RecomputeAbsorbed {
+            e.absorb += sp.end - sp.start;
+        }
+    }
+    // Phase-ambiguous spans — TP window comm, hidden recompute, spilled
+    // remainder — execute *inside* an item and extend its hull. (P2p
+    // wire and DP sync do not: the engine charges them to the comm
+    // stream after the item closed, so they never move `item_spans`.)
+    // An item's spans all start before the same microbatch's next phase
+    // begins on this stage — a schedule dependency (B waits on F's
+    // completion, W on B's) — so the latest phase whose box opens at or
+    // before the span start owns it.
+    for sp in &stage_spans {
+        if !matches!(
+            sp.kind,
+            SpanKind::CommTp | SpanKind::RecomputeOverlapped | SpanKind::CommSerialized
+        ) {
+            continue;
+        }
+        let owner = (0..=2usize)
+            .rev()
+            .find(|&r| {
+                boxes
+                    .get(&(sp.micro, sp.chunk, r))
+                    .map(|b| b.start <= sp.start + 1e-15)
+                    .unwrap_or(false)
+            })
+            .unwrap_or(0);
+        if let Some(b) = boxes.get_mut(&(sp.micro, sp.chunk, owner)) {
+            b.start = b.start.min(sp.start);
+            b.end = b.end.max(sp.end);
+        }
+    }
+    let mut out: Vec<ItemBox> = boxes.into_values().collect();
+    // Paint in execution order (the engine records items in schedule
+    // order; starts are strictly ordered per row).
+    out.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    out
+}
+
+/// The shared painting core both renderers feed.
+#[allow(clippy::too_many_arguments)]
+fn render_core(
+    timings: &[StageTiming],
+    num_micro: usize,
+    num_chunks: usize,
+    makespan: f64,
+    bwd_frac: f64,
+    items: &[Vec<ItemBox>],
+    comm: &[Vec<CommBox>],
+    cols: usize,
+) -> String {
+    let p = timings.len();
+    let v = num_chunks;
+    let span = makespan.max(1e-12);
     let scale = cols as f64 / span;
     let mut out = String::new();
     out.push_str(&format!(
-        "pipeline gantt — {p} stages × {} microbatches × {v} chunk(s), makespan {:.3}s\n",
-        trace.num_micro, trace.makespan
+        "pipeline gantt — {p} stages × {num_micro} microbatches × {v} chunk(s), makespan {makespan:.3}s\n",
     ));
     for s in 0..p {
         // One row per chunk hosted by the stage.
         let mut rows = vec![vec!['·'; cols]; v];
-        let b_dur = timings[s].bwd / v as f64 * trace.bwd_frac;
-        for (k, item) in trace.items[s].iter().enumerate() {
-            let (start, end) = trace.item_spans[s][k];
+        let b_dur = timings[s].bwd / v as f64 * bwd_frac;
+        for item in &items[s] {
+            let (start, end) = (item.start, item.end);
             let row = &mut rows[item.chunk];
             match item.kind {
                 WorkKind::Fwd => paint(row, start, end, fwd_char(item.micro), scale),
@@ -45,7 +279,7 @@ pub fn render_gantt(timings: &[StageTiming], trace: &PipelineTrace, cols: usize)
                     // executed span (bw sweep, window spill) can be
                     // shorter than it — clamp the split into the span so
                     // glyphs never bleed over neighbouring items.
-                    let absorb = trace.item_absorb[s][k];
+                    let absorb = item.absorb;
                     let bwd_start = (end - b_dur).clamp(start + absorb, end);
                     if absorb > 1e-12 {
                         paint(row, start, (start + absorb).min(bwd_start), '+', scale);
@@ -69,15 +303,10 @@ pub fn render_gantt(timings: &[StageTiming], trace: &PipelineTrace, cols: usize)
         }
         // The comm stream, when the trace was produced by the segment
         // engine (the scalar wrapper leaves it empty).
-        if !trace.comm_spans[s].is_empty() {
+        if !comm[s].is_empty() {
             let mut crow = vec!['·'; cols];
-            for cs in &trace.comm_spans[s] {
-                let ch = match cs.tag {
-                    CommTag::Tp => 'c',
-                    CommTag::P2p => 'p',
-                    CommTag::Dp => 'g',
-                };
-                paint(&mut crow, cs.start, cs.end, ch, scale);
+            for cs in &comm[s] {
+                paint(&mut crow, cs.start, cs.end, cs.ch, scale);
             }
             out.push_str(&format!("stage{s}.c|"));
             out.extend(crow);
@@ -115,9 +344,11 @@ fn paint(row: &mut [char], start: f64, end: f64, c: char, scale: f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::MetricsRegistry;
     use crate::sched::{Interleaved1F1B, OneFOneB, Segment, ZbH1};
     use crate::sim::engine::{
-        run_pipeline, run_schedule, run_schedule_segments, LinkCfg, StageSegments,
+        run_pipeline, run_schedule, run_schedule_obs, run_schedule_segments,
+        run_schedule_segments_obs, LinkCfg, StageSegments,
     };
 
     fn uniform(p: usize, fwd: f64, bwd: f64, exposed: f64) -> Vec<StageTiming> {
@@ -181,9 +412,12 @@ mod tests {
         // 2 stages × 2 microbatches, f=b=1, exposed 0.5, lynx absorption:
         // stage 0 absorbs its recompute into the dy stalls ('+'), stage 1
         // has no stall and pays it exposed ('r'). Spans are round
-        // numbers, so the render is byte-exact.
+        // numbers, so the render is byte-exact — through the trace AND
+        // through the recorded span timeline.
         let t = uniform(2, 1.0, 1.0, 0.5);
-        let tr = run_pipeline(&t, 2, true);
+        let sched = OneFOneB::new(2, 2);
+        let mut rec = crate::obs::SpanRecorder::new();
+        let tr = run_schedule_obs(&t, &sched, true, Some(&mut rec), None);
         assert!((tr.makespan - 7.0).abs() < 1e-12, "makespan {}", tr.makespan);
         let g = render_gantt(&t, &tr, 70);
         let lines: Vec<&str> = g.lines().collect();
@@ -197,20 +431,26 @@ mod tests {
             "stage1 |··········0000000000rrrrraaaaaaaaaa1111111111rrrrrbbbbbbbbbb··········|",
             "{g}"
         );
+        let g2 = render_gantt_recorded(&t, &rec, tr.bwd_frac, 70);
+        assert_eq!(g, g2, "trace-rendered and span-rendered gantts must agree");
     }
 
     #[test]
     fn golden_comm_row_renders_the_second_stream() {
         // One stage, one microbatch, a hand-built segment item: compute
         // [0,1), a TP collective [1,2) on the comm stream, backward
-        // [2,4). The comm row must show exactly that collective.
+        // [2,4). The comm row must show exactly that collective — in
+        // both renderers (the recorded path re-attributes the trailing
+        // collective to the F item it belongs to).
         let segs = vec![StageSegments {
             fwd: vec![Segment::comp(1.0), Segment::comm(1.0)],
             bwd: vec![Segment::comp(2.0)],
             ..StageSegments::default()
         }];
         let sched = OneFOneB::new(1, 1);
-        let tr = run_schedule_segments(&segs, &LinkCfg::default(), &sched, false);
+        let mut rec = crate::obs::SpanRecorder::new();
+        let tr =
+            run_schedule_segments_obs(&segs, &LinkCfg::default(), &sched, false, Some(&mut rec), None);
         assert!((tr.makespan - 4.0).abs() < 1e-12);
         let t = vec![StageTiming { fwd: 2.0, bwd: 2.0, exposed: 0.0, p2p: 0.0 }];
         let g = render_gantt(&t, &tr, 40);
@@ -218,5 +458,38 @@ mod tests {
         assert_eq!(lines[1], "stage0 |00000000000000000000aaaaaaaaaaaaaaaaaaaa|", "{g}");
         assert_eq!(lines[2], "stage0.c|··········cccccccccc····················|", "{g}");
         assert!(g.contains("c = TP collective"));
+        let g2 = render_gantt_recorded(&t, &rec, tr.bwd_frac, 40);
+        assert_eq!(g, g2, "trace-rendered and span-rendered gantts must agree");
+    }
+
+    #[test]
+    fn recorded_render_matches_trace_render_across_schedules() {
+        // The reconstruction contract over real scalar runs: for every
+        // schedule, rendering through the recorded spans is
+        // byte-identical to rendering through the trace.
+        use crate::sched::ScheduleKind;
+        let t = uniform(4, 1.0, 2.0, 0.5);
+        for kind in ScheduleKind::all() {
+            let sched = kind.build(4, 8);
+            let mut rec = crate::obs::SpanRecorder::new();
+            let mut m = MetricsRegistry::new();
+            let tr = run_schedule_obs(&t, sched.as_ref(), true, Some(&mut rec), Some(&mut m));
+            let a = render_gantt(&t, &tr, 100);
+            let b = render_gantt_recorded(&t, &rec, tr.bwd_frac, 100);
+            assert_eq!(a, b, "{}", kind.label());
+        }
+    }
+
+    #[test]
+    fn plain_segment_entry_point_still_runs() {
+        // run_schedule_segments stays the unobserved entry point.
+        let segs = vec![StageSegments {
+            fwd: vec![Segment::comp(1.0)],
+            bwd: vec![Segment::comp(1.0)],
+            ..StageSegments::default()
+        }];
+        let tr =
+            run_schedule_segments(&segs, &LinkCfg::default(), &OneFOneB::new(1, 1), false);
+        assert!(tr.makespan > 0.0);
     }
 }

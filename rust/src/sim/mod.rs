@@ -49,12 +49,13 @@ pub mod gantt;
 pub mod runner;
 
 pub use engine::{
-    run_pipeline, run_schedule, run_schedule_segments, CommSpan, CommTag, DpMode, LinkCfg,
-    OverlapWindow, PipelineTrace, StageSegments, StageTiming,
+    run_pipeline, run_schedule, run_schedule_obs, run_schedule_segments,
+    run_schedule_segments_obs, CommSpan, CommTag, DpMode, LinkCfg, OverlapWindow, PipelineTrace,
+    StageSegments, StageTiming,
 };
 pub use fixpoint::run_schedule_fixpoint;
-pub use gantt::render_gantt;
+pub use gantt::{render_gantt, render_gantt_recorded};
 pub use runner::{
-    better_outcome, simulate, simulate_cached, simulate_traced, PartitionMode, SimConfig,
-    SimReport, StageReport,
+    better_outcome, simulate, simulate_cached, simulate_observed, simulate_traced, PartitionMode,
+    RunObservation, SimConfig, SimReport, StageReport,
 };

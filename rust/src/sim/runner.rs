@@ -11,10 +11,11 @@
 //! collectives).
 
 use super::engine::{
-    run_schedule_segments, DpMode, LinkCfg, PipelineTrace, StageSegments,
+    run_schedule_segments_obs, DpMode, LinkCfg, PipelineTrace, StageSegments,
 };
 use crate::costmodel::CostModel;
 use crate::graph::{build_layer_graph, TrainSetup};
+use crate::obs::{MetricsRegistry, SpanRecorder};
 use crate::plan::{
     dp_partition, lynx_partition_cached, CostTables, Phase, PlanCache, PlanOutcome, PolicyKind,
     SearchOptions, StageCtx, StagePlan, StageRole,
@@ -255,6 +256,29 @@ impl SimReport {
     }
 }
 
+/// Everything the engine observed during one executed run: the recorded
+/// span timeline (trace exporters and the recorded-span Gantt renderer
+/// consume it) and the engine's metrics registry. In Lynx mode each
+/// dual-run candidate records into its own observation and only the
+/// winner's is returned — the trace always describes the executed run.
+#[derive(Debug, Clone)]
+pub struct RunObservation {
+    pub recording: SpanRecorder,
+    pub metrics: MetricsRegistry,
+}
+
+impl RunObservation {
+    pub fn new() -> RunObservation {
+        RunObservation { recording: SpanRecorder::new(), metrics: MetricsRegistry::new() }
+    }
+}
+
+impl Default for RunObservation {
+    fn default() -> RunObservation {
+        RunObservation::new()
+    }
+}
+
 /// Simulate one configuration end to end (report only).
 pub fn simulate(cm: &CostModel, cfg: &SimConfig) -> SimReport {
     simulate_traced(cm, cfg).0
@@ -284,16 +308,46 @@ pub fn simulate_cached(
     cache: &mut PlanCache,
 ) -> (SimReport, PipelineTrace) {
     if cfg.partition == PartitionMode::Lynx && cfg.fixed_partition.is_none() {
-        let searched = simulate_one(cm, cfg, tables, cache);
+        let searched = simulate_one(cm, cfg, tables, cache, None);
         let dp = simulate_one(
             cm,
             &SimConfig { partition: PartitionMode::Dp, ..cfg.clone() },
             tables,
             cache,
+            None,
         );
         return better_outcome(searched, dp);
     }
-    simulate_one(cm, cfg, tables, cache)
+    simulate_one(cm, cfg, tables, cache, None)
+}
+
+/// [`simulate_cached`] that also records the executed span timeline and
+/// engine metrics. Lynx-mode dual runs give each candidate its own
+/// recorder; the returned observation belongs to the winning run, so its
+/// spans always reconstruct the trace the report describes.
+pub fn simulate_observed(
+    cm: &CostModel,
+    cfg: &SimConfig,
+    tables: &CostTables,
+    cache: &mut PlanCache,
+) -> (SimReport, PipelineTrace, RunObservation) {
+    if cfg.partition == PartitionMode::Lynx && cfg.fixed_partition.is_none() {
+        let mut obs_a = RunObservation::new();
+        let (ra, ta) = simulate_one(cm, cfg, tables, cache, Some(&mut obs_a));
+        let mut obs_b = RunObservation::new();
+        let (rb, tb) = simulate_one(
+            cm,
+            &SimConfig { partition: PartitionMode::Dp, ..cfg.clone() },
+            tables,
+            cache,
+            Some(&mut obs_b),
+        );
+        let (r, (t, obs)) = better_outcome((ra, (ta, obs_a)), (rb, (tb, obs_b)));
+        return (r, t, obs);
+    }
+    let mut obs = RunObservation::new();
+    let (r, t) = simulate_one(cm, cfg, tables, cache, Some(&mut obs));
+    (r, t, obs)
 }
 
 /// Lexicographic (feasibility, then throughput) choice between two
@@ -450,6 +504,7 @@ fn simulate_one(
     cfg: &SimConfig,
     tables: &CostTables,
     cache: &mut PlanCache,
+    obs: Option<&mut RunObservation>,
 ) -> (SimReport, PipelineTrace) {
     let setup = &cfg.setup;
     // The DP/TP/PP geometry lives both on the setup (batch math, graph)
@@ -569,7 +624,17 @@ fn simulate_one(
         edge_shared_tier,
         dp_mode: cfg.dp_mode,
     };
-    let trace = run_schedule_segments(&segments, &link, sched.as_ref(), lynx_absorb);
+    let trace = match obs {
+        Some(o) => run_schedule_segments_obs(
+            &segments,
+            &link,
+            sched.as_ref(),
+            lynx_absorb,
+            Some(&mut o.recording),
+            Some(&mut o.metrics),
+        ),
+        None => run_schedule_segments_obs(&segments, &link, sched.as_ref(), lynx_absorb, None, None),
+    };
 
     // Optimizer step: a bandwidth-bound pass over the stage's model
     // states, overlapping-free (paper ignores it too; kept for realism).

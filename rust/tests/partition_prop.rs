@@ -124,7 +124,7 @@ fn cached_and_uncached_searches_produce_identical_plans() {
             assert_eq!(warm.oom, cold.oom, "{label}");
             // A warm greedy re-run needs zero planner solves.
             let rerun = lynx_partition_cached(&tables, &mut shared, policy, &opts);
-            assert_eq!(rerun.plan_solves, 0, "{label}");
+            assert_eq!(rerun.plan_solves(), 0, "{label}");
             assert_eq!(rerun.partition, warm.partition, "{label}");
         }
     }
@@ -147,10 +147,10 @@ fn incremental_greedy_equals_pr1_reference_on_grid() {
             }
             // The whole point: strictly less evaluation work.
             assert!(
-                new.stage_evals <= old.stage_evals,
+                new.stage_evals() <= old.stage_evals(),
                 "{label}: incremental {} vs pr1 {}",
-                new.stage_evals,
-                old.stage_evals
+                new.stage_evals(),
+                old.stage_evals()
             );
         }
     }

@@ -103,4 +103,19 @@ print(f'OK: {len(sweep)} sweep rows, aware <= blind everywhere, windows '
       f"heterogeneous, uniform equivalence err {equiv[0]['max_rel_err']:.2e}")
 EOF
 
+echo "== gate: bench snapshots (drift vs bench/snapshots/) =="
+python3 scripts/snapshot_bench.py compare
+
+echo "== gate: observability artifacts validate (trace + report schemas) =="
+OBS_TMP="$(mktemp -d)"
+trap 'rm -rf "$OBS_TMP"' EXIT
+for sched in 1f1b zbv; do
+    ./target/release/lynx simulate --schedule "$sched" \
+        --trace-out "$OBS_TMP/trace_$sched.json" \
+        --metrics-out "$OBS_TMP/report_$sched.json" >/dev/null
+done
+./target/release/lynx partition --search dp \
+    --metrics-out "$OBS_TMP/partition.json" >/dev/null
+python3 scripts/validate_obs.py "$OBS_TMP"/*.json
+
 echo "OK"

@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Drift gate for the quick-mode BENCH_*.json artifacts.
+
+Usage:
+    snapshot_bench.py compare [artifact.json ...]
+    snapshot_bench.py update  [artifact.json ...]
+
+With no file arguments, operates on every ``BENCH_*.json`` in the repo
+root. References live in ``bench/snapshots/`` under the same file name.
+
+``compare`` diffs each artifact against its committed reference and
+fails on drift; an artifact without a reference is reported and skipped
+(bootstrap-friendly: the gate only bites once a snapshot is blessed).
+``update`` copies the current artifacts over the references — run it,
+eyeball ``git diff bench/snapshots/``, and commit when the change is
+intentional.
+
+Wall-clock timings (keys ending in ``wall_secs``) are excluded from the
+diff — everything else the benches emit is a deterministic function of
+the simulator, so any change is a behaviour change, not noise. Floats
+compare with relative tolerance 1e-9 to absorb libm differences across
+platforms.
+"""
+
+import glob
+import json
+import os
+import shutil
+import sys
+
+REL_TOL = 1e-9
+
+
+def is_wall_key(key):
+    return key.endswith("wall_secs")
+
+
+def diff(ref, cur, path, out):
+    """Append human-readable differences between ref and cur to out."""
+    if type(ref) is not type(cur) and not (
+            isinstance(ref, (int, float)) and isinstance(cur, (int, float))):
+        out.append(f"{path}: type {type(ref).__name__} -> {type(cur).__name__}")
+    elif isinstance(ref, dict):
+        for k in sorted(set(ref) | set(cur)):
+            if is_wall_key(k):
+                continue
+            if k not in ref:
+                out.append(f"{path}.{k}: added")
+            elif k not in cur:
+                out.append(f"{path}.{k}: removed")
+            else:
+                diff(ref[k], cur[k], f"{path}.{k}", out)
+    elif isinstance(ref, list):
+        if len(ref) != len(cur):
+            out.append(f"{path}: length {len(ref)} -> {len(cur)}")
+        for i, (r, c) in enumerate(zip(ref, cur)):
+            diff(r, c, f"{path}[{i}]", out)
+    elif isinstance(ref, float) or isinstance(cur, float):
+        scale = max(abs(ref), abs(cur), 1.0)
+        if abs(ref - cur) > REL_TOL * scale:
+            out.append(f"{path}: {ref!r} -> {cur!r}")
+    elif ref != cur:
+        out.append(f"{path}: {ref!r} -> {cur!r}")
+
+
+def main(argv):
+    if len(argv) < 2 or argv[1] not in ("compare", "update"):
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    mode = argv[1]
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    snapdir = os.path.join(root, "bench", "snapshots")
+    files = argv[2:] or sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not files:
+        print("no BENCH_*.json artifacts found", file=sys.stderr)
+        return 1
+
+    if mode == "update":
+        os.makedirs(snapdir, exist_ok=True)
+        for f in files:
+            dst = os.path.join(snapdir, os.path.basename(f))
+            shutil.copyfile(f, dst)
+            print(f"blessed {os.path.relpath(dst, root)}")
+        return 0
+
+    drifted = False
+    missing = 0
+    for f in files:
+        name = os.path.basename(f)
+        ref_path = os.path.join(snapdir, name)
+        if not os.path.exists(ref_path):
+            print(f"NO REFERENCE: {name} (bless with: "
+                  f"python3 scripts/snapshot_bench.py update)")
+            missing += 1
+            continue
+        with open(ref_path) as fh:
+            ref = json.load(fh)
+        with open(f) as fh:
+            cur = json.load(fh)
+        out = []
+        diff(ref, cur, name, out)
+        if out:
+            drifted = True
+            print(f"DRIFT: {name}:", file=sys.stderr)
+            for line in out[:40]:
+                print(f"  {line}", file=sys.stderr)
+            if len(out) > 40:
+                print(f"  ... and {len(out) - 40} more", file=sys.stderr)
+        else:
+            print(f"OK: {name} matches its reference")
+    if drifted:
+        print("bench drift detected; if intentional, re-bless with "
+              "`python3 scripts/snapshot_bench.py update` and commit",
+              file=sys.stderr)
+        return 1
+    if missing == len(files):
+        print("no references committed yet; gate is a no-op")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,214 @@
+#!/usr/bin/env python3
+"""Validate lynx observability artifacts.
+
+Usage:
+    validate_obs.py <file.json> [<file.json> ...]
+
+Each file is dispatched on its schema tag:
+
+  * Chrome-trace timelines (``otherData.schema == "lynx.trace.v1"``,
+    written by ``lynx simulate --trace-out``): event-shape checks,
+    non-negative timestamps, per-(pid, tid) non-overlap of ``X`` slices,
+    and ``s``/``f`` flow-event ids pairing exactly once each.
+  * Run reports (``schema == "lynx.report.v1"``, from ``--metrics-out``
+    on ``simulate``): required keys, per-stage breakdown shape,
+    achieved <= planned overlap, exact memory peak >= H1 peak.
+  * Partition reports (``schema == "lynx.partition_report.v1"``, from
+    ``--metrics-out`` on ``partition``): per-search rows plus the shared
+    plan-cache registry snapshot.
+
+Exit status 0 iff every file validates. No third-party dependencies.
+"""
+
+import json
+import sys
+
+EPS = 1e-6
+
+SPAN_NAMES = {
+    "fwd", "bwd", "wgrad",
+    "recompute-absorbed", "recompute-overlapped", "recompute-exposed",
+    "comm-serialized", "stall", "comm-tp", "comm-p2p", "comm-dp",
+}
+COMM_NAMES = {"comm-tp", "comm-p2p", "comm-dp"}
+
+STAGE_KEYS = {
+    "stage", "layers", "busy_secs", "comm_busy_secs", "idle_secs",
+    "bubble", "exposed_recompute_secs", "comm_serialized_secs",
+    "absorbed_secs", "planned_overlap_secs", "achieved_overlap_secs",
+    "overlap_efficiency", "peak_mem_bytes", "peak_mem_h1_bytes",
+    "oom", "oom_h1",
+}
+
+
+class Invalid(Exception):
+    pass
+
+
+def need(obj, key, kind=None, where="object"):
+    if key not in obj:
+        raise Invalid(f"{where}: missing key {key!r}")
+    if kind is not None and not isinstance(obj[key], kind):
+        raise Invalid(
+            f"{where}: key {key!r} is {type(obj[key]).__name__}, "
+            f"wanted {getattr(kind, '__name__', kind)}")
+    return obj[key]
+
+
+def validate_trace(doc):
+    events = need(doc, "traceEvents", list, "trace")
+    if not events:
+        raise Invalid("trace: traceEvents is empty")
+    slices = {}     # (pid, tid) -> [(ts, ts+dur, name)]
+    flows = {}      # id -> [starts, finishes]
+    n_x = 0
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        ph = need(ev, "ph", str, where)
+        if ph == "M":
+            continue
+        pid = need(ev, "pid", (int, float), where)
+        tid = need(ev, "tid", (int, float), where)
+        ts = need(ev, "ts", (int, float), where)
+        if ts < -EPS:
+            raise Invalid(f"{where}: negative ts {ts}")
+        if ph == "X":
+            n_x += 1
+            name = need(ev, "name", str, where)
+            dur = need(ev, "dur", (int, float), where)
+            if name not in SPAN_NAMES:
+                raise Invalid(f"{where}: unknown span name {name!r}")
+            if dur < -EPS:
+                raise Invalid(f"{where}: negative dur {dur}")
+            want_tid = 1 if name in COMM_NAMES else 0
+            if int(tid) != want_tid:
+                raise Invalid(
+                    f"{where}: span {name!r} on tid {tid}, wanted {want_tid}")
+            slices.setdefault((pid, int(tid)), []).append(
+                (ts, ts + dur, name))
+        elif ph in ("s", "f"):
+            fid = need(ev, "id", (int, float, str), where)
+            rec = flows.setdefault(fid, [0, 0])
+            rec[0 if ph == "s" else 1] += 1
+            if ph == "f" and ev.get("bp") != "e":
+                raise Invalid(f"{where}: flow finish without bp=e")
+        else:
+            raise Invalid(f"{where}: unexpected phase {ph!r}")
+    if n_x == 0:
+        raise Invalid("trace: no X duration events")
+    for (pid, tid), row in slices.items():
+        row.sort(key=lambda s: (s[0], s[1]))
+        for a, b in zip(row, row[1:]):
+            if a[1] > b[0] + EPS:
+                raise Invalid(
+                    f"trace: pid {pid} tid {tid}: {a[2]} [{a[0]}, {a[1]}] "
+                    f"overlaps {b[2]} [{b[0]}, {b[1]}]")
+    for fid, (starts, finishes) in flows.items():
+        if (starts, finishes) != (1, 1):
+            raise Invalid(
+                f"trace: flow id {fid} has {starts} start(s) / "
+                f"{finishes} finish(es), wanted 1/1")
+    other = need(doc, "otherData", dict, "trace")
+    need(other, "schema", str, "otherData")
+    return f"{n_x} spans, {len(flows)} flow pairs, {len(slices)} tracks"
+
+
+def validate_metrics(m, where):
+    need(m, "counters", dict, where)
+    need(m, "gauges", dict, where)
+    need(m, "histograms", dict, where)
+
+
+def validate_report(doc):
+    for key in ("config", "schedule", "makespan_secs", "iteration_secs",
+                "throughput", "bubble_ratio", "partition"):
+        need(doc, key, None, "report")
+    stages = need(doc, "stages", list, "report")
+    if not stages:
+        raise Invalid("report: stages is empty")
+    for st in stages:
+        s = need(st, "stage", (int, float), "report stage")
+        where = f"stages[{int(s)}]"
+        missing = STAGE_KEYS - set(st)
+        if missing:
+            raise Invalid(f"{where}: missing keys {sorted(missing)}")
+        bubble = need(st, "bubble", dict, where)
+        for key in ("warmup_secs", "stall_secs", "tail_secs"):
+            if need(bubble, key, (int, float), f"{where}.bubble") < -EPS:
+                raise Invalid(f"{where}: negative bubble {key}")
+        if st["achieved_overlap_secs"] > st["planned_overlap_secs"] + EPS:
+            raise Invalid(f"{where}: achieved overlap exceeds planned")
+        if st["peak_mem_bytes"] < st["peak_mem_h1_bytes"] - 1.0:
+            raise Invalid(f"{where}: exact memory peak below its H1 bound")
+        if not -EPS <= st["overlap_efficiency"] <= 1.0 + EPS:
+            raise Invalid(
+                f"{where}: overlap_efficiency "
+                f"{st['overlap_efficiency']} outside [0, 1]")
+    overlap = need(doc, "overlap", dict, "report")
+    if (need(overlap, "achieved_secs", (int, float), "overlap")
+            > need(overlap, "planned_secs", (int, float), "overlap") + EPS):
+        raise Invalid("report: total achieved overlap exceeds planned")
+    memory = need(doc, "memory", dict, "report")
+    if (need(memory, "peak_bytes", (int, float), "memory")
+            < need(memory, "peak_h1_bytes", (int, float), "memory") - 1.0):
+        raise Invalid("report: total memory peak below its H1 bound")
+    validate_metrics(need(doc, "metrics", dict, "report"), "report.metrics")
+    return f"{len(stages)} stages, schedule {doc['schedule']!r}"
+
+
+def validate_partition_report(doc):
+    need(doc, "policy", str, "partition report")
+    need(doc, "schedule", str, "partition report")
+    searches = need(doc, "searches", list, "partition report")
+    if not searches:
+        raise Invalid("partition report: searches is empty")
+    for sr in searches:
+        name = need(sr, "search", str, "search row")
+        where = f"searches[{name!r}]"
+        part = need(sr, "partition", list, where)
+        if not all(isinstance(x, (int, float)) and x >= 1 for x in part):
+            raise Invalid(f"{where}: bad partition {part}")
+        for key in ("makespan_secs", "search_secs", "evaluated"):
+            if need(sr, key, (int, float), where) < 0:
+                raise Invalid(f"{where}: negative {key}")
+        validate_metrics(need(sr, "metrics", dict, where), f"{where}.metrics")
+    validate_metrics(
+        need(doc, "cache_metrics", dict, "partition report"),
+        "partition report.cache_metrics")
+    return f"{len(searches)} searches, policy {doc['policy']!r}"
+
+
+def validate(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        raise Invalid("top level is not an object")
+    schema = doc.get("schema") or doc.get("otherData", {}).get("schema")
+    if schema == "lynx.trace.v1":
+        detail = validate_trace(doc)
+    elif schema == "lynx.report.v1":
+        detail = validate_report(doc)
+    elif schema == "lynx.partition_report.v1":
+        detail = validate_partition_report(doc)
+    else:
+        raise Invalid(f"unknown schema tag {schema!r}")
+    return schema, detail
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    failed = False
+    for path in argv[1:]:
+        try:
+            schema, detail = validate(path)
+            print(f"OK: {path}: {schema} ({detail})")
+        except (Invalid, OSError, json.JSONDecodeError) as e:
+            print(f"FAIL: {path}: {e}", file=sys.stderr)
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
