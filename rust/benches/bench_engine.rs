@@ -1,0 +1,219 @@
+//! Bench: event-engine throughput at 10k-GPU pipeline shapes.
+//!
+//! Drives the dependency-driven ready-queue scheduler over a P×m grid of
+//! synthetic segment inputs (TP comm widths, window recompute, p2p wire
+//! time — every hot path of the engine), reporting wall-clock and
+//! events/sec (work items executed per second of bench wall time). One
+//! **pinned cell** (1f1b, P=2048, m=4) additionally runs the retired
+//! sweep executor and reports the old-vs-new speedup — `scripts/check.sh`
+//! gates that row at ≥ 5× — with a bitwise makespan equality assert, so
+//! the speedup can never come from computing something different.
+//! Finally, two **rail-10k rows** execute 1F1B and ZB-V end-to-end on the
+//! 10k-GPU rail-optimized fabric preset (1250 nodes × 8 GPUs, tp 8 ×
+//! pp 1250), pricing every pipeline boundary off the real per-edge link.
+//!
+//! Emits `BENCH_engine.json`. Run `cargo bench --bench bench_engine`
+//! (LYNX_BENCH_QUICK=1 for the reduced grid — it always keeps the pinned
+//! cell; LYNX_BENCH_OUT overrides the output directory).
+
+use lynx::costmodel::Topology;
+use lynx::sched::{PipelineSchedule, ScheduleKind, Segment};
+use lynx::sim::{
+    run_schedule_segments, run_schedule_segments_sweep, LinkCfg, PipelineTrace, StageSegments,
+};
+use lynx::topo::ClusterTopology;
+use lynx::util::bench::Bench;
+use lynx::util::json::Json;
+use std::time::Instant;
+
+/// Synthetic per-stage segments exercising compute/comm interleave,
+/// window recompute and p2p wire time. Deterministic and cheap to build
+/// so the measured time is the engine, not the setup.
+fn synth_segs(p: usize, bwd_split: Option<f64>) -> Vec<StageSegments> {
+    let frac = bwd_split.unwrap_or(1.0);
+    (0..p)
+        .map(|s| {
+            // Mild per-stage skew so dependencies actually stall.
+            let skew = 1.0 + 0.1 * ((s % 7) as f64 / 7.0);
+            let wgrad = match bwd_split {
+                None => Vec::new(),
+                Some(f) => vec![Segment::comp(1.2 * skew * (1.0 - f))],
+            };
+            StageSegments {
+                fwd: vec![
+                    Segment::comp(0.5 * skew),
+                    Segment::comm(0.04),
+                    Segment::comp(0.5 * skew),
+                ],
+                bwd: vec![
+                    Segment::comp(0.6 * skew * frac),
+                    Segment::comm(0.04),
+                    Segment::comp(0.6 * skew * frac),
+                ],
+                wgrad,
+                exposed: 0.2,
+                fwd_rc: vec![0.03],
+                bwd_rc: vec![0.03],
+                p2p_latency: 1e-5,
+                p2p_bytes: 1e8,
+                ..StageSegments::default()
+            }
+        })
+        .collect()
+}
+
+fn total_items(tr: &PipelineTrace) -> usize {
+    tr.items.iter().map(|l| l.len()).sum()
+}
+
+/// Wall-clock one engine entry point: a single run in quick mode,
+/// otherwise enough iterations to cover ~0.2 s of measurement.
+fn time_engine(
+    quick: bool,
+    f: &dyn Fn() -> PipelineTrace,
+) -> (f64, PipelineTrace) {
+    let t0 = Instant::now();
+    let tr = std::hint::black_box(f());
+    let mut wall = t0.elapsed().as_secs_f64();
+    if !quick && wall < 0.2 {
+        let iters = ((0.2 / wall.max(1e-9)).ceil() as usize).clamp(1, 50);
+        let t1 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        wall = t1.elapsed().as_secs_f64() / iters as f64;
+    }
+    (wall, tr)
+}
+
+fn main() {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("engine: ready-queue scheduler throughput");
+    let mut out = Json::Arr(vec![]);
+    let mut rows = Vec::new();
+    let link = LinkCfg { p2p_bandwidth: 25e9, ..LinkCfg::default() };
+
+    // ---- P × m grid (new scheduler only) ----
+    let grid: &[(usize, usize)] =
+        if quick { &[(128, 4), (2048, 4)] } else { &[(128, 4), (128, 16), (512, 4), (512, 16), (2048, 4), (2048, 16)] };
+    for kind in [ScheduleKind::OneFOneB, ScheduleKind::ZbV] {
+        for &(p, m) in grid {
+            // ZB-V needs m >= 2 virtual waves anyway; every grid m works.
+            let sched = kind.build(p, m);
+            let segs = synth_segs(p, sched.backward_split());
+            let (wall, tr) =
+                time_engine(quick, &|| run_schedule_segments(&segs, &link, sched.as_ref(), true));
+            let items = total_items(&tr);
+            let eps = items as f64 / wall.max(1e-12);
+            b.record(&format!("{} P={p} m={m}", kind.label()), wall, "s/run");
+            rows.push(vec![
+                kind.label().to_string(),
+                p.to_string(),
+                m.to_string(),
+                items.to_string(),
+                format!("{:.4}", wall),
+                format!("{:.0}", eps),
+            ]);
+            let mut jo = Json::obj();
+            jo.set("schedule", Json::from(kind.label()))
+                .set("p", Json::from(p as f64))
+                .set("m", Json::from(m as f64))
+                .set("chunks", Json::from(tr.num_chunks as f64))
+                .set("items", Json::from(items as f64))
+                .set("new_wall_secs", Json::from(wall))
+                .set("events_per_sec", Json::from(eps))
+                .set("makespan", Json::from(tr.makespan));
+            out.push(jo);
+        }
+    }
+
+    // ---- pinned old-vs-new cell: 1f1b, P=2048, m=4 ----
+    {
+        let (p, m) = (2048usize, 4usize);
+        let sched = ScheduleKind::OneFOneB.build(p, m);
+        let segs = synth_segs(p, sched.backward_split());
+        let (new_wall, tr_new) =
+            time_engine(quick, &|| run_schedule_segments(&segs, &link, sched.as_ref(), true));
+        let (old_wall, tr_old) = time_engine(quick, &|| {
+            run_schedule_segments_sweep(&segs, &link, sched.as_ref(), true)
+        });
+        assert_eq!(
+            tr_new.makespan.to_bits(),
+            tr_old.makespan.to_bits(),
+            "pinned cell: ready queue diverged from the sweep oracle"
+        );
+        let items = total_items(&tr_new);
+        let speedup = old_wall / new_wall.max(1e-12);
+        b.record("pinned 1f1b P=2048 m=4 (old sweep)", old_wall, "s/run");
+        b.record("pinned 1f1b P=2048 m=4 (ready queue)", new_wall, "s/run");
+        b.record("pinned speedup", speedup, "x");
+        let mut jo = Json::obj();
+        jo.set("pinned", Json::from(true))
+            .set("schedule", Json::from("1f1b"))
+            .set("p", Json::from(p as f64))
+            .set("m", Json::from(m as f64))
+            .set("items", Json::from(items as f64))
+            .set("old_wall_secs", Json::from(old_wall))
+            .set("new_wall_secs", Json::from(new_wall))
+            .set("speedup", Json::from(speedup))
+            .set("events_per_sec", Json::from(items as f64 / new_wall.max(1e-12)))
+            .set("makespan", Json::from(tr_new.makespan));
+        out.push(jo);
+    }
+
+    // ---- rail-10k end-to-end rows: 1250 stages on the real fabric ----
+    {
+        let topo = Topology::hierarchical(ClusterTopology::rail_10k(), 8, 1250, 1);
+        let p = 1250usize;
+        let m = if quick { 8 } else { 16 };
+        let n_bounds = p - 1;
+        let edge_bandwidth: Vec<f64> =
+            (0..n_bounds).map(|bd| topo.pp_link_between(bd, bd + 1).bus_bw).collect();
+        let edge_shared_tier: Vec<bool> =
+            (0..n_bounds).map(|bd| topo.boundary_shares_tp_tier(bd)).collect();
+        let rail_link = LinkCfg {
+            p2p_bandwidth: topo.pp_link.bus_bw,
+            edge_bandwidth,
+            serialize_p2p_with_tp: false,
+            edge_shared_tier,
+            ..LinkCfg::default()
+        };
+        for kind in [ScheduleKind::OneFOneB, ScheduleKind::ZbV] {
+            let sched = kind.build(p, m);
+            let mut segs = synth_segs(p, sched.backward_split());
+            for (s, seg) in segs.iter_mut().enumerate() {
+                seg.p2p_latency = topo.pp_link_between(s, (s + 1).min(p - 1)).latency;
+                if s > 0 {
+                    seg.p2p_latency_up = Some(topo.pp_link_between(s - 1, s).latency);
+                }
+            }
+            let (wall, tr) = time_engine(quick, &|| {
+                run_schedule_segments(&segs, &rail_link, sched.as_ref(), true)
+            });
+            let items = total_items(&tr);
+            b.record(&format!("rail-10k {} pp=1250 tp=8", kind.label()), wall, "s/run");
+            let mut jo = Json::obj();
+            jo.set("kind", Json::from("rail10k"))
+                .set("schedule", Json::from(kind.label()))
+                .set("p", Json::from(p as f64))
+                .set("gpus", Json::from(10_000.0))
+                .set("m", Json::from(m as f64))
+                .set("items", Json::from(items as f64))
+                .set("new_wall_secs", Json::from(wall))
+                .set("events_per_sec", Json::from(items as f64 / wall.max(1e-12)))
+                .set("makespan", Json::from(tr.makespan));
+            out.push(jo);
+        }
+    }
+
+    b.table(
+        "ready-queue engine throughput (synthetic segments, lynx absorb)",
+        &["schedule", "P", "m", "items", "wall s", "events/s"],
+        &rows,
+    );
+
+    let dir = std::env::var("LYNX_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("BENCH_engine.json");
+    std::fs::write(&path, out.pretty()).expect("write BENCH_engine.json");
+    println!("wrote {}", path.display());
+}

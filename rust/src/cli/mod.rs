@@ -42,7 +42,7 @@ fn common_specs() -> Vec<OptSpec> {
         opt("model", "model preset: 1.3B|4.7B|7B|13B|20B", true, Some("1.3B")),
         opt(
             "topo",
-            "topology: nvlink|pcie (uniform) or dgx-a100|pcie-box|<nodes>x<gpus>[:nvlink=GBps,pcie=GBps,ib=GBps,intra-lat=us,inter-lat=us] (hierarchical)",
+            "topology: nvlink|pcie (uniform) or dgx-a100|pcie-box|rail-10k|<nodes>x<gpus>[:nvlink=GBps,pcie=GBps,ib=GBps,intra-lat=us,inter-lat=us,nics=N] (hierarchical; nics=N makes it rail-optimized)",
             true,
             Some("nvlink"),
         ),
@@ -208,6 +208,17 @@ fn parse_topology(spec: &str, tp: usize, pp: usize, dp: usize) -> Result<Topolog
         "pcie-box" => {
             let nodes = ((world + 3) / 4).max(1);
             Topology::hierarchical(ClusterTopology::pcie_box(nodes), tp, pp, dp)
+        }
+        "rail-10k" => {
+            let cluster = ClusterTopology::rail_10k();
+            let total = cluster.total_gpus().unwrap();
+            if world > total {
+                return Err(anyhow!(
+                    "job needs {world} GPUs (tp {tp} × pp {pp} × dp {dp}) but rail-10k \
+                     has {total}"
+                ));
+            }
+            Topology::hierarchical(cluster, tp, pp, dp)
         }
         other => {
             let cluster = ClusterTopology::parse(other).map_err(|e| anyhow!(e))?;
@@ -667,7 +678,7 @@ mod tests {
 
     #[test]
     fn hierarchical_topologies_parse_and_simulate() {
-        for topo in ["dgx-a100", "pcie-box", "2x6", "2x8:nvlink=200,ib=20"] {
+        for topo in ["dgx-a100", "pcie-box", "2x6", "2x8:nvlink=200,ib=20", "2x8:nics=4"] {
             let code = run(&sv(&[
                 "simulate",
                 "--model",

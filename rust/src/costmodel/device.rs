@@ -230,7 +230,7 @@ impl Topology {
             None => self.pp_link.clone(),
             Some(c) => match &c.fabric {
                 ClusterFabric::Uniform { pp_link, .. } => pp_link.clone(),
-                ClusterFabric::Hierarchical { .. } => {
+                ClusterFabric::Hierarchical { .. } | ClusterFabric::RailOptimized { .. } => {
                     c.group_link(self.placement().dp_group_crosses(stage)).clone()
                 }
             },
@@ -244,7 +244,12 @@ impl Topology {
     /// uniform model never contends unless the global flag forces it.
     pub fn boundary_shares_tp_tier(&self, boundary: usize) -> bool {
         match &self.cluster {
-            Some(c) if matches!(c.fabric, ClusterFabric::Hierarchical { .. }) => {
+            Some(c)
+                if matches!(
+                    c.fabric,
+                    ClusterFabric::Hierarchical { .. } | ClusterFabric::RailOptimized { .. }
+                ) =>
+            {
                 if boundary + 1 >= self.pp {
                     return false;
                 }

@@ -209,7 +209,7 @@ impl SpanRecorder {
             .iter()
             .filter(|s| s.stage == stage && s.track() == track)
             .collect();
-        out.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        out.sort_by(|a, b| a.start.total_cmp(&b.start));
         out
     }
 

@@ -1,4 +1,5 @@
-//! Two-resource discrete-event execution of any [`PipelineSchedule`].
+//! Two-resource discrete-event execution of any [`PipelineSchedule`],
+//! driven by a **dependency-resolved ready queue**.
 //!
 //! Each pipeline stage owns **two streams**: a compute stream and a comm
 //! stream. Every [`WorkItem`] expands into sub-segments
@@ -12,6 +13,25 @@
 //! bytes / bandwidth serializes per directed edge; latency is pure
 //! delay, and the wire can optionally contend with TP traffic on the
 //! sender's comm stream).
+//!
+//! **Scheduling core.** Dependencies are precomputed once per
+//! `(stage, chunk)` from the placement's upstream maps, and execution is
+//! a ready queue keyed by `(round, stage)`: a stage drains its head
+//! items greedily until one blocks on an incomplete upstream F/B, at
+//! which point it parks in a waiter slot for exactly that dependency;
+//! completing an item wakes at most the one stage waiting on it. This
+//! is O(total items · log stages) scheduling work — the retired
+//! round-robin sweep ([`run_schedule_segments_sweep`], kept as the
+//! equivalence oracle) re-probed every blocked stage on every pass,
+//! which is quadratic-ish at 10k-GPU pipeline depths. The `(round,
+//! stage)` key reproduces the sweep's exact total execution order, so
+//! the two executors are **bit-exact** across makespan, busy,
+//! comm_busy, absorbed, spans, windows and flow pairing (grid-tested in
+//! `tests/engine_scale_prop.rs`); an unsatisfiable schedule now panics
+//! with the blocked item and its unmet dependency instead of sweeping
+//! forever. Hot-path state is flat: per-directed-edge link frontiers
+//! live in a `Vec` indexed by boundary ([`edge_slot`]), and per-item
+//! bookkeeping lives in arenas sized once from the work lists.
 //!
 //! Lynx's recomputation is **executed**, not analytically subtracted:
 //!
@@ -27,14 +47,19 @@
 //!
 //! An optional end-of-iteration DP gradient all-reduce rides the comm
 //! stream, either serialized after the stage's last item or overlapped
-//! with the trailing weight-grad work ([`DpMode`]).
+//! with the trailing weight-grad work ([`DpMode`]). When the caller
+//! supplies per-hop ring segments ([`StageSegments::dp_hops`]) the sync
+//! executes hop by hop — `2(d−1)` back-to-back comm spans, one per ring
+//! step — and on a uniform fabric their sum reproduces the closed-form
+//! single segment to fp round-off.
 //!
 //! The `_obs` entry points additionally emit a typed span
 //! ([`crate::obs::Span`]) for every interval the engine charges to a
 //! stream — compute slices, recompute in all three dispositions,
 //! TP/p2p/DP collectives, spill, stalls — using the same sim-clock
 //! timestamps the accounting uses, so recorded traces and reported
-//! aggregates cannot disagree.
+//! aggregates cannot disagree. Span emission order is the execution
+//! order, which the ready queue keeps identical to the sweep's.
 //!
 //! **Equivalence contract** (grid-tested): with zero comm widths and
 //! infinite link bandwidth — [`StageSegments::from_scalar`], which is
@@ -48,7 +73,8 @@ use crate::sched::{
     bwd_upstream_of, fwd_upstream_of, peak_inflight_replay_exact, OneFOneB, PipelineSchedule,
     SegKind, Segment, WorkItem, WorkKind,
 };
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Observation context threaded through the event core: an optional
 /// span sink and an optional metrics registry, both borrowed from the
@@ -235,8 +261,16 @@ pub struct StageSegments {
     pub p2p_latency_up: Option<f64>,
     /// Activation bytes shipped per microbatch to the neighbouring stage.
     pub p2p_bytes: f64,
-    /// End-of-iteration DP gradient all-reduce seconds (0 = none).
+    /// End-of-iteration DP gradient all-reduce seconds (0 = none). Used
+    /// as a single closed-form comm segment when [`Self::dp_hops`] is
+    /// empty.
     pub dp_secs: f64,
+    /// Per-hop DP ring segments: when non-empty the gradient sync
+    /// executes hop by hop on the comm stream (`2(d−1)` reduce-scatter +
+    /// all-gather steps, one comm span each) instead of as one
+    /// closed-form segment. On a uniform fabric the hop sum equals
+    /// [`Self::dp_secs`] to fp round-off (property tested).
+    pub dp_hops: Vec<f64>,
 }
 
 impl StageSegments {
@@ -409,208 +443,691 @@ pub fn run_schedule_obs(
     run_schedule_segments_obs(&segs, &LinkCfg::default(), sched, lynx_absorb, sink, metrics)
 }
 
-/// Arrival time at `dst` of data leaving `src` at `t_ready`: wire time
-/// (bytes / bandwidth) serializes per directed edge — and optionally on
-/// the sender's comm stream — while latency is pure delay. Zero-wire
-/// transfers bypass the link queue entirely (the fixpoint model).
-///
-/// Under `serialize_p2p_with_tp` the transfer is **first-fit gap
-/// inserted** against the sender's recorded comm spans: TP collectives
-/// have priority (they are scheduled without knowledge of p2p), and the
-/// wire slots into the earliest gap at or after `t_ready` that fits.
-/// The sender's `comm_free` frontier is deliberately *not* consulted or
-/// advanced — the worklist executes whole stages ahead of their
-/// consumers, so the frontier reflects collectives that happen
-/// chronologically *after* the send and must not delay it.
-#[allow(clippy::too_many_arguments)]
-fn p2p_arrive(
-    t_ready: f64,
-    src: usize,
-    dst: usize,
-    micro: usize,
-    chunk: usize,
-    segs: &[StageSegments],
-    link: &LinkCfg,
-    link_free: &mut HashMap<(usize, usize), f64>,
-    comm_spans: &mut [Vec<CommSpan>],
-    comm_busy: &mut [f64],
-    obs: &mut ObsCtx,
-) -> f64 {
-    // Upstream (gradient) sends ride the sender's *incoming* boundary on
-    // heterogeneous fabrics; downstream sends its outgoing one.
-    let lat = if src > dst {
-        segs[src].p2p_latency_up.unwrap_or(segs[src].p2p_latency)
+/// Flat slot of the directed inter-stage edge `src → dst` in the
+/// engine's link-frontier arena (length `2p`): boundary `b`'s downstream
+/// direction sits at `2b`, its upstream direction at `2b + 1`, and the
+/// interleaved wrap edges (`p−1 → 0` downstream, `0 → p−1` upstream)
+/// reuse the `b = p−1` pair. Every directed pair valid under a chunk
+/// placement maps to exactly one slot, so per-edge wire serialization is
+/// a vector index instead of a hash lookup on the hot path.
+fn edge_slot(src: usize, dst: usize, p: usize) -> usize {
+    if dst == src + 1 || (src + 1 == p && dst == 0) {
+        2 * src
+    } else if src == dst + 1 || (dst + 1 == p && src == 0) {
+        2 * dst + 1
     } else {
-        segs[src].p2p_latency
-    };
-    let bytes = segs[src].p2p_bytes;
-    let bw = link.bandwidth_between(src, dst);
-    let wire = if bw.is_finite() && bytes > 0.0 { bytes / bw } else { 0.0 };
-    if wire <= 0.0 {
-        return t_ready + lat;
+        panic!("engine p2p between non-adjacent stages {src} -> {dst} (p={p})")
     }
-    let contends = link.contends(src, dst);
-    let slot = link_free.entry((src, dst)).or_insert(0.0);
-    let mut start = (*slot).max(t_ready);
-    if contends {
-        // First-fit gap among the sender's known comm spans (kept sorted
-        // by start): skip every span that overlaps [start, start + wire).
-        for cs in comm_spans[src].iter() {
-            if cs.end <= start {
-                continue;
+}
+
+/// Dependency completed by executing an item — the forward or input-grad
+/// of `(stage, slot)` with `slot = chunk * num_micro + micro`. A blocked
+/// stage parks in the waiter arena under the key it needs; the item that
+/// completes the key wakes it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DepKey {
+    F { stage: usize, slot: usize },
+    B { stage: usize, slot: usize },
+}
+
+/// All mutable execution state of one engine run, shared by the
+/// ready-queue scheduler and the sweep oracle so the two executors can
+/// differ **only** in the order they pick stages to drain — the
+/// per-item arithmetic ([`EngineState::exec_head`]) is literally the
+/// same code.
+///
+/// Per-slot state is flattened: `(stage, chunk, micro)` maps to
+/// `stage * v·m + chunk · m + micro` in `fwd_end`/`bwd_end`/`f_set`/
+/// `b_set`, per-item records live in one arena indexed by
+/// `item_off[stage] + position`, and the per-directed-edge link
+/// frontiers live in a `2p` vector ([`edge_slot`]).
+struct EngineState<'a> {
+    segs: &'a [StageSegments],
+    link: &'a LinkCfg,
+    label: &'static str,
+    p: usize,
+    m: usize,
+    v: usize,
+    /// `v * m`, the per-stage slot stride.
+    vm: usize,
+    vf: f64,
+    lynx_absorb: bool,
+    bwd_frac: f64,
+    split_backward: bool,
+    items: Vec<Vec<WorkItem>>,
+    /// Per-stage offsets into the item arenas (`item_off[p]` = total).
+    item_off: Vec<usize>,
+    /// Upstream of `F(stage, chunk)`, indexed `stage * v + chunk`.
+    fwd_up: Vec<Option<(usize, usize)>>,
+    /// Upstream of `B(stage, chunk)`, same indexing.
+    bwd_up: Vec<Option<(usize, usize)>>,
+    fwd_end: Vec<f64>,
+    bwd_end: Vec<f64>,
+    f_set: Vec<bool>,
+    b_set: Vec<bool>,
+    comp_free: Vec<f64>,
+    comm_free: Vec<f64>,
+    /// Directed-edge wire frontiers, indexed by [`edge_slot`].
+    link_free: Vec<f64>,
+    comm_spans: Vec<Vec<CommSpan>>,
+    comm_busy: Vec<f64>,
+    busy: Vec<f64>,
+    absorbed: Vec<f64>,
+    exposed_paid: Vec<f64>,
+    planned: Vec<f64>,
+    achieved: Vec<f64>,
+    item_start: Vec<f64>,
+    item_end: Vec<f64>,
+    item_absorb: Vec<f64>,
+    last_bwd_end: Vec<f64>,
+    /// Next unexecuted position in each stage's work order.
+    next: Vec<usize>,
+    executed: usize,
+    total: usize,
+}
+
+impl<'a> EngineState<'a> {
+    fn new(
+        segs: &'a [StageSegments],
+        link: &'a LinkCfg,
+        sched: &dyn PipelineSchedule,
+        lynx_absorb: bool,
+    ) -> EngineState<'a> {
+        let p = segs.len();
+        assert_eq!(p, sched.num_stages(), "segments vs schedule stage count");
+        let m = sched.num_micro();
+        let v = sched.num_chunks();
+        assert!(p >= 1 && m >= 1 && v >= 1);
+        let placement = sched.placement();
+        let items: Vec<Vec<WorkItem>> = (0..p).map(|s| sched.stage_items(s)).collect();
+        let mut item_off = Vec::with_capacity(p + 1);
+        let mut total = 0usize;
+        item_off.push(0);
+        for l in &items {
+            total += l.len();
+            item_off.push(total);
+        }
+        let mut fwd_up = Vec::with_capacity(p * v);
+        let mut bwd_up = Vec::with_capacity(p * v);
+        for s in 0..p {
+            for c in 0..v {
+                fwd_up.push(fwd_upstream_of(placement, s, c, p));
+                bwd_up.push(bwd_upstream_of(placement, s, c, p, v));
             }
-            if cs.start < start + wire {
-                start = start.max(cs.end);
-            } else {
-                break;
+        }
+        let vm = v * m;
+        EngineState {
+            segs,
+            link,
+            label: sched.label(),
+            p,
+            m,
+            v,
+            vm,
+            vf: v as f64,
+            lynx_absorb,
+            bwd_frac: sched.backward_split().unwrap_or(1.0),
+            split_backward: sched.backward_split().is_some(),
+            items,
+            item_off,
+            fwd_up,
+            bwd_up,
+            fwd_end: vec![f64::INFINITY; p * vm],
+            bwd_end: vec![f64::INFINITY; p * vm],
+            f_set: vec![false; p * vm],
+            b_set: vec![false; p * vm],
+            comp_free: vec![0.0; p],
+            comm_free: vec![0.0; p],
+            link_free: vec![0.0; 2 * p],
+            comm_spans: vec![Vec::new(); p],
+            comm_busy: vec![0.0; p],
+            busy: vec![0.0; p],
+            absorbed: vec![0.0; p],
+            exposed_paid: vec![0.0; p],
+            planned: vec![0.0; p],
+            achieved: vec![0.0; p],
+            item_start: vec![0.0; total],
+            item_end: vec![f64::INFINITY; total],
+            item_absorb: vec![0.0; total],
+            last_bwd_end: vec![0.0; p],
+            next: vec![0usize; p],
+            executed: 0,
+            total,
+        }
+    }
+
+    /// Waiter-arena index of a dependency key (F keys in the first half,
+    /// B keys in the second).
+    fn dep_index(&self, key: DepKey) -> usize {
+        match key {
+            DepKey::F { stage, slot } => stage * self.vm + slot,
+            DepKey::B { stage, slot } => self.p * self.vm + stage * self.vm + slot,
+        }
+    }
+
+    /// Human-readable form of a dependency key, for the deadlock
+    /// diagnostic.
+    fn describe_dep(&self, key: DepKey) -> String {
+        let (kind, stage, slot) = match key {
+            DepKey::F { stage, slot } => ("F", stage, slot),
+            DepKey::B { stage, slot } => ("B", stage, slot),
+        };
+        format!("{kind}(stage {stage}, micro {}, chunk {})", slot % self.m, slot / self.m)
+    }
+
+    /// The unmet dependency blocking stage `s`'s head item, or `None`
+    /// when the head can execute. Pure — no link or stream state moves
+    /// until [`Self::exec_head`] commits the item.
+    fn head_blocker(&self, s: usize) -> Option<DepKey> {
+        let it = self.items[s][self.next[s]];
+        let slot = it.chunk * self.m + it.micro;
+        match it.kind {
+            WorkKind::Fwd => match self.fwd_up[s * self.v + it.chunk] {
+                None => None,
+                Some((s2, c2)) => {
+                    let sl = c2 * self.m + it.micro;
+                    if self.f_set[s2 * self.vm + sl] {
+                        None
+                    } else {
+                        Some(DepKey::F { stage: s2, slot: sl })
+                    }
+                }
+            },
+            WorkKind::Bwd => match self.bwd_up[s * self.v + it.chunk] {
+                // Loss gradient is available right after the last
+                // virtual stage's forward (on this very stage).
+                None => {
+                    if self.f_set[s * self.vm + slot] {
+                        None
+                    } else {
+                        Some(DepKey::F { stage: s, slot })
+                    }
+                }
+                Some((s2, c2)) => {
+                    let sl = c2 * self.m + it.micro;
+                    if self.b_set[s2 * self.vm + sl] {
+                        None
+                    } else {
+                        Some(DepKey::B { stage: s2, slot: sl })
+                    }
+                }
+            },
+            WorkKind::WGrad => {
+                if self.b_set[s * self.vm + slot] {
+                    None
+                } else {
+                    Some(DepKey::B { stage: s, slot })
+                }
             }
         }
     }
-    let end = start + wire;
-    *slot = end;
-    if contends {
-        let span = CommSpan { start, end, tag: CommTag::P2p };
-        // Insert at the sorted position so later first-fit scans (and
-        // the Gantt comm row) see a chronological list.
-        let at = comm_spans[src]
-            .partition_point(|cs| cs.start <= span.start);
-        comm_spans[src].insert(at, span);
-        comm_busy[src] += wire;
-        obs.emit(Span {
-            stage: src,
-            kind: SpanKind::CommP2p,
-            start,
-            end,
-            micro,
-            chunk,
-            flow: None,
-        });
-        obs.inc("engine.p2p.contended");
-    }
-    end + lat
-}
 
-/// Execute one item's segment list on stage `s`'s two streams starting
-/// from the dataflow frontier `cur`. Comm segments hide up to their
-/// executed width of the planned window recompute (`rc`, one entry per
-/// comm segment); the excess spills onto the compute stream right after
-/// the window. Returns `(first segment start, final end)`.
-///
-/// `item` is `(span kind for compute slices, micro, chunk)` — compute
-/// slices are traced unconditionally (zero-duration ones included, so a
-/// renderer can recover exact item starts), TP collectives only when
-/// they occupy wire time, hidden recompute as `RecomputeOverlapped`
-/// sharing a flow id with its collective, and spill as
-/// `CommSerialized`.
-#[allow(clippy::too_many_arguments)]
-fn run_segs(
-    s: usize,
-    seglist: &[Segment],
-    rc: &[f64],
-    vf: f64,
-    mut cur: f64,
-    item: (SpanKind, usize, usize),
-    comp_free: &mut [f64],
-    comm_free: &mut [f64],
-    comm_spans: &mut [Vec<CommSpan>],
-    comm_busy: &mut [f64],
-    busy: &mut [f64],
-    planned: &mut [f64],
-    achieved: &mut [f64],
-    obs: &mut ObsCtx,
-) -> (Option<f64>, f64) {
-    let (kind, micro, chunk) = item;
-    let mut first: Option<f64> = None;
-    let mut ci = 0usize;
-    for seg in seglist {
-        let dur = seg.dur / vf;
-        match seg.kind {
-            SegKind::Comp => {
-                let start = cur.max(comp_free[s]);
-                let end = start + dur;
-                comp_free[s] = end;
-                busy[s] += dur;
-                cur = end;
-                if first.is_none() {
-                    first = Some(start);
+    /// Arrival time at `dst` of data leaving `src` at `t_ready`: wire
+    /// time (bytes / bandwidth) serializes per directed edge — and
+    /// optionally on the sender's comm stream — while latency is pure
+    /// delay. Zero-wire transfers bypass the link queue entirely (the
+    /// fixpoint model).
+    ///
+    /// Under `serialize_p2p_with_tp` the transfer is **first-fit gap
+    /// inserted** against the sender's recorded comm spans: TP
+    /// collectives have priority (they are scheduled without knowledge
+    /// of p2p), and the wire slots into the earliest gap at or after
+    /// `t_ready` that fits. The sender's `comm_free` frontier is
+    /// deliberately *not* consulted or advanced — a stage executes whole
+    /// items ahead of its consumers, so the frontier reflects
+    /// collectives that happen chronologically *after* the send and must
+    /// not delay it.
+    fn p2p_arrive(
+        &mut self,
+        t_ready: f64,
+        src: usize,
+        dst: usize,
+        micro: usize,
+        chunk: usize,
+        obs: &mut ObsCtx,
+    ) -> f64 {
+        // Upstream (gradient) sends ride the sender's *incoming*
+        // boundary on heterogeneous fabrics; downstream sends its
+        // outgoing one.
+        let lat = if src > dst {
+            self.segs[src].p2p_latency_up.unwrap_or(self.segs[src].p2p_latency)
+        } else {
+            self.segs[src].p2p_latency
+        };
+        let bytes = self.segs[src].p2p_bytes;
+        let bw = self.link.bandwidth_between(src, dst);
+        let wire = if bw.is_finite() && bytes > 0.0 { bytes / bw } else { 0.0 };
+        if wire <= 0.0 {
+            return t_ready + lat;
+        }
+        let contends = self.link.contends(src, dst);
+        let slot = edge_slot(src, dst, self.p);
+        let mut start = self.link_free[slot].max(t_ready);
+        if contends {
+            // First-fit gap among the sender's known comm spans (kept
+            // sorted by start): skip every span that overlaps
+            // [start, start + wire).
+            for cs in self.comm_spans[src].iter() {
+                if cs.end <= start {
+                    continue;
                 }
-                obs.emit(Span { stage: s, kind, start, end, micro, chunk, flow: None });
+                if cs.start < start + wire {
+                    start = start.max(cs.end);
+                } else {
+                    break;
+                }
             }
-            SegKind::Comm => {
-                let r = if ci < rc.len() { rc[ci] / vf } else { 0.0 };
-                ci += 1;
-                let cstart = cur.max(comm_free[s]);
-                let cend = cstart + dur;
-                comm_free[s] = cend;
-                comm_busy[s] += dur;
-                planned[s] += r;
-                // The compute stream hides recompute inside the window.
-                let avail = (cend - cstart.max(comp_free[s])).max(0.0);
-                let hidden = r.min(avail);
-                // A flow event needs both endpoints: only link when the
-                // collective is wide enough to be traced at all.
-                let flow = if hidden > 0.0 && dur > 1e-15 { Some(obs.flow()) } else { None };
-                if dur > 1e-15 {
-                    comm_spans[s].push(CommSpan { start: cstart, end: cend, tag: CommTag::Tp });
-                    obs.emit(Span {
-                        stage: s,
-                        kind: SpanKind::CommTp,
-                        start: cstart,
-                        end: cend,
-                        micro,
-                        chunk,
-                        flow,
+        }
+        let end = start + wire;
+        self.link_free[slot] = end;
+        if contends {
+            let span = CommSpan { start, end, tag: CommTag::P2p };
+            // Insert at the sorted position so later first-fit scans
+            // (and the Gantt comm row) see a chronological list.
+            let at = self.comm_spans[src].partition_point(|cs| cs.start <= span.start);
+            self.comm_spans[src].insert(at, span);
+            self.comm_busy[src] += wire;
+            obs.emit(Span {
+                stage: src,
+                kind: SpanKind::CommP2p,
+                start,
+                end,
+                micro,
+                chunk,
+                flow: None,
+            });
+            obs.inc("engine.p2p.contended");
+        }
+        end + lat
+    }
+
+    /// Execute one item's segment list on stage `s`'s two streams
+    /// starting from the dataflow frontier `cur`. Comm segments hide up
+    /// to their executed width of the planned window recompute (`rc`,
+    /// one entry per comm segment); the excess spills onto the compute
+    /// stream right after the window. Returns `(first segment start,
+    /// final end)`.
+    ///
+    /// `item` is `(span kind for compute slices, micro, chunk)` —
+    /// compute slices are traced unconditionally (zero-duration ones
+    /// included, so a renderer can recover exact item starts), TP
+    /// collectives only when they occupy wire time, hidden recompute as
+    /// `RecomputeOverlapped` sharing a flow id with its collective, and
+    /// spill as `CommSerialized`.
+    fn run_segs(
+        &mut self,
+        s: usize,
+        seglist: &[Segment],
+        rc: &[f64],
+        mut cur: f64,
+        item: (SpanKind, usize, usize),
+        obs: &mut ObsCtx,
+    ) -> (Option<f64>, f64) {
+        let (kind, micro, chunk) = item;
+        let vf = self.vf;
+        let mut first: Option<f64> = None;
+        let mut ci = 0usize;
+        for seg in seglist {
+            let dur = seg.dur / vf;
+            match seg.kind {
+                SegKind::Comp => {
+                    let start = cur.max(self.comp_free[s]);
+                    let end = start + dur;
+                    self.comp_free[s] = end;
+                    self.busy[s] += dur;
+                    cur = end;
+                    if first.is_none() {
+                        first = Some(start);
+                    }
+                    obs.emit(Span { stage: s, kind, start, end, micro, chunk, flow: None });
+                }
+                SegKind::Comm => {
+                    let r = if ci < rc.len() { rc[ci] / vf } else { 0.0 };
+                    ci += 1;
+                    let cstart = cur.max(self.comm_free[s]);
+                    let cend = cstart + dur;
+                    self.comm_free[s] = cend;
+                    self.comm_busy[s] += dur;
+                    self.planned[s] += r;
+                    // The compute stream hides recompute inside the
+                    // window.
+                    let avail = (cend - cstart.max(self.comp_free[s])).max(0.0);
+                    let hidden = r.min(avail);
+                    // A flow event needs both endpoints: only link when
+                    // the collective is wide enough to be traced at all.
+                    let flow = if hidden > 0.0 && dur > 1e-15 { Some(obs.flow()) } else { None };
+                    if dur > 1e-15 {
+                        self.comm_spans[s].push(CommSpan {
+                            start: cstart,
+                            end: cend,
+                            tag: CommTag::Tp,
+                        });
+                        obs.emit(Span {
+                            stage: s,
+                            kind: SpanKind::CommTp,
+                            start: cstart,
+                            end: cend,
+                            micro,
+                            chunk,
+                            flow,
+                        });
+                    }
+                    if hidden > 0.0 {
+                        let hstart = self.comp_free[s].max(cstart);
+                        self.comp_free[s] = hstart + hidden;
+                        self.busy[s] += hidden;
+                        obs.emit(Span {
+                            stage: s,
+                            kind: SpanKind::RecomputeOverlapped,
+                            start: hstart,
+                            end: self.comp_free[s],
+                            micro,
+                            chunk,
+                            flow,
+                        });
+                    }
+                    self.achieved[s] += hidden;
+                    cur = cend;
+                    if first.is_none() {
+                        first = Some(cstart);
+                    }
+                    let spill = r - hidden;
+                    if spill > 0.0 {
+                        // Window too narrow at the executed bandwidth:
+                        // the remainder runs serialized on the critical
+                        // path.
+                        let sstart = cur.max(self.comp_free[s]);
+                        let send = sstart + spill;
+                        self.comp_free[s] = send;
+                        self.busy[s] += spill;
+                        cur = send;
+                        obs.inc("engine.windows.spilled");
+                        obs.emit(Span {
+                            stage: s,
+                            kind: SpanKind::CommSerialized,
+                            start: sstart,
+                            end: send,
+                            micro,
+                            chunk,
+                            flow: None,
+                        });
+                    }
+                }
+            }
+        }
+        (first, cur)
+    }
+
+    /// Execute stage `s`'s head item — the caller must have checked
+    /// [`Self::head_blocker`] returned `None` — and return the
+    /// dependency key it completes (F/B; `None` for W, which nothing
+    /// depends on).
+    fn exec_head(&mut self, s: usize, obs: &mut ObsCtx) -> Option<DepKey> {
+        let segs = self.segs;
+        let it = self.items[s][self.next[s]];
+        let slot = it.chunk * self.m + it.micro;
+        let k = self.item_off[s] + self.next[s];
+        let (start, end, done) = match it.kind {
+            WorkKind::Fwd => {
+                let ready = match self.fwd_up[s * self.v + it.chunk] {
+                    None => 0.0,
+                    Some((s2, c2)) => {
+                        let sl = c2 * self.m + it.micro;
+                        let src_end = self.fwd_end[s2 * self.vm + sl];
+                        if s2 == s {
+                            // No hop between chunks hosted by the same
+                            // stage (the V's turning point).
+                            src_end
+                        } else {
+                            self.p2p_arrive(src_end, s2, s, it.micro, c2, obs)
+                        }
+                    }
+                };
+                let fallback = ready.max(self.comp_free[s]);
+                let (first, end) = self.run_segs(
+                    s,
+                    &segs[s].fwd,
+                    &segs[s].fwd_rc,
+                    ready,
+                    (SpanKind::Fwd, it.micro, it.chunk),
+                    obs,
+                );
+                self.fwd_end[s * self.vm + slot] = end;
+                self.f_set[s * self.vm + slot] = true;
+                (first.unwrap_or(fallback), end, Some(DepKey::F { stage: s, slot }))
+            }
+            WorkKind::Bwd => {
+                let dy_ready = match self.bwd_up[s * self.v + it.chunk] {
+                    // Loss gradient is available right after the last
+                    // virtual stage's forward.
+                    None => self.fwd_end[s * self.vm + slot],
+                    Some((s2, c2)) => {
+                        let sl = c2 * self.m + it.micro;
+                        let src_end = self.bwd_end[s2 * self.vm + sl];
+                        if s2 == s {
+                            src_end
+                        } else {
+                            self.p2p_arrive(src_end, s2, s, it.micro, c2, obs)
+                        }
+                    }
+                };
+                let exposed_i = segs[s].exposed / self.vf;
+                let comp0 = self.comp_free[s];
+                // Absorption: recompute starts as soon as the compute
+                // stream is free; the stall until dy hides part of it
+                // (same arithmetic as the fixpoint engine, for the
+                // equivalence contract).
+                let (absorb, cur) = if self.lynx_absorb {
+                    let gap = (dy_ready - comp0).max(0.0);
+                    (gap.min(exposed_i), (comp0 + exposed_i).max(dy_ready))
+                } else {
+                    (0.0, comp0.max(dy_ready) + exposed_i)
+                };
+                let rc_start = comp0.max(dy_ready - absorb);
+                if exposed_i > 0.0 {
+                    self.comp_free[s] = cur;
+                    self.busy[s] += exposed_i;
+                    // The exposed recompute tiles [rc_start, cur]: the
+                    // stall-hidden prefix, then the paid rest.
+                    if absorb > 0.0 {
+                        obs.emit(Span {
+                            stage: s,
+                            kind: SpanKind::RecomputeAbsorbed,
+                            start: rc_start,
+                            end: rc_start + absorb,
+                            micro: it.micro,
+                            chunk: it.chunk,
+                            flow: None,
+                        });
+                    }
+                    if exposed_i - absorb > 0.0 {
+                        obs.emit(Span {
+                            stage: s,
+                            kind: SpanKind::RecomputeExposed,
+                            start: rc_start + absorb,
+                            end: cur,
+                            micro: it.micro,
+                            chunk: it.chunk,
+                            flow: None,
+                        });
+                    }
+                }
+                self.absorbed[s] += absorb;
+                self.exposed_paid[s] += exposed_i - absorb;
+                self.item_absorb[k] = absorb;
+                let (_, end) = self.run_segs(
+                    s,
+                    &segs[s].bwd,
+                    &segs[s].bwd_rc,
+                    cur,
+                    (SpanKind::Bwd, it.micro, it.chunk),
+                    obs,
+                );
+                self.bwd_end[s * self.vm + slot] = end;
+                self.b_set[s * self.vm + slot] = true;
+                if end > self.last_bwd_end[s] {
+                    self.last_bwd_end[s] = end;
+                }
+                (rc_start, end, Some(DepKey::B { stage: s, slot }))
+            }
+            WorkKind::WGrad => {
+                let ready = self.bwd_end[s * self.vm + slot];
+                let fallback = ready.max(self.comp_free[s]);
+                let (first, end) = self.run_segs(
+                    s,
+                    &segs[s].wgrad,
+                    &[],
+                    ready,
+                    (SpanKind::WGrad, it.micro, it.chunk),
+                    obs,
+                );
+                (first.unwrap_or(fallback), end, None)
+            }
+        };
+        obs.inc(match it.kind {
+            WorkKind::Fwd => "engine.items.fwd",
+            WorkKind::Bwd => "engine.items.bwd",
+            WorkKind::WGrad => "engine.items.wgrad",
+        });
+        self.item_start[k] = start;
+        self.item_end[k] = end;
+        self.next[s] += 1;
+        self.executed += 1;
+        done
+    }
+
+    /// Close the run: execute the end-of-iteration DP gradient sync,
+    /// derive the overlap windows from the item arena, and assemble the
+    /// public [`PipelineTrace`].
+    fn finish(mut self, obs: &mut ObsCtx) -> PipelineTrace {
+        let p = self.p;
+
+        // ---- end-of-iteration DP gradient all-reduce ----
+        let mut stage_end = vec![0.0f64; p];
+        for s in 0..p {
+            let (a, b) = (self.item_off[s], self.item_off[s + 1]);
+            let last = self.item_end[a..b].iter().cloned().fold(0.0, f64::max);
+            // Hop-by-hop ring execution when the caller modeled the
+            // ring's edges; one closed-form segment otherwise.
+            let segs = self.segs;
+            let hop_path = !segs[s].dp_hops.is_empty();
+            let single = [segs[s].dp_secs];
+            let hops: &[f64] = if hop_path { &segs[s].dp_hops } else { &single };
+            let d: f64 = hops.iter().sum();
+            if self.link.dp_mode == DpMode::Off || d <= 0.0 {
+                stage_end[s] = last;
+                continue;
+            }
+            let start = match self.link.dp_mode {
+                DpMode::Serial => last.max(self.comm_free[s]),
+                _ => self.last_bwd_end[s].max(self.comm_free[s]),
+            };
+            let mut t = start;
+            for &h in hops {
+                let hend = t + h;
+                self.comm_spans[s].push(CommSpan { start: t, end: hend, tag: CommTag::Dp });
+                self.comm_busy[s] += h;
+                obs.emit(Span {
+                    stage: s,
+                    kind: SpanKind::CommDp,
+                    start: t,
+                    end: hend,
+                    micro: NO_INDEX,
+                    chunk: NO_INDEX,
+                    flow: None,
+                });
+                if hop_path {
+                    obs.inc("engine.dp.hops");
+                }
+                t = hend;
+            }
+            self.comm_free[s] = t;
+            obs.inc("engine.dp.syncs");
+            stage_end[s] = last.max(t);
+        }
+        let makespan = stage_end.iter().cloned().fold(0.0, f64::max);
+        if let Some(m) = obs.metrics.as_mut() {
+            m.set_gauge("engine.makespan_secs", makespan);
+        }
+
+        // ---- windows: full pre-absorption stalls + consumed ----
+        let mut windows: Vec<Vec<OverlapWindow>> = vec![Vec::new(); p];
+        let mut idle = vec![0.0f64; p];
+        for s in 0..p {
+            idle[s] = (makespan - self.busy[s]).max(0.0);
+            let (a, b) = (self.item_off[s], self.item_off[s + 1]);
+            let mut prev_end = if b > a { self.item_start[a] } else { 0.0 };
+            for k in 0..(b - a) {
+                let gap = self.item_start[a + k] - prev_end;
+                let consumed = self.item_absorb[a + k];
+                if gap > 1e-12 || consumed > 1e-12 {
+                    windows[s].push(OverlapWindow {
+                        start: prev_end,
+                        dur: gap.max(0.0) + consumed,
+                        before_item: k,
+                        consumed,
                     });
+                    obs.inc("engine.windows");
                 }
-                if hidden > 0.0 {
-                    let hstart = comp_free[s].max(cstart);
-                    comp_free[s] = hstart + hidden;
-                    busy[s] += hidden;
+                if gap > 1e-12 {
+                    // Residual (post-absorption) stall: the absorbed
+                    // prefix is already traced as a RecomputeAbsorbed
+                    // span starting at item_start[k] (the item box opens
+                    // at rc_start).
                     obs.emit(Span {
                         stage: s,
-                        kind: SpanKind::RecomputeOverlapped,
-                        start: hstart,
-                        end: comp_free[s],
-                        micro,
-                        chunk,
-                        flow,
-                    });
-                }
-                achieved[s] += hidden;
-                cur = cend;
-                if first.is_none() {
-                    first = Some(cstart);
-                }
-                let spill = r - hidden;
-                if spill > 0.0 {
-                    // Window too narrow at the executed bandwidth: the
-                    // remainder runs serialized on the critical path.
-                    let sstart = cur.max(comp_free[s]);
-                    let send = sstart + spill;
-                    comp_free[s] = send;
-                    busy[s] += spill;
-                    cur = send;
-                    obs.inc("engine.windows.spilled");
-                    obs.emit(Span {
-                        stage: s,
-                        kind: SpanKind::CommSerialized,
-                        start: sstart,
-                        end: send,
-                        micro,
-                        chunk,
+                        kind: SpanKind::Stall,
+                        start: prev_end,
+                        end: self.item_start[a + k],
+                        micro: NO_INDEX,
+                        chunk: NO_INDEX,
                         flow: None,
                     });
                 }
+                prev_end = self.item_end[a + k];
             }
         }
+
+        PipelineTrace {
+            makespan,
+            busy: self.busy,
+            idle,
+            absorbed: self.absorbed,
+            exposed_paid: self.exposed_paid,
+            fwd_end: self.fwd_end.chunks(self.vm).map(|c| c.to_vec()).collect(),
+            bwd_end: self.bwd_end.chunks(self.vm).map(|c| c.to_vec()).collect(),
+            item_spans: (0..p)
+                .map(|s| {
+                    let (a, b) = (self.item_off[s], self.item_off[s + 1]);
+                    self.item_start[a..b]
+                        .iter()
+                        .cloned()
+                        .zip(self.item_end[a..b].iter().cloned())
+                        .collect()
+                })
+                .collect(),
+            item_absorb: (0..p)
+                .map(|s| self.item_absorb[self.item_off[s]..self.item_off[s + 1]].to_vec())
+                .collect(),
+            items: self.items,
+            windows,
+            comm_spans: self.comm_spans,
+            comm_busy: self.comm_busy,
+            planned_overlap: self.planned,
+            achieved_overlap: self.achieved,
+            num_micro: self.m,
+            num_chunks: self.v,
+            bwd_frac: self.bwd_frac,
+            split_backward: self.split_backward,
+        }
     }
-    (first, cur)
 }
 
 /// The event core: execute `sched` over per-stage segment inputs and a
-/// link model. Items issue in schedule order per stage as soon as their
-/// dependencies resolve (worklist over the dependency DAG — validated
-/// schedules are acyclic, so this terminates without fixpoint sweeps).
+/// link model with the dependency-driven ready-queue scheduler. Items
+/// issue in schedule order per stage as soon as their dependencies
+/// resolve; an unsatisfiable order panics with the blocked item and its
+/// unmet dependency.
 pub fn run_schedule_segments(
     segs: &[StageSegments],
     link: &LinkCfg,
@@ -625,6 +1142,14 @@ pub fn run_schedule_segments(
 /// `busy`/`comm_busy`, so per-track span sums reproduce the trace's
 /// accounting; overlapped recompute spans share a flow id with the
 /// collective that hid them.
+///
+/// The ready queue orders drains by `(round, stage)`: seeding every
+/// initially-runnable stage at round 0, and waking a blocked stage in
+/// the waker's round when it sits *after* the waker (the sweep would
+/// still reach it this pass) or the next round otherwise. This provably
+/// reproduces the retired sweep's total execution order — and therefore
+/// its results bit-exactly — while doing O(items · log p) scheduling
+/// work instead of re-probing every stage on every pass.
 pub fn run_schedule_segments_obs(
     segs: &[StageSegments],
     link: &LinkCfg,
@@ -635,345 +1160,126 @@ pub fn run_schedule_segments_obs(
 ) -> PipelineTrace {
     let mut obs = ObsCtx { sink, metrics, flow_next: 0 };
     let obs = &mut obs;
-    let p = segs.len();
-    assert_eq!(p, sched.num_stages(), "segments vs schedule stage count");
-    let m = sched.num_micro();
-    let v = sched.num_chunks();
-    assert!(p >= 1 && m >= 1 && v >= 1);
-    let vf = v as f64;
-    let split_backward = sched.backward_split().is_some();
-    let bwd_frac = sched.backward_split().unwrap_or(1.0);
-    let placement = sched.placement();
-    let items: Vec<Vec<WorkItem>> = (0..p).map(|s| sched.stage_items(s)).collect();
-    let idx = |c: usize, mb: usize| c * m + mb;
+    let mut st = EngineState::new(segs, link, sched, lynx_absorb);
 
-    let mut fwd_end = vec![vec![f64::INFINITY; v * m]; p];
-    let mut bwd_end = vec![vec![f64::INFINITY; v * m]; p];
-    let mut f_set = vec![vec![false; v * m]; p];
-    let mut b_set = vec![vec![false; v * m]; p];
-    let mut comp_free = vec![0.0f64; p];
-    let mut comm_free = vec![0.0f64; p];
-    let mut link_free: HashMap<(usize, usize), f64> = HashMap::new();
-    let mut comm_spans: Vec<Vec<CommSpan>> = vec![Vec::new(); p];
-    let mut comm_busy = vec![0.0f64; p];
-    let mut busy = vec![0.0f64; p];
-    let mut absorbed = vec![0.0f64; p];
-    let mut exposed_paid = vec![0.0f64; p];
-    let mut planned = vec![0.0f64; p];
-    let mut achieved = vec![0.0f64; p];
-    let mut item_start: Vec<Vec<f64>> = items.iter().map(|l| vec![0.0; l.len()]).collect();
-    let mut item_end: Vec<Vec<f64>> =
-        items.iter().map(|l| vec![f64::INFINITY; l.len()]).collect();
-    let mut item_absorb: Vec<Vec<f64>> = items.iter().map(|l| vec![0.0; l.len()]).collect();
-    let mut last_bwd_end = vec![0.0f64; p];
+    // One waiter slot per dependency key. A stage holds exactly one
+    // token at any time: a `(round, stage)` heap entry when its head is
+    // runnable, or a waiter registration when it is blocked. In a valid
+    // schedule at most one stage waits on any key (upstream maps are
+    // injective; same-stage keys are satisfied by the stage's own order).
+    let mut waiters = vec![usize::MAX; 2 * st.p * st.vm];
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::with_capacity(st.p);
+    for s in 0..st.p {
+        if st.next[s] < st.items[s].len() {
+            match st.head_blocker(s) {
+                None => heap.push(Reverse((0, s))),
+                Some(key) => waiters[st.dep_index(key)] = s,
+            }
+        }
+    }
+    while let Some(Reverse((round, s))) = heap.pop() {
+        while st.next[s] < st.items[s].len() {
+            match st.head_blocker(s) {
+                Some(key) => {
+                    waiters[st.dep_index(key)] = s;
+                    break;
+                }
+                None => {
+                    if let Some(done) = st.exec_head(s, obs) {
+                        let di = st.dep_index(done);
+                        let s2 = waiters[di];
+                        if s2 != usize::MAX {
+                            waiters[di] = usize::MAX;
+                            // A waiter after the current stage is reached
+                            // later in this same sweep pass; one before it
+                            // waits for the next pass.
+                            let r2 = if s2 > s { round } else { round + 1 };
+                            heap.push(Reverse((r2, s2)));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if st.executed < st.total {
+        let stuck: Vec<String> = (0..st.p)
+            .filter(|&s| st.next[s] < st.items[s].len())
+            .map(|s| {
+                let it = st.items[s][st.next[s]];
+                match st.head_blocker(s) {
+                    Some(key) => format!(
+                        "stage {s} blocked at {it:?} waiting on {}",
+                        st.describe_dep(key)
+                    ),
+                    None => format!(
+                        "stage {s} runnable at {it:?} but never woken \
+                         (two stages waited on one dependency — invalid order)"
+                    ),
+                }
+            })
+            .collect();
+        panic!(
+            "{} deadlocked in the event engine (p={}, m={}, v={}): {}",
+            st.label,
+            st.p,
+            st.m,
+            st.v,
+            stuck.join("; ")
+        );
+    }
+    st.finish(obs)
+}
 
-    let total: usize = items.iter().map(|l| l.len()).sum();
-    let mut next = vec![0usize; p];
-    let mut executed = 0usize;
-    while executed < total {
+/// The retired full-sweep executor, kept as the **equivalence oracle**
+/// for the ready-queue scheduler (and as the "old" side of
+/// `benches/bench_engine.rs`): round-robin over stages, draining each
+/// stage until its head blocks, re-probing every blocked stage on every
+/// pass. Shares [`EngineState`] with the ready-queue path, so any
+/// result divergence can only come from execution *order* — which the
+/// grid tests pin to be identical.
+pub fn run_schedule_segments_sweep(
+    segs: &[StageSegments],
+    link: &LinkCfg,
+    sched: &dyn PipelineSchedule,
+    lynx_absorb: bool,
+) -> PipelineTrace {
+    run_schedule_segments_sweep_obs(segs, link, sched, lynx_absorb, None, None)
+}
+
+/// [`run_schedule_segments_sweep`] with observation.
+pub fn run_schedule_segments_sweep_obs(
+    segs: &[StageSegments],
+    link: &LinkCfg,
+    sched: &dyn PipelineSchedule,
+    lynx_absorb: bool,
+    sink: Option<&mut dyn TraceSink>,
+    metrics: Option<&mut MetricsRegistry>,
+) -> PipelineTrace {
+    let mut obs = ObsCtx { sink, metrics, flow_next: 0 };
+    let obs = &mut obs;
+    let mut st = EngineState::new(segs, link, sched, lynx_absorb);
+    while st.executed < st.total {
         let mut progressed = false;
-        for s in 0..p {
-            while next[s] < items[s].len() {
-                let it = items[s][next[s]];
-                let slot = idx(it.chunk, it.micro);
-                let (start, end) = match it.kind {
-                    WorkKind::Fwd => {
-                        let ready = match fwd_upstream_of(placement, s, it.chunk, p) {
-                            None => 0.0,
-                            Some((s2, c2)) => {
-                                let sl = idx(c2, it.micro);
-                                if !f_set[s2][sl] {
-                                    break;
-                                }
-                                let src_end = fwd_end[s2][sl];
-                                if s2 == s {
-                                    // No hop between chunks hosted by the
-                                    // same stage (the V's turning point).
-                                    src_end
-                                } else {
-                                    p2p_arrive(
-                                        src_end,
-                                        s2,
-                                        s,
-                                        it.micro,
-                                        c2,
-                                        segs,
-                                        link,
-                                        &mut link_free,
-                                        &mut comm_spans,
-                                        &mut comm_busy,
-                                        obs,
-                                    )
-                                }
-                            }
-                        };
-                        let fallback = ready.max(comp_free[s]);
-                        let (first, end) = run_segs(
-                            s,
-                            &segs[s].fwd,
-                            &segs[s].fwd_rc,
-                            vf,
-                            ready,
-                            (SpanKind::Fwd, it.micro, it.chunk),
-                            &mut comp_free,
-                            &mut comm_free,
-                            &mut comm_spans,
-                            &mut comm_busy,
-                            &mut busy,
-                            &mut planned,
-                            &mut achieved,
-                            obs,
-                        );
-                        fwd_end[s][slot] = end;
-                        f_set[s][slot] = true;
-                        (first.unwrap_or(fallback), end)
-                    }
-                    WorkKind::Bwd => {
-                        let dy_ready = match bwd_upstream_of(placement, s, it.chunk, p, v) {
-                            // Loss gradient is available right after the
-                            // last virtual stage's forward.
-                            None => {
-                                if !f_set[s][slot] {
-                                    break;
-                                }
-                                fwd_end[s][slot]
-                            }
-                            Some((s2, c2)) => {
-                                let sl = idx(c2, it.micro);
-                                if !b_set[s2][sl] {
-                                    break;
-                                }
-                                let src_end = bwd_end[s2][sl];
-                                if s2 == s {
-                                    src_end
-                                } else {
-                                    p2p_arrive(
-                                        src_end,
-                                        s2,
-                                        s,
-                                        it.micro,
-                                        c2,
-                                        segs,
-                                        link,
-                                        &mut link_free,
-                                        &mut comm_spans,
-                                        &mut comm_busy,
-                                        obs,
-                                    )
-                                }
-                            }
-                        };
-                        let exposed_i = segs[s].exposed / vf;
-                        let comp0 = comp_free[s];
-                        // Absorption: recompute starts as soon as the
-                        // compute stream is free; the stall until dy
-                        // hides part of it (same arithmetic as the
-                        // fixpoint engine, for the equivalence contract).
-                        let (absorb, cur) = if lynx_absorb {
-                            let gap = (dy_ready - comp0).max(0.0);
-                            (gap.min(exposed_i), (comp0 + exposed_i).max(dy_ready))
-                        } else {
-                            (0.0, comp0.max(dy_ready) + exposed_i)
-                        };
-                        let rc_start = comp0.max(dy_ready - absorb);
-                        if exposed_i > 0.0 {
-                            comp_free[s] = cur;
-                            busy[s] += exposed_i;
-                            // The exposed recompute tiles [rc_start, cur]:
-                            // the stall-hidden prefix, then the paid rest.
-                            if absorb > 0.0 {
-                                obs.emit(Span {
-                                    stage: s,
-                                    kind: SpanKind::RecomputeAbsorbed,
-                                    start: rc_start,
-                                    end: rc_start + absorb,
-                                    micro: it.micro,
-                                    chunk: it.chunk,
-                                    flow: None,
-                                });
-                            }
-                            if exposed_i - absorb > 0.0 {
-                                obs.emit(Span {
-                                    stage: s,
-                                    kind: SpanKind::RecomputeExposed,
-                                    start: rc_start + absorb,
-                                    end: cur,
-                                    micro: it.micro,
-                                    chunk: it.chunk,
-                                    flow: None,
-                                });
-                            }
-                        }
-                        absorbed[s] += absorb;
-                        exposed_paid[s] += exposed_i - absorb;
-                        item_absorb[s][next[s]] = absorb;
-                        let (_, end) = run_segs(
-                            s,
-                            &segs[s].bwd,
-                            &segs[s].bwd_rc,
-                            vf,
-                            cur,
-                            (SpanKind::Bwd, it.micro, it.chunk),
-                            &mut comp_free,
-                            &mut comm_free,
-                            &mut comm_spans,
-                            &mut comm_busy,
-                            &mut busy,
-                            &mut planned,
-                            &mut achieved,
-                            obs,
-                        );
-                        bwd_end[s][slot] = end;
-                        b_set[s][slot] = true;
-                        if end > last_bwd_end[s] {
-                            last_bwd_end[s] = end;
-                        }
-                        (rc_start, end)
-                    }
-                    WorkKind::WGrad => {
-                        if !b_set[s][slot] {
-                            break;
-                        }
-                        let ready = bwd_end[s][slot];
-                        let fallback = ready.max(comp_free[s]);
-                        let (first, end) = run_segs(
-                            s,
-                            &segs[s].wgrad,
-                            &[],
-                            vf,
-                            ready,
-                            (SpanKind::WGrad, it.micro, it.chunk),
-                            &mut comp_free,
-                            &mut comm_free,
-                            &mut comm_spans,
-                            &mut comm_busy,
-                            &mut busy,
-                            &mut planned,
-                            &mut achieved,
-                            obs,
-                        );
-                        (first.unwrap_or(fallback), end)
-                    }
-                };
-                obs.inc(match it.kind {
-                    WorkKind::Fwd => "engine.items.fwd",
-                    WorkKind::Bwd => "engine.items.bwd",
-                    WorkKind::WGrad => "engine.items.wgrad",
-                });
-                item_start[s][next[s]] = start;
-                item_end[s][next[s]] = end;
-                next[s] += 1;
-                executed += 1;
+        for s in 0..st.p {
+            while st.next[s] < st.items[s].len() {
+                if st.head_blocker(s).is_some() {
+                    break;
+                }
+                st.exec_head(s, obs);
                 progressed = true;
             }
         }
-        if executed == total {
-            break;
-        }
         assert!(
             progressed,
-            "{} deadlocked in the event engine (p={p}, m={m}, v={v})",
-            sched.label()
+            "{} deadlocked in the event engine (p={}, m={}, v={})",
+            st.label,
+            st.p,
+            st.m,
+            st.v
         );
     }
-
-    // ---- end-of-iteration DP gradient all-reduce ----
-    let mut stage_end = vec![0.0f64; p];
-    for s in 0..p {
-        let last = item_end[s].iter().cloned().fold(0.0, f64::max);
-        let d = segs[s].dp_secs;
-        if link.dp_mode == DpMode::Off || d <= 0.0 {
-            stage_end[s] = last;
-            continue;
-        }
-        let start = match link.dp_mode {
-            DpMode::Serial => last.max(comm_free[s]),
-            _ => last_bwd_end[s].max(comm_free[s]),
-        };
-        let end = start + d;
-        comm_free[s] = end;
-        comm_spans[s].push(CommSpan { start, end, tag: CommTag::Dp });
-        comm_busy[s] += d;
-        obs.emit(Span {
-            stage: s,
-            kind: SpanKind::CommDp,
-            start,
-            end,
-            micro: NO_INDEX,
-            chunk: NO_INDEX,
-            flow: None,
-        });
-        obs.inc("engine.dp.syncs");
-        stage_end[s] = last.max(end);
-    }
-    let makespan = stage_end.iter().cloned().fold(0.0, f64::max);
-    if let Some(m) = obs.metrics.as_mut() {
-        m.set_gauge("engine.makespan_secs", makespan);
-    }
-
-    // ---- windows: full pre-absorption stalls + consumed ----
-    let mut windows: Vec<Vec<OverlapWindow>> = vec![Vec::new(); p];
-    let mut idle = vec![0.0f64; p];
-    for s in 0..p {
-        idle[s] = (makespan - busy[s]).max(0.0);
-        let mut prev_end = item_start[s].first().copied().unwrap_or(0.0);
-        for k in 0..items[s].len() {
-            let gap = item_start[s][k] - prev_end;
-            let consumed = item_absorb[s][k];
-            if gap > 1e-12 || consumed > 1e-12 {
-                windows[s].push(OverlapWindow {
-                    start: prev_end,
-                    dur: gap.max(0.0) + consumed,
-                    before_item: k,
-                    consumed,
-                });
-                obs.inc("engine.windows");
-            }
-            if gap > 1e-12 {
-                // Residual (post-absorption) stall: the absorbed prefix
-                // is already traced as a RecomputeAbsorbed span starting
-                // at item_start[k] (the item box opens at rc_start).
-                obs.emit(Span {
-                    stage: s,
-                    kind: SpanKind::Stall,
-                    start: prev_end,
-                    end: item_start[s][k],
-                    micro: NO_INDEX,
-                    chunk: NO_INDEX,
-                    flow: None,
-                });
-            }
-            prev_end = item_end[s][k];
-        }
-    }
-
-    PipelineTrace {
-        makespan,
-        busy,
-        idle,
-        absorbed,
-        exposed_paid,
-        fwd_end,
-        bwd_end,
-        items,
-        item_spans: item_start
-            .iter()
-            .zip(&item_end)
-            .map(|(ss, es)| ss.iter().cloned().zip(es.iter().cloned()).collect())
-            .collect(),
-        item_absorb,
-        windows,
-        comm_spans,
-        comm_busy,
-        planned_overlap: planned,
-        achieved_overlap: achieved,
-        num_micro: m,
-        num_chunks: v,
-        bwd_frac,
-        split_backward,
-    }
+    st.finish(obs)
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1339,7 +1645,7 @@ mod tests {
             let total: f64 = tr.comm_spans[s].iter().map(|c| c.end - c.start).sum();
             assert!((total - tr.comm_busy[s]).abs() < 1e-9, "stage {s}");
             let mut spans = tr.comm_spans[s].clone();
-            spans.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            spans.sort_by(|a, b| a.start.total_cmp(&b.start));
             for pair in spans.windows(2) {
                 assert!(pair[0].end <= pair[1].start + 1e-9, "overlapping comm spans");
             }
@@ -1499,6 +1805,91 @@ mod tests {
             assert_eq!(DpMode::parse(mode.label()), Some(mode));
         }
         assert_eq!(DpMode::parse("nope"), None);
+    }
+
+    #[test]
+    fn ready_queue_matches_the_sweep_oracle_spot_check() {
+        // The full grid contract lives in tests/engine_scale_prop.rs;
+        // keep a fast in-crate witness that the dependency-driven
+        // scheduler reproduces the sweep executor *bit-exactly* on a
+        // configuration that exercises every contended path: TP comm
+        // widths, window recompute, exposed recompute, p2p wire time
+        // sharing the sender's comm stream, and a serialized DP sync.
+        for kind in ScheduleKind::all() {
+            let sched = kind.build(4, 8);
+            let mut segs = seg_stages(4, 2, 0.05, 0.08, 1.0, 0.8, 0.3,
+                sched.backward_split(), 2.0);
+            for s in segs.iter_mut() {
+                s.p2p_latency = 0.02;
+                s.p2p_bytes = 4.0e9;
+                s.dp_secs = 0.6;
+            }
+            let link = LinkCfg {
+                p2p_bandwidth: 40e9,
+                serialize_p2p_with_tp: true,
+                dp_mode: DpMode::Serial,
+                ..LinkCfg::default()
+            };
+            for lynx in [false, true] {
+                let rq = run_schedule_segments(&segs, &link, sched.as_ref(), lynx);
+                let sw = run_schedule_segments_sweep(&segs, &link, sched.as_ref(), lynx);
+                assert_eq!(
+                    rq.makespan.to_bits(),
+                    sw.makespan.to_bits(),
+                    "{} lynx={lynx}: makespan {} vs {}",
+                    kind.label(),
+                    rq.makespan,
+                    sw.makespan
+                );
+                for s in 0..4 {
+                    assert_eq!(rq.busy[s].to_bits(), sw.busy[s].to_bits(), "{}", kind.label());
+                    assert_eq!(rq.comm_busy[s].to_bits(), sw.comm_busy[s].to_bits());
+                    assert_eq!(rq.absorbed[s].to_bits(), sw.absorbed[s].to_bits());
+                    assert_eq!(rq.comm_spans[s].len(), sw.comm_spans[s].len());
+                    assert_eq!(rq.item_spans[s], sw.item_spans[s], "{}", kind.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dp_hops_reproduce_the_closed_form_segment() {
+        // Per-hop DP ring execution: 2(d-1) back-to-back comm spans whose
+        // sum equals the single closed-form segment on a uniform fabric.
+        let sched = ZbH1::new(4, 8);
+        let mk = |hops: Vec<f64>, secs: f64| {
+            let mut segs = seg_stages(4, 2, 0.05, 0.08, 1.0, 0.0, 0.0,
+                sched.backward_split(), 1.0);
+            for s in segs.iter_mut() {
+                s.dp_secs = secs;
+                s.dp_hops = hops.clone();
+            }
+            segs
+        };
+        for mode in [DpMode::Serial, DpMode::Overlap] {
+            let link = LinkCfg { dp_mode: mode, ..LinkCfg::default() };
+            let closed = run_schedule_segments(&mk(Vec::new(), 1.5), &link, &sched, false);
+            let hopped = run_schedule_segments(&mk(vec![0.25; 6], 1.5), &link, &sched, false);
+            assert!(
+                (closed.makespan - hopped.makespan).abs() < 1e-9,
+                "{mode:?}: {} vs {}",
+                closed.makespan,
+                hopped.makespan
+            );
+            for s in 0..4 {
+                assert!((closed.comm_busy[s] - hopped.comm_busy[s]).abs() < 1e-9);
+                let dp_closed = closed.comm_spans[s]
+                    .iter()
+                    .filter(|c| c.tag == CommTag::Dp)
+                    .count();
+                let dp_hopped = hopped.comm_spans[s]
+                    .iter()
+                    .filter(|c| c.tag == CommTag::Dp)
+                    .count();
+                assert_eq!(dp_closed, 1);
+                assert_eq!(dp_hopped, 6);
+            }
+        }
     }
 
     #[test]

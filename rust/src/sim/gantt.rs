@@ -48,7 +48,6 @@ struct CommBox {
 pub fn render_gantt(timings: &[StageTiming], trace: &PipelineTrace, cols: usize) -> String {
     let p = timings.len();
     let mut items: Vec<Vec<ItemBox>> = Vec::with_capacity(p);
-    let mut comm: Vec<Vec<CommBox>> = Vec::with_capacity(p);
     for s in 0..p {
         items.push(
             trace.items[s]
@@ -67,21 +66,21 @@ pub fn render_gantt(timings: &[StageTiming], trace: &PipelineTrace, cols: usize)
                 })
                 .collect(),
         );
-        comm.push(
-            trace.comm_spans[s]
-                .iter()
-                .map(|cs| CommBox {
-                    start: cs.start,
-                    end: cs.end,
-                    ch: match cs.tag {
-                        CommTag::Tp => 'c',
-                        CommTag::P2p => 'p',
-                        CommTag::Dp => 'g',
-                    },
-                })
-                .collect(),
-        );
     }
+    // The comm rows render straight off the borrowed trace — tag→glyph
+    // is resolved cell by cell, no per-render copy of the span lists.
+    let mut comm_row = |s: usize, cell: &mut dyn FnMut(f64, f64, char)| -> bool {
+        let spans = &trace.comm_spans[s];
+        for cs in spans {
+            let ch = match cs.tag {
+                CommTag::Tp => 'c',
+                CommTag::P2p => 'p',
+                CommTag::Dp => 'g',
+            };
+            cell(cs.start, cs.end, ch);
+        }
+        !spans.is_empty()
+    };
     render_core(
         timings,
         trace.num_micro,
@@ -89,7 +88,7 @@ pub fn render_gantt(timings: &[StageTiming], trace: &PipelineTrace, cols: usize)
         trace.makespan,
         trace.bwd_frac,
         &items,
-        &comm,
+        &mut comm_row,
         cols,
     )
 }
@@ -160,7 +159,13 @@ pub fn render_gantt_recorded(
         }
         comm.push(row);
     }
-    render_core(timings, num_micro, num_chunks, makespan, bwd_frac, &items, &comm, cols)
+    let mut comm_row = |s: usize, cell: &mut dyn FnMut(f64, f64, char)| -> bool {
+        for cb in &comm[s] {
+            cell(cb.start, cb.end, cb.ch);
+        }
+        !comm[s].is_empty()
+    };
+    render_core(timings, num_micro, num_chunks, makespan, bwd_frac, &items, &mut comm_row, cols)
 }
 
 /// Which item phase a compute-side span unambiguously names, if any.
@@ -239,11 +244,16 @@ fn reconstruct_items(rec: &SpanRecorder, s: usize) -> Vec<ItemBox> {
     let mut out: Vec<ItemBox> = boxes.into_values().collect();
     // Paint in execution order (the engine records items in schedule
     // order; starts are strictly ordered per row).
-    out.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    out.sort_by(|a, b| a.start.total_cmp(&b.start));
     out
 }
 
-/// The shared painting core both renderers feed.
+/// The shared painting core both renderers feed. Comm rows are supplied
+/// by a visitor: `comm_row(s, cell)` paints stage `s`'s comm boxes
+/// through `cell(start, end, glyph)` and returns whether the stage has
+/// any comm activity at all — so the trace renderer can walk the
+/// borrowed span lists directly instead of materialising a boxed copy
+/// per render.
 #[allow(clippy::too_many_arguments)]
 fn render_core(
     timings: &[StageTiming],
@@ -252,7 +262,7 @@ fn render_core(
     makespan: f64,
     bwd_frac: f64,
     items: &[Vec<ItemBox>],
-    comm: &[Vec<CommBox>],
+    comm_row: &mut dyn FnMut(usize, &mut dyn FnMut(f64, f64, char)) -> bool,
     cols: usize,
 ) -> String {
     let p = timings.len();
@@ -263,6 +273,7 @@ fn render_core(
     out.push_str(&format!(
         "pipeline gantt — {p} stages × {num_micro} microbatches × {v} chunk(s), makespan {makespan:.3}s\n",
     ));
+    let mut crow = vec!['·'; cols];
     for s in 0..p {
         // One row per chunk hosted by the stage.
         let mut rows = vec![vec!['·'; cols]; v];
@@ -302,14 +313,14 @@ fn render_core(
             out.push_str("|\n");
         }
         // The comm stream, when the trace was produced by the segment
-        // engine (the scalar wrapper leaves it empty).
-        if !comm[s].is_empty() {
-            let mut crow = vec!['·'; cols];
-            for cs in &comm[s] {
-                paint(&mut crow, cs.start, cs.end, cs.ch, scale);
-            }
+        // engine (the scalar wrapper leaves it empty). One reused
+        // buffer; the row is discarded when the visitor reports no comm
+        // activity.
+        crow.fill('·');
+        let has_comm = comm_row(s, &mut |a, b, ch| paint(&mut crow, a, b, ch, scale));
+        if has_comm {
             out.push_str(&format!("stage{s}.c|"));
-            out.extend(crow);
+            out.extend(crow.iter().copied());
             out.push_str("|\n");
         }
     }

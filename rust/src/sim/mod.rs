@@ -9,11 +9,28 @@
 //! stage — compute and comm — plus a modeled inter-stage p2p link
 //! (latency + bytes/bandwidth, optionally contending with TP traffic)
 //! and an optional end-of-iteration DP gradient all-reduce
-//! ([`engine::DpMode`]). Links are per-edge: on a hierarchical fabric
-//! ([`crate::topo`]) every pipeline boundary carries its own bandwidth
+//! ([`engine::DpMode`]), executed hop-by-hop over the ring's edges when
+//! the runner prices a real DP group ([`engine::StageSegments::dp_hops`]).
+//! Links are per-edge: on a hierarchical fabric ([`crate::topo`]) every
+//! pipeline boundary carries its own bandwidth
 //! ([`engine::LinkCfg::edge_bandwidth`]) and intra-node hops contend
 //! with the sender's TP tier ([`engine::LinkCfg::edge_shared_tier`]);
 //! the uniform topology degenerates to the scalar wire bit-exactly.
+//!
+//! **Execution core** (rewritten for 10k-GPU shapes): items are driven
+//! by a **dependency-resolved ready queue** — each `(stage, chunk)`'s
+//! upstream is precomputed once from the placement maps, a blocked
+//! stage parks in a waiter slot keyed by the exact F/B completion it
+//! needs, and finishing an item wakes at most one stage. Scheduling
+//! cost is O(items · log stages) instead of the retired round-robin
+//! sweep's repeated full-stage probing, hot state is flat (directed-
+//! edge link frontiers in a `Vec`, per-item arenas), and an
+//! unsatisfiable schedule panics with the blocked item and its unmet
+//! dependency. The sweep survives as
+//! [`engine::run_schedule_segments_sweep`], the equivalence oracle: the
+//! ready queue reproduces its results **bit-exactly** (grid-tested in
+//! `tests/engine_scale_prop.rs`, benched old-vs-new in
+//! `BENCH_engine.json`).
 //!
 //! The point of the segment model is that Lynx's overlap is **executed,
 //! not assumed**: window-planned recomputation (`LayerPlan` phase
@@ -50,8 +67,8 @@ pub mod runner;
 
 pub use engine::{
     run_pipeline, run_schedule, run_schedule_obs, run_schedule_segments,
-    run_schedule_segments_obs, CommSpan, CommTag, DpMode, LinkCfg, OverlapWindow, PipelineTrace,
-    StageSegments, StageTiming,
+    run_schedule_segments_obs, run_schedule_segments_sweep, run_schedule_segments_sweep_obs,
+    CommSpan, CommTag, DpMode, LinkCfg, OverlapWindow, PipelineTrace, StageSegments, StageTiming,
 };
 pub use fixpoint::run_schedule_fixpoint;
 pub use gantt::{render_gantt, render_gantt_recorded};

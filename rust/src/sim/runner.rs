@@ -22,7 +22,7 @@ use crate::plan::{
 };
 use crate::plan::costeval::StageCost;
 use crate::sched::{PipelineSchedule, ScheduleKind, Segment};
-use crate::topo::dp_ring_allreduce_secs;
+use crate::topo::{dp_ring_allreduce_secs, dp_ring_hop_secs};
 use crate::util::json::Json;
 
 /// Partitioning mode for a simulation.
@@ -373,12 +373,19 @@ pub fn better_outcome<T>(a: (SimReport, T), b: (SimReport, T)) -> (SimReport, T)
 /// interleave from the execution cost model, window recompute from the
 /// plan's phase assignments, stage-role extras (embedding / LM head) as
 /// boundary compute slices, and the link/DP parameters.
+///
+/// `fwd_pat`/`bwd_pat` are the stage's per-layer segment patterns
+/// (`CostTables::{fwd,bwd}_layer_segments` of its executed op times) —
+/// expanded once per *distinct* timing vector by the caller and
+/// borrowed here, since on a hierarchical fabric only a handful of link
+/// classes exist across thousands of stages.
 #[allow(clippy::too_many_arguments)]
 fn stage_segments(
     tables: &CostTables,
     exec_cm: &CostModel,
-    exec_times: &[f64],
     exec_bwd: &[f64],
+    fwd_pat: &[Segment],
+    bwd_pat: &[Segment],
     ctx: &StageCtx,
     plan: &StagePlan,
     bwd_split: Option<f64>,
@@ -386,8 +393,6 @@ fn stage_segments(
     dp_mode: DpMode,
 ) -> StageSegments {
     let frac = bwd_split.unwrap_or(1.0);
-    let fwd_pat = tables.fwd_layer_segments(exec_times);
-    let bwd_pat = tables.bwd_layer_segments(exec_bwd, frac);
     let role = StageRole::of(ctx.stage, ctx.num_stages);
     let mut fwd: Vec<Segment> = Vec::new();
     let mut fwd_rc: Vec<f64> = Vec::new();
@@ -442,20 +447,26 @@ fn stage_segments(
     } else {
         Vec::new()
     };
-    let dp_secs = if dp_mode == DpMode::Off {
-        0.0
+    let (dp_secs, dp_hops) = if dp_mode == DpMode::Off {
+        (0.0, Vec::new())
     } else if tables.setup.dp <= 1 {
         // Legacy single-replica pricing (PR-4 back-compat): fp16
         // gradients are 1/8 of the 16-byte/param model states; a ring
         // all-reduce moves ~2× the buffer over the inter-node link.
-        exec_cm.comm.p2p_time(2.0 * ctx.static_mem / 8.0)
+        (exec_cm.comm.p2p_time(2.0 * ctx.static_mem / 8.0), Vec::new())
     } else {
         // Real DP group: ring all-reduce of the (unsharded) fp16
         // gradients over the group's bottleneck edge under the rank
-        // placement — 2(d-1) latency hops, 2(d-1)/d of the buffer.
+        // placement — 2(d-1) latency hops, 2(d-1)/d of the buffer. The
+        // closed form feeds the report; the hop decomposition (same
+        // total to fp round-off) is what the engine actually executes
+        // on the comm stream.
         let link = exec_cm.topo.dp_ring_for(ctx.stage);
         let grads = exec_cm.memory.grad_bytes(&tables.setup, ctx.n_layers, role.has_embedding());
-        dp_ring_allreduce_secs(&link, tables.setup.dp, grads)
+        (
+            dp_ring_allreduce_secs(&link, tables.setup.dp, grads),
+            dp_ring_hop_secs(&link, tables.setup.dp, grads),
+        )
     };
     // Boundary links: outgoing (downstream) and incoming (upstream) —
     // distinct tiers when the stage sits next to an inter-node cut.
@@ -476,6 +487,7 @@ fn stage_segments(
         p2p_latency_up,
         p2p_bytes: tables.boundary_bytes,
         dp_secs,
+        dp_hops,
     }
 }
 
@@ -574,7 +586,26 @@ fn simulate_one(
     let mut reports = Vec::with_capacity(setup.pp);
     let mut oom = false;
     let mut oom_h1 = false;
+    // Per-layer segment patterns depend only on the stage's executed op
+    // times, which take one value per link class (a handful on any
+    // fabric) — expand each distinct pattern once and borrow it per
+    // stage instead of rebuilding it pp times.
+    let pat_frac = sched.backward_split().unwrap_or(1.0);
+    let mut patterns: Vec<(&Vec<f64>, &Vec<f64>, Vec<Segment>, Vec<Segment>)> = Vec::new();
     for stage in 0..setup.pp {
+        let (t, b) = (&exec_times[stage], &exec_bwd[stage]);
+        let pi = patterns
+            .iter()
+            .position(|(pt, pb, _, _)| *pt == t && *pb == b)
+            .unwrap_or_else(|| {
+                patterns.push((
+                    t,
+                    b,
+                    tables.fwd_layer_segments(t),
+                    tables.bwd_layer_segments(b, pat_frac),
+                ));
+                patterns.len() - 1
+            });
         let ctx = tables.build_ctx_sched(stage, partition[stage], sched.as_ref());
         let cost = tables.stage_cost(&ctx, &plans[stage].plan);
         // B-freed certification of the same plan: both fractions at the
@@ -590,11 +621,13 @@ fn simulate_one(
         };
         oom |= plans[stage].oom || cost.oom;
         oom_h1 |= cost_h1.oom;
+        let (_, _, fwd_pat, bwd_pat) = &patterns[pi];
         segments.push(stage_segments(
             tables,
             &exec_cm,
-            &exec_times[stage],
             &exec_bwd[stage],
+            fwd_pat,
+            bwd_pat,
             &ctx,
             &plans[stage].plan,
             sched.backward_split(),

@@ -21,6 +21,24 @@ pub enum Fabric {
         intra: LinkSpec,
         inter: LinkSpec,
     },
+    /// Rail-optimized fabric (the 10k-GPU datacenter shape): each node
+    /// carries `nics_per_node` NICs, and GPU local slot `k` of every
+    /// node hangs off rail `k`'s switch plane. A cross-node pair on the
+    /// *same* rail (`a % gpn == b % gpn < nics`) gets the full `inter`
+    /// tier; a pair on different rails (or on a slot beyond the NIC
+    /// count) first hops the sender's NVLink to reach the right rail and
+    /// shares the node's NIC capacity — bandwidth scaled by
+    /// `nics_per_node / gpus_per_node`, latency `inter + intra`. Group
+    /// collectives that cross nodes stripe over all rails and price at
+    /// the full `inter` tier, like [`Fabric::Hierarchical`]; the sharing
+    /// penalty is a per-pair ([`ClusterTopology::pair_link`]) effect.
+    RailOptimized {
+        nodes: usize,
+        gpus_per_node: usize,
+        nics_per_node: usize,
+        intra: LinkSpec,
+        inter: LinkSpec,
+    },
 }
 
 /// A named cluster topology.
@@ -49,6 +67,41 @@ impl ClusterTopology {
             name: name.into(),
             fabric: Fabric::Hierarchical { nodes, gpus_per_node, intra, inter },
         }
+    }
+
+    /// Rail-optimized fabric from explicit parts.
+    pub fn rail_optimized(
+        name: impl Into<String>,
+        nodes: usize,
+        gpus_per_node: usize,
+        nics_per_node: usize,
+        intra: LinkSpec,
+        inter: LinkSpec,
+    ) -> ClusterTopology {
+        assert!(nodes >= 1 && gpus_per_node >= 1, "cluster must have devices");
+        assert!(
+            (1..=gpus_per_node).contains(&nics_per_node),
+            "nics_per_node must be in 1..=gpus_per_node"
+        );
+        ClusterTopology {
+            name: name.into(),
+            fabric: Fabric::RailOptimized { nodes, gpus_per_node, nics_per_node, intra, inter },
+        }
+    }
+
+    /// 10k-GPU rail-optimized preset: 1250 nodes × 8 A100-SXM, one NIC
+    /// per GPU (8 rails), NVLink inside the node, IB rails between —
+    /// the shape `bench_engine` and the "Simulating at scale" README
+    /// walkthrough drive.
+    pub fn rail_10k() -> ClusterTopology {
+        ClusterTopology::rail_optimized(
+            "rail-10k",
+            1250,
+            8,
+            8,
+            LinkSpec::nvlink(),
+            LinkSpec::infiniband(),
+        )
     }
 
     /// DGX-A100 preset: `nodes` × 8 A100-SXM over NVLink, ConnectX IB
@@ -80,7 +133,9 @@ impl ClusterTopology {
     ///
     /// * `nvlink=BW` / `pcie=BW` — intra-node tier kind + bus bandwidth;
     /// * `ib=BW` — inter-node bus bandwidth;
-    /// * `intra-lat=US` / `inter-lat=US` — per-collective latencies.
+    /// * `intra-lat=US` / `inter-lat=US` — per-collective latencies;
+    /// * `nics=N` — NIC count per node: switches the fabric to
+    ///   [`Fabric::RailOptimized`] with `N` rails (`1 <= N <= gpus`).
     ///
     /// Defaults: NVLink intra, IB inter, at the preset calibrations.
     pub fn parse(spec: &str) -> Result<ClusterTopology, String> {
@@ -107,6 +162,7 @@ impl ClusterTopology {
         // agree and `pcie=..` alone keeps PCIe's calibrated latency.
         let mut intra_lat: Option<f64> = None;
         let mut inter_lat: Option<f64> = None;
+        let mut nics: Option<usize> = None;
         if let Some(opts) = opts {
             for kv in opts.split(',').filter(|s| !s.is_empty()) {
                 let (k, v) = kv
@@ -130,6 +186,14 @@ impl ClusterTopology {
                     "ib" | "inter" => inter.bus_bw = num * 1e9,
                     "intra-lat" => intra_lat = Some(num * 1e-6),
                     "inter-lat" => inter_lat = Some(num * 1e-6),
+                    "nics" => {
+                        if num.fract() != 0.0 || !(1.0..=gpus as f64).contains(&num) {
+                            return Err(format!(
+                                "topology {spec:?}: nics must be an integer in 1..={gpus}"
+                            ));
+                        }
+                        nics = Some(num as usize);
+                    }
                     other => {
                         return Err(format!("topology {spec:?}: unknown key {other:?}"))
                     }
@@ -142,14 +206,20 @@ impl ClusterTopology {
         if let Some(lat) = inter_lat {
             inter.latency = lat;
         }
-        Ok(ClusterTopology::hierarchical(spec.to_string(), nodes, gpus, intra, inter))
+        Ok(match nics {
+            Some(n) => {
+                ClusterTopology::rail_optimized(spec.to_string(), nodes, gpus, n, intra, inter)
+            }
+            None => ClusterTopology::hierarchical(spec.to_string(), nodes, gpus, intra, inter),
+        })
     }
 
     /// Total device count (`None` for the unbounded uniform fabric).
     pub fn total_gpus(&self) -> Option<usize> {
         match &self.fabric {
             Fabric::Uniform { .. } => None,
-            Fabric::Hierarchical { nodes, gpus_per_node, .. } => Some(nodes * gpus_per_node),
+            Fabric::Hierarchical { nodes, gpus_per_node, .. }
+            | Fabric::RailOptimized { nodes, gpus_per_node, .. } => Some(nodes * gpus_per_node),
         }
     }
 
@@ -157,15 +227,19 @@ impl ClusterTopology {
     pub fn gpus_per_node(&self) -> Option<usize> {
         match &self.fabric {
             Fabric::Uniform { .. } => None,
-            Fabric::Hierarchical { gpus_per_node, .. } => Some(*gpus_per_node),
+            Fabric::Hierarchical { gpus_per_node, .. }
+            | Fabric::RailOptimized { gpus_per_node, .. } => Some(*gpus_per_node),
         }
     }
 
     /// The link a group prices over, given whether it crosses nodes.
+    /// Crossing groups on a rail-optimized fabric stripe over every
+    /// rail, so they see the full inter tier.
     pub fn group_link(&self, crosses_nodes: bool) -> &LinkSpec {
         match &self.fabric {
             Fabric::Uniform { tp_link, .. } => tp_link,
-            Fabric::Hierarchical { intra, inter, .. } => {
+            Fabric::Hierarchical { intra, inter, .. }
+            | Fabric::RailOptimized { intra, inter, .. } => {
                 if crosses_nodes {
                     inter
                 } else {
@@ -179,11 +253,50 @@ impl ClusterTopology {
     pub fn boundary_link(&self, crosses_nodes: bool) -> &LinkSpec {
         match &self.fabric {
             Fabric::Uniform { pp_link, .. } => pp_link,
-            Fabric::Hierarchical { intra, inter, .. } => {
+            Fabric::Hierarchical { intra, inter, .. }
+            | Fabric::RailOptimized { intra, inter, .. } => {
                 if crosses_nodes {
                     inter
                 } else {
                     intra
+                }
+            }
+        }
+    }
+
+    /// The link a specific *device pair* (global ranks) prices over —
+    /// the per-pair matrix of a rail-optimized fabric, degenerate on the
+    /// other shapes:
+    ///
+    /// * same node → intra tier;
+    /// * cross-node, same local slot, slot < NIC count → the pair rides
+    ///   its own rail at the full inter tier;
+    /// * cross-node otherwise → the traffic first hops NVLink to reach a
+    ///   rail and shares the node's aggregate NIC capacity: bandwidth
+    ///   `inter × nics/gpus_per_node`, latency `inter + intra`.
+    pub fn pair_link(&self, a: usize, b: usize) -> LinkSpec {
+        match &self.fabric {
+            Fabric::Uniform { pp_link, .. } => pp_link.clone(),
+            Fabric::Hierarchical { gpus_per_node, intra, inter, .. } => {
+                if a / gpus_per_node == b / gpus_per_node {
+                    intra.clone()
+                } else {
+                    inter.clone()
+                }
+            }
+            Fabric::RailOptimized { gpus_per_node, nics_per_node, intra, inter, .. } => {
+                let (gpn, nics) = (*gpus_per_node, *nics_per_node);
+                if a / gpn == b / gpn {
+                    return intra.clone();
+                }
+                let (sa, sb) = (a % gpn, b % gpn);
+                if sa == sb && sa < nics {
+                    return inter.clone();
+                }
+                LinkSpec {
+                    kind: inter.kind,
+                    bus_bw: inter.bus_bw * nics as f64 / gpn as f64,
+                    latency: inter.latency + intra.latency,
                 }
             }
         }
@@ -206,6 +319,15 @@ impl ClusterTopology {
                     inter: scale(inter),
                 }
             }
+            Fabric::RailOptimized { nodes, gpus_per_node, nics_per_node, intra, inter } => {
+                Fabric::RailOptimized {
+                    nodes: *nodes,
+                    gpus_per_node: *gpus_per_node,
+                    nics_per_node: *nics_per_node,
+                    intra: scale(intra),
+                    inter: scale(inter),
+                }
+            }
         };
         ClusterTopology { name: self.name.clone(), fabric }
     }
@@ -215,8 +337,11 @@ impl ClusterTopology {
     pub fn with_inter_bw(&self, bus_bw: f64) -> ClusterTopology {
         assert!(bus_bw.is_finite() && bus_bw > 0.0);
         let mut c = self.clone();
-        if let Fabric::Hierarchical { inter, .. } = &mut c.fabric {
-            inter.bus_bw = bus_bw;
+        match &mut c.fabric {
+            Fabric::Hierarchical { inter, .. } | Fabric::RailOptimized { inter, .. } => {
+                inter.bus_bw = bus_bw;
+            }
+            Fabric::Uniform { .. } => {}
         }
         c
     }
@@ -267,6 +392,49 @@ mod tests {
         assert!(ClusterTopology::parse("2x8:warp=9").is_err());
         assert!(ClusterTopology::parse("2x8:ib=-1").is_err());
         assert!(ClusterTopology::parse("2x8:ib").is_err());
+        assert!(ClusterTopology::parse("2x8:nics=9").is_err(), "more NICs than GPUs");
+        assert!(ClusterTopology::parse("2x8:nics=1.5").is_err());
+    }
+
+    #[test]
+    fn rail_preset_shape_and_pair_matrix() {
+        let r = ClusterTopology::rail_10k();
+        assert_eq!(r.total_gpus(), Some(10_000));
+        assert_eq!(r.gpus_per_node(), Some(8));
+        // Same node: NVLink.
+        assert_eq!(r.pair_link(0, 5).kind, LinkKind::NvLink);
+        // Cross-node, same slot (rail-aligned): full IB.
+        let aligned = r.pair_link(3, 8 + 3);
+        assert_eq!(aligned, LinkSpec::infiniband());
+        // Cross-node, different slots: shared NIC capacity + extra hop.
+        // With 8 NICs per 8 GPUs the scaling factor is 1, but the
+        // latency penalty remains.
+        let skew = r.pair_link(3, 8 + 4);
+        assert!((skew.bus_bw - LinkSpec::infiniband().bus_bw).abs() < 1.0);
+        assert!(skew.latency > LinkSpec::infiniband().latency);
+        // Crossing groups stripe over all rails: full inter tier.
+        assert_eq!(r.group_link(true), &LinkSpec::infiniband());
+    }
+
+    #[test]
+    fn nic_undersubscription_shares_bandwidth() {
+        // 8 GPUs but only 2 NICs: a non-aligned cross-node pair gets a
+        // quarter of the IB tier; slots >= 2 are never rail-aligned.
+        let c = ClusterTopology::parse("4x8:nics=2").unwrap();
+        assert!(matches!(c.fabric, Fabric::RailOptimized { nics_per_node: 2, .. }));
+        let shared = c.pair_link(0, 8 + 1);
+        assert!((shared.bus_bw - LinkSpec::infiniband().bus_bw * 0.25).abs() < 1.0);
+        let slot_beyond = c.pair_link(5, 8 + 5);
+        assert!((slot_beyond.bus_bw - LinkSpec::infiniband().bus_bw * 0.25).abs() < 1.0);
+        let aligned = c.pair_link(1, 8 + 1);
+        assert_eq!(aligned, LinkSpec::infiniband());
+        // Bandwidth knobs reach the rail fabric too.
+        let scaled = c.with_bw_scale(2.0);
+        assert!(
+            (scaled.pair_link(1, 9).bus_bw - 2.0 * LinkSpec::infiniband().bus_bw).abs() < 1.0
+        );
+        let swapped = c.with_inter_bw(50e9);
+        assert!((swapped.pair_link(1, 9).bus_bw - 50e9).abs() < 1.0);
     }
 
     #[test]

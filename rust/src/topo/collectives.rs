@@ -43,6 +43,23 @@ pub fn dp_ring_allreduce_secs(link: &LinkSpec, world: usize, grad_bytes: f64) ->
         + (2.0 * (world - 1) as f64 / world as f64) * grad_bytes / link.bus_bw
 }
 
+/// Per-hop decomposition of [`dp_ring_allreduce_secs`]: the `2(world-1)`
+/// ring steps as individual comm segments, each carrying one per-step
+/// latency plus one `1/world` shard over the bottleneck edge. The sum
+/// equals the closed form to fp round-off (the event engine executes
+/// these back-to-back on the comm stream via
+/// [`crate::sim::StageSegments::dp_hops`]). A synchronous ring moves in
+/// lock-step, so every step is priced on the group's bottleneck link —
+/// the same modeling choice as the closed form. Empty for a single
+/// replica.
+pub fn dp_ring_hop_secs(link: &LinkSpec, world: usize, grad_bytes: f64) -> Vec<f64> {
+    if world <= 1 || grad_bytes <= 0.0 {
+        return Vec::new();
+    }
+    let step = link.latency + (grad_bytes / world as f64) / link.bus_bw;
+    vec![step; 2 * (world - 1)]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,6 +93,26 @@ mod tests {
         assert!(d8 < 2.0 * 1e9 / 10e9 + 14.0 * 5e-6 + 1e-9);
         // d=2 moves exactly one buffer's worth of bytes over the wire.
         assert!((d2 - (2.0 * 5e-6 + 1e9 / 10e9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hop_decomposition_sums_to_the_closed_form() {
+        for world in [1usize, 2, 4, 8, 56] {
+            for bytes in [0.0, 1e6, 1e9, 40e9] {
+                let l = link(10e9, 5e-6);
+                let hops = dp_ring_hop_secs(&l, world, bytes);
+                let closed = dp_ring_allreduce_secs(&l, world, bytes);
+                if world <= 1 || bytes <= 0.0 {
+                    assert!(hops.is_empty());
+                    assert_eq!(closed, 0.0);
+                    continue;
+                }
+                assert_eq!(hops.len(), 2 * (world - 1));
+                let sum: f64 = hops.iter().sum();
+                let rel = (sum - closed).abs() / closed.max(1e-30);
+                assert!(rel < 1e-9, "world={world} bytes={bytes}: {sum} vs {closed}");
+            }
+        }
     }
 
     #[test]

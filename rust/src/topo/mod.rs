@@ -47,5 +47,5 @@ pub mod collectives;
 pub mod placement;
 
 pub use cluster::{ClusterTopology, Fabric};
-pub use collectives::{dp_ring_allreduce_secs, group_allreduce_secs, p2p_secs};
+pub use collectives::{dp_ring_allreduce_secs, dp_ring_hop_secs, group_allreduce_secs, p2p_secs};
 pub use placement::{Device, Placement};

@@ -1,0 +1,337 @@
+//! Scale-out contract of the ready-queue event engine (PR 7).
+//!
+//! 1. **Bit-exact equivalence**: the dependency-driven ready-queue
+//!    scheduler reproduces the retired full-sweep executor *bitwise* —
+//!    makespan, busy/comm-busy, absorption, item spans, overlap windows
+//!    and comm-stream spans — across every schedule × shape × absorption
+//!    mode × link model, including split-backward (ZB), the ZB-V
+//!    V-placement, ragged interleaved shapes, per-boundary bandwidth
+//!    overrides, shared-tier contention and hop-by-hop DP rings. The two
+//!    executors share `EngineState`, so this pins the only thing that
+//!    can differ: total execution order.
+//! 2. **Observation determinism**: two identical runs emit identical
+//!    span streams and flow ids, and the ready queue emits the *same*
+//!    stream as the sweep.
+//! 3. **Deadlock diagnostic**: an unsatisfiable order panics with a
+//!    message naming the blocked item and its unmet dependency instead
+//!    of spinning or silently truncating the trace.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use lynx::obs::SpanRecorder;
+use lynx::sched::{
+    PipelineSchedule, Placement, ScheduleKind, Segment, WorkItem,
+};
+use lynx::sim::{
+    run_schedule_segments_obs, run_schedule_segments_sweep_obs, DpMode, LinkCfg, PipelineTrace,
+    StageSegments,
+};
+use lynx::util::prng::Pcg32;
+
+fn kinds() -> Vec<ScheduleKind> {
+    let mut ks = ScheduleKind::all();
+    // Ragged interleaving (chunks not dividing anything nicely).
+    ks.push(ScheduleKind::Interleaved { chunks: 3 });
+    ks
+}
+
+/// Random per-stage segments with layered comp/comm interleave, window
+/// recompute aligned to the comm segments, p2p wire traffic and (on
+/// `trial == 2`) a DP sync — hop-by-hop on odd stages, closed-form on
+/// even ones, so both code paths run in one trace.
+fn rand_segs(
+    p: usize,
+    bwd_split: Option<f64>,
+    rng: &mut Pcg32,
+    trial: usize,
+) -> Vec<StageSegments> {
+    let frac = bwd_split.unwrap_or(1.0);
+    (0..p)
+        .map(|s| {
+            let layers = 1 + (rng.f64() * 2.0) as usize; // 1 or 2
+            let mut fwd = Vec::new();
+            let mut bwd = Vec::new();
+            for _ in 0..layers {
+                fwd.push(Segment::comp(0.2 + rng.f64()));
+                fwd.push(Segment::comm(0.05 + rng.f64() * 0.2));
+                bwd.push(Segment::comp((0.2 + rng.f64()) * frac));
+                bwd.push(Segment::comm(0.05 + rng.f64() * 0.2));
+            }
+            fwd.push(Segment::comp(0.2 + rng.f64()));
+            bwd.push(Segment::comp((0.2 + rng.f64()) * frac));
+            let wgrad = match bwd_split {
+                None => Vec::new(),
+                Some(f) => vec![Segment::comp((0.4 + rng.f64()) * (1.0 - f))],
+            };
+            let (dp_secs, dp_hops) = if trial == 2 {
+                let total = 0.5 + rng.f64();
+                if s % 2 == 1 {
+                    let hops = 4;
+                    (total, vec![total / hops as f64; hops])
+                } else {
+                    (total, Vec::new())
+                }
+            } else {
+                (0.0, Vec::new())
+            };
+            StageSegments {
+                fwd,
+                bwd,
+                wgrad,
+                exposed: rng.f64() * 0.5,
+                fwd_rc: (0..layers).map(|_| rng.f64() * 0.1).collect(),
+                bwd_rc: (0..layers).map(|_| rng.f64() * 0.1).collect(),
+                p2p_latency: rng.f64() * 0.05,
+                p2p_latency_up: if rng.f64() < 0.5 { Some(rng.f64() * 0.05) } else { None },
+                p2p_bytes: if trial == 0 { 0.0 } else { rng.f64() * 4e9 },
+                dp_secs,
+                dp_hops,
+            }
+        })
+        .collect()
+}
+
+fn rand_link(p: usize, rng: &mut Pcg32, trial: usize) -> LinkCfg {
+    LinkCfg {
+        p2p_bandwidth: if trial == 0 { f64::INFINITY } else { 20e9 + rng.f64() * 80e9 },
+        edge_bandwidth: if trial >= 1 && p > 1 {
+            (0..p - 1).map(|_| 10e9 + rng.f64() * 90e9).collect()
+        } else {
+            Vec::new()
+        },
+        serialize_p2p_with_tp: trial == 1,
+        edge_shared_tier: if trial == 2 && p > 1 {
+            (0..p - 1).map(|_| rng.f64() < 0.5).collect()
+        } else {
+            Vec::new()
+        },
+        dp_mode: match trial {
+            2 => {
+                if rng.f64() < 0.5 {
+                    DpMode::Serial
+                } else {
+                    DpMode::Overlap
+                }
+            }
+            _ => DpMode::Off,
+        },
+    }
+}
+
+fn assert_bit_exact(a: &PipelineTrace, b: &PipelineTrace, tag: &str) {
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{tag}: makespan");
+    let p = a.busy.len();
+    assert_eq!(p, b.busy.len(), "{tag}: stage count");
+    for s in 0..p {
+        assert_eq!(a.busy[s].to_bits(), b.busy[s].to_bits(), "{tag}: busy[{s}]");
+        assert_eq!(a.idle[s].to_bits(), b.idle[s].to_bits(), "{tag}: idle[{s}]");
+        assert_eq!(a.absorbed[s].to_bits(), b.absorbed[s].to_bits(), "{tag}: absorbed[{s}]");
+        assert_eq!(
+            a.exposed_paid[s].to_bits(),
+            b.exposed_paid[s].to_bits(),
+            "{tag}: paid[{s}]"
+        );
+        assert_eq!(a.comm_busy[s].to_bits(), b.comm_busy[s].to_bits(), "{tag}: comm_busy[{s}]");
+        assert_eq!(
+            a.planned_overlap[s].to_bits(),
+            b.planned_overlap[s].to_bits(),
+            "{tag}: planned[{s}]"
+        );
+        assert_eq!(
+            a.achieved_overlap[s].to_bits(),
+            b.achieved_overlap[s].to_bits(),
+            "{tag}: achieved[{s}]"
+        );
+        assert_eq!(a.items[s], b.items[s], "{tag}: work order[{s}]");
+        assert_eq!(a.item_spans[s].len(), b.item_spans[s].len(), "{tag}: span count[{s}]");
+        for (k, (x, y)) in a.item_spans[s].iter().zip(&b.item_spans[s]).enumerate() {
+            assert!(
+                x.0.to_bits() == y.0.to_bits() && x.1.to_bits() == y.1.to_bits(),
+                "{tag}: span[{s}][{k}] {x:?} vs {y:?}"
+            );
+        }
+        for (k, (x, y)) in a.item_absorb[s].iter().zip(&b.item_absorb[s]).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: absorb[{s}][{k}]");
+        }
+        for (fa, fb) in [(&a.fwd_end[s], &b.fwd_end[s]), (&a.bwd_end[s], &b.bwd_end[s])] {
+            assert_eq!(fa.len(), fb.len(), "{tag}: end table len[{s}]");
+            for (x, y) in fa.iter().zip(fb.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tag}: end table[{s}]");
+            }
+        }
+        assert_eq!(a.windows[s].len(), b.windows[s].len(), "{tag}: window count[{s}]");
+        for (x, y) in a.windows[s].iter().zip(&b.windows[s]) {
+            assert!(
+                x.start.to_bits() == y.start.to_bits()
+                    && x.dur.to_bits() == y.dur.to_bits()
+                    && x.consumed.to_bits() == y.consumed.to_bits()
+                    && x.before_item == y.before_item,
+                "{tag}: window mismatch on stage {s}"
+            );
+        }
+        assert_eq!(a.comm_spans[s].len(), b.comm_spans[s].len(), "{tag}: comm span count[{s}]");
+        for (x, y) in a.comm_spans[s].iter().zip(&b.comm_spans[s]) {
+            assert!(
+                x.start.to_bits() == y.start.to_bits()
+                    && x.end.to_bits() == y.end.to_bits()
+                    && x.tag == y.tag,
+                "{tag}: comm span mismatch on stage {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn grid_ready_queue_is_bit_exact_with_the_sweep_oracle() {
+    let mut rng = Pcg32::new(0x5ca1_e0ff, 11);
+    for &p in &[1usize, 2, 3, 4, 6, 8] {
+        for &m in &[1usize, 2, 3, 5, 8] {
+            for kind in kinds() {
+                let sched = kind.build(p, m);
+                for trial in 0..3 {
+                    let segs = rand_segs(p, sched.backward_split(), &mut rng, trial);
+                    let link = rand_link(p, &mut rng, trial);
+                    for lynx in [false, true] {
+                        let new = run_schedule_segments_obs(
+                            &segs,
+                            &link,
+                            sched.as_ref(),
+                            lynx,
+                            None,
+                            None,
+                        );
+                        let old = run_schedule_segments_sweep_obs(
+                            &segs,
+                            &link,
+                            sched.as_ref(),
+                            lynx,
+                            None,
+                            None,
+                        );
+                        let tag = format!(
+                            "{} p={p} m={m} trial={trial} lynx={lynx}",
+                            kind.label()
+                        );
+                        assert_bit_exact(&new, &old, &tag);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn spans_and_flows_are_deterministic_and_executor_independent() {
+    let mut rng = Pcg32::new(0xdead_cafe, 3);
+    for kind in [ScheduleKind::OneFOneB, ScheduleKind::ZbV, ScheduleKind::ZbH1] {
+        let (p, m) = (4usize, 6usize);
+        let sched = kind.build(p, m);
+        let segs = rand_segs(p, sched.backward_split(), &mut rng, 2);
+        let link = rand_link(p, &mut rng, 2);
+        let run = |sweep: bool| {
+            let mut rec = SpanRecorder::new();
+            if sweep {
+                run_schedule_segments_sweep_obs(
+                    &segs,
+                    &link,
+                    sched.as_ref(),
+                    true,
+                    Some(&mut rec),
+                    None,
+                );
+            } else {
+                run_schedule_segments_obs(&segs, &link, sched.as_ref(), true, Some(&mut rec), None);
+            }
+            rec
+        };
+        let a = run(false);
+        let b = run(false);
+        let c = run(true);
+        let tag = kind.label();
+        assert!(!a.spans().is_empty(), "{tag}: no spans emitted");
+        assert_eq!(a.spans(), b.spans(), "{tag}: span stream not deterministic");
+        // Same total execution order ⇒ same stream — flow ids included —
+        // from either executor.
+        assert_eq!(a.spans(), c.spans(), "{tag}: ready queue diverged from sweep");
+        assert!(
+            a.spans().iter().any(|s| s.flow.is_some()),
+            "{tag}: no overlap flows paired"
+        );
+    }
+}
+
+/// A deliberately unexecutable order: the only stage wants its backward
+/// before the forward that produces the loss.
+struct BackwardFirst;
+
+impl PipelineSchedule for BackwardFirst {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::OneFOneB
+    }
+
+    fn num_stages(&self) -> usize {
+        1
+    }
+
+    fn num_micro(&self) -> usize {
+        1
+    }
+
+    fn stage_items(&self, _stage: usize) -> Vec<WorkItem> {
+        vec![WorkItem::bwd(0, 0), WorkItem::fwd(0, 0)]
+    }
+
+    fn placement(&self) -> Placement {
+        Placement::Interleaved
+    }
+}
+
+#[test]
+#[should_panic(expected = "deadlocked in the event engine")]
+fn an_unsatisfiable_order_panics_instead_of_spinning() {
+    let segs = vec![StageSegments {
+        fwd: vec![Segment::comp(1.0)],
+        bwd: vec![Segment::comp(1.0)],
+        ..StageSegments::default()
+    }];
+    run_schedule_segments_obs(&segs, &LinkCfg::default(), &BackwardFirst, true, None, None);
+}
+
+#[test]
+fn the_deadlock_diagnostic_names_the_blocked_item_and_dependency() {
+    let segs = vec![StageSegments {
+        fwd: vec![Segment::comp(1.0)],
+        bwd: vec![Segment::comp(1.0)],
+        ..StageSegments::default()
+    }];
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        run_schedule_segments_obs(&segs, &LinkCfg::default(), &BackwardFirst, true, None, None);
+    }))
+    .expect_err("backward-before-forward must deadlock");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("deadlocked in the event engine"), "got: {msg}");
+    assert!(msg.contains("stage 0 blocked at"), "got: {msg}");
+    assert!(
+        msg.contains("waiting on F(stage 0, micro 0, chunk 0)"),
+        "got: {msg}"
+    );
+    // The sweep oracle rejects the same order (legacy assert).
+    assert!(
+        catch_unwind(AssertUnwindSafe(|| {
+            run_schedule_segments_sweep_obs(
+                &segs,
+                &LinkCfg::default(),
+                &BackwardFirst,
+                true,
+                None,
+                None,
+            );
+        }))
+        .is_err(),
+        "sweep accepted an unexecutable order"
+    );
+}

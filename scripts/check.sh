@@ -103,6 +103,31 @@ print(f'OK: {len(sweep)} sweep rows, aware <= blind everywhere, windows '
       f"heterogeneous, uniform equivalence err {equiv[0]['max_rel_err']:.2e}")
 EOF
 
+echo "== bench: engine (quick ready-queue throughput) =="
+LYNX_BENCH_QUICK=1 LYNX_BENCH_OUT="$PWD" cargo bench --bench bench_engine
+test -f BENCH_engine.json
+echo "BENCH_engine.json written"
+
+echo "== gate: ready-queue speedup + engine throughput =="
+python3 - <<'EOF'
+import json
+rows = [r for r in json.load(open('BENCH_engine.json')) if isinstance(r, dict)]
+assert rows, 'BENCH_engine.json has no rows'
+pinned = [r for r in rows if r.get('pinned')]
+assert pinned, 'pinned old-vs-new speedup row missing'
+pin = pinned[0]
+assert pin['p'] >= 512, f'pinned cell below the required scale: {pin}'
+assert pin['speedup'] >= 5.0, \
+    f"ready queue only {pin['speedup']:.2f}x over the sweep at P={pin['p']}"
+slow = [r for r in rows if not r.get('events_per_sec', 0) > 0]
+assert not slow, f'rows without positive events/sec: {slow}'
+rail = [r for r in rows if r.get('kind') == 'rail10k']
+assert len(rail) >= 2, 'rail-10k end-to-end rows missing (want 1f1b + zbv)'
+assert all(r['gpus'] == 10000 and r['p'] == 1250 for r in rail), rail
+print(f"OK: {len(rows)} rows, pinned speedup {pin['speedup']:.1f}x at "
+      f"P={pin['p']}, {len(rail)} rail-10k rows")
+EOF
+
 echo "== gate: bench snapshots (drift vs bench/snapshots/) =="
 python3 scripts/snapshot_bench.py compare
 
@@ -116,6 +141,13 @@ for sched in 1f1b zbv; do
 done
 ./target/release/lynx partition --search dp \
     --metrics-out "$OBS_TMP/partition.json" >/dev/null
+
+echo "== gate: 10k-GPU rail fabric end-to-end (20B, tp8 x pp22 x dp56) =="
+for sched in 1f1b zbv; do
+    ./target/release/lynx simulate --model 20B --tp 8 --pp 22 --dp 56 \
+        --num-micro 64 --topo rail-10k --schedule "$sched" \
+        --metrics-out "$OBS_TMP/rail_$sched.json" >/dev/null
+done
 python3 scripts/validate_obs.py "$OBS_TMP"/*.json
 
 echo "OK"

@@ -15,11 +15,12 @@ fails on drift; an artifact without a reference is reported and skipped
 eyeball ``git diff bench/snapshots/``, and commit when the change is
 intentional.
 
-Wall-clock timings (keys ending in ``wall_secs``) are excluded from the
-diff — everything else the benches emit is a deterministic function of
-the simulator, so any change is a behaviour change, not noise. Floats
-compare with relative tolerance 1e-9 to absorb libm differences across
-platforms.
+Wall-clock timings (keys ending in ``wall_secs``), derived throughput
+rates (keys ending in ``per_sec``) and the engine bench's ``speedup``
+ratio are excluded from the diff — everything else the benches emit is a
+deterministic function of the simulator, so any change is a behaviour
+change, not noise. Floats compare with relative tolerance 1e-9 to absorb
+libm differences across platforms.
 """
 
 import glob
@@ -32,7 +33,8 @@ REL_TOL = 1e-9
 
 
 def is_wall_key(key):
-    return key.endswith("wall_secs")
+    return (key.endswith("wall_secs") or key.endswith("per_sec")
+            or key == "speedup")
 
 
 def diff(ref, cur, path, out):
