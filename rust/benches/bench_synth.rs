@@ -1,0 +1,84 @@
+//! Bench: budget-driven schedule synthesis — the memory/bubble frontier
+//! the lattice synthesizer reaches at fractions of 1F1B's exact peak.
+//!
+//! For each pipeline shape and budget the synthesizer searches the
+//! V-family lattice knobs (intake cap κ, forced-W backlog ω, release
+//! signal) for the minimum-unit-makespan schedule whose exact replayed
+//! peak fits the budget; every row quotes the synthesized (peak,
+//! makespan) next to the 1F1B reference so the artifact is a frontier,
+//! not a point. `scripts/check.sh` gates on the half-budget cells:
+//! at 50% of 1F1B's memory the synthesized bubble must not exceed
+//! 1F1B's. Run `cargo bench --bench bench_synth` (set
+//! LYNX_BENCH_QUICK=1 for the two gate cells only). Emits
+//! `BENCH_synth.json` into the working directory (override with
+//! LYNX_BENCH_OUT).
+
+use lynx::sched::{onefoneb_reference, PipelineSchedule, Synthesized};
+use lynx::util::bench::Bench;
+use lynx::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("synth: budget-driven schedule synthesis frontier");
+
+    // The m = 2p diagonal is where half-budget synthesis has room to
+    // work (deep pipelines, enough microbatches to re-time); (4, 8) is
+    // kept as an honest miss — the search reports infeasible there.
+    let shapes: &[(usize, usize)] =
+        if quick { &[(6, 12), (8, 16)] } else { &[(6, 12), (8, 16), (12, 24), (16, 32), (4, 8)] };
+    let budgets: &[u32] = &[50, 33];
+
+    let mut rows = Vec::new();
+    let mut out = Json::Arr(vec![]);
+    for &(p, m) in shapes {
+        let (ref_ms, ref_peak) = onefoneb_reference(p, m);
+        for &pct in budgets {
+            let t0 = Instant::now();
+            let sched = Synthesized::new(p, m, pct);
+            let wall = t0.elapsed().as_secs_f64();
+            let pt = sched.point();
+            b.record(&format!("synth p={p} m={m} budget={pct}%"), wall, "s search");
+            rows.push(vec![
+                format!("{p}"),
+                format!("{m}"),
+                format!("{pct}%"),
+                sched.synthesis_outcome().label().to_string(),
+                format!("{:.2}", pt.peak_microbatches),
+                format!("{:.2}", sched.budget_microbatches()),
+                format!("{:.1}", pt.makespan_units),
+                format!("{ref_ms:.1}"),
+                format!("κ={} ω={} {}", pt.kappa, pt.omega, pt.release),
+            ]);
+            let mut jo = Json::obj();
+            jo.set("num_stages", Json::from(p))
+                .set("num_micro", Json::from(m))
+                .set("budget_pct", Json::from(pct as usize))
+                .set("budget_microbatches", Json::from(sched.budget_microbatches()))
+                .set("outcome", Json::from(sched.synthesis_outcome().label()))
+                .set("fits", Json::from(pt.fits))
+                .set("peak_microbatches", Json::from(pt.peak_microbatches))
+                .set("makespan_units", Json::from(pt.makespan_units))
+                .set("ref_1f1b_peak_microbatches", Json::from(ref_peak))
+                .set("ref_1f1b_makespan_units", Json::from(ref_ms))
+                .set("kappa", Json::from(pt.kappa))
+                .set("omega", Json::from(pt.omega))
+                .set("release", Json::from(pt.release))
+                .set("search_secs", Json::from(wall));
+            out.push(jo);
+        }
+    }
+    b.table(
+        "synthesized frontier vs 1F1B (unit cost model)",
+        &[
+            "p", "m", "budget", "outcome", "peak(mb)", "budget(mb)", "makespan", "1f1b ms",
+            "knobs",
+        ],
+        &rows,
+    );
+
+    let dir = std::env::var("LYNX_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("BENCH_synth.json");
+    std::fs::write(&path, out.pretty()).expect("write BENCH_synth.json");
+    println!("\nwrote {}", path.display());
+}

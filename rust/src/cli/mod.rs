@@ -58,11 +58,17 @@ fn common_specs() -> Vec<OptSpec> {
         opt("search", "partition search algorithm: greedy|dp", true, Some("greedy")),
         opt(
             "schedule",
-            "pipeline schedule: gpipe|1f1b|interleaved|zbh1|zbh2|zbv",
+            "pipeline schedule: gpipe|1f1b|interleaved|zbh1|zbh2|zbv|synth[:PCT]",
             true,
             Some("1f1b"),
         ),
         opt("chunks", "virtual chunks per stage (interleaved)", true, Some("2")),
+        opt(
+            "synth-budget",
+            "per-stage activation-memory budget for --schedule synth, as percent of 1F1B's exact peak",
+            true,
+            Some("50"),
+        ),
         opt("bw", "executed link-bandwidth multiplier (plans stay at 1.0)", true, Some("1.0")),
         opt("replan-at-bw", "re-plan at the executed --bw instead of keeping the stale plan-bandwidth windows", false, None),
         opt("dp-overlap", "DP gradient sync: off|serial|overlap", true, Some("off")),
@@ -103,38 +109,40 @@ fn common_specs() -> Vec<OptSpec> {
 fn parse_schedule(a: &Args) -> Result<ScheduleKind> {
     let name = a.get("schedule").unwrap();
     let chunks: usize = a.req("chunks")?;
-    ScheduleKind::parse(name, chunks).ok_or_else(|| anyhow!("unknown schedule {name:?}"))
+    let kind =
+        ScheduleKind::parse(name, chunks).ok_or_else(|| anyhow!("unknown schedule {name:?}"))?;
+    // A bare `synth` takes its budget from --synth-budget; `synth:PCT`
+    // keeps the inline percent.
+    if name == "synth" {
+        let pct: u32 = a.req("synth-budget")?;
+        if pct == 0 {
+            return Err(anyhow!("--synth-budget must be at least 1 percent"));
+        }
+        return Ok(ScheduleKind::Synth { budget_pct: pct });
+    }
+    Ok(kind)
 }
 
 /// Warn (once per process, via the shared [`warn_once`] registry) when
-/// the requested schedule shape cannot use its tight order and silently
-/// runs a looser fallback instead: ragged interleaved shapes (Megatron
-/// itself rejects them outright) drop to the greedy generator, and a
-/// wedged ZB-V shape would drop to the safe phase order (GPipe-like
-/// memory, large bubble). Returns whether a warning fired (tests assert
-/// the once-only behavior through this).
+/// the requested schedule degraded to a safe fallback order at this
+/// shape ([`SynthesisOutcome::Fallback`]): a wedged wave solver's phase
+/// order, or an infeasible `--synth-budget`. Closed and solved outcomes
+/// — including ragged interleaved shapes, which the pad-and-delete rule
+/// now solves tightly — are silent. Returns whether a warning fired
+/// (tests assert the once-only behavior through this).
 fn warn_schedule_fallback(kind: ScheduleKind, setup: &TrainSetup) -> bool {
-    use crate::sched::{Interleaved1F1B, ZbV};
-    match kind {
-        ScheduleKind::Interleaved { chunks }
-            if Interleaved1F1B::shape_uses_fallback(setup.pp, setup.num_micro, chunks) =>
-        {
-            warn_once(
-                "sched-interleaved-ragged",
-                &format!(
-                    "interleaved schedule with num_micro={} not divisible by pp={} \
-                     cannot use the tight Megatron order; running the feasible-but-looser \
-                     greedy order (expect a slightly larger bubble)",
-                    setup.num_micro, setup.pp
-                ),
-            )
-        }
-        ScheduleKind::ZbV if ZbV::shape_uses_fallback(setup.pp, setup.num_micro) => warn_once(
-            "sched-zbv-wedged",
+    use crate::sched::SynthesisOutcome;
+    let sched = kind.build(setup.pp, setup.num_micro);
+    match sched.synthesis_outcome() {
+        SynthesisOutcome::Fallback(reason) => warn_once(
+            &format!("sched-fallback-{}", kind.label()),
             &format!(
-                "zbv wave generator wedged for pp={} num_micro={}; running \
-                 the safe phase order instead (GPipe-level memory, larger bubble)",
-                setup.pp, setup.num_micro
+                "{} schedule degraded at pp={} num_micro={} ({reason}); the run \
+                 executes, but with a very different memory/bubble profile than \
+                 the schedule name suggests",
+                kind.label(),
+                setup.pp,
+                setup.num_micro
             ),
         ),
         _ => false,
@@ -576,7 +584,7 @@ mod tests {
 
     #[test]
     fn simulate_accepts_every_schedule() {
-        for sched in ["gpipe", "1f1b", "interleaved", "zbh1", "zbh2", "zbv"] {
+        for sched in ["gpipe", "1f1b", "interleaved", "zbh1", "zbh2", "zbv", "synth", "synth:40"] {
             let code = run(&sv(&[
                 "simulate",
                 "--model",
@@ -634,15 +642,21 @@ mod tests {
     fn schedule_fallback_warns_exactly_once_per_invocation() {
         use crate::util::warn::reset_warning;
         let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 6, 4, 8);
+        // A 1%-of-1F1B budget is infeasible: synthesis degrades to its
+        // best-effort order and reports a fallback.
+        let starved = ScheduleKind::Synth { budget_pct: 1 };
+        reset_warning("sched-fallback-synth");
+        assert!(warn_schedule_fallback(starved, &setup), "first call must warn");
+        assert!(!warn_schedule_fallback(starved, &setup), "second call must be silent");
+        assert!(!warn_schedule_fallback(starved, &setup));
+        // Ragged interleaved shapes used to take the greedy fallback and
+        // warn; pad-and-delete now solves them tightly — silent.
         let ragged = ScheduleKind::Interleaved { chunks: 2 };
-        reset_warning("sched-interleaved-ragged");
-        assert!(warn_schedule_fallback(ragged, &setup), "first call must warn");
-        assert!(!warn_schedule_fallback(ragged, &setup), "second call must be silent");
+        reset_warning("sched-fallback-interleaved");
         assert!(!warn_schedule_fallback(ragged, &setup));
-        // Divisible shapes never warn.
-        let even = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
-        reset_warning("sched-interleaved-ragged");
-        assert!(!warn_schedule_fallback(ragged, &even));
+        // ZB-V's wave solver covers the grid: solved, silent.
+        reset_warning("sched-fallback-zbv");
+        assert!(!warn_schedule_fallback(ScheduleKind::ZbV, &setup));
     }
 
     #[test]

@@ -608,7 +608,7 @@ pub fn schedule_runs(quick: bool) -> Vec<ScheduleRun> {
         if quick { vec![("7B", 16)] } else { vec![("7B", 16), ("13B", 8)] };
     let mut runs = Vec::new();
     for (model, mb) in models {
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             let cm = CostModel::new(Topology::nvlink(4, 4));
             let s = setup(model, 4, 4, mb);
             let r = simulate(
@@ -767,7 +767,7 @@ pub fn overlap_runs(quick: bool) -> Vec<OverlapRun> {
     let kinds: Vec<ScheduleKind> = if quick {
         vec![ScheduleKind::OneFOneB, ScheduleKind::ZbH1, ScheduleKind::ZbV]
     } else {
-        ScheduleKind::all()
+        ScheduleKind::all().to_vec()
     };
     let policies: Vec<PolicyKind> =
         if quick { vec![PolicyKind::LynxHeu] } else { vec![PolicyKind::LynxHeu, PolicyKind::LynxOpt] };
@@ -992,7 +992,7 @@ pub fn topo_uniform_equivalence_max_err() -> f64 {
             d
         }
     };
-    for kind in ScheduleKind::all() {
+    for &kind in ScheduleKind::all() {
         let mk = |topo: &Topology| {
             let s = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, NUM_MICRO);
             simulate(

@@ -101,9 +101,15 @@ pub fn run_report(r: &SimReport, trace: &PipelineTrace, metrics: &MetricsRegistr
         .set("peak_h1_bytes", Json::from(r.peak_mem_h1()))
         .set("h1_overcommitted", Json::from(r.h1_overcommitted()));
     let mut out = Json::obj();
+    let mut synthesis = Json::obj();
+    synthesis.set("outcome", Json::from(r.schedule_outcome.label()));
+    if let Some(reason) = r.schedule_outcome.fallback_reason() {
+        synthesis.set("fallback_reason", Json::from(reason));
+    }
     out.set("schema", Json::from(REPORT_SCHEMA))
         .set("config", Json::from(r.config_label.clone()))
         .set("schedule", Json::from(r.schedule.label()))
+        .set("schedule_synthesis", synthesis)
         .set("bw_scale", Json::from(r.bw_scale))
         .set("makespan_secs", Json::from(trace.makespan))
         .set("iteration_secs", Json::from(r.iteration_secs))

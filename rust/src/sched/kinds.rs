@@ -1,0 +1,919 @@
+//! The named schedule kinds as [`BlockLattice`] instances.
+//!
+//! Each struct here is a thin wrapper: its constructor picks the block
+//! rule (closed where the shape is in the regular regime, wave-solved
+//! otherwise — see [`super::lattice`] / [`super::solver`]) and
+//! everything else delegates to the lattice. The old hand-written
+//! generators live on behind the `legacy-oracle` feature purely as test
+//! oracles; `tests/lattice_prop.rs` asserts item-for-item equality
+//! across the kind × shape grid.
+
+use super::lattice::{zb_shape_is_closed, BlockLattice};
+use super::solver::{
+    fallback_phase_order, v_fallback_phase_order, v_wave_items, wave_items, zbv_spec, WaveSpec,
+};
+use super::{
+    Placement, PipelineSchedule, ScheduleKind, SynthesisOutcome, WorkItem, B_FRACTION,
+};
+
+/// GPipe: every stage runs all forwards, then all backwards (LIFO).
+/// Memory is maximal — all `num_micro` activations are live at the
+/// phase boundary — and the bubble sits between the phases, which makes
+/// it the largest single overlap window any schedule offers the Lynx
+/// planner.
+#[derive(Debug, Clone)]
+pub struct GPipe {
+    lat: BlockLattice,
+}
+
+impl GPipe {
+    pub fn new(num_stages: usize, num_micro: usize) -> GPipe {
+        assert!(num_stages >= 1 && num_micro >= 1);
+        GPipe { lat: BlockLattice::gpipe(num_stages, num_micro) }
+    }
+}
+
+impl PipelineSchedule for GPipe {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::GPipe
+    }
+
+    fn num_stages(&self) -> usize {
+        self.lat.num_stages()
+    }
+
+    fn num_micro(&self) -> usize {
+        self.lat.num_micro()
+    }
+
+    fn stage_items(&self, stage: usize) -> Vec<WorkItem> {
+        self.lat.stage_items(stage)
+    }
+
+    /// All microbatches are live at the forward/backward boundary.
+    fn peak_inflight(&self, _stage: usize) -> usize {
+        self.lat.num_micro()
+    }
+
+    /// Combined backward: the exact peak equals the unit count (validated
+    /// against the exact replay by the property grid).
+    fn peak_inflight_exact(&self, _stage: usize, _w_hold: f64) -> f64 {
+        self.lat.num_micro() as f64
+    }
+}
+
+/// The 1F1B work order for `stage` of `num_stages` with `num_micro`
+/// microbatches (paper §2.1, Fig. 1(b)): warmup of
+/// `min(num_stages - stage - 1, num_micro)` forwards, steady 1F1B
+/// pairs, backward cool-down. Exposed as a free function because the
+/// training harness addresses single stages without a schedule object.
+pub fn onefoneb_items(stage: usize, num_stages: usize, num_micro: usize) -> Vec<WorkItem> {
+    assert!(stage < num_stages);
+    BlockLattice::onefoneb(num_stages, num_micro).stage_items(stage)
+}
+
+/// Index of the cool-down boundary: items at or after this index are
+/// cool-down backwards (used by Opt-3 reporting).
+pub fn cooldown_start(stage: usize, num_stages: usize, num_micro: usize) -> usize {
+    let warmup = (num_stages - stage - 1).min(num_micro);
+    warmup + 2 * (num_micro - warmup)
+}
+
+/// Classic 1F1B.
+#[derive(Debug, Clone)]
+pub struct OneFOneB {
+    lat: BlockLattice,
+}
+
+impl OneFOneB {
+    pub fn new(num_stages: usize, num_micro: usize) -> OneFOneB {
+        assert!(num_stages >= 1 && num_micro >= 1);
+        OneFOneB { lat: BlockLattice::onefoneb(num_stages, num_micro) }
+    }
+}
+
+impl PipelineSchedule for OneFOneB {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::OneFOneB
+    }
+
+    fn num_stages(&self) -> usize {
+        self.lat.num_stages()
+    }
+
+    fn num_micro(&self) -> usize {
+        self.lat.num_micro()
+    }
+
+    fn stage_items(&self, stage: usize) -> Vec<WorkItem> {
+        self.lat.stage_items(stage)
+    }
+
+    /// Closed form: stage `s` of `p` holds up to `p - s` in-flight
+    /// forwards before its first backward (Observation 2).
+    fn peak_inflight(&self, stage: usize) -> usize {
+        (self.lat.num_stages() - stage).min(self.lat.num_micro())
+    }
+
+    /// Combined backward frees the whole unit at B, so the exact peak is
+    /// the closed form regardless of `w_hold` (validated against the
+    /// exact replay by the property grid).
+    fn peak_inflight_exact(&self, stage: usize, _w_hold: f64) -> f64 {
+        self.peak_inflight(stage) as f64
+    }
+}
+
+/// Interleaved 1F1B with virtual pipeline chunks (Megatron-LM style).
+///
+/// The model's layers are split into `num_stages × chunks` virtual
+/// chunks; stage `s` hosts the chunks at virtual stages `c·p + s`.
+/// Microbatches stream through chunk 0 of every stage, then chunk 1,
+/// and so on, in rounds of `r = min(p, m)` microbatches.
+///
+/// Divisible shapes (`m % p == 0`, and every `m ≤ p`) use the closed
+/// lattice rule. Ragged shapes — which Megatron rejects and the old
+/// implementation handed to a looser greedy generator — are solved by
+/// **pad-and-delete**: build the closed lattice for the padded shape
+/// `m′ = ⌈m/p⌉·p`, then drop the phantom microbatches. Deleting every
+/// item of a microbatch from a valid schedule preserves executability
+/// (each stage's order stays a subsequence and all remaining
+/// dependencies are intact), and the grid test shows the result is
+/// never slower and never holds more memory than the old greedy order —
+/// so ragged shapes are now tight and report [`SynthesisOutcome::Solved`],
+/// not a fallback.
+#[derive(Debug, Clone)]
+pub struct Interleaved1F1B {
+    chunks: usize,
+    lat: BlockLattice,
+}
+
+impl Interleaved1F1B {
+    pub fn new(num_stages: usize, num_micro: usize, chunks: usize) -> Interleaved1F1B {
+        assert!(num_stages >= 1 && num_micro >= 1 && chunks >= 1);
+        let (p, m, v) = (num_stages, num_micro, chunks);
+        let lat = if v == 1 {
+            // One chunk per stage is exactly classic 1F1B.
+            BlockLattice::onefoneb(p, m)
+        } else {
+            let closed = BlockLattice::interleaved_closed(p, m, v);
+            let items: Vec<Vec<WorkItem>> = (0..p).map(|s| closed.stage_items(s)).collect();
+            if super::validate_items(&items, p, m, v, false, Placement::Interleaved).is_ok() {
+                closed
+            } else {
+                Self::ragged_lattice(p, m, v)
+            }
+        };
+        Interleaved1F1B { chunks, lat }
+    }
+
+    /// Pad-and-delete for shapes the closed form cannot execute, with a
+    /// defensive wave-solver path behind it (not reached on the tested
+    /// grid — pad-and-delete is valid by the subsequence argument — but
+    /// a future rule tweak must degrade loudly, not ship a deadlock).
+    fn ragged_lattice(p: usize, m: usize, v: usize) -> BlockLattice {
+        let m_pad = m.div_ceil(p) * p;
+        let padded = BlockLattice::interleaved_closed(p, m_pad, v);
+        let items: Vec<Vec<WorkItem>> = (0..p)
+            .map(|s| {
+                padded.stage_items(s).into_iter().filter(|it| it.micro < m).collect::<Vec<_>>()
+            })
+            .collect();
+        if super::validate_items(&items, p, m, v, false, Placement::Interleaved).is_ok() {
+            return BlockLattice::lift_items(
+                &items,
+                p,
+                m,
+                v,
+                None,
+                Placement::Interleaved,
+                SynthesisOutcome::Solved,
+            );
+        }
+        let r = p.min(m);
+        let (fseq, bseq) = launch_orders(m, v, r);
+        let total = m * v;
+        let warmup: Vec<usize> =
+            (0..p).map(|s| ((v - 1) * r + 2 * (p - s - 1)).min(total)).collect();
+        let cap: Vec<usize> = warmup.iter().map(|&w| (w + 1).min(total)).collect();
+        let spec = WaveSpec {
+            num_stages: p,
+            num_micro: m,
+            num_chunks: v,
+            fseq,
+            bseq,
+            warmup,
+            cap,
+            split_bwd: false,
+            w_backlog: None,
+        };
+        let (items, outcome) = match wave_items(&spec) {
+            Some(items) => (items, SynthesisOutcome::Fallback("interleaved-greedy")),
+            None => {
+                (fallback_phase_order(&spec), SynthesisOutcome::Fallback("interleaved-phase"))
+            }
+        };
+        if let Err(e) = super::validate_items(&items, p, m, v, false, Placement::Interleaved) {
+            panic!("interleaved fallback order invalid (p={p} m={m} v={v}): {e}");
+        }
+        BlockLattice::lift_items(&items, p, m, v, None, Placement::Interleaved, outcome)
+    }
+}
+
+/// Global forward / backward launch orders shared by every stage:
+/// rounds of `r` microbatches, forward chunks ascending, backward chunks
+/// descending (the [`super::MicroStream::Rounds`] stream, materialised).
+fn launch_orders(m: usize, v: usize, r: usize) -> (Vec<(usize, usize)>, Vec<(usize, usize)>) {
+    use super::MicroStream;
+    (
+        MicroStream::Rounds { m, v, r, desc: false }.coords(),
+        MicroStream::Rounds { m, v, r, desc: true }.coords(),
+    )
+}
+
+impl PipelineSchedule for Interleaved1F1B {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::Interleaved { chunks: self.chunks }
+    }
+
+    fn num_stages(&self) -> usize {
+        self.lat.num_stages()
+    }
+
+    fn num_micro(&self) -> usize {
+        self.lat.num_micro()
+    }
+
+    fn num_chunks(&self) -> usize {
+        self.chunks
+    }
+
+    fn stage_items(&self, stage: usize) -> Vec<WorkItem> {
+        self.lat.stage_items(stage)
+    }
+
+    fn synthesis_outcome(&self) -> SynthesisOutcome {
+        self.lat.outcome()
+    }
+}
+
+/// ZB-H1: a zero-bubble-style 1F1B variant with split backward.
+///
+/// Following "Zero Bubble Pipeline Parallelism" (H1 configuration), the
+/// backward pass is split into B (input-grad — the only part on the
+/// cross-stage dataflow critical path) and W (weight-grad — deferrable)
+/// items. Stages run the 1F1B F/B skeleton but park W items and replay
+/// them inside what would otherwise be warm-up/cool-down stalls.
+/// Deferring W is not free: the tensors the weight-grad needs stay
+/// resident from B until W, so H1's true peak memory sits *above* the
+/// B-freed unit count — the exact replay prices that residual, and the
+/// `p`-deep backlog bound keeps the deferral from growing with `m`.
+///
+/// In the regular regime (`m ≥ 2p−1`) the whole schedule is the closed
+/// block template of [`super::ClosedRule::ZbH`]; below it the wave
+/// solver produces the order once and it is lifted into the lattice.
+#[derive(Debug, Clone)]
+pub struct ZbH1 {
+    lat: BlockLattice,
+}
+
+impl ZbH1 {
+    pub fn new(num_stages: usize, num_micro: usize) -> ZbH1 {
+        assert!(num_stages >= 1 && num_micro >= 1);
+        ZbH1 { lat: zbh_lattice(num_stages, num_micro, false) }
+    }
+}
+
+impl PipelineSchedule for ZbH1 {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::ZbH1
+    }
+
+    fn num_stages(&self) -> usize {
+        self.lat.num_stages()
+    }
+
+    fn num_micro(&self) -> usize {
+        self.lat.num_micro()
+    }
+
+    fn stage_items(&self, stage: usize) -> Vec<WorkItem> {
+        self.lat.stage_items(stage)
+    }
+
+    fn backward_split(&self) -> Option<f64> {
+        Some(B_FRACTION)
+    }
+
+    fn synthesis_outcome(&self) -> SynthesisOutcome {
+        self.lat.outcome()
+    }
+}
+
+/// ZB-H2: the higher-memory zero-bubble configuration.
+///
+/// Where ZB-H1 keeps the 1F1B in-flight profile and only re-times the
+/// split backward, H2 *fills the warm-up bubble with extra in-flight
+/// forwards*: stage `s` warms up `min(2(p−s)−1, m)` microbatches — so
+/// backwards never wait on the fill phase and the leftover stalls are
+/// packed with deferred W items. The price is memory: the first stage
+/// holds up to `2p−1` microbatches' activations instead of `p`, which
+/// is exactly what the exact W-residual accounting prices
+/// (`CostTables::n_batch_frac_for`). Closed for `m ≥ 3p−1`.
+#[derive(Debug, Clone)]
+pub struct ZbH2 {
+    lat: BlockLattice,
+}
+
+impl ZbH2 {
+    pub fn new(num_stages: usize, num_micro: usize) -> ZbH2 {
+        assert!(num_stages >= 1 && num_micro >= 1);
+        ZbH2 { lat: zbh_lattice(num_stages, num_micro, true) }
+    }
+}
+
+impl PipelineSchedule for ZbH2 {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::ZbH2
+    }
+
+    fn num_stages(&self) -> usize {
+        self.lat.num_stages()
+    }
+
+    fn num_micro(&self) -> usize {
+        self.lat.num_micro()
+    }
+
+    fn stage_items(&self, stage: usize) -> Vec<WorkItem> {
+        self.lat.stage_items(stage)
+    }
+
+    fn backward_split(&self) -> Option<f64> {
+        Some(B_FRACTION)
+    }
+
+    fn synthesis_outcome(&self) -> SynthesisOutcome {
+        self.lat.outcome()
+    }
+}
+
+/// Closed template in the regular regime; wave-solved (and lifted)
+/// below it. The wave spec is the published warmup/cap discipline:
+/// H1 `(p−s−1, p−s)`, H2 `(2(p−s)−1, 2(p−s)−1)`, both with a `p`-deep
+/// W backlog. The grid test asserts the closed template is
+/// item-for-item what the wave produces wherever both apply.
+fn zbh_lattice(p: usize, m: usize, h2: bool) -> BlockLattice {
+    if zb_shape_is_closed(p, m, h2) {
+        return BlockLattice::zb(p, m, h2, B_FRACTION);
+    }
+    let warmup: Vec<usize> = (0..p)
+        .map(|s| if h2 { (2 * (p - s) - 1).min(m) } else { (p - s - 1).min(m) })
+        .collect();
+    let cap: Vec<usize> = (0..p)
+        .map(|s| if h2 { (2 * (p - s) - 1).min(m).max(1) } else { (p - s).min(m) })
+        .collect();
+    let spec = WaveSpec {
+        num_stages: p,
+        num_micro: m,
+        num_chunks: 1,
+        fseq: (0..m).map(|q| (0, q)).collect(),
+        bseq: (0..m).map(|q| (0, q)).collect(),
+        warmup,
+        cap,
+        split_bwd: true,
+        w_backlog: Some(p),
+    };
+    let (items, outcome) = match wave_items(&spec) {
+        Some(items) => (items, SynthesisOutcome::Solved),
+        None => (fallback_phase_order(&spec), SynthesisOutcome::Fallback("zb-phase-order")),
+    };
+    BlockLattice::lift_items(
+        &items,
+        p,
+        m,
+        1,
+        Some(B_FRACTION),
+        Placement::Interleaved,
+        outcome,
+    )
+}
+
+/// ZB-V: wave-style split-backward schedule over a V-shaped placement.
+///
+/// From "Pipeline Parallelism with Controllable Memory" (Qi et al.,
+/// arXiv:2405.15362): each stage hosts **two** half-size model chunks —
+/// chunk 0 descends the stages, chunk 1 ascends back — so stage 0 holds
+/// both the first and the last virtual stage and computes the loss
+/// locally ([`Placement::VShape`]). Backwards chase the forward wave
+/// almost immediately, which equalises peak activation memory across
+/// stages (≈ `2p` chunk units = `p` microbatch equivalents everywhere,
+/// where 1F1B holds `p` only on stage 0) and shrinks the bubble below
+/// ZB-H1's.
+///
+/// The two chunk streams interleave differently on every stage, so
+/// there is no closed block rule: the per-chunk-queue wave solver
+/// ([`super::solver::v_wave_items`]) runs once and the order is lifted
+/// into the lattice — [`SynthesisOutcome::Solved`] on the whole tested
+/// grid; a wedge (never observed) degrades to the safe phase order and
+/// reports a fallback.
+#[derive(Debug, Clone)]
+pub struct ZbV {
+    lat: BlockLattice,
+}
+
+impl ZbV {
+    pub fn new(num_stages: usize, num_micro: usize) -> ZbV {
+        assert!(num_stages >= 1 && num_micro >= 1);
+        let (p, m) = (num_stages, num_micro);
+        let (items, outcome) = match v_wave_items(&zbv_spec(p, m)) {
+            Some(items) => (items, SynthesisOutcome::Solved),
+            None => (v_fallback_phase_order(p, m), SynthesisOutcome::Fallback("zbv-phase-order")),
+        };
+        let lat = BlockLattice::lift_items(
+            &items,
+            p,
+            m,
+            2,
+            Some(B_FRACTION),
+            Placement::VShape,
+            outcome,
+        );
+        ZbV { lat }
+    }
+}
+
+impl PipelineSchedule for ZbV {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::ZbV
+    }
+
+    fn num_stages(&self) -> usize {
+        self.lat.num_stages()
+    }
+
+    fn num_micro(&self) -> usize {
+        self.lat.num_micro()
+    }
+
+    fn num_chunks(&self) -> usize {
+        2
+    }
+
+    fn stage_items(&self, stage: usize) -> Vec<WorkItem> {
+        self.lat.stage_items(stage)
+    }
+
+    fn backward_split(&self) -> Option<f64> {
+        Some(B_FRACTION)
+    }
+
+    fn placement(&self) -> Placement {
+        Placement::VShape
+    }
+
+    fn synthesis_outcome(&self) -> SynthesisOutcome {
+        self.lat.outcome()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{
+        peak_inflight_replay, peak_inflight_replay_exact, validate_executable, validate_items,
+        WorkKind,
+    };
+
+    // ---- GPipe ----
+
+    #[test]
+    fn gpipe_forwards_then_backwards() {
+        let sched = GPipe::new(3, 4);
+        let items = sched.stage_items(1);
+        assert_eq!(items.len(), 8);
+        assert!(items[..4].iter().all(|i| i.is_fwd()));
+        assert!(items[4..].iter().all(|i| i.is_bwd()));
+        // LIFO backward order.
+        assert_eq!(items[4], WorkItem::bwd(3, 0));
+        assert_eq!(items[7], WorkItem::bwd(0, 0));
+    }
+
+    #[test]
+    fn gpipe_peak_inflight_is_num_micro() {
+        let sched = GPipe::new(4, 6);
+        for s in 0..4 {
+            assert_eq!(sched.peak_inflight(s), 6);
+            assert_eq!(peak_inflight_replay(&sched.stage_items(s)), 6);
+        }
+    }
+
+    // ---- 1F1B ----
+
+    #[test]
+    fn onefoneb_last_stage_strictly_alternates() {
+        let items = onefoneb_items(3, 4, 5);
+        assert_eq!(
+            items,
+            vec![
+                WorkItem::fwd(0, 0),
+                WorkItem::bwd(0, 0),
+                WorkItem::fwd(1, 0),
+                WorkItem::bwd(1, 0),
+                WorkItem::fwd(2, 0),
+                WorkItem::bwd(2, 0),
+                WorkItem::fwd(3, 0),
+                WorkItem::bwd(3, 0),
+                WorkItem::fwd(4, 0),
+                WorkItem::bwd(4, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn onefoneb_first_stage_has_full_warmup() {
+        let items = onefoneb_items(0, 4, 5);
+        assert_eq!(&items[..3], &[WorkItem::fwd(0, 0), WorkItem::fwd(1, 0), WorkItem::fwd(2, 0)]);
+        // Cool-down is the last `warmup` backwards.
+        assert_eq!(
+            &items[items.len() - 3..],
+            &[WorkItem::bwd(2, 0), WorkItem::bwd(3, 0), WorkItem::bwd(4, 0)]
+        );
+    }
+
+    #[test]
+    fn onefoneb_every_microbatch_appears_once_each_direction() {
+        for stage in 0..4 {
+            for m_count in [1usize, 2, 5, 8] {
+                let items = onefoneb_items(stage, 4, m_count);
+                assert_eq!(items.len(), 2 * m_count);
+                for m in 0..m_count {
+                    assert_eq!(items.iter().filter(|i| **i == WorkItem::fwd(m, 0)).count(), 1);
+                    assert_eq!(items.iter().filter(|i| **i == WorkItem::bwd(m, 0)).count(), 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn onefoneb_inflight_closed_form_matches_replay() {
+        for p in [1usize, 2, 4, 6] {
+            for m in [1usize, 2, 5, 8, 12] {
+                let sched = OneFOneB::new(p, m);
+                for stage in 0..p {
+                    assert_eq!(
+                        sched.peak_inflight(stage),
+                        peak_inflight_replay(&sched.stage_items(stage)),
+                        "p={p} m={m} stage={stage}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cooldown_start_index() {
+        // stage 0 of 4, 8 microbatches: warmup 3, steady 10, cooldown at 13.
+        assert_eq!(cooldown_start(0, 4, 8), 13);
+        // last stage: no warmup, no cooldown (index = end).
+        assert_eq!(cooldown_start(3, 4, 8), 16);
+    }
+
+    // ---- Interleaved ----
+
+    #[test]
+    fn single_chunk_reduces_to_1f1b() {
+        let sched = Interleaved1F1B::new(4, 8, 1);
+        for s in 0..4 {
+            assert_eq!(sched.stage_items(s), onefoneb_items(s, 4, 8));
+        }
+        assert_eq!(sched.synthesis_outcome(), SynthesisOutcome::Closed);
+    }
+
+    #[test]
+    fn divisible_shapes_use_the_closed_rule() {
+        // m % p == 0: the closed lattice rule must validate and be used.
+        for p in [1usize, 2, 3, 4, 6, 8] {
+            for mult in [1usize, 2, 3, 4] {
+                for v in [2usize, 3] {
+                    let sched = Interleaved1F1B::new(p, p * mult, v);
+                    assert_eq!(
+                        sched.synthesis_outcome(),
+                        SynthesisOutcome::Closed,
+                        "p={p} m={} v={v}",
+                        p * mult
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_shapes_are_solved_not_fallen_back() {
+        // The old implementation handed (6, 8, 2) to the greedy fallback
+        // and warned; pad-and-delete now solves it tightly. Shapes whose
+        // closed form already validates stay Closed.
+        let ragged = Interleaved1F1B::new(6, 8, 2);
+        assert_eq!(ragged.synthesis_outcome(), SynthesisOutcome::Solved);
+        validate_executable(&ragged).unwrap();
+        assert_eq!(Interleaved1F1B::new(4, 6, 2).synthesis_outcome(), SynthesisOutcome::Closed);
+        assert_eq!(Interleaved1F1B::new(4, 8, 2).synthesis_outcome(), SynthesisOutcome::Closed);
+    }
+
+    #[test]
+    fn ragged_pad_and_delete_is_tight_on_memory() {
+        // Pad-and-delete must not hold more in flight than the padded
+        // closed form it derives from.
+        let ragged = Interleaved1F1B::new(6, 8, 2);
+        let padded = Interleaved1F1B::new(6, 12, 2);
+        for s in 0..6 {
+            assert!(
+                ragged.peak_inflight(s) <= padded.peak_inflight(s),
+                "stage {s}: {} > {}",
+                ragged.peak_inflight(s),
+                padded.peak_inflight(s)
+            );
+        }
+    }
+
+    #[test]
+    fn interleaved_executable_across_shape_grid() {
+        for p in [1usize, 2, 3, 4, 6] {
+            for m in [1usize, 2, 4, 5, 7, 8, 12] {
+                for v in [2usize, 3] {
+                    let sched = Interleaved1F1B::new(p, m, v);
+                    validate_executable(&sched).unwrap_or_else(|e| {
+                        panic!("p={p} m={m} v={v}: {e}");
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_zero_forward_of_micro_zero_comes_first_on_stage_zero() {
+        let sched = Interleaved1F1B::new(4, 8, 2);
+        let items = sched.stage_items(0);
+        assert_eq!(items[0], WorkItem::fwd(0, 0));
+    }
+
+    #[test]
+    fn warmup_interleaves_chunks_on_stage_zero() {
+        // Megatron p=4, m=8, v=2: stage-0 warmup is 10 forwards covering
+        // both chunks; the steady phase pushes one more forward before
+        // the first backward, so the first B sits at index 11.
+        let sched = Interleaved1F1B::new(4, 8, 2);
+        let items = sched.stage_items(0);
+        let first_b = items.iter().position(|i| i.kind == WorkKind::Bwd).unwrap();
+        assert_eq!(first_b, 11);
+        let warmup_chunks: std::collections::HashSet<usize> =
+            items[..first_b].iter().map(|i| i.chunk).collect();
+        assert!(warmup_chunks.contains(&0) && warmup_chunks.contains(&1), "{items:?}");
+    }
+
+    #[test]
+    fn more_chunks_hold_more_units_in_flight() {
+        let one = Interleaved1F1B::new(4, 8, 1);
+        let two = Interleaved1F1B::new(4, 8, 2);
+        assert!(two.peak_inflight(0) > one.peak_inflight(0));
+    }
+
+    // ---- ZB-H1 ----
+
+    #[test]
+    fn zbh1_emits_f_b_w_for_every_microbatch() {
+        let sched = ZbH1::new(4, 6);
+        for s in 0..4 {
+            let items = sched.stage_items(s);
+            assert_eq!(items.len(), 18);
+            for q in 0..6 {
+                for kind in [WorkKind::Fwd, WorkKind::Bwd, WorkKind::WGrad] {
+                    assert_eq!(
+                        items.iter().filter(|i| i.kind == kind && i.micro == q).count(),
+                        1,
+                        "stage {s} micro {q} {kind:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zbh1_w_follows_its_b() {
+        let sched = ZbH1::new(4, 8);
+        for s in 0..4 {
+            let items = sched.stage_items(s);
+            for q in 0..8 {
+                let b =
+                    items.iter().position(|i| i.kind == WorkKind::Bwd && i.micro == q).unwrap();
+                let w =
+                    items.iter().position(|i| i.kind == WorkKind::WGrad && i.micro == q).unwrap();
+                assert!(b < w, "stage {s} micro {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn zbh1_b_freed_count_stays_at_1f1b_level() {
+        // The B-freed unit count (the H1 approximation) matches 1F1B's
+        // profile; the exact replay sits above it by the W residual.
+        for p in [2usize, 4] {
+            for m in [4usize, 8] {
+                let zb = ZbH1::new(p, m);
+                let base = OneFOneB::new(p, m);
+                for s in 0..p {
+                    assert!(zb.peak_inflight(s) <= base.peak_inflight(s), "p={p} m={m} stage {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zbh1_exact_peak_prices_the_w_residual() {
+        // The exact replay strictly exceeds the B-freed count somewhere
+        // (the residual the old accounting ignored), but stays bounded by
+        // the backlog rule: at most cap + w_hold · backlog-bound units.
+        for m in [8usize, 16, 32] {
+            let sched = ZbH1::new(4, m);
+            let mut some_gap = false;
+            for s in 0..4 {
+                let h1 = sched.peak_inflight(s) as f64;
+                let exact = sched.peak_inflight_exact(s, 0.5);
+                assert!(exact >= h1 - 1e-12, "m={m} stage {s}");
+                some_gap |= exact > h1 + 1e-9;
+                assert!(
+                    exact <= h1 + 0.5 * 4.0 + 1e-9,
+                    "m={m} stage {s}: exact {exact} vs h1 {h1}"
+                );
+            }
+            assert!(some_gap, "m={m}: no stage shows a W residual");
+        }
+    }
+
+    #[test]
+    fn zbh1_exact_matches_item_replay() {
+        let sched = ZbH1::new(4, 8);
+        for s in 0..4 {
+            for w in [0.0, 0.3, 1.0] {
+                assert_eq!(
+                    sched.peak_inflight_exact(s, w),
+                    peak_inflight_replay_exact(&sched.stage_items(s), w)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zbh1_executable_across_shape_grid() {
+        for p in [1usize, 2, 3, 5] {
+            for m in [1usize, 2, 4, 9] {
+                validate_executable(&ZbH1::new(p, m))
+                    .unwrap_or_else(|e| panic!("p={p} m={m}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn zbh1_early_stages_park_w_for_the_cooldown() {
+        // Stage 0 has the deepest cool-down stall; at least one of its W
+        // items should run after its last forward (i.e. fill the drain).
+        let sched = ZbH1::new(4, 8);
+        let items = sched.stage_items(0);
+        let last_f = items.iter().rposition(|i| i.kind == WorkKind::Fwd).unwrap();
+        let w_after = items[last_f..].iter().filter(|i| i.kind == WorkKind::WGrad).count();
+        assert!(w_after >= 1, "{items:?}");
+    }
+
+    #[test]
+    fn zbh_closed_regime_is_closed_and_boundary_is_solved() {
+        // m ≥ 2p−1 (H1) / m ≥ 3p−1 (H2): the block template applies
+        // lazily; below it the wave solver fills in, tightly.
+        assert_eq!(ZbH1::new(4, 8).synthesis_outcome(), SynthesisOutcome::Closed);
+        assert_eq!(ZbH1::new(4, 6).synthesis_outcome(), SynthesisOutcome::Solved);
+        assert_eq!(ZbH2::new(4, 11).synthesis_outcome(), SynthesisOutcome::Closed);
+        assert_eq!(ZbH2::new(4, 8).synthesis_outcome(), SynthesisOutcome::Solved);
+    }
+
+    // ---- ZB-H2 ----
+
+    #[test]
+    fn zbh2_deeper_warmup_than_h1() {
+        // Stage 0 of 4 with enough microbatches warms up 2p−1 = 7
+        // forwards before its first backward (H1 warms up p−1 = 3).
+        let sched = ZbH2::new(4, 8);
+        let items = sched.stage_items(0);
+        let first_b = items.iter().position(|i| i.kind == WorkKind::Bwd).unwrap();
+        assert_eq!(first_b, 7, "{items:?}");
+        assert_eq!(sched.peak_inflight(0), 7);
+    }
+
+    #[test]
+    fn zbh2_pays_more_memory_than_h1_for_less_or_equal_bubble_work() {
+        for (p, m) in [(2usize, 4usize), (4, 8), (4, 16)] {
+            let h1 = ZbH1::new(p, m);
+            let h2 = ZbH2::new(p, m);
+            // Strictly more in-flight on the early stages (both in the
+            // B-freed approximation and exactly)...
+            assert!(h2.peak_inflight(0) > h1.peak_inflight(0), "p={p} m={m}");
+            assert!(h2.peak_inflight_exact(0, 0.5) > h1.peak_inflight_exact(0, 0.5), "p={p} m={m}");
+            // ...and the exact peak dominates the B-freed count per stage.
+            for s in 0..p {
+                assert!(
+                    h2.peak_inflight_exact(s, 0.5) >= h2.peak_inflight(s) as f64 - 1e-12,
+                    "p={p} m={m} stage {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zbh2_executable_across_shape_grid() {
+        for p in [1usize, 2, 3, 5] {
+            for m in [1usize, 2, 4, 9] {
+                validate_executable(&ZbH2::new(p, m))
+                    .unwrap_or_else(|e| panic!("p={p} m={m}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn zbh2_single_stage_degenerates_to_h1() {
+        // p = 1: warmup/cap collapse to 1; both variants produce the
+        // same strict F B W order.
+        let h1 = ZbH1::new(1, 4);
+        let h2 = ZbH2::new(1, 4);
+        assert_eq!(h1.stage_items(0), h2.stage_items(0));
+    }
+
+    // ---- ZB-V ----
+
+    #[test]
+    fn zbv_covers_the_grid_without_fallback() {
+        for p in [1usize, 2, 3, 4, 6, 8] {
+            for m in [1usize, 2, 3, 5, 8, 12, 16, 32] {
+                let sched = ZbV::new(p, m);
+                assert_eq!(
+                    sched.synthesis_outcome(),
+                    SynthesisOutcome::Solved,
+                    "p={p} m={m} fell back"
+                );
+                let items: Vec<Vec<WorkItem>> = (0..p).map(|s| sched.stage_items(s)).collect();
+                validate_items(&items, p, m, 2, true, Placement::VShape)
+                    .unwrap_or_else(|e| panic!("p={p} m={m}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn zbv_executable_and_complete() {
+        for p in [1usize, 2, 4] {
+            for m in [1usize, 3, 8] {
+                let sched = ZbV::new(p, m);
+                validate_executable(&sched).unwrap_or_else(|e| panic!("p={p} m={m}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn zbv_stage_zero_computes_the_loss_chunk() {
+        // Stage 0 hosts the last virtual stage: its chunk-1 backward of
+        // micro 0 precedes every other stage's.
+        let sched = ZbV::new(4, 4);
+        let items = sched.stage_items(0);
+        let b0 = items
+            .iter()
+            .position(|i| i.kind == WorkKind::Bwd && i.chunk == 1 && i.micro == 0)
+            .unwrap();
+        // Before it, stage 0 must have run its own F(0, chunk 1).
+        let f0 = items
+            .iter()
+            .position(|i| i.kind == WorkKind::Fwd && i.chunk == 1 && i.micro == 0)
+            .unwrap();
+        assert!(f0 < b0);
+    }
+
+    #[test]
+    fn zbv_memory_is_near_uniform_across_stages() {
+        // The V equalises the profile: every stage peaks at ≲ 2p chunk
+        // units (= p microbatch equivalents), where 1F1B spans p..1.
+        for (p, m) in [(4usize, 8usize), (4, 16), (6, 12)] {
+            let sched = ZbV::new(p, m);
+            let peaks: Vec<usize> = (0..p).map(|s| sched.peak_inflight(s)).collect();
+            let lo = *peaks.iter().min().unwrap();
+            let hi = *peaks.iter().max().unwrap();
+            assert!(hi <= 2 * p, "p={p} m={m}: peaks {peaks:?}");
+            assert!(hi - lo <= 2, "p={p} m={m}: peaks {peaks:?} not uniform");
+            // Microbatch equivalents stay at 1F1B's stage-0 level.
+            let stage0_1f1b = OneFOneB::new(p, m).peak_inflight(0);
+            assert!((hi + 1) / 2 <= stage0_1f1b + 1, "p={p} m={m}");
+        }
+    }
+
+    #[test]
+    fn zbv_exact_peak_bounded_in_microbatch_count() {
+        // The W backlog bound keeps the residual from growing with m.
+        let peaks: Vec<f64> =
+            [8usize, 16, 32].iter().map(|&m| ZbV::new(4, m).peak_inflight_exact(0, 0.5)).collect();
+        assert!((peaks[0] - peaks[1]).abs() < 1e-9, "{peaks:?}");
+        assert!((peaks[1] - peaks[2]).abs() < 1e-9, "{peaks:?}");
+    }
+}

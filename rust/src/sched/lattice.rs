@@ -1,0 +1,589 @@
+//! Schedule-as-data: the block lattice.
+//!
+//! Every pipeline schedule this crate knows is a composition of a small
+//! repeating F/B/W building block with per-stage offsets ("Pipeline
+//! Parallelism with Controllable Memory", Qi et al.). This module makes
+//! that structure literal: a [`BlockLattice`] *is* the schedule — a
+//! shape (stages × microbatches × chunks, split fraction, chunk
+//! [`Placement`]) plus a per-stage rule that says which blocks repeat
+//! how often — and compiles to the `Vec<WorkItem>` streams the engine
+//! executes.
+//!
+//! A stage's item stream is three **pass streams** (the (chunk, micro)
+//! coordinates each F/B/W consumes, in consumption order — a
+//! [`MicroStream`]) threaded through a sequence of [`Block`]s (a short
+//! kind pattern × a repeat count). `F (BF)^3 B (WFB)^9 ...` is data,
+//! not code.
+//!
+//! Two kinds of per-stage rule:
+//!
+//! * [`StageRule::Closed`] — the stage's blocks follow directly from
+//!   `(stage, p, m, v)` in O(1) block arithmetic; item streams are
+//!   generated **lazily per stage**, so a P=2048 pipeline never
+//!   materialises 2048 orders to answer a question about stage 7.
+//!   GPipe, 1F1B, divisible interleaved, and the regular regime of
+//!   ZB-H1/H2 (`m ≥ 2p−1` resp. `m ≥ 3p−1`) are closed.
+//! * [`StageRule::Solved`] — boundary shapes (small m, ragged
+//!   interleaved, the ZB-V wave, synthesized schedules) are solved once
+//!   globally (unit-time wave scheduling or pad-and-delete, see
+//!   [`super::solver`]) and the resulting streams are run-length
+//!   lifted back into blocks, so the schedule stays inspectable data
+//!   and `compile ∘ lift = id` (property tested).
+//!
+//! How a lattice came to be is a [`SynthesisOutcome`], unified across
+//! all schedules (it replaces the old per-kind `used_*_fallback`
+//! flags) and surfaced in `lynx.report.v1` run reports.
+
+use super::{Placement, SynthesisOutcome, WorkItem, WorkKind};
+use std::sync::Arc;
+
+/// The (chunk, micro) coordinates one pass stream consumes, in order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MicroStream {
+    /// Micros `0..m` ascending on one chunk.
+    Asc { m: usize, chunk: usize },
+    /// Micros `m..0` descending on one chunk (GPipe's LIFO backward).
+    Desc { m: usize, chunk: usize },
+    /// Megatron launch rounds: rounds of `r` micros; within a round the
+    /// chunks ascend (`desc = false`, forward) or descend (backward).
+    Rounds { m: usize, v: usize, r: usize, desc: bool },
+    /// Explicit coordinates (solver-lifted lattices).
+    Explicit(Vec<(usize, usize)>),
+}
+
+impl MicroStream {
+    pub fn len(&self) -> usize {
+        match self {
+            MicroStream::Asc { m, .. } | MicroStream::Desc { m, .. } => *m,
+            MicroStream::Rounds { m, v, .. } => m * v,
+            MicroStream::Explicit(coords) => coords.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialise the coordinate sequence.
+    pub fn coords(&self) -> Vec<(usize, usize)> {
+        match *self {
+            MicroStream::Asc { m, chunk } => (0..m).map(|q| (chunk, q)).collect(),
+            MicroStream::Desc { m, chunk } => (0..m).rev().map(|q| (chunk, q)).collect(),
+            MicroStream::Rounds { m, v, r, desc } => {
+                let mut out = Vec::with_capacity(m * v);
+                let mut start = 0;
+                while start < m {
+                    let end = m.min(start + r);
+                    if desc {
+                        for c in (0..v).rev() {
+                            for q in start..end {
+                                out.push((c, q));
+                            }
+                        }
+                    } else {
+                        for c in 0..v {
+                            for q in start..end {
+                                out.push((c, q));
+                            }
+                        }
+                    }
+                    start = end;
+                }
+                out
+            }
+            MicroStream::Explicit(ref coords) => coords.clone(),
+        }
+    }
+}
+
+/// One repeating unit of a stage's order: a short kind pattern and how
+/// many times it repeats. `Block { pattern: [B, F], repeat: 3 }` is
+/// `(BF)^3`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Block {
+    pub pattern: Vec<WorkKind>,
+    pub repeat: usize,
+}
+
+impl Block {
+    pub fn new(pattern: &[WorkKind], repeat: usize) -> Block {
+        Block { pattern: pattern.to_vec(), repeat }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pattern.len() * self.repeat
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One stage of a lattice: pass streams plus the block sequence that
+/// threads them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageLattice {
+    pub fwd: MicroStream,
+    pub bwd: MicroStream,
+    /// `None` for combined-backward schedules (no W items).
+    pub wgrad: Option<MicroStream>,
+    pub blocks: Vec<Block>,
+}
+
+impl StageLattice {
+    /// Expand blocks through the pass streams into the stage's item
+    /// order. Every stream must be consumed exactly (debug-asserted;
+    /// builders and the lift guarantee it).
+    pub fn compile(&self) -> Vec<WorkItem> {
+        let f = self.fwd.coords();
+        let b = self.bwd.coords();
+        let w = self.wgrad.as_ref().map(|s| s.coords()).unwrap_or_default();
+        let (mut fi, mut bi, mut wi) = (0usize, 0usize, 0usize);
+        let total: usize = self.blocks.iter().map(Block::len).sum();
+        let mut out = Vec::with_capacity(total);
+        for blk in &self.blocks {
+            for _ in 0..blk.repeat {
+                for &kind in &blk.pattern {
+                    let item = match kind {
+                        WorkKind::Fwd => {
+                            let (c, q) = f[fi];
+                            fi += 1;
+                            WorkItem::fwd(q, c)
+                        }
+                        WorkKind::Bwd => {
+                            let (c, q) = b[bi];
+                            bi += 1;
+                            WorkItem::bwd(q, c)
+                        }
+                        WorkKind::WGrad => {
+                            let (c, q) = w[wi];
+                            wi += 1;
+                            WorkItem::wgrad(q, c)
+                        }
+                    };
+                    out.push(item);
+                }
+            }
+        }
+        debug_assert_eq!(fi, f.len(), "lattice blocks under-consume the F stream");
+        debug_assert_eq!(bi, b.len(), "lattice blocks under-consume the B stream");
+        debug_assert_eq!(wi, w.len(), "lattice blocks under-consume the W stream");
+        out
+    }
+}
+
+/// Closed per-stage block rules: blocks follow from `(stage, shape)` in
+/// O(1) arithmetic, so stage streams are derived lazily.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClosedRule {
+    /// `F^m` then `B^m` LIFO.
+    GPipe,
+    /// `F^w (FB)^{m−w} B^w`, `w = min(p−1−s, m)`.
+    OneFOneB,
+    /// Megatron interleaved: `F^w (FB)^{vm−w} B^w` over round-robin
+    /// launch streams, `w = min((v−1)r + 2(p−1−s), vm)`.
+    Interleaved,
+    /// The unified zero-bubble template
+    /// `F^a (BF)^{p−1} B (WFB)^n (WWB)^g (WB)^h W^{p−g}` with
+    /// `a = p−s` (H1) or `2(p−s)−1` (H2), `n = m−a−p+1`,
+    /// `g = min(p−1, a−1)`, `h = a−1−g`. Valid in the regular regime
+    /// (see [`zb_shape_is_closed`]); grid-tested item-for-item equal to
+    /// the legacy unit-time generator.
+    ZbH { h2: bool },
+}
+
+#[derive(Debug, Clone)]
+enum StageRule {
+    Closed(ClosedRule),
+    Solved(Arc<Vec<StageLattice>>),
+}
+
+/// A pipeline schedule as data: shape × per-stage block rule ×
+/// provenance. Compiles to per-stage `Vec<WorkItem>` streams.
+#[derive(Debug, Clone)]
+pub struct BlockLattice {
+    num_stages: usize,
+    num_micro: usize,
+    num_chunks: usize,
+    split: Option<f64>,
+    placement: Placement,
+    rule: StageRule,
+    outcome: SynthesisOutcome,
+}
+
+impl BlockLattice {
+    pub fn num_stages(&self) -> usize {
+        self.num_stages
+    }
+
+    pub fn num_micro(&self) -> usize {
+        self.num_micro
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.num_chunks
+    }
+
+    pub fn split(&self) -> Option<f64> {
+        self.split
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    pub fn outcome(&self) -> SynthesisOutcome {
+        self.outcome
+    }
+
+    /// The stage's block structure (lazy for closed rules).
+    pub fn stage(&self, stage: usize) -> StageLattice {
+        assert!(stage < self.num_stages);
+        let (s, p, m, v) = (stage, self.num_stages, self.num_micro, self.num_chunks);
+        match &self.rule {
+            StageRule::Closed(ClosedRule::GPipe) => gpipe_stage(m),
+            StageRule::Closed(ClosedRule::OneFOneB) => onefoneb_stage(s, p, m),
+            StageRule::Closed(ClosedRule::Interleaved) => interleaved_stage(s, p, m, v),
+            StageRule::Closed(ClosedRule::ZbH { h2 }) => zb_stage(s, p, m, *h2),
+            StageRule::Solved(stages) => stages[stage].clone(),
+        }
+    }
+
+    pub fn stage_items(&self, stage: usize) -> Vec<WorkItem> {
+        self.stage(stage).compile()
+    }
+
+    pub fn gpipe(p: usize, m: usize) -> BlockLattice {
+        BlockLattice {
+            num_stages: p,
+            num_micro: m,
+            num_chunks: 1,
+            split: None,
+            placement: Placement::Interleaved,
+            rule: StageRule::Closed(ClosedRule::GPipe),
+            outcome: SynthesisOutcome::Closed,
+        }
+    }
+
+    pub fn onefoneb(p: usize, m: usize) -> BlockLattice {
+        BlockLattice {
+            num_stages: p,
+            num_micro: m,
+            num_chunks: 1,
+            split: None,
+            placement: Placement::Interleaved,
+            rule: StageRule::Closed(ClosedRule::OneFOneB),
+            outcome: SynthesisOutcome::Closed,
+        }
+    }
+
+    /// The divisible-shape Megatron closed form. Callers must have
+    /// validated the shape ([`super::validate_items`]) — ragged shapes
+    /// lift a pad-and-delete solution instead (see
+    /// [`super::Interleaved1F1B`]).
+    pub fn interleaved_closed(p: usize, m: usize, v: usize) -> BlockLattice {
+        BlockLattice {
+            num_stages: p,
+            num_micro: m,
+            num_chunks: v,
+            split: None,
+            placement: Placement::Interleaved,
+            rule: StageRule::Closed(ClosedRule::Interleaved),
+            outcome: SynthesisOutcome::Closed,
+        }
+    }
+
+    /// The regular-regime zero-bubble template; requires
+    /// [`zb_shape_is_closed`].
+    pub fn zb(p: usize, m: usize, h2: bool, b_fraction: f64) -> BlockLattice {
+        assert!(zb_shape_is_closed(p, m, h2), "sub-threshold ZB shape needs the solver");
+        BlockLattice {
+            num_stages: p,
+            num_micro: m,
+            num_chunks: 1,
+            split: Some(b_fraction),
+            placement: Placement::Interleaved,
+            rule: StageRule::Closed(ClosedRule::ZbH { h2 }),
+            outcome: SynthesisOutcome::Closed,
+        }
+    }
+
+    /// Lift solved per-stage item streams into lattice form: pass
+    /// streams are the per-kind coordinates in emission order, blocks
+    /// are a run-length compression of the kind sequence (so the
+    /// uniform steady-state interior shows up as one block with a large
+    /// repeat). `compile ∘ lift` reproduces `items` exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lift_items(
+        items: &[Vec<WorkItem>],
+        p: usize,
+        m: usize,
+        v: usize,
+        split: Option<f64>,
+        placement: Placement,
+        outcome: SynthesisOutcome,
+    ) -> BlockLattice {
+        assert_eq!(items.len(), p);
+        let stages = items.iter().map(|list| lift_stage(list)).collect();
+        BlockLattice {
+            num_stages: p,
+            num_micro: m,
+            num_chunks: v,
+            split,
+            placement,
+            rule: StageRule::Solved(Arc::new(stages)),
+            outcome,
+        }
+    }
+}
+
+/// Whether the zero-bubble template covers every stage of the shape:
+/// H1 needs `m ≥ 2p−1` (stage 0's `a + p − 1`), H2 needs `m ≥ 3p−1`
+/// (stage 0 additionally absorbs the wrap of its deepened warmup).
+/// Grid-validated against the unit-time generator.
+pub fn zb_shape_is_closed(p: usize, m: usize, h2: bool) -> bool {
+    if h2 {
+        p == 1 || m >= 3 * p - 1
+    } else {
+        m >= 2 * p - 1
+    }
+}
+
+fn push_block(blocks: &mut Vec<Block>, pattern: &[WorkKind], repeat: usize) {
+    if repeat > 0 && !pattern.is_empty() {
+        blocks.push(Block::new(pattern, repeat));
+    }
+}
+
+fn gpipe_stage(m: usize) -> StageLattice {
+    use WorkKind::{Bwd, Fwd};
+    let mut blocks = Vec::new();
+    push_block(&mut blocks, &[Fwd], m);
+    push_block(&mut blocks, &[Bwd], m);
+    StageLattice {
+        fwd: MicroStream::Asc { m, chunk: 0 },
+        bwd: MicroStream::Desc { m, chunk: 0 },
+        wgrad: None,
+        blocks,
+    }
+}
+
+fn onefoneb_stage(s: usize, p: usize, m: usize) -> StageLattice {
+    use WorkKind::{Bwd, Fwd};
+    let w = (p - 1 - s).min(m);
+    let mut blocks = Vec::new();
+    push_block(&mut blocks, &[Fwd], w);
+    push_block(&mut blocks, &[Fwd, Bwd], m - w);
+    push_block(&mut blocks, &[Bwd], w);
+    StageLattice {
+        fwd: MicroStream::Asc { m, chunk: 0 },
+        bwd: MicroStream::Asc { m, chunk: 0 },
+        wgrad: None,
+        blocks,
+    }
+}
+
+fn interleaved_stage(s: usize, p: usize, m: usize, v: usize) -> StageLattice {
+    use WorkKind::{Bwd, Fwd};
+    let r = p.min(m);
+    let total = m * v;
+    let w = ((v - 1) * r + 2 * (p - 1 - s)).min(total);
+    let mut blocks = Vec::new();
+    push_block(&mut blocks, &[Fwd], w);
+    push_block(&mut blocks, &[Fwd, Bwd], total - w);
+    push_block(&mut blocks, &[Bwd], w);
+    StageLattice {
+        fwd: MicroStream::Rounds { m, v, r, desc: false },
+        bwd: MicroStream::Rounds { m, v, r, desc: true },
+        wgrad: None,
+        blocks,
+    }
+}
+
+fn zb_stage(s: usize, p: usize, m: usize, h2: bool) -> StageLattice {
+    use WorkKind::{Bwd, Fwd, WGrad};
+    let a = if h2 { 2 * (p - s) - 1 } else { p - s };
+    debug_assert!(m >= a + p - 1, "zb_stage outside the regular regime");
+    let n = m - a - (p - 1);
+    let g = (p - 1).min(a - 1);
+    let h = a - 1 - g;
+    let mut blocks = Vec::new();
+    push_block(&mut blocks, &[Fwd], a);
+    push_block(&mut blocks, &[Bwd, Fwd], p - 1);
+    push_block(&mut blocks, &[Bwd], 1);
+    push_block(&mut blocks, &[WGrad, Fwd, Bwd], n);
+    push_block(&mut blocks, &[WGrad, WGrad, Bwd], g);
+    push_block(&mut blocks, &[WGrad, Bwd], h);
+    push_block(&mut blocks, &[WGrad], p - g);
+    StageLattice {
+        fwd: MicroStream::Asc { m, chunk: 0 },
+        bwd: MicroStream::Asc { m, chunk: 0 },
+        wgrad: Some(MicroStream::Asc { m, chunk: 0 }),
+        blocks,
+    }
+}
+
+/// Run-length lift of one stage's item stream: per-kind coordinate
+/// streams in emission order, plus a greedy motif compression of the
+/// kind sequence (motifs up to 8 kinds; a repeat must cover ≥ 4 items
+/// to beat staying literal). Correct by construction: concatenating
+/// the blocks' expanded patterns reproduces the kind sequence, and the
+/// streams replay the coordinates in the original order.
+fn lift_stage(items: &[WorkItem]) -> StageLattice {
+    let mut f_coords = Vec::new();
+    let mut b_coords = Vec::new();
+    let mut w_coords = Vec::new();
+    let mut kinds = Vec::with_capacity(items.len());
+    for it in items {
+        kinds.push(it.kind);
+        match it.kind {
+            WorkKind::Fwd => f_coords.push((it.chunk, it.micro)),
+            WorkKind::Bwd => b_coords.push((it.chunk, it.micro)),
+            WorkKind::WGrad => w_coords.push((it.chunk, it.micro)),
+        }
+    }
+    StageLattice {
+        fwd: MicroStream::Explicit(f_coords),
+        bwd: MicroStream::Explicit(b_coords),
+        wgrad: if w_coords.is_empty() { None } else { Some(MicroStream::Explicit(w_coords)) },
+        blocks: compress_kinds(&kinds),
+    }
+}
+
+fn compress_kinds(kinds: &[WorkKind]) -> Vec<Block> {
+    let mut blocks: Vec<Block> = Vec::new();
+    let mut literal: Vec<WorkKind> = Vec::new();
+    let mut i = 0;
+    while i < kinds.len() {
+        // Best repeating motif starting at i: maximise covered length.
+        let mut best: Option<(usize, usize)> = None; // (motif len, repeats)
+        let max_len = 8.min(kinds.len() - i);
+        for len in 1..=max_len {
+            let mut reps = 1;
+            while i + (reps + 1) * len <= kinds.len()
+                && kinds[i + reps * len..i + (reps + 1) * len] == kinds[i..i + len]
+            {
+                reps += 1;
+            }
+            if reps >= 2 && best.map_or(true, |(bl, br)| reps * len > bl * br) {
+                best = Some((len, reps));
+            }
+        }
+        match best {
+            Some((len, reps)) if reps * len >= 4 => {
+                if !literal.is_empty() {
+                    blocks.push(Block { pattern: std::mem::take(&mut literal), repeat: 1 });
+                }
+                blocks.push(Block { pattern: kinds[i..i + len].to_vec(), repeat: reps });
+                i += reps * len;
+            }
+            _ => {
+                literal.push(kinds[i]);
+                i += 1;
+            }
+        }
+    }
+    if !literal.is_empty() {
+        blocks.push(Block { pattern: literal, repeat: 1 });
+    }
+    blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_materialise_in_order() {
+        assert_eq!(MicroStream::Asc { m: 3, chunk: 1 }.coords(), vec![(1, 0), (1, 1), (1, 2)]);
+        assert_eq!(MicroStream::Desc { m: 3, chunk: 0 }.coords(), vec![(0, 2), (0, 1), (0, 0)]);
+        // Rounds of r=2 over m=3, v=2: [c0 q0 q1, c1 q0 q1, c0 q2, c1 q2].
+        assert_eq!(
+            MicroStream::Rounds { m: 3, v: 2, r: 2, desc: false }.coords(),
+            vec![(0, 0), (0, 1), (1, 0), (1, 1), (0, 2), (1, 2)]
+        );
+        assert_eq!(
+            MicroStream::Rounds { m: 3, v: 2, r: 2, desc: true }.coords(),
+            vec![(1, 0), (1, 1), (0, 0), (0, 1), (1, 2), (0, 2)]
+        );
+    }
+
+    #[test]
+    fn compile_threads_streams_through_blocks() {
+        use WorkKind::{Bwd, Fwd};
+        let stage = StageLattice {
+            fwd: MicroStream::Asc { m: 3, chunk: 0 },
+            bwd: MicroStream::Asc { m: 3, chunk: 0 },
+            wgrad: None,
+            blocks: vec![Block::new(&[Fwd], 1), Block::new(&[Fwd, Bwd], 2), Block::new(&[Bwd], 1)],
+        };
+        assert_eq!(
+            stage.compile(),
+            vec![
+                WorkItem::fwd(0, 0),
+                WorkItem::fwd(1, 0),
+                WorkItem::bwd(0, 0),
+                WorkItem::fwd(2, 0),
+                WorkItem::bwd(1, 0),
+                WorkItem::bwd(2, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn lift_round_trips_arbitrary_streams() {
+        // A stream with an irregular boundary and a uniform interior:
+        // the lift must compress the interior and still round-trip.
+        let mut items = vec![WorkItem::fwd(0, 0), WorkItem::fwd(1, 0)];
+        for q in 0..6 {
+            items.push(WorkItem::fwd(q + 2, 0));
+            items.push(WorkItem::bwd(q, 0));
+            items.push(WorkItem::wgrad(q, 0));
+        }
+        items.push(WorkItem::bwd(6, 0));
+        items.push(WorkItem::bwd(7, 0));
+        items.push(WorkItem::wgrad(7, 0));
+        items.push(WorkItem::wgrad(6, 0));
+        let stage = super::lift_stage(&items);
+        assert_eq!(stage.compile(), items);
+        // The interior became one repeating block.
+        assert!(
+            stage.blocks.iter().any(|b| b.repeat >= 6),
+            "no uniform interior found: {:?}",
+            stage.blocks
+        );
+    }
+
+    #[test]
+    fn zb_template_counts_balance() {
+        for p in [1usize, 2, 3, 4, 6, 8] {
+            for h2 in [false, true] {
+                let m = if h2 { 3 * p + 2 } else { 2 * p + 1 };
+                assert!(zb_shape_is_closed(p, m, h2));
+                for s in 0..p {
+                    let items = zb_stage(s, p, m, h2).compile();
+                    assert_eq!(items.len(), 3 * m, "p={p} m={m} s={s} h2={h2}");
+                    for kind in [WorkKind::Fwd, WorkKind::Bwd, WorkKind::WGrad] {
+                        assert_eq!(
+                            items.iter().filter(|i| i.kind == kind).count(),
+                            m,
+                            "p={p} m={m} s={s} h2={h2} {kind:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn closed_lattices_are_lazy_per_stage() {
+        // A very wide pipeline: deriving one stage must not require
+        // touching the other 2047.
+        let lat = BlockLattice::onefoneb(2048, 4);
+        let items = lat.stage_items(7);
+        assert_eq!(items.len(), 8);
+        assert!(items.iter().take(4).all(|i| i.is_fwd()));
+        let zb = BlockLattice::zb(2048, 2 * 2048 - 1, false, 0.5);
+        assert_eq!(zb.stage_items(2047).len(), 3 * (2 * 2048 - 1));
+    }
+}

@@ -1,0 +1,473 @@
+//! Legacy schedule generators, kept verbatim as test oracles.
+//!
+//! These are the hand-written construction paths the lattice refactor
+//! replaced: the 1F1B/GPipe closed forms, the Megatron interleaved
+//! closed form with its greedy ragged-shape fallback, the ZB-H1/H2
+//! greedy specs, and the ZB-V per-chunk-queue wave generator.
+//! `tests/lattice_prop.rs` asserts the new [`super::lattice`]-backed
+//! kinds reproduce these orders item-for-item across the shape grid
+//! (modulo the ragged-interleaved cells, where the new pad-and-delete
+//! rule is deliberately *tighter* than the old greedy fallback).
+//!
+//! Gated behind the default-on `legacy-oracle` feature so release
+//! binaries can drop the dead code with `--no-default-features` while
+//! the test suite keeps its ground truth. Nothing outside tests may
+//! depend on this module.
+
+use super::{
+    bwd_upstream, bwd_upstream_of, fwd_upstream, fwd_upstream_of, validate_items, Placement,
+    ScheduleKind, WorkItem,
+};
+
+/// Old constructor semantics for `kind` at shape `(p, m)`, per stage.
+/// Panics on [`ScheduleKind::Synth`] — synthesis has no legacy path.
+pub fn legacy_items(kind: ScheduleKind, p: usize, m: usize) -> Vec<Vec<WorkItem>> {
+    match kind {
+        ScheduleKind::GPipe => (0..p).map(|_| gpipe_items(m)).collect(),
+        ScheduleKind::OneFOneB => (0..p).map(|s| onefoneb_items(s, p, m)).collect(),
+        ScheduleKind::Interleaved { chunks: v } => {
+            if v == 1 {
+                return (0..p).map(|s| onefoneb_items(s, p, m)).collect();
+            }
+            let closed = closed_form(p, m, v);
+            if validate_items(&closed, p, m, v, false, Placement::Interleaved).is_ok() {
+                closed
+            } else {
+                let r = p.min(m);
+                let (fseq, bseq) = launch_orders(m, v, r);
+                let total = m * v;
+                let warmup: Vec<usize> =
+                    (0..p).map(|s| ((v - 1) * r + 2 * (p - s - 1)).min(total)).collect();
+                let cap: Vec<usize> = warmup.iter().map(|&w| (w + 1).min(total)).collect();
+                greedy_items(&GreedySpec {
+                    num_stages: p,
+                    num_micro: m,
+                    num_chunks: v,
+                    fseq,
+                    bseq,
+                    warmup,
+                    cap,
+                    split_bwd: false,
+                    w_backlog: None,
+                })
+            }
+        }
+        ScheduleKind::ZbH1 => greedy_items(&GreedySpec {
+            num_stages: p,
+            num_micro: m,
+            num_chunks: 1,
+            fseq: (0..m).map(|q| (0, q)).collect(),
+            bseq: (0..m).map(|q| (0, q)).collect(),
+            warmup: (0..p).map(|s| (p - s - 1).min(m)).collect(),
+            cap: (0..p).map(|s| (p - s).min(m)).collect(),
+            split_bwd: true,
+            w_backlog: Some(p),
+        }),
+        ScheduleKind::ZbH2 => greedy_items(&GreedySpec {
+            num_stages: p,
+            num_micro: m,
+            num_chunks: 1,
+            fseq: (0..m).map(|q| (0, q)).collect(),
+            bseq: (0..m).map(|q| (0, q)).collect(),
+            warmup: (0..p).map(|s| (2 * (p - s) - 1).min(m)).collect(),
+            cap: (0..p).map(|s| (2 * (p - s) - 1).min(m).max(1)).collect(),
+            split_bwd: true,
+            w_backlog: Some(p),
+        }),
+        ScheduleKind::ZbV => match zbv_items(p, m) {
+            Some(items) => items,
+            None => zbv_fallback_phase_order(p, m),
+        },
+        ScheduleKind::Synth { .. } => {
+            panic!("synthesized schedules have no legacy generator")
+        }
+    }
+}
+
+/// True when the old interleaved constructor would take its greedy
+/// fallback at this shape (the cells where the new rule is allowed to
+/// differ from — i.e. beat — the oracle).
+pub fn interleaved_used_fallback(p: usize, m: usize, v: usize) -> bool {
+    v > 1 && validate_items(&closed_form(p, m, v), p, m, v, false, Placement::Interleaved).is_err()
+}
+
+fn gpipe_items(m: usize) -> Vec<WorkItem> {
+    let mut items = Vec::with_capacity(2 * m);
+    for q in 0..m {
+        items.push(WorkItem::fwd(q, 0));
+    }
+    for q in (0..m).rev() {
+        items.push(WorkItem::bwd(q, 0));
+    }
+    items
+}
+
+fn onefoneb_items(stage: usize, num_stages: usize, num_micro: usize) -> Vec<WorkItem> {
+    assert!(stage < num_stages);
+    let warmup = (num_stages - stage - 1).min(num_micro);
+    let mut items = Vec::with_capacity(2 * num_micro);
+    for m in 0..warmup {
+        items.push(WorkItem::fwd(m, 0));
+    }
+    for k in 0..num_micro - warmup {
+        items.push(WorkItem::fwd(warmup + k, 0));
+        items.push(WorkItem::bwd(k, 0));
+    }
+    for m in num_micro - warmup..num_micro {
+        items.push(WorkItem::bwd(m, 0));
+    }
+    items
+}
+
+/// Global forward / backward launch orders shared by every stage:
+/// rounds of `r` microbatches, forward chunks ascending, backward chunks
+/// descending.
+fn launch_orders(m: usize, v: usize, r: usize) -> (Vec<(usize, usize)>, Vec<(usize, usize)>) {
+    let mut fseq = Vec::with_capacity(m * v);
+    let mut bseq = Vec::with_capacity(m * v);
+    let mut start = 0;
+    while start < m {
+        let end = m.min(start + r);
+        for c in 0..v {
+            for q in start..end {
+                fseq.push((c, q));
+            }
+        }
+        for c in (0..v).rev() {
+            for q in start..end {
+                bseq.push((c, q));
+            }
+        }
+        start = end;
+    }
+    (fseq, bseq)
+}
+
+/// Megatron's closed-form order: per-stage warmup, strict 1F1B
+/// alternation over the launch sequences, backward cool-down.
+fn closed_form(p: usize, m: usize, v: usize) -> Vec<Vec<WorkItem>> {
+    let r = p.min(m);
+    let (fseq, bseq) = launch_orders(m, v, r);
+    let total = m * v;
+    (0..p)
+        .map(|s| {
+            let w = ((v - 1) * r + 2 * (p - s - 1)).min(total);
+            let mut items = Vec::with_capacity(2 * total);
+            for &(c, q) in &fseq[..w] {
+                items.push(WorkItem::fwd(q, c));
+            }
+            for k in 0..total - w {
+                let (c, q) = fseq[w + k];
+                items.push(WorkItem::fwd(q, c));
+                let (c, q) = bseq[k];
+                items.push(WorkItem::bwd(q, c));
+            }
+            for &(c, q) in &bseq[total - w..] {
+                items.push(WorkItem::bwd(q, c));
+            }
+            items
+        })
+        .collect()
+}
+
+struct GreedySpec {
+    num_stages: usize,
+    num_micro: usize,
+    num_chunks: usize,
+    fseq: Vec<(usize, usize)>,
+    bseq: Vec<(usize, usize)>,
+    warmup: Vec<usize>,
+    cap: Vec<usize>,
+    split_bwd: bool,
+    w_backlog: Option<usize>,
+}
+
+/// The old single-queue unit-time list scheduler, *including* its silent
+/// degrade to the phase order on a wedge (the new
+/// [`super::solver::wave_items`] reports the wedge instead).
+fn greedy_items(spec: &GreedySpec) -> Vec<Vec<WorkItem>> {
+    let p = spec.num_stages;
+    let m = spec.num_micro;
+    let v = spec.num_chunks;
+    let total = m * v;
+    assert_eq!(spec.fseq.len(), total);
+    assert_eq!(spec.bseq.len(), total);
+    let idx = |c: usize, mb: usize| c * m + mb;
+
+    let mut f_done: Vec<Vec<Option<usize>>> = vec![vec![None; total]; p];
+    let mut b_done: Vec<Vec<Option<usize>>> = vec![vec![None; total]; p];
+    let mut fi = vec![0usize; p];
+    let mut bi = vec![0usize; p];
+    let mut wi = vec![0usize; p];
+    let mut order: Vec<Vec<WorkItem>> = vec![Vec::with_capacity(3 * total); p];
+
+    let per_stage = total * if spec.split_bwd { 3 } else { 2 };
+    let goal = p * per_stage;
+    let mut executed = 0usize;
+    let max_ticks = 4 * (goal + p + 8);
+
+    let done_by = |slot: &Option<usize>, tick: usize| matches!(slot, Some(t) if *t <= tick);
+
+    for tick in 0..max_ticks {
+        if executed == goal {
+            break;
+        }
+        let mut completions: Vec<(usize, WorkItem)> = Vec::new();
+        for s in 0..p {
+            if order[s].len() == per_stage {
+                continue;
+            }
+            let f_ready = fi[s] < total && {
+                let (c, mb) = spec.fseq[fi[s]];
+                match fwd_upstream(s, c, p) {
+                    None => true,
+                    Some((s2, c2)) => done_by(&f_done[s2][idx(c2, mb)], tick),
+                }
+            };
+            let b_ready = bi[s] < total && {
+                let (c, mb) = spec.bseq[bi[s]];
+                match bwd_upstream(s, c, p, v) {
+                    None => done_by(&f_done[s][idx(c, mb)], tick),
+                    Some((s2, c2)) => done_by(&b_done[s2][idx(c2, mb)], tick),
+                }
+            };
+            let inflight = fi[s] - bi[s];
+            let w_avail = spec.split_bwd && wi[s] < bi[s];
+            let w_pressure =
+                w_avail && matches!(spec.w_backlog, Some(bound) if bi[s] - wi[s] >= bound);
+
+            let choice = if fi[s] < spec.warmup[s] && f_ready {
+                Some(Choice::F)
+            } else if b_ready {
+                Some(Choice::B)
+            } else if w_pressure {
+                Some(Choice::W)
+            } else if f_ready && inflight < spec.cap[s] {
+                Some(Choice::F)
+            } else if w_avail {
+                Some(Choice::W)
+            } else {
+                None
+            };
+
+            match choice {
+                Some(Choice::F) => {
+                    let (c, mb) = spec.fseq[fi[s]];
+                    fi[s] += 1;
+                    order[s].push(WorkItem::fwd(mb, c));
+                    completions.push((s, WorkItem::fwd(mb, c)));
+                }
+                Some(Choice::B) => {
+                    let (c, mb) = spec.bseq[bi[s]];
+                    bi[s] += 1;
+                    order[s].push(WorkItem::bwd(mb, c));
+                    completions.push((s, WorkItem::bwd(mb, c)));
+                }
+                Some(Choice::W) => {
+                    let (c, mb) = spec.bseq[wi[s]];
+                    wi[s] += 1;
+                    order[s].push(WorkItem::wgrad(mb, c));
+                }
+                None => {}
+            }
+        }
+        let now: usize = order.iter().map(|o| o.len()).sum();
+        if now == executed {
+            return greedy_fallback_phase_order(spec);
+        }
+        for (s, it) in &completions {
+            let slot = idx(it.chunk, it.micro);
+            match it.kind {
+                super::WorkKind::Fwd => f_done[*s][slot] = Some(tick + 1),
+                super::WorkKind::Bwd => b_done[*s][slot] = Some(tick + 1),
+                super::WorkKind::WGrad => {}
+            }
+        }
+        executed = now;
+    }
+
+    if executed != goal {
+        return greedy_fallback_phase_order(spec);
+    }
+    order
+}
+
+enum Choice {
+    F,
+    B,
+    W,
+}
+
+fn greedy_fallback_phase_order(spec: &GreedySpec) -> Vec<Vec<WorkItem>> {
+    let mut one = Vec::with_capacity(spec.fseq.len() * 3);
+    for &(c, mb) in &spec.fseq {
+        one.push(WorkItem::fwd(mb, c));
+    }
+    for &(c, mb) in &spec.bseq {
+        one.push(WorkItem::bwd(mb, c));
+        if spec.split_bwd {
+            one.push(WorkItem::wgrad(mb, c));
+        }
+    }
+    vec![one; spec.num_stages]
+}
+
+/// The old ZB-V per-chunk-queue unit-time list scheduler.
+fn zbv_items(p: usize, m: usize) -> Option<Vec<Vec<WorkItem>>> {
+    const V: usize = 2;
+    let total = V * m;
+    let idx = |c: usize, mb: usize| c * m + mb;
+    let c0cap: Vec<usize> = (0..p).map(|s| (2 * p - 1 - s).min(m).max(1)).collect();
+    let w_backlog = 2 * p;
+
+    let mut f_done: Vec<Vec<Option<usize>>> = vec![vec![None; total]; p];
+    let mut b_done: Vec<Vec<Option<usize>>> = vec![vec![None; total]; p];
+    let mut fi = vec![[0usize; V]; p];
+    let mut bi = vec![[0usize; V]; p];
+    let mut wdone = vec![[0usize; V]; p];
+    let mut wq: Vec<Vec<(usize, usize)>> = vec![Vec::new(); p];
+    let mut order: Vec<Vec<WorkItem>> = vec![Vec::with_capacity(3 * total); p];
+
+    let per_stage = 3 * total;
+    let goal = p * per_stage;
+    let mut executed = 0usize;
+    let max_ticks = 4 * (goal + p + 8);
+
+    let done_by = |slot: &Option<usize>, tick: usize| matches!(slot, Some(t) if *t <= tick);
+
+    for tick in 0..max_ticks {
+        if executed == goal {
+            break;
+        }
+        let mut completions: Vec<(usize, WorkItem)> = Vec::new();
+        for s in 0..p {
+            if order[s].len() == per_stage {
+                continue;
+            }
+            let f_ready = |c: usize| {
+                fi[s][c] < m && {
+                    let q = fi[s][c];
+                    match fwd_upstream_of(Placement::VShape, s, c, p) {
+                        None => true,
+                        Some((s2, c2)) => done_by(&f_done[s2][idx(c2, q)], tick),
+                    }
+                }
+            };
+            let b_ready = |c: usize| {
+                bi[s][c] < m && {
+                    let q = bi[s][c];
+                    match bwd_upstream_of(Placement::VShape, s, c, p, V) {
+                        None => done_by(&f_done[s][idx(c, q)], tick),
+                        Some((s2, c2)) => done_by(&b_done[s2][idx(c2, q)], tick),
+                    }
+                }
+            };
+
+            let choice = if b_ready(1) {
+                Some((Choice::B, 1))
+            } else if b_ready(0) {
+                Some((Choice::B, 0))
+            } else if !wq[s].is_empty() && wq[s].len() >= w_backlog {
+                Some((Choice::W, 0))
+            } else if f_ready(1) {
+                Some((Choice::F, 1))
+            } else if f_ready(0) && fi[s][0] - wdone[s][0] < c0cap[s] {
+                Some((Choice::F, 0))
+            } else if !wq[s].is_empty() {
+                Some((Choice::W, 0))
+            } else {
+                None
+            };
+
+            match choice {
+                Some((Choice::F, c)) => {
+                    let q = fi[s][c];
+                    fi[s][c] += 1;
+                    order[s].push(WorkItem::fwd(q, c));
+                    completions.push((s, WorkItem::fwd(q, c)));
+                }
+                Some((Choice::B, c)) => {
+                    let q = bi[s][c];
+                    bi[s][c] += 1;
+                    order[s].push(WorkItem::bwd(q, c));
+                    completions.push((s, WorkItem::bwd(q, c)));
+                    wq[s].push((c, q));
+                }
+                Some((Choice::W, _)) => {
+                    let (c, q) = wq[s].remove(0);
+                    wdone[s][c] += 1;
+                    order[s].push(WorkItem::wgrad(q, c));
+                }
+                None => {}
+            }
+        }
+        let now: usize = order.iter().map(|o| o.len()).sum();
+        if now == executed {
+            return None;
+        }
+        for (s, it) in &completions {
+            let slot = idx(it.chunk, it.micro);
+            match it.kind {
+                super::WorkKind::Fwd => f_done[*s][slot] = Some(tick + 1),
+                super::WorkKind::Bwd => b_done[*s][slot] = Some(tick + 1),
+                super::WorkKind::WGrad => {}
+            }
+        }
+        executed = now;
+    }
+
+    if executed != goal {
+        return None;
+    }
+    Some(order)
+}
+
+fn zbv_fallback_phase_order(p: usize, m: usize) -> Vec<Vec<WorkItem>> {
+    let mut one = Vec::with_capacity(6 * m);
+    for c in 0..2 {
+        for q in 0..m {
+            one.push(WorkItem::fwd(q, c));
+        }
+    }
+    for c in [1usize, 0] {
+        for q in 0..m {
+            one.push(WorkItem::bwd(q, c));
+            one.push(WorkItem::wgrad(q, c));
+        }
+    }
+    vec![one; p]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_orders_are_what_the_old_constructors_produced() {
+        // Spot anchors frozen from the pre-refactor implementation.
+        let onefoneb = legacy_items(ScheduleKind::OneFOneB, 4, 5);
+        assert_eq!(onefoneb[3][..4].to_vec(), vec![
+            WorkItem::fwd(0, 0),
+            WorkItem::bwd(0, 0),
+            WorkItem::fwd(1, 0),
+            WorkItem::bwd(1, 0),
+        ]);
+        let gpipe = legacy_items(ScheduleKind::GPipe, 3, 4);
+        assert_eq!(gpipe[1][4], WorkItem::bwd(3, 0));
+        // Divisible interleaved keeps the Megatron closed form...
+        assert!(!interleaved_used_fallback(4, 8, 2));
+        // ...and the known-ragged cell still flags the old fallback.
+        assert!(interleaved_used_fallback(6, 8, 2));
+    }
+
+    #[test]
+    fn oracle_zbv_covers_the_grid() {
+        for p in [1usize, 2, 4] {
+            for m in [1usize, 3, 8] {
+                let items = legacy_items(ScheduleKind::ZbV, p, m);
+                validate_items(&items, p, m, 2, true, Placement::VShape)
+                    .unwrap_or_else(|e| panic!("p={p} m={m}: {e}"));
+            }
+        }
+    }
+}

@@ -1,28 +1,39 @@
-//! Pluggable pipeline-parallel training schedules.
+//! Pluggable pipeline-parallel training schedules — as *data*.
 //!
 //! The paper evaluates Lynx under 1F1B only; this subsystem generalises
-//! the simulator to any pipeline schedule so recomputation overlap can be
-//! studied against different bubble structures ("Pipeline Parallelism
-//! with Controllable Memory" shows schedule choice moves both the bubbles
-//! and the peak activation memory):
+//! the simulator to any pipeline schedule so recomputation overlap can
+//! be studied against different bubble structures. Following "Pipeline
+//! Parallelism with Controllable Memory" (Qi et al.), every schedule
+//! here is one object — a [`lattice::BlockLattice`]: a repeating F/B/W
+//! building block with per-stage offsets, compiled on demand into the
+//! per-stage [`WorkItem`] streams the engine executes. The six named
+//! schedules are lattice *instances*, not six code paths:
 //!
-//! * [`GPipe`] — all forwards, then all backwards (maximal memory,
-//!   bubbles concentrated at the phase boundary);
-//! * [`OneFOneB`] — classic 1F1B (ported from the old
-//!   `sim::schedule`), warmup / steady / cool-down;
-//! * [`Interleaved1F1B`] — Megatron-style interleaved 1F1B over `v`
-//!   virtual model chunks per stage (smaller warm-up bubbles, more
-//!   in-flight chunk activations);
-//! * [`ZbH1`] — a zero-bubble-style schedule that splits backward into
-//!   B (input-grad, on the critical dataflow path) and W (weight-grad,
-//!   deferrable) items, filling cool-down stalls with W work;
-//! * [`ZbH2`] — the higher-memory zero-bubble variant: extra in-flight
-//!   forwards fill the warm-up bubble, trading ~2× stage-0 activation
-//!   memory for bubble (Qi et al., arXiv:2405.15362);
-//! * [`ZbV`] — wave-style split-backward schedule over a **V-shaped**
-//!   chunk placement (each stage hosts one descending and one ascending
-//!   chunk; the first stage also computes the loss), equalising peak
-//!   memory across stages.
+//! * [`GPipe`] — `F^m B^m` (maximal memory, one boundary bubble);
+//! * [`OneFOneB`] — classic 1F1B, `F^w (FB)^{m−w} B^w`;
+//! * [`Interleaved1F1B`] — Megatron interleaving over `v` virtual
+//!   chunks; ragged shapes (`m % p ≠ 0`) are solved by pad-and-delete
+//!   instead of the old greedy fallback;
+//! * [`ZbH1`] / [`ZbH2`] — zero-bubble split-backward schedules, the
+//!   closed template `F^a (BF)^{p−1} B (WFB)^n (WWB)^g (WB)^h W^{p−g}`
+//!   in the regular regime and the wave solver below it;
+//! * [`ZbV`] — the V-placement wave ([`Placement::VShape`]), equalising
+//!   peak memory across stages.
+//!
+//! Closed rules generate stage streams **lazily** — a P=2048 pipeline
+//! answers `stage_items(7)` in O(items of stage 7). Shapes with no
+//! closed rule run a unit-time wave solver once ([`solver`]) and the
+//! result is run-length lifted back into blocks. Which path produced a
+//! schedule is its [`SynthesisOutcome`] (closed / solved / fallback),
+//! surfaced uniformly in run reports — replacing the old per-kind
+//! `used_greedy_fallback` / `used_phase_fallback` flags.
+//!
+//! Because the schedule space is data, it is also *searchable*:
+//! [`synth::Synthesized`] (CLI `--schedule synth`) takes a per-stage
+//! activation budget — priced by the exact W-residual replay
+//! [`peak_inflight_replay_exact`] — and sweeps the V-family's knobs for
+//! the minimum-bubble lattice that fits, recovering V-Half-class
+//! schedules (half of 1F1B's memory at ≤ 1F1B's bubble) as witnesses.
 //!
 //! A schedule is a [`PipelineSchedule`]: a per-stage work order of
 //! [`WorkItem`]s (microbatch × model chunk × F/B/W kind), a replayable
@@ -41,27 +52,35 @@
 //! inside the collectives rather than assumed hidden.
 //!
 //! Cross-stage dependencies follow the schedule's [`Placement`] of model
-//! chunks onto *virtual stages* ([`fwd_upstream_of`] /
-//! [`bwd_upstream_of`]): forwards flow up the virtual chain, input-grad
-//! backwards flow back down it, and W depends only on its own stage's B.
-//! [`Placement::Interleaved`] is the Megatron mapping
+//! chunks onto *virtual stages*, exposed on the trait as
+//! [`PipelineSchedule::fwd_upstream`] / [`PipelineSchedule::bwd_upstream`]
+//! (the engine derives its `DepKey` graph from these, not from
+//! free-standing per-placement functions): forwards flow up the virtual
+//! chain, input-grad backwards flow back down it, and W depends only on
+//! its own stage's B. [`Placement::Interleaved`] is the Megatron mapping
 //! `vs = chunk * num_stages + stage`; [`Placement::VShape`] is ZB-V's
 //! down-then-up mapping.
+//!
+//! The retired hand-written generators survive behind the
+//! `legacy-oracle` feature ([`legacy`]) purely as test oracles: the
+//! property grid asserts lattice-derived items are item-for-item equal
+//! to them across kinds × shapes.
 
-pub mod gpipe;
-pub mod greedy;
-pub mod interleaved;
-pub mod onefoneb;
-pub mod zbh1;
-pub mod zbh2;
-pub mod zbv;
+pub mod kinds;
+pub mod lattice;
+#[cfg(feature = "legacy-oracle")]
+pub mod legacy;
+pub mod solver;
+pub mod synth;
 
-pub use gpipe::GPipe;
-pub use interleaved::Interleaved1F1B;
-pub use onefoneb::{cooldown_start, onefoneb_items, OneFOneB};
-pub use zbh1::ZbH1;
-pub use zbh2::ZbH2;
-pub use zbv::ZbV;
+pub use kinds::{cooldown_start, onefoneb_items, GPipe, Interleaved1F1B, OneFOneB, ZbH1, ZbH2, ZbV};
+pub use lattice::{zb_shape_is_closed, Block, BlockLattice, ClosedRule, MicroStream, StageLattice};
+pub use synth::{onefoneb_reference, peak_microbatches, unit_makespan, SynthPoint, Synthesized};
+
+/// Fraction of the combined backward attributed to the input-grad (B)
+/// item in split-backward schedules; dX and dW each cost about one
+/// forward's FLOPs in a transformer block, so the split is even.
+pub const B_FRACTION: f64 = 0.5;
 
 /// Kind of one sub-segment a [`WorkItem`] expands into: a compute slice
 /// (occupies the stage's compute stream) or a TP-collective slice
@@ -152,6 +171,47 @@ impl WorkItem {
     }
 }
 
+/// How a schedule's item streams were produced. One uniform provenance
+/// signal across every kind (it replaces the old `used_greedy_fallback`
+/// / `used_phase_fallback` flags) — surfaced in `lynx.report.v1` run
+/// reports and the CLI's once-per-invocation warning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthesisOutcome {
+    /// Closed-form block rule; streams derived lazily per stage.
+    Closed,
+    /// A wave solver (or pad-and-delete lift) produced a *tight* order
+    /// for a shape outside the closed regime. Normal for ZB-V, ragged
+    /// interleaved, small-m zero-bubble shapes, and `--schedule synth`.
+    Solved,
+    /// The tight paths failed and a safe degraded order was substituted
+    /// (phase order, or an over-budget synthesis). The schedule still
+    /// executes, but with a very different profile than its name
+    /// suggests — the CLI warns once.
+    Fallback(&'static str),
+}
+
+impl SynthesisOutcome {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SynthesisOutcome::Closed => "closed",
+            SynthesisOutcome::Solved => "solved",
+            SynthesisOutcome::Fallback(_) => "fallback",
+        }
+    }
+
+    pub fn is_fallback(&self) -> bool {
+        matches!(self, SynthesisOutcome::Fallback(_))
+    }
+
+    /// The reason string for fallbacks (`None` otherwise).
+    pub fn fallback_reason(&self) -> Option<&'static str> {
+        match self {
+            SynthesisOutcome::Fallback(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
 /// Names a pipeline schedule across config, CLI and benches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScheduleKind {
@@ -162,11 +222,31 @@ pub enum ScheduleKind {
     ZbH1,
     ZbH2,
     ZbV,
+    /// Budget-driven synthesis ([`Synthesized`]): the minimum-bubble
+    /// V-family lattice whose exact peak fits `budget_pct` percent of
+    /// 1F1B's peak activation memory.
+    Synth { budget_pct: u32 },
 }
 
+/// Every classic kind with default parameters, for sweeps ([`ScheduleKind::all`]).
+/// `Synth` is excluded: it is parameterised by a budget, not a fixed member.
+const ALL_KINDS: &[ScheduleKind] = &[
+    ScheduleKind::GPipe,
+    ScheduleKind::OneFOneB,
+    ScheduleKind::Interleaved { chunks: 2 },
+    ScheduleKind::ZbH1,
+    ScheduleKind::ZbH2,
+    ScheduleKind::ZbV,
+];
+
 impl ScheduleKind {
-    /// Parse a CLI name; `chunks` applies to `interleaved`.
+    /// Parse a CLI name; `chunks` applies to `interleaved`. `synth`
+    /// defaults to a half-of-1F1B budget; `synth:NN` sets NN percent.
     pub fn parse(s: &str, chunks: usize) -> Option<ScheduleKind> {
+        if let Some(pct) = s.strip_prefix("synth:") {
+            let pct: u32 = pct.parse().ok()?;
+            return (pct >= 1).then_some(ScheduleKind::Synth { budget_pct: pct });
+        }
         Some(match s {
             "gpipe" => ScheduleKind::GPipe,
             "1f1b" => ScheduleKind::OneFOneB,
@@ -174,6 +254,7 @@ impl ScheduleKind {
             "zbh1" => ScheduleKind::ZbH1,
             "zbh2" => ScheduleKind::ZbH2,
             "zbv" => ScheduleKind::ZbV,
+            "synth" => ScheduleKind::Synth { budget_pct: 50 },
             _ => return None,
         })
     }
@@ -186,19 +267,14 @@ impl ScheduleKind {
             ScheduleKind::ZbH1 => "zbh1",
             ScheduleKind::ZbH2 => "zbh2",
             ScheduleKind::ZbV => "zbv",
+            ScheduleKind::Synth { .. } => "synth",
         }
     }
 
-    /// Every kind with default parameters, for sweeps.
-    pub fn all() -> Vec<ScheduleKind> {
-        vec![
-            ScheduleKind::GPipe,
-            ScheduleKind::OneFOneB,
-            ScheduleKind::Interleaved { chunks: 2 },
-            ScheduleKind::ZbH1,
-            ScheduleKind::ZbH2,
-            ScheduleKind::ZbV,
-        ]
+    /// Every classic kind with default parameters, for sweeps. Static —
+    /// no allocation at call sites.
+    pub fn all() -> &'static [ScheduleKind] {
+        ALL_KINDS
     }
 
     /// Instantiate the schedule for a pipeline shape.
@@ -212,6 +288,9 @@ impl ScheduleKind {
             ScheduleKind::ZbH1 => Box::new(ZbH1::new(num_stages, num_micro)),
             ScheduleKind::ZbH2 => Box::new(ZbH2::new(num_stages, num_micro)),
             ScheduleKind::ZbV => Box::new(ZbV::new(num_stages, num_micro)),
+            ScheduleKind::Synth { budget_pct } => {
+                Box::new(Synthesized::new(num_stages, num_micro, budget_pct))
+            }
         }
     }
 }
@@ -249,6 +328,27 @@ pub trait PipelineSchedule: Send + Sync {
     /// How this schedule maps model chunks onto virtual stages.
     fn placement(&self) -> Placement {
         Placement::Interleaved
+    }
+
+    /// How this schedule's item streams were produced (see
+    /// [`SynthesisOutcome`]). Closed-form kinds keep the default.
+    fn synthesis_outcome(&self) -> SynthesisOutcome {
+        SynthesisOutcome::Closed
+    }
+
+    /// The `(stage, chunk)` whose forward output feeds
+    /// `F(stage, chunk)`; `None` for the first virtual stage. The engine
+    /// derives its dependency graph from this — schedules with exotic
+    /// placements override `placement()` (or this method) rather than
+    /// patching the engine.
+    fn fwd_upstream(&self, stage: usize, chunk: usize) -> Option<(usize, usize)> {
+        fwd_upstream_of(self.placement(), stage, chunk, self.num_stages())
+    }
+
+    /// The `(stage, chunk)` whose input-grad feeds `B(stage, chunk)`;
+    /// `None` for the last virtual stage (its dy comes from the loss).
+    fn bwd_upstream(&self, stage: usize, chunk: usize) -> Option<(usize, usize)> {
+        bwd_upstream_of(self.placement(), stage, chunk, self.num_stages(), self.num_chunks())
     }
 
     /// Peak in-flight activation units on `stage` under the **B-freed
@@ -551,7 +651,7 @@ mod tests {
 
     #[test]
     fn kind_parse_roundtrip() {
-        for k in ScheduleKind::all() {
+        for &k in ScheduleKind::all() {
             assert_eq!(ScheduleKind::parse(k.label(), 2), Some(k));
         }
         assert_eq!(ScheduleKind::parse("nope", 2), None);
@@ -565,6 +665,19 @@ mod tests {
         );
         // chunks only applies to interleaved
         assert_eq!(ScheduleKind::parse("1f1b", 3), Some(ScheduleKind::OneFOneB));
+    }
+
+    #[test]
+    fn parse_synth_budgets() {
+        assert_eq!(ScheduleKind::parse("synth", 2), Some(ScheduleKind::Synth { budget_pct: 50 }));
+        assert_eq!(
+            ScheduleKind::parse("synth:33", 2),
+            Some(ScheduleKind::Synth { budget_pct: 33 })
+        );
+        assert_eq!(ScheduleKind::parse("synth:0", 2), None);
+        assert_eq!(ScheduleKind::parse("synth:x", 2), None);
+        // synth is not part of the fixed sweep set.
+        assert!(!ScheduleKind::all().iter().any(|k| matches!(k, ScheduleKind::Synth { .. })));
     }
 
     #[test]
@@ -665,11 +778,41 @@ mod tests {
     }
 
     #[test]
+    fn trait_upstreams_follow_the_placement() {
+        // The engine consumes the trait methods; they must agree with the
+        // placement functions for both placements.
+        let inter = Interleaved1F1B::new(4, 8, 2);
+        let v = ZbV::new(4, 8);
+        for s in 0..4 {
+            for c in 0..2 {
+                assert_eq!(inter.fwd_upstream(s, c), fwd_upstream(s, c, 4));
+                assert_eq!(inter.bwd_upstream(s, c), bwd_upstream(s, c, 4, 2));
+                assert_eq!(v.fwd_upstream(s, c), fwd_upstream_of(Placement::VShape, s, c, 4));
+                assert_eq!(v.bwd_upstream(s, c), bwd_upstream_of(Placement::VShape, s, c, 4, 2));
+            }
+        }
+    }
+
+    #[test]
     fn all_kinds_build_and_validate() {
-        for k in ScheduleKind::all() {
+        for &k in ScheduleKind::all() {
             let sched = k.build(4, 8);
             validate_executable(sched.as_ref())
                 .unwrap_or_else(|e| panic!("{}: {e}", k.label()));
         }
+        // The synthesized kind builds through the same entry point.
+        let synth = ScheduleKind::Synth { budget_pct: 50 }.build(4, 8);
+        validate_executable(synth.as_ref()).unwrap();
+    }
+
+    #[test]
+    fn outcome_labels_are_stable() {
+        // Report consumers key off these strings.
+        assert_eq!(SynthesisOutcome::Closed.label(), "closed");
+        assert_eq!(SynthesisOutcome::Solved.label(), "solved");
+        assert_eq!(SynthesisOutcome::Fallback("x").label(), "fallback");
+        assert_eq!(SynthesisOutcome::Fallback("x").fallback_reason(), Some("x"));
+        assert!(SynthesisOutcome::Fallback("x").is_fallback());
+        assert!(!SynthesisOutcome::Solved.is_fallback());
     }
 }

@@ -1,0 +1,513 @@
+//! Unit-time wave solvers: the lattice's escape hatch for shapes with
+//! no closed block rule.
+//!
+//! Closed rules (see [`super::lattice`]) cover the regular regimes, but
+//! boundary shapes — small `m` against the zero-bubble warmup, the
+//! ZB-V wave, synthesized schedules — are produced by *executing* the
+//! schedule once under unit item durations: every stage consumes its
+//! launch sequences in order, choosing the next item each tick by a
+//! preference rule, and only when the item's cross-stage dependencies
+//! have completed. The recorded per-stage order is feasible by
+//! construction — an order with a valid unit-time execution is acyclic
+//! against the dependency DAG, so the real-time engine converges for
+//! any positive durations. The result is then lifted back into a
+//! lattice ([`super::lattice::BlockLattice::lift_items`]).
+//!
+//! Solvers return `None` when the preference rules wedge (capacity
+//! rules can in principle starve progress); the caller decides whether
+//! to substitute a safe phase order and reports that decision as a
+//! [`super::SynthesisOutcome::Fallback`].
+
+use super::{bwd_upstream, bwd_upstream_of, fwd_upstream, fwd_upstream_of, Placement, WorkItem};
+
+/// Specification for the single-queue wave solver ([`wave_items`]).
+/// Dependencies follow the Megatron interleaved chunk placement; the
+/// V-shaped placement uses the per-chunk-queue solver ([`v_wave_items`]).
+pub(crate) struct WaveSpec {
+    pub num_stages: usize,
+    pub num_micro: usize,
+    pub num_chunks: usize,
+    /// Global forward launch order, identical across stages: (chunk, micro).
+    pub fseq: Vec<(usize, usize)>,
+    /// Global backward launch order, identical across stages.
+    pub bseq: Vec<(usize, usize)>,
+    /// Per-stage warmup: forwards issued before the first backward attempt.
+    pub warmup: Vec<usize>,
+    /// Per-stage cap on in-flight units (forwards done − backwards done);
+    /// bounds activation memory once warmup completes.
+    pub cap: Vec<usize>,
+    /// Emit a W (weight-grad) item for every backward (ZB-style split).
+    pub split_bwd: bool,
+    /// Drain a deferred W before admitting a new forward once the
+    /// backlog of B-done-but-W-pending microbatches reaches this bound
+    /// (`None` = defer W freely into stalls). Bounds the W-residual
+    /// memory the exact in-flight accounting prices.
+    pub w_backlog: Option<usize>,
+}
+
+enum Choice {
+    F,
+    B,
+    W,
+}
+
+/// Run the single-queue wave. `None` = the preference rules wedged.
+pub(crate) fn wave_items(spec: &WaveSpec) -> Option<Vec<Vec<WorkItem>>> {
+    let p = spec.num_stages;
+    let m = spec.num_micro;
+    let v = spec.num_chunks;
+    let total = m * v;
+    assert_eq!(spec.fseq.len(), total);
+    assert_eq!(spec.bseq.len(), total);
+    let idx = |c: usize, mb: usize| c * m + mb;
+
+    // Completion tick (exclusive) per (stage, chunk*m+micro).
+    let mut f_done: Vec<Vec<Option<usize>>> = vec![vec![None; total]; p];
+    let mut b_done: Vec<Vec<Option<usize>>> = vec![vec![None; total]; p];
+    let mut fi = vec![0usize; p]; // next fseq index
+    let mut bi = vec![0usize; p]; // next bseq index
+    let mut wi = vec![0usize; p]; // W items emitted (consume bseq[0..bi])
+    let mut order: Vec<Vec<WorkItem>> = vec![Vec::with_capacity(3 * total); p];
+
+    let per_stage = total * if spec.split_bwd { 3 } else { 2 };
+    let goal = p * per_stage;
+    let mut executed = 0usize;
+    // Every tick at least one stage progresses in a feasible schedule;
+    // the bound is generous slack over the serial length.
+    let max_ticks = 4 * (goal + p + 8);
+
+    let done_by = |slot: &Option<usize>, tick: usize| matches!(slot, Some(t) if *t <= tick);
+
+    for tick in 0..max_ticks {
+        if executed == goal {
+            break;
+        }
+        // Decisions are made against completions from *earlier* ticks;
+        // mutations are buffered per tick.
+        let mut completions: Vec<(usize, WorkItem)> = Vec::new();
+        for s in 0..p {
+            if order[s].len() == per_stage {
+                continue;
+            }
+            let f_ready = fi[s] < total && {
+                let (c, mb) = spec.fseq[fi[s]];
+                match fwd_upstream(s, c, p) {
+                    None => true,
+                    Some((s2, c2)) => done_by(&f_done[s2][idx(c2, mb)], tick),
+                }
+            };
+            let b_ready = bi[s] < total && {
+                let (c, mb) = spec.bseq[bi[s]];
+                match bwd_upstream(s, c, p, v) {
+                    None => done_by(&f_done[s][idx(c, mb)], tick),
+                    Some((s2, c2)) => done_by(&b_done[s2][idx(c2, mb)], tick),
+                }
+            };
+            let inflight = fi[s] - bi[s];
+            let w_avail = spec.split_bwd && wi[s] < bi[s];
+            let w_pressure =
+                w_avail && matches!(spec.w_backlog, Some(bound) if bi[s] - wi[s] >= bound);
+
+            let choice = if fi[s] < spec.warmup[s] && f_ready {
+                // Warmup: fill the pipeline.
+                Some(Choice::F)
+            } else if b_ready {
+                // Steady/cool-down: backwards drive the critical path.
+                Some(Choice::B)
+            } else if w_pressure {
+                // Deferred weight-grad backlog at its bound: drain it
+                // before admitting more forwards.
+                Some(Choice::W)
+            } else if f_ready && inflight < spec.cap[s] {
+                Some(Choice::F)
+            } else if w_avail {
+                // Fill the stall with deferred weight-grad work.
+                Some(Choice::W)
+            } else {
+                None
+            };
+
+            match choice {
+                Some(Choice::F) => {
+                    let (c, mb) = spec.fseq[fi[s]];
+                    fi[s] += 1;
+                    order[s].push(WorkItem::fwd(mb, c));
+                    completions.push((s, WorkItem::fwd(mb, c)));
+                }
+                Some(Choice::B) => {
+                    let (c, mb) = spec.bseq[bi[s]];
+                    bi[s] += 1;
+                    order[s].push(WorkItem::bwd(mb, c));
+                    completions.push((s, WorkItem::bwd(mb, c)));
+                }
+                Some(Choice::W) => {
+                    let (c, mb) = spec.bseq[wi[s]];
+                    wi[s] += 1;
+                    order[s].push(WorkItem::wgrad(mb, c));
+                }
+                None => {}
+            }
+        }
+        let now: usize = order.iter().map(|o| o.len()).sum();
+        if now == executed {
+            // Nothing moved this tick. Readiness only depends on already
+            // applied completions and nothing is in flight under unit
+            // durations, so no future tick can differ: wedged.
+            return None;
+        }
+        for (s, it) in &completions {
+            let slot = idx(it.chunk, it.micro);
+            match it.kind {
+                super::WorkKind::Fwd => f_done[*s][slot] = Some(tick + 1),
+                super::WorkKind::Bwd => b_done[*s][slot] = Some(tick + 1),
+                super::WorkKind::WGrad => {}
+            }
+        }
+        executed = now;
+    }
+
+    if executed != goal {
+        return None;
+    }
+    Some(order)
+}
+
+/// Trivially-safe order for the interleaved placement: all forwards in
+/// launch order, then each backward followed by its W. Identical across
+/// stages, so every dependency points at an earlier-or-equal launch
+/// position upstream — acyclic.
+pub(crate) fn fallback_phase_order(spec: &WaveSpec) -> Vec<Vec<WorkItem>> {
+    let mut one = Vec::with_capacity(spec.fseq.len() * 3);
+    for &(c, mb) in &spec.fseq {
+        one.push(WorkItem::fwd(mb, c));
+    }
+    for &(c, mb) in &spec.bseq {
+        one.push(WorkItem::bwd(mb, c));
+        if spec.split_bwd {
+            one.push(WorkItem::wgrad(mb, c));
+        }
+    }
+    vec![one; spec.num_stages]
+}
+
+/// How the V-placement solver counts chunk-0 release against its cap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum C0Release {
+    /// A chunk-0 slot is held until its W retires (ZB-V: the residual
+    /// is what the exact accounting prices).
+    UntilW,
+    /// Released when the chunk-0 backward runs (synthesized V-family).
+    B0Done,
+    /// Released when the *chunk-1* backward runs: a stricter signal —
+    /// the loss wave must have returned through this stage.
+    B1Done,
+}
+
+/// Specification for the per-chunk-queue V-placement wave solver.
+///
+/// Each tick a stage runs, in preference order: a ready B (chunk 1
+/// first — the head of the backward wave), a deferred W once the
+/// backlog reaches `w_backlog`, a ready chunk-1 forward (the returning
+/// wave frees memory fastest), a ready chunk-0 forward under the intake
+/// cap `c0cap` (counted per [`C0Release`]), or the oldest pending W.
+pub(crate) struct VWaveSpec {
+    pub num_stages: usize,
+    pub num_micro: usize,
+    /// Per-stage chunk-0 intake cap.
+    pub c0cap: Vec<usize>,
+    pub release: C0Release,
+    /// Forced-W threshold on the pending-W FIFO length.
+    pub w_backlog: usize,
+}
+
+/// Run the V-placement wave. `None` = wedged.
+pub(crate) fn v_wave_items(spec: &VWaveSpec) -> Option<Vec<Vec<WorkItem>>> {
+    const V: usize = 2;
+    let p = spec.num_stages;
+    let m = spec.num_micro;
+    let total = V * m;
+    let idx = |c: usize, mb: usize| c * m + mb;
+
+    let mut f_done: Vec<Vec<Option<usize>>> = vec![vec![None; total]; p];
+    let mut b_done: Vec<Vec<Option<usize>>> = vec![vec![None; total]; p];
+    let mut fi = vec![[0usize; V]; p]; // next fwd micro per chunk
+    let mut bi = vec![[0usize; V]; p]; // next bwd micro per chunk
+    let mut wdone = vec![[0usize; V]; p];
+    let mut wq: Vec<Vec<(usize, usize)>> = vec![Vec::new(); p]; // pending W FIFO
+    let mut order: Vec<Vec<WorkItem>> = vec![Vec::with_capacity(3 * total); p];
+
+    let per_stage = 3 * total;
+    let goal = p * per_stage;
+    let mut executed = 0usize;
+    let max_ticks = 4 * (goal + p + 8);
+
+    let done_by = |slot: &Option<usize>, tick: usize| matches!(slot, Some(t) if *t <= tick);
+
+    for tick in 0..max_ticks {
+        if executed == goal {
+            break;
+        }
+        let mut completions: Vec<(usize, WorkItem)> = Vec::new();
+        for s in 0..p {
+            if order[s].len() == per_stage {
+                continue;
+            }
+            let f_ready = |c: usize| {
+                fi[s][c] < m && {
+                    let q = fi[s][c];
+                    match fwd_upstream_of(Placement::VShape, s, c, p) {
+                        None => true,
+                        Some((s2, c2)) => done_by(&f_done[s2][idx(c2, q)], tick),
+                    }
+                }
+            };
+            // The local-forward check is implied by the upstream chain on
+            // the V (the backward wave only reaches a stage after its
+            // forward has passed through), so it never changes the order;
+            // it is kept explicit so the solver is safe for any spec.
+            let b_ready = |c: usize| {
+                bi[s][c] < m && {
+                    let q = bi[s][c];
+                    done_by(&f_done[s][idx(c, q)], tick)
+                        && match bwd_upstream_of(Placement::VShape, s, c, p, V) {
+                            None => true,
+                            Some((s2, c2)) => done_by(&b_done[s2][idx(c2, q)], tick),
+                        }
+                }
+            };
+            let c0_held = match spec.release {
+                C0Release::UntilW => fi[s][0] - wdone[s][0],
+                C0Release::B0Done => fi[s][0] - bi[s][0],
+                C0Release::B1Done => fi[s][0] - bi[s][1],
+            };
+
+            let choice = if b_ready(1) {
+                Some((Choice::B, 1))
+            } else if b_ready(0) {
+                Some((Choice::B, 0))
+            } else if !wq[s].is_empty() && wq[s].len() >= spec.w_backlog {
+                Some((Choice::W, 0))
+            } else if f_ready(1) {
+                Some((Choice::F, 1))
+            } else if f_ready(0) && c0_held < spec.c0cap[s] {
+                Some((Choice::F, 0))
+            } else if !wq[s].is_empty() {
+                Some((Choice::W, 0))
+            } else {
+                None
+            };
+
+            match choice {
+                Some((Choice::F, c)) => {
+                    let q = fi[s][c];
+                    fi[s][c] += 1;
+                    order[s].push(WorkItem::fwd(q, c));
+                    completions.push((s, WorkItem::fwd(q, c)));
+                }
+                Some((Choice::B, c)) => {
+                    let q = bi[s][c];
+                    bi[s][c] += 1;
+                    order[s].push(WorkItem::bwd(q, c));
+                    completions.push((s, WorkItem::bwd(q, c)));
+                    wq[s].push((c, q));
+                }
+                Some((Choice::W, _)) => {
+                    let (c, q) = wq[s].remove(0);
+                    wdone[s][c] += 1;
+                    order[s].push(WorkItem::wgrad(q, c));
+                }
+                None => {}
+            }
+        }
+        let now: usize = order.iter().map(|o| o.len()).sum();
+        if now == executed {
+            // A stage with a pending W always progresses, so a global
+            // stall means every unfinished stage is W-less and waiting on
+            // a dependency that can no longer complete: wedged.
+            return None;
+        }
+        for (s, it) in &completions {
+            let slot = idx(it.chunk, it.micro);
+            match it.kind {
+                super::WorkKind::Fwd => f_done[*s][slot] = Some(tick + 1),
+                super::WorkKind::Bwd => b_done[*s][slot] = Some(tick + 1),
+                super::WorkKind::WGrad => {}
+            }
+        }
+        executed = now;
+    }
+
+    if executed != goal {
+        return None;
+    }
+    Some(order)
+}
+
+/// The ZB-V spec: per-stage until-W intake caps `2p−1−s` and a `2p`
+/// forced-W backlog keep the per-stage peak near-uniform at ~`2p` chunk
+/// units.
+pub(crate) fn zbv_spec(p: usize, m: usize) -> VWaveSpec {
+    VWaveSpec {
+        num_stages: p,
+        num_micro: m,
+        c0cap: (0..p).map(|s| (2 * p - 1 - s).min(m).max(1)).collect(),
+        release: C0Release::UntilW,
+        w_backlog: 2 * p,
+    }
+}
+
+/// Safe phase order under the V placement: all chunk-0 forwards, all
+/// chunk-1 forwards, then the backward wave chunk 1 first, W after its
+/// B. Identical across stages; every dependency (including the V's
+/// same-stage turning point) targets an earlier-or-equal position.
+pub(crate) fn v_fallback_phase_order(p: usize, m: usize) -> Vec<Vec<WorkItem>> {
+    let mut one = Vec::with_capacity(6 * m);
+    for c in 0..2 {
+        for q in 0..m {
+            one.push(WorkItem::fwd(q, c));
+        }
+    }
+    for c in [1usize, 0] {
+        for q in 0..m {
+            one.push(WorkItem::bwd(q, c));
+            one.push(WorkItem::wgrad(q, c));
+        }
+    }
+    vec![one; p]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{validate_items, WorkKind};
+
+    fn simple_spec(p: usize, m: usize) -> WaveSpec {
+        WaveSpec {
+            num_stages: p,
+            num_micro: m,
+            num_chunks: 1,
+            fseq: (0..m).map(|q| (0, q)).collect(),
+            bseq: (0..m).map(|q| (0, q)).collect(),
+            warmup: (0..p).map(|s| p - s - 1).collect(),
+            cap: (0..p).map(|s| p - s).collect(),
+            split_bwd: false,
+            w_backlog: None,
+        }
+    }
+
+    #[test]
+    fn unit_1f1b_matches_closed_form() {
+        // With 1F1B warmup/cap parameters the wave solver reproduces
+        // the classic 1F1B item order on every stage.
+        for (p, m) in [(2usize, 3usize), (4, 8), (3, 2)] {
+            let items = wave_items(&simple_spec(p, m)).unwrap();
+            for s in 0..p {
+                assert_eq!(
+                    items[s],
+                    crate::sched::onefoneb_items(s, p, m),
+                    "p={p} m={m} stage={s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn split_emits_all_wgrads() {
+        let mut spec = simple_spec(3, 4);
+        spec.split_bwd = true;
+        let items = wave_items(&spec).unwrap();
+        for s in 0..3 {
+            let w = items[s].iter().filter(|i| i.kind == WorkKind::WGrad).count();
+            assert_eq!(w, 4, "stage {s}: {:?}", items[s]);
+        }
+    }
+
+    #[test]
+    fn w_backlog_bound_is_respected() {
+        // With a backlog bound of 1 every W runs before the next forward
+        // admission, so B-done-not-W'd never exceeds 1 at any prefix.
+        let mut spec = simple_spec(4, 8);
+        spec.split_bwd = true;
+        spec.w_backlog = Some(1);
+        let items = wave_items(&spec).unwrap();
+        for s in 0..4 {
+            let (mut b, mut w) = (0i64, 0i64);
+            for it in &items[s] {
+                match it.kind {
+                    WorkKind::Bwd => b += 1,
+                    WorkKind::WGrad => w += 1,
+                    WorkKind::Fwd => {
+                        assert!(b - w <= 1, "stage {s}: backlog {} before F", b - w)
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wedge_is_reported_not_papered_over() {
+        // cap 0 everywhere: no forward can ever issue after warmup 0.
+        let mut spec = simple_spec(2, 2);
+        spec.warmup = vec![0, 0];
+        spec.cap = vec![0, 0];
+        assert!(wave_items(&spec).is_none());
+        // The caller-side fallback is the safe phase order.
+        let items = fallback_phase_order(&spec);
+        for s in 0..2 {
+            assert!(items[s][..2].iter().all(|i| i.is_fwd()));
+            assert!(items[s][2..].iter().all(|i| i.is_bwd()));
+        }
+    }
+
+    #[test]
+    fn v_wave_covers_the_zbv_grid() {
+        for p in [1usize, 2, 3, 4, 6, 8] {
+            for m in [1usize, 2, 3, 5, 8, 12, 16, 32] {
+                let items = v_wave_items(&zbv_spec(p, m))
+                    .unwrap_or_else(|| panic!("zbv wave wedged at p={p} m={m}"));
+                validate_items(&items, p, m, 2, true, Placement::VShape)
+                    .unwrap_or_else(|e| panic!("p={p} m={m}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn v_fallback_phase_order_is_executable() {
+        for p in [1usize, 2, 4] {
+            for m in [1usize, 3, 8] {
+                let items = v_fallback_phase_order(p, m);
+                validate_items(&items, p, m, 2, true, Placement::VShape)
+                    .unwrap_or_else(|e| panic!("p={p} m={m}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn release_modes_change_the_intake_discipline() {
+        // Under B0Done release with a tight cap the chunk-0 intake stalls
+        // until backwards drain; the schedule stays valid.
+        let spec = VWaveSpec {
+            num_stages: 4,
+            num_micro: 8,
+            c0cap: vec![2; 4],
+            release: C0Release::B0Done,
+            w_backlog: 4,
+        };
+        let items = v_wave_items(&spec).expect("b0-release wave wedged");
+        validate_items(&items, 4, 8, 2, true, Placement::VShape).unwrap();
+        for s in 0..4 {
+            let (mut f0, mut b0, mut peak) = (0i64, 0i64, 0i64);
+            for it in &items[s] {
+                if it.chunk == 0 {
+                    match it.kind {
+                        WorkKind::Fwd => f0 += 1,
+                        WorkKind::Bwd => b0 += 1,
+                        WorkKind::WGrad => {}
+                    }
+                    peak = peak.max(f0 - b0);
+                }
+            }
+            assert!(peak <= 2, "stage {s}: chunk-0 residency {peak}");
+        }
+    }
+}

@@ -6,8 +6,8 @@
 //! ([`crate::sched::Segment`]) — compute slices interleaved with
 //! TP-collective slices — and the engine schedules them event-by-event:
 //! items issue in the stage's schedule order once their cross-stage
-//! dependencies resolve ([`crate::sched::fwd_upstream_of`] /
-//! [`crate::sched::bwd_upstream_of`]), a compute slice occupies the
+//! dependencies resolve ([`PipelineSchedule::fwd_upstream`] /
+//! [`PipelineSchedule::bwd_upstream`]), a compute slice occupies the
 //! compute stream, a collective occupies the comm stream, and P2P
 //! activation transfers occupy a modeled inter-stage link (wire time =
 //! bytes / bandwidth serializes per directed edge; latency is pure
@@ -15,7 +15,8 @@
 //! sender's comm stream).
 //!
 //! **Scheduling core.** Dependencies are precomputed once per
-//! `(stage, chunk)` from the placement's upstream maps, and execution is
+//! `(stage, chunk)` from the schedule's upstream methods (derived from
+//! the placement by default), and execution is
 //! a ready queue keyed by `(round, stage)`: a stage drains its head
 //! items greedily until one blocks on an incomplete upstream F/B, at
 //! which point it parks in a waiter slot for exactly that dependency;
@@ -70,8 +71,7 @@
 
 use crate::obs::{MetricsRegistry, Span, SpanKind, TraceSink, NO_INDEX};
 use crate::sched::{
-    bwd_upstream_of, fwd_upstream_of, peak_inflight_replay_exact, OneFOneB, PipelineSchedule,
-    SegKind, Segment, WorkItem, WorkKind,
+    peak_inflight_replay_exact, OneFOneB, PipelineSchedule, SegKind, Segment, WorkItem, WorkKind,
 };
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -538,7 +538,6 @@ impl<'a> EngineState<'a> {
         let m = sched.num_micro();
         let v = sched.num_chunks();
         assert!(p >= 1 && m >= 1 && v >= 1);
-        let placement = sched.placement();
         let items: Vec<Vec<WorkItem>> = (0..p).map(|s| sched.stage_items(s)).collect();
         let mut item_off = Vec::with_capacity(p + 1);
         let mut total = 0usize;
@@ -551,8 +550,8 @@ impl<'a> EngineState<'a> {
         let mut bwd_up = Vec::with_capacity(p * v);
         for s in 0..p {
             for c in 0..v {
-                fwd_up.push(fwd_upstream_of(placement, s, c, p));
-                bwd_up.push(bwd_upstream_of(placement, s, c, p, v));
+                fwd_up.push(sched.fwd_upstream(s, c));
+                bwd_up.push(sched.bwd_upstream(s, c));
             }
         }
         let vm = v * m;
@@ -1475,7 +1474,7 @@ mod tests {
     #[test]
     fn absorption_works_under_every_schedule() {
         let t = uniform(4, 1.0, 2.0, 0.6);
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             let sched = kind.build(4, 8);
             let od = run_schedule(&t, sched.as_ref(), false);
             let lx = run_schedule(&t, sched.as_ref(), true);
@@ -1519,7 +1518,7 @@ mod tests {
     fn window_consumed_never_exceeds_dur() {
         // The full-stall convention: dur includes the consumed part.
         let t = uniform(4, 1.0, 2.0, 0.8);
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             let sched = kind.build(4, 8);
             let tr = run_schedule(&t, sched.as_ref(), true);
             for s in 0..4 {
@@ -1592,7 +1591,7 @@ mod tests {
 
     #[test]
     fn planned_overlap_fully_achieved_at_plan_bandwidth() {
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             let sched = kind.build(4, 8);
             let segs = seg_stages(4, 3, 0.05, 0.08, 1.0, 0.8, 0.3,
                 sched.backward_split(), 1.0);
@@ -1815,7 +1814,7 @@ mod tests {
         // configuration that exercises every contended path: TP comm
         // widths, window recompute, exposed recompute, p2p wire time
         // sharing the sender's comm stream, and a serialized DP sync.
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             let sched = kind.build(4, 8);
             let mut segs = seg_stages(4, 2, 0.05, 0.08, 1.0, 0.8, 0.3,
                 sched.backward_split(), 2.0);
@@ -1902,7 +1901,7 @@ mod tests {
             StageTiming { fwd: 0.9, bwd: 1.7, exposed: 0.7, p2p: 0.1 },
             StageTiming { fwd: 1.4, bwd: 2.0, exposed: 0.1, p2p: 0.3 },
         ];
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             let sched = kind.build(3, 5);
             for lynx in [false, true] {
                 let ev = run_schedule(&t, sched.as_ref(), lynx);

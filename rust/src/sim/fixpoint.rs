@@ -17,7 +17,7 @@
 //! the **full pre-absorption stall** (`dur` includes `consumed`).
 
 use super::engine::{OverlapWindow, PipelineTrace, StageTiming};
-use crate::sched::{bwd_upstream_of, fwd_upstream_of, PipelineSchedule, WorkKind};
+use crate::sched::{PipelineSchedule, WorkKind};
 
 /// Execute `sched` under the old fixpoint item-sweep semantics.
 pub fn run_schedule_fixpoint(
@@ -33,9 +33,18 @@ pub fn run_schedule_fixpoint(
     let vf = v as f64;
     let split_backward = sched.backward_split().is_some();
     let bwd_frac = sched.backward_split().unwrap_or(1.0);
-    let placement = sched.placement();
     let items: Vec<Vec<crate::sched::WorkItem>> =
         (0..p).map(|s| sched.stage_items(s)).collect();
+    // Upstream maps come from the schedule trait (placement-derived by
+    // default, overridable by schedule kinds with bespoke dataflow).
+    let mut fwd_up = Vec::with_capacity(p * v);
+    let mut bwd_up = Vec::with_capacity(p * v);
+    for s in 0..p {
+        for c in 0..v {
+            fwd_up.push(sched.fwd_upstream(s, c));
+            bwd_up.push(sched.bwd_upstream(s, c));
+        }
+    }
     let idx = |c: usize, mb: usize| c * m + mb;
 
     let mut fwd_end = vec![vec![f64::INFINITY; v * m]; p];
@@ -67,7 +76,7 @@ pub fn run_schedule_fixpoint(
                 let slot = idx(item.chunk, item.micro);
                 let (start, end) = match item.kind {
                     WorkKind::Fwd => {
-                        let ready = match fwd_upstream_of(placement, s, item.chunk, p) {
+                        let ready = match fwd_up[s * v + item.chunk] {
                             None => 0.0,
                             Some((s2, c2)) => {
                                 // No p2p hop between two chunks hosted by
@@ -80,7 +89,7 @@ pub fn run_schedule_fixpoint(
                         (start, start + f_dur)
                     }
                     WorkKind::Bwd => {
-                        let dy_ready = match bwd_upstream_of(placement, s, item.chunk, p, v) {
+                        let dy_ready = match bwd_up[s * v + item.chunk] {
                             // Loss gradient is available right after the
                             // last virtual stage's forward.
                             None => fwd_end[s][slot],

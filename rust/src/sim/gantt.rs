@@ -480,7 +480,7 @@ mod tests {
         // byte-identical to rendering through the trace.
         use crate::sched::ScheduleKind;
         let t = uniform(4, 1.0, 2.0, 0.5);
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             let sched = kind.build(4, 8);
             let mut rec = crate::obs::SpanRecorder::new();
             let mut m = MetricsRegistry::new();

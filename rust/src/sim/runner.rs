@@ -21,7 +21,7 @@ use crate::plan::{
     SearchOptions, StageCtx, StagePlan, StageRole,
 };
 use crate::plan::costeval::StageCost;
-use crate::sched::{PipelineSchedule, ScheduleKind, Segment};
+use crate::sched::{PipelineSchedule, ScheduleKind, Segment, SynthesisOutcome};
 use crate::topo::{dp_ring_allreduce_secs, dp_ring_hop_secs};
 use crate::util::json::Json;
 
@@ -160,6 +160,11 @@ pub struct SimReport {
     /// schedule.
     pub bubble_ratio: f64,
     pub schedule: ScheduleKind,
+    /// How the executed schedule's item streams were produced (closed
+    /// rule / wave-solved / degraded fallback) — surfaced in
+    /// `lynx.report.v1` so a degraded order is visible in artifacts,
+    /// not just in a one-shot stderr warning.
+    pub schedule_outcome: SynthesisOutcome,
     /// Executed bandwidth scale (1.0 = plan bandwidth).
     pub bw_scale: f64,
     pub stages: Vec<StageReport>,
@@ -538,6 +543,7 @@ fn simulate_one(
         );
     }
     let sched = cfg.schedule.build(setup.pp, setup.num_micro);
+    let schedule_outcome = sched.synthesis_outcome();
     let search_opts = SearchOptions { schedule: Some(cfg.schedule), ..Default::default() };
 
     // ---- partition + plans ----
@@ -738,6 +744,7 @@ fn simulate_one(
         throughput,
         bubble_ratio,
         schedule: cfg.schedule,
+        schedule_outcome,
         bw_scale: cfg.bw_scale,
         stages,
         partition,
@@ -820,7 +827,7 @@ mod tests {
 
     #[test]
     fn every_schedule_simulates_end_to_end() {
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             let r = sim_sched(PolicyKind::LynxHeu, PartitionMode::Dp, kind);
             assert!(r.throughput > 0.0, "{}", kind.label());
             assert!(r.bubble_ratio >= 0.0 && r.bubble_ratio < 1.0, "{}", kind.label());
@@ -845,7 +852,7 @@ mod tests {
     fn exact_peak_never_below_h1_peak() {
         // The exact W-residual accounting can only add memory on top of
         // the B-freed approximation, for every schedule and stage.
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             let r = sim_sched(PolicyKind::Block, PartitionMode::Dp, kind);
             for (s, st) in r.stages.iter().enumerate() {
                 assert!(
@@ -889,7 +896,7 @@ mod tests {
         // At bw_scale 1 the executed windows are exactly the planner's:
         // everything placed in a window hides, and the planned total is
         // the plan's overlapped recompute × microbatches.
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             let r = sim_sched(PolicyKind::LynxHeu, PartitionMode::Dp, kind);
             for (s, st) in r.stages.iter().enumerate() {
                 assert!(
@@ -1007,7 +1014,7 @@ mod tests {
             Topology::hierarchical(ClusterTopology::parse("2x6").unwrap(), 4, 3, 1);
         let cm = CostModel::new(topo);
         let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 4, 3, 4, 8);
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             let r = simulate(
                 &cm,
                 &SimConfig::new(setup.clone(), PolicyKind::LynxHeu, PartitionMode::Dp)

@@ -1,6 +1,6 @@
 //! Per-stage pipeline worker.
 //!
-//! Each stage runs the 1F1B schedule from `sched::onefoneb` against real
+//! Each stage runs the 1F1B schedule (`sched::onefoneb_items`) against real
 //! PJRT executables. The recomputation mechanism mirrors the paper:
 //!
 //! * **StoreAll** — `layer_fwd_full`, stash kept until backward.

@@ -29,7 +29,7 @@ use lynx::sim::{
 use lynx::util::prng::Pcg32;
 
 fn kinds() -> Vec<ScheduleKind> {
-    let mut ks = ScheduleKind::all();
+    let mut ks = ScheduleKind::all().to_vec();
     // Ragged interleaving (chunks not dividing anything nicely).
     ks.push(ScheduleKind::Interleaved { chunks: 3 });
     ks

@@ -24,7 +24,7 @@ use lynx::util::prng::Pcg32;
 const EPS: f64 = 1e-9;
 
 fn kinds() -> Vec<ScheduleKind> {
-    ScheduleKind::all()
+    ScheduleKind::all().to_vec()
 }
 
 #[test]

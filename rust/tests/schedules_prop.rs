@@ -258,7 +258,7 @@ fn prop_engine_bounds_hold_for_every_schedule() {
                 .iter()
                 .map(|&(fwd, bwd, exposed)| StageTiming { fwd, bwd, exposed, p2p: 0.0 })
                 .collect();
-            for kind in ScheduleKind::all() {
+            for &kind in ScheduleKind::all() {
                 let sched = kind.build(p, *m);
                 for lynx_mode in [false, true] {
                     let tr = run_schedule(&ts, sched.as_ref(), lynx_mode);

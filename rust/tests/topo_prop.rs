@@ -57,7 +57,7 @@ fn grid_uniform_cluster_reproduces_the_scalar_engine() {
             assert_eq!(ta.stage_p2p[s], tb.stage_p2p[s], "stage {s}");
             assert_eq!(ta.stage_dp_link[s], tb.stage_dp_link[s], "stage {s}");
         }
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             for policy in [PolicyKind::Block, PolicyKind::LynxHeu] {
                 let a = sim_on(&legacy, &setup, policy, kind);
                 let b = sim_on(&uniform, &setup, policy, kind);
@@ -119,7 +119,7 @@ fn straddling_stage_gets_wider_windows_and_hides_more() {
 fn grid_slowing_any_tier_never_speeds_up_the_pipeline() {
     let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 4, 3, 4, 8);
     let base = ClusterTopology::parse("2x6").unwrap();
-    for kind in ScheduleKind::all() {
+    for &kind in ScheduleKind::all() {
         for policy in [PolicyKind::Block, PolicyKind::LynxHeu] {
             let at = |c: &ClusterTopology| {
                 sim_on(

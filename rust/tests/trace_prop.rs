@@ -125,7 +125,7 @@ fn assert_flow_pairs(rec: &SpanRecorder, label: &str) -> usize {
 
 #[test]
 fn scalar_grid_spans_decompose_the_accounting() {
-    for kind in ScheduleKind::all() {
+    for &kind in ScheduleKind::all() {
         for (p, m, t) in scalar_shapes() {
             for absorb in [false, true] {
                 let label = format!("{} p{p} m{m} absorb={absorb}", kind.label());
@@ -162,7 +162,7 @@ fn zero_comm_recordings_reproduce_fixpoint_spans() {
     // The scalar wrapper runs zero-width comm: the event engine must
     // reproduce the old fixpoint engine span-for-span, and the recorded
     // work spans must tile exactly the fixpoint item spans.
-    for kind in ScheduleKind::all() {
+    for &kind in ScheduleKind::all() {
         for (p, m, t) in scalar_shapes() {
             let label = format!("{} p{p} m{m}", kind.label());
             let sched = kind.build(p, m);
@@ -234,7 +234,7 @@ fn engine_grid_holds_invariants_and_links_overlap_flows() {
         let cm = CostModel::new(Topology::nvlink(tp, pp));
         let g = build_layer_graph(&setup);
         let tables = CostTables::new(&setup, &cm, &g);
-        for kind in ScheduleKind::all() {
+        for &kind in ScheduleKind::all() {
             for policy in [PolicyKind::Block, PolicyKind::LynxHeu] {
                 let label = format!("{model} tp{tp} pp{pp} {} {}", kind.label(), policy.label());
                 let cfg = SimConfig::new(setup.clone(), policy, PartitionMode::Dp)

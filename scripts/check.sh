@@ -128,6 +128,40 @@ print(f"OK: {len(rows)} rows, pinned speedup {pin['speedup']:.1f}x at "
       f"P={pin['p']}, {len(rail)} rail-10k rows")
 EOF
 
+echo "== bench: synth (quick budget-frontier cells) =="
+LYNX_BENCH_QUICK=1 LYNX_BENCH_OUT="$PWD" cargo bench --bench bench_synth
+test -f BENCH_synth.json
+echo "BENCH_synth.json written"
+
+echo "== gate: half-budget synthesis beats 1F1B's bubble in half its memory =="
+python3 - <<'EOF'
+import json
+rows = [r for r in json.load(open('BENCH_synth.json')) if isinstance(r, dict)]
+assert rows, 'BENCH_synth.json has no rows'
+eps = 1e-9
+# Frontier completeness: every shape carries both budget columns.
+shapes = {(r['num_stages'], r['num_micro']) for r in rows}
+for pm in shapes:
+    pcts = {r['budget_pct'] for r in rows
+            if (r['num_stages'], r['num_micro']) == pm}
+    assert {50, 33} <= pcts, f'missing frontier budgets at {pm}: {pcts}'
+# Solved rows must actually respect their budget.
+over = [r for r in rows if r['outcome'] == 'solved'
+        and r['peak_microbatches'] > r['budget_microbatches'] + eps]
+assert not over, f'solved rows exceed their budget: {over}'
+# The headline gate: on the deep-pipeline cells, half of 1F1B's memory
+# at no more than 1F1B's bubble (unit makespan).
+gate = [r for r in rows if r['budget_pct'] == 50
+        and (r['num_stages'], r['num_micro']) in {(6, 12), (8, 16)}]
+assert gate, 'gate cells (6,12)/(8,16) missing at budget 50'
+good = [r for r in gate if r['outcome'] == 'solved'
+        and r['peak_microbatches'] <= 0.5 * r['ref_1f1b_peak_microbatches'] + eps
+        and r['makespan_units'] <= r['ref_1f1b_makespan_units'] + eps]
+assert good, f'no gate cell meets half-memory at <=1F1B bubble: {gate}'
+print(f'OK: {len(rows)} rows, {len(good)}/{len(gate)} gate cells at '
+      'half memory with no bubble regression')
+EOF
+
 echo "== gate: bench snapshots (drift vs bench/snapshots/) =="
 python3 scripts/snapshot_bench.py compare
 

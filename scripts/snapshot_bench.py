@@ -15,9 +15,9 @@ fails on drift; an artifact without a reference is reported and skipped
 eyeball ``git diff bench/snapshots/``, and commit when the change is
 intentional.
 
-Wall-clock timings (keys ending in ``wall_secs``), derived throughput
-rates (keys ending in ``per_sec``) and the engine bench's ``speedup``
-ratio are excluded from the diff — everything else the benches emit is a
+Wall-clock timings (keys ending in ``wall_secs`` or named
+``search_secs``), derived throughput rates (keys ending in ``per_sec``)
+and the engine bench's ``speedup`` ratio are excluded from the diff — everything else the benches emit is a
 deterministic function of the simulator, so any change is a behaviour
 change, not noise. Floats compare with relative tolerance 1e-9 to absorb
 libm differences across platforms.
@@ -34,7 +34,7 @@ REL_TOL = 1e-9
 
 def is_wall_key(key):
     return (key.endswith("wall_secs") or key.endswith("per_sec")
-            or key == "speedup")
+            or key in ("speedup", "search_secs"))
 
 
 def diff(ref, cur, path, out):

@@ -123,6 +123,18 @@ def validate_report(doc):
     for key in ("config", "schedule", "makespan_secs", "iteration_secs",
                 "throughput", "bubble_ratio", "partition"):
         need(doc, key, None, "report")
+    synthesis = need(doc, "schedule_synthesis", dict, "report")
+    outcome = need(synthesis, "outcome", str, "report.schedule_synthesis")
+    if outcome not in ("closed", "solved", "fallback"):
+        raise Invalid(
+            f"report: schedule_synthesis.outcome {outcome!r} not one of "
+            "closed/solved/fallback")
+    if outcome == "fallback":
+        need(synthesis, "fallback_reason", str, "report.schedule_synthesis")
+    elif "fallback_reason" in synthesis:
+        raise Invalid(
+            "report: schedule_synthesis carries a fallback_reason for a "
+            f"non-fallback outcome {outcome!r}")
     stages = need(doc, "stages", list, "report")
     if not stages:
         raise Invalid("report: stages is empty")
