@@ -1,0 +1,134 @@
+//! Bench: the joint configuration auto-tuner's search efficiency.
+//!
+//! Runs `lynx tune`'s witness grid — 1.3B on a 2×6 cluster, global
+//! batch 24, microbatch 1, seq 2048, the preset schedule axis (1F1B,
+//! GPipe, ZB-H1, ZB-V, synth:50, synth:33) × three recompute policies —
+//! twice: bound-pruned and exhaustive. The artifact quotes both Pareto
+//! fronts plus the search accounting, and `scripts/check.sh` gates on
+//! it: the pruned front must be identical to the exhaustive one, span
+//! at least 3 points over at least 2 distinct (tp, pp) shapes, prune at
+//! least 30% of the valid candidates, and reuse the plan cache across
+//! candidates (hit rate > 0). Run `cargo bench --bench bench_tune`
+//! (LYNX_BENCH_QUICK=1 skips the larger scaling cluster). Emits
+//! `BENCH_tune.json` into the working directory (override with
+//! LYNX_BENCH_OUT). Wall-clock keys end in `wall_secs` (or are named
+//! `speedup`) so the snapshot gate ignores them.
+
+use lynx::graph::ModelConfig;
+use lynx::plan::{tune, TuneOptions, TuneResult, TuneSpace};
+use lynx::topo::ClusterTopology;
+use lynx::util::bench::Bench;
+use lynx::util::json::Json;
+
+fn result_json(r: &TuneResult) -> Json {
+    let mut search = Json::obj();
+    search
+        .set("enumerated", Json::from(r.enumerated))
+        .set("rejected", Json::from(r.rejected))
+        .set("pruned_mem", Json::from(r.pruned_mem))
+        .set("pruned_bound", Json::from(r.pruned_bound))
+        .set("evaluated", Json::from(r.evaluated()))
+        .set("distinct_geometries", Json::from(r.distinct_geometries))
+        .set("waves", Json::from(r.waves))
+        .set("plan_solves", Json::from(r.plan_solves))
+        .set("cache_hits", Json::from(r.cache_hits))
+        .set("prune_rate", Json::from(r.prune_rate()))
+        .set("cache_hit_rate", Json::from(r.hit_rate()))
+        .set("wall_secs", Json::from(r.wall_secs));
+    let mut front = Json::Arr(vec![]);
+    for p in r.front_points() {
+        front.push(p.to_json());
+    }
+    let mut points = Json::Arr(vec![]);
+    for p in &r.points {
+        points.push(p.to_json());
+    }
+    let mut o = Json::obj();
+    o.set("search", search).set("front", front).set("points", points);
+    o
+}
+
+fn witness_space(spec: &str, global_batch: usize) -> TuneSpace {
+    let mut space = TuneSpace::preset(
+        ModelConfig::by_name("1.3B").unwrap(),
+        ClusterTopology::parse(spec).unwrap(),
+        global_batch,
+    );
+    space.seq = 2048;
+    space
+}
+
+fn main() {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("tune: joint configuration auto-tune search efficiency");
+    let mut out = Json::obj();
+
+    // The gated witness grid (same in quick and full mode — the gates
+    // are only meaningful on this exact grid).
+    let space = witness_space("2x6", 24);
+    let pruned = tune(&space, &TuneOptions::default());
+    let full = tune(&space, &TuneOptions { exhaustive: true, ..Default::default() });
+    b.record("tune 2x6 pruned", pruned.wall_secs, "s search");
+    b.record("tune 2x6 exhaustive", full.wall_secs, "s search");
+    let identical = pruned.front_points() == full.front_points();
+    let mut shapes: Vec<(usize, usize)> =
+        pruned.front_points().iter().map(|p| (p.tp, p.pp)).collect();
+    shapes.sort_unstable();
+    shapes.dedup();
+    let mut grid = Json::obj();
+    grid.set("model", Json::from("1.3B"))
+        .set("topo", Json::from("2x6"))
+        .set("global_batch", Json::from(24usize))
+        .set("micro_batch", Json::from(space.micro_batch))
+        .set("seq", Json::from(space.seq));
+    out.set("grid", grid)
+        .set("pruned", result_json(&pruned))
+        .set("exhaustive", result_json(&full))
+        .set("fronts_identical", Json::from(identical))
+        .set("front_distinct_shapes", Json::from(shapes.len()))
+        .set(
+            "speedup",
+            Json::from(if pruned.wall_secs > 0.0 { full.wall_secs / pruned.wall_secs } else { 0.0 }),
+        );
+
+    let mut rows = Vec::new();
+    for p in pruned.front_points() {
+        rows.push(vec![
+            p.shape_label(),
+            format!("{}", p.num_micro),
+            lynx::plan::schedule_token(p.schedule),
+            p.policy.label().to_string(),
+            format!("{:.2}", p.throughput),
+            format!("{:.2}", p.peak_mem / (1024.0 * 1024.0 * 1024.0)),
+            format!("{:.1}%", 100.0 * p.bubble_ratio),
+        ]);
+    }
+    b.table(
+        "witness-grid Pareto front (pruned search)",
+        &["shape", "m", "schedule", "policy", "thpt/s", "peak GiB", "bubble"],
+        &rows,
+    );
+    println!(
+        "\nwitness grid: {} candidates, {} pruned ({:.0}%), {} evaluated; fronts identical: \
+         {identical}; cache hit rate {:.0}%",
+        pruned.enumerated,
+        pruned.pruned(),
+        100.0 * pruned.prune_rate(),
+        pruned.evaluated(),
+        100.0 * pruned.hit_rate(),
+    );
+
+    if !quick {
+        // Scaling point: a 32-GPU cluster, pruned search only (the
+        // exhaustive oracle is the witness grid's job).
+        let big = witness_space("4x8", 64);
+        let r = tune(&big, &TuneOptions::default());
+        b.record("tune 4x8 pruned", r.wall_secs, "s search");
+        out.set("scale_4x8", result_json(&r));
+    }
+
+    let dir = std::env::var("LYNX_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("BENCH_tune.json");
+    std::fs::write(&path, out.pretty()).expect("write BENCH_tune.json");
+    println!("\nwrote {}", path.display());
+}

@@ -5,6 +5,9 @@
 //! * `plan`      — show the recomputation plan the policy maker produces;
 //! * `partition` — run Algorithm 1 vs dp-partitioning;
 //! * `figures`   — regenerate paper figures/tables (`--all` or `--fig N`);
+//! * `tune`      — joint configuration auto-tuner: search (tp, pp, dp,
+//!   schedule, policy) over a bounded cluster and print the
+//!   throughput/memory Pareto front;
 //! * `train`     — real pipeline training on the AOT artifacts;
 //! * `profile`   — dump the analytic profiler database.
 
@@ -28,7 +31,7 @@ use anyhow::{anyhow, Result};
 use std::path::Path;
 use std::time::Duration;
 
-const USAGE: &str = "lynx <simulate|plan|partition|figures|train|profile> [options]
+const USAGE: &str = "lynx <simulate|plan|partition|tune|figures|train|profile> [options]
        lynx <subcommand> --help
 
 Inspecting a run: `simulate --gantt` renders an ASCII timeline;
@@ -74,6 +77,33 @@ fn common_specs() -> Vec<OptSpec> {
         opt("dp-overlap", "DP gradient sync: off|serial|overlap", true, Some("off")),
         opt("p2p-over-tp", "serialize p2p wire time with TP traffic", false, None),
         opt("cache-dir", "persist the plan cache to this directory", true, None),
+        // tune-only options
+        opt(
+            "global-batch",
+            "lynx tune: samples per optimizer step (num_micro derives per candidate as global / (micro-batch × dp))",
+            true,
+            Some("32"),
+        ),
+        opt(
+            "tune-schedules",
+            "lynx tune: comma-separated schedule axis (default 1f1b,gpipe,zbh1,zbv plus --synth-budgets)",
+            true,
+            None,
+        ),
+        opt(
+            "tune-policies",
+            "lynx tune: comma-separated recompute-policy axis (default selective,block,lynx-heu)",
+            true,
+            None,
+        ),
+        opt(
+            "synth-budgets",
+            "lynx tune: comma-separated synth budget percents appended to the schedule axis (empty to disable)",
+            true,
+            Some("50,33"),
+        ),
+        opt("exhaustive", "lynx tune: evaluate every valid candidate (disable bound pruning)", false, None),
+        opt("threads", "lynx tune: candidate worker threads (0 = auto from the worker budget)", true, Some("0")),
         opt("help", "print help", false, None),
         // train-only options (accepted everywhere for simplicity)
         opt("artifacts", "artifact directory", true, Some("artifacts")),
@@ -85,7 +115,7 @@ fn common_specs() -> Vec<OptSpec> {
         opt("seed", "PRNG seed", true, Some("42")),
         opt("log-every", "loss log interval", true, Some("10")),
         // figures options
-        opt("fig", "figure id: 2a|2b|6a|6b|7|8|9|10a|10b|10c|table3|sp|schedules|search|overlap|topo", true, None),
+        opt("fig", "figure id: 2a|2b|6a|6b|7|8|9|10a|10b|10c|table3|sp|schedules|search|overlap|topo|tune", true, None),
         opt("all", "regenerate every figure", false, None),
         opt("quick", "reduced configs for smoke runs", false, None),
         opt("out", "write figure JSON to this directory", true, None),
@@ -99,7 +129,7 @@ fn common_specs() -> Vec<OptSpec> {
         ),
         opt(
             "metrics-out",
-            "write a versioned JSON run report (simulate: lynx.report.v1; partition: lynx.partition_report.v1)",
+            "write a versioned JSON run report (simulate: lynx.report.v1; partition: lynx.partition_report.v1; tune: lynx.tune_report.v1)",
             true,
             None,
         ),
@@ -278,6 +308,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "simulate" => cmd_simulate(&a),
         "plan" => cmd_plan(&a),
         "partition" => cmd_partition(&a),
+        "tune" => cmd_tune(&a),
         "figures" => cmd_figures(&a),
         "train" => cmd_train(&a),
         "profile" => cmd_profile(&a),
@@ -459,6 +490,157 @@ fn cmd_partition(a: &Args) -> Result<i32> {
     Ok(if result.oom { 1 } else { 0 })
 }
 
+/// Parse `lynx tune`'s schedule axis: an explicit `--tune-schedules`
+/// list is taken literally; otherwise the classic spread plus one
+/// [`ScheduleKind::Synth`] entry per `--synth-budgets` percent (the
+/// synthesis budget is a searched knob, not a fixed flag).
+fn parse_tune_schedules(a: &Args) -> Result<Vec<ScheduleKind>> {
+    use crate::sched::synth_axis;
+    let chunks: usize = a.req("chunks")?;
+    let mut kinds: Vec<ScheduleKind> = match a.get("tune-schedules") {
+        Some(list) => {
+            let mut v = Vec::new();
+            for tok in list.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+                let kind = ScheduleKind::parse(tok, chunks)
+                    .ok_or_else(|| anyhow!("unknown schedule {tok:?} in --tune-schedules"))?;
+                v.push(kind);
+            }
+            v
+        }
+        None => vec![
+            ScheduleKind::OneFOneB,
+            ScheduleKind::GPipe,
+            ScheduleKind::ZbH1,
+            ScheduleKind::ZbV,
+        ],
+    };
+    let budgets_spec = a.get("synth-budgets").unwrap();
+    let mut budgets = Vec::new();
+    for tok in budgets_spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let pct: u32 = tok
+            .parse()
+            .map_err(|_| anyhow!("bad --synth-budgets percent {tok:?}"))?;
+        if pct == 0 {
+            return Err(anyhow!("--synth-budgets percents must be at least 1"));
+        }
+        budgets.push(pct);
+    }
+    for kind in synth_axis(&budgets) {
+        if !kinds.contains(&kind) {
+            kinds.push(kind);
+        }
+    }
+    kinds.dedup();
+    if kinds.is_empty() {
+        return Err(anyhow!("the tune schedule axis is empty"));
+    }
+    Ok(kinds)
+}
+
+fn parse_tune_policies(a: &Args) -> Result<Vec<PolicyKind>> {
+    match a.get("tune-policies") {
+        Some(list) => {
+            let mut v = Vec::new();
+            for tok in list.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+                let p = parse_policy(tok)?;
+                if !v.contains(&p) {
+                    v.push(p);
+                }
+            }
+            if v.is_empty() {
+                return Err(anyhow!("the tune policy axis is empty"));
+            }
+            Ok(v)
+        }
+        None => Ok(crate::plan::default_policies()),
+    }
+}
+
+fn cmd_tune(a: &Args) -> Result<i32> {
+    use crate::plan::{schedule_token, tune, TuneOptions, TuneSpace};
+    use crate::topo::ClusterTopology;
+    let model_name = a.get("model").unwrap();
+    let model =
+        ModelConfig::by_name(model_name).ok_or_else(|| anyhow!("unknown model {model_name:?}"))?;
+    let spec = a.get("topo").unwrap();
+    let cluster = match spec {
+        "rail-10k" => ClusterTopology::rail_10k(),
+        other => ClusterTopology::parse(other).map_err(|e| {
+            anyhow!("lynx tune needs a bounded cluster, e.g. --topo 2x6 or 4x8:pcie=24: {e}")
+        })?,
+    };
+    let total = cluster
+        .total_gpus()
+        .ok_or_else(|| anyhow!("lynx tune needs a bounded cluster topology"))?;
+    let global_batch: usize = a.req("global-batch")?;
+    let micro_batch: usize = a.req("micro-batch")?;
+    if global_batch == 0 || micro_batch == 0 {
+        return Err(anyhow!("--global-batch and --micro-batch must be >= 1"));
+    }
+    let search = a.get("search").unwrap();
+    let search = SearchKind::parse(search)
+        .ok_or_else(|| anyhow!("unknown partition search {search:?} (greedy|dp)"))?;
+    let space = TuneSpace {
+        model,
+        cluster,
+        global_batch,
+        micro_batch,
+        seq: a.req("seq")?,
+        zero1: a.has("zero1"),
+        schedules: parse_tune_schedules(a)?,
+        policies: parse_tune_policies(a)?,
+    };
+    let opts = TuneOptions { threads: a.req("threads")?, exhaustive: a.has("exhaustive"), search };
+    let r = tune(&space, &opts);
+    println!(
+        "tune: {model_name} on {spec} ({total} GPUs), global batch {global_batch} — \
+         {} candidates: {} rejected, {} pruned ({} mem + {} bound), {} evaluated \
+         across {} geometries in {} waves",
+        r.enumerated,
+        r.rejected,
+        r.pruned(),
+        r.pruned_mem,
+        r.pruned_bound,
+        r.evaluated(),
+        r.distinct_geometries,
+        r.waves,
+    );
+    println!(
+        "      prune rate {:.0}%, plan cache {} hits / {} solves ({:.0}% hit rate), \
+         wall {:.2}s",
+        100.0 * r.prune_rate(),
+        r.cache_hits,
+        r.plan_solves,
+        100.0 * r.hit_rate(),
+        r.wall_secs,
+    );
+    if r.front.is_empty() {
+        println!("no feasible configuration fits memory on this cluster");
+    } else {
+        println!("pareto front ({} points, throughput-descending):", r.front.len());
+        for p in r.front_points() {
+            println!(
+                "  {:<16} m={:<3} {:<12} {:<10} thpt {:>8.1}/s  peak {:>10}  \
+                 bubble {:>5.1}%  [{}]",
+                p.shape_label(),
+                p.num_micro,
+                schedule_token(p.schedule),
+                p.policy.label(),
+                p.throughput,
+                fmt_bytes(p.peak_mem),
+                100.0 * p.bubble_ratio,
+                p.schedule_outcome.label(),
+            );
+        }
+    }
+    if let Some(path) = a.get("metrics-out") {
+        let report = crate::obs::tune_report(model_name, spec, global_batch, &r);
+        std::fs::write(path, report.pretty())?;
+        eprintln!("wrote report {path}");
+    }
+    Ok(if r.front.is_empty() { 1 } else { 0 })
+}
+
 fn cmd_figures(a: &Args) -> Result<i32> {
     let quick = a.has("quick");
     let figs = if a.has("all") {
@@ -484,6 +666,7 @@ fn cmd_figures(a: &Args) -> Result<i32> {
             "search" => experiments::search_cost(quick),
             "overlap" => experiments::overlap_sweep(quick),
             "topo" => experiments::topo_sweep(quick),
+            "tune" => experiments::tune_front(quick),
             other => return Err(anyhow!("unknown figure {other:?}")),
         }]
     };
@@ -828,6 +1011,82 @@ mod tests {
             assert!(s.expect("metrics").get("counters").is_some());
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tune_runs_and_writes_tune_report() {
+        let dir = std::env::temp_dir().join("lynx_cli_tune_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mr = dir.join("tune.json");
+        let code = run(&sv(&[
+            "tune",
+            "--model",
+            "1.3B",
+            "--topo",
+            "1x4",
+            "--global-batch",
+            "8",
+            "--micro-batch",
+            "1",
+            "--tune-schedules",
+            "1f1b,gpipe",
+            "--synth-budgets",
+            "",
+            "--tune-policies",
+            "block",
+            "--metrics-out",
+            mr.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let m = Json::parse(&std::fs::read_to_string(&mr).unwrap()).unwrap();
+        assert_eq!(m.expect("schema").as_str(), Some(crate::obs::TUNE_REPORT_SCHEMA));
+        let front = m.expect("front").as_arr().unwrap();
+        assert!(!front.is_empty());
+        for p in front {
+            assert_eq!(
+                p.expect("tp").as_f64().unwrap() as usize
+                    * p.expect("pp").as_f64().unwrap() as usize
+                    * p.expect("dp").as_f64().unwrap() as usize,
+                4,
+                "front points use the whole cluster"
+            );
+        }
+        assert!(m.expect("search").expect("cache_hits").as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tune_searches_the_synth_budget_axis() {
+        // Bare default axis on a 1x4 box: the synth budgets ride along
+        // as schedule candidates (pp >= 2 shapes only) without erroring.
+        let code = run(&sv(&[
+            "tune",
+            "--model",
+            "1.3B",
+            "--topo",
+            "1x4",
+            "--global-batch",
+            "8",
+            "--micro-batch",
+            "1",
+            "--tune-policies",
+            "block",
+            "--synth-budgets",
+            "60,45",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn tune_rejects_unbounded_and_bad_axes() {
+        assert!(run(&sv(&["tune", "--topo", "nvlink"])).is_err());
+        assert!(run(&sv(&["tune", "--topo", "1x4", "--tune-schedules", "bogus"])).is_err());
+        assert!(run(&sv(&["tune", "--topo", "1x4", "--tune-policies", "nope"])).is_err());
+        assert!(run(&sv(&["tune", "--topo", "1x4", "--synth-budgets", "0"])).is_err());
+        assert!(run(&sv(&["tune", "--topo", "1x4", "--global-batch", "0"])).is_err());
     }
 
     #[test]

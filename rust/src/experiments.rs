@@ -1228,6 +1228,88 @@ pub fn search_cost(quick: bool) -> FigureResult {
     }
 }
 
+// ---------------------------------------------------------------- tune
+
+/// Joint configuration auto-tune: the `lynx tune` pipeline end to end
+/// (enumerate → bound-prune → plan + partition + simulate → Pareto
+/// front) on a small bounded cluster, with the pruned/exhaustive front
+/// identity re-checked in a note.
+pub fn tune_front(quick: bool) -> FigureResult {
+    use crate::plan::{schedule_token, tune, TuneOptions, TuneSpace};
+    use crate::topo::ClusterTopology;
+    use crate::util::stats::fmt_bytes;
+    let (spec, global_batch) = if quick { ("1x4", 8) } else { ("2x6", 24) };
+    let mut space = TuneSpace::preset(
+        ModelConfig::by_name("1.3B").unwrap(),
+        ClusterTopology::parse(spec).unwrap(),
+        global_batch,
+    );
+    space.seq = 2048;
+    if quick {
+        space.schedules =
+            vec![ScheduleKind::OneFOneB, ScheduleKind::GPipe, ScheduleKind::ZbH1];
+        space.policies = vec![PolicyKind::Selective, PolicyKind::LynxHeu];
+    }
+    let r = tune(&space, &TuneOptions::default());
+    let full = tune(&space, &TuneOptions { exhaustive: true, ..Default::default() });
+    let rows = r
+        .front_points()
+        .iter()
+        .map(|p| {
+            vec![
+                p.shape_label(),
+                format!("{}", p.num_micro),
+                schedule_token(p.schedule),
+                p.policy.label().to_string(),
+                format!("{:.2}", p.throughput),
+                fmt_bytes(p.peak_mem),
+                format!("{:.1}%", 100.0 * p.bubble_ratio),
+                p.schedule_outcome.label().to_string(),
+            ]
+        })
+        .collect();
+    let notes = vec![
+        format!(
+            "{} candidates: {} rejected, {} pruned ({} mem + {} bound), {} evaluated \
+             over {} geometries; prune rate {:.0}%, cache hit rate {:.0}%",
+            r.enumerated,
+            r.rejected,
+            r.pruned(),
+            r.pruned_mem,
+            r.pruned_bound,
+            r.evaluated(),
+            r.distinct_geometries,
+            100.0 * r.prune_rate(),
+            100.0 * r.hit_rate(),
+        ),
+        format!(
+            "pruned front identical to exhaustive: {} ({} vs {} evaluations)",
+            r.front_points() == full.front_points(),
+            r.evaluated(),
+            full.evaluated(),
+        ),
+    ];
+    FigureResult {
+        id: "tune",
+        title: format!(
+            "joint configuration auto-tune: throughput/memory Pareto front \
+             (1.3B, {spec}, global batch {global_batch}, seq 2048)"
+        ),
+        header: vec![
+            "shape".into(),
+            "m".into(),
+            "schedule".into(),
+            "policy".into(),
+            "thpt/s".into(),
+            "peak".into(),
+            "bubble".into(),
+            "synthesis".into(),
+        ],
+        rows,
+        notes,
+    }
+}
+
 /// All figures for `lynx figures --all` / EXPERIMENTS.md.
 pub fn all_figures(quick: bool) -> Vec<FigureResult> {
     vec![
@@ -1247,5 +1329,6 @@ pub fn all_figures(quick: bool) -> Vec<FigureResult> {
         search_cost(quick),
         overlap_sweep(quick),
         topo_sweep(quick),
+        tune_front(quick),
     ]
 }

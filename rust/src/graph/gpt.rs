@@ -137,7 +137,110 @@ impl TrainSetup {
     pub fn gpus(&self) -> usize {
         self.tp * self.pp * self.dp
     }
+
+    /// Check the configuration is executable *before* any planning
+    /// happens, with one distinct [`SetupError`] per rejection reason.
+    ///
+    /// Shared by the CLI (`build_setup`) and the tuner's enumerator, so
+    /// an invalid combination fails here with an explanation instead of
+    /// deep in the planner stack. `cluster_gpus` is the machine budget
+    /// when known (`ClusterTopology::total_gpus`); `chunks` is the
+    /// schedule's virtual chunks per stage (1 for unchunked schedules).
+    pub fn validate(&self, cluster_gpus: Option<usize>, chunks: usize) -> Result<(), SetupError> {
+        for (name, v) in [
+            ("tp", self.tp),
+            ("pp", self.pp),
+            ("dp", self.dp),
+            ("micro_batch", self.micro_batch),
+            ("num_micro", self.num_micro),
+            ("seq", self.seq),
+            ("chunks", chunks),
+        ] {
+            if v == 0 {
+                return Err(SetupError::ZeroField(name));
+            }
+        }
+        if let Some(total) = cluster_gpus {
+            let world = self.gpus();
+            if world > total {
+                return Err(SetupError::Oversubscribed { world, cluster: total });
+            }
+        }
+        // Every virtual stage (pp × chunks of them) must host >= 1 layer
+        // for the partition to exist.
+        if self.model.layers < self.pp * chunks {
+            return Err(SetupError::TooFewLayers {
+                layers: self.model.layers,
+                stages: self.pp * chunks,
+            });
+        }
+        Ok(())
+    }
+
+    /// Check this setup realizes exactly `global_batch` samples per step
+    /// (the tuner derives `num_micro = global / (micro_batch × dp)` and
+    /// rejects geometries where that division is ragged).
+    pub fn validate_global_batch(&self, global_batch: usize) -> Result<(), SetupError> {
+        let per_micro = self.micro_batch * self.dp;
+        if per_micro == 0 || global_batch % per_micro != 0 {
+            return Err(SetupError::BatchIndivisible {
+                global: global_batch,
+                micro_batch: self.micro_batch,
+                dp: self.dp,
+            });
+        }
+        if self.global_batch() != global_batch {
+            return Err(SetupError::BatchMismatch {
+                global: global_batch,
+                actual: self.global_batch(),
+            });
+        }
+        Ok(())
+    }
 }
+
+/// Why a [`TrainSetup`] cannot run — one variant per rejection reason so
+/// callers (and tests) can tell them apart without string matching.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SetupError {
+    /// A structural field is zero.
+    ZeroField(&'static str),
+    /// `tp × pp × dp` needs more GPUs than the cluster has.
+    Oversubscribed { world: usize, cluster: usize },
+    /// Fewer layers than virtual stages: some stage would go empty.
+    TooFewLayers { layers: usize, stages: usize },
+    /// `micro_batch × dp` does not divide the requested global batch.
+    BatchIndivisible { global: usize, micro_batch: usize, dp: usize },
+    /// The setup's `global_batch()` is not the requested one.
+    BatchMismatch { global: usize, actual: usize },
+}
+
+impl std::fmt::Display for SetupError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SetupError::ZeroField(name) => write!(f, "--{name} must be >= 1"),
+            SetupError::Oversubscribed { world, cluster } => write!(
+                f,
+                "job needs {world} GPUs (tp × pp × dp) but the cluster has {cluster}"
+            ),
+            SetupError::TooFewLayers { layers, stages } => write!(
+                f,
+                "model has {layers} layers but pp × chunks = {stages} virtual stages \
+                 (some stage would host no layer)"
+            ),
+            SetupError::BatchIndivisible { global, micro_batch, dp } => write!(
+                f,
+                "global batch {global} is not divisible by micro_batch {micro_batch} × dp {dp}"
+            ),
+            SetupError::BatchMismatch { global, actual } => write!(
+                f,
+                "setup realizes a global batch of {actual}, not the requested {global}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SetupError {}
 
 #[cfg(test)]
 mod tests {
@@ -179,6 +282,85 @@ mod tests {
         assert_eq!(s.gpus(), 16);
         assert_eq!(s.seq, 1024);
         assert_eq!(s.with_seq(2048).seq, 2048);
+    }
+
+    fn base() -> TrainSetup {
+        TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 1, 8)
+    }
+
+    #[test]
+    fn validate_accepts_a_sane_setup() {
+        assert_eq!(base().validate(Some(8), 1), Ok(()));
+        assert_eq!(base().validate(None, 1), Ok(()));
+        assert_eq!(base().validate_global_batch(8), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_zero_fields() {
+        let mut s = base();
+        s.tp = 0;
+        assert_eq!(s.validate(None, 1), Err(SetupError::ZeroField("tp")));
+        let mut s = base();
+        s.num_micro = 0;
+        assert_eq!(s.validate(None, 1), Err(SetupError::ZeroField("num_micro")));
+        assert_eq!(base().validate(None, 0), Err(SetupError::ZeroField("chunks")));
+    }
+
+    #[test]
+    fn validate_rejects_oversubscription() {
+        // tp 2 × pp 4 × dp 1 = 8 GPUs on a 6-GPU cluster.
+        assert_eq!(
+            base().validate(Some(6), 1),
+            Err(SetupError::Oversubscribed { world: 8, cluster: 6 })
+        );
+        // Fits exactly (and with headroom) once the cluster is big enough.
+        assert_eq!(base().validate(Some(8), 1), Ok(()));
+        assert_eq!(base().validate(Some(16), 1), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_empty_stages() {
+        // 1.3B has 32 layers: pp 40 (even unchunked) leaves stages empty,
+        // as does pp 12 at 3 chunks (36 virtual stages).
+        let mut s = base();
+        s.pp = 40;
+        assert_eq!(
+            s.validate(None, 1),
+            Err(SetupError::TooFewLayers { layers: 32, stages: 40 })
+        );
+        let mut s = base();
+        s.pp = 12;
+        assert_eq!(
+            s.validate(None, 3),
+            Err(SetupError::TooFewLayers { layers: 32, stages: 36 })
+        );
+        assert_eq!(s.validate(None, 2), Ok(())); // 24 virtual stages fit
+    }
+
+    #[test]
+    fn validate_rejects_ragged_global_batch() {
+        // micro_batch 1 × dp 3 does not divide 8.
+        let s = base().with_dp(3);
+        assert_eq!(
+            s.validate_global_batch(8),
+            Err(SetupError::BatchIndivisible { global: 8, micro_batch: 1, dp: 3 })
+        );
+        // Divisible but num_micro disagrees: 1 × 8 × 2 = 16, not 32.
+        let s = base().with_dp(2);
+        assert_eq!(
+            s.validate_global_batch(32),
+            Err(SetupError::BatchMismatch { global: 32, actual: 16 })
+        );
+        assert_eq!(s.validate_global_batch(16), Ok(()));
+    }
+
+    #[test]
+    fn setup_errors_render_their_reason() {
+        let msg = SetupError::TooFewLayers { layers: 24, stages: 32 }.to_string();
+        assert!(msg.contains("24 layers"), "{msg}");
+        assert!(msg.contains("32 virtual stages"), "{msg}");
+        let msg = SetupError::BatchIndivisible { global: 10, micro_batch: 4, dp: 1 }.to_string();
+        assert!(msg.contains("10"), "{msg}");
     }
 
     #[test]

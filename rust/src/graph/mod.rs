@@ -12,6 +12,6 @@ pub mod gpt;
 pub mod layer;
 pub mod op;
 
-pub use gpt::{ModelConfig, TrainSetup};
+pub use gpt::{ModelConfig, SetupError, TrainSetup};
 pub use layer::{build_layer_graph, LayerGraph};
 pub use op::{CommKind, ComputeKind, Op, OpId, OpKind};

@@ -30,5 +30,8 @@ pub mod report;
 pub mod trace;
 
 pub use metrics::{labeled, HistogramSummary, MetricsRegistry};
-pub use report::{partition_report, run_report, PARTITION_REPORT_SCHEMA, REPORT_SCHEMA};
+pub use report::{
+    partition_report, run_report, tune_report, PARTITION_REPORT_SCHEMA, REPORT_SCHEMA,
+    TUNE_REPORT_SCHEMA,
+};
 pub use trace::{Span, SpanKind, SpanRecorder, Track, TraceSink, NO_INDEX};

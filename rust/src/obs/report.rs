@@ -12,13 +12,17 @@
 //! * `lynx.partition_report.v1` ([`partition_report`]) — one partition
 //!   search invocation: per-search partitions, makespans and
 //!   search-counter snapshots plus the shared plan-cache snapshot.
+//! * `lynx.tune_report.v1` ([`tune_report`]) — one `lynx tune` run: the
+//!   throughput/memory Pareto front, every evaluated point, and the
+//!   search accounting (enumerated / rejected / pruned / evaluated,
+//!   plan-cache reuse, wall-clock).
 //!
 //! Everything is computed from the executed [`PipelineTrace`] and the
 //! [`crate::sim::SimReport`] — no second accounting path that could
 //! drift from what the engine measured.
 
 use super::metrics::MetricsRegistry;
-use crate::plan::PartitionResult;
+use crate::plan::{PartitionResult, TuneResult};
 use crate::sim::{PipelineTrace, SimReport};
 use crate::util::json::Json;
 
@@ -26,6 +30,8 @@ use crate::util::json::Json;
 pub const REPORT_SCHEMA: &str = "lynx.report.v1";
 /// Current partition-report schema tag.
 pub const PARTITION_REPORT_SCHEMA: &str = "lynx.partition_report.v1";
+/// Current tuner-report schema tag.
+pub const TUNE_REPORT_SCHEMA: &str = "lynx.tune_report.v1";
 
 /// Overlap efficiency: achieved / planned, defined as 1.0 when nothing
 /// was planned (an empty window set is vacuously fully achieved).
@@ -161,6 +167,45 @@ pub fn partition_report(
     out
 }
 
+/// Build the `lynx.tune_report.v1` JSON for one `lynx tune` run: the
+/// Pareto front (throughput-descending), every evaluated point, and the
+/// search accounting. `wall_secs` keys are excluded from bench snapshots
+/// by name; everything else is deterministic.
+pub fn tune_report(model: &str, topology: &str, global_batch: usize, r: &TuneResult) -> Json {
+    let mut front = Json::Arr(vec![]);
+    for p in r.front_points() {
+        front.push(p.to_json());
+    }
+    let mut points = Json::Arr(vec![]);
+    for p in &r.points {
+        points.push(p.to_json());
+    }
+    let mut search = Json::obj();
+    search
+        .set("enumerated", Json::from(r.enumerated))
+        .set("rejected", Json::from(r.rejected))
+        .set("pruned_mem", Json::from(r.pruned_mem))
+        .set("pruned_bound", Json::from(r.pruned_bound))
+        .set("evaluated", Json::from(r.evaluated()))
+        .set("distinct_geometries", Json::from(r.distinct_geometries))
+        .set("waves", Json::from(r.waves))
+        .set("plan_solves", Json::from(r.plan_solves))
+        .set("cache_hits", Json::from(r.cache_hits))
+        .set("prune_rate", Json::from(r.prune_rate()))
+        .set("cache_hit_rate", Json::from(r.hit_rate()))
+        .set("wall_secs", Json::from(r.wall_secs));
+    let mut out = Json::obj();
+    out.set("schema", Json::from(TUNE_REPORT_SCHEMA))
+        .set("model", Json::from(model))
+        .set("topology", Json::from(topology))
+        .set("global_batch", Json::from(global_batch))
+        .set("front", front)
+        .set("points", points)
+        .set("search", search)
+        .set("metrics", r.metrics.snapshot());
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,5 +262,39 @@ mod tests {
     fn vacuous_efficiency_is_one() {
         assert_eq!(efficiency(0.0, 0.0), 1.0);
         assert_eq!(efficiency(1.0, 2.0), 0.5);
+    }
+
+    #[test]
+    fn tune_report_carries_front_and_search_accounting() {
+        let space = crate::plan::TuneSpace {
+            model: ModelConfig::by_name("1.3B").unwrap(),
+            cluster: crate::topo::ClusterTopology::parse("1x4").unwrap(),
+            global_batch: 8,
+            micro_batch: 1,
+            seq: 1024,
+            zero1: false,
+            schedules: vec![ScheduleKind::OneFOneB, ScheduleKind::GPipe],
+            policies: vec![crate::plan::PolicyKind::Block],
+        };
+        let r = crate::plan::tune(&space, &crate::plan::TuneOptions::default());
+        let j = tune_report("1.3B", "1x4", 8, &r);
+        assert_eq!(j.expect("schema").as_str(), Some(TUNE_REPORT_SCHEMA));
+        let front = j.expect("front").as_arr().unwrap();
+        assert!(!front.is_empty());
+        for p in front {
+            assert!(p.expect("throughput").as_f64().unwrap() > 0.0);
+            assert!(p.expect("peak_mem").as_f64().unwrap() > 0.0);
+            assert_eq!(p.expect("oom").as_bool(), Some(false));
+        }
+        let search = j.expect("search");
+        let enumerated = search.expect("enumerated").as_f64().unwrap() as usize;
+        let accounted = search.expect("rejected").as_f64().unwrap()
+            + search.expect("pruned_mem").as_f64().unwrap()
+            + search.expect("pruned_bound").as_f64().unwrap()
+            + search.expect("evaluated").as_f64().unwrap();
+        assert_eq!(enumerated, accounted as usize, "every candidate is accounted for");
+        assert!(search.expect("wall_secs").as_f64().unwrap() >= 0.0);
+        // Round-trips through the parser.
+        assert!(Json::parse(&j.pretty()).is_ok());
     }
 }

@@ -314,6 +314,95 @@ impl PlanCache {
     pub fn absorb_metrics(&mut self, other: &MetricsRegistry) {
         self.metrics.merge(other);
     }
+
+    /// Fold another cache of the *same fingerprint* into this one:
+    /// existing entries win (matching [`insert_solved`]'s first-insert
+    /// rule), counters merge. Used by [`PlanCachePool`] when two
+    /// checkouts of one fingerprint return.
+    pub fn absorb(&mut self, other: PlanCache) {
+        for (k, e) in other.map {
+            self.map.entry(k).or_insert(e);
+        }
+        self.metrics.merge(&other.metrics);
+    }
+}
+
+/// A pool of [`PlanCache`]s scoped by fingerprint, shared across the
+/// tuner's candidate evaluations.
+///
+/// [`PlanKey`] deliberately omits the model, tp width, and microbatch
+/// geometry — they are constant within one search, fixed by the
+/// fingerprint. Sharing one raw `PlanCache` across *different*
+/// geometries would therefore alias unrelated subproblems; the pool
+/// keeps one cache per fingerprint instead, so every candidate that
+/// shares a geometry (schedules, policies, synth budgets over the same
+/// (tp, pp, dp)) reuses its plans while distinct geometries stay
+/// isolated. Checkout hands the cache to a worker by value (no lock held
+/// while planning); checkin returns it, absorbing any cache a concurrent
+/// worker opened for the same fingerprint in the meantime.
+#[derive(Debug, Default)]
+pub struct PlanCachePool {
+    caches: std::sync::Mutex<std::collections::HashMap<String, PlanCache>>,
+}
+
+impl PlanCachePool {
+    pub fn new() -> PlanCachePool {
+        PlanCachePool::default()
+    }
+
+    /// Take the cache for `fingerprint` out of the pool (a fresh one when
+    /// the fingerprint is new).
+    pub fn checkout(&self, fingerprint: &str) -> PlanCache {
+        let mut caches = self.caches.lock().expect("plan-cache pool poisoned");
+        caches.remove(fingerprint).unwrap_or_default()
+    }
+
+    /// Return a checked-out cache to the pool.
+    pub fn checkin(&self, fingerprint: &str, cache: PlanCache) {
+        let mut caches = self.caches.lock().expect("plan-cache pool poisoned");
+        match caches.entry(fingerprint.to_string()) {
+            std::collections::hash_map::Entry::Occupied(mut e) => e.get_mut().absorb(cache),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(cache);
+            }
+        }
+    }
+
+    /// Distinct fingerprints currently pooled.
+    pub fn len(&self) -> usize {
+        self.caches.lock().expect("plan-cache pool poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Aggregated `(hits, solves)` over every pooled cache.
+    pub fn counters(&self) -> (usize, usize) {
+        let caches = self.caches.lock().expect("plan-cache pool poisoned");
+        caches
+            .values()
+            .fold((0, 0), |(h, s), c| (h + c.hits(), s + c.solves()))
+    }
+
+    /// Aggregated hits / (hits + solves) over every pooled cache.
+    pub fn hit_rate(&self) -> f64 {
+        let (h, s) = self.counters();
+        if h + s == 0 {
+            0.0
+        } else {
+            h as f64 / (h + s) as f64
+        }
+    }
+
+    /// Merge every pooled cache's registry (cache + planner counters)
+    /// into `out`.
+    pub fn merge_metrics_into(&self, out: &mut MetricsRegistry) {
+        let caches = self.caches.lock().expect("plan-cache pool poisoned");
+        for c in caches.values() {
+            out.merge(c.metrics());
+        }
+    }
 }
 
 fn dump_entry(key: &PlanKey, out: &PlanOutcome) -> Json {
@@ -478,6 +567,47 @@ mod tests {
         c.get_or_plan(&t, &ctx, PolicyKind::Selective);
         assert_eq!(c.solves(), 2);
         assert_eq!(c.hits(), 0);
+    }
+
+    #[test]
+    fn pool_scopes_caches_by_fingerprint_and_aggregates_counters() {
+        let t = tables();
+        let pool = PlanCachePool::new();
+        let ctx = t.build_ctx_1f1b(1, 8);
+        let mut a = pool.checkout("fp-a");
+        a.get_or_plan(&t, &ctx, PolicyKind::Full); // solve
+        pool.checkin("fp-a", a);
+        let mut a2 = pool.checkout("fp-a");
+        a2.get_or_plan(&t, &ctx, PolicyKind::Full); // pooled entry survived: hit
+        pool.checkin("fp-a", a2);
+        let mut b = pool.checkout("fp-b");
+        b.get_or_plan(&t, &ctx, PolicyKind::Full); // isolated fingerprint: solve
+        pool.checkin("fp-b", b);
+        assert_eq!(pool.len(), 2);
+        assert!(!pool.is_empty());
+        assert_eq!(pool.counters(), (1, 2));
+        assert!((pool.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        let mut m = MetricsRegistry::new();
+        pool.merge_metrics_into(&mut m);
+        assert_eq!(m.counter("cache.hits"), 1);
+        assert_eq!(m.counter("cache.solves"), 2);
+    }
+
+    #[test]
+    fn pool_checkin_merges_concurrent_checkouts_of_one_fingerprint() {
+        let t = tables();
+        let pool = PlanCachePool::new();
+        let mut a = pool.checkout("fp");
+        let mut b = pool.checkout("fp"); // same fingerprint while `a` is out
+        let ctx = t.build_ctx_1f1b(1, 8);
+        a.get_or_plan(&t, &ctx, PolicyKind::Full);
+        b.get_or_plan(&t, &ctx, PolicyKind::Full);
+        pool.checkin("fp", a);
+        pool.checkin("fp", b);
+        assert_eq!(pool.len(), 1);
+        let merged = pool.checkout("fp");
+        assert_eq!(merged.len(), 1, "duplicate entries collapse, first insert wins");
+        assert_eq!(merged.solves(), 2);
     }
 
     #[test]

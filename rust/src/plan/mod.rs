@@ -10,6 +10,8 @@
 //!   (greedy, incremental) and the exact min-makespan DP search.
 //! * [`costeval`] — the training cost model of Fig. 4.
 //! * [`tables`] / [`cache`] — the memoized evaluation core.
+//! * [`tune`] — the joint configuration auto-tuner behind `lynx tune`:
+//!   bound-pruned Pareto search over (tp, pp, dp, schedule, policy).
 //!
 //! # Evaluation-core architecture (CostTables + PlanCache + segments)
 //!
@@ -71,9 +73,10 @@ pub mod opt;
 pub mod partition;
 pub mod rules;
 pub mod tables;
+pub mod tune;
 pub mod types;
 
-pub use cache::{PlanCache, PlanKey};
+pub use cache::{PlanCache, PlanCachePool, PlanKey};
 pub use costeval::{build_stage_ctx, build_stage_ctx_for, plan_stage, stage_cost, StageCost};
 pub use heu::{heu_plan, HeuOptions};
 pub use opt::{checkmate_plan, opt_plan, OptOptions};
@@ -83,4 +86,8 @@ pub use partition::{
     Pr1Reference, SearchKind, SearchOptions,
 };
 pub use tables::{CostTables, StageRole};
+pub use tune::{
+    default_policies, default_schedules, pareto_front, schedule_token, tune, Candidate,
+    TuneOptions, TuneResult, TuneSpace, TunedPoint,
+};
 pub use types::{LayerPlan, Phase, PlanOutcome, PolicyKind, StageCtx, StagePlan};

@@ -35,8 +35,71 @@ use crate::graph::{LayerGraph, TrainSetup};
 use crate::obs::MetricsRegistry;
 use crate::sched::ScheduleKind;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
+
+// ---- process-wide worker budget ------------------------------------
+//
+// Every scoped-thread team in the process claims its workers here: the
+// DP partitioner's cost-cell evaluators and the tuner's candidate team
+// (`plan::tune`) share one budget of `available_parallelism` slots, so
+// nested parallelism (tuner × partitioner) never oversubscribes the
+// machine. The calling thread counts as one worker — a claim that finds
+// the budget exhausted degrades the caller to serial execution instead
+// of stacking a second team on top of the first.
+
+static WORKERS_CLAIMED: AtomicUsize = AtomicUsize::new(0);
+
+fn worker_budget() -> usize {
+    static TOTAL: OnceLock<usize> = OnceLock::new();
+    *TOTAL.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// A claim on worker slots beyond the calling thread, released on drop.
+pub(crate) struct WorkerLease {
+    extra: usize,
+}
+
+impl WorkerLease {
+    /// Team size this lease supports: the caller's own slot plus the
+    /// granted extra workers.
+    pub(crate) fn team(&self) -> usize {
+        1 + self.extra
+    }
+}
+
+impl Drop for WorkerLease {
+    fn drop(&mut self) {
+        if self.extra > 0 {
+            WORKERS_CLAIMED.fetch_sub(self.extra, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Claim up to `desired` extra worker slots (beyond the calling thread)
+/// from the process budget. Grants whatever is left — possibly zero, in
+/// which case the caller runs serial.
+pub(crate) fn claim_workers(desired: usize) -> WorkerLease {
+    // One slot of the budget belongs to the calling thread itself.
+    let budget = worker_budget().saturating_sub(1);
+    let mut claimed = WORKERS_CLAIMED.load(Ordering::SeqCst);
+    loop {
+        let grant = desired.min(budget.saturating_sub(claimed));
+        if grant == 0 {
+            return WorkerLease { extra: 0 };
+        }
+        match WORKERS_CLAIMED.compare_exchange(
+            claimed,
+            claimed + grant,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        ) {
+            Ok(_) => return WorkerLease { extra: grant },
+            Err(cur) => claimed = cur,
+        }
+    }
+}
 
 /// Which partition-search algorithm to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -579,7 +642,9 @@ fn run_dp(
 
 /// Recompute-free slot-time lower bound of stage `s` hosting `l` layers
 /// (per-stage sums: a stage on the slow fabric tier has a higher floor).
-fn time_lower_bound(tables: &CostTables, s: usize, l: usize) -> f64 {
+/// Also the tuner's per-candidate throughput bound ingredient
+/// (`plan::tune`): no plan can make the stage's slot faster than this.
+pub(crate) fn time_lower_bound(tables: &CostTables, s: usize, l: usize) -> f64 {
     let role = StageRole::of(s, tables.num_stages);
     let mut t = (tables.stage_fwd_layer[s] + tables.stage_bwd_layer[s]) * l as f64;
     if matches!(role, StageRole::First | StageRole::Solo) {
@@ -606,7 +671,13 @@ fn eval_cells(
     } else {
         threads
     };
-    let t = auto.min(todo.len().max(1));
+    let desired = auto.min(todo.len().max(1));
+    // Claim the team from the process budget: when a tuner worker is
+    // already running on this thread the budget is exhausted and the
+    // lease degrades us to serial — the results are identical either way
+    // (cells are independent and the cache's first insert wins).
+    let lease = claim_workers(desired.saturating_sub(1));
+    let t = lease.team();
 
     if t <= 1 {
         return todo

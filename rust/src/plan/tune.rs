@@ -1,0 +1,895 @@
+//! `lynx tune` — joint configuration auto-tuning over the
+//! (tp, pp, dp, schedule, recompute policy) product.
+//!
+//! Lynx optimizes recomputation and partitioning *within* a fixed
+//! parallel configuration; this module searches *across* configurations:
+//! given a model, a bounded [`ClusterTopology`] and a global batch size,
+//! it enumerates every valid candidate, plans + partitions + simulates
+//! the survivors, and returns the throughput/memory Pareto front.
+//!
+//! Search speed is a deliverable of its own. Three mechanisms keep the
+//! tuner interactive on big clusters:
+//!
+//! 1. **Bound-based pruning.** Every candidate gets two recompute-free
+//!    bounds computed *before* any plan solve: a throughput upper bound
+//!    (the bottleneck stage must serially process `num_micro`
+//!    fwd+bwd pairs, each at least [`time_lower_bound`]; minimizing the
+//!    bottleneck over fractional layer splits by bisection gives
+//!    `T*`, so `iteration >= m · T*`) and a peak-memory lower bound
+//!    (pigeonhole: some stage hosts `>= ceil(L/pp)` layers, and no plan
+//!    can retain less than the boundary checkpoints plus the W-residual
+//!    reserve). A candidate is skipped only when an already-evaluated
+//!    point beats its bounds *with strict inequality on one axis* —
+//!    then the evaluated point strictly dominates anything the candidate
+//!    could have reported, so the pruned search returns the
+//!    **bit-identical** Pareto front to exhaustive evaluation
+//!    (property-tested in `tests/tune_prop.rs`).
+//! 2. **One shared plan-cache pool.** Candidates that share a geometry
+//!    fingerprint (same (tp, pp, dp) under different schedules, synth
+//!    budgets, or policies) reuse each other's `plan_stage` solves via a
+//!    [`PlanCachePool`]; workers fold their counters back through
+//!    [`MetricsRegistry::merge`].
+//! 3. **A persistent scoped-thread team.** Surviving candidates are
+//!    evaluated in deterministic fixed-size waves by one worker team
+//!    spawned for the whole candidate loop (`std::thread::scope`), with
+//!    the team claimed from the process-wide worker budget shared with
+//!    `exact_dp_partition` — nested parallelism (tuner × partitioner)
+//!    degrades gracefully instead of oversubscribing. Waves are cut and
+//!    grouped by fingerprint identically at every thread count, so
+//!    parallel and serial runs return identical points *and* counters.
+
+use super::cache::{PlanCache, PlanCachePool};
+use super::partition::{claim_workers, exact_dp_partition, time_lower_bound};
+use super::partition::{SearchKind, SearchOptions};
+use super::tables::CostTables;
+use super::types::PolicyKind;
+use crate::costmodel::{CostModel, Topology};
+use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
+use crate::obs::MetricsRegistry;
+use crate::sched::{synth_axis, ScheduleKind, SynthesisOutcome};
+use crate::sim::{simulate_cached, PartitionMode, SimConfig};
+use crate::topo::ClusterTopology;
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Candidates per deterministic evaluation wave. A constant (never a
+/// function of the thread count) so the evaluated-set growth — and with
+/// it every prune decision — is identical for serial and parallel runs.
+const WAVE: usize = 8;
+
+/// The candidate space of one tuning run.
+#[derive(Debug, Clone)]
+pub struct TuneSpace {
+    pub model: ModelConfig,
+    /// Must be bounded (`total_gpus()` is `Some`): every candidate uses
+    /// exactly all of the cluster's GPUs.
+    pub cluster: ClusterTopology,
+    /// Samples per optimizer step; `num_micro` is derived per candidate
+    /// as `global_batch / (micro_batch × dp)`.
+    pub global_batch: usize,
+    pub micro_batch: usize,
+    pub seq: usize,
+    pub zero1: bool,
+    /// Schedule axis — [`ScheduleKind::Synth`] entries make the synth
+    /// budget a searched knob.
+    pub schedules: Vec<ScheduleKind>,
+    /// Recompute-policy axis.
+    pub policies: Vec<PolicyKind>,
+}
+
+impl TuneSpace {
+    /// The default axes: the schedule spread (1F1B, GPipe, ZB-H1, ZB-V)
+    /// plus two synthesis budgets, over three policies spanning the
+    /// memory/recompute trade-off.
+    pub fn preset(model: ModelConfig, cluster: ClusterTopology, global_batch: usize) -> TuneSpace {
+        TuneSpace {
+            model,
+            cluster,
+            global_batch,
+            micro_batch: 1,
+            seq: 1024,
+            zero1: false,
+            schedules: default_schedules(),
+            policies: default_policies(),
+        }
+    }
+}
+
+/// The preset schedule axis (see [`TuneSpace::preset`]).
+pub fn default_schedules() -> Vec<ScheduleKind> {
+    let mut v = vec![
+        ScheduleKind::OneFOneB,
+        ScheduleKind::GPipe,
+        ScheduleKind::ZbH1,
+        ScheduleKind::ZbV,
+    ];
+    v.extend(synth_axis(&[50, 33]));
+    v
+}
+
+/// The preset policy axis (see [`TuneSpace::preset`]).
+pub fn default_policies() -> Vec<PolicyKind> {
+    vec![PolicyKind::Selective, PolicyKind::Block, PolicyKind::LynxHeu]
+}
+
+/// Tuner knobs.
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    /// Worker threads for the candidate team; 0 = auto (claimed from the
+    /// process worker budget, capped at the wave size).
+    pub threads: usize,
+    /// Disable bound-based pruning and evaluate every valid candidate
+    /// (the oracle the property tests and the bench compare against).
+    pub exhaustive: bool,
+    /// Partition search per candidate: greedy Algorithm 1 (default, via
+    /// the simulator's Lynx dual-run) or the exact DP partitioner.
+    pub search: SearchKind,
+}
+
+impl Default for TuneOptions {
+    fn default() -> TuneOptions {
+        TuneOptions { threads: 0, exhaustive: false, search: SearchKind::Greedy }
+    }
+}
+
+/// One enumerated candidate configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub tp: usize,
+    pub pp: usize,
+    pub dp: usize,
+    pub num_micro: usize,
+    pub schedule: ScheduleKind,
+    pub policy: PolicyKind,
+    /// Index into the geometry table (one entry per distinct
+    /// (tp, pp, dp); candidates of one geometry share tables, cost
+    /// model, and plan-cache fingerprint).
+    geom: usize,
+}
+
+/// Everything shared by the candidates of one (tp, pp, dp) geometry.
+struct Geometry {
+    setup: TrainSetup,
+    cm: CostModel,
+    tables: CostTables,
+    fingerprint: String,
+}
+
+/// One evaluated configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedPoint {
+    pub tp: usize,
+    pub pp: usize,
+    pub dp: usize,
+    pub num_micro: usize,
+    pub schedule: ScheduleKind,
+    pub policy: PolicyKind,
+    /// Samples/s of the executed simulation.
+    pub throughput: f64,
+    /// Peak device memory across stages, bytes (exact W-residual
+    /// accounting).
+    pub peak_mem: f64,
+    pub iteration_secs: f64,
+    pub bubble_ratio: f64,
+    pub oom: bool,
+    /// How this candidate's schedule order was produced — recorded per
+    /// candidate (a degraded synth budget shows up in the report, not as
+    /// a one-shot warning).
+    pub schedule_outcome: SynthesisOutcome,
+    pub partition: Vec<usize>,
+}
+
+/// Round-trippable schedule token: unlike [`ScheduleKind::label`] it
+/// keeps the searched parameter (`synth:50`, `interleaved:3`), so two
+/// synth budgets stay distinguishable in reports and benches.
+pub fn schedule_token(kind: ScheduleKind) -> String {
+    match kind {
+        ScheduleKind::Synth { budget_pct } => format!("synth:{budget_pct}"),
+        ScheduleKind::Interleaved { chunks } => format!("interleaved:{chunks}"),
+        k => k.label().to_string(),
+    }
+}
+
+impl TunedPoint {
+    /// `(tp, pp)` shape label, e.g. `tp2·pp3·dp2`.
+    pub fn shape_label(&self) -> String {
+        format!("tp{}·pp{}·dp{}", self.tp, self.pp, self.dp)
+    }
+
+    /// Pareto dominance on (throughput max, peak_mem min): no worse on
+    /// both axes and strictly better on at least one. OOM points
+    /// dominate nothing and are dominated by everything feasible.
+    pub fn dominates(&self, other: &TunedPoint) -> bool {
+        if self.oom {
+            return false;
+        }
+        if other.oom {
+            return true;
+        }
+        self.throughput >= other.throughput
+            && self.peak_mem <= other.peak_mem
+            && (self.throughput > other.throughput || self.peak_mem < other.peak_mem)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("tp", Json::from(self.tp))
+            .set("pp", Json::from(self.pp))
+            .set("dp", Json::from(self.dp))
+            .set("num_micro", Json::from(self.num_micro))
+            .set("schedule", Json::from(schedule_token(self.schedule)))
+            .set("policy", Json::from(self.policy.label()))
+            .set("throughput", Json::from(self.throughput))
+            .set("peak_mem", Json::from(self.peak_mem))
+            .set("iteration_secs", Json::from(self.iteration_secs))
+            .set("bubble_ratio", Json::from(self.bubble_ratio))
+            .set("oom", Json::from(self.oom))
+            .set("schedule_synthesis", Json::from(self.schedule_outcome.label()))
+            .set(
+                "fallback_reason",
+                match self.schedule_outcome.fallback_reason() {
+                    Some(r) => Json::from(r),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "partition",
+                Json::Arr(self.partition.iter().map(|&l| Json::from(l)).collect()),
+            );
+        o
+    }
+}
+
+/// Result of one tuning run.
+#[derive(Debug)]
+pub struct TuneResult {
+    /// Every evaluated candidate, in enumeration order (OOM points
+    /// included, flagged).
+    pub points: Vec<TunedPoint>,
+    /// Indices into `points` of the Pareto front (feasible,
+    /// non-dominated), sorted by throughput descending.
+    pub front: Vec<usize>,
+    /// Full candidate count before validity filtering.
+    pub enumerated: usize,
+    /// Candidates rejected by `TrainSetup::validate` / batch
+    /// divisibility before bounds were even computed.
+    pub rejected: usize,
+    /// Candidates skipped because no plan can fit memory (bound exceeds
+    /// the device before any solve).
+    pub pruned_mem: usize,
+    /// Candidates skipped because an evaluated point strictly dominates
+    /// their (throughput UB, memory LB) corner.
+    pub pruned_bound: usize,
+    /// Aggregated plan-cache hits across all candidate evaluations.
+    pub cache_hits: usize,
+    /// Aggregated `plan_stage` solves across all candidate evaluations.
+    pub plan_solves: usize,
+    /// Distinct (tp, pp, dp) geometries that produced candidates.
+    pub distinct_geometries: usize,
+    /// Evaluation waves run.
+    pub waves: usize,
+    pub wall_secs: f64,
+    /// `tune.*` counters/gauges plus the merged per-fingerprint cache
+    /// registries (cache + planner counters folded back from workers).
+    pub metrics: MetricsRegistry,
+}
+
+impl TuneResult {
+    pub fn evaluated(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn pruned(&self) -> usize {
+        self.pruned_mem + self.pruned_bound
+    }
+
+    /// Share of valid candidates skipped without a plan solve.
+    pub fn prune_rate(&self) -> f64 {
+        let total = self.evaluated() + self.pruned();
+        if total == 0 {
+            0.0
+        } else {
+            self.pruned() as f64 / total as f64
+        }
+    }
+
+    /// Plan-cache hit rate across all candidate evaluations.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.plan_solves;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    pub fn front_points(&self) -> Vec<&TunedPoint> {
+        self.front.iter().map(|&i| &self.points[i]).collect()
+    }
+
+    /// Highest-throughput feasible point, if any.
+    pub fn best(&self) -> Option<&TunedPoint> {
+        self.front.first().map(|&i| &self.points[i])
+    }
+}
+
+/// The Pareto front over evaluated points: indices of feasible points no
+/// other feasible point dominates, sorted by throughput descending (ties
+/// by memory ascending, then index — a total, deterministic order).
+pub fn pareto_front(points: &[TunedPoint]) -> Vec<usize> {
+    let mut front: Vec<usize> = (0..points.len())
+        .filter(|&i| {
+            !points[i].oom
+                && !points.iter().enumerate().any(|(j, p)| j != i && p.dominates(&points[i]))
+        })
+        .collect();
+    front.sort_by(|&a, &b| {
+        points[b]
+            .throughput
+            .total_cmp(&points[a].throughput)
+            .then(points[a].peak_mem.total_cmp(&points[b].peak_mem))
+            .then(a.cmp(&b))
+    });
+    front
+}
+
+/// Chunks per pipeline stage a schedule kind executes with (the
+/// constraint input to `TrainSetup::validate`).
+fn kind_chunks(kind: ScheduleKind) -> usize {
+    match kind {
+        ScheduleKind::Interleaved { chunks } => chunks,
+        ScheduleKind::ZbV | ScheduleKind::Synth { .. } => 2,
+        _ => 1,
+    }
+}
+
+/// Enumerate the valid candidate product and build one [`Geometry`] per
+/// distinct (tp, pp, dp). Returns `(geometries, candidates, rejected)`
+/// where `rejected` counts combinations `TrainSetup::validate` (or batch
+/// divisibility) refused.
+fn enumerate(space: &TuneSpace) -> (Vec<Geometry>, Vec<Candidate>, usize) {
+    let total = space
+        .cluster
+        .total_gpus()
+        .expect("the tuner needs a bounded cluster topology (not a uniform fabric)");
+    let shapes = space.cluster.parallel_shapes().unwrap();
+    let mut geoms: Vec<Geometry> = Vec::new();
+    let mut candidates: Vec<Candidate> = Vec::new();
+    let mut rejected = 0usize;
+    for (tp, pp, dp) in shapes {
+        let per_step = space.micro_batch * dp;
+        let num_micro = space.global_batch / per_step;
+        let setup = TrainSetup::new(space.model.clone(), tp, pp, space.micro_batch, num_micro)
+            .with_seq(space.seq)
+            .with_dp(dp)
+            .with_zero1(space.zero1);
+        let cells = space.schedules.len() * space.policies.len();
+        if setup.validate_global_batch(space.global_batch).is_err() {
+            rejected += cells;
+            continue;
+        }
+        // A starved pipeline (fewer microbatches than stages) is never
+        // chosen in practice and not every closed schedule rule covers
+        // it; reject the shape like an invalid one.
+        if num_micro < pp {
+            rejected += cells;
+            continue;
+        }
+        let mut geom_idx = None;
+        for &schedule in &space.schedules {
+            let chunks = kind_chunks(schedule);
+            // Multi-chunk placements (V-shape, interleaved loops) need a
+            // real pipeline to wrap around.
+            if setup.validate(Some(total), chunks).is_err() || (chunks > 1 && pp < 2) {
+                rejected += space.policies.len();
+                continue;
+            }
+            let geom = *geom_idx.get_or_insert_with(|| {
+                let topo = Topology::hierarchical(space.cluster.clone(), tp, pp, dp);
+                let cm = CostModel::new(topo);
+                let tables = CostTables::new(&setup, &cm, &build_layer_graph(&setup));
+                let fingerprint = PlanCache::fingerprint(&tables, &cm);
+                geoms.push(Geometry { setup: setup.clone(), cm, tables, fingerprint });
+                geoms.len() - 1
+            });
+            for &policy in &space.policies {
+                candidates.push(Candidate { tp, pp, dp, num_micro, schedule, policy, geom });
+            }
+        }
+    }
+    (geoms, candidates, rejected)
+}
+
+/// Recompute-free bounds of one candidate — no plan solve involved.
+#[derive(Debug, Clone, Copy)]
+struct Bounds {
+    /// No plan/partition can report more samples/s than this.
+    ub_throughput: f64,
+    /// No plan/partition can report a smaller peak than this (bytes).
+    lb_mem: f64,
+}
+
+/// Lower bound on the bottleneck stage's recompute-free slot time over
+/// *every* layer partition: bisect for the smallest `T` at which the
+/// stages' fractional layer capacities `(T - c_s)/a_s` cover the model
+/// (the LP relaxation of min-max [`time_lower_bound`] — fractional
+/// layers only lower the optimum, so this stays a valid bound).
+fn bottleneck_lower_bound(tables: &CostTables, layers: usize) -> f64 {
+    let stages = tables.num_stages;
+    let a: Vec<f64> = (0..stages)
+        .map(|s| (tables.stage_fwd_layer[s] + tables.stage_bwd_layer[s]).max(1e-300))
+        .collect();
+    let c: Vec<f64> = (0..stages).map(|s| time_lower_bound(tables, s, 0)).collect();
+    let l = layers as f64;
+    let mut hi = (0..stages).map(|s| c[s] + a[s] * l).fold(f64::INFINITY, f64::min);
+    let mut lo = 0.0f64;
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        let cap: f64 = (0..stages).map(|s| ((mid - c[s]) / a[s]).max(0.0)).sum();
+        if cap >= l {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    lo
+}
+
+fn candidate_bounds(space: &TuneSpace, geom: &Geometry, cand: &Candidate) -> Bounds {
+    let tables = &geom.tables;
+    let stages = tables.num_stages;
+    let layers = tables.setup.model.layers;
+    // Memory: some stage hosts >= ceil(L/pp) layers (pigeonhole), and a
+    // stage's peak is at least its statics plus the boundary checkpoints
+    // and W-residual reserve of its exact in-flight count — the same
+    // floor the DP partitioner's memory pruning uses. The hosting stage
+    // is unknown, so take the min over stages.
+    let sched = cand.schedule.build(stages, cand.num_micro);
+    let lceil = (layers + stages - 1) / stages;
+    let lb_mem = (0..stages)
+        .map(|s| {
+            let n0 = tables.n_batch_frac_for(s, sched.as_ref());
+            let n1 = tables.n_batch_frac_h1_for(s, sched.as_ref());
+            tables.static_mem(s, lceil)
+                + (tables.boundary_bytes * n1
+                    + (n0 - n1).max(0.0) * tables.store_all_bytes)
+                    * lceil as f64
+        })
+        .fold(f64::INFINITY, f64::min);
+    // Throughput: the bottleneck stage serially processes `num_micro`
+    // fwd+bwd pairs, so iteration >= m · T*.
+    let t_star = bottleneck_lower_bound(tables, layers);
+    let ub_throughput = if t_star > 0.0 {
+        space.global_batch as f64 / (cand.num_micro as f64 * t_star)
+    } else {
+        f64::INFINITY
+    };
+    Bounds { ub_throughput, lb_mem }
+}
+
+/// Can `point` (evaluated, feasible) strictly dominate *anything* a
+/// candidate with these bounds could report? True only with strict
+/// inequality on at least one bound — the prune-soundness corner: the
+/// candidate's true point has `throughput <= ub` and `mem >= lb`, so a
+/// strict corner win means strict Pareto dominance of the true point.
+fn corner_dominates(tp: f64, mem: f64, b: &Bounds) -> bool {
+    (tp > b.ub_throughput && mem <= b.lb_mem) || (tp >= b.ub_throughput && mem < b.lb_mem)
+}
+
+/// Evaluate one candidate: plan + partition + simulate on the shared
+/// evaluation core. Deterministic given (geometry, candidate) — cache
+/// state only changes *when* plans are solved, never what they contain
+/// (`PlanKey` is the complete dependency set; first insert wins).
+fn evaluate_candidate(
+    opts: &TuneOptions,
+    geom: &Geometry,
+    cand: &Candidate,
+    cache: &mut PlanCache,
+) -> TunedPoint {
+    let mut cfg = SimConfig::new(geom.setup.clone(), cand.policy, PartitionMode::Lynx)
+        .with_schedule(cand.schedule);
+    if opts.search == SearchKind::Dp {
+        // Exact partition first, then execute it. `threads: 1` keeps the
+        // inner search serial even when the worker budget has free slots
+        // — the tuner's own team is the parallel axis here.
+        let popts = SearchOptions { schedule: Some(cand.schedule), threads: 1 };
+        let ex = exact_dp_partition(&geom.tables, cache, cand.policy, &popts);
+        cfg = cfg.with_fixed_partition(ex.partition);
+    }
+    let (r, _trace) = simulate_cached(&geom.cm, &cfg, &geom.tables, cache);
+    TunedPoint {
+        tp: cand.tp,
+        pp: cand.pp,
+        dp: cand.dp,
+        num_micro: cand.num_micro,
+        schedule: cand.schedule,
+        policy: cand.policy,
+        throughput: r.throughput,
+        peak_mem: r.peak_mem(),
+        iteration_secs: r.iteration_secs,
+        bubble_ratio: r.bubble_ratio,
+        oom: r.oom,
+        schedule_outcome: r.schedule_outcome,
+        partition: r.partition,
+    }
+}
+
+// ---- the persistent candidate team ---------------------------------
+
+struct TeamState {
+    queue: VecDeque<Vec<usize>>,
+    /// Groups submitted but not yet completed.
+    outstanding: usize,
+    shutdown: bool,
+}
+
+/// Job queue of the tuner's worker team: one `std::thread::scope` team
+/// lives across the whole candidate loop, the main thread submits one
+/// wave of fingerprint groups at a time and waits for the wave to drain.
+struct Team {
+    state: Mutex<TeamState>,
+    work: Condvar,
+    idle: Condvar,
+}
+
+impl Team {
+    fn new() -> Team {
+        Team {
+            state: Mutex::new(TeamState {
+                queue: VecDeque::new(),
+                outstanding: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+        }
+    }
+
+    fn submit(&self, groups: Vec<Vec<usize>>) {
+        let mut st = self.state.lock().expect("tune team poisoned");
+        st.outstanding += groups.len();
+        st.queue.extend(groups);
+        drop(st);
+        self.work.notify_all();
+    }
+
+    fn wait_idle(&self) {
+        let mut st = self.state.lock().expect("tune team poisoned");
+        while st.outstanding > 0 {
+            st = self.idle.wait(st).expect("tune team poisoned");
+        }
+    }
+
+    /// Worker side: next group, or `None` after shutdown.
+    fn next_group(&self) -> Option<Vec<usize>> {
+        let mut st = self.state.lock().expect("tune team poisoned");
+        loop {
+            if let Some(g) = st.queue.pop_front() {
+                return Some(g);
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.work.wait(st).expect("tune team poisoned");
+        }
+    }
+
+    fn group_done(&self) {
+        let mut st = self.state.lock().expect("tune team poisoned");
+        st.outstanding -= 1;
+        if st.outstanding == 0 {
+            self.idle.notify_all();
+        }
+    }
+
+    fn shutdown(&self) {
+        let mut st = self.state.lock().expect("tune team poisoned");
+        st.shutdown = true;
+        drop(st);
+        self.work.notify_all();
+    }
+}
+
+/// Evaluate one fingerprint group: check the geometry's cache out of the
+/// pool once, run the group's candidates in order, check it back in.
+fn eval_group(
+    opts: &TuneOptions,
+    geoms: &[Geometry],
+    candidates: &[Candidate],
+    pool: &PlanCachePool,
+    results: &Mutex<Vec<Option<TunedPoint>>>,
+    group: &[usize],
+) {
+    let geom = &geoms[candidates[group[0]].geom];
+    let mut cache = pool.checkout(&geom.fingerprint);
+    for &i in group {
+        debug_assert_eq!(candidates[i].geom, candidates[group[0]].geom);
+        let pt = evaluate_candidate(opts, geom, &candidates[i], &mut cache);
+        results.lock().expect("tune results poisoned")[i] = Some(pt);
+    }
+    pool.checkin(&geom.fingerprint, cache);
+}
+
+/// Run the joint configuration search. See the module docs for the
+/// guarantees (front identity under pruning, parallel ≡ serial).
+pub fn tune(space: &TuneSpace, opts: &TuneOptions) -> TuneResult {
+    let start = Instant::now();
+    let (geoms, candidates, rejected) = enumerate(space);
+    let enumerated = candidates.len() + rejected;
+
+    // Bounds for every valid candidate, serially (cheap: no plan solves).
+    let bounds: Vec<Bounds> =
+        candidates.iter().map(|c| candidate_bounds(space, &geoms[c.geom], c)).collect();
+
+    // Guaranteed-OOM pruning: a candidate whose memory floor exceeds the
+    // device can only report an OOM point, which the front excludes.
+    let mut pruned_mem = 0usize;
+    let mut remaining: Vec<usize> = (0..candidates.len())
+        .filter(|&i| {
+            let fits = opts.exhaustive
+                || bounds[i].lb_mem <= geoms[candidates[i].geom].tables.usable_memory;
+            if !fits {
+                pruned_mem += 1;
+            }
+            fits
+        })
+        .collect();
+
+    // Most-promising first: descending throughput UB (ties by index)
+    // front-loads the points most likely to prune the rest.
+    remaining.sort_by(|&x, &y| {
+        bounds[y].ub_throughput.total_cmp(&bounds[x].ub_throughput).then(x.cmp(&y))
+    });
+
+    let results: Mutex<Vec<Option<TunedPoint>>> = Mutex::new(vec![None; candidates.len()]);
+    let pool = PlanCachePool::new();
+    let mut pruned_bound = 0usize;
+    let mut waves = 0usize;
+    // Feasible evaluated (throughput, peak_mem) pairs driving the prune.
+    let mut incumbent: Vec<(f64, f64)> = Vec::new();
+
+    let desired = if opts.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(WAVE)
+    } else {
+        opts.threads.min(WAVE)
+    };
+    let lease = claim_workers(desired.saturating_sub(1));
+    let workers = lease.team();
+
+    std::thread::scope(|scope| {
+        let team = Team::new();
+        let team = &team;
+        let mut handles = Vec::new();
+        if workers > 1 {
+            for _ in 0..workers {
+                handles.push(scope.spawn(|| {
+                    while let Some(group) = team.next_group() {
+                        eval_group(opts, &geoms, &candidates, &pool, &results, &group);
+                        team.group_done();
+                    }
+                }));
+            }
+        }
+        let mut cursor = remaining;
+        while !cursor.is_empty() {
+            // Deterministic inter-wave prune pass against everything
+            // evaluated so far.
+            if !opts.exhaustive && !incumbent.is_empty() {
+                cursor.retain(|&i| {
+                    let dominated =
+                        incumbent.iter().any(|&(tp, mem)| corner_dominates(tp, mem, &bounds[i]));
+                    if dominated {
+                        pruned_bound += 1;
+                    }
+                    !dominated
+                });
+            }
+            if cursor.is_empty() {
+                break;
+            }
+            let wave: Vec<usize> = cursor.drain(..WAVE.min(cursor.len())).collect();
+            waves += 1;
+            // One group per fingerprint per wave: within a group the
+            // cache sees a deterministic candidate order, across groups
+            // the fingerprints are disjoint — counters cannot race.
+            let mut groups: Vec<Vec<usize>> = Vec::new();
+            for &i in &wave {
+                let fp = &geoms[candidates[i].geom].fingerprint;
+                match groups
+                    .iter_mut()
+                    .find(|g| geoms[candidates[g[0]].geom].fingerprint == *fp)
+                {
+                    Some(g) => g.push(i),
+                    None => groups.push(vec![i]),
+                }
+            }
+            if workers > 1 {
+                team.submit(groups);
+                team.wait_idle();
+            } else {
+                for g in &groups {
+                    eval_group(opts, &geoms, &candidates, &pool, &results, g);
+                }
+            }
+            let res = results.lock().expect("tune results poisoned");
+            let mut done: Vec<usize> = wave;
+            done.sort_unstable();
+            for i in done {
+                let pt = res[i].as_ref().expect("wave candidate not evaluated");
+                if !pt.oom {
+                    incumbent.push((pt.throughput, pt.peak_mem));
+                }
+            }
+        }
+        team.shutdown();
+        for h in handles {
+            h.join().expect("tune worker panicked");
+        }
+    });
+    drop(lease);
+
+    let points: Vec<TunedPoint> =
+        results.into_inner().expect("tune results poisoned").into_iter().flatten().collect();
+    let front = pareto_front(&points);
+    let (cache_hits, plan_solves) = pool.counters();
+
+    let mut metrics = MetricsRegistry::new();
+    metrics.add("tune.enumerated", enumerated as u64);
+    metrics.add("tune.rejected", rejected as u64);
+    metrics.add("tune.pruned_mem", pruned_mem as u64);
+    metrics.add("tune.pruned_bound", pruned_bound as u64);
+    metrics.add("tune.evaluated", points.len() as u64);
+    metrics.add("tune.waves", waves as u64);
+    pool.merge_metrics_into(&mut metrics);
+
+    let mut result = TuneResult {
+        points,
+        front,
+        enumerated,
+        rejected,
+        pruned_mem,
+        pruned_bound,
+        cache_hits,
+        plan_solves,
+        distinct_geometries: geoms.len(),
+        waves,
+        wall_secs: start.elapsed().as_secs_f64(),
+        metrics,
+    };
+    result.metrics.set_gauge("tune.prune_rate", result.prune_rate());
+    result.metrics.set_gauge("tune.cache_hit_rate", result.hit_rate());
+    result.metrics.set_gauge("tune.wall_secs", result.wall_secs);
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_space() -> TuneSpace {
+        TuneSpace {
+            model: ModelConfig::by_name("1.3B").unwrap(),
+            cluster: ClusterTopology::parse("1x4").unwrap(),
+            global_batch: 8,
+            micro_batch: 1,
+            seq: 1024,
+            zero1: false,
+            schedules: vec![ScheduleKind::OneFOneB, ScheduleKind::GPipe],
+            policies: vec![PolicyKind::Block],
+        }
+    }
+
+    #[test]
+    fn enumeration_counts_the_divisor_product() {
+        let space = small_space();
+        let (geoms, cands, rejected) = enumerate(&space);
+        // 4 GPUs: (tp, pp, dp) ∈ 6 divisor triples; m = 8/dp is integral
+        // for dp ∈ {1, 2, 4} and m >= pp holds everywhere, so nothing is
+        // rejected: 6 shapes × 2 schedules × 1 policy.
+        assert_eq!(rejected, 0);
+        assert_eq!(cands.len(), 12);
+        assert_eq!(geoms.len(), 6);
+        for c in &cands {
+            assert_eq!(c.tp * c.pp * c.dp, 4);
+            assert_eq!(c.num_micro * c.dp, 8);
+        }
+    }
+
+    #[test]
+    fn enumeration_rejects_ragged_batches_and_starved_pipelines() {
+        let mut space = small_space();
+        space.global_batch = 6; // dp=4 → 6/4 ragged
+        let (_, cands, rejected) = enumerate(&space);
+        // dp=4 shapes (tp1·pp1·dp4) drop out; dp ∈ {1, 2, 3?} — 3 does
+        // not divide 4 GPUs, so shapes are dp ∈ {1, 2} (4 shapes) plus
+        // the rejected dp=4 one. m >= pp: dp=2 → m=3 >= pp∈{1,2} ok.
+        assert_eq!(rejected, 2); // 1 shape × 2 schedules × 1 policy
+        assert!(cands.iter().all(|c| c.dp != 4));
+        assert_eq!(cands.len() + rejected, 12);
+    }
+
+    #[test]
+    fn bounds_are_sound_on_every_evaluated_cell() {
+        let space = small_space();
+        let (geoms, cands, _) = enumerate(&space);
+        for c in &cands {
+            let b = candidate_bounds(&space, &geoms[c.geom], c);
+            let mut cache = PlanCache::new();
+            let pt = evaluate_candidate(&TuneOptions::default(), &geoms[c.geom], c, &mut cache);
+            assert!(
+                pt.throughput <= b.ub_throughput * (1.0 + 1e-9),
+                "throughput bound violated: {} > {} at {:?}",
+                pt.throughput,
+                b.ub_throughput,
+                c
+            );
+            assert!(
+                pt.peak_mem >= b.lb_mem * (1.0 - 1e-9),
+                "memory bound violated: {} < {} at {:?}",
+                pt.peak_mem,
+                b.lb_mem,
+                c
+            );
+        }
+    }
+
+    #[test]
+    fn pruned_front_matches_exhaustive_on_the_small_space() {
+        let space = small_space();
+        let pruned = tune(&space, &TuneOptions::default());
+        let full = tune(&space, &TuneOptions { exhaustive: true, ..Default::default() });
+        assert_eq!(full.pruned(), 0);
+        assert_eq!(pruned.front_points(), full.front_points());
+        assert!(pruned.evaluated() <= full.evaluated());
+    }
+
+    #[test]
+    fn serial_equals_parallel_points_and_counters() {
+        let space = small_space();
+        let serial = tune(&space, &TuneOptions { threads: 1, ..Default::default() });
+        let par = tune(&space, &TuneOptions { threads: 4, ..Default::default() });
+        assert_eq!(serial.points, par.points);
+        assert_eq!(serial.front, par.front);
+        assert_eq!(serial.pruned_bound, par.pruned_bound);
+        assert_eq!(serial.pruned_mem, par.pruned_mem);
+        assert_eq!(
+            (serial.cache_hits, serial.plan_solves),
+            (par.cache_hits, par.plan_solves)
+        );
+    }
+
+    #[test]
+    fn front_is_internally_non_dominated_and_dominates_the_rest() {
+        let space = small_space();
+        let r = tune(&space, &TuneOptions::default());
+        assert!(!r.front.is_empty(), "small space must produce a front");
+        for (&i, &j) in r.front.iter().zip(r.front.iter().skip(1)) {
+            assert!(r.points[i].throughput >= r.points[j].throughput);
+        }
+        for &i in &r.front {
+            for (j, p) in r.points.iter().enumerate() {
+                if r.front.contains(&j) {
+                    assert!(!p.dominates(&r.points[i]), "front point dominated by front point");
+                }
+            }
+        }
+        for (j, p) in r.points.iter().enumerate() {
+            if !r.front.contains(&j) && !p.oom {
+                assert!(
+                    r.front.iter().any(|&i| r.points[i].dominates(p)),
+                    "non-front point {j} not dominated"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cache_pool_reuses_plans_across_candidates() {
+        let space = small_space();
+        let r = tune(&space, &TuneOptions::default());
+        assert!(r.cache_hits > 0, "schedule/policy variants must share plan solves");
+        assert!(r.hit_rate() > 0.0 && r.hit_rate() <= 1.0);
+    }
+}

@@ -75,7 +75,9 @@ pub mod synth;
 
 pub use kinds::{cooldown_start, onefoneb_items, GPipe, Interleaved1F1B, OneFOneB, ZbH1, ZbH2, ZbV};
 pub use lattice::{zb_shape_is_closed, Block, BlockLattice, ClosedRule, MicroStream, StageLattice};
-pub use synth::{onefoneb_reference, peak_microbatches, unit_makespan, SynthPoint, Synthesized};
+pub use synth::{
+    onefoneb_reference, peak_microbatches, synth_axis, unit_makespan, SynthPoint, Synthesized,
+};
 
 /// Fraction of the combined backward attributed to the input-grad (B)
 /// item in split-backward schedules; dX and dW each cost about one

@@ -98,6 +98,24 @@ impl Synthesized {
     }
 }
 
+/// The tuner's synthesis axis: one [`ScheduleKind::Synth`] per budget
+/// percentage, deduplicated and order-preserving, zero-budget entries
+/// dropped (`Synthesized::new` requires >= 1%). `plan::tune` and the
+/// CLI's `--synth-budgets` parser share this so the searched knob list
+/// is defined in exactly one place.
+pub fn synth_axis(budget_pcts: &[u32]) -> Vec<ScheduleKind> {
+    let mut seen = Vec::new();
+    let mut kinds = Vec::new();
+    for &pct in budget_pcts {
+        if pct == 0 || seen.contains(&pct) {
+            continue;
+        }
+        seen.push(pct);
+        kinds.push(ScheduleKind::Synth { budget_pct: pct });
+    }
+    kinds
+}
+
 impl PipelineSchedule for Synthesized {
     fn kind(&self) -> ScheduleKind {
         ScheduleKind::Synth { budget_pct: self.budget_pct }
@@ -317,6 +335,19 @@ mod tests {
         assert!(pt.peak_microbatches <= peak1 / 2.0 + 1e-9, "{pt:?}");
         assert!(pt.makespan_units <= ms1 + 1e-9, "{pt:?} vs 1F1B {ms1}");
         validate_executable(&s).unwrap();
+    }
+
+    #[test]
+    fn synth_axis_dedups_and_drops_zero_budgets() {
+        assert_eq!(
+            synth_axis(&[50, 33, 50, 0, 33]),
+            vec![
+                ScheduleKind::Synth { budget_pct: 50 },
+                ScheduleKind::Synth { budget_pct: 33 },
+            ]
+        );
+        assert!(synth_axis(&[]).is_empty());
+        assert!(synth_axis(&[0]).is_empty());
     }
 
     #[test]

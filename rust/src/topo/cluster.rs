@@ -232,6 +232,28 @@ impl ClusterTopology {
         }
     }
 
+    /// Every `(tp, pp, dp)` triple whose product uses the cluster's GPUs
+    /// exactly — the geometry axis of the tuner's candidate space
+    /// (`plan::tune`). Deterministic order: tp ascending, then pp
+    /// ascending. `None` for the unbounded uniform fabric, where "all
+    /// the GPUs" is not defined.
+    pub fn parallel_shapes(&self) -> Option<Vec<(usize, usize, usize)>> {
+        let total = self.total_gpus()?;
+        let mut shapes = Vec::new();
+        for tp in 1..=total {
+            if total % tp != 0 {
+                continue;
+            }
+            let rest = total / tp;
+            for pp in 1..=rest {
+                if rest % pp == 0 {
+                    shapes.push((tp, pp, rest / pp));
+                }
+            }
+        }
+        Some(shapes)
+    }
+
     /// The link a group prices over, given whether it crosses nodes.
     /// Crossing groups on a rail-optimized fabric stripe over every
     /// rail, so they see the full inter tier.
@@ -443,6 +465,27 @@ mod tests {
         assert_eq!(u.group_link(true), u.group_link(false));
         assert_eq!(u.boundary_link(true).kind, LinkKind::Infiniband);
         assert_eq!(u.total_gpus(), None);
+        assert_eq!(u.parallel_shapes(), None);
+    }
+
+    #[test]
+    fn parallel_shapes_cover_exactly_the_divisor_triples() {
+        let c = ClusterTopology::parse("2x6").unwrap(); // 12 GPUs
+        let shapes = c.parallel_shapes().unwrap();
+        // Ordered triples (tp, pp, dp) with product 12: one per divisor
+        // pair, 18 in total for 12 = 2^2 · 3.
+        assert_eq!(shapes.len(), 18);
+        for &(tp, pp, dp) in &shapes {
+            assert_eq!(tp * pp * dp, 12);
+        }
+        assert!(shapes.contains(&(1, 1, 12)));
+        assert!(shapes.contains(&(2, 3, 2)));
+        assert!(shapes.contains(&(12, 1, 1)));
+        // Deterministic order, no duplicates.
+        let mut sorted = shapes.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted, shapes);
     }
 
     #[test]

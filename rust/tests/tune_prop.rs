@@ -1,0 +1,161 @@
+//! Property grid for the joint configuration auto-tuner (PR 9).
+//!
+//! 1. **Prune soundness**: on every grid cell the bound-pruned search
+//!    returns the *bit-identical* Pareto front to exhaustive
+//!    evaluation — pruning may only skip candidates an evaluated point
+//!    strictly dominates, never change the answer.
+//! 2. **Front dominance**: every front point is feasible and
+//!    non-dominated; every evaluated non-front feasible point is
+//!    dominated by some front point (the front is exactly the
+//!    non-dominated set).
+//! 3. **Parallel ≡ serial**: points, front, prune counters and the
+//!    plan-cache hit/solve counters are identical at every thread
+//!    count — the deterministic-wave design, not luck.
+//! 4. **Tuner beats presets**: the tuner's best throughput is never
+//!    worse than any fixed-configuration cell of its own search space
+//!    (it evaluated or soundly pruned every one of them).
+
+use lynx::costmodel::{CostModel, Topology};
+use lynx::graph::{build_layer_graph, ModelConfig, TrainSetup};
+use lynx::plan::{pareto_front, tune, CostTables, PlanCache, PolicyKind, TuneOptions, TuneSpace};
+use lynx::sched::ScheduleKind;
+use lynx::sim::{simulate_cached, PartitionMode, SimConfig};
+use lynx::topo::ClusterTopology;
+
+/// Small-but-heterogeneous grid: two cluster shapes, two batch
+/// geometries, schedule axes with and without a synth budget knob.
+fn grid() -> Vec<TuneSpace> {
+    let model = ModelConfig::by_name("1.3B").unwrap();
+    let mut spaces = Vec::new();
+    for (spec, global_batch) in [("1x4", 8), ("1x6", 12)] {
+        for schedules in [
+            vec![ScheduleKind::OneFOneB, ScheduleKind::GPipe],
+            vec![
+                ScheduleKind::OneFOneB,
+                ScheduleKind::ZbH1,
+                ScheduleKind::Synth { budget_pct: 50 },
+            ],
+        ] {
+            spaces.push(TuneSpace {
+                model: model.clone(),
+                cluster: ClusterTopology::parse(spec).unwrap(),
+                global_batch,
+                micro_batch: 1,
+                seq: 1024,
+                zero1: false,
+                schedules,
+                policies: vec![PolicyKind::Selective, PolicyKind::Block],
+            });
+        }
+    }
+    spaces
+}
+
+#[test]
+fn pruned_front_is_bit_identical_to_exhaustive_everywhere() {
+    for (i, space) in grid().iter().enumerate() {
+        let pruned = tune(space, &TuneOptions::default());
+        let full = tune(space, &TuneOptions { exhaustive: true, ..Default::default() });
+        assert_eq!(full.pruned(), 0, "cell {i}: exhaustive mode must not prune");
+        assert_eq!(
+            pruned.front_points(),
+            full.front_points(),
+            "cell {i}: pruned front differs from exhaustive"
+        );
+        assert!(
+            pruned.evaluated() <= full.evaluated(),
+            "cell {i}: pruning evaluated more than exhaustive"
+        );
+        assert_eq!(
+            pruned.evaluated() + pruned.pruned() + pruned.rejected,
+            pruned.enumerated,
+            "cell {i}: candidate accounting leaks"
+        );
+    }
+}
+
+#[test]
+fn front_is_exactly_the_non_dominated_feasible_set() {
+    for (i, space) in grid().iter().enumerate() {
+        let r = tune(space, &TuneOptions::default());
+        assert!(!r.front.is_empty(), "cell {i}: no feasible point on a small grid");
+        for &f in &r.front {
+            assert!(!r.points[f].oom, "cell {i}: OOM point on the front");
+            for p in &r.points {
+                assert!(
+                    !p.dominates(&r.points[f]),
+                    "cell {i}: front point dominated by an evaluated point"
+                );
+            }
+        }
+        for (j, p) in r.points.iter().enumerate() {
+            if !p.oom && !r.front.contains(&j) {
+                assert!(
+                    r.front.iter().any(|&f| r.points[f].dominates(p)),
+                    "cell {i}: feasible non-front point {j} is not dominated"
+                );
+            }
+        }
+        // The standalone front function agrees with the tuner's.
+        assert_eq!(pareto_front(&r.points), r.front, "cell {i}");
+    }
+}
+
+#[test]
+fn thread_count_never_changes_results_or_counters() {
+    for (i, space) in grid().iter().enumerate() {
+        let serial = tune(space, &TuneOptions { threads: 1, ..Default::default() });
+        for threads in [2, 4, 8] {
+            let par = tune(space, &TuneOptions { threads, ..Default::default() });
+            assert_eq!(serial.points, par.points, "cell {i} threads {threads}: points");
+            assert_eq!(serial.front, par.front, "cell {i} threads {threads}: front");
+            assert_eq!(
+                (serial.pruned_mem, serial.pruned_bound, serial.waves),
+                (par.pruned_mem, par.pruned_bound, par.waves),
+                "cell {i} threads {threads}: prune/wave counters"
+            );
+            assert_eq!(
+                (serial.cache_hits, serial.plan_solves),
+                (par.cache_hits, par.plan_solves),
+                "cell {i} threads {threads}: cache counters"
+            );
+        }
+    }
+}
+
+#[test]
+fn tuner_best_is_never_worse_than_any_fixed_preset_cell() {
+    // Re-evaluate a handful of fixed configurations of the search space
+    // independently (fresh caches, no tuner involved) and check the
+    // tuner's best throughput covers them all.
+    let space = &grid()[0];
+    let r = tune(space, &TuneOptions::default());
+    let best = r.best().expect("feasible best").throughput;
+    for (tp, pp, dp) in [(1, 1, 4), (2, 2, 1), (1, 4, 1), (4, 1, 1)] {
+        let num_micro = space.global_batch / (space.micro_batch * dp);
+        let setup = TrainSetup::new(space.model.clone(), tp, pp, space.micro_batch, num_micro)
+            .with_seq(space.seq)
+            .with_dp(dp);
+        let topo = Topology::hierarchical(space.cluster.clone(), tp, pp, dp);
+        let cm = CostModel::new(topo);
+        let tables = CostTables::new(&setup, &cm, &build_layer_graph(&setup));
+        for &schedule in &space.schedules {
+            for &policy in &space.policies {
+                let mut cache = PlanCache::new();
+                let cfg = SimConfig::new(setup.clone(), policy, PartitionMode::Lynx)
+                    .with_schedule(schedule);
+                let (rep, _) = simulate_cached(&cm, &cfg, &tables, &mut cache);
+                if !rep.oom {
+                    assert!(
+                        best >= rep.throughput - 1e-9,
+                        "fixed cell tp{tp} pp{pp} dp{dp} {:?} {:?} beats the tuner: \
+                         {} > {best}",
+                        schedule,
+                        policy,
+                        rep.throughput
+                    );
+                }
+            }
+        }
+    }
+}

@@ -162,6 +162,52 @@ print(f'OK: {len(rows)} rows, {len(good)}/{len(gate)} gate cells at '
       'half memory with no bubble regression')
 EOF
 
+echo "== bench: tune (quick witness grid, pruned vs exhaustive) =="
+LYNX_BENCH_QUICK=1 LYNX_BENCH_OUT="$PWD" cargo bench --bench bench_tune
+test -f BENCH_tune.json
+echo "BENCH_tune.json written"
+
+echo "== gate: tuner prune soundness, front shape, cache reuse =="
+python3 - <<'EOF'
+import json
+doc = json.load(open('BENCH_tune.json'))
+pruned = doc['pruned']
+search = pruned['search']
+front, points = pruned['front'], pruned['points']
+# Pruning must not change the answer: the bound-pruned front is
+# bit-identical to exhaustive evaluation of the same witness grid.
+assert doc['fronts_identical'] is True, \
+    'pruned Pareto front differs from the exhaustive one'
+# Front shape: at least 3 non-dominated points over >= 2 (tp, pp) shapes.
+assert len(front) >= 3, f'front has only {len(front)} points'
+assert doc['front_distinct_shapes'] >= 2, \
+    f"front spans only {doc['front_distinct_shapes']} (tp, pp) shape(s)"
+assert all(not p['oom'] for p in front), 'OOM point on the front'
+# Search efficiency: bounds prune >= 30% of the valid candidate space
+# and the shared plan cache is actually reused across candidates.
+assert search['prune_rate'] >= 0.3, \
+    f"prune rate {search['prune_rate']:.2f} below the 30% floor"
+assert search['cache_hit_rate'] > 0, 'plan cache never hit across candidates'
+assert search['enumerated'] == (search['rejected'] + search['pruned_mem']
+                                + search['pruned_bound'] + search['evaluated']), \
+    'candidate accounting leaks'
+# Front dominance re-check over every evaluated point.
+def dominates(a, b):
+    if a['oom']:
+        return False
+    if b['oom']:
+        return True
+    return (a['throughput'] >= b['throughput'] and a['peak_mem'] <= b['peak_mem']
+            and (a['throughput'] > b['throughput'] or a['peak_mem'] < b['peak_mem']))
+for f in front:
+    bad = [p for p in points if dominates(p, f)]
+    assert not bad, f'front point {f} dominated by evaluated point(s) {bad[:1]}'
+print(f"OK: front {len(front)} points / {doc['front_distinct_shapes']} shapes, "
+      f"prune rate {100 * search['prune_rate']:.0f}%, "
+      f"cache hit rate {100 * search['cache_hit_rate']:.0f}%, "
+      f"fronts identical")
+EOF
+
 echo "== gate: bench snapshots (drift vs bench/snapshots/) =="
 python3 scripts/snapshot_bench.py compare
 
@@ -175,6 +221,30 @@ for sched in 1f1b zbv; do
 done
 ./target/release/lynx partition --search dp \
     --metrics-out "$OBS_TMP/partition.json" >/dev/null
+./target/release/lynx tune --model 1.3B --topo 1x4 --global-batch 8 \
+    --micro-batch 1 --tune-schedules 1f1b,gpipe,zbh1 --synth-budgets 50 \
+    --metrics-out "$OBS_TMP/tune.json" >/dev/null
+
+echo "== gate: tune-report validator rejects a cooked report (negative test) =="
+python3 - "$OBS_TMP" <<'EOF'
+import json, subprocess, sys
+tmp = sys.argv[1]
+doc = json.load(open(f'{tmp}/tune.json'))
+# Cook the front: inflate one evaluated point's throughput so it
+# dominates a front point. The validator must catch it.
+doc['points'][0]['throughput'] = 1e18
+doc['points'][0]['peak_mem'] = 1.0
+doc['points'][0]['oom'] = False
+bad = f'{tmp}/tune_cooked.json'
+json.dump(doc, open(bad, 'w'))
+r = subprocess.run([sys.executable, 'scripts/validate_obs.py', bad],
+                   capture_output=True, text=True)
+assert r.returncode != 0, 'validator accepted a dominated front'
+assert 'dominated' in r.stderr, r.stderr
+import os
+os.unlink(bad)
+print('OK: cooked tune report rejected')
+EOF
 
 echo "== gate: 10k-GPU rail fabric end-to-end (20B, tp8 x pp22 x dp56) =="
 for sched in 1f1b zbv; do

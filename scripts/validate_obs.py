@@ -16,6 +16,11 @@ Each file is dispatched on its schema tag:
   * Partition reports (``schema == "lynx.partition_report.v1"``, from
     ``--metrics-out`` on ``partition``): per-search rows plus the shared
     plan-cache registry snapshot.
+  * Tune reports (``schema == "lynx.tune_report.v1"``, from
+    ``--metrics-out`` on ``tune``): candidate accounting must balance,
+    the Pareto front must be feasible, internally non-dominated and
+    dominate every other evaluated feasible point, and every front
+    point's tp*pp*dp product must agree.
 
 Exit status 0 iff every file validates. No third-party dependencies.
 """
@@ -190,6 +195,113 @@ def validate_partition_report(doc):
     return f"{len(searches)} searches, policy {doc['policy']!r}"
 
 
+TUNE_POINT_KEYS = {
+    "tp", "pp", "dp", "num_micro", "schedule", "policy", "throughput",
+    "peak_mem", "iteration_secs", "bubble_ratio", "oom",
+    "schedule_synthesis", "fallback_reason", "partition",
+}
+
+
+def _tune_point(pt, where):
+    missing = TUNE_POINT_KEYS - set(pt)
+    if missing:
+        raise Invalid(f"{where}: missing keys {sorted(missing)}")
+    for key in ("tp", "pp", "dp", "num_micro"):
+        if need(pt, key, (int, float), where) < 1:
+            raise Invalid(f"{where}: {key} must be >= 1")
+    for key in ("throughput", "peak_mem", "iteration_secs"):
+        if need(pt, key, (int, float), where) < 0:
+            raise Invalid(f"{where}: negative {key}")
+    need(pt, "schedule", str, where)
+    need(pt, "policy", str, where)
+    oom = need(pt, "oom", bool, where)
+    part = need(pt, "partition", list, where)
+    if not oom and not all(
+            isinstance(x, (int, float)) and x >= 1 for x in part):
+        raise Invalid(f"{where}: bad partition {part}")
+    return pt
+
+
+def _dominates(a, b):
+    """Mirror of TunedPoint::dominates: OOM points dominate nothing and
+    are dominated by every feasible point."""
+    if a["oom"]:
+        return False
+    if b["oom"]:
+        return True
+    return (a["throughput"] >= b["throughput"]
+            and a["peak_mem"] <= b["peak_mem"]
+            and (a["throughput"] > b["throughput"]
+                 or a["peak_mem"] < b["peak_mem"]))
+
+
+def validate_tune_report(doc):
+    need(doc, "model", str, "tune report")
+    need(doc, "topology", str, "tune report")
+    if need(doc, "global_batch", (int, float), "tune report") < 1:
+        raise Invalid("tune report: global_batch must be >= 1")
+    search = need(doc, "search", dict, "tune report")
+    counts = {}
+    for key in ("enumerated", "rejected", "pruned_mem", "pruned_bound",
+                "evaluated", "distinct_geometries", "waves",
+                "plan_solves", "cache_hits"):
+        counts[key] = need(search, key, (int, float), "tune report.search")
+        if counts[key] < 0:
+            raise Invalid(f"tune report: negative search.{key}")
+    accounted = (counts["rejected"] + counts["pruned_mem"]
+                 + counts["pruned_bound"] + counts["evaluated"])
+    if counts["enumerated"] != accounted:
+        raise Invalid(
+            f"tune report: {counts['enumerated']:.0f} candidates enumerated "
+            f"but {accounted:.0f} accounted for")
+    for key in ("prune_rate", "cache_hit_rate"):
+        if not -EPS <= need(search, key, (int, float),
+                            "tune report.search") <= 1.0 + EPS:
+            raise Invalid(f"tune report: search.{key} outside [0, 1]")
+    if need(search, "wall_secs", (int, float), "tune report.search") < 0:
+        raise Invalid("tune report: negative search.wall_secs")
+    points = [
+        _tune_point(pt, f"points[{i}]")
+        for i, pt in enumerate(need(doc, "points", list, "tune report"))
+    ]
+    if len(points) != counts["evaluated"]:
+        raise Invalid(
+            f"tune report: {len(points)} points but search.evaluated is "
+            f"{counts['evaluated']:.0f}")
+    front = [
+        _tune_point(pt, f"front[{i}]")
+        for i, pt in enumerate(need(doc, "front", list, "tune report"))
+    ]
+    gpus = {pt["tp"] * pt["pp"] * pt["dp"] for pt in front}
+    if len(gpus) > 1:
+        raise Invalid(
+            f"tune report: front points disagree on the GPU count {gpus}")
+    for i, fp in enumerate(front):
+        if fp["oom"]:
+            raise Invalid(f"tune report: front[{i}] is OOM")
+        for j, pt in enumerate(points):
+            if _dominates(pt, fp):
+                raise Invalid(
+                    f"tune report: front[{i}] is dominated by points[{j}]")
+    front_ids = {
+        (fp["tp"], fp["pp"], fp["dp"], fp["schedule"], fp["policy"])
+        for fp in front
+    }
+    for j, pt in enumerate(points):
+        key = (pt["tp"], pt["pp"], pt["dp"], pt["schedule"], pt["policy"])
+        if pt["oom"] or key in front_ids:
+            continue
+        if not any(_dominates(fp, pt) for fp in front):
+            raise Invalid(
+                f"tune report: feasible points[{j}] is not dominated by "
+                "any front point")
+    validate_metrics(
+        need(doc, "metrics", dict, "tune report"), "tune report.metrics")
+    return (
+        f"{len(front)} front / {len(points)} evaluated of "
+        f"{counts['enumerated']:.0f} candidates")
+
+
 def validate(path):
     with open(path) as f:
         doc = json.load(f)
@@ -202,6 +314,8 @@ def validate(path):
         detail = validate_report(doc)
     elif schema == "lynx.partition_report.v1":
         detail = validate_partition_report(doc)
+    elif schema == "lynx.tune_report.v1":
+        detail = validate_tune_report(doc)
     else:
         raise Invalid(f"unknown schema tag {schema!r}")
     return schema, detail
