@@ -1,0 +1,105 @@
+//! Bench: critical-path attribution on the overlap spill cell.
+//!
+//! Runs the paper's memory-pressured 7B cell (batch 16, NVLink-4x4,
+//! Lynx plans, 1F1B) across executed bandwidth scales and attributes
+//! each run's makespan through `obs::critical::analyze`. The plans are
+//! fixed at plan bandwidth; scaling the executed links **shrinks** the
+//! comm windows the planner filled (`bw_scale > 1` means faster
+//! collectives, hence less room to hide recompute — the same sweep as
+//! `bench_overlap`), so the planned overlap spills: the remainder runs
+//! serialized on the compute stream (`CommSerialized`) or is paid as
+//! exposed recompute. Emits `BENCH_critical.json`; `scripts/check.sh`
+//! gates that this spill shows up on the critical path when the
+//! windows shrink and vanishes back at plan bandwidth, and that every
+//! row conserves (attribution sum == makespan within 1e-9).
+//!
+//! Run `cargo bench --bench bench_critical` (LYNX_BENCH_QUICK=1 for the
+//! reduced sweep; LYNX_BENCH_OUT overrides the output directory).
+
+use lynx::costmodel::{CostModel, Topology};
+use lynx::graph::{build_layer_graph, ModelConfig, TrainSetup};
+use lynx::obs::{analyze, PathCat};
+use lynx::plan::{CostTables, PlanCache, PolicyKind};
+use lynx::sched::ScheduleKind;
+use lynx::sim::{simulate_observed, PartitionMode, SimConfig};
+use lynx::util::bench::Bench;
+use lynx::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("LYNX_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("critical-path attribution across executed bandwidth");
+
+    let scales: Vec<f64> = if quick { vec![1.0, 4.0] } else { vec![0.5, 1.0, 2.0, 4.0] };
+    let model = ModelConfig::by_name("7B").unwrap();
+    let cm = CostModel::new(Topology::nvlink(4, 4));
+    let setup = TrainSetup::new(model, 4, 4, 16, 8);
+    let tables = CostTables::new(&setup, &cm, &build_layer_graph(&setup));
+    let mut cache = PlanCache::new();
+
+    let mut rows = Vec::new();
+    let mut out = Json::Arr(vec![]);
+    for &bw in &scales {
+        let cfg = SimConfig::new(setup.clone(), PolicyKind::LynxHeu, PartitionMode::Dp)
+            .with_schedule(ScheduleKind::OneFOneB)
+            .with_bw(bw);
+        let t0 = Instant::now();
+        let (r, trace, obs) = simulate_observed(&cm, &cfg, &tables, &mut cache);
+        let sim_wall = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let cp = analyze(&obs.recording, &trace, &obs.deps);
+        let analyze_wall = t1.elapsed().as_secs_f64();
+
+        let share = |cat: PathCat| {
+            if cp.makespan > 0.0 { cp.total[cat.index()] / cp.makespan } else { 0.0 }
+        };
+        let exposed_share = share(PathCat::RecomputeExposed);
+        let serialized_share = share(PathCat::CommSerialized);
+        let spill_share = exposed_share + serialized_share;
+        let residual = (cp.attributed_total() - cp.makespan).abs();
+
+        b.record(
+            &format!("analyze 1f1b lynx-heu bw{:.2}", bw),
+            analyze_wall,
+            "s (wall)",
+        );
+        rows.push(vec![
+            format!("{:.2}", bw),
+            format!("{:.2}", 1e3 * cp.makespan),
+            format!("{:.1}%", 100.0 * spill_share),
+            format!("{:.1}%", 100.0 * share(PathCat::Stall)),
+            cp.dominant().map(|c| c.label().to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+        let mut jo = Json::obj();
+        jo.set("model", Json::from("7B"))
+            .set("schedule", Json::from(cfg.schedule.label()))
+            .set("policy", Json::from(PolicyKind::LynxHeu.label()))
+            .set("bw_scale", Json::from(bw))
+            .set("makespan", Json::from(cp.makespan))
+            .set("iteration_secs", Json::from(r.iteration_secs))
+            .set("exposed_share", Json::from(exposed_share))
+            .set("serialized_share", Json::from(serialized_share))
+            .set("spill_share", Json::from(spill_share))
+            .set("stall_share", Json::from(share(PathCat::Stall)))
+            .set("comm_tp_share", Json::from(share(PathCat::CommTp)))
+            .set("comm_p2p_share", Json::from(share(PathCat::CommP2p)))
+            .set("conservation_residual", Json::from(residual))
+            .set(
+                "dominant",
+                cp.dominant().map(|c| Json::from(c.label())).unwrap_or(Json::Null),
+            )
+            .set("sim_wall_secs", Json::from(sim_wall))
+            .set("analyze_wall_secs", Json::from(analyze_wall));
+        out.push(jo);
+    }
+    b.table(
+        "critical-path spill share (7B, batch 16, NVLink-4x4, Lynx plans, 1F1B)",
+        &["bw", "makespan ms", "spill share", "stall share", "dominant"],
+        &rows,
+    );
+
+    let dir = std::env::var("LYNX_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("BENCH_critical.json");
+    std::fs::write(&path, out.pretty()).expect("write BENCH_critical.json");
+    println!("\nwrote {}", path.display());
+}

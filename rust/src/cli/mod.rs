@@ -14,7 +14,7 @@
 use crate::costmodel::{CostModel, Topology};
 use crate::experiments;
 use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
-use crate::obs::{partition_report, run_report};
+use crate::obs::{analyze, critical_report, diff_reports, diff_text, explain_text, partition_report, run_report};
 use crate::plan::{
     dp_partition_result_cached, exact_dp_partition, lynx_partition_cached, CostTables,
     PartitionResult, PlanCache, PolicyKind, SearchKind, SearchOptions,
@@ -32,13 +32,22 @@ use std::path::Path;
 use std::time::Duration;
 
 const USAGE: &str = "lynx <simulate|plan|partition|tune|figures|train|profile> [options]
+       lynx explain <critical_report.json>
+       lynx diff <critical_report_A.json> <critical_report_B.json>
        lynx <subcommand> --help
 
-Inspecting a run: `simulate --gantt` renders an ASCII timeline;
-`--trace-out f.json` writes the same recorded spans as Chrome-trace
-JSON (open in Perfetto / chrome://tracing; flow arrows link each
-overlapped recompute to the collective hiding it); `--metrics-out`
-writes a versioned JSON report (see README \"Inspecting a run\").";
+Inspecting a run: `simulate --gantt` renders an ASCII timeline
+(`--gantt-crit` overlays the critical path); `--trace-out f.json`
+writes the same recorded spans as Chrome-trace JSON (open in
+Perfetto / chrome://tracing; flow arrows link each overlapped
+recompute to the collective hiding it); `--metrics-out` writes a
+versioned JSON report (see README \"Inspecting a run\").
+
+Diagnosing a run: `simulate --critical-out f.json` writes the
+critical-path attribution (lynx.critical_report.v1); `lynx explain`
+renders it with per-category shares and what-if sensitivities;
+`lynx diff` aligns two critical reports per stage and category
+(see README \"Diagnosing a run\").";
 
 fn common_specs() -> Vec<OptSpec> {
     vec![
@@ -131,6 +140,18 @@ fn common_specs() -> Vec<OptSpec> {
             "metrics-out",
             "write a versioned JSON run report (simulate: lynx.report.v1; partition: lynx.partition_report.v1; tune: lynx.tune_report.v1)",
             true,
+            None,
+        ),
+        opt(
+            "critical-out",
+            "simulate: write the critical-path attribution report (lynx.critical_report.v1; render with `lynx explain`)",
+            true,
+            None,
+        ),
+        opt(
+            "gantt-crit",
+            "render the ASCII gantt with the critical path overlaid (stage<N>.* marker rows)",
+            false,
             None,
         ),
     ]
@@ -312,6 +333,8 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "figures" => cmd_figures(&a),
         "train" => cmd_train(&a),
         "profile" => cmd_profile(&a),
+        "explain" => cmd_explain(&a),
+        "diff" => cmd_diff(&a),
         other => {
             eprintln!("unknown subcommand {other:?}\n{}", Args::help(&specs, USAGE));
             Ok(2)
@@ -353,8 +376,16 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
     let (r, trace, obs) = simulate_observed(&cm, &cfg, &tables, &mut cache);
     close_cache(a, &cache)?;
     println!("{}", r.to_json().pretty());
-    if a.has("gantt") {
-        use crate::sim::{render_gantt_recorded, StageTiming};
+    // The critical-path walk reads the recording plus the dependency
+    // structure the runner exported; computed once, shared by the
+    // overlay and the artifact.
+    let cp = if a.has("gantt-crit") || a.get("critical-out").is_some() {
+        Some(analyze(&obs.recording, &trace, &obs.deps))
+    } else {
+        None
+    };
+    if a.has("gantt") || a.has("gantt-crit") {
+        use crate::sim::{render_gantt_critical, render_gantt_recorded, StageTiming};
         // Scalar timings only feed the renderer's B-span split; the
         // recording carries the executed two-stream timeline.
         let timings: Vec<StageTiming> = r
@@ -367,7 +398,22 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
                 p2p: cm.comm.p2p_time(cm.memory.boundary_bytes(&setup)),
             })
             .collect();
-        println!("{}", render_gantt_recorded(&timings, &obs.recording, trace.bwd_frac, 110));
+        match &cp {
+            Some(cp) if a.has("gantt-crit") => println!(
+                "{}",
+                render_gantt_critical(&timings, &obs.recording, trace.bwd_frac, cp, 110)
+            ),
+            _ => println!(
+                "{}",
+                render_gantt_recorded(&timings, &obs.recording, trace.bwd_frac, 110)
+            ),
+        }
+    }
+    if let Some(path) = a.get("critical-out") {
+        let cp = cp.as_ref().unwrap();
+        let label = format!("{} {}", r.config_label, r.schedule.label());
+        std::fs::write(path, critical_report(&label, cp).pretty())?;
+        eprintln!("wrote critical report {path}");
     }
     if let Some(path) = a.get("trace-out") {
         let extra = [
@@ -386,6 +432,35 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
         eprintln!("wrote report {path}");
     }
     Ok(if r.oom { 1 } else { 0 })
+}
+
+/// `lynx explain <critical_report.json>`: render a critical-path
+/// report for humans.
+fn cmd_explain(a: &Args) -> Result<i32> {
+    let [path] = a.positional() else {
+        return Err(anyhow!("usage: lynx explain <critical_report.json>"));
+    };
+    let doc = Json::parse(&std::fs::read_to_string(path)?)
+        .map_err(|e| anyhow!("{path}: {e}"))?;
+    let text = explain_text(&doc).map_err(|e| anyhow!("{path}: {e}"))?;
+    print!("{text}");
+    Ok(0)
+}
+
+/// `lynx diff <A.json> <B.json>`: aligned per-stage/per-category deltas
+/// between two critical reports. A report diffed against itself prints
+/// `max abs delta: 0`.
+fn cmd_diff(a: &Args) -> Result<i32> {
+    let [path_a, path_b] = a.positional() else {
+        return Err(anyhow!("usage: lynx diff <critical_report_A.json> <critical_report_B.json>"));
+    };
+    let doc_a = Json::parse(&std::fs::read_to_string(path_a)?)
+        .map_err(|e| anyhow!("{path_a}: {e}"))?;
+    let doc_b = Json::parse(&std::fs::read_to_string(path_b)?)
+        .map_err(|e| anyhow!("{path_b}: {e}"))?;
+    let diff = diff_reports(&doc_a, &doc_b).map_err(|e| anyhow!("{e}"))?;
+    print!("{}", diff_text(&diff));
+    Ok(0)
 }
 
 fn cmd_plan(a: &Args) -> Result<i32> {
@@ -631,6 +706,15 @@ fn cmd_tune(a: &Args) -> Result<i32> {
                 100.0 * p.bubble_ratio,
                 p.schedule_outcome.label(),
             );
+            if let Some(b) = &p.bottleneck {
+                match &p.top_sensitivity {
+                    Some((cat, v)) => println!(
+                        "      bottleneck {b}; 10% faster {cat} buys {:.2}% iteration time",
+                        100.0 * 0.1 * v
+                    ),
+                    None => println!("      bottleneck {b}"),
+                }
+            }
         }
     }
     if let Some(path) = a.get("metrics-out") {
@@ -973,6 +1057,81 @@ mod tests {
         assert_eq!(m.expect("stages").as_arr().unwrap().len(), 4);
         assert!(m.expect("metrics").expect("counters").get("engine.items.fwd").is_some());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn simulate_writes_critical_report_and_explain_diff_roundtrip() {
+        let dir = std::env::temp_dir().join("lynx_cli_critical_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cr = dir.join("critical.json");
+        let code = run(&sv(&[
+            "simulate",
+            "--model",
+            "1.3B",
+            "--tp",
+            "2",
+            "--pp",
+            "4",
+            "--micro-batch",
+            "4",
+            "--policy",
+            "block",
+            "--schedule",
+            "zbv",
+            "--critical-out",
+            cr.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let c = Json::parse(&std::fs::read_to_string(&cr).unwrap()).unwrap();
+        assert_eq!(
+            c.expect("schema").as_str(),
+            Some(crate::obs::CRITICAL_REPORT_SCHEMA)
+        );
+        // The artifact's conservation invariant survives serialization.
+        let makespan = c.expect("makespan").as_f64().unwrap();
+        let total = c.expect("attributed_total").as_f64().unwrap();
+        assert!((total - makespan).abs() <= 1e-9 * makespan.max(1.0));
+        let cats = c.expect("categories").as_arr().unwrap();
+        assert_eq!(cats.len(), 9);
+        let cat_sum: f64 =
+            cats.iter().map(|x| x.expect("secs").as_f64().unwrap()).sum();
+        assert!((cat_sum - makespan).abs() <= 1e-9 * makespan.max(1.0));
+        // explain + self-diff round-trip through the CLI entry points.
+        assert_eq!(run(&sv(&["explain", cr.to_str().unwrap()])).unwrap(), 0);
+        assert_eq!(
+            run(&sv(&["diff", cr.to_str().unwrap(), cr.to_str().unwrap()])).unwrap(),
+            0
+        );
+        assert!(run(&sv(&["explain"])).is_err(), "explain requires a file");
+        assert!(
+            run(&sv(&["diff", cr.to_str().unwrap()])).is_err(),
+            "diff requires two files"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gantt_crit_smoke() {
+        let code = run(&sv(&[
+            "simulate",
+            "--model",
+            "1.3B",
+            "--tp",
+            "2",
+            "--pp",
+            "2",
+            "--micro-batch",
+            "4",
+            "--num-micro",
+            "4",
+            "--policy",
+            "block",
+            "--gantt-crit",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
     }
 
     #[test]

@@ -1,0 +1,983 @@
+//! Critical-path extraction and bottleneck attribution over a recorded
+//! span timeline.
+//!
+//! [`analyze`] walks **backwards** from the makespan event through the
+//! recording: at every instant `t` on the current stage it asks "what
+//! was this stage doing at `t⁻`?" — a work span (attribute its category
+//! and jump to its start), a communication span (same), or a wait
+//! (resolve the *reason* via the engine's dependency structure and hop
+//! to the upstream stage across the p2p edge that carried the gating
+//! activation). Each step attributes the interval `[t', t]` to exactly
+//! one [`PathCat`] on exactly one stage, so the decomposition
+//! *telescopes*: the category sums equal the makespan to 1e-9 by
+//! construction, per stage and in total (`tests/critical_prop.rs`
+//! proves it across the schedule × policy × topology grid).
+//!
+//! The dependency side channel is [`DepStructure`], built by the runner
+//! from the same inputs the engine executed
+//! ([`crate::sched::PipelineSchedule::fwd_upstream`]/`bwd_upstream`,
+//! per-edge p2p latency + wire time, DP hops) — the walk never guesses
+//! an edge the engine didn't run.
+//!
+//! Sensitivity is a first-order replay: scaling every span of one
+//! category by `(1 − ε)` shrinks the makespan by `ε · total[cat]` while
+//! the path shape is unchanged, so `∂makespan/∂category =
+//! total[cat] / makespan` — reported per category as "10% faster X buys
+//! Y% iteration time". Derivatives are non-negative and exactly zero
+//! for categories absent from the path.
+//!
+//! Artifacts: [`critical_report`] emits schema
+//! [`CRITICAL_REPORT_SCHEMA`] (`lynx simulate --critical-out`),
+//! [`explain_text`] renders it for `lynx explain`, and
+//! [`diff_reports`]/[`diff_text`] align two reports per stage and per
+//! category for `lynx diff` (a report diffed against itself is
+//! identically zero).
+
+use crate::obs::trace::{Span, SpanKind, SpanRecorder, Track, NO_INDEX};
+use crate::sched::{PipelineSchedule, WorkKind};
+use crate::sim::engine::{LinkCfg, PipelineTrace, StageSegments};
+use crate::util::json::Json;
+
+/// Schema tag for the critical-path artifact.
+pub const CRITICAL_REPORT_SCHEMA: &str = "lynx.critical_report.v1";
+
+// ------------------------------------------------------------------ categories
+
+/// Attribution category of one critical-path link. The nine categories
+/// partition the makespan: compute work (`Fwd`/`Bwd`/`WGrad`), exposed
+/// recompute and the serialized spill of an overflowing overlap window,
+/// the three communication classes, and pure dependency stall.
+/// `RecomputeAbsorbed`/`RecomputeOverlapped` spans are *wait shapes*,
+/// not categories — time under them is attributed to the communication
+/// or upstream dependency that actually gated progress.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PathCat {
+    Fwd,
+    Bwd,
+    WGrad,
+    RecomputeExposed,
+    CommSerialized,
+    CommTp,
+    CommP2p,
+    CommDp,
+    Stall,
+}
+
+impl PathCat {
+    pub const ALL: [PathCat; 9] = [
+        PathCat::Fwd,
+        PathCat::Bwd,
+        PathCat::WGrad,
+        PathCat::RecomputeExposed,
+        PathCat::CommSerialized,
+        PathCat::CommTp,
+        PathCat::CommP2p,
+        PathCat::CommDp,
+        PathCat::Stall,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PathCat::Fwd => "fwd",
+            PathCat::Bwd => "bwd",
+            PathCat::WGrad => "wgrad",
+            PathCat::RecomputeExposed => "recompute-exposed",
+            PathCat::CommSerialized => "comm-serialized",
+            PathCat::CommTp => "comm-tp",
+            PathCat::CommP2p => "comm-p2p",
+            PathCat::CommDp => "comm-dp",
+            PathCat::Stall => "stall",
+        }
+    }
+
+    pub fn from_label(label: &str) -> Option<PathCat> {
+        PathCat::ALL.iter().copied().find(|c| c.label() == label)
+    }
+
+    /// Position in [`PathCat::ALL`] (index into the per-stage arrays).
+    pub fn index(self) -> usize {
+        PathCat::ALL.iter().position(|c| *c == self).unwrap()
+    }
+}
+
+/// Work-span kinds attribute directly to their own category.
+fn work_cat(kind: SpanKind) -> Option<PathCat> {
+    match kind {
+        SpanKind::Fwd => Some(PathCat::Fwd),
+        SpanKind::Bwd => Some(PathCat::Bwd),
+        SpanKind::WGrad => Some(PathCat::WGrad),
+        SpanKind::RecomputeExposed => Some(PathCat::RecomputeExposed),
+        SpanKind::CommSerialized => Some(PathCat::CommSerialized),
+        _ => None,
+    }
+}
+
+fn comm_cat(kind: SpanKind) -> Option<PathCat> {
+    match kind {
+        SpanKind::CommTp => Some(PathCat::CommTp),
+        SpanKind::CommP2p => Some(PathCat::CommP2p),
+        SpanKind::CommDp => Some(PathCat::CommDp),
+        _ => None,
+    }
+}
+
+// ------------------------------------------------------------------ structures
+
+/// One attributed interval of the critical path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PathLink {
+    pub stage: usize,
+    pub cat: PathCat,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl PathLink {
+    pub fn dur(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// A directed p2p edge the engine executed, with its modeled cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DepEdge {
+    pub src: usize,
+    pub dst: usize,
+    pub latency: f64,
+    pub wire: f64,
+}
+
+/// The engine's dependency structure, exported for the walk: the
+/// placement maps (`fwd_up`/`bwd_up`, indexed `stage * num_chunks +
+/// chunk` exactly like the engine's own arrays) plus the priced p2p
+/// edges between adjacent stages.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DepStructure {
+    pub num_stages: usize,
+    pub num_micro: usize,
+    pub num_chunks: usize,
+    pub fwd_up: Vec<Option<(usize, usize)>>,
+    pub bwd_up: Vec<Option<(usize, usize)>>,
+    pub edges: Vec<DepEdge>,
+}
+
+impl DepStructure {
+    /// Build from the exact inputs the engine ran: the schedule's
+    /// placement maps and the per-stage segment/link pricing.
+    pub fn from_engine(
+        sched: &dyn PipelineSchedule,
+        segs: &[StageSegments],
+        link: &LinkCfg,
+    ) -> DepStructure {
+        let p = sched.num_stages();
+        let v = sched.num_chunks().max(1);
+        let mut fwd_up = Vec::with_capacity(p * v);
+        let mut bwd_up = Vec::with_capacity(p * v);
+        for s in 0..p {
+            for c in 0..v {
+                fwd_up.push(sched.fwd_upstream(s, c));
+                bwd_up.push(sched.bwd_upstream(s, c));
+            }
+        }
+        let mut edges = Vec::new();
+        for src in 0..p {
+            for dst in [src.wrapping_sub(1), src + 1] {
+                if dst >= p || src == dst || dst == usize::MAX {
+                    continue;
+                }
+                let seg = &segs[src.min(segs.len().saturating_sub(1))];
+                let latency = if src > dst {
+                    seg.p2p_latency_up.unwrap_or(seg.p2p_latency)
+                } else {
+                    seg.p2p_latency
+                };
+                let bw = link.bandwidth_between(src, dst);
+                let wire = if bw.is_finite() && bw > 0.0 { seg.p2p_bytes / bw } else { 0.0 };
+                edges.push(DepEdge { src, dst, latency, wire });
+            }
+        }
+        DepStructure {
+            num_stages: p,
+            num_micro: sched.num_micro(),
+            num_chunks: v,
+            fwd_up,
+            bwd_up,
+            edges,
+        }
+    }
+
+    /// `(latency, wire_secs)` of the `src → dst` edge; zero-cost if the
+    /// pair was never priced (degenerate single-stage runs).
+    pub fn edge(&self, src: usize, dst: usize) -> (f64, f64) {
+        self.edges
+            .iter()
+            .find(|e| e.src == src && e.dst == dst)
+            .map(|e| (e.latency, e.wire))
+            .unwrap_or((0.0, 0.0))
+    }
+}
+
+/// The extracted critical path: chronological links tiling
+/// `[0, makespan]`, plus the conserved per-stage / total decomposition
+/// (arrays indexed by [`PathCat::index`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CriticalPath {
+    pub links: Vec<PathLink>,
+    pub makespan: f64,
+    pub per_stage: Vec<[f64; 9]>,
+    pub total: [f64; 9],
+}
+
+impl CriticalPath {
+    /// Sum of all attributed time — equals `makespan` to 1e-9.
+    pub fn attributed_total(&self) -> f64 {
+        self.total.iter().sum()
+    }
+
+    /// First-order sensitivity per category:
+    /// `∂makespan/∂(category scale) = total[cat] / makespan`.
+    /// Non-negative; exactly zero for categories absent from the path.
+    pub fn sensitivity(&self) -> [f64; 9] {
+        let mut out = [0.0; 9];
+        if self.makespan > 0.0 {
+            for (o, t) in out.iter_mut().zip(self.total.iter()) {
+                *o = t / self.makespan;
+            }
+        }
+        out
+    }
+
+    /// What-if replay: makespan with every `cat` link scaled by
+    /// `(1 − eps)` — the path shape is unchanged to first order, so the
+    /// saving is exactly `eps · total[cat]`.
+    pub fn replay_scaled(&self, cat: PathCat, eps: f64) -> f64 {
+        self.makespan - eps * self.total[cat.index()]
+    }
+
+    /// The category holding the most critical-path time (stall
+    /// included); `None` only for an empty path.
+    pub fn dominant(&self) -> Option<PathCat> {
+        let mut best: Option<(PathCat, f64)> = None;
+        for cat in PathCat::ALL {
+            let v = self.total[cat.index()];
+            if v > 0.0 && best.map(|(_, b)| v > b).unwrap_or(true) {
+                best = Some((cat, v));
+            }
+        }
+        best.map(|(c, _)| c)
+    }
+
+    /// The *actionable* top sensitivity — the largest derivative among
+    /// the non-stall categories (you cannot "speed up" a pure stall;
+    /// you speed up whatever it waits on).
+    pub fn top_sensitivity(&self) -> Option<(PathCat, f64)> {
+        let sens = self.sensitivity();
+        let mut best: Option<(PathCat, f64)> = None;
+        for cat in PathCat::ALL {
+            if cat == PathCat::Stall {
+                continue;
+            }
+            let v = sens[cat.index()];
+            if v > 0.0 && best.map(|(_, b)| v > b).unwrap_or(true) {
+                best = Some((cat, v));
+            }
+        }
+        best
+    }
+}
+
+// ---------------------------------------------------------------------- walk
+
+fn covering<'a>(row: &[&'a Span], t: f64, eps: f64) -> Option<&'a Span> {
+    let mut best: Option<&Span> = None;
+    for sp in row {
+        if sp.start >= t - eps {
+            break;
+        }
+        if sp.end >= t - eps && best.map(|b| sp.end > b.end).unwrap_or(true) {
+            best = Some(sp);
+        }
+    }
+    best
+}
+
+/// Extract and attribute the critical path of one recorded run.
+///
+/// Walks backwards from the last event; every iteration peels one link
+/// off the back of the path. Wait intervals (stall / absorbed /
+/// overlapped shapes, or uncovered time) are resolved through `deps`:
+/// the gating work item's upstream completion is chased across the p2p
+/// edge that carried it, attributing the transfer to [`PathCat::CommP2p`]
+/// and any remaining slack to [`PathCat::Stall`].
+pub fn analyze(rec: &SpanRecorder, trace: &PipelineTrace, deps: &DepStructure) -> CriticalPath {
+    let makespan = trace.makespan;
+    let p = deps.num_stages.max(rec.n_stages()).max(trace.items.len()).max(1);
+    let v = trace.num_chunks.max(1);
+    let m = trace.num_micro.max(1);
+    let tiny = 1e-15 * makespan.max(1.0);
+    let eps = 1e-9 * makespan.max(1.0);
+
+    let mut comp: Vec<Vec<&Span>> = vec![Vec::new(); p];
+    let mut comm: Vec<Vec<&Span>> = vec![Vec::new(); p];
+    for sp in rec.spans() {
+        if sp.stage >= p {
+            continue;
+        }
+        match sp.track() {
+            Track::Comm => comm[sp.stage].push(sp),
+            Track::Compute => comp[sp.stage].push(sp),
+        }
+    }
+    for rows in [&mut comp, &mut comm] {
+        for row in rows.iter_mut() {
+            row.sort_by(|a, b| a.start.total_cmp(&b.start).then(a.end.total_cmp(&b.end)));
+        }
+    }
+
+    let prev_event_end = |s: usize, t: f64| -> f64 {
+        let mut lo = 0.0f64;
+        for row in [&comp[s], &comm[s]] {
+            for sp in row.iter() {
+                if sp.end <= t - eps && sp.end > lo {
+                    lo = sp.end;
+                }
+            }
+        }
+        lo
+    };
+
+    let fend = |s2: usize, c2: usize, micro: usize| -> f64 {
+        trace.fwd_end.get(s2).and_then(|r| r.get(c2 * m + micro)).copied().unwrap_or(0.0)
+    };
+    let bend = |s2: usize, c2: usize, micro: usize| -> f64 {
+        trace.bwd_end.get(s2).and_then(|r| r.get(c2 * m + micro)).copied().unwrap_or(0.0)
+    };
+
+    let mut links: Vec<PathLink> = Vec::new();
+    if rec.spans().is_empty() || makespan <= tiny {
+        return finish(links, makespan, p);
+    }
+
+    // Start at the stage whose span ends last (ties → lowest stage).
+    let mut s = 0usize;
+    let mut best_end = f64::NEG_INFINITY;
+    for sp in rec.spans() {
+        if sp.end > best_end || (sp.end == best_end && sp.stage < s) {
+            best_end = sp.end;
+            s = sp.stage;
+        }
+    }
+
+    let mut t = makespan;
+    let cap = 8 * rec.spans().len() + 4096;
+    let mut iters = 0usize;
+    let mut stuck = 0usize;
+    let mut last = (s, t.to_bits());
+
+    macro_rules! put {
+        ($s:expr, $cat:expr, $a:expr, $b:expr) => {
+            if $b > $a {
+                links.push(PathLink { stage: $s, cat: $cat, start: $a, end: $b });
+            }
+        };
+    }
+
+    while t > tiny {
+        iters += 1;
+        if iters > cap {
+            put!(s, PathCat::Stall, 0.0, t);
+            break;
+        }
+        if (s, t.to_bits()) == last {
+            stuck += 1;
+        } else {
+            stuck = 0;
+            last = (s, t.to_bits());
+        }
+        if stuck > 4 {
+            let lo = prev_event_end(s, t);
+            put!(s, PathCat::Stall, lo, t);
+            t = lo;
+            continue;
+        }
+
+        let csp = covering(&comp[s], t, eps);
+        let msp = covering(&comm[s], t, eps);
+        let pick: Option<&Span> = match (csp, msp) {
+            (Some(c), Some(mm)) => {
+                if work_cat(c.kind).is_some() {
+                    // Both streams active: follow whichever event ends
+                    // closest to t (ties → compute).
+                    if (mm.end - t).abs() < (c.end - t).abs() {
+                        Some(mm)
+                    } else {
+                        Some(c)
+                    }
+                } else {
+                    // Wait-shape compute span: the comm event is what
+                    // actually gates this instant.
+                    Some(mm)
+                }
+            }
+            (Some(c), None) => Some(c),
+            (None, Some(mm)) => Some(mm),
+            (None, None) => None,
+        };
+
+        if let Some(sp) = pick {
+            if let Some(cat) = work_cat(sp.kind) {
+                put!(s, cat, sp.start, t);
+                t = sp.start;
+                continue;
+            }
+            if let Some(cat) = comm_cat(sp.kind) {
+                put!(s, cat, sp.start, t);
+                t = sp.start;
+                continue;
+            }
+            if sp.kind == SpanKind::RecomputeOverlapped {
+                // Overlapped recompute is hidden *inside* a collective;
+                // the collective is the resource on the path.
+                if let Some(mm) = msp {
+                    let cat = comm_cat(mm.kind).unwrap_or(PathCat::CommTp);
+                    put!(s, cat, mm.start, t);
+                    t = mm.start;
+                } else {
+                    put!(s, PathCat::CommTp, sp.start, t);
+                    t = sp.start;
+                }
+                continue;
+            }
+            // Stall / RecomputeAbsorbed: fall through to dependency
+            // resolution — the wait's *reason* gets the time.
+        }
+
+        // ------------------------------------------------ wait resolution
+        // The gating item: latest item of this stage starting at or
+        // before t.
+        let mut gate: Option<(WorkKind, usize, usize, f64)> = None;
+        if let (Some(items), Some(spans)) = (trace.items.get(s), trace.item_spans.get(s)) {
+            for (item, &(ist, _)) in items.iter().zip(spans.iter()) {
+                if ist <= t + eps && gate.map(|(_, _, _, gs)| ist > gs).unwrap_or(true) {
+                    gate = Some((item.kind, item.micro, item.chunk, ist));
+                }
+            }
+        }
+        let Some((kind, micro, chunk, _)) = gate else {
+            put!(s, PathCat::Stall, 0.0, t);
+            break;
+        };
+        let chunk = if chunk == NO_INDEX { 0 } else { chunk };
+        let micro = if micro == NO_INDEX { 0 } else { micro };
+
+        let (src_end, s2, c2) = match kind {
+            WorkKind::Fwd => match deps.fwd_up.get(s * v + chunk).copied().flatten() {
+                None => (0.0, s, chunk),
+                Some((s2, c2)) => (fend(s2, c2, micro), s2, c2),
+            },
+            WorkKind::Bwd => match deps.bwd_up.get(s * v + chunk).copied().flatten() {
+                // Loss boundary: dy follows this stage's own forward.
+                None => (fend(s, chunk, micro), s, chunk),
+                Some((s2, c2)) => (bend(s2, c2, micro), s2, c2),
+            },
+            WorkKind::WGrad => (bend(s, chunk, micro), s, chunk),
+        };
+        let src_end = src_end.min(t);
+
+        if s2 != s {
+            // Cross-stage hop: the activation/grad rode the s2 → s p2p
+            // edge. Prefer the engine's actual CommP2p span (contending
+            // links); fall back to the modeled latency + wire time.
+            let (lat, wire) = deps.edge(s2, s);
+            let mut cut = (t - (wire + lat)).max(src_end);
+            for sp in &comm[s2] {
+                if sp.kind == SpanKind::CommP2p
+                    && sp.micro == micro
+                    && sp.chunk == c2
+                    && sp.start >= src_end - eps
+                    && sp.end <= t + eps
+                {
+                    cut = src_end.max(sp.start.min(t));
+                    break;
+                }
+            }
+            put!(s, PathCat::CommP2p, cut, t);
+            put!(s, PathCat::Stall, src_end, cut);
+            t = src_end;
+            s = s2;
+            continue;
+        }
+        if src_end >= t - eps {
+            // Zero-width hop within the stage: the upstream item's own
+            // spans cover the instant on the next iteration.
+            t = src_end.min(t);
+            continue;
+        }
+        let lo = src_end.max(prev_event_end(s, t));
+        put!(s, PathCat::Stall, lo, t);
+        t = lo;
+    }
+
+    finish(links, makespan, p)
+}
+
+fn finish(mut links: Vec<PathLink>, makespan: f64, p: usize) -> CriticalPath {
+    links.reverse();
+    let mut per_stage = vec![[0.0f64; 9]; p];
+    let mut total = [0.0f64; 9];
+    for l in &links {
+        let d = l.dur();
+        let i = l.cat.index();
+        if l.stage < per_stage.len() {
+            per_stage[l.stage][i] += d;
+        }
+        total[i] += d;
+    }
+    CriticalPath { links, makespan, per_stage, total }
+}
+
+// --------------------------------------------------------------------- report
+
+/// Build the versioned `lynx.critical_report.v1` artifact.
+pub fn critical_report(config: &str, cp: &CriticalPath) -> Json {
+    let sens = cp.sensitivity();
+    let mut categories = Json::Arr(Vec::new());
+    for cat in PathCat::ALL {
+        let secs = cp.total[cat.index()];
+        let share = if cp.makespan > 0.0 { secs / cp.makespan } else { 0.0 };
+        categories.push(Json::from_pairs(vec![
+            ("name", cat.label().into()),
+            ("secs", secs.into()),
+            ("share", share.into()),
+            ("sensitivity", sens[cat.index()].into()),
+        ]));
+    }
+    let mut per_stage = Json::Arr(Vec::new());
+    for (si, row) in cp.per_stage.iter().enumerate() {
+        let mut obj = Json::obj();
+        obj.set("stage", si.into());
+        let mut tot = 0.0;
+        for cat in PathCat::ALL {
+            obj.set(cat.label(), row[cat.index()].into());
+            tot += row[cat.index()];
+        }
+        obj.set("total", tot.into());
+        per_stage.push(obj);
+    }
+    let mut path = Json::Arr(Vec::new());
+    for l in &cp.links {
+        path.push(Json::from_pairs(vec![
+            ("stage", l.stage.into()),
+            ("category", l.cat.label().into()),
+            ("start", l.start.into()),
+            ("end", l.end.into()),
+        ]));
+    }
+    Json::from_pairs(vec![
+        ("schema", CRITICAL_REPORT_SCHEMA.into()),
+        ("config", config.into()),
+        ("makespan", cp.makespan.into()),
+        ("attributed_total", cp.attributed_total().into()),
+        ("links", cp.links.len().into()),
+        ("categories", categories),
+        ("per_stage", per_stage),
+        ("path", path),
+        (
+            "dominant",
+            cp.dominant().map(|c| Json::Str(c.label().to_string())).unwrap_or(Json::Null),
+        ),
+        (
+            "top_sensitivity",
+            cp.top_sensitivity()
+                .map(|(c, v)| {
+                    Json::from_pairs(vec![("category", c.label().into()), ("value", v.into())])
+                })
+                .unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+fn num(doc: &Json, key: &str) -> Result<f64, String> {
+    doc.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing number `{key}`"))
+}
+
+fn check_schema(doc: &Json) -> Result<(), String> {
+    match doc.get("schema").and_then(Json::as_str) {
+        Some(s) if s == CRITICAL_REPORT_SCHEMA => Ok(()),
+        Some(s) => Err(format!("not a critical report: schema `{s}`")),
+        None => Err("not a critical report: no `schema` field".to_string()),
+    }
+}
+
+/// Per-category `(secs, share, sensitivity)` rows of one report, in
+/// file order.
+fn category_rows(doc: &Json) -> Result<Vec<(String, f64, f64, f64)>, String> {
+    let cats = doc
+        .get("categories")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing `categories`".to_string())?;
+    let mut out = Vec::new();
+    for c in cats {
+        let name = c
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "category without `name`".to_string())?;
+        out.push((name.to_string(), num(c, "secs")?, num(c, "share")?, num(c, "sensitivity")?));
+    }
+    Ok(out)
+}
+
+/// Render a critical report for humans (`lynx explain`).
+pub fn explain_text(doc: &Json) -> Result<String, String> {
+    check_schema(doc)?;
+    let config = doc.get("config").and_then(Json::as_str).unwrap_or("?");
+    let makespan = num(doc, "makespan")?;
+    let nlinks = doc.get("links").and_then(Json::as_f64).unwrap_or(0.0) as usize;
+    let rows = category_rows(doc)?;
+
+    let mut out = String::new();
+    out.push_str(&format!("critical path — {config}\n"));
+    out.push_str(&format!("makespan {makespan:.6} s over {nlinks} links\n\n"));
+    out.push_str(&format!(
+        "  {:<18} {:>12} {:>8} {:>18}\n",
+        "category", "secs", "share", "10% faster buys"
+    ));
+    let mut sorted: Vec<&(String, f64, f64, f64)> = rows.iter().collect();
+    sorted.sort_by(|a, b| b.1.total_cmp(&a.1));
+    for (name, secs, share, sens) in sorted {
+        if *secs <= 0.0 {
+            continue;
+        }
+        out.push_str(&format!(
+            "  {:<18} {:>12.6} {:>7.1}% {:>17.2}%\n",
+            name,
+            secs,
+            100.0 * share,
+            100.0 * 0.1 * sens
+        ));
+    }
+    match doc.get("dominant").and_then(Json::as_str) {
+        Some(d) => out.push_str(&format!("\ndominant bottleneck: {d}\n")),
+        None => out.push_str("\ndominant bottleneck: none (empty path)\n"),
+    }
+    if let Some(ts) = doc.get("top_sensitivity") {
+        if let (Some(cat), Some(val)) =
+            (ts.get("category").and_then(Json::as_str), ts.get("value").and_then(Json::as_f64))
+        {
+            out.push_str(&format!(
+                "top sensitivity: 10% faster {} buys {:.2}% iteration time\n",
+                cat,
+                100.0 * 0.1 * val
+            ));
+        }
+    }
+    if let Some(stages) = doc.get("per_stage").and_then(Json::as_arr) {
+        out.push_str("\nper stage (dominant share):\n");
+        for st in stages {
+            let si = st.get("stage").and_then(Json::as_f64).unwrap_or(-1.0) as i64;
+            let total = st.get("total").and_then(Json::as_f64).unwrap_or(0.0);
+            let mut best = ("-", 0.0f64);
+            if let Some(obj) = st.as_obj() {
+                for cat in PathCat::ALL {
+                    let v = obj.get(cat.label()).and_then(Json::as_f64).unwrap_or(0.0);
+                    if v > best.1 {
+                        best = (cat.label(), v);
+                    }
+                }
+            }
+            let share = if total > 0.0 { 100.0 * best.1 / total } else { 0.0 };
+            out.push_str(&format!(
+                "  stage{:<3} {:>10.6} s on path — {} {:.1}%\n",
+                si, total, best.0, share
+            ));
+        }
+    }
+    Ok(out)
+}
+
+// ----------------------------------------------------------------------- diff
+
+/// One aligned per-stage/per-category delta between two reports.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiffRow {
+    pub stage: Option<usize>,
+    pub category: String,
+    pub a: f64,
+    pub b: f64,
+}
+
+impl DiffRow {
+    pub fn delta(&self) -> f64 {
+        self.b - self.a
+    }
+}
+
+/// Aligned diff of two `lynx.critical_report.v1` artifacts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CriticalDiff {
+    pub config_a: String,
+    pub config_b: String,
+    pub makespan_a: f64,
+    pub makespan_b: f64,
+    /// Total per-category rows (stage = `None`), then per-stage rows.
+    pub rows: Vec<DiffRow>,
+}
+
+impl CriticalDiff {
+    pub fn max_abs_delta(&self) -> f64 {
+        self.rows
+            .iter()
+            .map(|r| r.delta().abs())
+            .chain(std::iter::once((self.makespan_b - self.makespan_a).abs()))
+            .fold(0.0, f64::max)
+    }
+
+    /// Rows sorted by descending delta (worst regressions first).
+    pub fn top_regressions(&self, n: usize) -> Vec<&DiffRow> {
+        let mut rows: Vec<&DiffRow> = self.rows.iter().filter(|r| r.delta() > 0.0).collect();
+        rows.sort_by(|a, b| b.delta().total_cmp(&a.delta()));
+        rows.truncate(n);
+        rows
+    }
+}
+
+fn stage_cat_map(doc: &Json) -> Result<Vec<(usize, Vec<(String, f64)>)>, String> {
+    let stages = doc
+        .get("per_stage")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing `per_stage`".to_string())?;
+    let mut out = Vec::new();
+    for st in stages {
+        let si = st
+            .get("stage")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| "per_stage row without `stage`".to_string())?;
+        let mut cats = Vec::new();
+        for cat in PathCat::ALL {
+            cats.push((
+                cat.label().to_string(),
+                st.get(cat.label()).and_then(Json::as_f64).unwrap_or(0.0),
+            ));
+        }
+        out.push((si, cats));
+    }
+    Ok(out)
+}
+
+/// Align two critical reports per category and per stage.
+pub fn diff_reports(a: &Json, b: &Json) -> Result<CriticalDiff, String> {
+    check_schema(a)?;
+    check_schema(b)?;
+    let cats_a = category_rows(a)?;
+    let cats_b = category_rows(b)?;
+    let mut rows = Vec::new();
+    for cat in PathCat::ALL {
+        let va = cats_a.iter().find(|r| r.0 == cat.label()).map(|r| r.1).unwrap_or(0.0);
+        let vb = cats_b.iter().find(|r| r.0 == cat.label()).map(|r| r.1).unwrap_or(0.0);
+        rows.push(DiffRow { stage: None, category: cat.label().to_string(), a: va, b: vb });
+    }
+    let sa = stage_cat_map(a)?;
+    let sb = stage_cat_map(b)?;
+    let n_stages = sa
+        .iter()
+        .chain(sb.iter())
+        .map(|(s, _)| s + 1)
+        .max()
+        .unwrap_or(0);
+    for si in 0..n_stages {
+        let ra = sa.iter().find(|(s, _)| *s == si).map(|(_, c)| c);
+        let rb = sb.iter().find(|(s, _)| *s == si).map(|(_, c)| c);
+        for cat in PathCat::ALL {
+            let va = ra
+                .and_then(|c| c.iter().find(|(n, _)| n == cat.label()))
+                .map(|(_, v)| *v)
+                .unwrap_or(0.0);
+            let vb = rb
+                .and_then(|c| c.iter().find(|(n, _)| n == cat.label()))
+                .map(|(_, v)| *v)
+                .unwrap_or(0.0);
+            rows.push(DiffRow {
+                stage: Some(si),
+                category: cat.label().to_string(),
+                a: va,
+                b: vb,
+            });
+        }
+    }
+    Ok(CriticalDiff {
+        config_a: a.get("config").and_then(Json::as_str).unwrap_or("?").to_string(),
+        config_b: b.get("config").and_then(Json::as_str).unwrap_or("?").to_string(),
+        makespan_a: num(a, "makespan")?,
+        makespan_b: num(b, "makespan")?,
+        rows,
+    })
+}
+
+/// Render a [`CriticalDiff`] for humans (`lynx diff`). The
+/// `max abs delta:` line is machine-parseable — a self-diff prints
+/// exactly `max abs delta: 0`.
+pub fn diff_text(d: &CriticalDiff) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("A: {}\nB: {}\n", d.config_a, d.config_b));
+    out.push_str(&format!(
+        "makespan: {:.6} -> {:.6} ({:+.6} s)\n\n",
+        d.makespan_a,
+        d.makespan_b,
+        d.makespan_b - d.makespan_a
+    ));
+    out.push_str(&format!(
+        "  {:<18} {:>12} {:>12} {:>12}\n",
+        "category", "A secs", "B secs", "delta"
+    ));
+    for r in d.rows.iter().filter(|r| r.stage.is_none()) {
+        if r.a == 0.0 && r.b == 0.0 {
+            continue;
+        }
+        out.push_str(&format!(
+            "  {:<18} {:>12.6} {:>12.6} {:>+12.6}\n",
+            r.category,
+            r.a,
+            r.b,
+            r.delta()
+        ));
+    }
+    let regressions = d.top_regressions(5);
+    if regressions.is_empty() {
+        out.push_str("\nno regressions (no positive deltas)\n");
+    } else {
+        out.push_str("\ntop regressions:\n");
+        for r in regressions {
+            match r.stage {
+                Some(s) => out.push_str(&format!(
+                    "  stage{:<3} {:<18} {:+.6} s\n",
+                    s,
+                    r.category,
+                    r.delta()
+                )),
+                None => out.push_str(&format!(
+                    "  total    {:<18} {:+.6} s\n",
+                    r.category,
+                    r.delta()
+                )),
+            }
+        }
+    }
+    out.push_str(&format!("\nmax abs delta: {}\n", d.max_abs_delta()));
+    out
+}
+
+// ---------------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{CostModel, Topology};
+    use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
+    use crate::plan::{CostTables, PlanCache, PolicyKind};
+    use crate::sched::ScheduleKind;
+    use crate::sim::{simulate_observed, PartitionMode, SimConfig};
+
+    fn observed(kind: ScheduleKind) -> (CriticalPath, Json) {
+        let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+        let cm = CostModel::new(Topology::nvlink(2, 4));
+        let cfg = SimConfig::new(setup, PolicyKind::LynxHeu, PartitionMode::Dp)
+            .with_schedule(kind);
+        let tables = CostTables::new(&cfg.setup, &cm, &build_layer_graph(&cfg.setup));
+        let mut cache = PlanCache::new();
+        let (_r, trace, obs) = simulate_observed(&cm, &cfg, &tables, &mut cache);
+        let cp = analyze(&obs.recording, &trace, &obs.deps);
+        let report = critical_report("test-cell", &cp);
+        (cp, report)
+    }
+
+    fn assert_conserved(cp: &CriticalPath) {
+        let tol = 1e-9 * cp.makespan.max(1.0);
+        assert!(
+            (cp.attributed_total() - cp.makespan).abs() <= tol,
+            "sum {} vs makespan {}",
+            cp.attributed_total(),
+            cp.makespan
+        );
+        // Chronological tiling of [0, makespan].
+        let mut cur = 0.0;
+        for l in &cp.links {
+            assert!((l.start - cur).abs() <= 1e-6 * cp.makespan.max(1.0), "gap at {cur}");
+            cur = l.end;
+        }
+        assert!((cur - cp.makespan).abs() <= 1e-6 * cp.makespan.max(1.0));
+        // Per-stage rows sum back to the total.
+        for cat in PathCat::ALL {
+            let st: f64 = cp.per_stage.iter().map(|r| r[cat.index()]).sum();
+            assert!((st - cp.total[cat.index()]).abs() <= tol);
+        }
+    }
+
+    #[test]
+    fn conserves_on_1f1b_and_zbv() {
+        for kind in [ScheduleKind::OneFOneB, ScheduleKind::ZbV] {
+            let (cp, _) = observed(kind);
+            assert!(cp.makespan > 0.0);
+            assert_conserved(&cp);
+            // Real pipelines put forward compute on the path somewhere.
+            assert!(cp.total[PathCat::Fwd.index()] > 0.0);
+        }
+    }
+
+    #[test]
+    fn sensitivity_properties() {
+        let (cp, _) = observed(ScheduleKind::ZbV);
+        let sens = cp.sensitivity();
+        for cat in PathCat::ALL {
+            let v = sens[cat.index()];
+            assert!(v >= 0.0);
+            assert_eq!(v == 0.0, cp.total[cat.index()] == 0.0);
+            // replay_scaled agrees with the derivative by construction.
+            let want = cp.makespan - 0.1 * cp.total[cat.index()];
+            assert!((cp.replay_scaled(cat, 0.1) - want).abs() < 1e-12);
+        }
+        assert!(cp.dominant().is_some());
+        let (top, val) = cp.top_sensitivity().unwrap();
+        assert!(top != PathCat::Stall && val > 0.0);
+    }
+
+    #[test]
+    fn report_roundtrip_and_self_diff_zero() {
+        let (cp, report) = observed(ScheduleKind::OneFOneB);
+        assert_eq!(report.get("schema").and_then(Json::as_str), Some(CRITICAL_REPORT_SCHEMA));
+        let parsed = Json::parse(&report.pretty()).unwrap();
+        let text = explain_text(&parsed).unwrap();
+        assert!(text.contains("dominant bottleneck"));
+        assert!(text.contains("makespan"));
+        let diff = diff_reports(&parsed, &parsed).unwrap();
+        assert_eq!(diff.max_abs_delta(), 0.0);
+        assert!(diff_text(&diff).contains("max abs delta: 0\n"));
+        // The artifact's own conservation holds after a parse roundtrip.
+        let total = parsed.get("attributed_total").and_then(Json::as_f64).unwrap();
+        assert!((total - cp.makespan).abs() <= 1e-9 * cp.makespan.max(1.0));
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for cat in PathCat::ALL {
+            assert_eq!(PathCat::from_label(cat.label()), Some(cat));
+        }
+        assert_eq!(PathCat::from_label("nope"), None);
+    }
+
+    #[test]
+    fn empty_recording_is_empty_path() {
+        let rec = SpanRecorder::new();
+        let trace = PipelineTrace::default();
+        let cp = analyze(&rec, &trace, &DepStructure::default());
+        assert!(cp.links.is_empty());
+        assert_eq!(cp.dominant(), None);
+        assert_eq!(cp.top_sensitivity(), None);
+    }
+
+    #[test]
+    fn explain_rejects_wrong_schema() {
+        let doc = Json::from_pairs(vec![("schema", "lynx.report.v1".into())]);
+        assert!(explain_text(&doc).is_err());
+        assert!(diff_reports(&doc, &doc).is_err());
+    }
+}

@@ -1,7 +1,8 @@
-//! Observability: event tracing, metrics, and machine-readable reports.
+//! Observability: event tracing, metrics, reports, and critical-path
+//! diagnosis.
 //!
 //! One spine for everything a run can tell you about itself, split into
-//! three pieces that share no state but compose in the runner:
+//! four pieces that share no state but compose in the runner:
 //!
 //! * [`trace`] — typed spans on per-stage compute/comm tracks, recorded
 //!   by the simulation engine at execution time with sim-clock
@@ -24,11 +25,29 @@
 //!   Bump the version constants in [`report`] when a field changes
 //!   meaning; `scripts/validate_obs.py` checks artifacts against the
 //!   current schemas.
+//! * [`critical`] — the diagnosis layer on top of a recording: a
+//!   backward walk from the makespan event through the spans *and* the
+//!   engine's dependency structure ([`critical::DepStructure`],
+//!   exported by the runner) extracts the critical path and attributes
+//!   it into a **conserved** nine-category decomposition
+//!   ([`critical::PathCat`]: F/B/W compute, exposed recompute,
+//!   serialized spill, TP/p2p/DP comm, pure stall) — per stage and in
+//!   total, sums equal to the makespan to 1e-9. First-order what-if
+//!   sensitivities (`∂makespan/∂category`) fall out of the same walk.
+//!   Surfaced as `lynx.critical_report.v1`
+//!   (`simulate --critical-out`), the `lynx explain` summary, the
+//!   aligned `lynx diff` of two reports, the `--gantt-crit` overlay,
+//!   and per-point bottleneck annotations on the tune front.
 
+pub mod critical;
 pub mod metrics;
 pub mod report;
 pub mod trace;
 
+pub use critical::{
+    analyze, critical_report, diff_reports, diff_text, explain_text, CriticalDiff, CriticalPath,
+    DepStructure, PathCat, PathLink, CRITICAL_REPORT_SCHEMA,
+};
 pub use metrics::{labeled, HistogramSummary, MetricsRegistry};
 pub use report::{
     partition_report, run_report, tune_report, PARTITION_REPORT_SCHEMA, REPORT_SCHEMA,

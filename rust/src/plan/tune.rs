@@ -47,7 +47,7 @@ use crate::costmodel::{CostModel, Topology};
 use crate::graph::{build_layer_graph, ModelConfig, TrainSetup};
 use crate::obs::MetricsRegistry;
 use crate::sched::{synth_axis, ScheduleKind, SynthesisOutcome};
-use crate::sim::{simulate_cached, PartitionMode, SimConfig};
+use crate::sim::{simulate_cached, simulate_observed, PartitionMode, SimConfig};
 use crate::topo::ClusterTopology;
 use crate::util::json::Json;
 use std::collections::VecDeque;
@@ -179,6 +179,13 @@ pub struct TunedPoint {
     /// a one-shot warning).
     pub schedule_outcome: SynthesisOutcome,
     pub partition: Vec<usize>,
+    /// Dominant critical-path category of the executed run — annotated
+    /// on Pareto-front points only (`None` elsewhere), so the front
+    /// explains *why* each configuration sits where it does.
+    pub bottleneck: Option<String>,
+    /// Largest non-stall sensitivity `(category, ∂makespan/∂category)`
+    /// of the critical path — front points only.
+    pub top_sensitivity: Option<(String, f64)>,
 }
 
 /// Round-trippable schedule token: unlike [`ScheduleKind::label`] it
@@ -237,6 +244,23 @@ impl TunedPoint {
             .set(
                 "partition",
                 Json::Arr(self.partition.iter().map(|&l| Json::from(l)).collect()),
+            )
+            .set(
+                "bottleneck",
+                match &self.bottleneck {
+                    Some(b) => Json::from(b.clone()),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "top_sensitivity",
+                match &self.top_sensitivity {
+                    Some((cat, val)) => Json::from_pairs(vec![
+                        ("category", Json::from(cat.clone())),
+                        ("value", Json::from(*val)),
+                    ]),
+                    None => Json::Null,
+                },
             );
         o
     }
@@ -513,6 +537,44 @@ fn evaluate_candidate(
         oom: r.oom,
         schedule_outcome: r.schedule_outcome,
         partition: r.partition,
+        bottleneck: None,
+        top_sensitivity: None,
+    }
+}
+
+/// Annotate every Pareto-front point with its dominant bottleneck class
+/// and top what-if sensitivity: the winning configuration is re-run
+/// once under observation (the front is small; plans re-solve from a
+/// fresh cache, deterministically) and its critical path attributed
+/// with [`crate::obs::analyze`]. Non-front points keep `None` — the
+/// annotation never moves a point, so front identity (pruned ≡
+/// exhaustive, serial ≡ parallel) is untouched.
+fn annotate_front(result: &mut TuneResult, geoms: &[Geometry], opts: &TuneOptions) {
+    let front = result.front.clone();
+    for i in front {
+        let (cfg, geom) = {
+            let pt = &result.points[i];
+            if pt.oom {
+                continue;
+            }
+            let Some(geom) = geoms.iter().find(|g| {
+                g.setup.tp == pt.tp && g.setup.pp == pt.pp && g.setup.dp == pt.dp
+            }) else {
+                continue;
+            };
+            let mut cfg = SimConfig::new(geom.setup.clone(), pt.policy, PartitionMode::Lynx)
+                .with_schedule(pt.schedule);
+            if opts.search == SearchKind::Dp {
+                cfg = cfg.with_fixed_partition(pt.partition.clone());
+            }
+            (cfg, geom)
+        };
+        let mut cache = PlanCache::new();
+        let (_r, trace, obs) = simulate_observed(&geom.cm, &cfg, &geom.tables, &mut cache);
+        let cp = crate::obs::analyze(&obs.recording, &trace, &obs.deps);
+        let pt = &mut result.points[i];
+        pt.bottleneck = cp.dominant().map(|c| c.label().to_string());
+        pt.top_sensitivity = cp.top_sensitivity().map(|(c, v)| (c.label().to_string(), v));
     }
 }
 
@@ -758,6 +820,7 @@ pub fn tune(space: &TuneSpace, opts: &TuneOptions) -> TuneResult {
         wall_secs: start.elapsed().as_secs_f64(),
         metrics,
     };
+    annotate_front(&mut result, &geoms, opts);
     result.metrics.set_gauge("tune.prune_rate", result.prune_rate());
     result.metrics.set_gauge("tune.cache_hit_rate", result.hit_rate());
     result.metrics.set_gauge("tune.wall_secs", result.wall_secs);
@@ -832,6 +895,26 @@ mod tests {
                 b.lb_mem,
                 c
             );
+        }
+    }
+
+    #[test]
+    fn front_points_carry_bottleneck_annotations() {
+        let space = small_space();
+        let r = tune(&space, &TuneOptions::default());
+        assert!(!r.front.is_empty());
+        for p in r.front_points() {
+            assert!(p.bottleneck.is_some(), "front point without a bottleneck class");
+            let (cat, v) =
+                p.top_sensitivity.as_ref().expect("front point without a top sensitivity");
+            assert!(*v > 0.0 && cat != "stall", "top sensitivity {cat}={v}");
+        }
+        // Non-front points stay unannotated (the annotation pass only
+        // re-runs the winners).
+        for (i, p) in r.points.iter().enumerate() {
+            if !r.front.contains(&i) {
+                assert!(p.bottleneck.is_none() && p.top_sensitivity.is_none());
+            }
         }
     }
 

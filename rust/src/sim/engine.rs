@@ -216,7 +216,7 @@ impl Default for LinkCfg {
 
 impl LinkCfg {
     /// Wire bandwidth of the boundary between `src` and `dst`.
-    fn bandwidth_between(&self, src: usize, dst: usize) -> f64 {
+    pub(crate) fn bandwidth_between(&self, src: usize, dst: usize) -> f64 {
         let boundary = src.min(dst);
         self.edge_bandwidth.get(boundary).copied().unwrap_or(self.p2p_bandwidth)
     }
@@ -320,7 +320,7 @@ pub struct OverlapWindow {
 }
 
 /// Trace of one simulated iteration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct PipelineTrace {
     /// Pipeline makespan (first fwd start to last item / DP-sync end),
     /// seconds.

@@ -19,6 +19,7 @@
 //! both renderers produce byte-identical output for the same run.
 
 use super::engine::{CommTag, PipelineTrace, StageTiming};
+use crate::obs::critical::{CriticalPath, PathCat};
 use crate::obs::{Span, SpanKind, SpanRecorder, Track, NO_INDEX};
 use crate::sched::WorkKind;
 
@@ -166,6 +167,72 @@ pub fn render_gantt_recorded(
         !comm[s].is_empty()
     };
     render_core(timings, num_micro, num_chunks, makespan, bwd_frac, &items, &mut comm_row, cols)
+}
+
+/// [`render_gantt_recorded`] plus a **critical-path overlay**: the base
+/// rendering is byte-identical (same cells, same legend line), with one
+/// extra `stage<N>.*` marker row per stage that appears on the path —
+/// `^` under critical compute work (F/B/W, exposed recompute, spilled
+/// window), `~` under critical communication (TP/p2p/DP), `-` under
+/// pure stall. Used by `lynx simulate --gantt-crit`.
+pub fn render_gantt_critical(
+    timings: &[StageTiming],
+    rec: &SpanRecorder,
+    bwd_frac: f64,
+    cp: &CriticalPath,
+    cols: usize,
+) -> String {
+    let base = render_gantt_recorded(timings, rec, bwd_frac, cols);
+    let p = timings.len();
+    let scale = cols as f64 / cp.makespan.max(1e-12);
+    let mut marks = vec![vec![' '; cols]; p];
+    for l in &cp.links {
+        if l.stage >= p {
+            continue;
+        }
+        let ch = match l.cat {
+            PathCat::CommTp | PathCat::CommP2p | PathCat::CommDp => '~',
+            PathCat::Stall => '-',
+            _ => '^',
+        };
+        paint(&mut marks[l.stage], l.start, l.end, ch, scale);
+    }
+
+    // Splice each stage's marker row in after its last base row.
+    let stage_of = |line: &str| -> Option<usize> {
+        let rest = line.strip_prefix("stage")?;
+        let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+        digits.parse().ok()
+    };
+    let mut out = String::new();
+    let mut cur: Option<usize> = None;
+    let flush = |out: &mut String, s: Option<usize>| {
+        if let Some(s) = s {
+            if s < p && marks[s].iter().any(|&c| c != ' ') {
+                out.push_str(&format!("stage{s}.*|"));
+                out.extend(marks[s].iter().copied());
+                out.push_str("|\n");
+            }
+        }
+    };
+    for line in base.lines() {
+        let s = stage_of(line);
+        if s != cur {
+            flush(&mut out, cur);
+            cur = s;
+        }
+        out.push_str(line);
+        out.push('\n');
+        if s.is_none() {
+            cur = None;
+        }
+    }
+    flush(&mut out, cur);
+    out.push_str(
+        "        critical path (stage<N>.* rows): ^ = compute link, \
+         ~ = comm link, - = stall link\n",
+    );
+    out
 }
 
 /// Which item phase a compute-side span unambiguously names, if any.
@@ -355,6 +422,7 @@ fn paint(row: &mut [char], start: f64, end: f64, c: char, scale: f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::critical::PathLink;
     use crate::obs::MetricsRegistry;
     use crate::sched::{Interleaved1F1B, OneFOneB, Segment, ZbH1};
     use crate::sim::engine::{
@@ -489,6 +557,85 @@ mod tests {
             let b = render_gantt_recorded(&t, &rec, tr.bwd_frac, 100);
             assert_eq!(a, b, "{}", kind.label());
         }
+    }
+
+    #[test]
+    fn golden_critical_overlay_marker_row() {
+        // Same cell as golden_comm_row_renders_the_second_stream, with a
+        // hand-built critical path: fwd [0,1), TP collective [1,2),
+        // bwd [2,4). The overlay adds exactly one marker row and one
+        // legend line; every base line is byte-identical.
+        let segs = vec![StageSegments {
+            fwd: vec![Segment::comp(1.0), Segment::comm(1.0)],
+            bwd: vec![Segment::comp(2.0)],
+            ..StageSegments::default()
+        }];
+        let sched = OneFOneB::new(1, 1);
+        let mut rec = crate::obs::SpanRecorder::new();
+        let tr = run_schedule_segments_obs(
+            &segs,
+            &LinkCfg::default(),
+            &sched,
+            false,
+            Some(&mut rec),
+            None,
+        );
+        let t = vec![StageTiming { fwd: 2.0, bwd: 2.0, exposed: 0.0, p2p: 0.0 }];
+        let links = vec![
+            PathLink { stage: 0, cat: PathCat::Fwd, start: 0.0, end: 1.0 },
+            PathLink { stage: 0, cat: PathCat::CommTp, start: 1.0, end: 2.0 },
+            PathLink { stage: 0, cat: PathCat::Bwd, start: 2.0, end: 4.0 },
+        ];
+        let mut total = [0.0; 9];
+        total[PathCat::Fwd.index()] = 1.0;
+        total[PathCat::CommTp.index()] = 1.0;
+        total[PathCat::Bwd.index()] = 2.0;
+        let cp = CriticalPath { links, makespan: 4.0, per_stage: vec![total], total };
+        let g = render_gantt_critical(&t, &rec, tr.bwd_frac, &cp, 40);
+        let lines: Vec<&str> = g.lines().collect();
+        assert_eq!(lines[1], "stage0 |00000000000000000000aaaaaaaaaaaaaaaaaaaa|", "{g}");
+        assert_eq!(lines[2], "stage0.c|··········cccccccccc····················|", "{g}");
+        assert_eq!(lines[3], "stage0.*|^^^^^^^^^^~~~~~~~~~~^^^^^^^^^^^^^^^^^^^^|", "{g}");
+        assert!(g.contains("critical path"), "{g}");
+    }
+
+    #[test]
+    fn critical_overlay_off_is_byte_identical() {
+        // Dropping the marker rows and the overlay legend from the
+        // critical render reproduces render_gantt_recorded exactly —
+        // the overlay never touches a base cell.
+        let t = uniform(4, 1.0, 2.0, 0.5);
+        let sched = OneFOneB::new(4, 8);
+        let mut rec = crate::obs::SpanRecorder::new();
+        let tr = run_schedule_obs(&t, &sched, true, Some(&mut rec), None);
+        let base = render_gantt_recorded(&t, &rec, tr.bwd_frac, 100);
+        // A path with one link per stage, so every stage gets a marker.
+        let links: Vec<PathLink> = (0..4)
+            .map(|s| PathLink {
+                stage: s,
+                cat: PathCat::Stall,
+                start: s as f64,
+                end: s as f64 + 1.0,
+            })
+            .collect();
+        let mut per_stage = vec![[0.0; 9]; 4];
+        for row in &mut per_stage {
+            row[PathCat::Stall.index()] = 1.0;
+        }
+        let mut total = [0.0; 9];
+        total[PathCat::Stall.index()] = 4.0;
+        let cp = CriticalPath { links, makespan: tr.makespan, per_stage, total };
+        let g = render_gantt_critical(&t, &rec, tr.bwd_frac, &cp, 100);
+        let stripped: String = g
+            .lines()
+            .filter(|l| !l.starts_with("        critical path"))
+            .filter(|l| {
+                !(l.starts_with("stage") && l.contains(".*|"))
+            })
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert_eq!(stripped, base);
+        assert_eq!(g.matches(".*|").count(), 4, "one marker row per stage:\n{g}");
     }
 
     #[test]

@@ -71,7 +71,7 @@ pub use engine::{
     CommSpan, CommTag, DpMode, LinkCfg, OverlapWindow, PipelineTrace, StageSegments, StageTiming,
 };
 pub use fixpoint::run_schedule_fixpoint;
-pub use gantt::{render_gantt, render_gantt_recorded};
+pub use gantt::{render_gantt, render_gantt_critical, render_gantt_recorded};
 pub use runner::{
     better_outcome, simulate, simulate_cached, simulate_observed, simulate_traced, PartitionMode,
     RunObservation, SimConfig, SimReport, StageReport,

@@ -15,6 +15,7 @@ use super::engine::{
 };
 use crate::costmodel::CostModel;
 use crate::graph::{build_layer_graph, TrainSetup};
+use crate::obs::critical::DepStructure;
 use crate::obs::{MetricsRegistry, SpanRecorder};
 use crate::plan::{
     dp_partition, lynx_partition_cached, CostTables, Phase, PlanCache, PlanOutcome, PolicyKind,
@@ -270,11 +271,18 @@ impl SimReport {
 pub struct RunObservation {
     pub recording: SpanRecorder,
     pub metrics: MetricsRegistry,
+    /// Dependency structure of the executed schedule, for
+    /// [`crate::obs::critical::analyze`].
+    pub deps: DepStructure,
 }
 
 impl RunObservation {
     pub fn new() -> RunObservation {
-        RunObservation { recording: SpanRecorder::new(), metrics: MetricsRegistry::new() }
+        RunObservation {
+            recording: SpanRecorder::new(),
+            metrics: MetricsRegistry::new(),
+            deps: DepStructure::default(),
+        }
     }
 }
 
@@ -664,14 +672,17 @@ fn simulate_one(
         dp_mode: cfg.dp_mode,
     };
     let trace = match obs {
-        Some(o) => run_schedule_segments_obs(
-            &segments,
-            &link,
-            sched.as_ref(),
-            lynx_absorb,
-            Some(&mut o.recording),
-            Some(&mut o.metrics),
-        ),
+        Some(o) => {
+            o.deps = DepStructure::from_engine(sched.as_ref(), &segments, &link);
+            run_schedule_segments_obs(
+                &segments,
+                &link,
+                sched.as_ref(),
+                lynx_absorb,
+                Some(&mut o.recording),
+                Some(&mut o.metrics),
+            )
+        }
         None => run_schedule_segments_obs(&segments, &link, sched.as_ref(), lynx_absorb, None, None),
     };
 

@@ -1,0 +1,193 @@
+//! Property grid for critical-path attribution (`obs::critical`).
+//!
+//! Across schedules × policies × topologies × bandwidth scales:
+//!
+//! 1. **Conservation**: the critical-path links tile `[0, makespan]`
+//!    chronologically and the nine-category durations sum to the
+//!    makespan within 1e-9, per stage and in total.
+//! 2. **Sensitivity**: every derivative `∂makespan/∂category` is
+//!    non-negative, exactly zero iff the category is absent from the
+//!    path, and `replay_scaled` agrees with the first-order saving.
+//! 3. **Self-diff**: `lynx diff` of a report against itself is
+//!    identically zero (exact float equality, not epsilon).
+//! 4. **Artifact**: the emitted `lynx.critical_report.v1` survives a
+//!    serialize → parse round trip with conservation intact.
+
+use lynx::costmodel::{CostModel, Topology};
+use lynx::graph::{build_layer_graph, ModelConfig, TrainSetup};
+use lynx::obs::{analyze, critical_report, diff_reports, CriticalPath, PathCat};
+use lynx::plan::{CostTables, PlanCache, PolicyKind};
+use lynx::sched::ScheduleKind;
+use lynx::sim::{simulate_observed, DpMode, PartitionMode, SimConfig};
+use lynx::util::json::Json;
+
+struct Cell {
+    label: String,
+    cp: CriticalPath,
+}
+
+/// Schedules × policies × topologies × bandwidth scales, small enough
+/// to run in tier-1 but heterogeneous enough to hit every category:
+/// plan-bandwidth cells keep recompute hidden, the bw-scaled cells
+/// shrink the executed comm windows below plan (faster links = less
+/// room to hide recompute) so the overlap spills (CommSerialized /
+/// RecomputeExposed), and the DP cells put CommDp hops on the comm
+/// streams.
+fn grid() -> Vec<Cell> {
+    let model = ModelConfig::by_name("1.3B").unwrap();
+    let mut cells = Vec::new();
+    let schedules = [
+        ScheduleKind::OneFOneB,
+        ScheduleKind::GPipe,
+        ScheduleKind::ZbH1,
+        ScheduleKind::ZbV,
+        ScheduleKind::Interleaved { chunks: 2 },
+    ];
+    let topos: [(&str, fn() -> Topology); 2] =
+        [("nvlink", || Topology::nvlink(2, 4)), ("pcie", || Topology::pcie(2, 4))];
+    for schedule in schedules {
+        for policy in [PolicyKind::Block, PolicyKind::LynxHeu] {
+            for (tname, topo) in &topos {
+                for bw in [1.0, 4.0] {
+                    let setup = TrainSetup::new(model.clone(), 2, 4, 4, 8);
+                    let cm = CostModel::new(topo());
+                    let mut cfg = SimConfig::new(setup, policy, PartitionMode::Dp)
+                        .with_schedule(schedule)
+                        .with_bw(bw);
+                    // One DP variant per schedule keeps the grid small.
+                    if policy == PolicyKind::LynxHeu && *tname == "nvlink" && bw == 1.0 {
+                        cfg.setup = cfg.setup.clone().with_dp(2);
+                        cfg = cfg.with_dp(DpMode::Serial);
+                    }
+                    let tables =
+                        CostTables::new(&cfg.setup, &cm, &build_layer_graph(&cfg.setup));
+                    let mut cache = PlanCache::new();
+                    let (_r, trace, obs) = simulate_observed(&cm, &cfg, &tables, &mut cache);
+                    let cp = analyze(&obs.recording, &trace, &obs.deps);
+                    cells.push(Cell {
+                        label: format!(
+                            "{:?}/{:?}/{tname}/bw{bw}",
+                            schedule, policy
+                        ),
+                        cp,
+                    });
+                }
+            }
+        }
+    }
+    cells
+}
+
+#[test]
+fn attribution_conserves_and_tiles_across_the_grid() {
+    let cells = grid();
+    assert!(cells.len() >= 40, "grid shrank to {}", cells.len());
+    for Cell { label, cp } in &cells {
+        assert!(cp.makespan > 0.0, "{label}: empty run");
+        let tol = 1e-9 * cp.makespan.max(1.0);
+        // Total conservation.
+        assert!(
+            (cp.attributed_total() - cp.makespan).abs() <= tol,
+            "{label}: attributed {} vs makespan {}",
+            cp.attributed_total(),
+            cp.makespan
+        );
+        // Chronological tiling of [0, makespan] with no gaps.
+        let mut cur = 0.0;
+        for l in &cp.links {
+            assert!(
+                (l.start - cur).abs() <= 1e-6 * cp.makespan,
+                "{label}: gap at {cur} vs {}",
+                l.start
+            );
+            assert!(l.end > l.start, "{label}: empty link");
+            cur = l.end;
+        }
+        assert!((cur - cp.makespan).abs() <= 1e-6 * cp.makespan, "{label}: ends at {cur}");
+        // Per-stage rows sum back to the per-category totals.
+        for cat in PathCat::ALL {
+            let st: f64 = cp.per_stage.iter().map(|r| r[cat.index()]).sum();
+            assert!(
+                (st - cp.total[cat.index()]).abs() <= tol,
+                "{label}: stage sum {st} != total {} for {}",
+                cp.total[cat.index()],
+                cat.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn sensitivity_is_nonnegative_and_zero_iff_absent() {
+    for Cell { label, cp } in &grid() {
+        let sens = cp.sensitivity();
+        for cat in PathCat::ALL {
+            let v = sens[cat.index()];
+            assert!(v >= 0.0, "{label}: negative sensitivity for {}", cat.label());
+            assert_eq!(
+                v == 0.0,
+                cp.total[cat.index()] == 0.0,
+                "{label}: sensitivity/presence mismatch for {}",
+                cat.label()
+            );
+            let want = cp.makespan - 0.1 * cp.total[cat.index()];
+            assert!(
+                (cp.replay_scaled(cat, 0.1) - want).abs() < 1e-12 * cp.makespan.max(1.0),
+                "{label}: replay disagrees with the derivative for {}",
+                cat.label()
+            );
+        }
+        // A real pipeline always has compute on its critical path.
+        assert!(
+            cp.total[PathCat::Fwd.index()] + cp.total[PathCat::Bwd.index()] > 0.0,
+            "{label}: no compute on the path"
+        );
+    }
+}
+
+#[test]
+fn spilled_cells_put_recompute_or_spill_on_the_path() {
+    // Executed links 4x faster than the plan assumed shrink the comm
+    // windows to a quarter of their planned width: the executed run
+    // must show exposed recompute or serialized spill somewhere in the
+    // attribution — the paper's effect, visible end to end through the
+    // walk.
+    let setup = TrainSetup::new(ModelConfig::by_name("1.3B").unwrap(), 2, 4, 4, 8);
+    let cm = CostModel::new(Topology::pcie(2, 4));
+    let cfg = SimConfig::new(setup, PolicyKind::LynxHeu, PartitionMode::Dp)
+        .with_schedule(ScheduleKind::OneFOneB)
+        .with_bw(4.0);
+    let tables = CostTables::new(&cfg.setup, &cm, &build_layer_graph(&cfg.setup));
+    let mut cache = PlanCache::new();
+    let (r, trace, obs) = simulate_observed(&cm, &cfg, &tables, &mut cache);
+    let cp = analyze(&obs.recording, &trace, &obs.deps);
+    let exposed = cp.total[PathCat::RecomputeExposed.index()]
+        + cp.total[PathCat::CommSerialized.index()];
+    let paid: f64 = r.stages.iter().map(|s| s.exposed_paid_total).sum();
+    if paid > 1e-9 {
+        assert!(
+            exposed > 0.0 || cp.total[PathCat::Stall.index()] > 0.0,
+            "paid recompute {paid} but none (and no stall) attributed"
+        );
+    }
+    assert!((cp.attributed_total() - trace.makespan).abs() <= 1e-9 * trace.makespan.max(1.0));
+}
+
+#[test]
+fn self_diff_is_identically_zero() {
+    for (i, Cell { label, cp }) in grid().iter().enumerate() {
+        // Every 7th cell: the diff path re-parses the serialized form.
+        if i % 7 != 0 {
+            continue;
+        }
+        let report = critical_report(label, cp);
+        let parsed = Json::parse(&report.pretty()).unwrap();
+        let d = diff_reports(&parsed, &parsed).unwrap();
+        assert_eq!(d.max_abs_delta(), 0.0, "{label}: self-diff not exactly zero");
+        assert!(d.top_regressions(5).is_empty(), "{label}: self-diff has regressions");
+        // Round-trip conservation on the artifact itself.
+        let makespan = parsed.get("makespan").and_then(Json::as_f64).unwrap();
+        let total = parsed.get("attributed_total").and_then(Json::as_f64).unwrap();
+        assert!((total - makespan).abs() <= 1e-9 * makespan.max(1.0), "{label}");
+    }
+}

@@ -208,6 +208,40 @@ print(f"OK: front {len(front)} points / {doc['front_distinct_shapes']} shapes, "
       f"fronts identical")
 EOF
 
+echo "== bench: critical (quick attribution on the spill cell) =="
+LYNX_BENCH_QUICK=1 LYNX_BENCH_OUT="$PWD" cargo bench --bench bench_critical
+test -f BENCH_critical.json
+echo "BENCH_critical.json written"
+
+echo "== gate: critical-path attribution conserves and sees the spill =="
+python3 - <<'EOF'
+import json
+rows = [r for r in json.load(open('BENCH_critical.json')) if isinstance(r, dict)]
+assert rows, 'BENCH_critical.json has no rows'
+# Conservation on every row: attribution sums to the makespan.
+bad = [r for r in rows
+       if r['conservation_residual'] > 1e-9 * max(r['makespan'], 1.0)]
+assert not bad, f'attribution does not conserve: {bad}'
+# The paper's effect end to end: when the executed windows shrink below
+# what the planner assumed (bw_scale > 1 on this sweep), the overlap
+# spill (serialized windows + exposed recompute) lands on the critical
+# path; at plan bandwidth and below the windows hold and serialized
+# spill cannot exist.
+shrunk = [r for r in rows if r['bw_scale'] > 1.0 + 1e-9]
+plan = [r for r in rows if abs(r['bw_scale'] - 1.0) < 1e-9]
+assert shrunk and plan, f'sweep missing shrunk/plan bandwidth cells: {rows}'
+plan_spill = plan[0]['spill_share']
+shrunk_spill = max(r['spill_share'] for r in shrunk)
+assert all(r['serialized_share'] < 1e-9 for r in rows
+           if r['bw_scale'] <= 1.0 + 1e-9), \
+    'serialized spill attributed although the windows held'
+assert shrunk_spill > plan_spill + 1e-9, \
+    f'shrunk windows show no extra spill on the path: {rows}'
+print(f"OK: {len(rows)} rows conserve; spill share "
+      f"{100 * shrunk_spill:.1f}% with shrunk windows vs "
+      f"{100 * plan_spill:.1f}% at plan bandwidth")
+EOF
+
 echo "== gate: bench snapshots (drift vs bench/snapshots/) =="
 python3 scripts/snapshot_bench.py compare
 
@@ -217,8 +251,41 @@ trap 'rm -rf "$OBS_TMP"' EXIT
 for sched in 1f1b zbv; do
     ./target/release/lynx simulate --schedule "$sched" \
         --trace-out "$OBS_TMP/trace_$sched.json" \
-        --metrics-out "$OBS_TMP/report_$sched.json" >/dev/null
+        --metrics-out "$OBS_TMP/report_$sched.json" \
+        --critical-out "$OBS_TMP/critical_$sched.json" >/dev/null
 done
+
+echo "== gate: lynx explain + self-diff on the smoke runs =="
+for sched in 1f1b zbv; do
+    # explain must read back the artifact it just wrote ...
+    ./target/release/lynx explain "$OBS_TMP/critical_$sched.json" >/dev/null
+    # ... and a report diffed against itself must be identically zero.
+    ./target/release/lynx diff "$OBS_TMP/critical_$sched.json" \
+        "$OBS_TMP/critical_$sched.json" | grep -q "max abs delta: 0" \
+        || { echo "FAIL: self-diff of critical_$sched.json not zero"; exit 1; }
+done
+# Cross-schedule diff exercises the aligned-delta path end to end.
+./target/release/lynx diff "$OBS_TMP/critical_1f1b.json" \
+    "$OBS_TMP/critical_zbv.json" >/dev/null
+echo "OK: explain renders, self-diff zero, cross-diff renders"
+
+echo "== gate: critical-report validator rejects a corrupted report =="
+python3 - "$OBS_TMP" <<'EOF'
+import json, subprocess, sys
+tmp = sys.argv[1]
+doc = json.load(open(f'{tmp}/critical_1f1b.json'))
+# Corrupt conservation: steal time from the attributed total.
+doc['attributed_total'] = doc['makespan'] * 0.9 - 1.0
+bad = f'{tmp}/critical_cooked.json'
+json.dump(doc, open(bad, 'w'))
+r = subprocess.run([sys.executable, 'scripts/validate_obs.py', bad],
+                   capture_output=True, text=True)
+assert r.returncode != 0, 'validator accepted a non-conserving report'
+assert 'attributed_total' in r.stderr, r.stderr
+import os
+os.unlink(bad)
+print('OK: corrupted critical report rejected')
+EOF
 ./target/release/lynx partition --search dp \
     --metrics-out "$OBS_TMP/partition.json" >/dev/null
 ./target/release/lynx tune --model 1.3B --topo 1x4 --global-batch 8 \

@@ -21,6 +21,14 @@ Each file is dispatched on its schema tag:
     the Pareto front must be feasible, internally non-dominated and
     dominate every other evaluated feasible point, and every front
     point's tp*pp*dp product must agree.
+  * Critical-path reports (``schema == "lynx.critical_report.v1"``,
+    from ``lynx simulate --critical-out``, read back by ``lynx explain``
+    / ``lynx diff``): exactly the nine attribution categories, the
+    attributed total and the per-category sum must both equal the
+    makespan within 1e-9 (relative), per-stage rows must sum to their
+    ``total`` column and to the category totals, the path links must
+    tile ``[0, makespan]`` chronologically, and sensitivities must be
+    non-negative and zero exactly when the category is absent.
 
 Exit status 0 iff every file validates. No third-party dependencies.
 """
@@ -36,6 +44,13 @@ SPAN_NAMES = {
     "comm-serialized", "stall", "comm-tp", "comm-p2p", "comm-dp",
 }
 COMM_NAMES = {"comm-tp", "comm-p2p", "comm-dp"}
+
+# The nine critical-path attribution categories, mirroring
+# obs::critical::PathCat::ALL (order does not matter to the validator).
+PATH_CATS = {
+    "fwd", "bwd", "wgrad", "recompute-exposed", "comm-serialized",
+    "comm-tp", "comm-p2p", "comm-dp", "stall",
+}
 
 STAGE_KEYS = {
     "stage", "layers", "busy_secs", "comm_busy_secs", "idle_secs",
@@ -199,6 +214,7 @@ TUNE_POINT_KEYS = {
     "tp", "pp", "dp", "num_micro", "schedule", "policy", "throughput",
     "peak_mem", "iteration_secs", "bubble_ratio", "oom",
     "schedule_synthesis", "fallback_reason", "partition",
+    "bottleneck", "top_sensitivity",
 }
 
 
@@ -219,6 +235,17 @@ def _tune_point(pt, where):
     if not oom and not all(
             isinstance(x, (int, float)) and x >= 1 for x in part):
         raise Invalid(f"{where}: bad partition {part}")
+    bottleneck = pt["bottleneck"]
+    if bottleneck is not None:
+        if not isinstance(bottleneck, str) or bottleneck not in PATH_CATS:
+            raise Invalid(f"{where}: bad bottleneck {bottleneck!r}")
+    ts = pt["top_sensitivity"]
+    if ts is not None:
+        cat = need(ts, "category", str, f"{where}.top_sensitivity")
+        if cat not in PATH_CATS:
+            raise Invalid(f"{where}: bad top_sensitivity category {cat!r}")
+        if need(ts, "value", (int, float), f"{where}.top_sensitivity") < 0:
+            raise Invalid(f"{where}: negative top_sensitivity value")
     return pt
 
 
@@ -302,6 +329,108 @@ def validate_tune_report(doc):
         f"{counts['enumerated']:.0f} candidates")
 
 
+def validate_critical_report(doc):
+    need(doc, "config", str, "critical report")
+    makespan = need(doc, "makespan", (int, float), "critical report")
+    if makespan < 0:
+        raise Invalid("critical report: negative makespan")
+    tol = 1e-9 * max(makespan, 1.0)
+    attributed = need(doc, "attributed_total", (int, float), "critical report")
+    if abs(attributed - makespan) > tol:
+        raise Invalid(
+            f"critical report: attributed_total {attributed} differs from "
+            f"makespan {makespan} beyond 1e-9")
+    cats = need(doc, "categories", list, "critical report")
+    seen = {}
+    for i, row in enumerate(cats):
+        where = f"categories[{i}]"
+        name = need(row, "name", str, where)
+        if name not in PATH_CATS:
+            raise Invalid(f"{where}: unknown category {name!r}")
+        if name in seen:
+            raise Invalid(f"{where}: duplicate category {name!r}")
+        secs = need(row, "secs", (int, float), where)
+        share = need(row, "share", (int, float), where)
+        sens = need(row, "sensitivity", (int, float), where)
+        if secs < 0:
+            raise Invalid(f"{where}: negative secs")
+        if not -EPS <= share <= 1.0 + EPS:
+            raise Invalid(f"{where}: share {share} outside [0, 1]")
+        if sens < 0:
+            raise Invalid(f"{where}: negative sensitivity")
+        if (sens == 0) != (secs == 0):
+            raise Invalid(
+                f"{where}: sensitivity {sens} inconsistent with secs {secs}")
+        seen[name] = secs
+    if set(seen) != PATH_CATS:
+        raise Invalid(
+            f"critical report: categories {sorted(PATH_CATS - set(seen))} "
+            "missing")
+    if abs(sum(seen.values()) - makespan) > tol:
+        raise Invalid(
+            f"critical report: category sum {sum(seen.values())} differs "
+            f"from makespan {makespan} beyond 1e-9")
+    per_stage = need(doc, "per_stage", list, "critical report")
+    stage_sums = {c: 0.0 for c in PATH_CATS}
+    for i, row in enumerate(per_stage):
+        where = f"per_stage[{i}]"
+        need(row, "stage", (int, float), where)
+        total = need(row, "total", (int, float), where)
+        row_sum = 0.0
+        for cat in PATH_CATS:
+            v = need(row, cat, (int, float), where)
+            if v < 0:
+                raise Invalid(f"{where}: negative {cat}")
+            row_sum += v
+            stage_sums[cat] += v
+        if abs(row_sum - total) > tol:
+            raise Invalid(
+                f"{where}: row sum {row_sum} differs from total {total}")
+    for cat in PATH_CATS:
+        if abs(stage_sums[cat] - seen[cat]) > tol:
+            raise Invalid(
+                f"critical report: per-stage {cat} sums to "
+                f"{stage_sums[cat]}, categories say {seen[cat]}")
+    path_links = need(doc, "path", list, "critical report")
+    n_links = need(doc, "links", (int, float), "critical report")
+    if len(path_links) != int(n_links):
+        raise Invalid(
+            f"critical report: links says {int(n_links)}, path has "
+            f"{len(path_links)}")
+    cursor = 0.0
+    for i, link in enumerate(path_links):
+        where = f"path[{i}]"
+        need(link, "stage", (int, float), where)
+        cat = need(link, "category", str, where)
+        if cat not in PATH_CATS:
+            raise Invalid(f"{where}: unknown category {cat!r}")
+        start = need(link, "start", (int, float), where)
+        end = need(link, "end", (int, float), where)
+        if end <= start:
+            raise Invalid(f"{where}: empty link [{start}, {end}]")
+        if abs(start - cursor) > EPS * max(makespan, 1.0):
+            raise Invalid(f"{where}: gap at {cursor}, link starts {start}")
+        cursor = end
+    if path_links and abs(cursor - makespan) > EPS * max(makespan, 1.0):
+        raise Invalid(
+            f"critical report: path ends at {cursor}, makespan {makespan}")
+    dominant = doc.get("dominant")
+    if dominant is not None and dominant not in PATH_CATS:
+        raise Invalid(f"critical report: bad dominant {dominant!r}")
+    ts = doc.get("top_sensitivity")
+    if ts is not None:
+        cat = need(ts, "category", str, "critical report.top_sensitivity")
+        if cat not in PATH_CATS:
+            raise Invalid(
+                f"critical report: bad top_sensitivity category {cat!r}")
+        if need(ts, "value", (int, float),
+                "critical report.top_sensitivity") < 0:
+            raise Invalid("critical report: negative top_sensitivity value")
+    return (
+        f"{len(path_links)} links over {len(per_stage)} stages, "
+        f"dominant {dominant!r}")
+
+
 def validate(path):
     with open(path) as f:
         doc = json.load(f)
@@ -316,6 +445,8 @@ def validate(path):
         detail = validate_partition_report(doc)
     elif schema == "lynx.tune_report.v1":
         detail = validate_tune_report(doc)
+    elif schema == "lynx.critical_report.v1":
+        detail = validate_critical_report(doc)
     else:
         raise Invalid(f"unknown schema tag {schema!r}")
     return schema, detail
